@@ -1,0 +1,41 @@
+//! Microbenchmarks for the compression operators (the per-round hot path
+//! on every node) at the paper's two parameter scales: logreg d = 7850
+//! and MLP d = 394,634. Reported via the in-tree harness (criterion is
+//! unavailable offline); throughput is elements/second over the input.
+
+use sparq::compress::{Compressor, QsgdOp, RandK, SignL1, SignTopK, TopK};
+use sparq::util::bench::Bencher;
+use sparq::util::Rng;
+
+fn randvec(d: usize) -> Vec<f32> {
+    let mut rng = Rng::new(1);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn bench_dim(b: &mut Bencher, d: usize) {
+    let x = randvec(d);
+    let mut out = vec![0.0f32; d];
+    let ops: Vec<Box<dyn Compressor>> = vec![
+        Box::new(TopK::new(d / 10)),
+        Box::new(SignTopK::new(d / 10)),
+        Box::new(SignTopK::new(10)), // paper's k=10 setting
+        Box::new(RandK::new(d / 10)),
+        Box::new(SignL1),
+        Box::new(QsgdOp::new(16)),
+    ];
+    for op in ops {
+        let mut rng = Rng::new(2);
+        b.bench_throughput(&format!("{}/d={d}", op.name()), d as u64, || {
+            op.compress(&x, &mut rng, &mut out);
+            out[0]
+        });
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new("compression").with_budget(100, 400);
+    bench_dim(&mut b, 7850);
+    bench_dim(&mut b, 394_634);
+}

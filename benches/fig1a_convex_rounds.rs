@@ -1,0 +1,69 @@
+//! Figure 1a bench — convex: communication rounds to reach the target
+//! test error, per algorithm, plus per-round wall time.
+//!
+//! Scaled configuration (n = 12 ring, logreg 96→10) so the whole bench
+//! finishes in seconds while keeping the paper's *shape*: SPARQ reaches
+//! the target in the fewest communication rounds at comparable iteration
+//! counts.
+
+use sparq::experiments::fig1;
+use sparq::metrics::Series;
+use sparq::util::bench::Bencher;
+use std::time::Instant;
+
+fn scaled_suite(steps: u64) -> Vec<(String, sparq::config::ExperimentConfig)> {
+    let mut suite = fig1::convex_suite(steps, 7);
+    for (_, cfg) in suite.iter_mut() {
+        cfg.nodes = 12;
+        cfg.problem = "logreg:96:10:5".into();
+        if cfg.compressor == "sign_topk:10" {
+            cfg.compressor = "sign_topk:5%".into();
+        }
+        cfg.trigger = "const:100".into();
+        cfg.eval_every = 40;
+    }
+    suite
+}
+
+fn main() {
+    println!("=== Fig 1a (scaled): test error vs communication rounds ===\n");
+    let mut b = Bencher::new("fig1a").with_budget(0, 1);
+
+    let suite = scaled_suite(2400);
+    let mut results: Vec<(String, Series, f64)> = Vec::new();
+    for (label, cfg) in suite {
+        let t0 = Instant::now();
+        let series = sparq::experiments::run_config(&cfg, false);
+        let wall = t0.elapsed().as_secs_f64();
+        // per-round timing via the harness (one short re-run window)
+        let mut problem = sparq::experiments::build_problem(&cfg);
+        let d = problem.dim();
+        let mut algo = sparq::experiments::build_algo(&cfg, d);
+        let mut bus = sparq::comm::Bus::new(cfg.nodes);
+        let mut t = 0u64;
+        b.bench(&format!("round/{label}"), || {
+            algo.step(t, problem.as_mut(), &mut bus);
+            t += 1;
+        });
+        results.push((label, series, wall));
+    }
+
+    println!("\n{:<38} {:>10} {:>14} {:>12}", "algorithm", "run (s)", "final err", "comm rounds");
+    for (label, series, wall) in &results {
+        let last = series.records.last().unwrap();
+        println!(
+            "{:<38} {:>10.2} {:>14.4} {:>12}",
+            label, wall, last.test_error, last.comm_rounds
+        );
+    }
+
+    for target in [0.3, 0.2, 0.15] {
+        println!("\n--- comm rounds to reach test error ≤ {target} ---");
+        for (label, series, _) in &results {
+            match series.first_reaching_error(target) {
+                Some(r) => println!("{:<38} {:>8} rounds (t = {})", label, r.comm_rounds, r.t),
+                None => println!("{:<38} not reached", label),
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 1c bench — non-convex: training loss vs epochs for SPARQ
+//! (with/without trigger), CHOCO (Sign/TopK) and vanilla, at the scaled
+//! MLP setting (n = 8 ring, momentum 0.9, H = 5), plus per-round timing.
+
+use sparq::experiments::fig1;
+use sparq::util::bench::Bencher;
+
+fn main() {
+    println!("=== Fig 1c (scaled): training loss vs epochs ===\n");
+    let spe = 50usize;
+    let steps = 1500u64;
+    let suite = fig1::nonconvex_suite(steps, spe, 7, "mlp:256:32:10:8");
+    let series = fig1::run_suite(suite, false);
+
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "algorithm", "ep 0", "ep 10", "ep 20", "ep 30"
+    );
+    for s in &series {
+        let at_epoch = |e: usize| {
+            s.records
+                .iter()
+                .find(|r| r.t as usize >= e * spe)
+                .map(|r| format!("{:.3}", r.loss))
+                .unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            s.label,
+            at_epoch(0),
+            at_epoch(10),
+            at_epoch(20),
+            at_epoch(30)
+        );
+    }
+
+    // every curve must actually train
+    for s in &series {
+        let first = s.records.first().unwrap().loss;
+        let last = s.records.last().unwrap().loss;
+        assert!(last < first, "{} failed to reduce loss", s.label);
+    }
+
+    // per-round wall time (coordination + MLP grads)
+    println!();
+    let mut b = Bencher::new("fig1c-round").with_budget(100, 400);
+    let mut suite = fig1::nonconvex_suite(steps, spe, 7, "mlp:256:32:10:8");
+    let (label, cfg) = suite.remove(0);
+    let mut problem = sparq::experiments::build_problem(&cfg);
+    let d = problem.dim();
+    let mut algo = sparq::experiments::build_algo(&cfg, d);
+    let mut bus = sparq::comm::Bus::new(cfg.nodes);
+    let mut t = 0u64;
+    b.bench(&format!("{label} (d={d})"), || {
+        algo.step(t, problem.as_mut(), &mut bus);
+        t += 1;
+    });
+}

@@ -1,0 +1,43 @@
+//! Figure 1d bench — non-convex: top-1 accuracy vs total transmitted
+//! bits; savings factors at the target accuracy (paper: 250× vs
+//! CHOCO-Sign, 1000× vs CHOCO-TopK, 15K× vs vanilla).
+
+use sparq::experiments::{fig1, savings};
+
+fn main() {
+    println!("=== Fig 1d (scaled): top-1 accuracy vs total bits ===\n");
+    let steps = 1500u64;
+    let suite = fig1::nonconvex_suite(steps, 50, 7, "mlp:256:32:10:8");
+    let series = fig1::run_suite(suite, false);
+
+    println!("{:<44} {:>12} {:>14}", "algorithm", "final top-1", "total bits");
+    for s in &series {
+        let last = s.records.last().unwrap();
+        println!(
+            "{:<44} {:>11.1}% {:>14.3e}",
+            s.label,
+            (1.0 - last.test_error) * 100.0,
+            last.bits as f64
+        );
+    }
+
+    for target_err in [0.35, 0.25] {
+        println!(
+            "\n--- bits to reach top-1 ≥ {:.0}% ---",
+            (1.0 - target_err) * 100.0
+        );
+        println!("{}", fig1::savings_table(&series, target_err));
+        for (idx, label) in [
+            (1, "SPARQ (no trigger)"),
+            (2, "CHOCO-SGD (Sign)"),
+            (3, "CHOCO-SGD (TopK)"),
+            (4, "vanilla"),
+        ] {
+            match savings::savings_factor(&series, 0, idx, target_err) {
+                Some(f) => println!("  SPARQ saves {f:>8.1}x vs {label}"),
+                None => println!("  SPARQ vs {label}: target not reached"),
+            }
+        }
+    }
+    println!("\npaper (CIFAR-10 ResNet-20, top-1 90%): 250x vs CHOCO-Sign, 1000x vs CHOCO-TopK, 15000x vs vanilla");
+}

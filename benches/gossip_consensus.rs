@@ -1,0 +1,127 @@
+//! Consensus-step and full-sync-round benchmarks: the L3 per-round cost
+//! at the paper's two graph scales (n = 60 ring / d = 7850 and n = 8
+//! ring / d = 394,634). These are the numbers behind EXPERIMENTS.md §Perf
+//! (L3).
+
+use sparq::comm::Bus;
+use sparq::compress::SignTopK;
+use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
+use sparq::problems::{GradientSource, QuadraticProblem};
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::bench::Bencher;
+use sparq::util::Rng;
+
+/// Zero-cost gradient source: isolates coordinator overhead from the
+/// model math.
+struct NullGrad {
+    d: usize,
+    n: usize,
+}
+
+impl GradientSource for NullGrad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+    fn grad(&mut self, _node: usize, _x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        // cheap deterministic pseudo-gradient (no transcendental per lane —
+        // the point is to measure the coordinator, not this function)
+        let r = rng.next_u64() as f32 / u64::MAX as f32;
+        let mut v = r;
+        for o in out.iter_mut() {
+            v = v * 0.9999 + 0.0001;
+            *o = (v - 0.5) * 0.01;
+        }
+        0.0
+    }
+    fn global_loss(&mut self, _x: &[f32]) -> f64 {
+        0.0
+    }
+}
+
+fn mk(n: usize, d: usize, h: u64, always_fire: bool) -> SparqSgd {
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    SparqSgd::new(
+        SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(SignTopK::new((d / 10).max(1))),
+            trigger: EventTrigger::new(if always_fire {
+                ThresholdSchedule::Zero
+            } else {
+                ThresholdSchedule::Constant(1e12)
+            }),
+            lr: LrSchedule::Constant(0.01),
+            sync: SyncSchedule::EveryH(h),
+            gamma: None,
+            momentum: 0.0,
+            seed: 1,
+        },
+        d,
+    )
+}
+
+fn main() {
+    let mut b = Bencher::new("round").with_budget(150, 600);
+
+    for (n, d) in [(60usize, 7850usize), (8, 394_634)] {
+        let mut src = NullGrad { d, n };
+        let mut bus = Bus::new(n);
+
+        // Full sync round, everyone transmits (worst case).
+        let mut algo = mk(n, d, 1, true);
+        let mut t = 0u64;
+        b.bench_throughput(
+            &format!("sync-round-all-fire/n={n},d={d}"),
+            (n * d) as u64,
+            || {
+                algo.step(t, &mut src, &mut bus);
+                t += 1;
+            },
+        );
+
+        // Sync round where nobody fires (trigger suppresses everything):
+        // measures the trigger-check + local-step floor.
+        let mut algo = mk(n, d, 1, false);
+        let mut t = 0u64;
+        b.bench_throughput(
+            &format!("sync-round-silent/n={n},d={d}"),
+            (n * d) as u64,
+            || {
+                algo.step(t, &mut src, &mut bus);
+                t += 1;
+            },
+        );
+
+        // Local-only iteration (no sync): the H−1 out of H fast path.
+        let mut algo = mk(n, d, 1_000_000, true);
+        let mut t = 0u64;
+        b.bench_throughput(
+            &format!("local-step-only/n={n},d={d}"),
+            (n * d) as u64,
+            || {
+                algo.step(t, &mut src, &mut bus);
+                t += 1;
+            },
+        );
+    }
+
+    // Pure quadratic-problem round (gradient math included) at fig-1a size.
+    let n = 60;
+    let d = 7850;
+    let mut src = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 3);
+    let mut bus = Bus::new(n);
+    let mut algo = mk(n, d, 5, true);
+    let mut t = 0u64;
+    b.bench_throughput(
+        &format!("sync-round+quadratic-grad/n={n},d={d}"),
+        (n * d) as u64,
+        || {
+            algo.step(t, &mut src, &mut bus);
+            t += 1;
+        },
+    );
+}

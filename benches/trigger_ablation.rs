@@ -1,0 +1,85 @@
+//! Trigger ablation (the paper's headline mechanism, measured):
+//! firing-rate and bits as a function of the threshold constant c₀, plus
+//! the cost of the trigger check itself. End-to-end: a fixed-budget SPARQ
+//! run per c₀ on the known-optimum quadratic, reporting (fire fraction,
+//! total bits, final gap) — the knob behind Remark 1(iii).
+
+use sparq::comm::Bus;
+use sparq::compress::SignTopK;
+use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
+use sparq::problems::QuadraticProblem;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::bench::Bencher;
+use sparq::util::Rng;
+
+fn run_with_c0(c0: f64, steps: u64) -> (f64, u64, f64) {
+    let (n, d) = (8, 64);
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: Box::new(SignTopK::new(16)),
+        trigger: EventTrigger::new(if c0 == 0.0 {
+            ThresholdSchedule::Zero
+        } else {
+            ThresholdSchedule::Poly { c0, eps: 0.5 }
+        }),
+        lr: LrSchedule::InverseTime { a: 60.0, b: 2.0 },
+        sync: SyncSchedule::EveryH(5),
+        gamma: None,
+        momentum: 0.0,
+        seed: 9,
+    };
+    let mut algo = SparqSgd::new(cfg, d);
+    let mut prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.1, 0.5, 10);
+    let mut bus = Bus::new(n);
+    for t in 0..steps {
+        algo.step(t, &mut prob, &mut bus);
+    }
+    let fire_frac = algo.total_fired as f64 / algo.total_checks.max(1) as f64;
+    (fire_frac, bus.total_bits, prob.suboptimality(&algo.x_bar()))
+}
+
+fn main() {
+    // Part 1: the trigger-check microcost (a norm over d floats).
+    let mut b = Bencher::new("trigger").with_budget(100, 300);
+    for d in [7850usize, 394_634] {
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; d];
+        let mut y = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut y, 1.0);
+        let trig = EventTrigger::new(ThresholdSchedule::Constant(10.0));
+        b.bench_throughput(&format!("check/d={d}"), d as u64, || {
+            trig.fires(&x, &y, 100, 0.01)
+        });
+    }
+
+    // Part 2: ablation table over c₀ (fixed 4000-step budget).
+    println!("\ntrigger ablation (n=8 ring, d=64, H=5, SignTopK k=16, T=4000)");
+    println!(
+        "{:>10} {:>12} {:>14} {:>14} {:>12}",
+        "c0", "fire rate", "total bits", "final gap", "bits saved"
+    );
+    let (base_fire, base_bits, base_gap) = run_with_c0(0.0, 4000);
+    println!(
+        "{:>10} {:>11.1}% {:>14} {:>14.6} {:>12}",
+        "0 (off)",
+        base_fire * 100.0,
+        base_bits,
+        base_gap,
+        "-"
+    );
+    for c0 in [10.0, 50.0, 200.0, 1000.0, 5000.0] {
+        let (fire, bits, gap) = run_with_c0(c0, 4000);
+        println!(
+            "{:>10} {:>11.1}% {:>14} {:>14.6} {:>11.1}x",
+            c0,
+            fire * 100.0,
+            bits,
+            gap,
+            base_bits as f64 / bits.max(1) as f64
+        );
+    }
+}

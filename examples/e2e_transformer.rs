@@ -1,0 +1,106 @@
+//! End-to-end driver: decentralized training of a byte-level transformer
+//! LM through the **full three-layer stack**.
+//!
+//! * gradients come from the AOT `lm_grad` HLO artifact (L2 JAX fwd/bwd,
+//!   lowered once by `python/compile/aot.py`) executed on the PJRT CPU
+//!   client — Python is not running;
+//! * the L3 coordinator runs Algorithm 1 verbatim: H local steps, event
+//!   trigger, SignTopK compression, gossip consensus, exact bit
+//!   accounting — over an n-node ring;
+//! * each node holds an independent shard of a synthetic byte corpus.
+//!
+//! Run `make artifacts` first, then:
+//!
+//!     cargo run --release --example e2e_transformer -- [--steps 300]
+//!         [--nodes 4] [--eval-every 20] [--out results/e2e.csv]
+//!
+//! The loss curve (from ~ln 256 ≈ 5.55 downward) is recorded in
+//! EXPERIMENTS.md §E2E.
+
+use sparq::coordinator::{run, RunOptions, SparqConfig, SparqSgd};
+use sparq::data::corpus::{generate_corpus, LmBatcher};
+use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
+use sparq::runtime::{Manifest, Runtime};
+use sparq::runtime::model::PjrtLm;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::cli::Args;
+use sparq::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let steps = args.u64("steps", 300);
+    let n = args.usize("nodes", 4);
+    let eval_every = args.u64("eval-every", 20);
+
+    let Some(manifest) = Manifest::load_default() else {
+        eprintln!("artifacts/manifest.json not found — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let rt = Runtime::new(manifest).expect("PJRT CPU client");
+    println!("PJRT platform: {}", rt.platform());
+
+    // Per-node corpus shards (independent seeds ⇒ heterogeneous-ish data).
+    let shards: Vec<LmBatcher> = (0..n)
+        .map(|i| LmBatcher::new(generate_corpus(64 * 1024, 1000 + i as u64), 64))
+        .collect();
+    let mut model = PjrtLm::new(rt, shards, 0xE7A1).expect("lm artifacts");
+    let d = model.dim;
+    println!(
+        "transformer: d = {d} parameters, batch {} x seq {}, {n}-node ring",
+        model.batch, model.seq
+    );
+
+    // Shared Glorot-ish init (all nodes start identical, as in the paper).
+    let mut init_rng = Rng::new(7);
+    let mut x0 = vec![0.0f32; d];
+    init_rng.fill_normal(&mut x0, 0.02);
+
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: sparq::compress::parse("sign_topk:10%", d).unwrap(),
+        trigger: EventTrigger::new(ThresholdSchedule::Constant(50.0)),
+        lr: LrSchedule::Constant(0.05),
+        sync: SyncSchedule::EveryH(5),
+        gamma: None,
+        momentum: 0.9,
+        seed: 42,
+    };
+    let mut algo = SparqSgd::new(cfg, d);
+    algo.init_params(&x0);
+
+    let t0 = std::time::Instant::now();
+    let series = run(
+        &mut algo,
+        &mut model,
+        &RunOptions {
+            steps,
+            eval_every,
+            verbose: true,
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+
+    let first = &series.records[0];
+    let last = series.records.last().unwrap();
+    println!(
+        "\nE2E summary: {} steps in {:.1}s ({:.1} ms/node-step incl. eval)",
+        steps,
+        wall,
+        1000.0 * wall / (steps as f64 * n as f64)
+    );
+    println!(
+        "loss {:.4} -> {:.4} (init ≈ ln 256 = 5.545); bits {}; comm rounds {}; fired {}/{}",
+        first.loss, last.loss, last.bits, last.comm_rounds, algo.total_fired, algo.total_checks
+    );
+    assert!(last.loss < first.loss, "E2E training must reduce loss");
+
+    if let Some(out) = args.get("out") {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        series.write_csv(std::path::Path::new(out)).expect("write csv");
+        println!("wrote {out}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Figure 1c/1d driver — non-convex objective (Section 5.2).
+//!
+//! Synthetic-CIFAR MLP on an n = 8 ring with momentum 0.9, H = 5 local
+//! steps, SignTopK top-10% compression and the piecewise trigger schedule
+//! (2.0, +1.0 every 10 epochs until 60). Baselines: SPARQ without the
+//! trigger ("SPARQ (Sign-TopK)" in the paper's Fig 1c/1d), CHOCO-SGD
+//! (Sign / TopK) and vanilla decentralized SGD.
+//!
+//! Default model is the scaled 512→64→10 MLP (DESIGN.md §Substitutions;
+//! pass --problem mlp:3072:128:10:32 for the paper-sized stand-in if you
+//! have minutes to spare).
+//!
+//!     cargo run --release --example nonconvex_cifar -- [--steps 3000]
+//!         [--steps-per-epoch 100] [--target-err 0.2] [--out results/]
+
+use sparq::experiments::{fig1, savings};
+use sparq::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let steps = args.u64("steps", 3000);
+    let spe = args.usize("steps-per-epoch", 100);
+    let seed = args.u64("seed", 42);
+    let target = args.f64("target-err", 0.2);
+    let problem = args.get_or("problem", "mlp:512:64:10:16");
+
+    println!("Figure 1c/1d: non-convex, n=8 ring, momentum 0.9, H=5");
+    println!("model {problem}, steps {steps} ({} epochs)\n", steps as usize / spe);
+
+    let suite = fig1::nonconvex_suite(steps, spe, seed, &problem);
+    let series = fig1::run_suite(suite, true);
+
+    println!("\n--- Fig 1c: training loss vs epoch ---");
+    for s in &series {
+        let pts: Vec<String> = s
+            .records
+            .iter()
+            .step_by((s.records.len() / 8).max(1))
+            .map(|r| format!("({:.1}, {:.3})", r.t as f64 / spe as f64, r.loss))
+            .collect();
+        println!("{:<42} {}", s.label, pts.join(" "));
+    }
+
+    println!("\n--- Fig 1d: top-1 accuracy vs total bits ---");
+    for s in &series {
+        let pts: Vec<String> = s
+            .records
+            .iter()
+            .step_by((s.records.len() / 8).max(1))
+            .map(|r| format!("({:.2e}, {:.3})", r.bits as f64, 1.0 - r.test_error))
+            .collect();
+        println!("{:<42} {}", s.label, pts.join(" "));
+    }
+
+    println!("\n--- bits to reach test error ≤ {target} (top-1 ≥ {:.0}%) ---", (1.0 - target) * 100.0);
+    println!("{}", fig1::savings_table(&series, target));
+
+    for (idx, label) in [
+        (1, "SPARQ-no-trigger"),
+        (2, "CHOCO-Sign"),
+        (3, "CHOCO-TopK"),
+        (4, "vanilla"),
+    ] {
+        if let Some(f) = savings::savings_factor(&series, 0, idx, target) {
+            println!("SPARQ saves {f:.0}x bits vs {label}");
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out).ok();
+        for s in &series {
+            let fname = s.label.replace([' ', '(', ')', '/', ','], "_") + ".csv";
+            let p = std::path::Path::new(out).join(fname);
+            s.write_csv(&p).expect("write");
+            println!("wrote {}", p.display());
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Topology / spectral-gap sweep (paper footnote 5: expander graphs give
+//! constant degree *and* large spectral gap — the design sweet spot).
+//!
+//! For each topology: δ, β, γ*, the tuned γ, then a fixed-budget SPARQ run
+//! reporting final suboptimality and total bits. Shows the paper's
+//! Remark 1(iv) trade-off measured: rings are cheap per round but mix
+//! slowly; complete graphs mix in one hop but cost O(n) links; random
+//! regular graphs get most of the mixing at constant degree.
+//!
+//!     cargo run --release --example topology_sweep -- [--nodes 16]
+//!         [--steps 3000]
+
+use sparq::experiments::rates;
+use sparq::graph::{uniform_neighbor, SpectralInfo, Topology, TopologyKind};
+use sparq::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("nodes", 16);
+    let steps = args.u64("steps", 3000);
+
+    let topologies: Vec<(&str, TopologyKind)> = vec![
+        ("ring", TopologyKind::Ring),
+        ("path", TopologyKind::Path),
+        ("torus", TopologyKind::Torus),
+        ("regular4 (expander)", TopologyKind::RandomRegular(4)),
+        ("hypercube", TopologyKind::Hypercube),
+        ("star", TopologyKind::Star),
+        ("complete", TopologyKind::Complete),
+    ];
+
+    println!(
+        "{:<22} {:>4} {:>9} {:>8} {:>10} {:>12} {:>14} {:>12}",
+        "topology", "deg", "δ", "β", "γ*(ω=.1)", "final gap", "bits", "edges"
+    );
+    for (name, kind) in topologies {
+        // torus/hypercube need compatible n
+        let n_eff = match kind {
+            TopologyKind::Torus => {
+                let side = (n as f64).sqrt().round() as usize;
+                side * side
+            }
+            TopologyKind::Hypercube => n.next_power_of_two(),
+            _ => n,
+        };
+        let topo = Topology::new(kind, n_eff, 3);
+        let mm = uniform_neighbor(&topo);
+        let s = SpectralInfo::compute(&mm);
+        let point = rates::run_point(n_eff, 32, 5, 1.0, 0.25, kind, steps, 11);
+        println!(
+            "{:<22} {:>4} {:>9.5} {:>8.4} {:>10.6} {:>12.6} {:>14} {:>12}",
+            name,
+            topo.max_degree(),
+            s.delta,
+            s.beta,
+            s.gamma_star(0.1),
+            point.final_gap,
+            point.total_bits,
+            topo.edge_count(),
+        );
+    }
+    println!(
+        "\nreading: larger δ ⇒ faster consensus at equal T; the expander\n\
+         matches hypercube-like gaps at constant degree — footnote 5's point."
+    );
+}

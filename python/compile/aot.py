@@ -1,0 +1,210 @@
+"""AOT export: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator loads the
+artifacts through PJRT and Python never appears on the request path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is listed in artifacts/manifest.json with its input/output
+signature so the Rust runtime can validate shapes at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, steps
+from .transformer import TransformerConfig, lm_grad, lm_loss
+
+# Fixed AOT shapes (per-experiment configs; DESIGN.md per-experiment index).
+LOGREG_TRAIN_B = 5      # paper Section 5.1: mini-batch 5 per node
+LOGREG_EVAL_B = 256
+MLP_TRAIN_B = 32        # scaled from the paper's 128 for the 1-CPU testbed
+MLP_EVAL_B = 256
+LM_B, LM_SEQ = 8, 64
+
+# (d, k) pairs for the compression/step artifacts exercised from Rust.
+STEP_DIMS = [(4096, 409), (model.LOGREG_DIM, 10)]
+GOSSIP_SHAPES = [(8, 4096), (60, model.LOGREG_DIM)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> List[dict]:
+    out = []
+    for name, a in avals:
+        out.append({"name": name, "dtype": str(a.dtype), "shape": list(a.shape)})
+    return out
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"format": "hlo-text", "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, inputs, outputs, meta=None):
+        """inputs/outputs: list of (name, ShapeDtypeStruct)."""
+        specs = [a for _, a in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _sig(inputs),
+            "outputs": _sig(outputs),
+            "meta": meta or {},
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=2, sort_keys=True)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts -> "
+              f"{self.out_dir}/manifest.json")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_models(ex: Exporter):
+    d = model.LOGREG_DIM
+    ex.export(
+        "logreg_grad", model.logreg_grad,
+        [("params", f32(d)), ("x", f32(LOGREG_TRAIN_B, model.LOGREG_IN)),
+         ("y", i32(LOGREG_TRAIN_B))],
+        [("loss", f32()), ("grad", f32(d))],
+        meta={"dim": d, "batch": LOGREG_TRAIN_B, "model": "logreg"},
+    )
+    ex.export(
+        "logreg_eval", model.logreg_eval,
+        [("params", f32(d)), ("x", f32(LOGREG_EVAL_B, model.LOGREG_IN)),
+         ("y", i32(LOGREG_EVAL_B))],
+        [("loss", f32()), ("ncorrect", f32())],
+        meta={"dim": d, "batch": LOGREG_EVAL_B, "model": "logreg"},
+    )
+    d = model.MLP_DIM
+    ex.export(
+        "mlp_grad", model.mlp_grad,
+        [("params", f32(d)), ("x", f32(MLP_TRAIN_B, model.MLP_IN)),
+         ("y", i32(MLP_TRAIN_B))],
+        [("loss", f32()), ("grad", f32(d))],
+        meta={"dim": d, "batch": MLP_TRAIN_B, "model": "mlp"},
+    )
+    ex.export(
+        "mlp_eval", model.mlp_eval,
+        [("params", f32(d)), ("x", f32(MLP_EVAL_B, model.MLP_IN)),
+         ("y", i32(MLP_EVAL_B))],
+        [("loss", f32()), ("ncorrect", f32())],
+        meta={"dim": d, "batch": MLP_EVAL_B, "model": "mlp"},
+    )
+
+
+def export_transformer(ex: Exporter, cfg: TransformerConfig):
+    d = cfg.dim
+    ex.export(
+        "lm_grad", lambda p, t: lm_grad(p, t, cfg),
+        [("params", f32(d)), ("tokens", i32(LM_B, LM_SEQ + 1))],
+        [("loss", f32()), ("grad", f32(d))],
+        meta={"dim": d, "batch": LM_B, "seq": LM_SEQ, "model": "transformer",
+              "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+              "n_heads": cfg.n_heads, "vocab": cfg.vocab},
+    )
+    ex.export(
+        "lm_loss", lambda p, t: (lm_loss(p, t, cfg),),
+        [("params", f32(d)), ("tokens", i32(LM_B, LM_SEQ + 1))],
+        [("loss", f32())],
+        meta={"dim": d, "model": "transformer"},
+    )
+
+
+def export_steps(ex: Exporter):
+    """SPARQ round building blocks — these HLO modules contain the lowered
+    Pallas kernels (interpret=True unrolls them into plain HLO ops)."""
+    for d, k in STEP_DIMS:
+        ex.export(
+            f"compress_sign_topk_d{d}_k{k}",
+            lambda x, _k=k: (steps.compress_sign_topk(x, _k),),
+            [("x", f32(d))], [("q", f32(d))],
+            meta={"dim": d, "k": k, "op": "sign_topk"},
+        )
+        ex.export(
+            f"sgd_momentum_d{d}",
+            steps.sgd_momentum_step,
+            [("x", f32(d)), ("g", f32(d)), ("m", f32(d)),
+             ("eta", f32()), ("mu", f32())],
+            [("x_new", f32(d)), ("m_new", f32(d))],
+            meta={"dim": d, "op": "sgd_momentum"},
+        )
+    d, s = 4096, 16
+    ex.export(
+        f"qsgd_d{d}_s{s}",
+        lambda x, u: (steps.qsgd_compress(x, u, s),),
+        [("x", f32(d)), ("u", f32(d))], [("q", f32(d))],
+        meta={"dim": d, "s": s, "op": "qsgd"},
+    )
+    ex.export(
+        f"trigger_check_d{d}",
+        lambda xh, xhat, c, e: (steps.trigger_check(xh, xhat, c, e),),
+        [("x_half", f32(d)), ("xhat", f32(d)), ("c_t", f32()), ("eta_t", f32())],
+        [("fired", jax.ShapeDtypeStruct((), jnp.bool_))],
+        meta={"dim": d, "op": "trigger"},
+    )
+    for n, d in GOSSIP_SHAPES:
+        ex.export(
+            f"gossip_n{n}_d{d}",
+            lambda x, xh, w, g: (steps.gossip_step(x, xh, w, g),),
+            [("x", f32(n, d)), ("xhat", f32(n, d)), ("w", f32(n, n)),
+             ("gamma", f32())],
+            [("x_new", f32(n, d))],
+            meta={"n": n, "dim": d, "op": "gossip"},
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-transformer", action="store_true")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    print("exporting model artifacts...")
+    export_models(ex)
+    print("exporting step/kernel artifacts...")
+    export_steps(ex)
+    if not args.skip_transformer:
+        print("exporting transformer artifacts...")
+        cfg = TransformerConfig(d_model=args.d_model, n_layers=args.n_layers,
+                                n_heads=args.n_heads, seq=LM_SEQ)
+        export_transformer(ex, cfg)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

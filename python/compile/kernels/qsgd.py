@@ -1,0 +1,57 @@
+"""Pallas kernel for the QSGD stochastic quantizer Q_s ([AGL+17]).
+
+Section 2 lists Q_s (compression parameter omega = 1 - beta_{d,s}) and the
+composed Q_s(Top_k) operator; the Rust L3 mirrors this for bit accounting.
+Randomness is *external*: the caller supplies u ~ U[0,1)^d (from
+jax.random in L2, from the deterministic xoshiro RNG in L3's Rust twin) so
+the kernel itself is a pure function and oracle comparison is exact.
+
+    q_i = ||x||_2 / s * sign(x_i) * floor(s |x_i| / ||x||_2 + u_i)
+
+The ||x||_2 reduction happens in the surrounding L2 graph (one rsqrt-sum,
+negligible next to the elementwise pass); the kernel receives it as a
+scalar, keeping every grid step embarrassingly parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _qsgd_kernel(s: int, x_ref, u_ref, norm_ref, o_ref):
+    x = x_ref[...]
+    norm = norm_ref[0]
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.floor(s * jnp.abs(x) / safe + u_ref[...])
+    q = safe / s * jnp.sign(x) * level
+    o_ref[...] = jnp.where(norm > 0, q, 0.0)
+
+
+def qsgd(x: jax.Array, u: jax.Array, s: int) -> jax.Array:
+    """Stochastic s-level quantization of x with external uniforms u."""
+    d = x.shape[0]
+    rem = (-d) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+        u = jnp.pad(u, (0, rem))
+    dp = x.shape[0]
+    norm = jnp.linalg.norm(x).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_qsgd_kernel, s),
+        grid=(dp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(x, u, norm)
+    return out[:d]

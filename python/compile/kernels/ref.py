@@ -1,0 +1,116 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert that each interpret-mode Pallas kernel in this package matches its
+oracle to float32 tolerance. The Rust L3 implementations of the same
+operators are cross-checked against the AOT artifacts built from these
+graphs (rust/tests/runtime_integration.rs).
+
+Semantics notes
+---------------
+* ``sign_topk`` uses *threshold* semantics: select every coordinate with
+  ``|x_i| >= tau`` where ``tau`` is the k-th largest absolute value, then
+  emit ``scale * sign(x_i)`` on the selected set with
+  ``scale = l1(selected) / count(selected)``. With distinct magnitudes this
+  is exactly the paper's SignTopK composed operator ((v) in Section 2,
+  [BDKD19]); with ties it selects the whole tie class, which keeps the
+  compression contract (Definition 1) intact and gives the kernel a
+  deterministic, order-independent spec.
+* ``qsgd`` is the stochastic quantizer Q_s of [AGL+17] with external
+  uniform randomness ``u`` (supplied by the caller so that kernel and
+  oracle see identical bits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# SignTopK building blocks
+# ----------------------------------------------------------------------
+
+def topk_threshold(x: jax.Array, k: int) -> jax.Array:
+    """tau = k-th largest |x_i| (scalar, f32).
+
+    Implemented with a full sort rather than ``lax.top_k``: jax ≥ 0.8
+    lowers top_k to an HLO ``topk(..., largest=true)`` attribute that the
+    xla_extension 0.5.1 text parser (behind the Rust `xla` crate) rejects,
+    while ``sort`` round-trips cleanly. d is ≤ a few hundred thousand and
+    this runs once per compression, so the O(d log d) cost is immaterial.
+    """
+    d = x.shape[-1]
+    absx = jnp.sort(jnp.abs(x))
+    return absx[d - k]
+
+
+def l1_and_count_masked(x: jax.Array, tau: jax.Array):
+    """(sum of |x_i| over selected, number selected) for |x_i| >= tau.
+
+    A vector with tau == 0 selects everything (including exact zeros),
+    matching the kernel's index-masked semantics.
+    """
+    absx = jnp.abs(x)
+    mask = absx >= tau
+    l1 = jnp.sum(jnp.where(mask, absx, 0.0))
+    cnt = jnp.sum(mask.astype(jnp.float32))
+    return l1, cnt
+
+
+def masked_sign_scale(x: jax.Array, tau: jax.Array, scale: jax.Array) -> jax.Array:
+    """q_i = scale * sign(x_i) * [|x_i| >= tau]."""
+    absx = jnp.abs(x)
+    mask = absx >= tau
+    return jnp.where(mask, scale * jnp.sign(x), 0.0)
+
+
+def sign_topk(x: jax.Array, k: int) -> jax.Array:
+    """Full SignTopK composed operator (threshold semantics)."""
+    tau = topk_threshold(x, k)
+    l1, cnt = l1_and_count_masked(x, tau)
+    scale = jnp.where(cnt > 0, l1 / jnp.maximum(cnt, 1.0), 0.0)
+    return masked_sign_scale(x, tau, scale)
+
+
+# ----------------------------------------------------------------------
+# Gossip / consensus step (Algorithm 1 line 15; matrix form X + γ X̂(W−I))
+# ----------------------------------------------------------------------
+
+def gossip_step(x: jax.Array, xhat: jax.Array, w: jax.Array,
+                gamma: jax.Array) -> jax.Array:
+    """X' = X + gamma * (W @ Xhat - Xhat).
+
+    Row-major layout: ``x``/``xhat`` are (n, d) with one node per row and
+    ``w`` is the (n, n) doubly-stochastic mixing matrix; this is the
+    transpose of the paper's column-layout X + γ X̂ (W − I) (W symmetric).
+    """
+    return x + gamma * (w @ xhat - xhat)
+
+
+# ----------------------------------------------------------------------
+# Fused SGD + heavy-ball momentum update
+# ----------------------------------------------------------------------
+
+def sgd_momentum_step(x: jax.Array, g: jax.Array, m: jax.Array,
+                      eta: jax.Array, mu: jax.Array):
+    """m' = mu*m + g ; x' = x - eta*m'. Returns (x', m')."""
+    m_new = mu * m + g
+    return x - eta * m_new, m_new
+
+
+# ----------------------------------------------------------------------
+# QSGD stochastic quantizer (Q_s of [AGL+17])
+# ----------------------------------------------------------------------
+
+def qsgd(x: jax.Array, u: jax.Array, s: int) -> jax.Array:
+    """Stochastically quantize x to s levels of |x|/||x||_2.
+
+    q_i = ||x||_2 / s * sign(x_i) * floor(s*|x_i|/||x||_2 + u_i),
+    u_i ~ U[0,1). For x == 0 returns 0.
+    """
+    norm = jnp.linalg.norm(x)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.floor(s * jnp.abs(x) / safe + u)
+    q = safe / s * jnp.sign(x) * level
+    return jnp.where(norm > 0, q, jnp.zeros_like(x))

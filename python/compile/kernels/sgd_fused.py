@@ -1,0 +1,64 @@
+"""Fused heavy-ball momentum + SGD parameter update as a Pallas kernel.
+
+Algorithm 1 line 4 is a plain SGD step; Section 5.2 runs the non-convex
+experiments "with momentum with a factor of 0.9" (the paper's Conclusion
+lists momentum analysis as future work — the implementation applies it to
+the local step exactly as the experiments do). Fusing
+
+    m' = mu * m + g
+    x' = x  - eta * m'
+
+into one kernel reads each of (x, g, m) once from HBM and writes (x', m')
+once — the minimal 3-read/2-write traffic for this update, vs 4/3 for the
+unfused pair. Blocks of 512 f32 lanes; index masking is unnecessary because
+padding lanes just compute garbage that the wrapper slices off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _sgd_kernel(x_ref, g_ref, m_ref, eta_ref, mu_ref, xo_ref, mo_ref):
+    m_new = mu_ref[0] * m_ref[...] + g_ref[...]
+    mo_ref[...] = m_new
+    xo_ref[...] = x_ref[...] - eta_ref[0] * m_new
+
+
+def sgd_momentum_step(x: jax.Array, g: jax.Array, m: jax.Array,
+                      eta: jax.Array, mu: jax.Array):
+    """Returns (x', m') = (x - eta*(mu*m + g), mu*m + g)."""
+    d = x.shape[0]
+    rem = (-d) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+        g = jnp.pad(g, (0, rem))
+        m = jnp.pad(m, (0, rem))
+    dp = x.shape[0]
+    eta = jnp.asarray(eta, jnp.float32).reshape((1,))
+    mu = jnp.asarray(mu, jnp.float32).reshape((1,))
+    xo, mo = pl.pallas_call(
+        _sgd_kernel,
+        grid=(dp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, g, m, eta, mu)
+    return xo[:d], mo[:d]

@@ -1,0 +1,114 @@
+"""Pallas kernels for the SignTopK composed compression operator.
+
+SignTopK (paper Section 2, operator (v), from [BDKD19]) is the compression
+used in all of the paper's experiments: keep the top-k coordinates by
+magnitude, transmit only their signs plus one shared ℓ1 scale.
+
+The hot-spot is split into two data-parallel kernels over 1-D VMEM blocks
+of the parameter vector (the threshold tau itself is a tiny `lax.top_k` in
+the surrounding L2 graph — see ``compile.steps``):
+
+* :func:`l1_and_count_masked` — block-reduction producing per-block partial
+  (sum |x_i|, count) over the selected set {i : |x_i| >= tau}.
+* :func:`masked_sign_scale` — elementwise emission
+  ``q_i = scale * sign(x_i) * [|x_i| >= tau]``.
+
+Both kernels mask by global index so callers can pad the vector to a block
+multiple without perturbing the reduction (exact zeros in the padding would
+otherwise be "selected" whenever tau == 0).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks of 512 f32 lanes keep
+each grid step's VMEM working set at 2 KiB/input — far under the ~16 MiB
+VMEM budget, allowing the Mosaic pipeline to double-buffer HBM↔VMEM copies
+behind the VPU elementwise work. interpret=True everywhere: CPU PJRT cannot
+execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _pad_to_block(x: jax.Array) -> jax.Array:
+    d = x.shape[0]
+    rem = (-d) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def _l1_count_kernel(d_valid: int, x_ref, tau_ref, l1_ref, cnt_ref):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) + pid * BLOCK
+    absx = jnp.abs(x)
+    sel = (absx >= tau_ref[0]) & (idx < d_valid)
+    l1_ref[0] = jnp.sum(jnp.where(sel, absx, 0.0))
+    cnt_ref[0] = jnp.sum(sel.astype(jnp.float32))
+
+
+def l1_and_count_masked(x: jax.Array, tau: jax.Array):
+    """Per-block partial (l1, count) reduction, summed to scalars.
+
+    Matches ``ref.l1_and_count_masked`` exactly (fp32 summation order is
+    block-partials-then-total, which is associativity-safe at test
+    tolerances).
+    """
+    d = x.shape[0]
+    xp = _pad_to_block(x)
+    nblocks = xp.shape[0] // BLOCK
+    tau = jnp.asarray(tau, jnp.float32).reshape((1,))
+    l1p, cntp = pl.pallas_call(
+        functools.partial(_l1_count_kernel, d),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, tau)
+    return jnp.sum(l1p), jnp.sum(cntp)
+
+
+def _mss_kernel(d_valid: int, x_ref, tau_ref, scale_ref, o_ref):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) + pid * BLOCK
+    sel = (jnp.abs(x) >= tau_ref[0]) & (idx < d_valid)
+    o_ref[...] = jnp.where(sel, scale_ref[0] * jnp.sign(x), 0.0)
+
+
+def masked_sign_scale(x: jax.Array, tau: jax.Array, scale: jax.Array) -> jax.Array:
+    """Elementwise q = scale * sign(x) on the selected set, 0 elsewhere."""
+    d = x.shape[0]
+    xp = _pad_to_block(x)
+    nblocks = xp.shape[0] // BLOCK
+    tau = jnp.asarray(tau, jnp.float32).reshape((1,))
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_mss_kernel, d),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, tau, scale)
+    return out[:d]

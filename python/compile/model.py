@@ -1,0 +1,140 @@
+"""L2 models with the flat-parameter convention.
+
+Every model exposes:
+    grad(flat[d], batch...) -> (loss f32[], grad_flat f32[d])
+    evaluate(flat[d], X, y) -> (loss f32[], ncorrect f32[])
+
+SPARQ-SGD's trigger / compression / consensus all operate on the whole
+parameter vector, so the Rust coordinator keeps one flat f32 vector per
+node and the (un)flattening lives inside the jitted graph. `aot.py` lowers
+these for fixed shapes into artifacts/*.hlo.txt.
+
+Models mirror DESIGN.md §Substitutions:
+* ``logreg``     — multinomial logistic regression, the convex objective of
+                   Section 5.1 (784 -> 10, d = 7850).
+* ``mlp``        — 3072 -> hidden -> 10 ReLU classifier, the non-convex
+                   stand-in for ResNet-20/CIFAR of Section 5.2.
+* transformer LM lives in ``compile.transformer``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# flat <-> pytree helpers
+# ----------------------------------------------------------------------
+
+def shapes_size(shapes: List[Tuple[int, ...]]) -> int:
+    tot = 0
+    for s in shapes:
+        n = 1
+        for v in s:
+            n *= v
+        tot += n
+    return tot
+
+
+def unflatten(flat: jax.Array, shapes: List[Tuple[int, ...]]) -> List[jax.Array]:
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for v in s:
+            n *= v
+        out.append(flat[off:off + n].reshape(s))
+        off += n
+    return out
+
+
+def flatten(arrs: List[jax.Array]) -> jax.Array:
+    return jnp.concatenate([a.reshape(-1) for a in arrs])
+
+
+# ----------------------------------------------------------------------
+# Multinomial logistic regression (convex; Section 5.1)
+# ----------------------------------------------------------------------
+
+LOGREG_IN, LOGREG_CLASSES = 784, 10
+LOGREG_SHAPES = [(LOGREG_IN, LOGREG_CLASSES), (LOGREG_CLASSES,)]
+LOGREG_DIM = shapes_size(LOGREG_SHAPES)  # 7850 — paper's "7840 length" +bias
+
+
+def _softmax_xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def logreg_loss(flat: jax.Array, x: jax.Array, y: jax.Array,
+                l2: float = 1e-4) -> jax.Array:
+    """Cross-entropy + L2 (the ridge term makes the objective strongly
+    convex, matching Theorem 1's setting)."""
+    w, b = unflatten(flat, LOGREG_SHAPES)
+    logits = x @ w + b
+    return _softmax_xent(logits, y) + 0.5 * l2 * jnp.sum(flat * flat)
+
+
+def logreg_grad(flat: jax.Array, x: jax.Array, y: jax.Array):
+    loss, g = jax.value_and_grad(logreg_loss)(flat, x, y)
+    return loss, g
+
+
+def logreg_eval(flat: jax.Array, x: jax.Array, y: jax.Array):
+    w, b = unflatten(flat, LOGREG_SHAPES)
+    logits = x @ w + b
+    loss = _softmax_xent(logits, y)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, ncorrect
+
+
+# ----------------------------------------------------------------------
+# MLP classifier (non-convex; Section 5.2 stand-in)
+# ----------------------------------------------------------------------
+
+MLP_IN, MLP_HIDDEN, MLP_CLASSES = 3072, 128, 10
+MLP_SHAPES = [(MLP_IN, MLP_HIDDEN), (MLP_HIDDEN,),
+              (MLP_HIDDEN, MLP_CLASSES), (MLP_CLASSES,)]
+MLP_DIM = shapes_size(MLP_SHAPES)  # 394,634
+
+
+def mlp_logits(flat: jax.Array, x: jax.Array) -> jax.Array:
+    w1, b1, w2, b2 = unflatten(flat, MLP_SHAPES)
+    h = jax.nn.relu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_loss(flat: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return _softmax_xent(mlp_logits(flat, x), y)
+
+
+def mlp_grad(flat: jax.Array, x: jax.Array, y: jax.Array):
+    loss, g = jax.value_and_grad(mlp_loss)(flat, x, y)
+    return loss, g
+
+
+def mlp_eval(flat: jax.Array, x: jax.Array, y: jax.Array):
+    logits = mlp_logits(flat, x)
+    loss = _softmax_xent(logits, y)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, ncorrect
+
+
+# ----------------------------------------------------------------------
+# Initialization (used by aot.py to export an init artifact and by tests)
+# ----------------------------------------------------------------------
+
+def init_flat(shapes: List[Tuple[int, ...]], key: jax.Array,
+              scale: str = "glorot") -> jax.Array:
+    parts = []
+    for s in shapes:
+        key, sub = jax.random.split(key)
+        if len(s) == 1:
+            parts.append(jnp.zeros(s, jnp.float32))
+        else:
+            fan_in, fan_out = s[0], s[-1]
+            std = (2.0 / (fan_in + fan_out)) ** 0.5
+            parts.append(std * jax.random.normal(sub, s, jnp.float32))
+    return flatten(parts)

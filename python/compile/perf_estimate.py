@@ -1,0 +1,118 @@
+"""L1/L2 performance estimation (EXPERIMENTS.md §Perf).
+
+interpret=True Pallas gives CPU-numpy timings that say nothing about TPU
+behaviour, so the L1 analysis is *structural*: per-kernel VMEM working set
+per grid step (from the BlockSpecs), HBM traffic per launch, arithmetic
+intensity, and MXU tile utilization for the matmul kernel. The L2 analysis
+counts HLO ops in the lowered modules (fusion opportunities / redundant
+recomputation show up as op-count blowups).
+
+Run: cd python && python -m compile.perf_estimate
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from .kernels import gossip, sgd_fused, sign_topk
+
+F32 = 4  # bytes
+
+TPU_HBM_GBPS = 800.0   # v4-lite class, order of magnitude
+TPU_VMEM_MIB = 16.0
+
+
+def fmt_bytes(n: float) -> str:
+    if n < 1024:
+        return f"{n:.0f} B"
+    if n < 1024**2:
+        return f"{n/1024:.1f} KiB"
+    return f"{n/1024**2:.2f} MiB"
+
+
+def elementwise_kernel(name, d, n_in, n_out, block, flops_per_elem):
+    """VMEM/traffic model for a 1-D blocked elementwise kernel."""
+    vmem = (n_in + n_out) * block * F32
+    traffic = (n_in + n_out) * d * F32
+    flops = flops_per_elem * d
+    ai = flops / traffic  # arithmetic intensity (flops/byte)
+    est_us = traffic / (TPU_HBM_GBPS * 1e3)  # µs, memory-bound
+    print(
+        f"  {name:<28} block={block:<5} VMEM/step={fmt_bytes(vmem):<10} "
+        f"HBM traffic={fmt_bytes(traffic):<11} AI={ai:.2f} flop/B "
+        f"→ est {est_us:.1f} µs @ {TPU_HBM_GBPS:.0f} GB/s (memory-bound)"
+    )
+    assert vmem < TPU_VMEM_MIB * 1024**2 / 8, "block too large for double-buffering"
+
+
+def gossip_kernel(n, d, block_d):
+    """MXU model for the consensus matmul X + γ(W X̂ − X̂)."""
+    steps = (d + block_d - 1) // block_d
+    vmem = (3 * n * block_d + n * n) * F32
+    macs = n * n * d
+    # MXU is a 128×128 systolic array: a (n×n)@(n×block_d) pass uses
+    # (n/128)^2 of the array when n < 128.
+    util = min(1.0, (n / 128.0) ** 2)
+    traffic = (3 * n * d + n * n) * F32
+    est_us = traffic / (TPU_HBM_GBPS * 1e3)
+    print(
+        f"  gossip n={n:<3} d={d:<7} grid={steps:<5} VMEM/step={fmt_bytes(vmem):<10} "
+        f"MACs={macs/1e6:.2f}M MXU-util={util*100:.1f}% "
+        f"HBM={fmt_bytes(traffic)} → est {est_us:.1f} µs (memory-bound; "
+        f"MXU idle headroom {100*(1-util):.0f}%)"
+    )
+
+
+def l2_hlo_report(art_dir: str):
+    print("\nL2 HLO op census (lowered modules; fusion health check):")
+    interesting = ["logreg_grad", "mlp_grad", "lm_grad",
+                   "compress_sign_topk_d7850_k10", "gossip_n60_d7850"]
+    op_re = re.compile(r"^\s+[%\w.\-]+ = \S+ (\w+)\(", re.M)
+    for name in interesting:
+        path = os.path.join(art_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        text = open(path).read()
+        ops = op_re.findall(text)
+        counts = {}
+        for o in ops:
+            counts[o] = counts.get(o, 0) + 1
+        top = sorted(counts.items(), key=lambda kv: -kv[1])[:6]
+        dots = counts.get("dot", 0)
+        total = len(ops)
+        print(f"  {name:<32} {total:>5} ops, {dots} dot(s); top: "
+              + ", ".join(f"{k}:{v}" for k, v in top))
+
+
+def main():
+    print("L1 Pallas kernel structural estimates (TPU model, f32):")
+    d_small, d_large = 7850, 394_634
+
+    for d in (d_small, d_large):
+        elementwise_kernel(f"masked_sign_scale d={d}", d, n_in=1, n_out=1,
+                           block=sign_topk.BLOCK, flops_per_elem=3)
+        elementwise_kernel(f"l1_count_masked  d={d}", d, n_in=1, n_out=0,
+                           block=sign_topk.BLOCK, flops_per_elem=4)
+        elementwise_kernel(f"sgd_momentum     d={d}", d, n_in=3, n_out=2,
+                           block=sgd_fused.BLOCK, flops_per_elem=3)
+
+    print()
+    gossip_kernel(60, d_small, gossip.BLOCK_D)
+    gossip_kernel(8, d_large, gossip.BLOCK_D)
+
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    l2_hlo_report(art)
+
+    print(
+        "\nreading: every L1 kernel is memory-bound (AI < 1 flop/B), so the\n"
+        "BlockSpec schedule (double-buffered HBM↔VMEM streaming) is the\n"
+        "whole game; block sizes keep VMEM/step ≲ 8 KiB (≪ 16 MiB budget),\n"
+        "so Mosaic can deep-pipeline. The gossip matmul underutilizes the\n"
+        "MXU at n ≤ 60 (22% at n=60, 0.4% at n=8) but is still HBM-bound —\n"
+        "a TPU would hide the MXU pass entirely behind the panel loads."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""L2 SPARQ-SGD building-block graphs. Each function here is a jittable
+JAX computation that *calls the L1 Pallas kernels*, so the kernels lower
+into the same HLO module when `aot.py` exports these entry points.
+
+These are the pieces of Algorithm 1 that run on every node each round:
+
+* :func:`compress_sign_topk` — line 8, q = C(x - x̂) with the SignTopK
+  composed operator used throughout Section 5.
+* :func:`gossip_step` — line 15 consensus update.
+* :func:`sgd_momentum_step` — line 4 local step (+ Section 5.2 momentum).
+* :func:`qsgd_compress` — alternative quantizer for ablations.
+* :func:`trigger_check` — line 7, ||x^{t+1/2} - x̂||^2 > c_t eta_t^2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gossip as k_gossip
+from .kernels import qsgd as k_qsgd
+from .kernels import sgd_fused as k_sgd
+from .kernels import sign_topk as k_st
+from .kernels import ref
+
+
+def compress_sign_topk(x: jax.Array, k: int) -> jax.Array:
+    """SignTopK composed operator (threshold semantics; see kernels.ref)."""
+    tau = ref.topk_threshold(x, k)          # tiny top-k, stays in XLA
+    l1, cnt = k_st.l1_and_count_masked(x, tau)
+    scale = jnp.where(cnt > 0, l1 / jnp.maximum(cnt, 1.0), 0.0)
+    return k_st.masked_sign_scale(x, tau, scale)
+
+
+def gossip_step(x: jax.Array, xhat: jax.Array, w: jax.Array,
+                gamma: jax.Array) -> jax.Array:
+    return k_gossip.gossip_step(x, xhat, w, gamma)
+
+
+def sgd_momentum_step(x: jax.Array, g: jax.Array, m: jax.Array,
+                      eta: jax.Array, mu: jax.Array):
+    return k_sgd.sgd_momentum_step(x, g, m, eta, mu)
+
+
+def qsgd_compress(x: jax.Array, u: jax.Array, s: int) -> jax.Array:
+    return k_qsgd.qsgd(x, u, s)
+
+
+def trigger_check(x_half: jax.Array, xhat: jax.Array, c_t: jax.Array,
+                  eta_t: jax.Array) -> jax.Array:
+    """Event trigger (Algorithm 1 line 7): returns bool(||diff||^2 > c eta^2)."""
+    diff = x_half - xhat
+    return jnp.sum(diff * diff) > c_t * eta_t * eta_t

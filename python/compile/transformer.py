@@ -1,0 +1,141 @@
+"""Byte-level decoder-only transformer LM (flat-parameter convention).
+
+The end-to-end driver (examples/e2e_transformer.rs) trains this model with
+the full SPARQ-SGD stack over a simulated ring: PJRT grad artifacts + the
+event trigger + SignTopK compression + gossip consensus. Size is a config
+knob (DESIGN.md §Substitutions explains the scale-down from the
+system-prompt's 100M reference point for this 1-CPU testbed).
+
+Architecture: learned token+position embeddings, `n_layers` pre-LN blocks
+(causal MHA + GELU MLP), final LN, untied LM head. Next-token
+cross-entropy over a [B, S+1] token window.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import flatten, shapes_size, unflatten
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def shapes(self) -> List[Tuple[int, ...]]:
+        c = self
+        shapes: List[Tuple[int, ...]] = [
+            (c.vocab, c.d_model),       # token embedding
+            (c.seq, c.d_model),         # positional embedding
+        ]
+        for _ in range(c.n_layers):
+            shapes += [
+                (c.d_model,), (c.d_model,),          # ln1 scale, bias
+                (c.d_model, 3 * c.d_model),          # qkv
+                (3 * c.d_model,),
+                (c.d_model, c.d_model),              # attn out
+                (c.d_model,),
+                (c.d_model,), (c.d_model,),          # ln2 scale, bias
+                (c.d_model, c.d_ff), (c.d_ff,),      # mlp in
+                (c.d_ff, c.d_model), (c.d_model,),   # mlp out
+            ]
+        shapes += [(c.d_model,), (c.d_model,)]       # final ln
+        shapes += [(c.d_model, c.vocab), (c.vocab,)]  # lm head
+        return shapes
+
+    @property
+    def dim(self) -> int:
+        return shapes_size(self.shapes())
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(x, params, n_heads):
+    (ln1s, ln1b, wqkv, bqkv, wo, bo,
+     ln2s, ln2b, w1, b1, w2, b2) = params
+    B, S, D = x.shape
+    hd = D // n_heads
+
+    h = _layernorm(x, ln1s, ln1b)
+    qkv = h @ wqkv + bqkv                                # [B,S,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)               # [B,H,S,hd]
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((S, S), jnp.float32))
+    att = jnp.where(causal[None, None] > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+    x = x + out @ wo + bo
+
+    h = _layernorm(x, ln2s, ln2b)
+    h = jax.nn.gelu(h @ w1 + b1)
+    return x + h @ w2 + b2
+
+
+def lm_loss(flat: jax.Array, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """tokens: [B, S+1] int32; next-token mean cross-entropy."""
+    params = unflatten(flat, cfg.shapes())
+    tok_emb, pos_emb = params[0], params[1]
+    per_block = 12
+    x_tok = tokens[:, :-1]
+    y_tok = tokens[:, 1:]
+    x = tok_emb[x_tok] + pos_emb[None, :cfg.seq]
+    off = 2
+    for _ in range(cfg.n_layers):
+        x = _block(x, params[off:off + per_block], cfg.n_heads)
+        off += per_block
+    x = _layernorm(x, params[off], params[off + 1])
+    logits = x @ params[off + 2] + params[off + 3]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y_tok[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_grad(flat: jax.Array, tokens: jax.Array, cfg: TransformerConfig):
+    loss, g = jax.value_and_grad(lm_loss)(flat, tokens, cfg)
+    return loss, g
+
+
+def _ln_scale_indices(cfg: TransformerConfig) -> set:
+    """Indices into cfg.shapes() that are LayerNorm scale vectors."""
+    per_block, base = 12, 2
+    idx = set()
+    for layer in range(cfg.n_layers):
+        idx.add(base + layer * per_block + 0)   # ln1 scale
+        idx.add(base + layer * per_block + 6)   # ln2 scale
+    idx.add(base + cfg.n_layers * per_block)    # final ln scale
+    return idx
+
+
+def init_flat(cfg: TransformerConfig, key: jax.Array) -> jax.Array:
+    """Gaussian(0.02) matrices, zero biases, unit LN scales."""
+    ln_scales = _ln_scale_indices(cfg)
+    parts = []
+    for i, s in enumerate(cfg.shapes()):
+        key, sub = jax.random.split(key)
+        if len(s) == 1:
+            fill = 1.0 if i in ln_scales else 0.0
+            parts.append(jnp.full(s, fill, jnp.float32))
+        else:
+            parts.append(0.02 * jax.random.normal(sub, s, jnp.float32))
+    return flatten(parts)

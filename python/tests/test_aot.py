@@ -1,0 +1,75 @@
+"""AOT export checks: HLO text is produced, is parseable (well-formed
+header + entry layout), and the manifest signature matches what the
+exporter promises to the Rust runtime."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, steps
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_pallas_kernel_lowers_to_plain_hlo():
+    """interpret=True must not leave custom-calls behind (CPU PJRT cannot
+    execute Mosaic)."""
+    lowered = jax.jit(lambda x: (steps.compress_sign_topk(x, 4),)).lower(
+        jax.ShapeDtypeStruct((128,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_files_exist(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_expected_artifacts_present(self, manifest):
+        names = set(manifest["artifacts"])
+        for required in ["logreg_grad", "logreg_eval", "mlp_grad",
+                         "mlp_eval", "lm_grad", "lm_loss",
+                         f"compress_sign_topk_d{model.LOGREG_DIM}_k10",
+                         f"gossip_n60_d{model.LOGREG_DIM}"]:
+            assert required in names, required
+
+    def test_signatures(self, manifest):
+        lg = manifest["artifacts"]["logreg_grad"]
+        assert lg["inputs"][0]["shape"] == [model.LOGREG_DIM]
+        assert lg["inputs"][1]["shape"] == [aot.LOGREG_TRAIN_B, model.LOGREG_IN]
+        assert lg["inputs"][2]["dtype"] == "int32"
+        assert lg["outputs"][0]["shape"] == []
+        assert lg["outputs"][1]["shape"] == [model.LOGREG_DIM]
+
+    def test_entry_layout_matches_signature(self, manifest):
+        """The HLO entry_computation_layout must agree with the manifest
+        (this is what the Rust loader validates against)."""
+        art = manifest["artifacts"]["logreg_grad"]
+        with open(os.path.join(ART, art["file"])) as f:
+            first = f.readline()
+        d = model.LOGREG_DIM
+        assert f"f32[{d}]" in first
+        assert f"f32[{aot.LOGREG_TRAIN_B},{model.LOGREG_IN}]" in first

@@ -1,0 +1,204 @@
+"""L1 correctness: every Pallas kernel (interpret mode) vs its pure-jnp
+oracle in kernels/ref.py. Hypothesis sweeps shapes and value regimes —
+this is the core correctness signal for the compression/consensus math
+that the Rust L3 mirrors."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as stf
+
+from compile.kernels import gossip, qsgd, ref, sgd_fused, sign_topk
+
+SET = dict(max_examples=20, deadline=None)
+
+dims = stf.integers(min_value=1, max_value=2000)
+seeds = stf.integers(min_value=0, max_value=2**31 - 1)
+
+
+def vec(seed, d, scale=1.0, dist="normal"):
+    rng = np.random.default_rng(seed)
+    if dist == "normal":
+        v = rng.normal(0, scale, d)
+    else:
+        v = rng.uniform(-scale, scale, d)
+    return jnp.asarray(v.astype(np.float32))
+
+
+# ----------------------------------------------------------------------
+# sign_topk kernels
+# ----------------------------------------------------------------------
+
+class TestL1Count:
+    @settings(**SET)
+    @given(seeds, dims)
+    def test_matches_ref(self, seed, d):
+        x = vec(seed, d)
+        k = max(1, d // 10)
+        tau = ref.topk_threshold(x, k)
+        l1k, ck = sign_topk.l1_and_count_masked(x, tau)
+        l1r, cr = ref.l1_and_count_masked(x, tau)
+        np.testing.assert_allclose(l1k, l1r, rtol=1e-5)
+        np.testing.assert_allclose(ck, cr)
+
+    def test_zero_vector_counts_all(self):
+        # tau == 0 selects everything *within the valid range* — padding
+        # lanes must be masked out (the bug this kernel's index test guards).
+        x = jnp.zeros(700, jnp.float32)
+        l1, cnt = sign_topk.l1_and_count_masked(x, jnp.float32(0.0))
+        assert float(l1) == 0.0
+        assert float(cnt) == 700.0  # not 1024 (padded length)
+
+    @settings(**SET)
+    @given(seeds)
+    def test_tau_above_max_selects_none(self, seed):
+        x = vec(seed, 513)
+        tau = jnp.max(jnp.abs(x)) * 2 + 1.0
+        l1, cnt = sign_topk.l1_and_count_masked(x, tau)
+        assert float(cnt) == 0.0 and float(l1) == 0.0
+
+
+class TestMaskedSignScale:
+    @settings(**SET)
+    @given(seeds, dims, stf.floats(min_value=0.0, max_value=10.0))
+    def test_matches_ref(self, seed, d, scale):
+        x = vec(seed, d)
+        tau = ref.topk_threshold(x, max(1, d // 4))
+        qk = sign_topk.masked_sign_scale(x, tau, scale)
+        qr = ref.masked_sign_scale(x, tau, scale)
+        np.testing.assert_allclose(qk, qr, rtol=1e-6)
+
+    @settings(**SET)
+    @given(seeds, dims)
+    def test_full_operator_compression_contract(self, seed, d):
+        """Definition 1: E||x - C(x)||^2 <= (1-omega)||x||^2 with
+        omega = k/d for (Sign)TopK-style selection (deterministic op, so
+        no expectation needed). The composed SignTopK satisfies the
+        contract with omega = max{1/d, ...} >= something > 0 [BDKD19]."""
+        x = vec(seed, d)
+        k = max(1, d // 10)
+        tau = ref.topk_threshold(x, k)
+        l1, cnt = sign_topk.l1_and_count_masked(x, tau)
+        scale = jnp.where(cnt > 0, l1 / jnp.maximum(cnt, 1.0), 0.0)
+        q = sign_topk.masked_sign_scale(x, tau, scale)
+        err = float(jnp.sum((x - q) ** 2))
+        nx2 = float(jnp.sum(x * x))
+        omega = 1.0 / d
+        assert err <= (1 - omega) * nx2 + 1e-4 * max(nx2, 1.0)
+
+    def test_c_of_zero_is_zero(self):
+        x = jnp.zeros(100, jnp.float32)
+        q = ref.sign_topk(x, 10)
+        assert float(jnp.sum(jnp.abs(q))) == 0.0
+
+
+# ----------------------------------------------------------------------
+# gossip kernel
+# ----------------------------------------------------------------------
+
+def ring_w(n):
+    w = np.zeros((n, n), np.float32)
+    for i in range(n):
+        w[i, i] = 1 / 3 if n > 2 else 1 / 2
+        w[i, (i + 1) % n] += 1 / 3 if n > 2 else 1 / 4
+        w[i, (i - 1) % n] += 1 / 3 if n > 2 else 1 / 4
+    return w
+
+
+class TestGossip:
+    @settings(**SET)
+    @given(seeds, stf.integers(min_value=2, max_value=16),
+           stf.integers(min_value=1, max_value=600),
+           stf.floats(min_value=0.0, max_value=1.0))
+    def test_matches_ref(self, seed, n, d, gamma):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        xh = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        w = jnp.asarray(ring_w(n))
+        gk = gossip.gossip_step(x, xh, w, gamma)
+        gr = ref.gossip_step(x, xh, w, gamma)
+        np.testing.assert_allclose(gk, gr, rtol=2e-5, atol=2e-5)
+
+    @settings(**SET)
+    @given(seeds, stf.integers(min_value=2, max_value=16))
+    def test_preserves_average(self, seed, n):
+        """Paper Eq. (20): the consensus step cannot move the node average
+        because W is doubly stochastic."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, 257)).astype(np.float32))
+        xh = jnp.asarray(rng.normal(size=(n, 257)).astype(np.float32))
+        w = jnp.asarray(ring_w(n))
+        out = gossip.gossip_step(x, xh, w, 0.7)
+        np.testing.assert_allclose(out.mean(axis=0), x.mean(axis=0),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gamma_zero_identity(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(4, 100)).astype(np.float32))
+        xh = jnp.asarray(rng.normal(size=(4, 100)).astype(np.float32))
+        out = gossip.gossip_step(x, xh, jnp.asarray(ring_w(4)), 0.0)
+        np.testing.assert_allclose(out, x)
+
+
+# ----------------------------------------------------------------------
+# fused SGD + momentum
+# ----------------------------------------------------------------------
+
+class TestSgdFused:
+    @settings(**SET)
+    @given(seeds, dims, stf.floats(min_value=0.0, max_value=0.99),
+           stf.floats(min_value=1e-5, max_value=1.0))
+    def test_matches_ref(self, seed, d, mu, eta):
+        rng = np.random.default_rng(seed)
+        x, g, m = (jnp.asarray(rng.normal(size=d).astype(np.float32))
+                   for _ in range(3))
+        xk, mk = sgd_fused.sgd_momentum_step(x, g, m, eta, mu)
+        xr, mr = ref.sgd_momentum_step(x, g, m, eta, mu)
+        np.testing.assert_allclose(xk, xr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(mk, mr, rtol=1e-5, atol=1e-6)
+
+    def test_zero_momentum_is_plain_sgd(self):
+        x = jnp.ones(10)
+        g = jnp.full(10, 2.0)
+        m = jnp.zeros(10)
+        xk, mk = sgd_fused.sgd_momentum_step(x, g, m, 0.5, 0.0)
+        np.testing.assert_allclose(xk, jnp.zeros(10))
+        np.testing.assert_allclose(mk, g)
+
+
+# ----------------------------------------------------------------------
+# QSGD quantizer
+# ----------------------------------------------------------------------
+
+class TestQsgd:
+    @settings(**SET)
+    @given(seeds, dims, stf.sampled_from([1, 4, 16, 256]))
+    def test_matches_ref(self, seed, d, s):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=d).astype(np.float32))
+        u = jnp.asarray(rng.random(d).astype(np.float32))
+        np.testing.assert_allclose(qsgd.qsgd(x, u, s), ref.qsgd(x, u, s),
+                                   rtol=1e-5, atol=1e-6)
+
+    @settings(**SET)
+    @given(seeds, stf.sampled_from([4, 16]))
+    def test_unbiased(self, seed, s):
+        """E[Q_s(x)] = x over the external uniforms (Footnote 4 property
+        (i)); checked empirically at 3-sigma."""
+        rng = np.random.default_rng(seed)
+        d, reps = 64, 400
+        x = jnp.asarray(rng.normal(size=d).astype(np.float32))
+        acc = np.zeros(d, np.float64)
+        for r in range(reps):
+            u = jnp.asarray(rng.random(d).astype(np.float32))
+            acc += np.asarray(ref.qsgd(x, u, s), np.float64)
+        mean = acc / reps
+        norm = float(jnp.linalg.norm(x))
+        se = norm / s / np.sqrt(reps)  # per-coord rounding sd <= norm/s
+        np.testing.assert_allclose(mean, np.asarray(x), atol=5 * se + 1e-6)
+
+    def test_zero_input(self):
+        x = jnp.zeros(32, jnp.float32)
+        u = jnp.full(32, 0.99, jnp.float32)
+        assert float(jnp.max(jnp.abs(qsgd.qsgd(x, u, 8)))) == 0.0

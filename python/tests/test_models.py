@@ -1,0 +1,179 @@
+"""L2 model correctness: flat-parameter convention, gradient checks
+against numerical differentiation, loss/eval semantics, transformer
+shape/regression sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as stf
+
+from compile import model
+from compile.transformer import (TransformerConfig, init_flat as lm_init,
+                                 lm_grad, lm_loss)
+
+SET = dict(max_examples=10, deadline=None)
+
+
+def rand_batch(seed, b, din, classes):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, din)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, classes, b).astype(np.int32))
+    return x, y
+
+
+class TestFlatten:
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=10**6))
+    def test_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        shapes = [(3, 4), (4,), (4, 2), (2,)]
+        arrs = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+                for s in shapes]
+        flat = model.flatten(arrs)
+        assert flat.shape == (model.shapes_size(shapes),)
+        back = model.unflatten(flat, shapes)
+        for a, b in zip(arrs, back):
+            np.testing.assert_array_equal(a, b)
+
+    def test_dims(self):
+        assert model.LOGREG_DIM == 784 * 10 + 10
+        assert model.MLP_DIM == 3072 * 128 + 128 + 128 * 10 + 10
+
+
+class TestLogreg:
+    def test_grad_matches_fd(self):
+        """Central finite differences on random coordinates."""
+        key = jax.random.PRNGKey(0)
+        p = model.init_flat(model.LOGREG_SHAPES, key)
+        x, y = rand_batch(1, 5, 784, 10)
+        loss, g = model.logreg_grad(p, x, y)
+        rng = np.random.default_rng(2)
+        eps = 1e-3
+        for idx in rng.integers(0, model.LOGREG_DIM, 8):
+            e = jnp.zeros_like(p).at[idx].set(eps)
+            fd = (model.logreg_loss(p + e, x, y) -
+                  model.logreg_loss(p - e, x, y)) / (2 * eps)
+            np.testing.assert_allclose(g[idx], fd, rtol=2e-2, atol=2e-3)
+
+    def test_uniform_prediction_loss(self):
+        p = jnp.zeros(model.LOGREG_DIM)
+        x, y = rand_batch(3, 32, 784, 10)
+        loss, _ = model.logreg_grad(p, x, y)
+        np.testing.assert_allclose(loss, np.log(10), rtol=1e-5)
+
+    def test_eval_counts(self):
+        p = jnp.zeros(model.LOGREG_DIM)
+        # bias trick: make class 3 always win
+        w, b = model.unflatten(p, model.LOGREG_SHAPES)
+        b = b.at[3].set(10.0)
+        p = model.flatten([w, b])
+        x, _ = rand_batch(4, 16, 784, 10)
+        y = jnp.full(16, 3, jnp.int32)
+        _, ncorrect = model.logreg_eval(p, x, y)
+        assert float(ncorrect) == 16.0
+
+    def test_strong_convexity_term(self):
+        """L2 ridge present: loss at large params exceeds CE alone."""
+        x, y = rand_batch(5, 8, 784, 10)
+        p = jnp.ones(model.LOGREG_DIM) * 10.0
+        assert float(model.logreg_loss(p, x, y)) > 0.5 * 1e-4 * float(
+            jnp.sum(p * p)) - 1.0
+
+
+class TestMlp:
+    def test_grad_matches_fd(self):
+        key = jax.random.PRNGKey(1)
+        p = model.init_flat(model.MLP_SHAPES, key)
+        x, y = rand_batch(7, 4, 3072, 10)
+        _, g = model.mlp_grad(p, x, y)
+        rng = np.random.default_rng(8)
+        eps = 1e-2
+        checked = 0
+        for idx in rng.integers(0, model.MLP_DIM, 12):
+            e = jnp.zeros_like(p).at[idx].set(eps)
+            fd = (model.mlp_loss(p + e, x, y) -
+                  model.mlp_loss(p - e, x, y)) / (2 * eps)
+            if abs(float(fd)) > 1e-4:  # skip dead-ReLU coordinates
+                np.testing.assert_allclose(g[idx], fd, rtol=5e-2, atol=5e-3)
+                checked += 1
+        assert checked >= 1
+
+    def test_training_reduces_loss(self):
+        key = jax.random.PRNGKey(2)
+        p = model.init_flat(model.MLP_SHAPES, key)
+        x, y = rand_batch(9, 32, 3072, 10)
+        l0, _ = model.mlp_grad(p, x, y)
+        for _ in range(30):
+            _, g = model.mlp_grad(p, x, y)
+            p = p - 0.05 * g
+        l1, _ = model.mlp_grad(p, x, y)
+        assert float(l1) < float(l0) * 0.9
+
+
+class TestTransformer:
+    CFG = TransformerConfig(d_model=32, n_layers=2, n_heads=2, seq=16)
+
+    def test_dim_formula(self):
+        c = self.CFG
+        per_layer = (2 * c.d_model + c.d_model * 3 * c.d_model +
+                     3 * c.d_model + c.d_model * c.d_model + c.d_model +
+                     2 * c.d_model + c.d_model * c.d_ff + c.d_ff +
+                     c.d_ff * c.d_model + c.d_model)
+        expect = (c.vocab * c.d_model + c.seq * c.d_model +
+                  c.n_layers * per_layer + 2 * c.d_model +
+                  c.d_model * c.vocab + c.vocab)
+        assert c.dim == expect
+
+    def test_init_loss_near_uniform(self):
+        key = jax.random.PRNGKey(0)
+        p = lm_init(self.CFG, key)
+        toks = jax.random.randint(key, (4, 17), 0, 256, jnp.int32)
+        loss = lm_loss(p, toks, self.CFG)
+        np.testing.assert_allclose(float(loss), np.log(256), rtol=0.05)
+
+    def test_grad_shape_and_finite(self):
+        key = jax.random.PRNGKey(1)
+        p = lm_init(self.CFG, key)
+        toks = jax.random.randint(key, (4, 17), 0, 256, jnp.int32)
+        loss, g = lm_grad(p, toks, self.CFG)
+        assert g.shape == (self.CFG.dim,)
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+    def test_causality(self):
+        """Future tokens cannot change earlier-position losses: perturb the
+        last input token and check per-position logits before it agree."""
+        key = jax.random.PRNGKey(2)
+        p = lm_init(self.CFG, key)
+        toks = jax.random.randint(key, (1, 17), 0, 256, jnp.int32)
+        toks2 = toks.at[0, -2].set((toks[0, -2] + 1) % 256)
+
+        # compare loss restricted to first positions via masking trick:
+        # losses computed per position from logits; we recompute manually.
+        from compile.transformer import unflatten, _layernorm, _block
+        def per_pos_logits(t):
+            params = unflatten(p, self.CFG.shapes())
+            x = params[0][t[:, :-1]] + params[1][None, :self.CFG.seq]
+            off = 2
+            for _ in range(self.CFG.n_layers):
+                x = _block(x, params[off:off + 12], self.CFG.n_heads)
+                off += 12
+            x = _layernorm(x, params[off], params[off + 1])
+            return x @ params[off + 2] + params[off + 3]
+
+        l1 = per_pos_logits(toks)
+        l2 = per_pos_logits(toks2)
+        np.testing.assert_allclose(l1[0, :14], l2[0, :14], atol=1e-5)
+        assert not np.allclose(l1[0, 15], l2[0, 15], atol=1e-5)
+
+    def test_overfit_tiny_sequence(self):
+        key = jax.random.PRNGKey(3)
+        p = lm_init(self.CFG, key)
+        toks = jnp.tile(jnp.arange(17, dtype=jnp.int32)[None], (2, 1))
+        l0 = float(lm_loss(p, toks, self.CFG))
+        grad = jax.jit(lambda q: lm_grad(q, toks, self.CFG))
+        for _ in range(40):
+            _, g = grad(p)
+            p = p - 0.5 * g
+        l1 = float(lm_loss(p, toks, self.CFG))
+        assert l1 < l0 * 0.5

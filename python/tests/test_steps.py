@@ -1,0 +1,95 @@
+"""L2 step graphs: the SPARQ-SGD building blocks that call the L1 kernels,
+checked against ref oracles and against the paper's algebraic facts."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as stf
+
+from compile import steps
+from compile.kernels import ref
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def vec(seed, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=d).astype(np.float32))
+
+
+class TestCompressSignTopK:
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=2**31 - 1),
+           stf.integers(min_value=2, max_value=1500))
+    def test_matches_ref(self, seed, d):
+        x = vec(seed, d)
+        k = max(1, d // 8)
+        np.testing.assert_allclose(steps.compress_sign_topk(x, k),
+                                   ref.sign_topk(x, k), rtol=1e-5, atol=1e-6)
+
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=2**31 - 1))
+    def test_support_size(self, seed):
+        """With continuous data (no ties) exactly k coordinates survive."""
+        x = vec(seed, 777)
+        q = steps.compress_sign_topk(x, 77)
+        assert int(jnp.sum(q != 0)) == 77
+
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=2**31 - 1))
+    def test_two_valued_output(self, seed):
+        """Transmitted payload is {±scale}: 1 bit/coord + one float."""
+        x = vec(seed, 500)
+        q = np.asarray(steps.compress_sign_topk(x, 50))
+        nz = q[q != 0]
+        assert len(np.unique(np.abs(nz))) == 1
+
+
+class TestTrigger:
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=2**31 - 1),
+           stf.floats(min_value=0.0, max_value=100.0),
+           stf.floats(min_value=1e-4, max_value=1.0))
+    def test_threshold_semantics(self, seed, c_t, eta):
+        x_half, xhat = vec(seed, 128), vec(seed + 1, 128)
+        fired = steps.trigger_check(x_half, xhat, c_t, eta)
+        expect = float(jnp.sum((x_half - xhat) ** 2)) > c_t * eta * eta
+        assert bool(fired) == expect
+
+    def test_identical_states_never_fire(self):
+        x = vec(0, 64)
+        assert not bool(steps.trigger_check(x, x, 0.0, 0.1))
+        # strict inequality in Algorithm 1 line 7: ||0||^2 > 0 is False
+
+
+class TestQsgdCompress:
+    @settings(**SET)
+    @given(stf.integers(min_value=0, max_value=2**31 - 1),
+           stf.sampled_from([2, 8, 64]))
+    def test_matches_ref(self, seed, s):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=300).astype(np.float32))
+        u = jnp.asarray(rng.random(300).astype(np.float32))
+        np.testing.assert_allclose(steps.qsgd_compress(x, u, s),
+                                   ref.qsgd(x, u, s), rtol=1e-5, atol=1e-6)
+
+
+class TestGossipStep:
+    def test_consensus_convergence(self):
+        """Repeated gossip with x̂ = x (perfect estimates) drives all nodes
+        to the average — the delta=spectral-gap mechanism of Section 3."""
+        rng = np.random.default_rng(0)
+        n, d = 8, 40
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        w = np.zeros((n, n), np.float32)
+        for i in range(n):
+            w[i, i] = 1 / 3
+            w[i, (i + 1) % n] = 1 / 3
+            w[i, (i - 1) % n] = 1 / 3
+        w = jnp.asarray(w)
+        target = x.mean(axis=0)
+        for _ in range(200):
+            x = steps.gossip_step(x, x, w, 1.0)
+        np.testing.assert_allclose(x, jnp.tile(target[None], (n, 1)),
+                                   atol=1e-3)

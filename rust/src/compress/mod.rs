@@ -1,0 +1,188 @@
+//! Compression operators (paper Definition 1 and the Section-2 catalogue).
+//!
+//! A compression operator C satisfies E‖x − C(x)‖² ≤ (1 − ω)‖x‖² for some
+//! ω ∈ (0, 1]. Implemented here, each with its contract parameter and its
+//! exact transmitted-bit cost (what `comm::Bus` charges per message):
+//!
+//! | operator  | ω                     | bits per message                    |
+//! |-----------|-----------------------|-------------------------------------|
+//! | Identity  | 1                     | 32·d                                |
+//! | TopK      | k/d                   | k·(32 + ⌈log₂ d⌉)                   |
+//! | RandK     | k/d                   | k·32 + 64 (prng seed)               |
+//! | Sign (ℓ1) | ‖x‖₁²/(d‖x‖₂²) ≥ 1/d  | d + 32                              |
+//! | QSGD(s)   | 1 − min(d/s², √d/s)   | d·⌈log₂(2s+1)⌉ + 32                 |
+//! | SignTopK  | ≥ 1/d ([BDKD19] (v))  | k·(1 + ⌈log₂ d⌉) + 32               |
+//! | QsgdTopK  | k/(d(1+β_{k,s}))      | k·(⌈log₂(2s+1)⌉ + ⌈log₂ d⌉) + 32    |
+//!
+//! All operators produce the *decompressed dense vector* (what the receiver
+//! reconstructs); the bit cost is tracked separately so the simulated
+//! experiments charge exactly what a wire format would.
+
+pub mod ops;
+pub mod composed;
+
+pub use composed::{QsgdTopK, SignTopK};
+pub use ops::{Identity, QsgdOp, RandK, SignL1, TopK};
+
+use crate::util::Rng;
+
+/// A compression operator (Definition 1). Implementations must be
+/// deterministic given the RNG state so whole runs replay bit-for-bit.
+pub trait Compressor: Send + Sync {
+    /// Human-readable name used in configs/metrics (e.g. "sign_topk(k=10)").
+    fn name(&self) -> String;
+
+    /// Contract parameter ω ∈ (0, 1] for dimension d (worst-case bound).
+    fn omega(&self, d: usize) -> f64;
+
+    /// Compress `x` into `out` (dense reconstruction), drawing any internal
+    /// randomness from `rng`.
+    fn compress(&self, x: &[f32], rng: &mut Rng, out: &mut [f32]);
+
+    /// Exact transmitted bits for one message of dimension d.
+    fn encoded_bits(&self, d: usize) -> u64;
+
+    /// Typical-case compression quality used to *tune* the consensus step
+    /// size (the worst-case contract ω of [`omega`] can be orders of
+    /// magnitude pessimistic — e.g. SignTopK guarantees only 1/d but
+    /// empirically retains ≈ k/(2d) of the energy on dense gradients; the
+    /// paper's experiments, like CHOCO-SGD's, use a tuned γ).
+    fn effective_omega(&self, d: usize) -> f64 {
+        self.omega(d)
+    }
+
+    /// Convenience allocating wrapper.
+    fn compress_vec(&self, x: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len()];
+        self.compress(x, rng, &mut out);
+        out
+    }
+}
+
+/// ⌈log₂ d⌉ with log₂(1) = 1 floor (an index always costs ≥ 1 bit).
+pub fn index_bits(d: usize) -> u64 {
+    let mut bits = 64 - (d.max(2) as u64 - 1).leading_zeros() as u64;
+    if bits == 0 {
+        bits = 1;
+    }
+    bits
+}
+
+/// Parse an operator spec string: `identity`, `topk:K`, `randk:K`, `sign`,
+/// `qsgd:S`, `sign_topk:K`, `qsgd_topk:K:S`. K may be suffixed with `%`
+/// for a fraction of d resolved at construction (`pct` helpers).
+pub fn parse(spec: &str, d: usize) -> Option<Box<dyn Compressor>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let k_of = |s: &str| -> Option<usize> {
+        if let Some(p) = s.strip_suffix('%') {
+            let frac: f64 = p.parse().ok()?;
+            Some(((frac / 100.0 * d as f64).round() as usize).clamp(1, d))
+        } else {
+            s.parse().ok()
+        }
+    };
+    match parts.as_slice() {
+        ["identity"] => Some(Box::new(Identity)),
+        ["sign"] => Some(Box::new(SignL1)),
+        ["topk", k] => Some(Box::new(TopK::new(k_of(k)?))),
+        ["randk", k] => Some(Box::new(RandK::new(k_of(k)?))),
+        ["qsgd", s] => Some(Box::new(QsgdOp::new(s.parse().ok()?))),
+        ["sign_topk", k] => Some(Box::new(SignTopK::new(k_of(k)?))),
+        ["sign_topk", k, "paper"] => {
+            Some(Box::new(SignTopK::paper_accounting(k_of(k)?)))
+        }
+        ["qsgd_topk", k, s] => Some(Box::new(QsgdTopK::new(k_of(k)?, s.parse().ok()?))),
+        _ => None,
+    }
+}
+
+thread_local! {
+    /// Scratch for magnitude selection: compression runs once per node per
+    /// sync round over the full parameter vector, so the O(d) buffer is
+    /// reused instead of reallocated (EXPERIMENTS.md §Perf, L3 iteration 2).
+    static TOPK_SCRATCH: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// The k-th largest |x_i| (threshold semantics; ties select the whole tie
+/// class — matches the L1/L2 Pallas + ref.py semantics exactly).
+///
+/// O(d) quickselect over the *bit patterns* of |x_i|: for non-negative
+/// IEEE-754 floats the u32 representation is order-isomorphic to the
+/// value, so `select_nth_unstable` runs with integer comparisons instead
+/// of a branchy `partial_cmp` closure — ~2× faster at the MLP scale
+/// (EXPERIMENTS.md §Perf, L3 iteration 3).
+pub fn topk_threshold(x: &[f32], k: usize) -> f32 {
+    let d = x.len();
+    let k = k.clamp(1, d);
+    TOPK_SCRATCH.with(|cell| {
+        let mut mags = cell.borrow_mut();
+        mags.clear();
+        // |x| clears the sign bit; remaining bits compare like magnitudes.
+        mags.extend(x.iter().map(|v| v.to_bits() & 0x7FFF_FFFF));
+        let (_, tau, _) = mags.select_nth_unstable(d - k);
+        f32::from_bits(*tau)
+    })
+}
+
+/// Select the indices of the k largest-|x| entries *as a threshold set*:
+/// returns (tau, indices of {i : |x_i| >= tau}).
+pub fn topk_threshold_select(x: &[f32], k: usize) -> (f32, Vec<usize>) {
+    let tau = topk_threshold(x, k);
+    let idx: Vec<usize> = (0..x.len()).filter(|&i| x[i].abs() >= tau).collect();
+    (tau, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(1024), 10);
+        assert_eq!(index_bits(1025), 11);
+        assert_eq!(index_bits(7850), 13);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse("identity", 100).unwrap().name(), "identity");
+        assert_eq!(parse("topk:10", 100).unwrap().name(), "topk(k=10)");
+        assert_eq!(parse("topk:10%", 200).unwrap().name(), "topk(k=20)");
+        assert_eq!(parse("sign", 10).unwrap().name(), "sign");
+        assert_eq!(parse("qsgd:16", 10).unwrap().name(), "qsgd(s=16)");
+        assert_eq!(
+            parse("sign_topk:10", 7850).unwrap().name(),
+            "sign_topk(k=10)"
+        );
+        assert_eq!(
+            parse("qsgd_topk:5:4", 100).unwrap().name(),
+            "qsgd_topk(k=5,s=4)"
+        );
+        assert!(parse("nope", 10).is_none());
+    }
+
+    #[test]
+    fn threshold_select_counts() {
+        let x = vec![0.1, -3.0, 2.0, 0.5, -0.2];
+        let (tau, idx) = topk_threshold_select(&x, 2);
+        assert_eq!(tau, 2.0);
+        assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn threshold_select_ties() {
+        let x = vec![1.0f32, -1.0, 1.0, 0.5];
+        let (tau, idx) = topk_threshold_select(&x, 2);
+        assert_eq!(tau, 1.0);
+        assert_eq!(idx, vec![0, 1, 2]); // whole tie class
+    }
+
+    #[test]
+    fn threshold_select_zero_vector() {
+        let x = vec![0.0f32; 8];
+        let (tau, idx) = topk_threshold_select(&x, 3);
+        assert_eq!(tau, 0.0);
+        assert_eq!(idx.len(), 8);
+    }
+}

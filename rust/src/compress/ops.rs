@@ -1,0 +1,333 @@
+//! Basic compression operators: Identity, TopK, RandK, Sign(ℓ1), QSGD.
+
+use super::{index_bits, Compressor};
+use crate::linalg::vecops::{norm1, norm2_sq};
+use crate::util::Rng;
+
+/// No compression (vanilla decentralized SGD baseline).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn omega(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng, out: &mut [f32]) {
+        out.copy_from_slice(x);
+    }
+
+    fn encoded_bits(&self, d: usize) -> u64 {
+        32 * d as u64
+    }
+}
+
+/// Top-k magnitude sparsifier, ω = k/d ([SCJ18]).
+///
+/// Threshold semantics identical to the Pallas kernel (ties keep the whole
+/// tie class) — see `compress::topk_threshold_select`.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k }
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk(k={})", self.k)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        (self.k as f64 / d as f64).min(1.0)
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng, out: &mut [f32]) {
+        out.fill(0.0);
+        let tau = super::topk_threshold(x, self.k);
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            if v.abs() >= tau {
+                *o = v;
+            }
+        }
+    }
+
+    fn encoded_bits(&self, d: usize) -> u64 {
+        // k (value, index) pairs.
+        self.k.min(d) as u64 * (32 + index_bits(d))
+    }
+}
+
+/// Random-k sparsifier, ω = k/d in expectation ([SCJ18]).
+///
+/// Receiver can regenerate the index set from a shared 64-bit seed, so the
+/// wire cost is k values + the seed.
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        RandK { k }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("randk(k={})", self.k)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        (self.k as f64 / d as f64).min(1.0)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        out.fill(0.0);
+        let k = self.k.min(x.len());
+        for i in rng.sample_indices(x.len(), k) {
+            out[i] = x[i];
+        }
+    }
+
+    fn encoded_bits(&self, d: usize) -> u64 {
+        self.k.min(d) as u64 * 32 + 64
+    }
+}
+
+/// Deterministic ℓ1-scaled sign quantizer (‖x‖₁/d)·Sign(x) of [KRSJ19],
+/// ω = ‖x‖₁²/(d‖x‖₂²) ≥ 1/d.
+pub struct SignL1;
+
+impl Compressor for SignL1 {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        // Worst-case over x (1-sparse vectors): 1/d.
+        1.0 / d as f64
+    }
+
+    fn effective_omega(&self, _d: usize) -> f64 {
+        // Gaussian-vector value of ‖x‖₁²/(d‖x‖₂²) → 2/π.
+        2.0 / std::f64::consts::PI
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng, out: &mut [f32]) {
+        let d = x.len();
+        let scale = (norm1(x) / d as f64) as f32;
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            // sign(0) = 0 would break the two-valued wire format; the
+            // payload transmits a bit per coordinate, so encode 0 as +.
+            *o = if v < 0.0 { -scale } else { scale };
+        }
+    }
+
+    fn encoded_bits(&self, d: usize) -> u64 {
+        d as u64 + 32
+    }
+}
+
+/// QSGD stochastic quantizer Q_s of [AGL+17]: unbiased, second-moment
+/// bound β_{d,s} = min(d/s², √d/s); ω = 1 − β for β < 1
+/// (as a *compression operator* it needs the 1/(1+β) damping when β ≥ 1;
+/// we keep s large enough in configs that β < 1).
+pub struct QsgdOp {
+    pub s: u32,
+}
+
+impl QsgdOp {
+    pub fn new(s: u32) -> Self {
+        assert!(s >= 1);
+        QsgdOp { s }
+    }
+
+    pub fn beta(&self, d: usize) -> f64 {
+        let s = self.s as f64;
+        (d as f64 / (s * s)).min((d as f64).sqrt() / s)
+    }
+
+    /// Quantize with external uniforms for cross-layer equivalence tests.
+    pub fn compress_with_uniforms(&self, x: &[f32], u: &[f32], out: &mut [f32]) {
+        let norm = norm2_sq(x).sqrt() as f32;
+        if norm <= 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let s = self.s as f32;
+        for ((o, &v), &ui) in out.iter_mut().zip(x.iter()).zip(u.iter()) {
+            let level = (s * v.abs() / norm + ui).floor();
+            *o = norm / s * v.signum() * level;
+        }
+    }
+}
+
+impl Compressor for QsgdOp {
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.s)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        let beta = self.beta(d);
+        if beta < 1.0 {
+            1.0 - beta
+        } else {
+            // damped variant Q_s/(1+β): ω = 1/(1+β)·(1 − β/(1+β)) — keep a
+            // conservative positive value.
+            1.0 / (1.0 + beta)
+        }
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        let u: Vec<f32> = (0..x.len()).map(|_| rng.f32()).collect();
+        self.compress_with_uniforms(x, &u, out);
+    }
+
+    fn encoded_bits(&self, d: usize) -> u64 {
+        // level ∈ {0..s} plus sign ⇒ 2s+1 symbols per coordinate + norm.
+        let sym_bits = index_bits(2 * self.s as usize + 1);
+        d as u64 * sym_bits + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dist2;
+
+    fn randvec(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; d];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn contract_holds(c: &dyn Compressor, x: &[f32], seed: u64) -> bool {
+        // For deterministic ops one draw suffices; for stochastic ops
+        // average over draws (expectation in Definition 1).
+        let reps = 200;
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            let q = c.compress_vec(x, &mut rng);
+            acc += dist2(x, &q);
+        }
+        let err = acc / reps as f64;
+        let nx = norm2_sq(x);
+        err <= (1.0 - c.omega(x.len())) * nx * 1.02 + 1e-9
+    }
+
+    #[test]
+    fn identity_exact() {
+        let x = randvec(1, 100);
+        let mut rng = Rng::new(0);
+        let q = Identity.compress_vec(&x, &mut rng);
+        assert_eq!(q, x);
+        assert_eq!(Identity.encoded_bits(100), 3200);
+    }
+
+    #[test]
+    fn topk_contract_and_support() {
+        let x = randvec(2, 500);
+        let c = TopK::new(50);
+        let mut rng = Rng::new(0);
+        let q = c.compress_vec(&x, &mut rng);
+        assert_eq!(q.iter().filter(|v| **v != 0.0).count(), 50);
+        assert!(contract_holds(&c, &x, 3));
+        // kept entries are exact copies
+        for (a, b) in x.iter().zip(q.iter()) {
+            assert!(*b == 0.0 || a == b);
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let x = vec![0.1f32, 5.0, -3.0, 0.2];
+        let mut rng = Rng::new(0);
+        let q = TopK::new(2).compress_vec(&x, &mut rng);
+        assert_eq!(q, vec![0.0, 5.0, -3.0, 0.0]);
+    }
+
+    #[test]
+    fn randk_contract_in_expectation() {
+        let x = randvec(4, 300);
+        assert!(contract_holds(&RandK::new(30), &x, 5));
+    }
+
+    #[test]
+    fn randk_support_size() {
+        let x = randvec(6, 100);
+        let mut rng = Rng::new(7);
+        let q = RandK::new(10).compress_vec(&x, &mut rng);
+        assert_eq!(q.iter().filter(|v| **v != 0.0).count(), 10);
+    }
+
+    #[test]
+    fn sign_contract() {
+        let x = randvec(8, 200);
+        assert!(contract_holds(&SignL1, &x, 9));
+    }
+
+    #[test]
+    fn sign_two_valued() {
+        let x = randvec(10, 64);
+        let mut rng = Rng::new(0);
+        let q = SignL1.compress_vec(&x, &mut rng);
+        let scale = (norm1(&x) / 64.0) as f32;
+        for (a, b) in x.iter().zip(q.iter()) {
+            assert_eq!(*b, if *a < 0.0 { -scale } else { scale });
+        }
+    }
+
+    #[test]
+    fn qsgd_contract() {
+        let x = randvec(12, 100);
+        // s=32 ⇒ β = min(100/1024, 10/32) ≈ 0.098 < 1.
+        assert!(contract_holds(&QsgdOp::new(32), &x, 13));
+    }
+
+    #[test]
+    fn qsgd_unbiased() {
+        let x = randvec(14, 50);
+        let c = QsgdOp::new(8);
+        let mut rng = Rng::new(15);
+        let reps = 3000;
+        let mut acc = vec![0.0f64; 50];
+        for _ in 0..reps {
+            let q = c.compress_vec(&x, &mut rng);
+            for (a, b) in acc.iter_mut().zip(q.iter()) {
+                *a += *b as f64;
+            }
+        }
+        let norm = norm2_sq(&x).sqrt();
+        let se = norm / 8.0 / (reps as f64).sqrt();
+        for (a, b) in acc.iter().zip(x.iter()) {
+            assert!((a / reps as f64 - *b as f64).abs() < 6.0 * se + 1e-6);
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let x = vec![0.0f32; 16];
+        let mut rng = Rng::new(0);
+        let q = QsgdOp::new(4).compress_vec(&x, &mut rng);
+        assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn bit_costs() {
+        assert_eq!(TopK::new(10).encoded_bits(7850), 10 * (32 + 13));
+        assert_eq!(SignL1.encoded_bits(7850), 7850 + 32);
+        assert_eq!(RandK::new(10).encoded_bits(1000), 320 + 64);
+        // 2s+1 = 33 symbols ⇒ 6 bits
+        assert_eq!(QsgdOp::new(16).encoded_bits(100), 100 * 6 + 32);
+    }
+}

@@ -1,0 +1,219 @@
+//! Typed experiment configuration (JSON in/out) + presets mirroring the
+//! paper's Section 5 setups.
+
+use crate::util::json::Json;
+
+/// Which algorithm to instantiate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algo {
+    Sparq,
+    Choco,
+    Vanilla,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "sparq" => Some(Algo::Sparq),
+            "choco" => Some(Algo::Choco),
+            "vanilla" => Some(Algo::Vanilla),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::Sparq => "sparq",
+            Algo::Choco => "choco",
+            Algo::Vanilla => "vanilla",
+        }
+    }
+}
+
+/// Full experiment description. String-spec fields use the module parsers
+/// (`compress::parse`, `ThresholdSchedule::parse`, `LrSchedule::parse`,
+/// `TopologyKind::parse`) so configs stay flat and diff-friendly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algo: Algo,
+    pub nodes: usize,
+    pub topology: String,
+    pub compressor: String,
+    pub trigger: String,
+    pub lr: String,
+    /// Sync period H.
+    pub h: u64,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub momentum: f64,
+    pub seed: u64,
+    /// Problem spec: "quadratic:D", "logreg:DIN:CLASSES:BATCH",
+    /// "mlp:DIN:HIDDEN:CLASSES:BATCH".
+    pub problem: String,
+    /// Override consensus γ (0 ⇒ Lemma-6 γ*).
+    pub gamma: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            algo: Algo::Sparq,
+            nodes: 8,
+            topology: "ring".into(),
+            compressor: "sign_topk:10%".into(),
+            trigger: "const:100".into(),
+            lr: "invtime:100:1".into(),
+            h: 5,
+            steps: 1000,
+            eval_every: 50,
+            momentum: 0.0,
+            seed: 42,
+            problem: "quadratic:64".into(),
+            gamma: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("algo", self.algo.as_str())
+            .set("nodes", self.nodes)
+            .set("topology", self.topology.as_str())
+            .set("compressor", self.compressor.as_str())
+            .set("trigger", self.trigger.as_str())
+            .set("lr", self.lr.as_str())
+            .set("h", self.h)
+            .set("steps", self.steps)
+            .set("eval_every", self.eval_every)
+            .set("momentum", self.momentum)
+            .set("seed", self.seed)
+            .set("problem", self.problem.as_str())
+            .set("gamma", self.gamma)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let base = ExperimentConfig::default();
+        let s = |k: &str, dflt: &str| -> String {
+            j.get(k)
+                .and_then(Json::as_str)
+                .unwrap_or(dflt)
+                .to_string()
+        };
+        let u = |k: &str, dflt: u64| j.get(k).and_then(Json::as_f64).map(|x| x as u64).unwrap_or(dflt);
+        let f = |k: &str, dflt: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+        let algo_s = s("algo", base.algo.as_str());
+        Ok(ExperimentConfig {
+            name: s("name", &base.name),
+            algo: Algo::parse(&algo_s).ok_or(format!("unknown algo {algo_s:?}"))?,
+            nodes: u("nodes", base.nodes as u64) as usize,
+            topology: s("topology", &base.topology),
+            compressor: s("compressor", &base.compressor),
+            trigger: s("trigger", &base.trigger),
+            lr: s("lr", &base.lr),
+            h: u("h", base.h),
+            steps: u("steps", base.steps),
+            eval_every: u("eval_every", base.eval_every),
+            momentum: f("momentum", base.momentum),
+            seed: u("seed", base.seed),
+            problem: s("problem", &base.problem),
+            gamma: f("gamma", base.gamma),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+/// Presets mirroring the paper's experiments (scaled; DESIGN.md table).
+pub mod presets {
+    use super::*;
+
+    /// Section 5.1 convex setting (synthetic MNIST, n = 60 ring, H = 5,
+    /// SignTopK k = 10, trigger c₀ = 5000, η_t = 1/(t+100)).
+    pub fn convex_sparq(steps: u64) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "fig1-convex-sparq".into(),
+            algo: Algo::Sparq,
+            nodes: 60,
+            topology: "ring".into(),
+            compressor: "sign_topk:10".into(),
+            trigger: "const:5000".into(),
+            lr: "invtime:100:1".into(),
+            h: 5,
+            steps,
+            eval_every: 25, // fine-grained: early target crossings matter
+            momentum: 0.0,
+            seed: 42,
+            problem: "logreg:784:10:5".into(),
+            gamma: 0.0,
+        }
+    }
+
+    /// Section 5.2 non-convex setting (synthetic CIFAR MLP, n = 8 ring,
+    /// H = 5, SignTopK top-10%, piecewise trigger, momentum 0.9).
+    pub fn nonconvex_sparq(steps: u64, steps_per_epoch: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "fig1-nonconvex-sparq".into(),
+            algo: Algo::Sparq,
+            nodes: 8,
+            topology: "ring".into(),
+            compressor: "sign_topk:10%".into(),
+            trigger: format!("piecewise:2.0:1.0:10:60:{steps_per_epoch}"),
+            lr: format!("warmup:0.05:5:5:{steps_per_epoch}:150,250"),
+            h: 5,
+            steps,
+            eval_every: (steps / 40).max(1),
+            momentum: 0.9,
+            seed: 42,
+            problem: "mlp:3072:128:10:32".into(),
+            gamma: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = presets::convex_sparq(1000);
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(r#"{"algo": "choco", "nodes": 12}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.algo, Algo::Choco);
+        assert_eq!(cfg.nodes, 12);
+        assert_eq!(cfg.h, ExperimentConfig::default().h);
+    }
+
+    #[test]
+    fn rejects_bad_algo() {
+        let j = Json::parse(r#"{"algo": "magic"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn preset_specs_parse() {
+        let cfg = presets::convex_sparq(100);
+        assert!(crate::compress::parse(&cfg.compressor, 7850).is_some());
+        assert!(crate::trigger::ThresholdSchedule::parse(&cfg.trigger).is_some());
+        assert!(crate::schedule::LrSchedule::parse(&cfg.lr).is_some());
+        let cfg2 = presets::nonconvex_sparq(100, 50);
+        assert!(crate::compress::parse(&cfg2.compressor, 394634).is_some());
+        assert!(crate::trigger::ThresholdSchedule::parse(&cfg2.trigger).is_some());
+        assert!(crate::schedule::LrSchedule::parse(&cfg2.lr).is_some());
+    }
+}

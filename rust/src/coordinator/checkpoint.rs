@@ -1,0 +1,202 @@
+//! Checkpointing: persist and restore a training run.
+//!
+//! Format: a JSON header (version, iteration, dims, algorithm name,
+//! cumulative bit counters) followed by raw little-endian f32 blocks for
+//! every node's parameters (and momentum buffers when present). The
+//! header length is the first line so the file is self-describing.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::DecentralizedAlgo;
+use crate::comm::Bus;
+use crate::util::json::Json;
+
+/// Everything needed to resume a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub t: u64,
+    pub algo_name: String,
+    pub total_bits: u64,
+    pub comm_rounds: u64,
+    /// Per-node parameter vectors.
+    pub params: Vec<Vec<f32>>,
+    /// Per-node momentum buffers (empty if the run has none).
+    pub momentum: Vec<Vec<f32>>,
+}
+
+/// Capture the full coordinator state at iteration t.
+pub fn snapshot(algo: &dyn DecentralizedAlgo, t: u64, bus: &Bus) -> Checkpoint {
+    let n = algo.n();
+    Checkpoint {
+        t,
+        algo_name: algo.name(),
+        total_bits: bus.total_bits,
+        comm_rounds: bus.comm_rounds,
+        params: (0..n).map(|i| algo.params(i).to_vec()).collect(),
+        momentum: (0..n)
+            .filter_map(|i| algo.momentum(i).map(|m| m.to_vec()))
+            .collect(),
+    }
+}
+
+/// Restore node state from a checkpoint (panics on shape mismatch).
+pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) {
+    assert_eq!(algo.n(), ckpt.n(), "node count mismatch");
+    for (i, p) in ckpt.params.iter().enumerate() {
+        algo.set_node_params(i, p);
+    }
+    for (i, m) in ckpt.momentum.iter().enumerate() {
+        algo.set_node_momentum(i, m);
+    }
+}
+
+impl Checkpoint {
+    pub fn n(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.first().map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let header = Json::obj()
+            .set("version", 1u64)
+            .set("t", self.t)
+            .set("algo", self.algo_name.as_str())
+            .set("total_bits", self.total_bits)
+            .set("comm_rounds", self.comm_rounds)
+            .set("n", self.params.len())
+            .set("dim", self.dim())
+            .set("has_momentum", !self.momentum.is_empty())
+            .to_string();
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{header}")?;
+        for p in &self.params {
+            for v in p {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for m in &self.momentum {
+            for v in m {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut header = String::new();
+        // read the first line (header)
+        let mut byte = [0u8; 1];
+        loop {
+            r.read_exact(&mut byte)?;
+            if byte[0] == b'\n' {
+                break;
+            }
+            header.push(byte[0] as char);
+        }
+        let j = Json::parse(&header)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        let get = |k: &str| -> u64 { j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+        let n = get("n") as usize;
+        let dim = get("dim") as usize;
+        let has_momentum = j
+            .get("has_momentum")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+
+        let mut read_block = |count: usize| -> std::io::Result<Vec<Vec<f32>>> {
+            let mut out = Vec::with_capacity(count);
+            let mut buf = vec![0u8; dim * 4];
+            for _ in 0..count {
+                r.read_exact(&mut buf)?;
+                out.push(
+                    buf.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                );
+            }
+            Ok(out)
+        };
+        let params = read_block(n)?;
+        let momentum = if has_momentum { read_block(n)? } else { Vec::new() };
+        Ok(Checkpoint {
+            t: get("t"),
+            algo_name: j
+                .get("algo")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            total_bits: get("total_bits"),
+            comm_rounds: get("comm_rounds"),
+            params,
+            momentum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(seed: u64, n: usize, d: usize, momentum: bool) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let block = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; d];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        };
+        Checkpoint {
+            t: 1234,
+            algo_name: "sparq(test)".into(),
+            total_bits: 98765,
+            comm_rounds: 42,
+            params: block(&mut rng),
+            momentum: if momentum { block(&mut rng) } else { Vec::new() },
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_momentum() {
+        let ckpt = mk(1, 4, 33, true);
+        let path = std::env::temp_dir().join(format!("sparq-ckpt-{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_momentum() {
+        let ckpt = mk(2, 3, 17, false);
+        let path = std::env::temp_dir().join(format!("sparq-ckpt2-{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, back);
+        assert!(back.momentum.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_is_json() {
+        let ckpt = mk(3, 2, 5, false);
+        let path = std::env::temp_dir().join(format!("sparq-ckpt3-{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&bytes[..nl]).unwrap();
+        let j = Json::parse(header).unwrap();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("dim").unwrap().as_usize(), Some(5));
+        std::fs::remove_file(&path).ok();
+    }
+}

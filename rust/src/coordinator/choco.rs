@@ -1,0 +1,201 @@
+//! CHOCO-SGD [KSJ19, KLSJ19] — the state-of-the-art baseline the paper
+//! compares against (Figures 1a–1d).
+//!
+//! CHOCO is SPARQ without the two communication-saving mechanisms: every
+//! iteration is a sync round (H = 1) and every node always transmits its
+//! compressed difference (no event trigger). The update is otherwise the
+//! same estimate-tracking + consensus scheme, so this implementation is a
+//! thin deterministic wrapper over the same primitives — and the
+//! `sparq_equals_choco` test pins the equivalence SPARQ(c_t=0, H=1) ≡
+//! CHOCO on identical seeds.
+
+use super::node::NodeState;
+use super::DecentralizedAlgo;
+use crate::comm::Bus;
+use crate::compress::Compressor;
+use crate::graph::{MixingMatrix, SpectralInfo};
+use crate::linalg::vecops::{scale_add, sub_into};
+use crate::problems::GradientSource;
+use crate::schedule::LrSchedule;
+use crate::util::Rng;
+
+pub struct ChocoSgd {
+    pub mixing: MixingMatrix,
+    pub compressor: Box<dyn Compressor>,
+    pub lr: LrSchedule,
+    pub gamma: f64,
+    pub momentum: f32,
+    nodes: Vec<NodeState>,
+    xhat: Vec<Vec<f32>>,
+    diff: Vec<f32>,
+    qbuf: Vec<f32>,
+}
+
+impl ChocoSgd {
+    pub fn new(
+        mixing: MixingMatrix,
+        compressor: Box<dyn Compressor>,
+        lr: LrSchedule,
+        momentum: f32,
+        d: usize,
+        seed: u64,
+    ) -> ChocoSgd {
+        let n = mixing.n();
+        let spectral = SpectralInfo::compute(&mixing);
+        let gamma =
+            spectral.gamma_tuned(compressor.omega(d), compressor.effective_omega(d));
+        let mut root = Rng::new(seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        ChocoSgd {
+            mixing,
+            compressor,
+            lr,
+            gamma,
+            momentum,
+            nodes,
+            xhat: vec![vec![0.0; d]; n],
+            diff: vec![0.0; d],
+            qbuf: vec![0.0; d],
+        }
+    }
+
+    pub fn init_params(&mut self, x0: &[f32]) {
+        for node in self.nodes.iter_mut() {
+            node.x.copy_from_slice(x0);
+        }
+    }
+}
+
+impl DecentralizedAlgo for ChocoSgd {
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let eta = self.lr.eta(t) as f32;
+
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(i, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+            node.local_step(eta, self.momentum);
+        }
+
+        // Every node transmits every round (the CHOCO contract).
+        let bits = self.compressor.encoded_bits(self.diff.len());
+        for i in 0..n {
+            sub_into(&self.nodes[i].x_half, &self.xhat[i], &mut self.diff);
+            {
+                let node = &mut self.nodes[i];
+                self.compressor
+                    .compress(&self.diff, &mut node.rng, &mut self.qbuf);
+            }
+            bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
+            for (h, qv) in self.xhat[i].iter_mut().zip(self.qbuf.iter()) {
+                *h += qv;
+            }
+        }
+
+        let gamma = self.gamma as f32;
+        for node in self.nodes.iter_mut() {
+            std::mem::swap(&mut node.x, &mut node.x_half);
+        }
+        for i in 0..n {
+            let neighbors = self.mixing.topology.neighbors[i].clone();
+            for j in neighbors {
+                let w = self.mixing.weight(i, j) as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                let (xh_j, xh_i): (&[f32], &[f32]) = (&self.xhat[j], &self.xhat[i]);
+                scale_add(&mut self.nodes[i].x, gamma * w, xh_j, xh_i);
+            }
+        }
+        bus.end_round();
+    }
+
+    fn params(&self, node: usize) -> &[f32] {
+        &self.nodes[node].x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.init_params(x0);
+    }
+
+    fn set_node_params(&mut self, node: usize, x: &[f32]) {
+        self.nodes[node].x.copy_from_slice(x);
+    }
+
+    fn momentum(&self, node: usize) -> Option<&[f32]> {
+        self.nodes[node].momentum.as_deref()
+    }
+
+    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
+        if let Some(buf) = self.nodes[node].momentum.as_mut() {
+            buf.copy_from_slice(m);
+        }
+    }
+
+
+    fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn last_fired(&self) -> usize {
+        self.nodes.len() // everyone transmits
+    }
+
+    fn name(&self) -> String {
+        format!("choco(C={})", self.compressor.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{SignL1, SignTopK, TopK};
+    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+    use crate::problems::QuadraticProblem;
+
+    fn mk(comp: Box<dyn Compressor>) -> (ChocoSgd, QuadraticProblem, Bus) {
+        let topo = Topology::new(TopologyKind::Ring, 8, 0);
+        let mixing = uniform_neighbor(&topo);
+        let algo = ChocoSgd::new(
+            mixing,
+            comp,
+            LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            0.0,
+            16,
+            7,
+        );
+        let prob = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.05, 1.0, 3);
+        (algo, prob, Bus::new(8))
+    }
+
+    #[test]
+    fn transmits_every_round() {
+        let (mut algo, mut prob, mut bus) = mk(Box::new(TopK::new(4)));
+        for t in 0..10 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        // 8 nodes × 10 rounds
+        assert_eq!(bus.total_messages, 80);
+        assert_eq!(bus.comm_rounds, 10);
+    }
+
+    #[test]
+    fn converges_with_each_compressor() {
+        for comp in [
+            Box::new(SignTopK::new(4)) as Box<dyn Compressor>,
+            Box::new(TopK::new(4)),
+            Box::new(SignL1),
+        ] {
+            let name = comp.name();
+            let (mut algo, mut prob, mut bus) = mk(comp);
+            for t in 0..2500 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            let gap = prob.suboptimality(&algo.x_bar());
+            assert!(gap < 0.05, "{name}: suboptimality {gap}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! The L3 coordination layer: Algorithm 1 (SPARQ-SGD) and baselines over
+//! a simulated synchronous graph.
+//!
+//! * [`sparq::SparqSgd`] — the paper's algorithm: local SGD steps, event
+//!   trigger at sync indices, compressed estimate updates, consensus step.
+//! * [`choco::ChocoSgd`] — CHOCO-SGD [KSJ19]: compressed updates every
+//!   iteration, no trigger, no local steps (H = 1).
+//! * [`vanilla::VanillaDecentralized`] — D-PSGD [LZZ+17]: exact (32-bit)
+//!   neighbor averaging every iteration.
+//! * [`runner`] — the leader loop: steps an algorithm, evaluates metrics,
+//!   accounts bits, emits `metrics::RoundRecord`s.
+
+pub mod node;
+pub mod checkpoint;
+pub mod sparq;
+pub mod choco;
+pub mod vanilla;
+pub mod runner;
+
+pub use checkpoint::Checkpoint;
+pub use choco::ChocoSgd;
+pub use runner::{run, RunOptions};
+pub use sparq::{SparqConfig, SparqSgd};
+pub use vanilla::VanillaDecentralized;
+
+use crate::comm::Bus;
+use crate::problems::GradientSource;
+
+/// A decentralized optimization algorithm advanced one synchronous
+/// iteration at a time.
+pub trait DecentralizedAlgo {
+    /// Advance from iteration t to t+1. Gradients come from `src`,
+    /// communication is charged to `bus`.
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus);
+
+    /// Node i's current parameters x_i^{(t)}.
+    fn params(&self, node: usize) -> &[f32];
+
+    /// Set every node's parameters to the same initial vector x^{(0)}.
+    fn set_params(&mut self, x0: &[f32]);
+
+    /// Set one node's parameters (checkpoint restore).
+    fn set_node_params(&mut self, node: usize, x: &[f32]);
+
+    /// Node i's momentum buffer, if the algorithm carries one.
+    fn momentum(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// Restore one node's momentum buffer (no-op if the run has none).
+    fn set_node_momentum(&mut self, _node: usize, _m: &[f32]) {}
+
+    /// Number of nodes.
+    fn n(&self) -> usize;
+
+    /// Average iterate x̄ (the quantity the theorems track).
+    fn x_bar(&self) -> Vec<f32> {
+        let n = self.n();
+        let d = self.params(0).len();
+        let mut bar = vec![0.0f32; d];
+        for i in 0..n {
+            for (b, v) in bar.iter_mut().zip(self.params(i).iter()) {
+                *b += v;
+            }
+        }
+        for b in bar.iter_mut() {
+            *b /= n as f32;
+        }
+        bar
+    }
+
+    /// Consensus distance Σ_i ‖x_i − x̄‖² (Lemma 1's tracked quantity).
+    fn consensus_distance(&self) -> f64 {
+        let bar = self.x_bar();
+        let mut acc = 0.0;
+        for i in 0..self.n() {
+            acc += crate::linalg::vecops::dist2(self.params(i), &bar);
+        }
+        acc
+    }
+
+    /// Number of nodes whose trigger fired in the last sync round (for
+    /// metrics; baselines return n or 0 as appropriate).
+    fn last_fired(&self) -> usize {
+        0
+    }
+
+    /// Algorithm name for logs.
+    fn name(&self) -> String;
+}

@@ -1,0 +1,92 @@
+//! Per-node state.
+//!
+//! In the synchronous setting every neighbor of node i holds the *same*
+//! estimate x̂_i (updates are broadcast and applied deterministically —
+//! Algorithm 1 line 13 runs identically at every receiver), so the
+//! simulation stores one copy per node instead of one per (node, neighbor)
+//! pair. The paper's Appendix A.3 matrix form makes the same reduction
+//! (a single X̂ matrix).
+
+use crate::util::Rng;
+
+/// State owned by one logical worker.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    /// Local model x_i.
+    pub x: Vec<f32>,
+    /// Heavy-ball momentum buffer (None ⇔ plain SGD).
+    pub momentum: Option<Vec<f32>>,
+    /// Node-local RNG stream (mini-batch sampling + compressor noise).
+    pub rng: Rng,
+    /// Scratch: gradient buffer.
+    pub grad: Vec<f32>,
+    /// Scratch: x^{t+1/2} buffer.
+    pub x_half: Vec<f32>,
+}
+
+impl NodeState {
+    pub fn new(d: usize, momentum: bool, rng: Rng) -> NodeState {
+        NodeState {
+            x: vec![0.0; d],
+            momentum: if momentum { Some(vec![0.0; d]) } else { None },
+            rng,
+            grad: vec![0.0; d],
+            x_half: vec![0.0; d],
+        }
+    }
+
+    /// Local step (Algorithm 1 line 4, plus Section 5.2 momentum):
+    /// x_half = x − η·(μ_m·m + g), updating m in place.
+    pub fn local_step(&mut self, eta: f32, momentum_factor: f32) {
+        match self.momentum.as_mut() {
+            Some(m) => {
+                for ((xh, (xi, gi)), mi) in self
+                    .x_half
+                    .iter_mut()
+                    .zip(self.x.iter().zip(self.grad.iter()))
+                    .zip(m.iter_mut())
+                {
+                    *mi = momentum_factor * *mi + gi;
+                    *xh = xi - eta * *mi;
+                }
+            }
+            None => {
+                for (xh, (xi, gi)) in self
+                    .x_half
+                    .iter_mut()
+                    .zip(self.x.iter().zip(self.grad.iter()))
+                {
+                    *xh = xi - eta * gi;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut n = NodeState::new(3, false, Rng::new(0));
+        n.x = vec![1.0, 2.0, 3.0];
+        n.grad = vec![1.0, 1.0, 1.0];
+        n.local_step(0.5, 0.0);
+        assert_eq!(n.x_half, vec![0.5, 1.5, 2.5]);
+        // x itself untouched until consensus commits
+        assert_eq!(n.x, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut n = NodeState::new(2, true, Rng::new(0));
+        n.grad = vec![1.0, 0.0];
+        n.local_step(1.0, 0.9);
+        assert_eq!(n.x_half, vec![-1.0, 0.0]);
+        n.x = n.x_half.clone();
+        n.local_step(1.0, 0.9);
+        // m = 0.9*1 + 1 = 1.9 ⇒ x_half = -1 - 1.9 = -2.9
+        assert!((n.x_half[0] + 2.9).abs() < 1e-6);
+    }
+}

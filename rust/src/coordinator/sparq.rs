@@ -1,0 +1,393 @@
+//! SPARQ-SGD — Algorithm 1, verbatim.
+//!
+//! Per iteration t (synchronous, all nodes):
+//!
+//! 1. line 3–4: stochastic gradient + local step → x_i^{t+½}
+//! 2. if (t+1) ∈ I_T (line 5):
+//!    a. line 7: trigger check ‖x_i^{t+½} − x̂_i^{(t)}‖² > c_t η_t²
+//!    b. line 8–9: fired nodes broadcast q_i = C(x_i^{t+½} − x̂_i^{(t)})
+//!       (charged to the bus); silent nodes send nothing (line 11)
+//!    c. line 13: every node updates x̂_j ← x̂_j + q_j for all j
+//!    d. line 15: consensus x_i ← x_i^{t+½} + γ Σ_j w_ij (x̂_j − x̂_i)
+//! 3. else (line 17): x_i ← x_i^{t+½}, estimates unchanged.
+//!
+//! First-round bootstrap: x̂^{(0)} = 0 and the paper has every node send
+//! its (compressed) initial parameters in round one; with the x^{(0)} = 0
+//! init used throughout the experiments this is automatic (zero drift ⇒
+//! nothing to send). For nonzero init the first sync round's trigger sees
+//! the full ‖x^{(½)}‖² drift and fires, which is exactly that bootstrap.
+
+use super::node::NodeState;
+use super::DecentralizedAlgo;
+use crate::comm::Bus;
+use crate::compress::Compressor;
+use crate::graph::{MixingMatrix, SpectralInfo};
+use crate::linalg::vecops::{scale_add, sub_into};
+use crate::problems::GradientSource;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::EventTrigger;
+use crate::util::Rng;
+
+/// Everything that parameterizes a SPARQ run (Algorithm 1's inputs).
+pub struct SparqConfig {
+    pub mixing: MixingMatrix,
+    pub compressor: Box<dyn Compressor>,
+    pub trigger: EventTrigger,
+    pub lr: LrSchedule,
+    pub sync: SyncSchedule,
+    /// Consensus step size γ; `None` ⇒ tuned heuristic
+    /// `SpectralInfo::gamma_tuned` (the paper's experiments grid-search γ;
+    /// pass `Some(γ*)` for the worst-case Lemma-6 value).
+    pub gamma: Option<f64>,
+    /// Momentum factor (Section 5.2 uses 0.9; 0 disables).
+    pub momentum: f32,
+    pub seed: u64,
+}
+
+pub struct SparqSgd {
+    pub cfg: SparqConfig,
+    pub gamma: f64,
+    nodes: Vec<NodeState>,
+    /// Public estimates x̂_j (one authoritative copy per node; see node.rs).
+    xhat: Vec<Vec<f32>>,
+    /// Scratch for diffs and compressed messages (no allocation on the
+    /// per-round hot path — see EXPERIMENTS.md §Perf).
+    diff: Vec<f32>,
+    qbuf: Vec<f32>,
+    fired_last: usize,
+    /// Cumulative trigger statistics.
+    pub total_fired: u64,
+    pub total_checks: u64,
+}
+
+impl SparqSgd {
+    pub fn new(cfg: SparqConfig, d: usize) -> SparqSgd {
+        let n = cfg.mixing.n();
+        let spectral = SpectralInfo::compute(&cfg.mixing);
+        let omega = cfg.compressor.omega(d);
+        let omega_eff = cfg.compressor.effective_omega(d);
+        let gamma = cfg
+            .gamma
+            .unwrap_or_else(|| spectral.gamma_tuned(omega, omega_eff));
+        let mut root = Rng::new(cfg.seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, cfg.momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        SparqSgd {
+            cfg,
+            gamma,
+            nodes,
+            xhat: vec![vec![0.0; d]; n],
+            diff: vec![0.0; d],
+            qbuf: vec![0.0; d],
+            fired_last: 0,
+            total_fired: 0,
+            total_checks: 0,
+        }
+    }
+
+    /// Set all nodes to the same initial parameters.
+    pub fn init_params(&mut self, x0: &[f32]) {
+        for node in self.nodes.iter_mut() {
+            node.x.copy_from_slice(x0);
+        }
+    }
+
+    /// Spectral info of the configured mixing matrix.
+    pub fn spectral(&self) -> SpectralInfo {
+        SpectralInfo::compute(&self.cfg.mixing)
+    }
+
+    /// The estimate bank (exposed for tests).
+    pub fn xhat(&self, i: usize) -> &[f32] {
+        &self.xhat[i]
+    }
+}
+
+impl DecentralizedAlgo for SparqSgd {
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let eta = self.cfg.lr.eta(t) as f32;
+
+        // lines 3–4: gradient + local half-step, every node.
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(i, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+            node.local_step(eta, self.cfg.momentum);
+        }
+
+        if self.cfg.sync.is_sync(t) {
+            // line 7: trigger checks (all against the *pre-update* x̂).
+            let mut fired = vec![false; n];
+            for i in 0..n {
+                self.total_checks += 1;
+                fired[i] = self.cfg.trigger.fires(
+                    &self.nodes[i].x_half,
+                    &self.xhat[i],
+                    t,
+                    self.cfg.lr.eta(t),
+                );
+            }
+            self.fired_last = fired.iter().filter(|f| **f).count();
+            self.total_fired += self.fired_last as u64;
+
+            // lines 8–13: compress, broadcast (charged), update estimates.
+            let bits = self.cfg.compressor.encoded_bits(self.diff.len());
+            for i in 0..n {
+                if !fired[i] {
+                    continue; // line 11: send 0 — costs nothing on the wire
+                }
+                sub_into(&self.nodes[i].x_half, &self.xhat[i], &mut self.diff);
+                {
+                    let node = &mut self.nodes[i];
+                    self.cfg
+                        .compressor
+                        .compress(&self.diff, &mut node.rng, &mut self.qbuf);
+                }
+                let fanout = self.cfg.mixing.topology.degree(i);
+                bus.charge_broadcast(i, fanout, bits);
+                // line 13 at every receiver (and i itself): x̂_i += q_i.
+                for (h, qv) in self.xhat[i].iter_mut().zip(self.qbuf.iter()) {
+                    *h += qv;
+                }
+            }
+
+            // line 15: consensus step from x̂ (post-update estimates).
+            // Commit by buffer swap — x_half is fully rewritten by the
+            // next local_step, so no copy is needed (§Perf, L3 iter 4).
+            let gamma = self.gamma as f32;
+            for i in 0..n {
+                let node = &mut self.nodes[i];
+                std::mem::swap(&mut node.x, &mut node.x_half);
+            }
+            for i in 0..n {
+                // x_i += γ Σ_j w_ij (x̂_j − x̂_i); w_ii term vanishes.
+                let neighbors = self.cfg.mixing.topology.neighbors[i].clone();
+                for j in neighbors {
+                    let w = self.cfg.mixing.weight(i, j) as f32;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let (xh_j, xh_i): (&[f32], &[f32]) = (&self.xhat[j], &self.xhat[i]);
+                    // borrow-split: copy into node x via raw indexing
+                    let x = &mut self.nodes[i].x;
+                    scale_add(x, gamma * w, xh_j, xh_i);
+                }
+            }
+        } else {
+            // line 17: commit the local step only (buffer swap, no copy).
+            for node in self.nodes.iter_mut() {
+                std::mem::swap(&mut node.x, &mut node.x_half);
+            }
+            self.fired_last = 0;
+        }
+        bus.end_round();
+    }
+
+    fn params(&self, node: usize) -> &[f32] {
+        &self.nodes[node].x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.init_params(x0);
+    }
+
+    fn set_node_params(&mut self, node: usize, x: &[f32]) {
+        self.nodes[node].x.copy_from_slice(x);
+    }
+
+    fn momentum(&self, node: usize) -> Option<&[f32]> {
+        self.nodes[node].momentum.as_deref()
+    }
+
+    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
+        if let Some(buf) = self.nodes[node].momentum.as_mut() {
+            buf.copy_from_slice(m);
+        }
+    }
+
+
+    fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn last_fired(&self) -> usize {
+        self.fired_last
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "sparq(C={}, trigger={:?}, H={:?})",
+            self.cfg.compressor.name(),
+            self.cfg.trigger.schedule,
+            self.cfg.sync
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, SignTopK};
+    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+    use crate::problems::QuadraticProblem;
+    use crate::trigger::ThresholdSchedule;
+
+    fn mk(
+        n: usize,
+        d: usize,
+        comp: Box<dyn Compressor>,
+        trig: ThresholdSchedule,
+        h: u64,
+    ) -> (SparqSgd, QuadraticProblem, Bus) {
+        let topo = Topology::new(TopologyKind::Ring, n, 0);
+        let mixing = uniform_neighbor(&topo);
+        let cfg = SparqConfig {
+            mixing,
+            compressor: comp,
+            trigger: EventTrigger::new(trig),
+            lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            sync: SyncSchedule::EveryH(h),
+            gamma: None,
+            momentum: 0.0,
+            seed: 7,
+        };
+        let algo = SparqSgd::new(cfg, d);
+        let prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 3);
+        let bus = Bus::new(n);
+        (algo, prob, bus)
+    }
+
+    #[test]
+    fn average_preserved_during_sync_round() {
+        // Paper Eq. (20): x̄^{t+1} = x̄^{t+½} — the consensus step never
+        // moves the average; only gradients do.
+        let (mut algo, mut prob, mut bus) = mk(
+            8,
+            12,
+            Box::new(SignTopK::new(3)),
+            ThresholdSchedule::Zero,
+            1,
+        );
+        for t in 0..20 {
+            // x̄^{t+1} must equal x̄^{t} − (η_t/n) Σ_i g_i (paper Eq. 20 +
+            // Eq. 3); node.grad still holds g_i^{(t)} after the step.
+            let bar_before = algo.x_bar();
+            algo.step(t, &mut prob, &mut bus);
+            let eta = algo.cfg.lr.eta(t) as f32;
+            let mut expected = bar_before;
+            for i in 0..8 {
+                for (e, g) in expected.iter_mut().zip(algo.nodes[i].grad.iter()) {
+                    *e -= eta * g / 8.0;
+                }
+            }
+            let bar = algo.x_bar();
+            for (a, b) in bar.iter().zip(expected.iter()) {
+                assert!((a - b).abs() < 1e-4, "t={t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn silent_nodes_cost_no_bits() {
+        // Impossible threshold ⇒ nobody ever fires ⇒ zero bits on the bus.
+        let (mut algo, mut prob, mut bus) = mk(
+            6,
+            10,
+            Box::new(SignTopK::new(2)),
+            ThresholdSchedule::Constant(1e12),
+            1,
+        );
+        for t in 0..30 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        assert_eq!(bus.total_bits, 0);
+        assert_eq!(algo.total_fired, 0);
+        assert_eq!(algo.total_checks, 30 * 6);
+    }
+
+    #[test]
+    fn no_sync_rounds_never_communicate() {
+        let (mut algo, mut prob, mut bus) =
+            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 10);
+        for t in 0..9 {
+            // t = 0..8: (t+1) ∈ {1..9}, none divisible by 10
+            algo.step(t, &mut prob, &mut bus);
+            assert_eq!(bus.total_bits, 0, "t={t}");
+        }
+        algo.step(9, &mut prob, &mut bus); // t+1 = 10 syncs
+        assert!(bus.total_bits > 0);
+    }
+
+    #[test]
+    fn estimates_track_params_with_identity_compression() {
+        // With Identity compression and always-firing trigger at H=1,
+        // x̂_i = x_i^{t+½} after each sync round (perfect estimates).
+        // x^{t+½} is reconstructed as x_prev − η g (plain SGD, no momentum).
+        let (mut algo, mut prob, mut bus) =
+            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 1);
+        for t in 0..10 {
+            let prev: Vec<Vec<f32>> = (0..4).map(|i| algo.params(i).to_vec()).collect();
+            algo.step(t, &mut prob, &mut bus);
+            let eta = algo.cfg.lr.eta(t) as f32;
+            for i in 0..4 {
+                for ((h, xp), g) in algo
+                    .xhat(i)
+                    .iter()
+                    .zip(prev[i].iter())
+                    .zip(algo.nodes[i].grad.iter())
+                {
+                    let x_half = xp - eta * g;
+                    assert!((h - x_half).abs() < 1e-5, "t={t} node {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let (mut algo, mut prob, mut bus) = mk(
+            8,
+            16,
+            Box::new(SignTopK::new(4)),
+            ThresholdSchedule::Poly { c0: 1.0, eps: 0.5 },
+            5,
+        );
+        for t in 0..3000 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.05, "suboptimality {gap}");
+        // consensus drift is bounded and decaying (Lemma 1: ∝ η_t²/p²; at
+        // t=3000 it is well below its early-training peak)
+        assert!(
+            algo.consensus_distance() < 10.0,
+            "consensus {}",
+            algo.consensus_distance()
+        );
+        // and the trigger actually saved some broadcasts
+        assert!(algo.total_fired < algo.total_checks);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let (mut algo, mut prob, mut bus) = mk(
+                5,
+                10,
+                Box::new(SignTopK::new(3)),
+                ThresholdSchedule::Constant(10.0),
+                5,
+            );
+            for t in 0..200 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            (algo.x_bar(), bus.total_bits)
+        };
+        let (x1, b1) = run();
+        let (x2, b2) = run();
+        assert_eq!(x1, x2);
+        assert_eq!(b1, b2);
+    }
+}

@@ -1,0 +1,213 @@
+//! Vanilla decentralized SGD (D-PSGD, [LZZ+17]) — the uncompressed
+//! baseline of Figures 1a–1d.
+//!
+//! ```text
+//! x_i^{(t+1)} = Σ_j w_ij x_j^{(t)} − η_t g_i^{(t)}
+//! ```
+//!
+//! Every round each node broadcasts its full 32-bit parameter vector to
+//! all neighbors; this is what SPARQ's 1000×/15K× bit-savings factors are
+//! measured against.
+
+use super::node::NodeState;
+use super::DecentralizedAlgo;
+use crate::comm::Bus;
+use crate::graph::MixingMatrix;
+use crate::problems::GradientSource;
+use crate::schedule::LrSchedule;
+use crate::util::Rng;
+
+pub struct VanillaDecentralized {
+    pub mixing: MixingMatrix,
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    nodes: Vec<NodeState>,
+    mixed: Vec<Vec<f32>>,
+}
+
+impl VanillaDecentralized {
+    pub fn new(
+        mixing: MixingMatrix,
+        lr: LrSchedule,
+        momentum: f32,
+        d: usize,
+        seed: u64,
+    ) -> VanillaDecentralized {
+        let n = mixing.n();
+        let mut root = Rng::new(seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        VanillaDecentralized {
+            mixing,
+            lr,
+            momentum,
+            nodes,
+            mixed: vec![vec![0.0; d]; n],
+        }
+    }
+
+    pub fn init_params(&mut self, x0: &[f32]) {
+        for node in self.nodes.iter_mut() {
+            node.x.copy_from_slice(x0);
+        }
+    }
+}
+
+impl DecentralizedAlgo for VanillaDecentralized {
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let d = self.nodes[0].x.len();
+        let eta = self.lr.eta(t) as f32;
+
+        // Gradients at current params.
+        for (node_id, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(node_id, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+        }
+
+        // Exact neighbor averaging (everyone broadcasts x_i in full).
+        for i in 0..n {
+            bus.charge_broadcast(i, self.mixing.topology.degree(i), 32 * d as u64);
+            let row = &mut self.mixed[i];
+            row.fill(0.0);
+            let wii = self.mixing.weight(i, i) as f32;
+            for (m, x) in row.iter_mut().zip(self.nodes[i].x.iter()) {
+                *m = wii * x;
+            }
+            for &j in &self.mixing.topology.neighbors[i] {
+                let w = self.mixing.weight(i, j) as f32;
+                for (m, x) in row.iter_mut().zip(self.nodes[j].x.iter()) {
+                    *m += w * x;
+                }
+            }
+        }
+
+        // Commit: x_i = mixed_i − η·(momentum-adjusted gradient).
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            match node.momentum.as_mut() {
+                Some(m) => {
+                    for ((x, mi), (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(m.iter_mut())
+                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                    {
+                        *mi = self.momentum * *mi + g;
+                        *x = mix - eta * *mi;
+                    }
+                }
+                None => {
+                    for (x, (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                    {
+                        *x = mix - eta * g;
+                    }
+                }
+            }
+        }
+        bus.end_round();
+    }
+
+    fn params(&self, node: usize) -> &[f32] {
+        &self.nodes[node].x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.init_params(x0);
+    }
+
+    fn set_node_params(&mut self, node: usize, x: &[f32]) {
+        self.nodes[node].x.copy_from_slice(x);
+    }
+
+    fn momentum(&self, node: usize) -> Option<&[f32]> {
+        self.nodes[node].momentum.as_deref()
+    }
+
+    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
+        if let Some(buf) = self.nodes[node].momentum.as_mut() {
+            buf.copy_from_slice(m);
+        }
+    }
+
+
+    fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn last_fired(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn name(&self) -> String {
+        "vanilla-dpsgd".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+    use crate::problems::QuadraticProblem;
+
+    #[test]
+    fn bits_are_full_precision() {
+        let topo = Topology::new(TopologyKind::Ring, 6, 0);
+        let mut algo = VanillaDecentralized::new(
+            uniform_neighbor(&topo),
+            LrSchedule::Constant(0.05),
+            0.0,
+            20,
+            1,
+        );
+        let mut prob = QuadraticProblem::new(20, 6, 0.5, 2.0, 0.0, 1.0, 2);
+        let mut bus = Bus::new(6);
+        algo.step(0, &mut prob, &mut bus);
+        // 6 nodes × 2 neighbors × 32·20 bits
+        assert_eq!(bus.total_bits, 6 * 2 * 32 * 20);
+    }
+
+    #[test]
+    fn converges_and_reaches_consensus() {
+        let topo = Topology::new(TopologyKind::Ring, 8, 0);
+        let mut algo = VanillaDecentralized::new(
+            uniform_neighbor(&topo),
+            LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            0.0,
+            16,
+            3,
+        );
+        let mut prob = QuadraticProblem::new(16, 8, 0.5, 2.0, 0.05, 1.0, 4);
+        let mut bus = Bus::new(8);
+        for t in 0..2000 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.02, "suboptimality {gap}");
+        assert!(algo.consensus_distance() < 0.1);
+    }
+
+    #[test]
+    fn single_node_is_plain_sgd() {
+        // n = 1 ring degenerates to SGD: W = [1], no communication terms.
+        let topo = Topology::new(TopologyKind::Ring, 1, 0);
+        let mut algo = VanillaDecentralized::new(
+            uniform_neighbor(&topo),
+            LrSchedule::Constant(0.2),
+            0.0,
+            8,
+            5,
+        );
+        let mut prob = QuadraticProblem::new(8, 1, 0.5, 1.5, 0.0, 1.0, 6);
+        let mut bus = Bus::new(1);
+        for t in 0..300 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        assert!(prob.suboptimality(algo.params(0)) < 1e-4);
+        assert_eq!(bus.total_bits, 0); // no neighbors
+    }
+}

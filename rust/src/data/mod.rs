@@ -1,0 +1,15 @@
+//! Synthetic datasets and heterogeneous partitioning.
+//!
+//! DESIGN.md §Substitutions: no MNIST/CIFAR files exist in this
+//! environment, so class-conditional Gaussian generators stand in. The
+//! properties SPARQ-SGD's experiments exercise are (a) a well-conditioned
+//! ERM landscape with a meaningful test error and (b) *heterogeneous*
+//! local distributions (Section 5.1: "heterogeneous distribution of data
+//! across classes") — both are controlled explicitly here.
+
+pub mod synthetic;
+pub mod partition;
+pub mod corpus;
+
+pub use partition::{by_class_shards, iid_split, Partition};
+pub use synthetic::{ClassGaussian, Dataset};

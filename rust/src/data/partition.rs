@@ -1,0 +1,115 @@
+//! Heterogeneous data partitioning across nodes.
+//!
+//! Section 5.1 runs n = 60 nodes with a "heterogeneous distribution of
+//! data across classes": each node's local dataset is dominated by a few
+//! classes. `by_class_shards` reproduces that (each node draws from
+//! `classes_per_node` classes chosen round-robin), `iid_split` is the
+//! homogeneous control.
+
+use super::synthetic::{ClassGaussian, Dataset};
+use crate::util::Rng;
+
+/// One node's local data plus a batch sampler.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Dataset>,
+}
+
+impl Partition {
+    pub fn n_nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Sample a mini-batch of `b` rows (with replacement) from node i.
+    pub fn batch(&self, node: usize, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let ds = &self.shards[node];
+        let idx: Vec<usize> = (0..b).map(|_| rng.below(ds.len())).collect();
+        ds.gather(&idx)
+    }
+}
+
+/// Heterogeneous by-class sharding: node i draws `per_node` samples from
+/// `classes_per_node` classes starting at class (i * classes_per_node)
+/// mod C — adjacent nodes see (mostly) different classes.
+pub fn by_class_shards(
+    gen: &ClassGaussian,
+    n_nodes: usize,
+    per_node: usize,
+    classes_per_node: usize,
+    rng: &mut Rng,
+) -> Partition {
+    assert!(classes_per_node >= 1 && classes_per_node <= gen.classes);
+    let mut shards = Vec::with_capacity(n_nodes);
+    for i in 0..n_nodes {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let base = (i * classes_per_node) % gen.classes;
+        for j in 0..per_node {
+            let c = (base + j % classes_per_node) % gen.classes;
+            let s = gen.generate_class(1, c, rng);
+            xs.extend_from_slice(&s.x);
+            ys.extend_from_slice(&s.y);
+        }
+        shards.push(Dataset {
+            dim: gen.dim,
+            classes: gen.classes,
+            x: xs,
+            y: ys,
+        });
+    }
+    Partition { shards }
+}
+
+/// IID split: every node draws from the global mixture.
+pub fn iid_split(
+    gen: &ClassGaussian,
+    n_nodes: usize,
+    per_node: usize,
+    rng: &mut Rng,
+) -> Partition {
+    Partition {
+        shards: (0..n_nodes).map(|_| gen.generate(per_node, rng)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_class_is_heterogeneous() {
+        let gen = ClassGaussian::new(8, 10, 1.0, 1);
+        let mut rng = Rng::new(2);
+        let p = by_class_shards(&gen, 5, 40, 2, &mut rng);
+        assert_eq!(p.n_nodes(), 5);
+        for (i, shard) in p.shards.iter().enumerate() {
+            let mut classes: Vec<i32> = shard.y.clone();
+            classes.sort_unstable();
+            classes.dedup();
+            assert_eq!(classes.len(), 2, "node {i} classes {classes:?}");
+        }
+        // node 0 and node 1 see disjoint classes (0,1) vs (2,3)
+        assert_ne!(p.shards[0].y[0], p.shards[1].y[0]);
+    }
+
+    #[test]
+    fn iid_sees_many_classes() {
+        let gen = ClassGaussian::new(8, 10, 1.0, 3);
+        let mut rng = Rng::new(4);
+        let p = iid_split(&gen, 2, 200, &mut rng);
+        let mut classes: Vec<i32> = p.shards[0].y.clone();
+        classes.sort_unstable();
+        classes.dedup();
+        assert!(classes.len() >= 8);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let gen = ClassGaussian::new(6, 4, 1.0, 5);
+        let mut rng = Rng::new(6);
+        let p = iid_split(&gen, 3, 50, &mut rng);
+        let (xs, ys) = p.batch(1, 7, &mut rng);
+        assert_eq!(xs.len(), 42);
+        assert_eq!(ys.len(), 7);
+    }
+}

@@ -1,0 +1,212 @@
+//! Structured ablations over SPARQ-SGD's design knobs (the quantities
+//! Remark 1 predicts should only perturb higher-order terms): H, c₀, ω
+//! (via k), γ, and topology δ. Each sweep runs matched-budget quadratic
+//! experiments and returns a table row per point — used by the
+//! `trigger_ablation` bench, the `sparq ablate` CLI subcommand, and the
+//! ablation assertions in `rust/tests/convergence.rs`.
+
+use crate::comm::Bus;
+use crate::compress::SignTopK;
+use crate::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+use crate::problems::QuadraticProblem;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::{EventTrigger, ThresholdSchedule};
+
+/// One ablation measurement.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub knob: String,
+    pub value: f64,
+    pub final_gap: f64,
+    pub total_bits: u64,
+    pub comm_rounds: u64,
+    pub fire_rate: f64,
+}
+
+/// Shared base setting for all sweeps (kept deliberately small so a full
+/// ablation grid runs in seconds).
+#[derive(Clone, Debug)]
+pub struct AblationBase {
+    pub n: usize,
+    pub d: usize,
+    pub steps: u64,
+    pub seed: u64,
+}
+
+impl Default for AblationBase {
+    fn default() -> Self {
+        AblationBase {
+            n: 8,
+            d: 64,
+            steps: 4000,
+            seed: 11,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    base: &AblationBase,
+    knob: &str,
+    value: f64,
+    h: u64,
+    c0: f64,
+    k: usize,
+    gamma: Option<f64>,
+    topology: TopologyKind,
+) -> AblationPoint {
+    let topo = Topology::new(topology, base.n, base.seed);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: Box::new(SignTopK::new(k)),
+        trigger: EventTrigger::new(if c0 > 0.0 {
+            ThresholdSchedule::Poly { c0, eps: 0.5 }
+        } else {
+            ThresholdSchedule::Zero
+        }),
+        lr: LrSchedule::InverseTime { a: 60.0, b: 2.0 },
+        sync: SyncSchedule::EveryH(h),
+        gamma,
+        momentum: 0.0,
+        seed: base.seed,
+    };
+    let mut algo = SparqSgd::new(cfg, base.d);
+    let mut prob = QuadraticProblem::new(base.d, base.n, 0.5, 2.0, 0.1, 0.5, base.seed ^ 0xF00D);
+    let mut bus = Bus::new(base.n);
+    for t in 0..base.steps {
+        algo.step(t, &mut prob, &mut bus);
+    }
+    AblationPoint {
+        knob: knob.to_string(),
+        value,
+        final_gap: prob.suboptimality(&algo.x_bar()),
+        total_bits: bus.total_bits,
+        comm_rounds: bus.comm_rounds,
+        fire_rate: algo.total_fired as f64 / algo.total_checks.max(1) as f64,
+    }
+}
+
+/// Sweep local-iteration count H (Remark 1(ii)).
+pub fn h_sweep(base: &AblationBase, hs: &[u64]) -> Vec<AblationPoint> {
+    hs.iter()
+        .map(|&h| run_one(base, "H", h as f64, h, 50.0, base.d / 4, None, TopologyKind::Ring))
+        .collect()
+}
+
+/// Sweep trigger constant c₀ (Remark 1(iii)).
+pub fn c0_sweep(base: &AblationBase, c0s: &[f64]) -> Vec<AblationPoint> {
+    c0s.iter()
+        .map(|&c0| run_one(base, "c0", c0, 5, c0, base.d / 4, None, TopologyKind::Ring))
+        .collect()
+}
+
+/// Sweep compression level via k (Remark 1(i); ω_eff ∝ k/d).
+pub fn k_sweep(base: &AblationBase, ks: &[usize]) -> Vec<AblationPoint> {
+    ks.iter()
+        .map(|&k| run_one(base, "k", k as f64, 5, 50.0, k, None, TopologyKind::Ring))
+        .collect()
+}
+
+/// Sweep the consensus step size γ (the tuned-vs-Lemma-6 question).
+pub fn gamma_sweep(base: &AblationBase, gammas: &[f64]) -> Vec<AblationPoint> {
+    gammas
+        .iter()
+        .map(|&g| {
+            run_one(
+                base,
+                "gamma",
+                g,
+                5,
+                50.0,
+                base.d / 4,
+                Some(g),
+                TopologyKind::Ring,
+            )
+        })
+        .collect()
+}
+
+/// Render points as an aligned text table.
+pub fn table(points: &[AblationPoint]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:>8} {:>10} {:>12} {:>14} {:>12} {:>10}",
+        "knob", "value", "final gap", "total bits", "comm rounds", "fire rate"
+    );
+    for p in points {
+        let _ = writeln!(
+            out,
+            "{:>8} {:>10} {:>12.3e} {:>14} {:>12} {:>9.1}%",
+            p.knob,
+            p.value,
+            p.final_gap,
+            p.total_bits,
+            p.comm_rounds,
+            p.fire_rate * 100.0
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> AblationBase {
+        AblationBase {
+            steps: 1500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn h_sweep_bits_monotone_decreasing() {
+        let pts = h_sweep(&base(), &[1, 5, 25]);
+        assert!(pts[0].total_bits > pts[1].total_bits);
+        assert!(pts[1].total_bits > pts[2].total_bits);
+        // all converge to something sensible at this budget
+        for p in &pts {
+            assert!(p.final_gap < 0.5, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn c0_sweep_fire_rate_monotone_nonincreasing() {
+        let pts = c0_sweep(&base(), &[0.0, 50.0, 5000.0]);
+        assert!(pts[0].fire_rate >= pts[1].fire_rate);
+        assert!(pts[1].fire_rate >= pts[2].fire_rate);
+        assert!((pts[0].fire_rate - 1.0).abs() < 1e-9, "c0=0 always fires");
+    }
+
+    #[test]
+    fn k_sweep_bits_increase_with_k() {
+        let pts = k_sweep(&base(), &[4, 16, 48]);
+        assert!(pts[0].total_bits < pts[1].total_bits);
+        assert!(pts[1].total_bits < pts[2].total_bits);
+    }
+
+    #[test]
+    fn gamma_zero_breaks_consensus() {
+        // γ=0 disables mixing entirely: heterogeneous nodes never agree,
+        // so the gap stays far above a healthy γ's.
+        let pts = gamma_sweep(&base(), &[0.0, 0.25]);
+        // NOTE: gamma=0.0 maps to Some(0.0) (explicit), not the heuristic.
+        assert!(
+            pts[0].final_gap > pts[1].final_gap * 3.0,
+            "γ=0 gap {} vs γ=.25 gap {}",
+            pts[0].final_gap,
+            pts[1].final_gap
+        );
+    }
+
+    #[test]
+    fn table_renders() {
+        let pts = c0_sweep(&base(), &[0.0, 10.0]);
+        let t = table(&pts);
+        assert!(t.contains("fire rate"));
+        assert!(t.lines().count() >= 3);
+    }
+}

@@ -1,0 +1,197 @@
+//! Construct problems and algorithms from an `ExperimentConfig`.
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::coordinator::{
+    run, ChocoSgd, DecentralizedAlgo, RunOptions, SparqConfig, SparqSgd, VanillaDecentralized,
+};
+use crate::data::synthetic::ClassGaussian;
+use crate::data::{by_class_shards, iid_split};
+use crate::graph::{uniform_neighbor, MixingMatrix, Topology, TopologyKind};
+use crate::metrics::Series;
+use crate::problems::{GradientSource, LogRegProblem, MlpProblem, QuadraticProblem};
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::{EventTrigger, ThresholdSchedule};
+use crate::util::Rng;
+
+/// Per-node sample count for synthetic shards (≈ the paper's 60k/60).
+pub const SAMPLES_PER_NODE: usize = 256;
+pub const TEST_SAMPLES: usize = 1024;
+/// Classes each node's shard covers (heterogeneous split).
+pub const CLASSES_PER_NODE: usize = 2;
+
+/// Class-mean separation, normalized so the expected inter-class mean
+/// distance ‖μ_a − μ_b‖ ≈ 4.6 regardless of the input dimension: the
+/// per-pair Bayes error is then ≈ Φ(−2.3) ≈ 1%, putting the 10-class
+/// error floor near 0.08–0.12 — the regime the paper's Figure 1a/1b
+/// operates in (target test error 0.12), reachable but not trivial.
+pub fn class_sep(din: usize) -> f32 {
+    4.6 / (2.0 * din as f32).sqrt()
+}
+
+/// Build the mixing matrix from the config's topology spec.
+pub fn build_mixing(cfg: &ExperimentConfig) -> MixingMatrix {
+    let kind = TopologyKind::parse(&cfg.topology)
+        .unwrap_or_else(|| panic!("unknown topology {:?}", cfg.topology));
+    let topo = Topology::new(kind, cfg.nodes, cfg.seed);
+    uniform_neighbor(&topo)
+}
+
+/// Build the gradient source from the config's problem spec.
+pub fn build_problem(cfg: &ExperimentConfig) -> Box<dyn GradientSource> {
+    let parts: Vec<&str> = cfg.problem.split(':').collect();
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    match parts.as_slice() {
+        ["quadratic", d] => {
+            let d: usize = d.parse().expect("quadratic:D");
+            Box::new(QuadraticProblem::new(
+                d, cfg.nodes, 0.5, 2.0, 0.05, 1.0, cfg.seed,
+            ))
+        }
+        ["logreg", din, classes, batch] => {
+            let din: usize = din.parse().expect("logreg:DIN");
+            let classes: usize = classes.parse().expect("logreg classes");
+            let batch: usize = batch.parse().expect("logreg batch");
+            let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
+            let part = by_class_shards(&gen, cfg.nodes, SAMPLES_PER_NODE, CLASSES_PER_NODE, &mut rng);
+            let test = gen.generate(TEST_SAMPLES, &mut rng);
+            Box::new(LogRegProblem::new(part, test, batch, 1e-4))
+        }
+        ["mlp", din, hidden, classes, batch] => {
+            // IID shards: Section 5.2 "matches the setting in CHOCO-SGD"
+            // ([KLSJ19] CIFAR runs use a random partition); the convex
+            // experiment (logreg above) is the heterogeneous one.
+            let din: usize = din.parse().expect("mlp:DIN");
+            let hidden: usize = hidden.parse().expect("mlp hidden");
+            let classes: usize = classes.parse().expect("mlp classes");
+            let batch: usize = batch.parse().expect("mlp batch");
+            let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
+            let part = iid_split(&gen, cfg.nodes, SAMPLES_PER_NODE, &mut rng);
+            let test = gen.generate(TEST_SAMPLES, &mut rng);
+            Box::new(MlpProblem::new(part, test, hidden, batch))
+        }
+        other => panic!("unknown problem spec {other:?}"),
+    }
+}
+
+/// Build the algorithm for parameter dimension `d`.
+pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo> {
+    let mixing = build_mixing(cfg);
+    let lr = LrSchedule::parse(&cfg.lr).unwrap_or_else(|| panic!("bad lr spec {:?}", cfg.lr));
+    let comp = crate::compress::parse(&cfg.compressor, d)
+        .unwrap_or_else(|| panic!("bad compressor spec {:?}", cfg.compressor));
+    match cfg.algo {
+        Algo::Sparq => {
+            let trigger = ThresholdSchedule::parse(&cfg.trigger)
+                .unwrap_or_else(|| panic!("bad trigger spec {:?}", cfg.trigger));
+            let sparq = SparqSgd::new(
+                SparqConfig {
+                    mixing,
+                    compressor: comp,
+                    trigger: EventTrigger::new(trigger),
+                    lr,
+                    sync: SyncSchedule::EveryH(cfg.h),
+                    gamma: if cfg.gamma > 0.0 { Some(cfg.gamma) } else { None },
+                    momentum: cfg.momentum as f32,
+                    seed: cfg.seed,
+                },
+                d,
+            );
+            Box::new(sparq)
+        }
+        Algo::Choco => Box::new(ChocoSgd::new(
+            mixing,
+            comp,
+            lr,
+            cfg.momentum as f32,
+            d,
+            cfg.seed,
+        )),
+        Algo::Vanilla => Box::new(VanillaDecentralized::new(
+            mixing,
+            lr,
+            cfg.momentum as f32,
+            d,
+            cfg.seed,
+        )),
+    }
+}
+
+/// Run a config end to end, returning its metric series.
+pub fn run_config(cfg: &ExperimentConfig, verbose: bool) -> Series {
+    let mut problem = build_problem(cfg);
+    let d = problem.dim();
+    let mut algo = build_algo(cfg, d);
+    let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+    if let Some(x0) = problem.init_params(&mut init_rng) {
+        algo.set_params(&x0);
+    }
+    let opts = RunOptions {
+        steps: cfg.steps,
+        eval_every: cfg.eval_every,
+        verbose,
+    };
+    let mut series = run(algo.as_mut(), problem.as_mut(), &opts);
+    series.label = format!("{}:{}", cfg.name, algo.name());
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_config_runs() {
+        let cfg = ExperimentConfig {
+            steps: 300,
+            eval_every: 100,
+            nodes: 6,
+            problem: "quadratic:24".into(),
+            ..Default::default()
+        };
+        let series = run_config(&cfg, false);
+        assert!(series.records.len() >= 3);
+        let first = &series.records[0];
+        let last = series.records.last().unwrap();
+        assert!(last.opt_gap < first.opt_gap);
+    }
+
+    #[test]
+    fn logreg_config_runs() {
+        let cfg = ExperimentConfig {
+            steps: 200,
+            eval_every: 100,
+            nodes: 6,
+            problem: "logreg:20:4:8".into(),
+            compressor: "sign_topk:10%".into(),
+            trigger: "const:50".into(),
+            ..Default::default()
+        };
+        let series = run_config(&cfg, false);
+        let last = series.records.last().unwrap();
+        assert!(last.test_error < 0.6);
+        assert!(last.bits > 0);
+    }
+
+    #[test]
+    fn all_algos_build() {
+        for algo in [Algo::Sparq, Algo::Choco, Algo::Vanilla] {
+            let cfg = ExperimentConfig {
+                algo,
+                nodes: 4,
+                ..Default::default()
+            };
+            let a = build_algo(&cfg, 16);
+            assert_eq!(a.n(), 4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown problem spec")]
+    fn bad_problem_panics() {
+        let cfg = ExperimentConfig {
+            problem: "svm:1".into(),
+            ..Default::default()
+        };
+        build_problem(&cfg);
+    }
+}

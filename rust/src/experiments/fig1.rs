@@ -1,0 +1,229 @@
+//! Figure 1 reproduction: the four panels of the paper's evaluation.
+//!
+//! * 1a — convex: test error vs *communication rounds* for SPARQ-SGD vs
+//!   CHOCO-SGD (Sign / TopK / SignTopK) vs vanilla decentralized SGD.
+//! * 1b — convex: test error vs *total transmitted bits*.
+//! * 1c — non-convex: training loss vs epochs.
+//! * 1d — non-convex: top-1 accuracy vs total transmitted bits.
+//!
+//! Scale: synthetic datasets and step-scaled horizons (DESIGN.md
+//! §Substitutions). The claims under test are *shape* claims: SPARQ
+//! reaches the target error in ≤ rounds and with orders-of-magnitude
+//! fewer bits than CHOCO/vanilla.
+
+use crate::config::{presets, Algo, ExperimentConfig};
+use crate::metrics::Series;
+
+use super::builder::run_config;
+
+/// The five curves of Fig 1a/1b.
+pub fn convex_suite(steps: u64, seed: u64) -> Vec<(String, ExperimentConfig)> {
+    let base = presets::convex_sparq(steps);
+    let mut out = Vec::new();
+
+    let mut sparq = base.clone();
+    sparq.seed = seed;
+    out.push(("SPARQ-SGD (SignTopK)".to_string(), sparq));
+
+    let mut choco_sign = base.clone();
+    choco_sign.algo = Algo::Choco;
+    choco_sign.compressor = "sign".into();
+    choco_sign.name = "fig1-convex-choco-sign".into();
+    choco_sign.seed = seed;
+    out.push(("CHOCO-SGD (Sign)".to_string(), choco_sign));
+
+    // Paper Section 5.1 uses k = 10 for the TopK baseline as well (the
+    // quoted 10-15x SPARQ-vs-TopK factor only makes sense for k = 10:
+    // TopK's 45 bits/coordinate vs Sign's 1 bit/coordinate).
+    let mut choco_topk = base.clone();
+    choco_topk.algo = Algo::Choco;
+    choco_topk.compressor = "topk:10".into();
+    choco_topk.name = "fig1-convex-choco-topk".into();
+    choco_topk.seed = seed;
+    out.push(("CHOCO-SGD (TopK)".to_string(), choco_topk));
+
+    // The paper also implements SignTopK inside CHOCO for comparison.
+    let mut choco_st = base.clone();
+    choco_st.algo = Algo::Choco;
+    choco_st.name = "fig1-convex-choco-signtopk".into();
+    choco_st.seed = seed;
+    out.push(("CHOCO-SGD (SignTopK)".to_string(), choco_st));
+
+    let mut vanilla = base.clone();
+    vanilla.algo = Algo::Vanilla;
+    vanilla.compressor = "identity".into();
+    vanilla.name = "fig1-convex-vanilla".into();
+    vanilla.seed = seed;
+    out.push(("Vanilla decentralized SGD".to_string(), vanilla));
+
+    out
+}
+
+/// The Fig 1c/1d curves (non-convex, momentum 0.9).
+pub fn nonconvex_suite(
+    steps: u64,
+    steps_per_epoch: usize,
+    seed: u64,
+    problem: &str,
+) -> Vec<(String, ExperimentConfig)> {
+    let mut base = presets::nonconvex_sparq(steps, steps_per_epoch);
+    // Paper-convention bit accounting for SignTopK (signs + norm, no
+    // index bits): Section 5.2 "only transmit the sign and norm of the
+    // result" — the quoted 250×/1000×/15K× factors reconcile under this
+    // convention. `compress::SignTopK` documents both accountings; the
+    // savings tables in EXPERIMENTS.md report honest-indices numbers too.
+    base.compressor = "sign_topk:10%:paper".into();
+    base.problem = problem.to_string();
+    base.seed = seed;
+    let mut out = Vec::new();
+
+    out.push(("SPARQ-SGD (SignTopK)".to_string(), base.clone()));
+
+    // SPARQ without event trigger = "SPARQ-SGD (Sign-TopK)" curve of 1c/1d.
+    let mut no_trig = base.clone();
+    no_trig.trigger = "zero".into();
+    no_trig.name = "fig1-nonconvex-signtopk-notrigger".into();
+    out.push(("SPARQ-SGD (SignTopK, no trigger)".to_string(), no_trig));
+
+    let mut choco_sign = base.clone();
+    choco_sign.algo = Algo::Choco;
+    choco_sign.compressor = "sign".into();
+    choco_sign.name = "fig1-nonconvex-choco-sign".into();
+    out.push(("CHOCO-SGD (Sign)".to_string(), choco_sign));
+
+    let mut choco_topk = base.clone();
+    choco_topk.algo = Algo::Choco;
+    choco_topk.compressor = "topk:10%".into();
+    choco_topk.name = "fig1-nonconvex-choco-topk".into();
+    out.push(("CHOCO-SGD (TopK)".to_string(), choco_topk));
+
+    let mut vanilla = base;
+    vanilla.algo = Algo::Vanilla;
+    vanilla.compressor = "identity".into();
+    vanilla.name = "fig1-nonconvex-vanilla".into();
+    out.push(("Vanilla decentralized SGD".to_string(), vanilla));
+
+    out
+}
+
+/// Run a suite's curves concurrently on the in-tree thread pool (each
+/// curve owns its problem + algorithm, so they are independent; results
+/// are deterministic regardless of worker count).
+pub fn run_suite_parallel(
+    suite: Vec<(String, ExperimentConfig)>,
+    workers: usize,
+) -> Vec<Series> {
+    use crate::util::threadpool::ThreadPool;
+    let mut slots: Vec<(String, ExperimentConfig, Option<Series>)> = suite
+        .into_iter()
+        .map(|(label, cfg)| (label, cfg, None))
+        .collect();
+    ThreadPool::new(workers).for_each_mut(&mut slots, |_, slot| {
+        let mut s = run_config(&slot.1, false);
+        s.label = slot.0.clone();
+        slot.2 = Some(s);
+    });
+    slots.into_iter().map(|(_, _, s)| s.unwrap()).collect()
+}
+
+/// Run a suite, printing progress.
+pub fn run_suite(suite: Vec<(String, ExperimentConfig)>, verbose: bool) -> Vec<Series> {
+    suite
+        .into_iter()
+        .map(|(label, cfg)| {
+            if verbose {
+                println!("== {label} ==");
+            }
+            let mut s = run_config(&cfg, verbose);
+            s.label = label;
+            s
+        })
+        .collect()
+}
+
+/// Render an ASCII table: for each series, the comm rounds and bits at
+/// which it first reaches `target_err`, plus the savings factor vs the
+/// reference series (last one by convention = vanilla).
+pub fn savings_table(series: &[Series], target_err: f64) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<38} {:>12} {:>16} {:>12}",
+        "algorithm", "comm rounds", "bits to target", "savings vs 1st"
+    );
+    let reference_bits = series
+        .first()
+        .and_then(|s| s.first_reaching_error(target_err))
+        .map(|r| r.bits);
+    for s in series {
+        match s.first_reaching_error(target_err) {
+            Some(r) => {
+                let factor = match reference_bits {
+                    Some(rb) if rb > 0 => format!("{:.1}x", r.bits as f64 / rb as f64),
+                    _ => "-".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "{:<38} {:>12} {:>16} {:>12}",
+                    s.label, r.comm_rounds, r.bits, factor
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "{:<38} {:>12} {:>16} {:>12}",
+                    s.label, "-", "(not reached)", "-"
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_have_expected_curves() {
+        let c = convex_suite(100, 1);
+        assert_eq!(c.len(), 5);
+        assert!(c.iter().any(|(l, _)| l.contains("SPARQ")));
+        assert!(c.iter().any(|(l, _)| l.contains("Vanilla")));
+        let n = nonconvex_suite(100, 10, 1, "mlp:64:16:4:8");
+        assert_eq!(n.len(), 5);
+    }
+
+    #[test]
+    fn mini_convex_suite_runs_and_orders_bits() {
+        // Tiny dimensions so the test is fast; the *ordering* claim
+        // (SPARQ bits < CHOCO bits < vanilla bits at equal error) is the
+        // paper's Figure 1b shape.
+        let mut suite = convex_suite(400, 3);
+        for (_, cfg) in suite.iter_mut() {
+            cfg.nodes = 8;
+            cfg.problem = "logreg:24:4:8".into();
+            if cfg.compressor == "sign_topk:10" {
+                cfg.compressor = "sign_topk:10%".into();
+            }
+            cfg.trigger = "const:10".into();
+            cfg.eval_every = 50;
+        }
+        let series = run_suite(suite, false);
+        let target = 0.25;
+        let sparq = series[0].first_reaching_error(target);
+        let vanilla = series[4].first_reaching_error(target);
+        if let (Some(s), Some(v)) = (sparq, vanilla) {
+            assert!(
+                s.bits < v.bits,
+                "SPARQ bits {} should be < vanilla bits {}",
+                s.bits,
+                v.bits
+            );
+        }
+        // table renders
+        let tbl = savings_table(&series, target);
+        assert!(tbl.contains("algorithm"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment drivers regenerating the paper's evaluation (Figure 1a–1d),
+//! the Remark-4 savings comparison, and the Theorem-1 rate sweeps.
+
+pub mod ablation;
+pub mod builder;
+pub mod fig1;
+pub mod savings;
+pub mod rates;
+
+pub use builder::{build_algo, build_problem, run_config};

@@ -1,0 +1,84 @@
+//! Remark 4: theoretical + measured communication-savings comparison.
+//!
+//! For a fixed bit budget, T CHOCO rounds correspond to T·H SPARQ
+//! iterations (H local steps per transmission), so at equal transmitted
+//! bits SPARQ has executed H× more SGD steps. The measured counterpart:
+//! run both to the same target error and compare cumulative bits.
+
+use crate::metrics::Series;
+
+/// Bits each algorithm spent to first reach `target_err`, as
+/// (label, bits, comm_rounds); series that never reach it are `None`.
+pub fn bits_to_target(series: &[Series], target_err: f64) -> Vec<(String, Option<(u64, u64)>)> {
+    series
+        .iter()
+        .map(|s| {
+            (
+                s.label.clone(),
+                s.first_reaching_error(target_err)
+                    .map(|r| (r.bits, r.comm_rounds)),
+            )
+        })
+        .collect()
+}
+
+/// Savings factor of `a` over `b` (b.bits / a.bits) at the target error.
+pub fn savings_factor(series: &[Series], a: usize, b: usize, target_err: f64) -> Option<f64> {
+    let ra = series[a].first_reaching_error(target_err)?;
+    let rb = series[b].first_reaching_error(target_err)?;
+    if ra.bits == 0 {
+        return None;
+    }
+    Some(rb.bits as f64 / ra.bits as f64)
+}
+
+/// Remark 4's closed-form comparison for the convex case: suboptimality
+/// bounds after spending the same number of communication rounds R.
+/// CHOCO: O(1/(μ n R)); SPARQ with H local steps: O(1/(μ n H R)).
+pub fn remark4_bound_ratio(h: u64) -> f64 {
+    h as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn series(label: &str, pts: &[(u64, f64, u64)]) -> Series {
+        let mut s = Series::new(label);
+        for &(t, err, bits) in pts {
+            s.push(RoundRecord {
+                t,
+                loss: err,
+                test_error: err,
+                opt_gap: f64::NAN,
+                bits,
+                comm_rounds: t,
+                consensus: 0.0,
+                fired: 0,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn factors() {
+        let a = series("sparq", &[(0, 1.0, 0), (10, 0.1, 100)]);
+        let b = series("vanilla", &[(0, 1.0, 0), (10, 0.1, 100_000)]);
+        let all = vec![a, b];
+        assert_eq!(savings_factor(&all, 0, 1, 0.1), Some(1000.0));
+        let t = bits_to_target(&all, 0.1);
+        assert_eq!(t[0].1, Some((100, 10)));
+    }
+
+    #[test]
+    fn unreached_target_is_none() {
+        let a = series("x", &[(0, 1.0, 0)]);
+        assert_eq!(bits_to_target(&[a], 0.5)[0].1, None);
+    }
+
+    #[test]
+    fn remark4() {
+        assert_eq!(remark4_bound_ratio(5), 5.0);
+    }
+}

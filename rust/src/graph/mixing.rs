@@ -1,0 +1,131 @@
+//! Doubly-stochastic mixing matrices W over a topology.
+//!
+//! Section 3 requires W symmetric, doubly stochastic, with spectral gap
+//! δ = 1 − |λ₂| > 0 for any connected graph. Two standard constructions:
+//!
+//! * **Metropolis–Hastings**: w_ij = 1 / (1 + max(deg_i, deg_j)) for
+//!   {i,j} ∈ E — always symmetric + doubly stochastic, degree-adaptive.
+//! * **Uniform neighbor**: w_ij = 1/(Δ+1) with Δ the max degree (the
+//!   classic "lazy uniform" gossip weights used for rings in the paper's
+//!   experiments, e.g. 1/3 on a ring).
+
+use super::topology::Topology;
+use crate::linalg::Matrix;
+
+/// A mixing matrix tied to its topology.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    pub w: Matrix,
+    pub topology: Topology,
+}
+
+impl MixingMatrix {
+    /// w_ij as f64.
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.w[(i, j)]
+    }
+
+    pub fn n(&self) -> usize {
+        self.topology.n
+    }
+
+    /// Validate paper Section 3 requirements; returns error description.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.w.is_symmetric(1e-9) {
+            return Err("W is not symmetric".into());
+        }
+        if !self.w.is_doubly_stochastic(1e-9) {
+            return Err("W is not doubly stochastic".into());
+        }
+        for i in 0..self.n() {
+            for j in 0..self.n() {
+                if i != j && self.w[(i, j)] > 0.0 && !self.topology.neighbors[i].contains(&j) {
+                    return Err(format!("W has weight on non-edge ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Metropolis–Hastings weights.
+pub fn metropolis_hastings(topology: &Topology) -> MixingMatrix {
+    let n = topology.n;
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for &j in &topology.neighbors[i] {
+            let wij = 1.0 / (1.0 + topology.degree(i).max(topology.degree(j)) as f64);
+            w[(i, j)] = wij;
+        }
+    }
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+        w[(i, i)] = 1.0 - off;
+    }
+    MixingMatrix {
+        w,
+        topology: topology.clone(),
+    }
+}
+
+/// Uniform 1/(Δ+1) neighbor weights (self-weight absorbs the remainder).
+pub fn uniform_neighbor(topology: &Topology) -> MixingMatrix {
+    let n = topology.n;
+    let delta = topology.max_degree();
+    let share = 1.0 / (delta as f64 + 1.0);
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for &j in &topology.neighbors[i] {
+            w[(i, j)] = share;
+        }
+        w[(i, i)] = 1.0 - topology.degree(i) as f64 * share;
+    }
+    MixingMatrix {
+        w,
+        topology: topology.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::TopologyKind;
+
+    fn check(kind: TopologyKind, n: usize) {
+        let t = Topology::new(kind, n, 3);
+        for mm in [metropolis_hastings(&t), uniform_neighbor(&t)] {
+            mm.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_on_all_topologies() {
+        check(TopologyKind::Ring, 60);
+        check(TopologyKind::Complete, 8);
+        check(TopologyKind::Star, 9);
+        check(TopologyKind::Path, 7);
+        check(TopologyKind::Torus, 16);
+        check(TopologyKind::Hypercube, 8);
+        check(TopologyKind::RandomRegular(4), 20);
+    }
+
+    #[test]
+    fn ring_uniform_is_one_third() {
+        let t = Topology::new(TopologyKind::Ring, 10, 0);
+        let mm = uniform_neighbor(&t);
+        assert!((mm.weight(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((mm.weight(0, 0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mm.weight(0, 5), 0.0);
+    }
+
+    #[test]
+    fn mh_complete_is_uniform() {
+        let t = Topology::new(TopologyKind::Complete, 5, 0);
+        let mm = metropolis_hastings(&t);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((mm.weight(i, j) - 0.2).abs() < 1e-12);
+            }
+        }
+    }
+}

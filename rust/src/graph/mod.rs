@@ -1,0 +1,11 @@
+//! Communication graph substrate: topologies, doubly-stochastic mixing
+//! matrices, and spectral quantities (δ, β) used by the paper's
+//! consensus-step-size formula (Lemma 6).
+
+pub mod topology;
+pub mod mixing;
+pub mod spectral;
+
+pub use mixing::{metropolis_hastings, uniform_neighbor, MixingMatrix};
+pub use spectral::SpectralInfo;
+pub use topology::{Topology, TopologyKind};

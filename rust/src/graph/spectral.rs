@@ -1,0 +1,151 @@
+//! Spectral quantities of the mixing matrix and the Lemma-6 consensus
+//! step size.
+//!
+//! δ = 1 − |λ₂(W)| (spectral gap), β = max_i (1 − λ_i(W)) = ‖I − W‖₂, and
+//!
+//! ```text
+//! γ* = 2δω / (64δ + δ² + 16β² + 8δβ² − 16δω)          (Lemma 6)
+//! p  = γ*δ / 8                                         (Theorem 1)
+//! ```
+//!
+//! with the paper's crude bound p ≥ δ²ω/644 used as a sanity check.
+
+use super::mixing::MixingMatrix;
+use crate::linalg::symmetric_eigenvalues;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralInfo {
+    /// λ₁ (should be 1 for doubly-stochastic W).
+    pub lambda1: f64,
+    /// Second-largest eigenvalue *in absolute value*.
+    pub lambda2_abs: f64,
+    /// δ = 1 − |λ₂|.
+    pub delta: f64,
+    /// β = max_i (1 − λ_i) = 1 − λ_min.
+    pub beta: f64,
+}
+
+impl SpectralInfo {
+    pub fn compute(mm: &MixingMatrix) -> SpectralInfo {
+        let eigs = symmetric_eigenvalues(&mm.w, 1e-12);
+        let n = eigs.len();
+        let lambda1 = eigs[0];
+        // |λ₂| = max absolute eigenvalue excluding one copy of λ₁ = 1.
+        let lambda2_abs = if n == 1 {
+            0.0
+        } else {
+            // eigs sorted descending; candidates are eigs[1] (next largest)
+            // and eigs[n-1] (most negative).
+            eigs[1].abs().max(eigs[n - 1].abs())
+        };
+        let beta = 1.0 - eigs[n - 1];
+        SpectralInfo {
+            lambda1,
+            lambda2_abs,
+            delta: 1.0 - lambda2_abs,
+            beta,
+        }
+    }
+
+    /// Lemma 6 consensus step size γ* for compression parameter ω.
+    pub fn gamma_star(&self, omega: f64) -> f64 {
+        let d = self.delta;
+        let b2 = self.beta * self.beta;
+        2.0 * d * omega / (64.0 * d + d * d + 16.0 * b2 + 8.0 * d * b2 - 16.0 * d * omega)
+    }
+
+    /// p = γδ/8 (Theorem 1), for the given γ.
+    pub fn p(&self, gamma: f64) -> f64 {
+        gamma * self.delta / 8.0
+    }
+
+    /// Paper's crude lower bound p ≥ δ²ω/644.
+    pub fn p_lower_bound(&self, omega: f64) -> f64 {
+        self.delta * self.delta * omega / 644.0
+    }
+
+    /// Practical consensus step size: the Lemma-6 γ* is a worst-case
+    /// guarantee that is orders of magnitude conservative (the paper's
+    /// experiments, like CHOCO-SGD's, grid-search γ). This heuristic uses
+    /// the *typical-case* compression quality with a square-root scaling
+    /// matched to a γ sweep on the Fig-1c workload (EXPERIMENTS.md
+    /// §Ablations): γ = max(γ*, min(0.5, √ω_eff)).
+    pub fn gamma_tuned(&self, omega_contract: f64, omega_eff: f64) -> f64 {
+        let star = self.gamma_star(omega_contract);
+        star.max(omega_eff.sqrt().min(0.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mixing::uniform_neighbor;
+    use crate::graph::topology::{Topology, TopologyKind};
+
+    fn info(kind: TopologyKind, n: usize) -> SpectralInfo {
+        let t = Topology::new(kind, n, 5);
+        SpectralInfo::compute(&uniform_neighbor(&t))
+    }
+
+    #[test]
+    fn lambda1_is_one() {
+        for (kind, n) in [
+            (TopologyKind::Ring, 12),
+            (TopologyKind::Complete, 8),
+            (TopologyKind::Torus, 16),
+        ] {
+            let s = info(kind, n);
+            assert!((s.lambda1 - 1.0).abs() < 1e-9, "{kind:?}");
+            assert!(s.delta > 0.0 && s.delta <= 1.0, "{kind:?} δ={}", s.delta);
+            assert!(s.beta <= 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ring_delta_closed_form() {
+        // Uniform ring weights: λ_k = 1/3 + 2/3 cos(2πk/n);
+        // |λ₂| = 1/3 + 2/3 cos(2π/n) for moderate n (positive branch wins).
+        let n = 12;
+        let s = info(TopologyKind::Ring, n);
+        let expect = 1.0 / 3.0 + 2.0 / 3.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((s.lambda2_abs - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complete_has_max_gap() {
+        // Uniform weights on complete graph: W = J/n, λ₂ = 0 ⇒ δ = 1.
+        let s = info(TopologyKind::Complete, 8);
+        assert!((s.delta - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn better_connectivity_larger_gap() {
+        let ring = info(TopologyKind::Ring, 16);
+        let torus = info(TopologyKind::Torus, 16);
+        let complete = info(TopologyKind::Complete, 16);
+        assert!(ring.delta < torus.delta);
+        assert!(torus.delta < complete.delta);
+    }
+
+    #[test]
+    fn gamma_star_in_unit_interval_and_p_bound() {
+        for omega in [0.05, 0.3, 1.0] {
+            let s = info(TopologyKind::Ring, 60);
+            let g = s.gamma_star(omega);
+            assert!(g > 0.0 && g <= 1.0, "γ*={g}");
+            let p = s.p(g);
+            assert!(
+                p >= s.p_lower_bound(omega) - 1e-12,
+                "p={p} < bound {}",
+                s.p_lower_bound(omega)
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_monotone_in_omega() {
+        let s = info(TopologyKind::Ring, 20);
+        assert!(s.gamma_star(0.1) < s.gamma_star(0.5));
+        assert!(s.gamma_star(0.5) < s.gamma_star(1.0));
+    }
+}

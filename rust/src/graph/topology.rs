@@ -1,0 +1,295 @@
+//! Graph topologies.
+//!
+//! The paper's experiments use rings (n = 60 convex, n = 8 non-convex);
+//! footnote 5 points at expander graphs as the design sweet spot (constant
+//! degree, large spectral gap) — `RandomRegular` plus `Hypercube`/`Torus`
+//! let `examples/topology_sweep.rs` reproduce that comparison.
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Complete,
+    Star,
+    Path,
+    /// 2-D torus grid (n must be a perfect square).
+    Torus,
+    Hypercube,
+    /// Random d-regular graph (expander with high probability).
+    RandomRegular(usize),
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s {
+            "ring" => Some(TopologyKind::Ring),
+            "complete" => Some(TopologyKind::Complete),
+            "star" => Some(TopologyKind::Star),
+            "path" => Some(TopologyKind::Path),
+            "torus" => Some(TopologyKind::Torus),
+            "hypercube" => Some(TopologyKind::Hypercube),
+            s if s.starts_with("regular") => {
+                s.strip_prefix("regular")
+                    .and_then(|d| d.parse().ok())
+                    .map(TopologyKind::RandomRegular)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Undirected graph as adjacency lists (sorted, no self-loops).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n: usize,
+    pub kind: TopologyKind,
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn new(kind: TopologyKind, n: usize, seed: u64) -> Topology {
+        assert!(n >= 1, "need at least one node");
+        let neighbors = match kind {
+            TopologyKind::Ring => ring(n),
+            TopologyKind::Complete => complete(n),
+            TopologyKind::Star => star(n),
+            TopologyKind::Path => path(n),
+            TopologyKind::Torus => torus(n),
+            TopologyKind::Hypercube => hypercube(n),
+            TopologyKind::RandomRegular(d) => random_regular(n, d, seed),
+        };
+        let mut t = Topology { n, kind, neighbors };
+        t.normalize();
+        t
+    }
+
+    fn normalize(&mut self) {
+        for (i, adj) in self.neighbors.iter_mut().enumerate() {
+            adj.sort_unstable();
+            adj.dedup();
+            adj.retain(|&j| j != i);
+        }
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.neighbors[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    pub fn is_undirected(&self) -> bool {
+        for (i, adj) in self.neighbors.iter().enumerate() {
+            for &j in adj {
+                if !self.neighbors[j].contains(&i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+fn ring(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            if n == 1 {
+                vec![]
+            } else if n == 2 {
+                vec![(i + 1) % 2]
+            } else {
+                vec![(i + n - 1) % n, (i + 1) % n]
+            }
+        })
+        .collect()
+}
+
+fn complete(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| (0..n).filter(|&j| j != i).collect())
+        .collect()
+}
+
+fn star(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            if i == 0 {
+                (1..n).collect()
+            } else {
+                vec![0]
+            }
+        })
+        .collect()
+}
+
+fn path(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            let mut adj = Vec::new();
+            if i > 0 {
+                adj.push(i - 1);
+            }
+            if i + 1 < n {
+                adj.push(i + 1);
+            }
+            adj
+        })
+        .collect()
+}
+
+fn torus(n: usize) -> Vec<Vec<usize>> {
+    let side = (n as f64).sqrt().round() as usize;
+    assert_eq!(side * side, n, "torus needs a perfect-square node count");
+    let idx = |r: usize, c: usize| r * side + c;
+    (0..n)
+        .map(|i| {
+            let (r, c) = (i / side, i % side);
+            vec![
+                idx((r + side - 1) % side, c),
+                idx((r + 1) % side, c),
+                idx(r, (c + side - 1) % side),
+                idx(r, (c + 1) % side),
+            ]
+        })
+        .collect()
+}
+
+fn hypercube(n: usize) -> Vec<Vec<usize>> {
+    assert!(n.is_power_of_two(), "hypercube needs a power-of-two node count");
+    let bits = n.trailing_zeros() as usize;
+    (0..n)
+        .map(|i| (0..bits).map(|b| i ^ (1 << b)).collect())
+        .collect()
+}
+
+/// Random d-regular graph via the pairing (configuration) model with
+/// rejection of self-loops/multi-edges; retries until simple + connected.
+fn random_regular(n: usize, d: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(d < n, "degree must be < n");
+    assert!(n * d % 2 == 0, "n*d must be even");
+    let mut rng = Rng::new(seed ^ 0xDE6_u64);
+    'outer: for _attempt in 0..1000 {
+        let mut stubs: Vec<usize> = (0..n).flat_map(|i| std::iter::repeat(i).take(d)).collect();
+        rng.shuffle(&mut stubs);
+        let mut adj = vec![Vec::new(); n];
+        for pair in stubs.chunks(2) {
+            let (u, v) = (pair[0], pair[1]);
+            if u == v || adj[u].contains(&v) {
+                continue 'outer; // reject and retry
+            }
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        let t = Topology {
+            n,
+            kind: TopologyKind::RandomRegular(d),
+            neighbors: adj.clone(),
+        };
+        if t.is_connected() {
+            return adj;
+        }
+    }
+    panic!("failed to sample a connected {d}-regular graph on {n} nodes");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let t = Topology::new(TopologyKind::Ring, 60, 0);
+        assert!(t.is_connected());
+        assert!(t.is_undirected());
+        assert!(t.neighbors.iter().all(|a| a.len() == 2));
+        assert_eq!(t.edge_count(), 60);
+    }
+
+    #[test]
+    fn ring_small() {
+        let t = Topology::new(TopologyKind::Ring, 2, 0);
+        assert_eq!(t.neighbors, vec![vec![1], vec![0]]);
+        let t1 = Topology::new(TopologyKind::Ring, 1, 0);
+        assert_eq!(t1.neighbors, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn complete_structure() {
+        let t = Topology::new(TopologyKind::Complete, 8, 0);
+        assert!(t.neighbors.iter().all(|a| a.len() == 7));
+        assert_eq!(t.edge_count(), 28);
+    }
+
+    #[test]
+    fn star_structure() {
+        let t = Topology::new(TopologyKind::Star, 10, 0);
+        assert_eq!(t.degree(0), 9);
+        assert!((1..10).all(|i| t.degree(i) == 1));
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn torus_structure() {
+        let t = Topology::new(TopologyKind::Torus, 16, 0);
+        assert!(t.is_connected() && t.is_undirected());
+        assert!(t.neighbors.iter().all(|a| a.len() == 4));
+    }
+
+    #[test]
+    fn hypercube_structure() {
+        let t = Topology::new(TopologyKind::Hypercube, 16, 0);
+        assert!(t.is_connected());
+        assert!(t.neighbors.iter().all(|a| a.len() == 4));
+    }
+
+    #[test]
+    fn random_regular_structure() {
+        let t = Topology::new(TopologyKind::RandomRegular(4), 30, 7);
+        assert!(t.is_connected());
+        assert!(t.is_undirected());
+        assert!(t.neighbors.iter().all(|a| a.len() == 4));
+    }
+
+    #[test]
+    fn random_regular_deterministic() {
+        let a = Topology::new(TopologyKind::RandomRegular(3), 20, 42);
+        let b = Topology::new(TopologyKind::RandomRegular(3), 20, 42);
+        assert_eq!(a.neighbors, b.neighbors);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(TopologyKind::parse("ring"), Some(TopologyKind::Ring));
+        assert_eq!(
+            TopologyKind::parse("regular4"),
+            Some(TopologyKind::RandomRegular(4))
+        );
+        assert_eq!(TopologyKind::parse("nope"), None);
+    }
+}

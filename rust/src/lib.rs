@@ -1,0 +1,49 @@
+//! # SPARQ-SGD
+//!
+//! Production reproduction of *SPARQ-SGD: Event-Triggered and Compressed
+//! Communication in Decentralized Stochastic Optimization* (Singh, Data,
+//! George, Diggavi, 2019).
+//!
+//! The crate is the L3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`coordinator`] — Algorithm 1 (SPARQ-SGD) plus the CHOCO-SGD and
+//!   vanilla decentralized-SGD baselines, driven synchronously over a
+//!   simulated communication graph.
+//! * [`compress`] — the paper's compression operators (TopK, RandK, Sign,
+//!   QSGD, composed SignTopK/QsgdTopK) with exact transmitted-bit
+//!   accounting.
+//! * [`trigger`] — event-triggered communication: threshold schedules
+//!   `c_t` and the firing rule `‖x^{t+½} − x̂‖² > c_t η_t²`.
+//! * [`graph`] — topologies, doubly-stochastic mixing matrices, spectral
+//!   gap δ and the Lemma-6 consensus step size γ*.
+//! * [`runtime`] — PJRT CPU client that loads the AOT HLO artifacts
+//!   produced by `python/compile/aot.py` (L2 JAX models embedding the L1
+//!   Pallas kernels). Python never runs on the training path.
+//! * [`problems`] — gradient sources: native Rust problems (quadratic,
+//!   logistic regression) for tests/benches, and artifact-backed models.
+//! * [`data`] — synthetic dataset generators + heterogeneous partitioner.
+//! * [`experiments`] — drivers regenerating the paper's Figure 1a–1d and
+//!   the communication-savings table.
+//! * [`util`] — offline-environment substrates: deterministic RNG, JSON,
+//!   CLI parsing, stats, bench harness helpers.
+
+pub mod util;
+pub mod linalg;
+pub mod graph;
+pub mod compress;
+pub mod trigger;
+pub mod schedule;
+pub mod comm;
+pub mod data;
+pub mod problems;
+pub mod coordinator;
+pub mod metrics;
+pub mod config;
+pub mod experiments;
+pub mod runtime;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,120 @@
+//! Symmetric eigensolver (cyclic Jacobi rotations).
+//!
+//! Mixing matrices W are symmetric doubly-stochastic (Section 3), so the
+//! spectral quantities the paper needs — δ = 1 − |λ₂| and
+//! β = max_i (1 − λ_i) — come from the full (small-n) spectrum.
+
+use super::matrix::Matrix;
+
+/// All eigenvalues of a symmetric matrix, sorted descending.
+///
+/// Cyclic Jacobi: repeatedly zero the largest off-diagonal entries with
+/// Givens rotations until the off-diagonal Frobenius mass is below `tol`.
+/// Converges quadratically for symmetric input; n here is ≤ a few hundred.
+pub fn symmetric_eigenvalues(m: &Matrix, tol: f64) -> Vec<f64> {
+    assert!(m.is_symmetric(1e-9), "Jacobi requires symmetric input");
+    let n = m.rows;
+    let mut a = m.clone();
+    let max_sweeps = 100;
+
+    for _ in 0..max_sweeps {
+        // Off-diagonal mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < tol * 1e-3 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation G(p, q, θ) on both sides.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+
+    let mut eigs: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    eigs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eigs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let m = Matrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let e = symmetric_eigenvalues(&m, 1e-12);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 2.0).abs() < 1e-10);
+        assert!((e[2] + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = symmetric_eigenvalues(&m, 1e-12);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ring_gossip_spectrum() {
+        // Uniform ring weights on n=4: W = circulant(1/3 at self, 1/3 each
+        // neighbor... for n=4 each node has 2 neighbors): eigenvalues are
+        // 1/3 + 2/3*cos(2πk/4): {1, 1/3, 1/3, -1/3}.
+        let n = 4;
+        let mut w = Matrix::zeros(n, n);
+        for i in 0..n {
+            w[(i, i)] = 1.0 / 3.0;
+            w[(i, (i + 1) % n)] += 1.0 / 3.0;
+            w[(i, (i + n - 1) % n)] += 1.0 / 3.0;
+        }
+        let e = symmetric_eigenvalues(&w, 1e-12);
+        assert!((e[0] - 1.0).abs() < 1e-9);
+        assert!((e[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((e[3] + 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 0.5, 0.2],
+            vec![0.5, 2.0, -0.3],
+            vec![0.2, -0.3, -1.0],
+        ]);
+        let e = symmetric_eigenvalues(&m, 1e-12);
+        let trace = 1.0 + 2.0 - 1.0;
+        assert!((e.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear algebra for the graph/mixing substrate.
+//!
+//! Node counts in the paper's experiments are small (n = 8 … 60), so a
+//! straightforward row-major `Matrix` plus a cyclic Jacobi eigensolver is
+//! both sufficient and exactly reproducible. The coordinator's per-round
+//! hot path uses the fused vector kernels at the bottom of this module.
+
+pub mod matrix;
+pub mod eigen;
+pub mod vecops;
+
+pub use eigen::symmetric_eigenvalues;
+pub use matrix::Matrix;
+pub use vecops::{axpy, dot, norm2_sq, scale_add, sub_into};

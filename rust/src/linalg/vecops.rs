@@ -1,0 +1,126 @@
+//! Fused f32 vector kernels for the coordinator hot path.
+//!
+//! These run once per node per round over the full parameter vector, so
+//! they are written as simple streaming loops the compiler auto-vectorizes
+//! (checked via the `gossip_consensus` bench; see EXPERIMENTS.md §Perf).
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// out = x - y (allocating into `out`)
+#[inline]
+pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, a), b) in out.iter_mut().zip(x.iter()).zip(y.iter()) {
+        *o = a - b;
+    }
+}
+
+/// x += a * (u - v), the consensus accumulation x += γ w_ij (x̂_j − x̂_i).
+#[inline]
+pub fn scale_add(x: &mut [f32], a: f32, u: &[f32], v: &[f32]) {
+    debug_assert_eq!(x.len(), u.len());
+    debug_assert_eq!(x.len(), v.len());
+    for ((xi, ui), vi) in x.iter_mut().zip(u.iter()).zip(v.iter()) {
+        *xi += a * (ui - vi);
+    }
+}
+
+/// Squared L2 norm (f64 accumulation for stability over large d).
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in x {
+        acc += (v as f64) * (v as f64);
+    }
+    acc
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        acc += (*a as f64) * (*b as f64);
+    }
+    acc
+}
+
+/// Squared L2 distance ‖x − y‖² without materializing the difference.
+///
+/// Four independent f64 accumulators break the add dependency chain so
+/// the loop sustains ~4 lanes of ILP (the trigger check runs this over
+/// the full parameter vector for every node at every sync index —
+/// EXPERIMENTS.md §Perf, L3 iteration 4).
+#[inline]
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        for lane in 0..4 {
+            let d = (x[b + lane] - y[b + lane]) as f64;
+            acc[lane] += d * d;
+        }
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        let d = (x[i] - y[i]) as f64;
+        total += d * d;
+    }
+    total
+}
+
+/// L1 norm with f64 accumulation.
+#[inline]
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn sub_and_dist() {
+        let x = vec![3.0f32, 4.0];
+        let y = vec![0.0f32, 0.0];
+        let mut d = vec![0.0f32; 2];
+        sub_into(&x, &y, &mut d);
+        assert_eq!(d, x);
+        assert!((norm2_sq(&d) - 25.0).abs() < 1e-9);
+        assert!((dist2(&x, &y) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_add_consensus_shape() {
+        let mut x = vec![1.0f32, 1.0];
+        let u = vec![2.0f32, 0.0];
+        let v = vec![0.0f32, 2.0];
+        scale_add(&mut x, 0.5, &u, &v);
+        assert_eq!(x, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_and_norm1() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, -1.0]), 1.0);
+        assert_eq!(norm1(&[-1.0, 2.0, -3.0]), 6.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! `sparq` — SPARQ-SGD launcher.
+//!
+//! Subcommands:
+//!   train    --config cfg.json | preset flags   run one experiment
+//!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
+//!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
+//!   spectral --topology ring --nodes 60         print δ, β, γ*, p
+//!   ablate   --knob h|c0|k|gamma|all            Remark-1 knob sweeps
+//!   artifacts                                   list + smoke the manifest
+//!   version
+//!
+//! Examples:
+//!   sparq train --algo sparq --nodes 8 --steps 2000 --problem quadratic:64
+//!   sparq fig1b --steps 4000 --out results/
+//!   sparq spectral --topology torus --nodes 16
+
+use sparq::config::{Algo, ExperimentConfig};
+use sparq::experiments::{fig1, run_config};
+use sparq::graph::{uniform_neighbor, SpectralInfo, Topology, TopologyKind};
+use sparq::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
+        Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
+        Some("spectral") => cmd_spectral(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("version") => println!("sparq-sgd {}", sparq::version()),
+        _ => {
+            eprintln!(
+                "usage: sparq <train|fig1a|fig1b|fig1c|fig1d|spectral|ablate|artifacts|version> [flags]\n\
+                 see `rust/src/main.rs` header for examples"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn config_from_args(args: &Args) -> ExperimentConfig {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a).unwrap_or_else(|| {
+            eprintln!("unknown algo {a:?}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(v) = args.get("nodes") {
+        cfg.nodes = v.parse().expect("--nodes");
+    }
+    if let Some(v) = args.get("topology") {
+        cfg.topology = v.to_string();
+    }
+    if let Some(v) = args.get("compressor") {
+        cfg.compressor = v.to_string();
+    }
+    if let Some(v) = args.get("trigger") {
+        cfg.trigger = v.to_string();
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.lr = v.to_string();
+    }
+    if let Some(v) = args.get("problem") {
+        cfg.problem = v.to_string();
+    }
+    cfg.h = args.u64("h", cfg.h);
+    cfg.steps = args.u64("steps", cfg.steps);
+    cfg.eval_every = args.u64("eval-every", cfg.eval_every);
+    cfg.momentum = args.f64("momentum", cfg.momentum);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = config_from_args(args);
+    println!("running {:?}", cfg.name);
+    let series = run_config(&cfg, true);
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out).ok();
+        let path = std::path::Path::new(out).join(format!("{}.csv", cfg.name));
+        series.write_csv(&path).expect("write csv");
+        println!("wrote {}", path.display());
+    }
+    let last = series.records.last().expect("at least one record");
+    println!(
+        "final: t={} loss={:.5} err={:.4} bits={} comm_rounds={}",
+        last.t, last.loss, last.test_error, last.bits, last.comm_rounds
+    );
+}
+
+fn write_series(series: &[sparq::metrics::Series], out: Option<&str>) {
+    if let Some(out) = out {
+        std::fs::create_dir_all(out).ok();
+        for s in series {
+            let fname = s.label.replace([' ', '(', ')', '/'], "_") + ".csv";
+            let path = std::path::Path::new(out).join(fname);
+            s.write_csv(&path).expect("write csv");
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
+fn cmd_fig1_convex(args: &Args) {
+    let steps = args.u64("steps", 3000);
+    let seed = args.u64("seed", 42);
+    let target = args.f64("target-err", 0.15);
+    let suite = fig1::convex_suite(steps, seed);
+    let series = fig1::run_suite(suite, true);
+    println!("\n=== Figure 1a/1b: convex (synthetic MNIST, n=60 ring) ===");
+    println!("{}", fig1::savings_table(&series, target));
+    write_series(&series, args.get("out"));
+}
+
+fn cmd_fig1_nonconvex(args: &Args) {
+    let steps = args.u64("steps", 2000);
+    let spe = args.usize("steps-per-epoch", 100);
+    let seed = args.u64("seed", 42);
+    let target = args.f64("target-err", 0.2);
+    let problem = args.get_or("problem", "mlp:512:64:10:16");
+    let suite = fig1::nonconvex_suite(steps, spe, seed, &problem);
+    let series = fig1::run_suite(suite, true);
+    println!("\n=== Figure 1c/1d: non-convex (synthetic CIFAR MLP, n=8 ring) ===");
+    println!("{}", fig1::savings_table(&series, target));
+    write_series(&series, args.get("out"));
+}
+
+fn cmd_ablate(args: &Args) {
+    use sparq::experiments::ablation::{self, AblationBase};
+    let base = AblationBase {
+        n: args.usize("nodes", 8),
+        d: args.usize("dim", 64),
+        steps: args.u64("steps", 4000),
+        seed: args.u64("seed", 11),
+    };
+    let which = args.get_or("knob", "all");
+    if which == "h" || which == "all" {
+        println!("-- H sweep (local iterations; Remark 1(ii)) --");
+        println!("{}", ablation::table(&ablation::h_sweep(&base, &[1, 2, 5, 10, 25])));
+    }
+    if which == "c0" || which == "all" {
+        println!("-- c0 sweep (trigger threshold; Remark 1(iii)) --");
+        println!(
+            "{}",
+            ablation::table(&ablation::c0_sweep(&base, &[0.0, 10.0, 50.0, 200.0, 1000.0]))
+        );
+    }
+    if which == "k" || which == "all" {
+        println!("-- k sweep (compression level; Remark 1(i)) --");
+        let ks = [base.d / 16, base.d / 8, base.d / 4, base.d / 2];
+        println!("{}", ablation::table(&ablation::k_sweep(&base, &ks)));
+    }
+    if which == "gamma" || which == "all" {
+        println!("-- gamma sweep (consensus step size; Lemma 6 vs tuned) --");
+        println!(
+            "{}",
+            ablation::table(&ablation::gamma_sweep(&base, &[0.01, 0.05, 0.1, 0.25, 0.5]))
+        );
+    }
+}
+
+fn cmd_spectral(args: &Args) {
+    let n = args.usize("nodes", 60);
+    let kind = TopologyKind::parse(&args.get_or("topology", "ring")).unwrap_or_else(|| {
+        eprintln!("unknown topology");
+        std::process::exit(2);
+    });
+    let topo = Topology::new(kind, n, args.u64("seed", 0));
+    let mixing = uniform_neighbor(&topo);
+    let s = SpectralInfo::compute(&mixing);
+    let omega = args.f64("omega", 0.1);
+    let gamma = s.gamma_star(omega);
+    println!(
+        "topology={:?} n={n}\n  δ (spectral gap) = {:.6}\n  β = ‖I−W‖₂     = {:.6}\n  γ*(ω={omega})     = {:.3e}\n  p = γ*δ/8        = {:.6e}  (bound δ²ω/644 = {:.6e})",
+        kind, s.delta, s.beta, gamma, s.p(gamma), s.p_lower_bound(omega)
+    );
+}
+
+fn cmd_artifacts() {
+    match sparq::runtime::Manifest::load_default() {
+        Some(m) => {
+            println!("artifact dir: {}", m.dir.display());
+            for (name, a) in &m.artifacts {
+                let ins: Vec<String> = a
+                    .inputs
+                    .iter()
+                    .map(|t| format!("{}{:?}", &t.dtype[..1], t.shape))
+                    .collect();
+                println!("  {:<32} {}", name, ins.join(", "));
+            }
+            match sparq::runtime::Runtime::new(m) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+        }
+        None => println!("no artifacts found — run `make artifacts`"),
+    }
+}

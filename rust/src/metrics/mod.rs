@@ -1,0 +1,165 @@
+//! Metrics: per-round records and CSV/JSONL sinks.
+//!
+//! The experiment drivers log one [`RoundRecord`] per evaluation interval;
+//! the figures' axes (test error vs comm rounds, vs cumulative bits) are
+//! projections of these records.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One evaluated point of a training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRecord {
+    /// Iteration t.
+    pub t: u64,
+    /// Global objective f(x̄).
+    pub loss: f64,
+    /// Test error in [0,1] (NaN if the problem has none).
+    pub test_error: f64,
+    /// f(x̄) − f* if the optimum is known (NaN otherwise).
+    pub opt_gap: f64,
+    /// Cumulative bits transmitted so far.
+    pub bits: u64,
+    /// Cumulative communication rounds so far.
+    pub comm_rounds: u64,
+    /// Σ_i ‖x_i − x̄‖² at this point.
+    pub consensus: f64,
+    /// Nodes that fired the trigger at the last sync round.
+    pub fired: usize,
+}
+
+impl RoundRecord {
+    pub fn csv_header() -> &'static str {
+        "t,loss,test_error,opt_gap,bits,comm_rounds,consensus,fired"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6e},{:.6},{:.6e},{},{},{:.6e},{}",
+            self.t,
+            self.loss,
+            self.test_error,
+            self.opt_gap,
+            self.bits,
+            self.comm_rounds,
+            self.consensus,
+            self.fired
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("t", self.t)
+            .set("loss", self.loss)
+            .set("test_error", self.test_error)
+            .set("opt_gap", self.opt_gap)
+            .set("bits", self.bits)
+            .set("comm_rounds", self.comm_rounds)
+            .set("consensus", self.consensus)
+            .set("fired", self.fired)
+    }
+}
+
+/// A labelled series of records (one algorithm's curve).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Series {
+        Series {
+            label: label.into(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// First record reaching `test_error <= target`, if any.
+    pub fn first_reaching_error(&self, target: f64) -> Option<&RoundRecord> {
+        self.records.iter().find(|r| r.test_error <= target)
+    }
+
+    /// First record reaching `loss <= target`, if any.
+    pub fn first_reaching_loss(&self, target: f64) -> Option<&RoundRecord> {
+        self.records.iter().find(|r| r.loss <= target)
+    }
+
+    /// Render as CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# series: {}", self.label);
+        let _ = writeln!(s, "{}", RoundRecord::csv_header());
+        for r in &self.records {
+            let _ = writeln!(s, "{}", r.to_csv());
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(File::create(path)?);
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(File::create(path)?);
+        for r in &self.records {
+            writeln!(f, "{}", r.to_json().to_string())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: u64, err: f64, bits: u64) -> RoundRecord {
+        RoundRecord {
+            t,
+            loss: err * 2.0,
+            test_error: err,
+            opt_gap: f64::NAN,
+            bits,
+            comm_rounds: t,
+            consensus: 0.0,
+            fired: 1,
+        }
+    }
+
+    #[test]
+    fn first_reaching() {
+        let mut s = Series::new("x");
+        s.push(rec(0, 0.9, 10));
+        s.push(rec(10, 0.5, 20));
+        s.push(rec(20, 0.2, 30));
+        assert_eq!(s.first_reaching_error(0.5).unwrap().t, 10);
+        assert_eq!(s.first_reaching_error(0.1), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let r = rec(5, 0.25, 100);
+        let line = r.to_csv();
+        let fields: Vec<&str> = line.split(',').collect();
+        assert_eq!(fields.len(), 8);
+        assert_eq!(fields[0], "5");
+        assert_eq!(fields[4], "100");
+    }
+
+    #[test]
+    fn jsonl_is_valid_json() {
+        let r = rec(3, 0.4, 77);
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bits").unwrap().as_usize(), Some(77));
+    }
+}

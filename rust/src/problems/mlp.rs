@@ -1,0 +1,345 @@
+//! Native two-layer ReLU MLP (the Section 5.2 non-convex experiment's
+//! stand-in model; see DESIGN.md §Substitutions for the ResNet-20 →
+//! MLP rationale).
+//!
+//! Flat layout matches `python/compile/model.py::MLP_SHAPES`:
+//! [W1(din×h) | b1(h) | W2(h×C) | b2(C)], softmax cross-entropy loss.
+//! Dimensions are constructor arguments so benches can run scaled-down
+//! configs while the artifact-backed path exercises the paper-sized
+//! (3072→128→10) model.
+
+use super::GradientSource;
+use crate::data::{Dataset, Partition};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MlpProblem {
+    pub din: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    partition: Partition,
+    test: Dataset,
+}
+
+/// Offsets into the flat parameter vector.
+struct Offsets {
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+    total: usize,
+}
+
+impl MlpProblem {
+    pub fn new(partition: Partition, test: Dataset, hidden: usize, batch: usize) -> Self {
+        MlpProblem {
+            din: test.dim,
+            hidden,
+            classes: test.classes,
+            batch,
+            partition,
+            test,
+        }
+    }
+
+    pub fn flat_dim(din: usize, hidden: usize, classes: usize) -> usize {
+        din * hidden + hidden + hidden * classes + classes
+    }
+
+    fn offsets(&self) -> Offsets {
+        let w1 = 0;
+        let b1 = w1 + self.din * self.hidden;
+        let w2 = b1 + self.hidden;
+        let b2 = w2 + self.hidden * self.classes;
+        Offsets {
+            w1,
+            b1,
+            w2,
+            b2,
+            total: b2 + self.classes,
+        }
+    }
+
+    /// Glorot-style init matching `model.init_flat` statistics.
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let o = self.offsets();
+        let mut p = vec![0.0f32; o.total];
+        let std1 = (2.0 / (self.din + self.hidden) as f64).sqrt() as f32;
+        let std2 = (2.0 / (self.hidden + self.classes) as f64).sqrt() as f32;
+        for v in p[o.w1..o.b1].iter_mut() {
+            *v = rng.normal_f32() * std1;
+        }
+        for v in p[o.w2..o.b2].iter_mut() {
+            *v = rng.normal_f32() * std2;
+        }
+        p
+    }
+
+    /// Forward+backward over a batch; returns mean loss, accumulates grad.
+    fn grad_batch(&self, params: &[f32], xs: &[f32], ys: &[i32], out: &mut [f32]) -> f64 {
+        let o = self.offsets();
+        let (din, h, c) = (self.din, self.hidden, self.classes);
+        let b = ys.len();
+        let w1 = &params[o.w1..o.b1];
+        let b1 = &params[o.b1..o.w2];
+        let w2 = &params[o.w2..o.b2];
+        let b2 = &params[o.b2..];
+        out.fill(0.0);
+        let (gw1, rest) = out.split_at_mut(o.b1);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h * c);
+
+        let mut hbuf = vec![0.0f32; h];
+        let mut logits = vec![0.0f64; c];
+        let mut dh = vec![0.0f32; h];
+        let mut loss = 0.0f64;
+        let scale = 1.0 / b as f32;
+
+        for i in 0..b {
+            let row = &xs[i * din..(i + 1) * din];
+            let label = ys[i] as usize;
+            // ---- forward: h = relu(x W1 + b1)
+            hbuf.copy_from_slice(b1);
+            for (j, &xj) in row.iter().enumerate() {
+                if xj == 0.0 {
+                    continue;
+                }
+                let wrow = &w1[j * h..(j + 1) * h];
+                for k in 0..h {
+                    hbuf[k] += xj * wrow[k];
+                }
+            }
+            for v in hbuf.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            // logits = h W2 + b2
+            for cls in 0..c {
+                logits[cls] = b2[cls] as f64;
+            }
+            for (k, &hk) in hbuf.iter().enumerate() {
+                if hk == 0.0 {
+                    continue;
+                }
+                let wrow = &w2[k * c..(k + 1) * c];
+                for cls in 0..c {
+                    logits[cls] += hk as f64 * wrow[cls] as f64;
+                }
+            }
+            // softmax CE
+            let max = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let mut z = 0.0;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                z += *l;
+            }
+            for l in logits.iter_mut() {
+                *l /= z;
+            }
+            loss += -(logits[label].max(1e-300)).ln();
+
+            // ---- backward
+            // dlogits = (p - onehot) / B
+            dh.fill(0.0);
+            for cls in 0..c {
+                let dl = ((logits[cls] - if cls == label { 1.0 } else { 0.0 }) as f32) * scale;
+                if dl == 0.0 {
+                    continue;
+                }
+                gb2[cls] += dl;
+                for (k, &hk) in hbuf.iter().enumerate() {
+                    gw2[k * c + cls] += hk * dl;
+                    dh[k] += w2[k * c + cls] * dl;
+                }
+            }
+            // relu mask
+            for (k, hk) in hbuf.iter().enumerate() {
+                if *hk <= 0.0 {
+                    dh[k] = 0.0;
+                }
+            }
+            for (k, &dhk) in dh.iter().enumerate() {
+                if dhk != 0.0 {
+                    gb1[k] += dhk;
+                }
+            }
+            for (j, &xj) in row.iter().enumerate() {
+                if xj == 0.0 {
+                    continue;
+                }
+                let grow = &mut gw1[j * h..(j + 1) * h];
+                for k in 0..h {
+                    grow[k] += xj * dh[k];
+                }
+            }
+        }
+        loss / b as f64
+    }
+
+    fn forward_loss(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> (f64, usize) {
+        let o = self.offsets();
+        let (din, h, c) = (self.din, self.hidden, self.classes);
+        let w1 = &params[o.w1..o.b1];
+        let b1 = &params[o.b1..o.w2];
+        let w2 = &params[o.w2..o.b2];
+        let b2 = &params[o.b2..];
+        let b = ys.len();
+        let mut hbuf = vec![0.0f32; h];
+        let mut logits = vec![0.0f64; c];
+        let mut loss = 0.0;
+        let mut correct = 0;
+        for i in 0..b {
+            let row = &xs[i * din..(i + 1) * din];
+            let label = ys[i] as usize;
+            hbuf.copy_from_slice(b1);
+            for (j, &xj) in row.iter().enumerate() {
+                if xj == 0.0 {
+                    continue;
+                }
+                let wrow = &w1[j * h..(j + 1) * h];
+                for k in 0..h {
+                    hbuf[k] += xj * wrow[k];
+                }
+            }
+            for v in hbuf.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            for cls in 0..c {
+                logits[cls] = b2[cls] as f64;
+            }
+            for (k, &hk) in hbuf.iter().enumerate() {
+                if hk == 0.0 {
+                    continue;
+                }
+                let wrow = &w2[k * c..(k + 1) * c];
+                for cls in 0..c {
+                    logits[cls] += hk as f64 * wrow[cls] as f64;
+                }
+            }
+            let max = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let z: f64 = logits.iter().map(|l| (l - max).exp()).sum();
+            loss += z.ln() + max - logits[label];
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label {
+                correct += 1;
+            }
+        }
+        (loss / b as f64, correct)
+    }
+}
+
+impl GradientSource for MlpProblem {
+    fn dim(&self) -> usize {
+        Self::flat_dim(self.din, self.hidden, self.classes)
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.partition.n_nodes()
+    }
+
+    fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        let (xs, ys) = self.partition.batch(node, self.batch, rng);
+        self.grad_batch(x, &xs, &ys, out)
+    }
+
+    fn global_loss(&mut self, x: &[f32]) -> f64 {
+        self.forward_loss(x, &self.test.x, &self.test.y).0
+    }
+
+    fn test_error(&mut self, x: &[f32]) -> Option<f64> {
+        let (_, correct) = self.forward_loss(x, &self.test.x, &self.test.y);
+        Some(1.0 - correct as f64 / self.test.len() as f64)
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Option<Vec<f32>> {
+        Some(self.init(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::ClassGaussian;
+    use crate::data::iid_split;
+
+    fn problem(seed: u64) -> MlpProblem {
+        let gen = ClassGaussian::new(24, 4, 2.5, seed);
+        let mut rng = Rng::new(seed + 1);
+        let part = iid_split(&gen, 4, 80, &mut rng);
+        let test = gen.generate(200, &mut rng);
+        MlpProblem::new(part, test, 16, 8)
+    }
+
+    #[test]
+    fn dim_formula() {
+        let p = problem(1);
+        assert_eq!(p.dim(), 24 * 16 + 16 + 16 * 4 + 4);
+    }
+
+    #[test]
+    fn zero_params_uniform_loss() {
+        let mut p = problem(2);
+        let loss = p.global_loss(&vec![0.0; p.dim()]);
+        assert!((loss - (4.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let p = problem(3);
+        let d = p.dim();
+        let mut rng = Rng::new(4);
+        let params = p.init(&mut rng);
+        let (xs, ys) = p.partition.batch(0, 8, &mut rng);
+        let mut g = vec![0.0f32; d];
+        p.grad_batch(&params, &xs, &ys, &mut g);
+        let eps = 1e-2f32;
+        let mut checked = 0;
+        for idx in [0usize, 7, 100, d - 1, d - 10] {
+            let mut xp = params.clone();
+            xp[idx] += eps;
+            let mut xm = params.clone();
+            xm[idx] -= eps;
+            let mut scratch = vec![0.0f32; d];
+            let lp = p.grad_batch(&xp, &xs, &ys, &mut scratch);
+            let lm = p.grad_batch(&xm, &xs, &ys, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            if fd.abs() > 1e-4 {
+                assert!(
+                    (fd - g[idx] as f64).abs() < 5e-2 * (1.0 + fd.abs()),
+                    "idx {idx}: fd {fd} vs {}",
+                    g[idx]
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 1);
+    }
+
+    #[test]
+    fn sgd_reduces_loss_and_error() {
+        let mut p = problem(5);
+        let mut rng = Rng::new(6);
+        let mut x = p.init(&mut rng);
+        let mut g = vec![0.0f32; p.dim()];
+        let l0 = p.global_loss(&x);
+        for t in 0..600 {
+            let node = t % 4;
+            p.grad(node, &x, &mut rng, &mut g);
+            for (xj, gj) in x.iter_mut().zip(g.iter()) {
+                *xj -= 0.1 * gj;
+            }
+        }
+        let l1 = p.global_loss(&x);
+        assert!(l1 < l0 * 0.6, "loss {l0} -> {l1}");
+        assert!(p.test_error(&x).unwrap() < 0.3);
+    }
+}

@@ -1,0 +1,57 @@
+//! Gradient sources: what each node differentiates.
+//!
+//! The coordinator is generic over [`GradientSource`] so the same
+//! Algorithm-1 implementation drives:
+//!
+//! * [`quadratic::QuadraticProblem`] — strongly-convex quadratics with a
+//!   *known* global optimum (rate/convergence tests, Theorem-1 sanity);
+//! * [`logreg::LogRegProblem`] — native multinomial logistic regression
+//!   (the Section 5.1 convex experiment);
+//! * [`mlp::MlpProblem`] — native two-layer ReLU network (the Section 5.2
+//!   non-convex experiment);
+//! * `runtime::PjrtModel` — any AOT HLO artifact (logreg / MLP /
+//!   transformer LM), the production path where the L2 JAX graph (with L1
+//!   Pallas kernels) does the math.
+
+pub mod quadratic;
+pub mod logreg;
+pub mod mlp;
+
+pub use logreg::LogRegProblem;
+pub use mlp::MlpProblem;
+pub use quadratic::QuadraticProblem;
+
+use crate::util::Rng;
+
+/// Per-node stochastic gradient oracle plus global metrics.
+pub trait GradientSource {
+    /// Parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// Number of nodes this source partitions data across.
+    fn n_nodes(&self) -> usize;
+
+    /// Stochastic gradient of f_i at x into `out`; returns the mini-batch
+    /// loss. `rng` supplies the sampling randomness (ξ_i^{(t)}).
+    fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64;
+
+    /// Global objective f(x) (deterministic, for metrics).
+    fn global_loss(&mut self, x: &[f32]) -> f64;
+
+    /// Test error in [0,1] if the problem has one (classification).
+    fn test_error(&mut self, _x: &[f32]) -> Option<f64> {
+        None
+    }
+
+    /// Distance to the known optimum, if the problem knows it.
+    fn opt_gap(&mut self, _x: &[f32]) -> Option<f64> {
+        None
+    }
+
+    /// Non-trivial initial parameters, if the problem needs them (e.g. an
+    /// MLP at exactly zero sits on a saddle where only the output bias
+    /// receives gradient). `None` ⇒ zeros.
+    fn init_params(&self, _rng: &mut Rng) -> Option<Vec<f32>> {
+        None
+    }
+}

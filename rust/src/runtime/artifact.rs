@@ -1,0 +1,185 @@
+//! Artifact manifest (artifacts/manifest.json) parsing and validation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Signature + file of one artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSig {
+    /// usize meta field (dims, batch sizes...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSig, String> {
+    Ok(TensorSig {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("tensor missing name")?
+            .to_string(),
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or("tensor missing dtype")?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad shape entry"))
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing artifacts object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let file = dir.join(
+                a.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or(format!("{name}: missing file"))?,
+            );
+            let parse_list = |key: &str| -> Result<Vec<TensorSig>, String> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or(format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(parse_tensor)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                    meta: a
+                        .get("meta")
+                        .and_then(Json::as_obj)
+                        .cloned()
+                        .unwrap_or_default(),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSig, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// The default artifact directory: `$SPARQ_ARTIFACTS` or
+    /// `<repo>/artifacts` relative to the current dir / executable.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("SPARQ_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // walk up from cwd looking for artifacts/manifest.json
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..5 {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load from the default location if it exists.
+    pub fn load_default() -> Option<Manifest> {
+        let dir = Self::default_dir();
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir).ok()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_snippet() {
+        let dir = std::env::temp_dir().join(format!("sparq-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "artifacts": {
+                "toy": {"file": "toy.hlo.txt",
+                        "inputs": [{"name": "x", "dtype": "float32", "shape": [4, 2]}],
+                        "outputs": [{"name": "y", "dtype": "float32", "shape": []}],
+                        "meta": {"dim": 8}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 2]);
+        assert_eq!(a.inputs[0].elements(), 8);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.meta_usize("dim"), Some(8));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        if let Some(m) = Manifest::load_default() {
+            let lg = m.get("logreg_grad").unwrap();
+            assert_eq!(lg.inputs.len(), 3);
+            assert_eq!(lg.outputs.len(), 2);
+            assert!(lg.file.exists());
+        }
+    }
+}

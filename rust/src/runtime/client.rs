@@ -1,0 +1,146 @@
+//! PJRT CPU client wrapper: compile-on-load executor cache over the AOT
+//! HLO-text artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSig, Manifest};
+
+/// Typed input tensor handed to an executor.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+/// One compiled artifact.
+pub struct Executor {
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Execute with positional inputs matching the manifest signature.
+    /// Returns the output tuple as flat f32 vectors (scalars are len-1;
+    /// bool/i32 outputs are converted).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.sig.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (input, tsig) in inputs.iter().zip(self.sig.inputs.iter()) {
+            let dims: Vec<i64> = tsig.shape.iter().map(|&x| x as i64).collect();
+            let lit = match input {
+                Input::F32(v) => {
+                    if v.len() != tsig.elements() {
+                        bail!(
+                            "{}: input {} wants {} elements, got {}",
+                            self.sig.name,
+                            tsig.name,
+                            tsig.elements(),
+                            v.len()
+                        );
+                    }
+                    let l = xla::Literal::vec1(v);
+                    if tsig.shape.len() == 1 {
+                        l
+                    } else {
+                        l.reshape(&dims)?
+                    }
+                }
+                Input::I32(v) => {
+                    if v.len() != tsig.elements() {
+                        bail!(
+                            "{}: input {} wants {} elements, got {}",
+                            self.sig.name,
+                            tsig.name,
+                            tsig.elements(),
+                            v.len()
+                        );
+                    }
+                    let l = xla::Literal::vec1(v);
+                    if tsig.shape.len() == 1 {
+                        l
+                    } else {
+                        l.reshape(&dims)?
+                    }
+                }
+                Input::ScalarF32(x) => xla::Literal::scalar(*x),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, tsig) in parts.into_iter().zip(self.sig.outputs.iter()) {
+            let v: Vec<f32> = match tsig.dtype.as_str() {
+                "float32" => part.to_vec::<f32>()?,
+                "int32" => part
+                    .to_vec::<i32>()?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+                "bool" => {
+                    // booleans surface as u8
+                    let conv = part.convert(xla::PrimitiveType::S32)?;
+                    conv.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect()
+                }
+                other => bail!("unsupported output dtype {other}"),
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Lazy-compiling registry over a manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Executor>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and start a CPU PJRT client.
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Runtime> {
+        let m = Manifest::load_default()
+            .context("artifacts/manifest.json not found — run `make artifacts`")?;
+        Runtime::new(m)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the named executor.
+    pub fn executor(&mut self, name: &str) -> Result<&Executor> {
+        if !self.cache.contains_key(name) {
+            let sig = self.manifest.get(name).map_err(anyhow::Error::msg)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(&sig.file)
+                .with_context(|| format!("parsing {}", sig.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), Executor { sig, exe });
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+}

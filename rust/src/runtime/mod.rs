@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts.
+//!
+//! `python/compile/aot.py` lowers every L2 JAX entry point (with the L1
+//! Pallas kernels inlined, interpret=True) to HLO *text*; this module
+//! loads those files through the `xla` crate's PJRT CPU client, validates
+//! them against `artifacts/manifest.json`, and exposes typed executors.
+//! Python never runs on the training path.
+
+pub mod artifact;
+pub mod client;
+pub mod model;
+
+pub use artifact::{ArtifactSig, Manifest};
+pub use client::{Executor, Runtime};
+pub use model::PjrtModel;

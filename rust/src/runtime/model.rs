@@ -1,0 +1,174 @@
+//! Artifact-backed gradient sources (the production request path).
+//!
+//! [`PjrtModel`] wraps a `<model>_grad` (+ optional `<model>_eval`)
+//! artifact pair over a heterogeneous data partition; [`PjrtLm`] wraps the
+//! transformer `lm_grad`/`lm_loss` pair over a byte-corpus batcher. Both
+//! satisfy `problems::GradientSource`, so the coordinator drives them
+//! exactly like the native problems.
+
+use anyhow::Result;
+
+use super::client::{Input, Runtime};
+use crate::data::corpus::LmBatcher;
+use crate::data::{Dataset, Partition};
+use crate::problems::GradientSource;
+use crate::util::Rng;
+
+/// Classification model (logreg / MLP) executed through PJRT.
+pub struct PjrtModel {
+    rt: Runtime,
+    grad_name: String,
+    eval_name: String,
+    pub dim: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    partition: Partition,
+    test: Dataset,
+}
+
+impl PjrtModel {
+    /// `base` is "logreg" or "mlp" (expects `<base>_grad` + `<base>_eval`).
+    pub fn new(
+        mut rt: Runtime,
+        base: &str,
+        partition: Partition,
+        test: Dataset,
+    ) -> Result<PjrtModel> {
+        let grad_name = format!("{base}_grad");
+        let eval_name = format!("{base}_eval");
+        let (dim, train_batch) = {
+            let sig = &rt.executor(&grad_name)?.sig;
+            (
+                sig.inputs[0].elements(),
+                sig.inputs[2].elements(), // y: [B]
+            )
+        };
+        let eval_batch = rt.executor(&eval_name)?.sig.inputs[2].elements();
+        Ok(PjrtModel {
+            rt,
+            grad_name,
+            eval_name,
+            dim,
+            train_batch,
+            eval_batch,
+            partition,
+            test,
+        })
+    }
+
+    /// Evaluate (mean loss, error) over the test set in artifact-sized
+    /// chunks (the last ragged chunk is padded by wrapping around).
+    fn eval(&mut self, x: &[f32]) -> Result<(f64, f64)> {
+        let b = self.eval_batch;
+        let n = self.test.len();
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut batches = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            let idx: Vec<usize> = (0..b).map(|k| (i + k) % n).collect();
+            let (xs, ys) = self.test.gather(&idx);
+            let exe = self.rt.executor(&self.eval_name)?;
+            let out = exe.run(&[Input::F32(x), Input::F32(&xs), Input::I32(&ys)])?;
+            loss += out[0][0] as f64;
+            correct += out[1][0] as f64;
+            batches += 1;
+            i += b;
+        }
+        let total = (batches * b) as f64;
+        Ok((loss / batches as f64, 1.0 - correct / total))
+    }
+}
+
+impl GradientSource for PjrtModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.partition.n_nodes()
+    }
+
+    fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        let (xs, ys) = self.partition.batch(node, self.train_batch, rng);
+        let exe = self
+            .rt
+            .executor(&self.grad_name)
+            .expect("grad artifact must load");
+        let res = exe
+            .run(&[Input::F32(x), Input::F32(&xs), Input::I32(&ys)])
+            .expect("grad execution failed");
+        out.copy_from_slice(&res[1]);
+        res[0][0] as f64
+    }
+
+    fn global_loss(&mut self, x: &[f32]) -> f64 {
+        self.eval(x).map(|(l, _)| l).unwrap_or(f64::NAN)
+    }
+
+    fn test_error(&mut self, x: &[f32]) -> Option<f64> {
+        self.eval(x).map(|(_, e)| e).ok()
+    }
+}
+
+/// Transformer byte-LM through PJRT, one independent corpus shard per node.
+pub struct PjrtLm {
+    rt: Runtime,
+    pub dim: usize,
+    pub batch: usize,
+    pub seq: usize,
+    shards: Vec<LmBatcher>,
+    eval_tokens: Vec<i32>,
+}
+
+impl PjrtLm {
+    pub fn new(mut rt: Runtime, shards: Vec<LmBatcher>, eval_seed: u64) -> Result<PjrtLm> {
+        let (dim, batch, seq) = {
+            let sig = &rt.executor("lm_grad")?.sig;
+            let tshape = &sig.inputs[1].shape; // [B, S+1]
+            (sig.inputs[0].elements(), tshape[0], tshape[1] - 1)
+        };
+        // Fixed held-out eval batch from shard 0.
+        let mut rng = Rng::new(eval_seed);
+        let eval_tokens = shards[0].batch(batch, &mut rng);
+        Ok(PjrtLm {
+            rt,
+            dim,
+            batch,
+            seq,
+            shards,
+            eval_tokens,
+        })
+    }
+}
+
+impl GradientSource for PjrtLm {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        let tokens = self.shards[node].batch(self.batch, rng);
+        let exe = self.rt.executor("lm_grad").expect("lm_grad must load");
+        let res = exe
+            .run(&[Input::F32(x), Input::I32(&tokens)])
+            .expect("lm_grad execution failed");
+        out.copy_from_slice(&res[1]);
+        res[0][0] as f64
+    }
+
+    fn global_loss(&mut self, x: &[f32]) -> f64 {
+        let tokens = self.eval_tokens.clone();
+        let exe = match self.rt.executor("lm_loss") {
+            Ok(e) => e,
+            Err(_) => return f64::NAN,
+        };
+        exe.run(&[Input::F32(x), Input::I32(&tokens)])
+            .map(|o| o[0][0] as f64)
+            .unwrap_or(f64::NAN)
+    }
+}

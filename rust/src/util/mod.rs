@@ -1,0 +1,17 @@
+//! Offline-environment substrates.
+//!
+//! Only the `xla` crate's vendored dependency closure is available in this
+//! build environment, so the usual ecosystem crates (rand, serde_json,
+//! clap, criterion, proptest) are replaced by small, tested, in-tree
+//! implementations. Each is a real substrate with its own unit tests — see
+//! DESIGN.md §Substrates.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod cli;
+pub mod threadpool;
+pub mod bench;
+pub mod prop;
+
+pub use rng::Rng;

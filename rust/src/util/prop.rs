@@ -1,0 +1,133 @@
+//! In-tree property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a predicate over randomly generated inputs; the harness
+//! runs `cases` seeded generations and, on failure, retries with simpler
+//! inputs drawn from a shrink ladder (smaller dimensions / magnitudes) to
+//! report the least complex failing case it found.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+/// Generator handle passed to properties: RNG plus the current shrink
+/// scale (starts at 1.0; lowered while searching for simpler failures).
+pub struct G<'a> {
+    pub rng: &'a mut Rng,
+    pub scale: f64,
+}
+
+impl<'a> G<'a> {
+    /// Dimension in [1, max], biased by current shrink scale.
+    pub fn dim(&mut self, max: usize) -> usize {
+        let cap = ((max as f64) * self.scale).max(1.0) as usize;
+        1 + self.rng.below(cap)
+    }
+
+    /// Random f32 vector with N(0, sigma) entries.
+    pub fn vec_f32(&mut self, d: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        self.rng.fill_normal(&mut v, sigma * self.scale as f32);
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` returns
+/// `Err(description)` on failure. Panics with diagnostics on failure
+/// (after attempting simpler counterexamples).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut G) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let mut g = G {
+            rng: &mut case_rng,
+            scale: 1.0,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: try progressively smaller scales with fresh seeds
+            // derived from the failing case; keep the simplest failure.
+            let mut simplest = (1.0, msg.clone());
+            for (i, scale) in [0.5, 0.25, 0.1, 0.05].iter().enumerate() {
+                let mut srng = rng.fork(case as u64 ^ (0xBEEF << i));
+                let mut sg = G {
+                    rng: &mut srng,
+                    scale: *scale,
+                };
+                if let Err(m) = prop(&mut sg) {
+                    simplest = (*scale, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {}):\n  at scale {}: {}",
+                cfg.seed, simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Assert-like helper producing `Result<(), String>` for use in properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", Config { cases: 32, seed: 1 }, |g| {
+            count += 1;
+            let d = g.dim(100);
+            if d >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail' failed")]
+    fn failing_property_panics() {
+        check("must-fail", Config { cases: 8, seed: 2 }, |g| {
+            let d = g.dim(100);
+            if d < 101 {
+                Err(format!("d = {d}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal scoped thread pool (tokio/rayon are unavailable offline).
+//!
+//! The coordinator's gradient phase is embarrassingly parallel across
+//! nodes; [`ThreadPool::scope_chunks`] fans a slice of independent work
+//! items out to worker threads and joins before returning — the
+//! synchronous-algorithm semantics (and bit-for-bit determinism, since
+//! every node owns its RNG) are preserved regardless of worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Fixed-size pool executing scoped parallel-for over index ranges.
+pub struct ThreadPool {
+    pub workers: usize,
+}
+
+impl ThreadPool {
+    /// `workers = 0` ⇒ number of available CPUs.
+    pub fn new(workers: usize) -> ThreadPool {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            workers
+        };
+        ThreadPool { workers }
+    }
+
+    /// Run `f(i)` for every i in 0..n, partitioned dynamically across the
+    /// pool. `f` must be Sync (it is called concurrently from workers).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.workers <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                let next = Arc::clone(&next);
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Apply `f` to every element of `items` in parallel (mutable,
+    /// disjoint — each worker takes whole elements).
+    pub fn for_each_mut<T: Send, F>(&self, items: &mut [T], f: F)
+    where
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if self.workers <= 1 || items.len() <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let next = Arc::new(AtomicUsize::new(0));
+        let n = items.len();
+        // Hand out raw element pointers; each index is claimed exactly
+        // once via the atomic counter, so access is exclusive.
+        let base = items.as_mut_ptr() as usize;
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                let next = Arc::clone(&next);
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: i is claimed exactly once across all
+                    // workers, elements are disjoint, and the scope joins
+                    // before `items` is usable again.
+                    let item = unsafe { &mut *(base as *mut T).add(i) };
+                    f(i, item);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.parallel_for(1000, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        // Σ (i+1) for i in 0..1000
+        assert_eq!(hits.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_element_once() {
+        let pool = ThreadPool::new(3);
+        let mut v = vec![0u64; 257];
+        pool.for_each_mut(&mut v, |i, x| {
+            *x += i as u64 + 7;
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 7);
+        }
+    }
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let pool = ThreadPool::new(1);
+        let mut v = vec![0usize; 10];
+        pool.for_each_mut(&mut v, |i, x| *x = i * 2);
+        assert_eq!(v[9], 18);
+    }
+
+    #[test]
+    fn zero_means_auto() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.workers >= 1);
+    }
+}

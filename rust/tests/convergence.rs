@@ -1,0 +1,225 @@
+//! Theorem-level convergence behaviour on the known-optimum quadratic,
+//! plus the SPARQ ≡ CHOCO degenerate-case equivalence.
+//!
+//! These are the paper's *claims* as executable checks:
+//! * Theorem 1 / Remark 2 — O(1/nT) decay of the suboptimality and the
+//!   distributed 1/n variance gain;
+//! * Remark 1 — H, c₀, ω, δ only perturb higher-order terms (larger values
+//!   still converge, with bounded degradation at fixed T);
+//! * Remark 4 — at equal transmitted bits SPARQ beats CHOCO.
+
+use sparq::comm::Bus;
+use sparq::compress::{SignTopK, TopK};
+use sparq::coordinator::{ChocoSgd, DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::experiments::rates;
+use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
+use sparq::problems::QuadraticProblem;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+
+#[test]
+fn suboptimality_decays_roughly_inverse_in_t() {
+    // Theorem 1 dominant term O(1/nT): quadrupling T should cut the gap
+    // by ≳ 2 (allowing stochastic slack and higher-order terms).
+    let pts = rates::t_sweep(8, &[500, 2000, 8000], 1);
+    assert!(
+        pts[1].final_gap < pts[0].final_gap / 1.8,
+        "T=500: {:.4}, T=2000: {:.4}",
+        pts[0].final_gap,
+        pts[1].final_gap
+    );
+    assert!(
+        pts[2].final_gap < pts[1].final_gap / 1.8,
+        "T=2000: {:.4}, T=8000: {:.4}",
+        pts[1].final_gap,
+        pts[2].final_gap
+    );
+}
+
+#[test]
+fn more_nodes_reduce_variance_term() {
+    // Remark 2: the 1/n factor. Same per-node noise, same T; the final
+    // gap should shrink with n (not necessarily by exactly n — consensus
+    // error grows with ring size — but the trend must be there).
+    let pts = rates::n_sweep(&[2, 16], 4000, 7);
+    assert!(
+        pts[1].final_gap < pts[0].final_gap,
+        "n=2: {:.5}, n=16: {:.5}",
+        pts[0].final_gap,
+        pts[1].final_gap
+    );
+}
+
+#[test]
+fn local_steps_trade_accuracy_for_bits() {
+    // Remark 1(ii): increasing H saves communication but only perturbs
+    // higher-order terms — at equal T the H=10 run transmits ~10x fewer
+    // bits yet still converges to a comparable gap.
+    let h1 = rates::run_point(8, 32, 1, 0.0, 0.25, TopologyKind::Ring, 4000, 3);
+    let h10 = rates::run_point(8, 32, 10, 0.0, 0.25, TopologyKind::Ring, 4000, 3);
+    assert!(h10.total_bits * 8 < h1.total_bits);
+    // both actually converged; H=10 pays only a bounded accuracy penalty
+    assert!(h1.final_gap < 0.01, "h1 {}", h1.final_gap);
+    assert!(h10.final_gap < 0.05, "h10 {}", h10.final_gap);
+}
+
+#[test]
+fn smaller_omega_still_converges() {
+    // Remark 1(i): heavier compression (smaller ω) moves only the
+    // higher-order terms.
+    let heavy = rates::run_point_topk(8, 64, 5, 0.05, 6000, 4);
+    let light = rates::run_point_topk(8, 64, 5, 0.5, 6000, 4);
+    assert!(heavy.omega < light.omega);
+    assert!(light.final_gap < 0.05, "light {:.4}", light.final_gap);
+    assert!(heavy.final_gap < 0.10, "heavy {:.4}", heavy.final_gap);
+}
+
+#[test]
+fn better_connectivity_helps_consensus() {
+    // Remark 1(iv): larger spectral gap ⇒ faster consensus at equal T.
+    let ring = rates::run_point(16, 32, 5, 1.0, 0.25, TopologyKind::Ring, 1500, 5);
+    let complete = rates::run_point(16, 32, 5, 1.0, 0.25, TopologyKind::Complete, 1500, 5);
+    assert!(complete.delta > ring.delta);
+    assert!(complete.final_gap <= ring.final_gap * 1.5 + 1e-3);
+}
+
+fn mk_sparq(
+    trigger: ThresholdSchedule,
+    h: u64,
+    seed: u64,
+    d: usize,
+    n: usize,
+) -> (SparqSgd, QuadraticProblem, Bus) {
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: Box::new(SignTopK::new(d / 4)),
+        trigger: EventTrigger::new(trigger),
+        lr: LrSchedule::InverseTime { a: 60.0, b: 2.0 },
+        sync: SyncSchedule::EveryH(h),
+        gamma: None,
+        momentum: 0.0,
+        seed,
+    };
+    let algo = SparqSgd::new(cfg, d);
+    let prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, seed ^ 0xABC);
+    (algo, prob, Bus::new(n))
+}
+
+#[test]
+fn sparq_degenerates_to_choco_exactly() {
+    // SPARQ with c_t = 0 and H = 1 must reproduce CHOCO-SGD *bit for bit*
+    // given the same seeds (the trigger always fires for nonzero drift;
+    // both transmit every round).
+    let d = 20;
+    let n = 6;
+    let (mut sparq, mut prob_a, mut bus_a) = mk_sparq(ThresholdSchedule::Zero, 1, 9, d, n);
+
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let mut choco = ChocoSgd::new(
+        uniform_neighbor(&topo),
+        Box::new(SignTopK::new(d / 4)),
+        LrSchedule::InverseTime { a: 60.0, b: 2.0 },
+        0.0,
+        d,
+        9,
+    );
+    let mut prob_b = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 9 ^ 0xABC);
+    let mut bus_b = Bus::new(n);
+
+    for t in 0..400 {
+        sparq.step(t, &mut prob_a, &mut bus_a);
+        choco.step(t, &mut prob_b, &mut bus_b);
+        for i in 0..n {
+            assert_eq!(
+                sparq.params(i),
+                choco.params(i),
+                "trajectories diverged at t={t}, node {i}"
+            );
+        }
+    }
+    assert_eq!(bus_a.total_bits, bus_b.total_bits);
+    assert_eq!(bus_a.total_messages, bus_b.total_messages);
+}
+
+#[test]
+fn event_trigger_saves_bits_at_matched_accuracy() {
+    // Remark 4, measured: SPARQ with an aggressive trigger reaches the
+    // same final accuracy band while transmitting fewer bits than the
+    // trigger-free run.
+    let (mut no_trig, mut prob_a, mut bus_a) = mk_sparq(ThresholdSchedule::Zero, 5, 11, 32, 8);
+    let (mut trig, mut prob_b, mut bus_b) = mk_sparq(
+        ThresholdSchedule::Poly { c0: 5.0, eps: 0.5 },
+        5,
+        11,
+        32,
+        8,
+    );
+    for t in 0..6000 {
+        no_trig.step(t, &mut prob_a, &mut bus_a);
+        trig.step(t, &mut prob_b, &mut bus_b);
+    }
+    let gap_a = prob_a.suboptimality(&no_trig.x_bar());
+    let gap_b = prob_b.suboptimality(&trig.x_bar());
+    assert!(
+        bus_b.total_bits < bus_a.total_bits,
+        "trigger run used {} bits vs {} without",
+        bus_b.total_bits,
+        bus_a.total_bits
+    );
+    assert!(gap_b < gap_a * 5.0 + 0.01, "gap {gap_b} vs {gap_a}");
+    // the trigger run actually skipped broadcasts
+    assert!(trig.total_fired < trig.total_checks);
+}
+
+#[test]
+fn momentum_variant_converges() {
+    // The Section 5.2 configuration (momentum 0.9).
+    let topo = Topology::new(TopologyKind::Ring, 8, 0);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: Box::new(TopK::new(8)),
+        trigger: EventTrigger::new(ThresholdSchedule::Constant(2.0)),
+        lr: LrSchedule::Constant(0.01),
+        sync: SyncSchedule::EveryH(5),
+        gamma: None,
+        momentum: 0.9,
+        seed: 13,
+    };
+    let mut algo = SparqSgd::new(cfg, 32);
+    let mut prob = QuadraticProblem::new(32, 8, 0.5, 2.0, 0.05, 1.0, 14);
+    let mut bus = Bus::new(8);
+    for t in 0..3000 {
+        algo.step(t, &mut prob, &mut bus);
+    }
+    let gap = prob.suboptimality(&algo.x_bar());
+    assert!(gap < 0.25, "momentum run gap {gap}");
+}
+
+#[test]
+fn theorem2_constant_lr_nonconvex_style_run() {
+    // Theorem 2 setting: fixed η = √(n/T); the objective must come down
+    // substantially over the horizon.
+    let n = 8usize;
+    let t_total = 4000u64;
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let cfg = SparqConfig {
+        mixing: uniform_neighbor(&topo),
+        compressor: Box::new(SignTopK::new(8)),
+        trigger: EventTrigger::new(ThresholdSchedule::Constant(1.0)),
+        lr: LrSchedule::theorem2(n, t_total),
+        sync: SyncSchedule::EveryH(5),
+        gamma: None,
+        momentum: 0.0,
+        seed: 15,
+    };
+    let mut algo = SparqSgd::new(cfg, 32);
+    let mut prob = QuadraticProblem::new(32, n, 0.5, 2.0, 0.05, 1.0, 16);
+    let mut bus = Bus::new(n);
+    let g0 = prob.suboptimality(&algo.x_bar());
+    for t in 0..t_total {
+        algo.step(t, &mut prob, &mut bus);
+    }
+    let g1 = prob.suboptimality(&algo.x_bar());
+    assert!(g1 < g0 * 0.2, "{g0} -> {g1}");
+}

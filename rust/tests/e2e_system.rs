@@ -1,0 +1,247 @@
+//! End-to-end system tests over the full stack: config → builder →
+//! coordinator → problem → metrics, including the PJRT-backed path when
+//! artifacts exist.
+
+use sparq::config::{presets, Algo, ExperimentConfig};
+use sparq::coordinator::{run, RunOptions};
+use sparq::experiments::{build_algo, build_problem, fig1, run_config};
+use sparq::metrics::Series;
+
+#[test]
+fn convex_preset_scaled_down_learns() {
+    // The Section 5.1 preset with a smaller grid so it runs in seconds:
+    // n=12 ring, heterogeneous logreg, SignTopK + trigger.
+    let mut cfg = presets::convex_sparq(800);
+    cfg.nodes = 12;
+    cfg.problem = "logreg:48:6:5".into();
+    cfg.compressor = "sign_topk:10%".into();
+    cfg.trigger = "const:50".into();
+    cfg.eval_every = 200;
+    let series = run_config(&cfg, false);
+    let first = &series.records[0];
+    let last = series.records.last().unwrap();
+    assert!(
+        last.test_error < first.test_error * 0.6,
+        "test error {} -> {}",
+        first.test_error,
+        last.test_error
+    );
+    assert!(last.bits > 0 && last.comm_rounds > 0);
+    // H=5 ⇒ at most steps/5 comm rounds
+    assert!(last.comm_rounds <= cfg.steps / 5 + 1);
+}
+
+#[test]
+fn nonconvex_preset_scaled_down_learns() {
+    let mut cfg = presets::nonconvex_sparq(1200, 60);
+    cfg.nodes = 8;
+    cfg.problem = "mlp:64:24:6:8".into();
+    cfg.lr = "warmup:0.05:1:5:60:150,250".into();
+    cfg.eval_every = 300;
+    let series = run_config(&cfg, false);
+    let first = &series.records[0];
+    let last = series.records.last().unwrap();
+    assert!(
+        last.loss < first.loss * 0.8,
+        "loss {} -> {}",
+        first.loss,
+        last.loss
+    );
+}
+
+#[test]
+fn fig1_shape_holds_on_scaled_suite() {
+    // The paper's Figure-1b ordering at reduced scale: bits-to-target for
+    // SPARQ < CHOCO(SignTopK) < CHOCO(Sign) < vanilla. We assert the two
+    // endpoints (SPARQ best, vanilla worst) and that every compressed
+    // curve beats vanilla — run-to-run noise can swap adjacent CHOCO
+    // variants at this scale.
+    let mut suite = fig1::convex_suite(900, 5);
+    for (_, cfg) in suite.iter_mut() {
+        cfg.nodes = 10;
+        cfg.problem = "logreg:32:4:6".into();
+        if cfg.compressor == "sign_topk:10" {
+            cfg.compressor = "sign_topk:10%".into();
+        }
+        cfg.trigger = "const:20".into();
+        cfg.eval_every = 60;
+    }
+    let series = fig1::run_suite(suite, false);
+    let target = 0.22;
+    let bits =
+        |s: &Series| s.first_reaching_error(target).map(|r| r.bits);
+    let sparq = bits(&series[0]);
+    let vanilla = bits(&series[4]);
+    let (Some(sparq), Some(vanilla)) = (sparq, vanilla) else {
+        panic!(
+            "curves did not reach target {target}: sparq {:?}, vanilla {:?}",
+            series[0].records.last().map(|r| r.test_error),
+            series[4].records.last().map(|r| r.test_error)
+        );
+    };
+    assert!(
+        sparq < vanilla,
+        "SPARQ bits {sparq} !< vanilla bits {vanilla}"
+    );
+    for s in &series[1..4] {
+        if let Some(b) = bits(s) {
+            assert!(b < vanilla, "{}: {b} !< vanilla {vanilla}", s.label);
+            assert!(sparq <= b, "SPARQ {sparq} !<= {}: {b}", s.label);
+        }
+    }
+}
+
+#[test]
+fn vanilla_and_choco_and_sparq_all_run_via_builder() {
+    for algo in [Algo::Sparq, Algo::Choco, Algo::Vanilla] {
+        let cfg = ExperimentConfig {
+            algo,
+            nodes: 5,
+            steps: 120,
+            eval_every: 60,
+            problem: "quadratic:16".into(),
+            ..Default::default()
+        };
+        let mut problem = build_problem(&cfg);
+        let d = problem.dim();
+        let mut a = build_algo(&cfg, d);
+        let series = run(
+            a.as_mut(),
+            problem.as_mut(),
+            &RunOptions {
+                steps: cfg.steps,
+                eval_every: cfg.eval_every,
+                verbose: false,
+            },
+        );
+        let last = series.records.last().unwrap();
+        assert!(last.opt_gap.is_finite());
+        assert!(last.opt_gap < series.records[0].opt_gap);
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_trajectory() {
+    // Snapshot at t=100, keep training to t=200; restoring the snapshot
+    // into a fresh algorithm and re-running 100 steps with the same
+    // node RNor... — node RNG state is NOT part of the checkpoint, so we
+    // assert the weaker (and still meaningful) contract: save/load is
+    // lossless and restored params drive evaluation identically.
+    use sparq::comm::Bus;
+    use sparq::coordinator::checkpoint;
+
+    let cfg = ExperimentConfig {
+        nodes: 5,
+        steps: 100,
+        problem: "quadratic:24".into(),
+        momentum: 0.9,
+        ..Default::default()
+    };
+    let mut problem = build_problem(&cfg);
+    let mut algo = build_algo(&cfg, problem.dim());
+    let mut bus = Bus::new(cfg.nodes);
+    for t in 0..100 {
+        algo.step(t, problem.as_mut(), &mut bus);
+    }
+    let ckpt = checkpoint::snapshot(algo.as_ref(), 100, &bus);
+    assert_eq!(ckpt.n(), 5);
+    assert_eq!(ckpt.dim(), 24);
+    assert!(!ckpt.momentum.is_empty(), "momentum run must checkpoint m");
+
+    let path = std::env::temp_dir().join(format!("sparq-e2e-ckpt-{}.bin", std::process::id()));
+    ckpt.save(&path).expect("save");
+    let loaded = sparq::coordinator::Checkpoint::load(&path).expect("load");
+    assert_eq!(ckpt, loaded);
+    std::fs::remove_file(&path).ok();
+
+    let mut algo2 = build_algo(&cfg, 24);
+    checkpoint::restore(algo2.as_mut(), &loaded);
+    for i in 0..5 {
+        assert_eq!(algo.params(i), algo2.params(i), "node {i} params");
+        assert_eq!(algo.momentum(i), algo2.momentum(i), "node {i} momentum");
+    }
+    // restored state evaluates identically
+    let a = problem.global_loss(&algo.x_bar());
+    let b = problem.global_loss(&algo2.x_bar());
+    assert_eq!(a, b);
+}
+
+#[test]
+fn parallel_suite_matches_sequential() {
+    let mk = || {
+        let mut suite = fig1::convex_suite(200, 9);
+        for (_, cfg) in suite.iter_mut() {
+            cfg.nodes = 6;
+            cfg.problem = "logreg:16:4:4".into();
+            if cfg.compressor.starts_with("sign_topk:10") {
+                cfg.compressor = "sign_topk:25%".into();
+            }
+            cfg.eval_every = 100;
+        }
+        suite
+    };
+    let seq = fig1::run_suite(mk(), false);
+    let par = fig1::run_suite_parallel(mk(), 3);
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(par.iter()) {
+        // compare rendered records (opt_gap is NaN here and NaN != NaN)
+        assert_eq!(a.to_csv(), b.to_csv(), "{} diverged", a.label);
+    }
+}
+
+#[test]
+fn pjrt_logreg_training_short_run() {
+    // Full-stack smoke over the artifact path: a few SPARQ iterations with
+    // gradients computed by the PJRT logreg artifact. Skips without
+    // artifacts.
+    use sparq::data::synthetic::ClassGaussian;
+    use sparq::data::by_class_shards;
+    use sparq::runtime::{Manifest, PjrtModel, Runtime};
+    use sparq::util::Rng;
+
+    let Some(m) = Manifest::load_default() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = match Runtime::new(m) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable: {e}");
+            return;
+        }
+    };
+    let n = 4;
+    let gen = ClassGaussian::new(784, 10, 1.6, 21);
+    let mut rng = Rng::new(22);
+    let part = by_class_shards(&gen, n, 40, 2, &mut rng);
+    let test = gen.generate(256, &mut rng);
+    let mut model = PjrtModel::new(rt, "logreg", part, test).expect("model");
+
+    let cfg = ExperimentConfig {
+        nodes: n,
+        steps: 60,
+        eval_every: 30,
+        compressor: "sign_topk:10%".into(),
+        trigger: "const:20".into(),
+        lr: "invtime:100:2".into(),
+        ..Default::default()
+    };
+    let mut algo = build_algo(&cfg, 7850);
+    let series = run(
+        algo.as_mut(),
+        &mut model,
+        &RunOptions {
+            steps: cfg.steps,
+            eval_every: cfg.eval_every,
+            verbose: false,
+        },
+    );
+    let first = &series.records[0];
+    let last = series.records.last().unwrap();
+    assert!(
+        last.loss < first.loss,
+        "PJRT-backed training did not reduce loss: {} -> {}",
+        first.loss,
+        last.loss
+    );
+}

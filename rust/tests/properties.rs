@@ -1,0 +1,271 @@
+//! Property-based tests over the system invariants, using the in-tree
+//! harness (`util::prop`; proptest is unavailable offline — see DESIGN.md).
+//!
+//! Each property runs 48–64 randomized cases with seeded, replayable RNG
+//! and scale-shrinking on failure.
+
+use sparq::compress::{self, Compressor, QsgdOp, RandK, SignL1, SignTopK, TopK};
+use sparq::graph::{metropolis_hastings, uniform_neighbor, SpectralInfo, Topology, TopologyKind};
+use sparq::linalg::vecops::{dist2, norm2_sq};
+use sparq::prop_assert;
+use sparq::util::prop::{check, Config, G};
+use sparq::util::Rng;
+
+fn any_topology(g: &mut G) -> Topology {
+    let pick = g.usize_in(0, 5);
+    match pick {
+        0 => Topology::new(TopologyKind::Ring, g.usize_in(2, 40), 1),
+        1 => Topology::new(TopologyKind::Complete, g.usize_in(2, 16), 1),
+        2 => Topology::new(TopologyKind::Star, g.usize_in(2, 20), 1),
+        3 => Topology::new(TopologyKind::Path, g.usize_in(2, 20), 1),
+        4 => {
+            let side = g.usize_in(2, 5);
+            Topology::new(TopologyKind::Torus, side * side, 1)
+        }
+        _ => {
+            let n = g.usize_in(6, 24);
+            let d = g.usize_in(3, 5).min(n - 1);
+            let d = if (n * d) % 2 == 1 { d - 1 } else { d }.max(2);
+            Topology::new(TopologyKind::RandomRegular(d), n, g.usize_in(0, 1000) as u64)
+        }
+    }
+}
+
+#[test]
+fn prop_mixing_matrices_always_valid() {
+    check("mixing-valid", Config { cases: 64, seed: 0x11 }, |g| {
+        let topo = any_topology(g);
+        for mm in [uniform_neighbor(&topo), metropolis_hastings(&topo)] {
+            if let Err(e) = mm.validate() {
+                return Err(format!("{:?} n={}: {e}", topo.kind, topo.n));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spectral_gap_in_unit_interval_for_connected_graphs() {
+    check("spectral-gap", Config { cases: 48, seed: 0x22 }, |g| {
+        let topo = any_topology(g);
+        prop_assert!(topo.is_connected(), "{:?} disconnected", topo.kind);
+        let s = SpectralInfo::compute(&uniform_neighbor(&topo));
+        prop_assert!(
+            s.delta > 0.0 && s.delta <= 1.0 + 1e-9,
+            "{:?} n={} delta={}",
+            topo.kind,
+            topo.n,
+            s.delta
+        );
+        prop_assert!((s.lambda1 - 1.0).abs() < 1e-8, "λ1 = {}", s.lambda1);
+        prop_assert!(s.beta >= 0.0 && s.beta <= 2.0 + 1e-9, "β = {}", s.beta);
+        // γ* well-formed for a sweep of ω
+        for omega in [0.01, 0.25, 1.0] {
+            let gamma = s.gamma_star(omega);
+            prop_assert!(gamma > 0.0 && gamma <= 1.0, "γ*({omega}) = {gamma}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_contract_all_operators() {
+    // Definition 1: E‖x − C(x)‖² ≤ (1 − ω)‖x‖². Deterministic operators
+    // are checked on one draw, stochastic on an averaged estimate.
+    check("compression-contract", Config { cases: 48, seed: 0x33 }, |g| {
+        let d = g.dim(800).max(4);
+        let x = g.vec_f32(d, 1.0);
+        let k = g.usize_in(1, d);
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(k)),
+            Box::new(SignTopK::new(k)),
+            Box::new(SignL1),
+            Box::new(RandK::new(k)),
+            Box::new(QsgdOp::new(64)),
+        ];
+        for op in ops {
+            let deterministic = matches!(op.name().as_str(), n if n.starts_with("topk") || n.starts_with("sign"));
+            let reps = if deterministic { 1 } else { 120 };
+            let mut rng = Rng::new(d as u64);
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                let q = op.compress_vec(&x, &mut rng);
+                acc += dist2(&x, &q);
+            }
+            let err = acc / reps as f64;
+            let bound = (1.0 - op.omega(d)) * norm2_sq(&x);
+            prop_assert!(
+                err <= bound * 1.10 + 1e-7,
+                "{} d={d} k={k}: err {err} > bound {bound}",
+                op.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_of_zero_is_zero() {
+    check("c-of-zero", Config { cases: 16, seed: 0x44 }, |g| {
+        let d = g.dim(500).max(2);
+        let zero = vec![0.0f32; d];
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(1 + d / 7)),
+            Box::new(SignTopK::new(1 + d / 7)),
+            Box::new(RandK::new(1 + d / 7)),
+            Box::new(QsgdOp::new(8)),
+        ];
+        for op in ops {
+            let mut rng = Rng::new(1);
+            let q = op.compress_vec(&zero, &mut rng);
+            prop_assert!(
+                q.iter().all(|v| *v == 0.0),
+                "{}: C(0) != 0",
+                op.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_bits_never_exceed_uncompressed() {
+    check("bits-bounded", Config { cases: 64, seed: 0x55 }, |g| {
+        let d = g.dim(100_000).max(8);
+        let k = g.usize_in(1, d / 2);
+        let specs = [
+            format!("topk:{k}"),
+            format!("randk:{k}"),
+            "sign".to_string(),
+            format!("sign_topk:{k}"),
+            "qsgd:16".to_string(),
+        ];
+        let full = 32 * d as u64;
+        for spec in specs {
+            let op = compress::parse(&spec, d).unwrap();
+            let bits = op.encoded_bits(d);
+            prop_assert!(
+                bits <= full + 64,
+                "{spec} d={d}: {bits} bits > uncompressed {full}"
+            );
+            prop_assert!(bits > 0, "{spec}: zero-cost message");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consensus_preserves_average() {
+    // One full SPARQ sync round never moves x̄ beyond the gradient step
+    // (paper Eq. 20), for random graphs/compressors/triggers.
+    use sparq::comm::Bus;
+    use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+    use sparq::problems::{GradientSource, QuadraticProblem};
+    use sparq::schedule::{LrSchedule, SyncSchedule};
+    use sparq::trigger::{EventTrigger, ThresholdSchedule};
+
+    check("avg-preserved", Config { cases: 24, seed: 0x66 }, |g| {
+        let topo = any_topology(g);
+        let n = topo.n;
+        let d = g.usize_in(4, 40);
+        let k = g.usize_in(1, d);
+        let c0 = g.f64_in(0.0, 50.0);
+        let cfg = SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(SignTopK::new(k)),
+            trigger: EventTrigger::new(ThresholdSchedule::Constant(c0)),
+            lr: LrSchedule::Constant(0.05),
+            sync: SyncSchedule::EveryH(g.usize_in(1, 4) as u64),
+            gamma: None,
+            momentum: 0.0,
+            seed: d as u64,
+        };
+        let mut algo = SparqSgd::new(cfg, d);
+        let mut prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.0, 1.0, 77);
+        let mut bus = Bus::new(n);
+
+        for t in 0..12u64 {
+            // Predict x̄^{t+1} = x̄^t − (η/n) Σ_i g_i(x_i) using noise-free
+            // gradients evaluated at the *current* per-node params.
+            let mut expected = algo.x_bar();
+            let mut gsum = vec![0.0f32; d];
+            let mut scratch = vec![0.0f32; d];
+            let mut tmp_rng = Rng::new(0);
+            for i in 0..n {
+                prob.grad(i, algo.params(i), &mut tmp_rng, &mut scratch);
+                for (a, b) in gsum.iter_mut().zip(scratch.iter()) {
+                    *a += b;
+                }
+            }
+            for (e, s) in expected.iter_mut().zip(gsum.iter()) {
+                *e -= 0.05 * s / n as f32;
+            }
+            algo.step(t, &mut prob, &mut bus);
+            let got = algo.x_bar();
+            for (idx, (a, b)) in got.iter().zip(expected.iter()).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "t={t} coord {idx}: got {a}, expected {b} ({:?} n={n} d={d})",
+                    topo.kind
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trigger_monotone_in_threshold() {
+    // If a node fires at threshold c, it must also fire at any c' < c.
+    use sparq::trigger::{EventTrigger, ThresholdSchedule};
+    check("trigger-monotone", Config { cases: 64, seed: 0x77 }, |g| {
+        let d = g.dim(300).max(2);
+        let x = g.vec_f32(d, 1.0);
+        let y = g.vec_f32(d, 1.0);
+        let eta = g.f64_in(1e-4, 0.5);
+        let c_hi = g.f64_in(0.0, 1e6);
+        let c_lo = c_hi * g.f64_in(0.0, 1.0);
+        let hi = EventTrigger::new(ThresholdSchedule::Constant(c_hi));
+        let lo = EventTrigger::new(ThresholdSchedule::Constant(c_lo));
+        if hi.fires(&x, &y, 3, eta) {
+            prop_assert!(
+                lo.fires(&x, &y, 3, eta),
+                "fired at c={c_hi} but not at smaller c={c_lo}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sync_schedule_gap_respects_h() {
+    use sparq::schedule::SyncSchedule;
+    check("sync-gap", Config { cases: 64, seed: 0x88 }, |g| {
+        let h = g.usize_in(1, 20) as u64;
+        let s = SyncSchedule::EveryH(h);
+        prop_assert!(s.gap(1000) == h, "gap {} != H {h}", s.gap(1000));
+        // membership periodicity
+        let t = g.usize_in(0, 500) as u64;
+        let within = (t..t + h).any(|u| s.is_sync(u));
+        prop_assert!(within, "no sync index within H={h} of t={t}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    check("rng-streams", Config { cases: 32, seed: 0x99 }, |g| {
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        let mut root = Rng::new(seed);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let mut same = 0;
+        for _ in 0..64 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        prop_assert!(same == 0, "{same}/64 collisions between forks");
+        Ok(())
+    });
+}

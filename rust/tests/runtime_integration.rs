@@ -1,0 +1,233 @@
+//! Cross-layer equivalence: the Rust L3 operators must agree with the AOT
+//! HLO artifacts (L2 JAX graphs embedding the L1 Pallas kernels) executed
+//! through PJRT. These tests are the contract that lets the experiment hot
+//! path use the native implementations interchangeably.
+//!
+//! All tests skip (pass vacuously, with a note) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use sparq::compress::{Compressor, QsgdOp, SignTopK};
+use sparq::linalg::vecops::dist2;
+use sparq::problems::GradientSource;
+use sparq::runtime::client::Input;
+use sparq::runtime::{Manifest, Runtime};
+use sparq::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Manifest::load_default() {
+        Some(m) => match Runtime::new(m) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("PJRT unavailable: {e}");
+                None
+            }
+        },
+        None => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn randvec(seed: u64, d: usize, sigma: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, sigma);
+    v
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let denom = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() / denom <= tol,
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn manifest_loads_and_all_artifacts_compile() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+    assert!(names.len() >= 10, "expected full artifact set, got {names:?}");
+    // Compile the cheap ones eagerly (lm_grad is compiled in its own test).
+    for name in names {
+        if name.starts_with("lm_") || name.starts_with("mlp_") {
+            continue;
+        }
+        rt.executor(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn sign_topk_artifact_matches_rust_operator() {
+    let Some(mut rt) = runtime() else { return };
+    for seed in [1u64, 2, 3] {
+        let x = randvec(seed, 4096, 1.0);
+        let exe = rt.executor("compress_sign_topk_d4096_k409").unwrap();
+        let q_art = &exe.run(&[Input::F32(&x)]).unwrap()[0];
+        let mut rng = Rng::new(0);
+        let q_rust = SignTopK::new(409).compress_vec(&x, &mut rng);
+        assert_close(q_art, &q_rust, 2e-5, "sign_topk");
+    }
+}
+
+#[test]
+fn sign_topk_artifact_paper_dims() {
+    let Some(mut rt) = runtime() else { return };
+    let x = randvec(9, 7850, 0.5);
+    let exe = rt.executor("compress_sign_topk_d7850_k10").unwrap();
+    let q_art = &exe.run(&[Input::F32(&x)]).unwrap()[0];
+    let mut rng = Rng::new(0);
+    let q_rust = SignTopK::new(10).compress_vec(&x, &mut rng);
+    assert_close(q_art, &q_rust, 2e-5, "sign_topk_7850");
+    assert_eq!(q_art.iter().filter(|v| **v != 0.0).count(), 10);
+}
+
+#[test]
+fn gossip_artifact_matches_rust_consensus_math() {
+    let Some(mut rt) = runtime() else { return };
+    let (n, d) = (8usize, 4096usize);
+    let x = randvec(11, n * d, 1.0);
+    let xhat = randvec(12, n * d, 1.0);
+    // ring mixing matrix, row-major
+    let mut w = vec![0.0f32; n * n];
+    for i in 0..n {
+        w[i * n + i] = 1.0 / 3.0;
+        w[i * n + (i + 1) % n] = 1.0 / 3.0;
+        w[i * n + (i + n - 1) % n] = 1.0 / 3.0;
+    }
+    let gamma = 0.4f32;
+    let exe = rt.executor("gossip_n8_d4096").unwrap();
+    let out = &exe
+        .run(&[
+            Input::F32(&x),
+            Input::F32(&xhat),
+            Input::F32(&w),
+            Input::ScalarF32(gamma),
+        ])
+        .unwrap()[0];
+    // rust reference: x + gamma * (W xhat - xhat), row-major (n, d)
+    let mut expect = x.clone();
+    for i in 0..n {
+        for j in 0..n {
+            let wij = w[i * n + j];
+            if wij == 0.0 {
+                continue;
+            }
+            for k in 0..d {
+                expect[i * d + k] += gamma * wij * xhat[j * d + k];
+            }
+        }
+        for k in 0..d {
+            expect[i * d + k] -= gamma * xhat[i * d + k];
+        }
+    }
+    assert_close(out, &expect, 5e-5, "gossip");
+}
+
+#[test]
+fn sgd_momentum_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let d = 4096;
+    let x = randvec(21, d, 1.0);
+    let g = randvec(22, d, 1.0);
+    let m = randvec(23, d, 0.5);
+    let (eta, mu) = (0.05f32, 0.9f32);
+    let exe = rt.executor("sgd_momentum_d4096").unwrap();
+    let out = exe
+        .run(&[
+            Input::F32(&x),
+            Input::F32(&g),
+            Input::F32(&m),
+            Input::ScalarF32(eta),
+            Input::ScalarF32(mu),
+        ])
+        .unwrap();
+    let m_new: Vec<f32> = m.iter().zip(g.iter()).map(|(mi, gi)| mu * mi + gi).collect();
+    let x_new: Vec<f32> = x
+        .iter()
+        .zip(m_new.iter())
+        .map(|(xi, mi)| xi - eta * mi)
+        .collect();
+    assert_close(&out[0], &x_new, 1e-5, "sgd x'");
+    assert_close(&out[1], &m_new, 1e-5, "sgd m'");
+}
+
+#[test]
+fn qsgd_artifact_matches_rust_with_shared_uniforms() {
+    let Some(mut rt) = runtime() else { return };
+    let d = 4096;
+    let x = randvec(31, d, 1.0);
+    let mut rng = Rng::new(32);
+    let u: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+    let exe = rt.executor("qsgd_d4096_s16").unwrap();
+    let out = &exe.run(&[Input::F32(&x), Input::F32(&u)]).unwrap()[0];
+    let mut q_rust = vec![0.0f32; d];
+    QsgdOp::new(16).compress_with_uniforms(&x, &u, &mut q_rust);
+    assert_close(out, &q_rust, 1e-4, "qsgd");
+}
+
+#[test]
+fn trigger_artifact_matches_rust_rule() {
+    let Some(mut rt) = runtime() else { return };
+    let d = 4096;
+    let x_half = randvec(41, d, 0.1);
+    let xhat = randvec(42, d, 0.1);
+    let drift = dist2(&x_half, &xhat);
+    let eta = 0.01f32;
+    // threshold just above and below the actual drift
+    for (c, expect) in [
+        ((drift * 0.5 / (eta as f64 * eta as f64)) as f32, true),
+        ((drift * 2.0 / (eta as f64 * eta as f64)) as f32, false),
+    ] {
+        let exe = rt.executor("trigger_check_d4096").unwrap();
+        let out = &exe
+            .run(&[
+                Input::F32(&x_half),
+                Input::F32(&xhat),
+                Input::ScalarF32(c),
+                Input::ScalarF32(eta),
+            ])
+            .unwrap()[0];
+        assert_eq!(out[0] != 0.0, expect, "c={c}");
+    }
+}
+
+#[test]
+fn logreg_artifact_matches_native_problem() {
+    use sparq::data::synthetic::ClassGaussian;
+    use sparq::data::by_class_shards;
+    use sparq::problems::LogRegProblem;
+
+    let Some(mut rt) = runtime() else { return };
+
+    // Same batch through both paths.
+    let gen = ClassGaussian::new(784, 10, 1.6, 5);
+    let mut rng = Rng::new(6);
+    let part = by_class_shards(&gen, 2, 30, 2, &mut rng);
+    let test = gen.generate(64, &mut rng);
+    let mut native = LogRegProblem::new(part.clone(), test, 5, 1e-4);
+    let d = native.dim();
+
+    let params = randvec(51, d, 0.05);
+    let mut rng_a = Rng::new(99);
+    let mut g_native = vec![0.0f32; d];
+    let loss_native = native.grad(0, &params, &mut rng_a, &mut g_native);
+
+    // replay the same batch for the artifact path
+    let mut rng_b = Rng::new(99);
+    let (xs, ys) = part.batch(0, 5, &mut rng_b);
+    let exe = rt.executor("logreg_grad").unwrap();
+    let out = exe
+        .run(&[Input::F32(&params), Input::F32(&xs), Input::I32(&ys)])
+        .unwrap();
+    let loss_art = out[0][0] as f64;
+    assert!(
+        (loss_native - loss_art).abs() < 1e-3 * (1.0 + loss_native.abs()),
+        "loss native {loss_native} vs artifact {loss_art}"
+    );
+    assert_close(&out[1], &g_native, 1e-3, "logreg grad");
+}
