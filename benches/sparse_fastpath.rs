@@ -1,0 +1,260 @@
+//! Sparse-message fast path + parallel node execution vs the seed's dense
+//! sequential coordinator (EXPERIMENTS.md §Perf, sparse fast path).
+//!
+//! Workload: the ISSUE-1 target point — n = 16 ring, d = 2²⁰, SignTopK
+//! with k = d/100, H = 1, always-firing trigger (worst-case: every node
+//! compresses and broadcasts every round). `DenseSequentialBaseline`
+//! reimplements the seed hot loop verbatim (dense compress into a shared
+//! buffer, dense O(d) estimate update, per-edge full-d `scale_add` with a
+//! `neighbors.clone()` per round, all phases sequential) on top of the
+//! same public operator APIs, so the comparison isolates the pipeline
+//! restructuring from everything else.
+//!
+//! Acceptance target: ≥ 3× step throughput for the sparse + parallel
+//! configuration. A machine-readable summary is written to
+//! `BENCH_sparse_fastpath.json` (override with `--out <path>`) so future
+//! PRs can regress against the perf trajectory.
+//!
+//!     cargo bench --bench sparse_fastpath [-- --out results/sfp.json]
+
+use sparq::comm::Bus;
+use sparq::compress::{Compressor, SignTopK};
+use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::graph::{uniform_neighbor, MixingMatrix, SpectralInfo, Topology, TopologyKind};
+use sparq::linalg::vecops::{scale_add, sub_into};
+use sparq::problems::GradientSource;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::bench::Bencher;
+use sparq::util::cli::Args;
+use sparq::util::json::Json;
+use sparq::util::Rng;
+
+const N: usize = 16;
+const D: usize = 1 << 20;
+const K: usize = D / 100;
+
+/// Cheap deterministic pseudo-gradient source: isolates the coordinator
+/// pipeline cost from model math, with shared-state support so the fast
+/// path can exercise the parallel gradient phase too.
+struct NullGrad {
+    d: usize,
+    n: usize,
+}
+
+impl NullGrad {
+    fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        let r = rng.next_u64() as f32 / u64::MAX as f32;
+        let mut v = r;
+        for o in out.iter_mut() {
+            v = v * 0.9999 + 0.0001;
+            *o = (v - 0.5) * 0.01;
+        }
+    }
+}
+
+impl GradientSource for NullGrad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+    fn grad(&mut self, _node: usize, _x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.fill(rng, out);
+        0.0
+    }
+    fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+        Some(self)
+    }
+    fn grad_shared(&self, _node: usize, _x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.fill(rng, out);
+        0.0
+    }
+    fn global_loss(&mut self, _x: &[f32]) -> f64 {
+        0.0
+    }
+}
+
+/// The seed coordinator hot loop, verbatim: dense messages, shared
+/// scratch, per-edge consensus, fully sequential.
+struct DenseSequentialBaseline {
+    mixing: MixingMatrix,
+    compressor: Box<dyn Compressor>,
+    lr: LrSchedule,
+    x: Vec<Vec<f32>>,
+    x_half: Vec<Vec<f32>>,
+    grad: Vec<Vec<f32>>,
+    xhat: Vec<Vec<f32>>,
+    rngs: Vec<Rng>,
+    diff: Vec<f32>,
+    qbuf: Vec<f32>,
+    gamma: f32,
+}
+
+impl DenseSequentialBaseline {
+    fn new(mixing: MixingMatrix, compressor: Box<dyn Compressor>, gamma: f32, seed: u64) -> Self {
+        let n = mixing.n();
+        let mut root = Rng::new(seed);
+        DenseSequentialBaseline {
+            mixing,
+            compressor,
+            lr: LrSchedule::Constant(0.01),
+            x: vec![vec![0.0; D]; n],
+            x_half: vec![vec![0.0; D]; n],
+            grad: vec![vec![0.0; D]; n],
+            xhat: vec![vec![0.0; D]; n],
+            rngs: (0..n).map(|i| root.fork(i as u64)).collect(),
+            diff: vec![0.0; D],
+            qbuf: vec![0.0; D],
+            gamma,
+        }
+    }
+
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.x.len();
+        let eta = self.lr.eta(t) as f32;
+        for i in 0..n {
+            src.grad(i, &self.x[i], &mut self.rngs[i], &mut self.grad[i]);
+            for ((xh, xi), gi) in self.x_half[i]
+                .iter_mut()
+                .zip(self.x[i].iter())
+                .zip(self.grad[i].iter())
+            {
+                *xh = xi - eta * gi;
+            }
+        }
+        // Every node fires (ThresholdSchedule::Zero equivalent at this
+        // drift); dense compress + dense estimate update.
+        let bits = self.compressor.encoded_bits(D);
+        for i in 0..n {
+            sub_into(&self.x_half[i], &self.xhat[i], &mut self.diff);
+            self.compressor
+                .compress(&self.diff, &mut self.rngs[i], &mut self.qbuf);
+            bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
+            for (h, qv) in self.xhat[i].iter_mut().zip(self.qbuf.iter()) {
+                *h += qv;
+            }
+        }
+        // Per-edge dense consensus with the seed's per-round clone.
+        for i in 0..n {
+            std::mem::swap(&mut self.x[i], &mut self.x_half[i]);
+        }
+        for i in 0..n {
+            let neighbors = self.mixing.topology.neighbors[i].clone();
+            for j in neighbors {
+                let w = self.mixing.weight(i, j) as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                let (xh_j, xh_i): (&[f32], &[f32]) = (&self.xhat[j], &self.xhat[i]);
+                scale_add(&mut self.x[i], self.gamma * w, xh_j, xh_i);
+            }
+        }
+        bus.end_round();
+    }
+}
+
+fn mk_sparq(workers: usize) -> SparqSgd {
+    let topo = Topology::new(TopologyKind::Ring, N, 0);
+    let mut algo = SparqSgd::new(
+        SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(SignTopK::new(K)),
+            trigger: EventTrigger::new(ThresholdSchedule::Zero),
+            lr: LrSchedule::Constant(0.01),
+            sync: SyncSchedule::EveryH(1),
+            gamma: None,
+            momentum: 0.0,
+            seed: 1,
+        },
+        D,
+    );
+    algo.set_workers(workers);
+    algo
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out_path = args.get_or("out", "BENCH_sparse_fastpath.json");
+    println!("sparse_fastpath: n={N}, d={D} (2^20), k={K} (d/100), SignTopK, H=1, all fire");
+
+    let mut b = Bencher::new("sparse_fastpath").with_budget(400, 2500);
+    let mut src = NullGrad { d: D, n: N };
+
+    // --- dense sequential baseline (the seed hot loop) ---
+    let baseline_ns;
+    {
+        let topo = Topology::new(TopologyKind::Ring, N, 0);
+        let mixing = uniform_neighbor(&topo);
+        // identical consensus step size to the SparqSgd runs below
+        let op = SignTopK::new(K);
+        let gamma = SpectralInfo::compute(&mixing)
+            .gamma_tuned(op.omega(D), op.effective_omega(D)) as f32;
+        let mut base =
+            DenseSequentialBaseline::new(mixing, Box::new(SignTopK::new(K)), gamma, 1);
+        let mut bus = Bus::new(N);
+        let mut t = 0u64;
+        let r = b.bench_throughput("dense-sequential", (N * D) as u64, || {
+            base.step(t, &mut src, &mut bus);
+            t += 1;
+        });
+        baseline_ns = r.mean_ns;
+    }
+
+    // --- sparse pipeline, sequential (isolates the O(k) message path) ---
+    let sparse_seq_ns;
+    {
+        let mut algo = mk_sparq(1);
+        let mut bus = Bus::new(N);
+        let mut t = 0u64;
+        let r = b.bench_throughput("sparse-workers=1", (N * D) as u64, || {
+            algo.step(t, &mut src, &mut bus);
+            t += 1;
+        });
+        sparse_seq_ns = r.mean_ns;
+    }
+
+    // --- sparse pipeline + parallel node phases (the full fast path) ---
+    let workers = args.usize("workers", 8);
+    let sparse_par_ns;
+    let bits_per_round;
+    {
+        let mut algo = mk_sparq(workers);
+        let mut bus = Bus::new(N);
+        let mut t = 0u64;
+        let r = b.bench_throughput(&format!("sparse-workers={workers}"), (N * D) as u64, || {
+            algo.step(t, &mut src, &mut bus);
+            t += 1;
+        });
+        sparse_par_ns = r.mean_ns;
+        bits_per_round = bus.total_bits / t.max(1);
+    }
+
+    let speedup_seq = baseline_ns / sparse_seq_ns;
+    let speedup = baseline_ns / sparse_par_ns;
+    println!(
+        "\nspeedup vs dense-sequential: sparse seq {speedup_seq:.2}x, \
+         sparse + {workers} workers {speedup:.2}x (target >= 3x)"
+    );
+    println!("bits per sync round: {bits_per_round} (wire-exact accounting)");
+
+    let json = Json::obj()
+        .set("bench", "sparse_fastpath")
+        .set("n", N)
+        .set("d", D)
+        .set("k", K)
+        .set("workers", workers)
+        .set("dense_sequential_ns_per_step", baseline_ns)
+        .set("sparse_seq_ns_per_step", sparse_seq_ns)
+        .set("sparse_parallel_ns_per_step", sparse_par_ns)
+        .set("speedup_sparse_seq", speedup_seq)
+        .set("speedup_sparse_parallel", speedup)
+        .set("bits_per_round", bits_per_round)
+        .set(
+            "node_steps_per_sec",
+            N as f64 / (sparse_par_ns * 1e-9),
+        );
+    std::fs::write(&out_path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {out_path}");
+}

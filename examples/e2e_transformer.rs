@@ -78,6 +78,7 @@ fn main() {
             steps,
             eval_every,
             verbose: true,
+            workers: args.usize("workers", 1),
         },
     );
     let wall = t0.elapsed().as_secs_f64();

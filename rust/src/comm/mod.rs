@@ -10,6 +10,14 @@
 //! communicated": a broadcast of an m-bit payload to `deg` neighbors
 //! counts `deg * m` link-bits (each edge carries the payload in both
 //! directions over a round where both endpoints fire).
+//!
+//! The payload size m is *per message*, not per operator: the coordinators
+//! charge `Compressor::message_bits(d, nnz)` for the sparse message they
+//! actually built. For operators with a [`wire`] codec (TopK, SignTopK)
+//! that equals the codec's encoded bit length for that exact message —
+//! magnitude ties select extra coordinates and are charged accordingly;
+//! fixed-slot wire formats (dense operators, QsgdTopK) charge their
+//! nominal cost regardless of stored nonzeros.
 
 pub mod wire;
 

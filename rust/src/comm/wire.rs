@@ -6,7 +6,7 @@
 //! exact dense reconstruction, and the encoded length matches the charged
 //! bits (tested in both this module and `rust/tests/properties.rs`).
 
-use crate::compress::index_bits;
+use crate::compress::{index_bits, SparseVec};
 
 /// LSB-first bit writer.
 #[derive(Default)]
@@ -77,6 +77,19 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Exact bit length of [`encode_topk`]/[`encode_topk_sparse`] for a
+/// message with `nnz` stored nonzeros at dimension d — the hot path
+/// charges this (via `Compressor::message_bits`) without materializing
+/// any bytes.
+pub fn topk_bits(nnz: usize, d: usize) -> u64 {
+    nnz as u64 * (32 + index_bits(d))
+}
+
+/// Exact bit length of [`encode_sign_topk`]/[`encode_sign_topk_sparse`].
+pub fn sign_topk_bits(nnz: usize, d: usize) -> u64 {
+    32 + nnz as u64 * (1 + index_bits(d))
+}
+
 /// Encoded SignTopK message: k (index, sign) pairs + one f32 scale.
 /// Matches `SignTopK::encoded_bits` (honest accounting) exactly.
 pub fn encode_sign_topk(q: &[f32]) -> Vec<u8> {
@@ -89,6 +102,21 @@ pub fn encode_sign_topk(q: &[f32]) -> Vec<u8> {
     for &i in &nz {
         w.write_bits(i as u64, ib);
         w.write_bits((q[i] < 0.0) as u64, 1);
+    }
+    w.into_bytes()
+}
+
+/// Encode a sparse SignTopK message without densifying — bit-identical to
+/// [`encode_sign_topk`] of its dense form (entries are stored in index
+/// order, exactly the order the dense encoder scans).
+pub fn encode_sign_topk_sparse(q: &SparseVec, d: usize) -> Vec<u8> {
+    let ib = index_bits(d) as u32;
+    let mut w = BitWriter::new();
+    let scale = q.val.first().map(|v| v.abs()).unwrap_or(0.0);
+    w.write_f32(scale);
+    for (i, v) in q.iter() {
+        w.write_bits(i as u64, ib);
+        w.write_bits((v < 0.0) as u64, 1);
     }
     w.into_bytes()
 }
@@ -128,6 +156,30 @@ pub fn decode_topk(bytes: &[u8], d: usize, k: usize) -> Vec<f32> {
     for _ in 0..k {
         let idx = r.read_bits(ib) as usize;
         out[idx] = r.read_f32();
+    }
+    out
+}
+
+/// Encode a sparse TopK message without densifying — bit-identical to
+/// [`encode_topk`] of its dense form.
+pub fn encode_topk_sparse(q: &SparseVec, d: usize) -> Vec<u8> {
+    let ib = index_bits(d) as u32;
+    let mut w = BitWriter::new();
+    for (i, v) in q.iter() {
+        w.write_bits(i as u64, ib);
+        w.write_f32(v);
+    }
+    w.into_bytes()
+}
+
+/// Decode a TopK payload straight into sparse form (k entries).
+pub fn decode_topk_sparse(bytes: &[u8], d: usize, k: usize) -> SparseVec {
+    let ib = index_bits(d) as u32;
+    let mut r = BitReader::new(bytes);
+    let mut out = SparseVec::with_capacity(k);
+    for _ in 0..k {
+        let idx = r.read_bits(ib) as u32;
+        out.push(idx, r.read_f32());
     }
     out
 }
@@ -237,5 +289,50 @@ mod tests {
         let bytes = encode_sign_topk(&q);
         let back = decode_sign_topk(&bytes, 64, 0);
         assert_eq!(back, q);
+    }
+
+    #[test]
+    fn sparse_encoders_match_dense_encoders() {
+        let d = 901;
+        let x = randvec(7, d);
+        for k in [1usize, 17, 128] {
+            let mut rng = Rng::new(0);
+            let mut q = crate::compress::SparseVec::new();
+
+            let topk = TopK::new(k);
+            topk.compress_sparse(&x, &mut rng, &mut q);
+            let dense = q.to_dense(d);
+            assert_eq!(encode_topk_sparse(&q, d), encode_topk(&dense), "topk k={k}");
+            assert_eq!(topk_bits(q.nnz(), d), topk.message_bits(d, q.nnz()));
+            let back = decode_topk_sparse(&encode_topk_sparse(&q, d), d, q.nnz());
+            assert_eq!(back, q);
+
+            let st = SignTopK::new(k);
+            st.compress_sparse(&x, &mut rng, &mut q);
+            let dense = q.to_dense(d);
+            assert_eq!(
+                encode_sign_topk_sparse(&q, d),
+                encode_sign_topk(&dense),
+                "sign_topk k={k}"
+            );
+            assert_eq!(sign_topk_bits(q.nnz(), d), st.message_bits(d, q.nnz()));
+        }
+    }
+
+    #[test]
+    fn bit_length_functions_match_actual_encodings() {
+        let d = 2048;
+        let x = randvec(9, d);
+        let mut rng = Rng::new(0);
+        let mut q = crate::compress::SparseVec::new();
+        TopK::new(64).compress_sparse(&x, &mut rng, &mut q);
+        let bytes = encode_topk_sparse(&q, d);
+        let bits = topk_bits(q.nnz(), d);
+        assert!((bytes.len() as u64) * 8 >= bits && (bytes.len() as u64) * 8 < bits + 8);
+
+        SignTopK::new(64).compress_sparse(&x, &mut rng, &mut q);
+        let bytes = encode_sign_topk_sparse(&q, d);
+        let bits = sign_topk_bits(q.nnz(), d);
+        assert!((bytes.len() as u64) * 8 >= bits && (bytes.len() as u64) * 8 < bits + 8);
     }
 }

@@ -6,7 +6,7 @@
 //! SignTopK operator ... we take top 10% elements of each tensor and only
 //! transmit the sign and norm of the result").
 
-use super::{index_bits, topk_threshold_select, Compressor};
+use super::{index_bits, topk_threshold_select, Compressor, SparseVec};
 use crate::util::Rng;
 
 /// SignTopK: on the top-k coordinates by magnitude emit
@@ -87,6 +87,35 @@ impl Compressor for SignTopK {
         }
     }
 
+    fn compress_sparse(&self, x: &[f32], _rng: &mut Rng, out: &mut SparseVec) {
+        // Same selection + scale math as the dense path, but emitting only
+        // the selected coordinates (O(d) scan, O(k) output — no dense
+        // fill/gather). `signum` semantics match the dense path exactly,
+        // including the ±scale it assigns to selected zero entries.
+        out.clear();
+        let tau = super::topk_threshold(x, self.k);
+        let (mut l1, mut cnt) = (0.0f64, 0u32);
+        for &v in x {
+            let a = v.abs();
+            if a >= tau {
+                l1 += a as f64;
+                cnt += 1;
+            }
+        }
+        if cnt == 0 {
+            return;
+        }
+        let scale = (l1 / cnt as f64) as f32;
+        if scale == 0.0 {
+            return; // all-zero selection ⇒ C(0) = 0
+        }
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() >= tau {
+                out.push(i as u32, scale * v.signum());
+            }
+        }
+    }
+
     fn encoded_bits(&self, d: usize) -> u64 {
         if self.count_indices {
             // k indices + k sign bits + one f32 scale.
@@ -94,6 +123,15 @@ impl Compressor for SignTopK {
         } else {
             // paper convention: k sign bits + one f32 scale.
             self.k.min(d) as u64 + 32
+        }
+    }
+
+    fn message_bits(&self, d: usize, nnz: usize) -> u64 {
+        if self.count_indices {
+            // Exactly what `comm::wire::encode_sign_topk` emits.
+            nnz as u64 * (1 + index_bits(d)) + 32
+        } else {
+            nnz as u64 + 32
         }
     }
 }
@@ -150,10 +188,40 @@ impl Compressor for QsgdTopK {
         }
     }
 
+    fn compress_sparse(&self, x: &[f32], rng: &mut Rng, out: &mut SparseVec) {
+        // Draws one uniform per *selected* coordinate in index order — the
+        // identical RNG stream to the dense path — but stores only the
+        // entries stochastic rounding kept.
+        out.clear();
+        let (_, idx) = topk_threshold_select(x, self.k);
+        let norm = idx
+            .iter()
+            .map(|&i| (x[i] as f64) * (x[i] as f64))
+            .sum::<f64>()
+            .sqrt() as f32;
+        if norm <= 0.0 {
+            return;
+        }
+        let s = self.s as f32;
+        let damp = 1.0 / (1.0 + self.beta() as f32);
+        for i in idx {
+            let u = rng.f32();
+            let level = (s * x[i].abs() / norm + u).floor();
+            let v = damp * norm / s * x[i].signum() * level;
+            if v != 0.0 {
+                out.push(i as u32, v);
+            }
+        }
+    }
+
     fn encoded_bits(&self, d: usize) -> u64 {
         let sym_bits = index_bits(2 * self.s as usize + 1);
         self.k.min(d) as u64 * (sym_bits + index_bits(d)) + 32
     }
+
+    // message_bits keeps the default (nominal k slots): the fixed-k wire
+    // protocol has no length field, so slots stochastic rounding zeroed
+    // still transmit a level-0 symbol — charging nnz would understate.
 }
 
 #[cfg(test)]
@@ -250,5 +318,39 @@ mod tests {
         let q = QsgdTopK::new(15, 8).compress_vec(&x, &mut rng);
         // stochastic rounding may zero some of the k slots but never add.
         assert!(q.iter().filter(|v| **v != 0.0).count() <= 15);
+    }
+
+    #[test]
+    fn sign_topk_sparse_matches_dense() {
+        use super::super::SparseVec;
+        let x = randvec(7, 500);
+        let c = SignTopK::new(50);
+        let mut rng_a = Rng::new(0);
+        let dense = c.compress_vec(&x, &mut rng_a);
+        let mut q = SparseVec::new();
+        let mut rng_b = Rng::new(0);
+        c.compress_sparse(&x, &mut rng_b, &mut q);
+        assert_eq!(q.nnz(), 50);
+        assert_eq!(q.to_dense(500), dense);
+        assert_eq!(c.message_bits(500, 50), c.encoded_bits(500));
+        // paper accounting variant charges signs + norm only
+        let p = SignTopK::paper_accounting(50);
+        assert_eq!(p.message_bits(500, 50), 50 + 32);
+    }
+
+    #[test]
+    fn qsgd_topk_sparse_same_rng_stream() {
+        use super::super::SparseVec;
+        let x = randvec(8, 200);
+        let c = QsgdTopK::new(20, 8);
+        // identical seeds ⇒ identical uniform draws ⇒ identical messages
+        let mut rng_a = Rng::new(9);
+        let dense = c.compress_vec(&x, &mut rng_a);
+        let mut q = SparseVec::new();
+        let mut rng_b = Rng::new(9);
+        c.compress_sparse(&x, &mut rng_b, &mut q);
+        assert_eq!(q.to_dense(200), dense);
+        // both streams advanced identically
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 }

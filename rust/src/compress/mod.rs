@@ -20,9 +20,11 @@
 
 pub mod ops;
 pub mod composed;
+pub mod sparse;
 
 pub use composed::{QsgdTopK, SignTopK};
 pub use ops::{Identity, QsgdOp, RandK, SignL1, TopK};
+pub use sparse::SparseVec;
 
 use crate::util::Rng;
 
@@ -41,6 +43,39 @@ pub trait Compressor: Send + Sync {
 
     /// Exact transmitted bits for one message of dimension d.
     fn encoded_bits(&self, d: usize) -> u64;
+
+    /// Compress `x` directly into sparse (index, value) form — the hot-path
+    /// entry point. Must densify to *exactly* what [`compress`] writes
+    /// given the same RNG state (property-tested). The default runs the
+    /// dense path into a thread-local scratch (no per-call allocation on
+    /// the hot path) and gathers nonzeros — correct for every operator;
+    /// the k-sparse operators (TopK, SignTopK, QsgdTopK) override it to
+    /// skip the dense materialization entirely, and the dense operators
+    /// (Identity, Sign, QSGD, RandK) keep the passthrough.
+    fn compress_sparse(&self, x: &[f32], rng: &mut Rng, out: &mut SparseVec) {
+        DENSE_SCRATCH.with(|cell| {
+            let mut dense = cell.borrow_mut();
+            // every `compress` impl fully overwrites its output buffer,
+            // so resizing without clearing is safe
+            dense.resize(x.len(), 0.0);
+            self.compress(x, rng, &mut dense[..]);
+            out.set_from_dense(&dense[..]);
+        });
+    }
+
+    /// Exact wire bits for one *specific* message with `nnz` stored
+    /// nonzeros at dimension d — what the bus charges on the hot path.
+    /// For operators with a `comm::wire` codec (TopK, SignTopK) this
+    /// matches the encoded byte length of that exact message (magnitude
+    /// ties can only select *more* than k coordinates, so per-message
+    /// charges are never below [`encoded_bits`]). Operators whose wire
+    /// format has a fixed slot count — the dense ones, and QsgdTopK where
+    /// stochastic rounding zeroes slots that must still be transmitted as
+    /// level-0 symbols for the fixed-k decode protocol — keep the default,
+    /// which ignores `nnz` and charges the nominal cost.
+    fn message_bits(&self, d: usize, _nnz: usize) -> u64 {
+        self.encoded_bits(d)
+    }
 
     /// Typical-case compression quality used to *tune* the consensus step
     /// size (the worst-case contract ω of [`omega`] can be orders of
@@ -101,6 +136,11 @@ thread_local! {
     /// sync round over the full parameter vector, so the O(d) buffer is
     /// reused instead of reallocated (EXPERIMENTS.md §Perf, L3 iteration 2).
     static TOPK_SCRATCH: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
+
+    /// Dense scratch for the default `compress_sparse` fallback (dense
+    /// operators), keeping the per-round hot path allocation-free. Pool
+    /// workers each get their own copy, preserving determinism.
+    static DENSE_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// The k-th largest |x_i| (threshold semantics; ties select the whole tie

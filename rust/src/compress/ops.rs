@@ -1,6 +1,6 @@
 //! Basic compression operators: Identity, TopK, RandK, Sign(ℓ1), QSGD.
 
-use super::{index_bits, Compressor};
+use super::{index_bits, Compressor, SparseVec};
 use crate::linalg::vecops::{norm1, norm2_sq};
 use crate::util::Rng;
 
@@ -59,9 +59,26 @@ impl Compressor for TopK {
         }
     }
 
+    fn compress_sparse(&self, x: &[f32], _rng: &mut Rng, out: &mut SparseVec) {
+        // One selection pass, no dense output fill: emit exactly the
+        // coordinates the dense path keeps, in index order.
+        out.clear();
+        let tau = super::topk_threshold(x, self.k);
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() >= tau && v != 0.0 {
+                out.push(i as u32, v);
+            }
+        }
+    }
+
     fn encoded_bits(&self, d: usize) -> u64 {
         // k (value, index) pairs.
         self.k.min(d) as u64 * (32 + index_bits(d))
+    }
+
+    fn message_bits(&self, d: usize, nnz: usize) -> u64 {
+        // Exactly what `comm::wire::encode_topk` emits for this message.
+        nnz as u64 * (32 + index_bits(d))
     }
 }
 
@@ -329,5 +346,46 @@ mod tests {
         assert_eq!(RandK::new(10).encoded_bits(1000), 320 + 64);
         // 2s+1 = 33 symbols ⇒ 6 bits
         assert_eq!(QsgdOp::new(16).encoded_bits(100), 100 * 6 + 32);
+    }
+
+    #[test]
+    fn topk_sparse_matches_dense() {
+        use super::super::SparseVec;
+        let x = randvec(20, 300);
+        let c = TopK::new(25);
+        let mut rng_a = Rng::new(0);
+        let dense = c.compress_vec(&x, &mut rng_a);
+        let mut q = SparseVec::new();
+        let mut rng_b = Rng::new(0);
+        c.compress_sparse(&x, &mut rng_b, &mut q);
+        assert_eq!(q.nnz(), 25);
+        assert_eq!(q.to_dense(300), dense);
+        assert_eq!(c.message_bits(300, q.nnz()), c.encoded_bits(300));
+    }
+
+    #[test]
+    fn dense_ops_sparse_fallback_matches() {
+        use super::super::SparseVec;
+        let x = randvec(21, 128);
+        for op in [
+            Box::new(Identity) as Box<dyn Compressor>,
+            Box::new(SignL1),
+            Box::new(QsgdOp::new(8)),
+            Box::new(RandK::new(13)),
+        ] {
+            let mut rng_a = Rng::new(5);
+            let dense = op.compress_vec(&x, &mut rng_a);
+            let mut q = SparseVec::new();
+            let mut rng_b = Rng::new(5);
+            op.compress_sparse(&x, &mut rng_b, &mut q);
+            assert_eq!(q.to_dense(128), dense, "{}", op.name());
+            // dense wire formats charge independently of stored nonzeros
+            assert_eq!(
+                op.message_bits(128, q.nnz()),
+                op.encoded_bits(128),
+                "{}",
+                op.name()
+            );
+        }
     }
 }

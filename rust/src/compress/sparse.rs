@@ -1,0 +1,156 @@
+//! Sparse message representation for the compressed-exchange fast path.
+//!
+//! Top-k style operators produce k-sparse messages (k ≪ d), yet the seed
+//! pipeline materialized every message as a dense d-vector and applied it
+//! with O(d) loops — paying dense compute for sparse communication. A
+//! [`SparseVec`] carries exactly the transmitted (index, value) pairs, so
+//! the estimate-bank update `x̂ += q` and the consensus neighbor
+//! accumulation run in O(nnz) instead of O(d), and the wire codecs in
+//! `comm::wire` can encode it without a densify step.
+//!
+//! Invariants (upheld by every producer in this crate and asserted by the
+//! property tests in `rust/tests/sparse_parallel.rs`):
+//! * `idx` is strictly increasing (canonical order — matches the order the
+//!   dense wire encoders scan a dense vector);
+//! * `val` entries are nonzero (zeros are represented by absence);
+//! * densifying reproduces *exactly* the dense `Compressor::compress`
+//!   output for the same RNG stream.
+
+/// A d-dimensional vector stored as its nonzero (index, value) pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    /// Nonzero coordinate indices, strictly increasing. u32 keeps the
+    /// hot-path footprint at 8 bytes/entry (d < 2³² always holds here).
+    pub idx: Vec<u32>,
+    /// Values at those coordinates.
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new() -> SparseVec {
+        SparseVec::default()
+    }
+
+    pub fn with_capacity(k: usize) -> SparseVec {
+        SparseVec {
+            idx: Vec::with_capacity(k),
+            val: Vec::with_capacity(k),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Drop all entries, keeping the allocations (scratch reuse).
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Append one entry. Callers must push in increasing index order.
+    #[inline]
+    pub fn push(&mut self, i: u32, v: f32) {
+        debug_assert!(self.idx.last().map_or(true, |&last| i > last));
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    /// Gather the nonzeros of a dense vector (the generic densify-free
+    /// fallback used by `Compressor::compress_sparse`).
+    pub fn set_from_dense(&mut self, x: &[f32]) {
+        self.clear();
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                self.push(i as u32, v);
+            }
+        }
+    }
+
+    pub fn from_dense(x: &[f32]) -> SparseVec {
+        let mut s = SparseVec::new();
+        s.set_from_dense(x);
+        s
+    }
+
+    /// Iterate (index, value) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, f32)> + '_ {
+        self.idx
+            .iter()
+            .zip(self.val.iter())
+            .map(|(&i, &v)| (i as usize, v))
+    }
+
+    /// Materialize as a dense vector of dimension d.
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        self.add_to(&mut out);
+        out
+    }
+
+    /// out[idx] += val — the O(nnz) estimate-bank update (Algorithm 1
+    /// line 13).
+    #[inline]
+    pub fn add_to(&self, out: &mut [f32]) {
+        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// out[idx] += a · val — the O(nnz) weighted neighbor accumulation.
+    #[inline]
+    pub fn add_scaled_to(&self, a: f32, out: &mut [f32]) {
+        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+            out[i as usize] += a * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let x = vec![0.0f32, 1.5, 0.0, -2.0, 0.0, 0.25];
+        let s = SparseVec::from_dense(&x);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.idx, vec![1, 3, 5]);
+        assert_eq!(s.val, vec![1.5, -2.0, 0.25]);
+        assert_eq!(s.to_dense(6), x);
+    }
+
+    #[test]
+    fn add_and_scaled_add() {
+        let s = SparseVec::from_dense(&[0.0, 2.0, 0.0, -1.0]);
+        let mut acc = vec![1.0f32; 4];
+        s.add_to(&mut acc);
+        assert_eq!(acc, vec![1.0, 3.0, 1.0, 0.0]);
+        s.add_scaled_to(0.5, &mut acc);
+        assert_eq!(acc, vec![1.0, 4.0, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn scratch_reuse_clears() {
+        let mut s = SparseVec::with_capacity(8);
+        s.set_from_dense(&[1.0, 0.0]);
+        assert_eq!(s.nnz(), 1);
+        s.set_from_dense(&[0.0, 0.0]);
+        assert!(s.is_empty());
+        assert_eq!(s.to_dense(2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn iter_yields_pairs() {
+        let s = SparseVec::from_dense(&[0.0, 4.0, 0.0, 8.0]);
+        let pairs: Vec<(usize, f32)> = s.iter().collect();
+        assert_eq!(pairs, vec![(1, 4.0), (3, 8.0)]);
+    }
+}

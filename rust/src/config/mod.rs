@@ -53,6 +53,10 @@ pub struct ExperimentConfig {
     pub problem: String,
     /// Override consensus γ (0 ⇒ Lemma-6 γ*).
     pub gamma: f64,
+    /// Worker threads for the coordinator's per-node phases (1 ⇒
+    /// sequential, 0 ⇒ available CPUs); bit-for-bit deterministic across
+    /// values.
+    pub workers: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -72,6 +76,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             problem: "quadratic:64".into(),
             gamma: 0.0,
+            workers: 1,
         }
     }
 }
@@ -93,6 +98,7 @@ impl ExperimentConfig {
             .set("seed", self.seed)
             .set("problem", self.problem.as_str())
             .set("gamma", self.gamma)
+            .set("workers", self.workers)
     }
 
     pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
@@ -121,6 +127,7 @@ impl ExperimentConfig {
             seed: u("seed", base.seed),
             problem: s("problem", &base.problem),
             gamma: f("gamma", base.gamma),
+            workers: u("workers", base.workers as u64) as usize,
         })
     }
 
@@ -153,6 +160,7 @@ pub mod presets {
             seed: 42,
             problem: "logreg:784:10:5".into(),
             gamma: 0.0,
+            workers: 1,
         }
     }
 
@@ -174,6 +182,7 @@ pub mod presets {
             seed: 42,
             problem: "mlp:3072:128:10:32".into(),
             gamma: 0.0,
+            workers: 1,
         }
     }
 }

@@ -9,14 +9,16 @@
 //! `sparq_equals_choco` test pins the equivalence SPARQ(c_t=0, H=1) ≡
 //! CHOCO on identical seeds.
 
+use super::consensus::NeighborAccumulator;
 use super::node::NodeState;
-use super::DecentralizedAlgo;
+use super::{gradient_phase, DecentralizedAlgo};
 use crate::comm::Bus;
 use crate::compress::Compressor;
 use crate::graph::{MixingMatrix, SpectralInfo};
-use crate::linalg::vecops::{scale_add, sub_into};
+use crate::linalg::vecops::sub_into;
 use crate::problems::GradientSource;
 use crate::schedule::LrSchedule;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 pub struct ChocoSgd {
@@ -27,8 +29,11 @@ pub struct ChocoSgd {
     pub momentum: f32,
     nodes: Vec<NodeState>,
     xhat: Vec<Vec<f32>>,
-    diff: Vec<f32>,
-    qbuf: Vec<f32>,
+    /// Same sparse consensus machinery as SPARQ (consensus.rs) — the phase
+    /// structure below mirrors sparq.rs exactly so the degenerate-case
+    /// equivalence SPARQ(c_t=0, H=1) ≡ CHOCO stays bit-for-bit.
+    nbr: NeighborAccumulator,
+    pool: ThreadPool,
 }
 
 impl ChocoSgd {
@@ -48,6 +53,7 @@ impl ChocoSgd {
         let nodes = (0..n)
             .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
             .collect();
+        let nbr = NeighborAccumulator::new(&mixing, d);
         ChocoSgd {
             mixing,
             compressor,
@@ -56,8 +62,8 @@ impl ChocoSgd {
             momentum,
             nodes,
             xhat: vec![vec![0.0; d]; n],
-            diff: vec![0.0; d],
-            qbuf: vec![0.0; d],
+            nbr,
+            pool: ThreadPool::new(1),
         }
     }
 
@@ -73,43 +79,34 @@ impl DecentralizedAlgo for ChocoSgd {
         let n = self.nodes.len();
         let eta = self.lr.eta(t) as f32;
 
-        for (i, node) in self.nodes.iter_mut().enumerate() {
-            let x = std::mem::take(&mut node.x);
-            src.grad(i, &x, &mut node.rng, &mut node.grad);
-            node.x = x;
-            node.local_step(eta, self.momentum);
-        }
+        gradient_phase(&self.pool, &mut self.nodes, src, Some((eta, self.momentum)));
 
-        // Every node transmits every round (the CHOCO contract).
-        let bits = self.compressor.encoded_bits(self.diff.len());
+        // Every node transmits every round (the CHOCO contract):
+        // compress in parallel, then apply in deterministic node order.
+        let pool = &self.pool;
+        let compressor = &*self.compressor;
+        let xhat = &self.xhat;
+        pool.for_each_mut(&mut self.nodes, |i, node| {
+            sub_into(&node.x_half, &xhat[i], &mut node.diff);
+            compressor.compress_sparse(&node.diff, &mut node.rng, &mut node.q);
+        });
+
+        let d = self.xhat[0].len();
         for i in 0..n {
-            sub_into(&self.nodes[i].x_half, &self.xhat[i], &mut self.diff);
-            {
-                let node = &mut self.nodes[i];
-                self.compressor
-                    .compress(&self.diff, &mut node.rng, &mut self.qbuf);
-            }
+            let q = &self.nodes[i].q;
+            let bits = self.compressor.message_bits(d, q.nnz());
             bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
-            for (h, qv) in self.xhat[i].iter_mut().zip(self.qbuf.iter()) {
-                *h += qv;
-            }
+            q.add_to(&mut self.xhat[i]);
+            self.nbr.apply_broadcast(i, q);
         }
 
         let gamma = self.gamma as f32;
-        for node in self.nodes.iter_mut() {
+        let xhat = &self.xhat;
+        let nbr = &self.nbr;
+        self.pool.for_each_mut(&mut self.nodes, |i, node| {
             std::mem::swap(&mut node.x, &mut node.x_half);
-        }
-        for i in 0..n {
-            let neighbors = self.mixing.topology.neighbors[i].clone();
-            for j in neighbors {
-                let w = self.mixing.weight(i, j) as f32;
-                if w == 0.0 {
-                    continue;
-                }
-                let (xh_j, xh_i): (&[f32], &[f32]) = (&self.xhat[j], &self.xhat[i]);
-                scale_add(&mut self.nodes[i].x, gamma * w, xh_j, xh_i);
-            }
-        }
+            nbr.commit(i, gamma, &xhat[i], &mut node.x);
+        });
         bus.end_round();
     }
 
@@ -135,6 +132,9 @@ impl DecentralizedAlgo for ChocoSgd {
         }
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.pool = ThreadPool::new(workers);
+    }
 
     fn n(&self) -> usize {
         self.nodes.len()

@@ -12,6 +12,7 @@
 
 pub mod node;
 pub mod checkpoint;
+pub mod consensus;
 pub mod sparq;
 pub mod choco;
 pub mod vanilla;
@@ -19,12 +20,49 @@ pub mod runner;
 
 pub use checkpoint::Checkpoint;
 pub use choco::ChocoSgd;
+pub use consensus::NeighborAccumulator;
 pub use runner::{run, RunOptions};
 pub use sparq::{SparqConfig, SparqSgd};
 pub use vanilla::VanillaDecentralized;
 
 use crate::comm::Bus;
 use crate::problems::GradientSource;
+use crate::util::threadpool::ThreadPool;
+
+/// The per-node gradient phase shared by every coordinator: stochastic
+/// gradient into `node.grad`, then (optionally) the local half-step.
+/// Runs on the pool when the source exposes a `Sync` shared-state handle
+/// (`GradientSource::shared` — thread-safety is enforced by the type
+/// system, no unsafe involved); per-node RNG streams make the result
+/// identical either way.
+pub(crate) fn gradient_phase(
+    pool: &ThreadPool,
+    nodes: &mut [node::NodeState],
+    src: &mut dyn GradientSource,
+    local_step: Option<(f32, f32)>,
+) {
+    if pool.workers > 1 {
+        if let Some(shared) = src.shared() {
+            pool.for_each_mut(nodes, |i, node| {
+                let x = std::mem::take(&mut node.x);
+                shared.grad_shared(i, &x, &mut node.rng, &mut node.grad);
+                node.x = x;
+                if let Some((eta, momentum)) = local_step {
+                    node.local_step(eta, momentum);
+                }
+            });
+            return;
+        }
+    }
+    for (i, node) in nodes.iter_mut().enumerate() {
+        let x = std::mem::take(&mut node.x);
+        src.grad(i, &x, &mut node.rng, &mut node.grad);
+        node.x = x;
+        if let Some((eta, momentum)) = local_step {
+            node.local_step(eta, momentum);
+        }
+    }
+}
 
 /// A decentralized optimization algorithm advanced one synchronous
 /// iteration at a time.
@@ -49,6 +87,13 @@ pub trait DecentralizedAlgo {
 
     /// Restore one node's momentum buffer (no-op if the run has none).
     fn set_node_momentum(&mut self, _node: usize, _m: &[f32]) {}
+
+    /// Set the worker-thread count for the per-node phases (1 ⇒ fully
+    /// sequential, 0 ⇒ available CPUs). Results are bit-for-bit identical
+    /// for every worker count — parallel phases only touch per-node state
+    /// driven by per-node RNG streams. Default: no-op for algorithms
+    /// without parallel phases.
+    fn set_workers(&mut self, _workers: usize) {}
 
     /// Number of nodes.
     fn n(&self) -> usize;

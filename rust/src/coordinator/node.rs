@@ -7,9 +7,16 @@
 //! pair. The paper's Appendix A.3 matrix form makes the same reduction
 //! (a single X̂ matrix).
 
+use crate::compress::SparseVec;
 use crate::util::Rng;
 
 /// State owned by one logical worker.
+///
+/// Every buffer a node touches during the per-node phases (gradient,
+/// trigger check, compress) lives here, so the coordinator can hand whole
+/// `NodeState`s to pool workers with no shared mutable scratch — that
+/// structure is what makes the parallel phases bit-for-bit deterministic
+/// regardless of worker count.
 #[derive(Clone, Debug)]
 pub struct NodeState {
     /// Local model x_i.
@@ -22,6 +29,12 @@ pub struct NodeState {
     pub grad: Vec<f32>,
     /// Scratch: x^{t+1/2} buffer.
     pub x_half: Vec<f32>,
+    /// Scratch: drift x^{t+½} − x̂ fed to the compressor.
+    pub diff: Vec<f32>,
+    /// Scratch: this node's compressed sparse message q_i.
+    pub q: SparseVec,
+    /// Whether the event trigger fired at the last sync round.
+    pub fired: bool,
 }
 
 impl NodeState {
@@ -32,6 +45,9 @@ impl NodeState {
             rng,
             grad: vec![0.0; d],
             x_half: vec![0.0; d],
+            diff: vec![0.0; d],
+            q: SparseVec::new(),
+            fired: false,
         }
     }
 

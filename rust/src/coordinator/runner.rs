@@ -14,6 +14,9 @@ pub struct RunOptions {
     pub eval_every: u64,
     /// Print progress lines to stdout.
     pub verbose: bool,
+    /// Worker threads for the per-node phases (1 ⇒ sequential, 0 ⇒
+    /// available CPUs). Bit-for-bit deterministic across values.
+    pub workers: usize,
 }
 
 impl Default for RunOptions {
@@ -22,6 +25,7 @@ impl Default for RunOptions {
             steps: 1000,
             eval_every: 50,
             verbose: false,
+            workers: 1,
         }
     }
 }
@@ -32,6 +36,7 @@ pub fn run(
     src: &mut dyn GradientSource,
     opts: &RunOptions,
 ) -> Series {
+    algo.set_workers(opts.workers);
     let mut bus = Bus::new(algo.n());
     let mut series = Series::new(algo.name());
 
@@ -109,6 +114,7 @@ mod tests {
                 steps: 500,
                 eval_every: 100,
                 verbose: false,
+                workers: 1,
             },
         );
         // t=0 eval + 5 interval evals

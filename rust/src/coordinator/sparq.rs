@@ -16,16 +16,28 @@
 //! init used throughout the experiments this is automatic (zero drift ⇒
 //! nothing to send). For nonzero init the first sync round's trigger sees
 //! the full ‖x^{(½)}‖² drift and fires, which is exactly that bootstrap.
+//!
+//! Execution structure (EXPERIMENTS.md §Perf, sparse fast path): messages
+//! are built as [`crate::compress::SparseVec`]s and applied in O(nnz);
+//! the consensus step reads a materialized neighbor accumulator
+//! (consensus.rs) instead of doing per-edge dense passes; and the
+//! per-node phases (gradient/local-step, trigger + compress, consensus
+//! commit) run on a `util::ThreadPool`. Every parallel phase touches only
+//! per-node state driven by per-node RNG streams, and the cross-node
+//! apply runs sequentially in node order, so runs are bit-for-bit
+//! identical for any worker count.
 
+use super::consensus::NeighborAccumulator;
 use super::node::NodeState;
-use super::DecentralizedAlgo;
+use super::{gradient_phase, DecentralizedAlgo};
 use crate::comm::Bus;
 use crate::compress::Compressor;
 use crate::graph::{MixingMatrix, SpectralInfo};
-use crate::linalg::vecops::{scale_add, sub_into};
+use crate::linalg::vecops::sub_into;
 use crate::problems::GradientSource;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::EventTrigger;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 /// Everything that parameterizes a SPARQ run (Algorithm 1's inputs).
@@ -50,10 +62,12 @@ pub struct SparqSgd {
     nodes: Vec<NodeState>,
     /// Public estimates x̂_j (one authoritative copy per node; see node.rs).
     xhat: Vec<Vec<f32>>,
-    /// Scratch for diffs and compressed messages (no allocation on the
-    /// per-round hot path — see EXPERIMENTS.md §Perf).
-    diff: Vec<f32>,
-    qbuf: Vec<f32>,
+    /// Materialized Σ_j w_ij x̂_j per node, maintained in O(nnz·deg) per
+    /// broadcast (the sparse fast path — see consensus.rs).
+    nbr: NeighborAccumulator,
+    /// Worker pool for the per-node phases (workers = 1 ⇒ sequential;
+    /// results are bit-identical for any worker count).
+    pool: ThreadPool,
     fired_last: usize,
     /// Cumulative trigger statistics.
     pub total_fired: u64,
@@ -73,13 +87,14 @@ impl SparqSgd {
         let nodes = (0..n)
             .map(|i| NodeState::new(d, cfg.momentum > 0.0, root.fork(i as u64)))
             .collect();
+        let nbr = NeighborAccumulator::new(&cfg.mixing, d);
         SparqSgd {
             cfg,
             gamma,
             nodes,
             xhat: vec![vec![0.0; d]; n],
-            diff: vec![0.0; d],
-            qbuf: vec![0.0; d],
+            nbr,
+            pool: ThreadPool::new(1),
             fired_last: 0,
             total_fired: 0,
             total_checks: 0,
@@ -107,74 +122,64 @@ impl SparqSgd {
 impl DecentralizedAlgo for SparqSgd {
     fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
         let n = self.nodes.len();
-        let eta = self.cfg.lr.eta(t) as f32;
+        let eta64 = self.cfg.lr.eta(t);
+        let eta = eta64 as f32;
+        let momentum = self.cfg.momentum;
 
-        // lines 3–4: gradient + local half-step, every node.
-        for (i, node) in self.nodes.iter_mut().enumerate() {
-            let x = std::mem::take(&mut node.x);
-            src.grad(i, &x, &mut node.rng, &mut node.grad);
-            node.x = x;
-            node.local_step(eta, self.cfg.momentum);
-        }
+        // lines 3–4: gradient + local half-step, every node — parallel
+        // across nodes when the source supports shared-state evaluation.
+        gradient_phase(&self.pool, &mut self.nodes, src, Some((eta, momentum)));
 
         if self.cfg.sync.is_sync(t) {
-            // line 7: trigger checks (all against the *pre-update* x̂).
-            let mut fired = vec![false; n];
-            for i in 0..n {
-                self.total_checks += 1;
-                fired[i] = self.cfg.trigger.fires(
-                    &self.nodes[i].x_half,
-                    &self.xhat[i],
-                    t,
-                    self.cfg.lr.eta(t),
-                );
-            }
-            self.fired_last = fired.iter().filter(|f| **f).count();
-            self.total_fired += self.fired_last as u64;
+            // lines 7–9: trigger check and (if fired) compress, all
+            // against the *pre-update* x̂ bank. Each node touches only its
+            // own row and scratch, so the phase fans out on the pool.
+            let pool = &self.pool;
+            let cfg = &self.cfg;
+            let xhat = &self.xhat;
+            pool.for_each_mut(&mut self.nodes, |i, node| {
+                node.fired = cfg.trigger.fires(&node.x_half, &xhat[i], t, eta64);
+                if node.fired {
+                    // line 8: q_i = C(x_i^{t+½} − x̂_i), straight to sparse.
+                    sub_into(&node.x_half, &xhat[i], &mut node.diff);
+                    cfg.compressor
+                        .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
+                }
+            });
 
-            // lines 8–13: compress, broadcast (charged), update estimates.
-            let bits = self.cfg.compressor.encoded_bits(self.diff.len());
+            // lines 9–13: charge broadcasts and apply estimate updates in
+            // deterministic node order. All O(nnz): x̂_i += q_i plus the
+            // receivers' neighbor-accumulator moves; silent nodes (line
+            // 11) send 0 and cost nothing on the wire.
+            let d = self.xhat[0].len();
+            self.total_checks += n as u64;
+            let mut fired_count = 0usize;
             for i in 0..n {
-                if !fired[i] {
-                    continue; // line 11: send 0 — costs nothing on the wire
+                if !self.nodes[i].fired {
+                    continue;
                 }
-                sub_into(&self.nodes[i].x_half, &self.xhat[i], &mut self.diff);
-                {
-                    let node = &mut self.nodes[i];
-                    self.cfg
-                        .compressor
-                        .compress(&self.diff, &mut node.rng, &mut self.qbuf);
-                }
-                let fanout = self.cfg.mixing.topology.degree(i);
-                bus.charge_broadcast(i, fanout, bits);
-                // line 13 at every receiver (and i itself): x̂_i += q_i.
-                for (h, qv) in self.xhat[i].iter_mut().zip(self.qbuf.iter()) {
-                    *h += qv;
-                }
+                fired_count += 1;
+                let q = &self.nodes[i].q;
+                let bits = self.cfg.compressor.message_bits(d, q.nnz());
+                bus.charge_broadcast(i, self.cfg.mixing.topology.degree(i), bits);
+                q.add_to(&mut self.xhat[i]);
+                self.nbr.apply_broadcast(i, q);
             }
+            self.fired_last = fired_count;
+            self.total_fired += fired_count as u64;
 
-            // line 15: consensus step from x̂ (post-update estimates).
+            // line 15: consensus from the post-update estimates — one
+            // fused pass per node from the materialized accumulator (no
+            // per-edge full-d read-modify-write), parallel across nodes.
             // Commit by buffer swap — x_half is fully rewritten by the
             // next local_step, so no copy is needed (§Perf, L3 iter 4).
             let gamma = self.gamma as f32;
-            for i in 0..n {
-                let node = &mut self.nodes[i];
+            let xhat = &self.xhat;
+            let nbr = &self.nbr;
+            self.pool.for_each_mut(&mut self.nodes, |i, node| {
                 std::mem::swap(&mut node.x, &mut node.x_half);
-            }
-            for i in 0..n {
-                // x_i += γ Σ_j w_ij (x̂_j − x̂_i); w_ii term vanishes.
-                let neighbors = self.cfg.mixing.topology.neighbors[i].clone();
-                for j in neighbors {
-                    let w = self.cfg.mixing.weight(i, j) as f32;
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let (xh_j, xh_i): (&[f32], &[f32]) = (&self.xhat[j], &self.xhat[i]);
-                    // borrow-split: copy into node x via raw indexing
-                    let x = &mut self.nodes[i].x;
-                    scale_add(x, gamma * w, xh_j, xh_i);
-                }
-            }
+                nbr.commit(i, gamma, &xhat[i], &mut node.x);
+            });
         } else {
             // line 17: commit the local step only (buffer swap, no copy).
             for node in self.nodes.iter_mut() {
@@ -207,6 +212,9 @@ impl DecentralizedAlgo for SparqSgd {
         }
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.pool = ThreadPool::new(workers);
+    }
 
     fn n(&self) -> usize {
         self.nodes.len()

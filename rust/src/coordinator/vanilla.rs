@@ -10,11 +10,12 @@
 //! measured against.
 
 use super::node::NodeState;
-use super::DecentralizedAlgo;
+use super::{gradient_phase, DecentralizedAlgo};
 use crate::comm::Bus;
 use crate::graph::MixingMatrix;
 use crate::problems::GradientSource;
 use crate::schedule::LrSchedule;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 pub struct VanillaDecentralized {
@@ -23,6 +24,7 @@ pub struct VanillaDecentralized {
     pub momentum: f32,
     nodes: Vec<NodeState>,
     mixed: Vec<Vec<f32>>,
+    pool: ThreadPool,
 }
 
 impl VanillaDecentralized {
@@ -44,6 +46,7 @@ impl VanillaDecentralized {
             momentum,
             nodes,
             mixed: vec![vec![0.0; d]; n],
+            pool: ThreadPool::new(1),
         }
     }
 
@@ -60,41 +63,47 @@ impl DecentralizedAlgo for VanillaDecentralized {
         let d = self.nodes[0].x.len();
         let eta = self.lr.eta(t) as f32;
 
-        // Gradients at current params.
-        for (node_id, node) in self.nodes.iter_mut().enumerate() {
-            let x = std::mem::take(&mut node.x);
-            src.grad(node_id, &x, &mut node.rng, &mut node.grad);
-            node.x = x;
-        }
+        // Gradients at current params (no local half-step here — the
+        // gradient is applied after mixing below).
+        gradient_phase(&self.pool, &mut self.nodes, src, None);
 
-        // Exact neighbor averaging (everyone broadcasts x_i in full).
+        // Exact neighbor averaging (everyone broadcasts x_i in full) —
+        // each row reads the immutable parameter bank and writes only its
+        // own mixed buffer, so rows fan out on the pool.
         for i in 0..n {
             bus.charge_broadcast(i, self.mixing.topology.degree(i), 32 * d as u64);
-            let row = &mut self.mixed[i];
+        }
+        let pool = &self.pool;
+        let mixing = &self.mixing;
+        let nodes = &self.nodes;
+        pool.for_each_mut(&mut self.mixed, |i, row| {
             row.fill(0.0);
-            let wii = self.mixing.weight(i, i) as f32;
-            for (m, x) in row.iter_mut().zip(self.nodes[i].x.iter()) {
+            let wii = mixing.weight(i, i) as f32;
+            for (m, x) in row.iter_mut().zip(nodes[i].x.iter()) {
                 *m = wii * x;
             }
-            for &j in &self.mixing.topology.neighbors[i] {
-                let w = self.mixing.weight(i, j) as f32;
-                for (m, x) in row.iter_mut().zip(self.nodes[j].x.iter()) {
+            for &j in &mixing.topology.neighbors[i] {
+                let w = mixing.weight(i, j) as f32;
+                for (m, x) in row.iter_mut().zip(nodes[j].x.iter()) {
                     *m += w * x;
                 }
             }
-        }
+        });
 
-        // Commit: x_i = mixed_i − η·(momentum-adjusted gradient).
-        for (i, node) in self.nodes.iter_mut().enumerate() {
+        // Commit: x_i = mixed_i − η·(momentum-adjusted gradient) —
+        // per-node independent, parallel.
+        let momentum = self.momentum;
+        let mixed = &self.mixed;
+        self.pool.for_each_mut(&mut self.nodes, |i, node| {
             match node.momentum.as_mut() {
                 Some(m) => {
                     for ((x, mi), (g, mix)) in node
                         .x
                         .iter_mut()
                         .zip(m.iter_mut())
-                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                        .zip(node.grad.iter().zip(mixed[i].iter()))
                     {
-                        *mi = self.momentum * *mi + g;
+                        *mi = momentum * *mi + g;
                         *x = mix - eta * *mi;
                     }
                 }
@@ -102,13 +111,13 @@ impl DecentralizedAlgo for VanillaDecentralized {
                     for (x, (g, mix)) in node
                         .x
                         .iter_mut()
-                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                        .zip(node.grad.iter().zip(mixed[i].iter()))
                     {
                         *x = mix - eta * g;
                     }
                 }
             }
-        }
+        });
         bus.end_round();
     }
 
@@ -134,6 +143,9 @@ impl DecentralizedAlgo for VanillaDecentralized {
         }
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.pool = ThreadPool::new(workers);
+    }
 
     fn n(&self) -> usize {
         self.nodes.len()

@@ -129,6 +129,7 @@ pub fn run_config(cfg: &ExperimentConfig, verbose: bool) -> Series {
         steps: cfg.steps,
         eval_every: cfg.eval_every,
         verbose,
+        workers: cfg.workers,
     };
     let mut series = run(algo.as_mut(), problem.as_mut(), &opts);
     series.label = format!("{}:{}", cfg.name, algo.name());

@@ -11,6 +11,7 @@
 //!
 //! Examples:
 //!   sparq train --algo sparq --nodes 8 --steps 2000 --problem quadratic:64
+//!   sparq train --workers 8 --nodes 16 --problem quadratic:4096
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
 
@@ -77,6 +78,7 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
     cfg.eval_every = args.u64("eval-every", cfg.eval_every);
     cfg.momentum = args.f64("momentum", cfg.momentum);
     cfg.seed = args.u64("seed", cfg.seed);
+    cfg.workers = args.usize("workers", cfg.workers);
     cfg
 }
 

@@ -247,6 +247,16 @@ impl GradientSource for MlpProblem {
     }
 
     fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.grad_shared(node, x, rng, out)
+    }
+
+    fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+        // Batch sampling and backprop are pure in `&self` (the batch is
+        // gathered into fresh buffers), so nodes can evaluate in parallel.
+        Some(self)
+    }
+
+    fn grad_shared(&self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
         let (xs, ys) = self.partition.batch(node, self.batch, rng);
         self.grad_batch(x, &xs, &ys, out)
     }

@@ -35,6 +35,24 @@ pub trait GradientSource {
     /// loss. `rng` supplies the sampling randomness (ξ_i^{(t)}).
     fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64;
 
+    /// Shared-state handle enabling the coordinator's parallel gradient
+    /// phase: return `Some(self)` when per-node evaluation is pure in
+    /// `&self` (the `Sync` bound makes the compiler enforce
+    /// thread-safety — sources with non-`Sync` internals cannot
+    /// accidentally opt in). Sources that mutate internal scratch during
+    /// evaluation keep the `None` default and run sequentially.
+    fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+        None
+    }
+
+    /// Like [`grad`] but through a shared reference — reachable only via
+    /// [`shared`]. Implementations must produce the exact same values and
+    /// draw identically from `rng`, so parallel and sequential runs
+    /// replay bit-for-bit.
+    fn grad_shared(&self, _node: usize, _x: &[f32], _rng: &mut Rng, _out: &mut [f32]) -> f64 {
+        panic!("grad_shared called on a source without shared-state support")
+    }
+
     /// Global objective f(x) (deterministic, for metrics).
     fn global_loss(&mut self, x: &[f32]) -> f64;
 

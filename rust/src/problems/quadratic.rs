@@ -92,6 +92,21 @@ impl QuadraticProblem {
     pub fn suboptimality(&self, x: &[f32]) -> f64 {
         self.loss_at(x) - self.f_star
     }
+
+    /// The gradient evaluation itself is pure in the problem state (only
+    /// `rng` advances), so both [`GradientSource::grad`] and the
+    /// concurrent [`GradientSource::grad_shared`] route here.
+    fn grad_at(&self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        let base = node * self.d;
+        let mut loss = 0.0f64;
+        for j in 0..self.d {
+            let aij = self.a[base + j];
+            let diff = x[j] - self.t[base + j];
+            out[j] = aij * diff + self.noise_sigma * rng.normal_f32();
+            loss += 0.5 * (aij as f64) * (diff as f64) * (diff as f64);
+        }
+        loss
+    }
 }
 
 impl GradientSource for QuadraticProblem {
@@ -104,15 +119,15 @@ impl GradientSource for QuadraticProblem {
     }
 
     fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
-        let base = node * self.d;
-        let mut loss = 0.0f64;
-        for j in 0..self.d {
-            let aij = self.a[base + j];
-            let diff = x[j] - self.t[base + j];
-            out[j] = aij * diff + self.noise_sigma * rng.normal_f32();
-            loss += 0.5 * (aij as f64) * (diff as f64) * (diff as f64);
-        }
-        loss
+        self.grad_at(node, x, rng, out)
+    }
+
+    fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+        Some(self)
+    }
+
+    fn grad_shared(&self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.grad_at(node, x, rng, out)
     }
 
     fn global_loss(&mut self, x: &[f32]) -> f64 {

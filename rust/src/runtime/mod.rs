@@ -5,9 +5,27 @@
 //! loads those files through the `xla` crate's PJRT CPU client, validates
 //! them against `artifacts/manifest.json`, and exposes typed executors.
 //! Python never runs on the training path.
+//!
+//! The real client (`client.rs`/`model.rs`) needs the external `xla` and
+//! `anyhow` crates, which are not vendored in this offline environment —
+//! they are compiled only under the `pjrt` cargo feature (after adding
+//! those dependencies to Cargo.toml). Without the feature, API-identical
+//! stubs compile instead whose `Runtime::new` always reports
+//! "unavailable", so every artifact-backed test and example skips exactly
+//! as it does when `artifacts/` has not been built.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod model;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "model_stub.rs"]
 pub mod model;
 
 pub use artifact::{ArtifactSig, Manifest};

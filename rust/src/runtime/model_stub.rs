@@ -1,0 +1,88 @@
+//! Dependency-free stand-in for the artifact-backed gradient sources
+//! (`model.rs`), compiled when the `pjrt` feature is off.
+//!
+//! Constructors take a [`Runtime`] by value; since the stub `Runtime` is
+//! unconstructible, every body discharges through its `Infallible` member
+//! — the types exist purely so consumers typecheck.
+
+use std::convert::Infallible;
+
+use super::client::Runtime;
+use crate::data::corpus::LmBatcher;
+use crate::data::{Dataset, Partition};
+use crate::problems::GradientSource;
+use crate::util::Rng;
+
+/// Classification model (logreg / MLP) executed through PJRT.
+pub struct PjrtModel {
+    pub dim: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub(crate) never: Infallible,
+}
+
+impl PjrtModel {
+    /// `base` is "logreg" or "mlp" (expects `<base>_grad` + `<base>_eval`).
+    pub fn new(
+        rt: Runtime,
+        _base: &str,
+        _partition: Partition,
+        _test: Dataset,
+    ) -> Result<PjrtModel, String> {
+        match rt.never {}
+    }
+}
+
+impl GradientSource for PjrtModel {
+    fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    fn n_nodes(&self) -> usize {
+        match self.never {}
+    }
+
+    fn grad(&mut self, _node: usize, _x: &[f32], _rng: &mut Rng, _out: &mut [f32]) -> f64 {
+        match self.never {}
+    }
+
+    fn global_loss(&mut self, _x: &[f32]) -> f64 {
+        match self.never {}
+    }
+
+    fn test_error(&mut self, _x: &[f32]) -> Option<f64> {
+        match self.never {}
+    }
+}
+
+/// Transformer byte-LM through PJRT, one corpus shard per node.
+pub struct PjrtLm {
+    pub dim: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub(crate) never: Infallible,
+}
+
+impl PjrtLm {
+    pub fn new(rt: Runtime, _shards: Vec<LmBatcher>, _eval_seed: u64) -> Result<PjrtLm, String> {
+        match rt.never {}
+    }
+}
+
+impl GradientSource for PjrtLm {
+    fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    fn n_nodes(&self) -> usize {
+        match self.never {}
+    }
+
+    fn grad(&mut self, _node: usize, _x: &[f32], _rng: &mut Rng, _out: &mut [f32]) -> f64 {
+        match self.never {}
+    }
+
+    fn global_loss(&mut self, _x: &[f32]) -> f64 {
+        match self.never {}
+    }
+}

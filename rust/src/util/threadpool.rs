@@ -1,10 +1,13 @@
 //! Minimal scoped thread pool (tokio/rayon are unavailable offline).
 //!
-//! The coordinator's gradient phase is embarrassingly parallel across
-//! nodes; [`ThreadPool::scope_chunks`] fans a slice of independent work
-//! items out to worker threads and joins before returning — the
-//! synchronous-algorithm semantics (and bit-for-bit determinism, since
-//! every node owns its RNG) are preserved regardless of worker count.
+//! The coordinator's per-node phases (gradient/local-step, trigger check
+//! + compress, consensus commit) are embarrassingly parallel across
+//! nodes; [`ThreadPool::for_each_mut`] hands whole `NodeState`s out to
+//! worker threads and [`ThreadPool::parallel_for`] covers index ranges,
+//! both joining before returning — the synchronous-algorithm semantics
+//! (and bit-for-bit determinism, since every node owns its RNG and all
+//! cross-node writes stay on the sequential path) are preserved
+//! regardless of worker count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;

@@ -112,6 +112,7 @@ fn vanilla_and_choco_and_sparq_all_run_via_builder() {
                 steps: cfg.steps,
                 eval_every: cfg.eval_every,
                 verbose: false,
+                workers: 1,
             },
         );
         let last = series.records.last().unwrap();
@@ -234,6 +235,7 @@ fn pjrt_logreg_training_short_run() {
             steps: cfg.steps,
             eval_every: cfg.eval_every,
             verbose: false,
+            workers: 1,
         },
     );
     let first = &series.records[0];
