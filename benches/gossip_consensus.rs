@@ -5,7 +5,7 @@
 
 use sparq::comm::Bus;
 use sparq::compress::SignTopK;
-use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::coordinator::{DecentralizedAlgo, DecentralizedEngine, SparqConfig, SparqSgd};
 use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
 use sparq::problems::{GradientSource, QuadraticProblem};
 use sparq::schedule::{LrSchedule, SyncSchedule};
@@ -43,7 +43,7 @@ impl GradientSource for NullGrad {
     }
 }
 
-fn mk(n: usize, d: usize, h: u64, always_fire: bool) -> SparqSgd {
+fn mk(n: usize, d: usize, h: u64, always_fire: bool) -> DecentralizedEngine {
     let topo = Topology::new(TopologyKind::Ring, n, 0);
     SparqSgd::new(
         SparqConfig {

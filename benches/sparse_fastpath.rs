@@ -19,7 +19,7 @@
 
 use sparq::comm::Bus;
 use sparq::compress::{Compressor, SignTopK};
-use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::coordinator::{DecentralizedAlgo, DecentralizedEngine, SparqConfig, SparqSgd};
 use sparq::graph::{uniform_neighbor, MixingMatrix, SpectralInfo, Topology, TopologyKind};
 use sparq::linalg::vecops::{scale_add, sub_into};
 use sparq::problems::GradientSource;
@@ -155,7 +155,7 @@ impl DenseSequentialBaseline {
     }
 }
 
-fn mk_sparq(workers: usize) -> SparqSgd {
+fn mk_sparq(workers: usize) -> DecentralizedEngine {
     let topo = Topology::new(TopologyKind::Ring, N, 0);
     let mut algo = SparqSgd::new(
         SparqConfig {

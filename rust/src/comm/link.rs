@@ -1,0 +1,222 @@
+//! Link-level fault models for the simulated graph.
+//!
+//! The seed `Bus` was a perfect synchronous fabric: every broadcast
+//! reached every neighbor, every round. Real decentralized deployments
+//! (the EventGraD [GHG21] setting) face two failure axes the algorithms
+//! must tolerate:
+//!
+//! * **message drop** — each (sender, receiver) copy of a broadcast is
+//!   lost independently with probability p (`drop:p`);
+//! * **stragglers** — a configured node misses whole sync rounds with
+//!   probability p (`straggler:i:p`), behaving as if its trigger had not
+//!   fired (nothing transmitted, nothing charged, drift persists).
+//!
+//! Faults are *stateless and seeded*: every coin is a splitmix64 hash of
+//! `(seed, kind, endpoints, t)`, so outcomes are reproducible, independent
+//! of evaluation order, and — critically — bit-for-bit identical across
+//! worker-thread counts (the engine's parallel phases may consult the
+//! model from any thread without sharing RNG state).
+//!
+//! Bits are charged only for *delivered* copies: a broadcast that loses
+//! `k` of its `deg` copies costs `(deg − k) · message_bits` on the bus.
+//! The default [`LinkModel::ideal`] short-circuits every check, so
+//! configurations without a `link` spec reproduce the seed behavior
+//! exactly.
+
+use crate::util::rng::splitmix64;
+
+/// Domain-separation tags so drop and straggler coins never collide.
+const TAG_DROP: u64 = 0x4C49_4E4B_4452_4F50; // "LINKDROP"
+const TAG_STRAGGLE: u64 = 0x4C49_4E4B_5354_5247; // "LINKSTRG"
+
+/// Seeded link-fault model. Plain data — cloning or sharing across
+/// threads is free, and identical configurations always produce
+/// identical fault patterns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Per-copy drop probability in [0, 1).
+    pub drop_p: f64,
+    /// (node, skip probability) straggler list.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Fault-stream seed (independent of the model/data seeds).
+    pub seed: u64,
+}
+
+impl LinkModel {
+    /// The loss-free default: no drops, no stragglers.
+    pub fn ideal() -> LinkModel {
+        LinkModel {
+            drop_p: 0.0,
+            stragglers: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    /// True when no fault can ever occur (the engine takes the seed fast
+    /// path: one `charge_broadcast` per sender, no per-edge coins).
+    pub fn is_ideal(&self) -> bool {
+        self.drop_p == 0.0 && self.stragglers.is_empty()
+    }
+
+    /// Parse a link spec: `none`, `drop:P`, `straggler:I:P`, or several
+    /// segments joined with `+` (e.g. `drop:0.1+straggler:0:0.5`).
+    pub fn parse(spec: &str, seed: u64) -> Result<LinkModel, String> {
+        let mut model = LinkModel {
+            seed: seed ^ 0x96C3_A4F1_0D5B_7E29,
+            ..LinkModel::ideal()
+        };
+        if spec.is_empty() || spec == "none" || spec == "ideal" {
+            return Ok(model);
+        }
+        for seg in spec.split('+') {
+            let parts: Vec<&str> = seg.split(':').collect();
+            match parts.as_slice() {
+                ["drop", p] => {
+                    let p: f64 = p
+                        .parse()
+                        .map_err(|_| format!("drop probability {p:?} is not a number"))?;
+                    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                        return Err(format!("drop probability must be in [0, 1), got {p}"));
+                    }
+                    model.drop_p = p;
+                }
+                ["straggler", i, p] => {
+                    let i: usize = i
+                        .parse()
+                        .map_err(|_| format!("straggler node {i:?} is not an index"))?;
+                    let p: f64 = p
+                        .parse()
+                        .map_err(|_| format!("straggler probability {p:?} is not a number"))?;
+                    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                        return Err(format!(
+                            "straggler probability must be in [0, 1), got {p}"
+                        ));
+                    }
+                    model.stragglers.push((i, p));
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown link segment {seg:?}; expected none, drop:P, or straggler:I:P"
+                    ))
+                }
+            }
+        }
+        Ok(model)
+    }
+
+    /// One seeded coin: uniform in [0, 1) from a hash of the arguments.
+    fn coin(&self, tag: u64, a: u64, b: u64, t: u64) -> f64 {
+        let mut s = self
+            .seed
+            .wrapping_add(tag)
+            .wrapping_add(a.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(b.wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add(t.wrapping_mul(0x1656_67B1_9E37_79F9));
+        (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Does node `i` sit out the sync round at iteration t?
+    pub fn straggles(&self, i: usize, t: u64) -> bool {
+        self.stragglers
+            .iter()
+            .any(|&(node, p)| node == i && self.coin(TAG_STRAGGLE, i as u64, 0, t) < p)
+    }
+
+    /// Is the `from → to` copy of iteration t's broadcast delivered?
+    pub fn delivers(&self, from: usize, to: usize, t: u64) -> bool {
+        self.drop_p == 0.0 || self.coin(TAG_DROP, from as u64, to as u64, t) >= self.drop_p
+    }
+
+    /// Human-readable spec (round-trips through [`parse`] semantics).
+    pub fn describe(&self) -> String {
+        if self.is_ideal() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if self.drop_p > 0.0 {
+            parts.push(format!("drop:{}", self.drop_p));
+        }
+        for &(i, p) in &self.stragglers {
+            parts.push(format!("straggler:{i}:{p}"));
+        }
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_never_faults() {
+        let m = LinkModel::ideal();
+        assert!(m.is_ideal());
+        for t in 0..50 {
+            assert!(m.delivers(0, 1, t));
+            assert!(!m.straggles(0, t));
+        }
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(LinkModel::parse("none", 1).unwrap().is_ideal());
+        assert!(LinkModel::parse("", 1).unwrap().is_ideal());
+        let m = LinkModel::parse("drop:0.25", 1).unwrap();
+        assert_eq!(m.drop_p, 0.25);
+        let m = LinkModel::parse("drop:0.1+straggler:3:0.5", 1).unwrap();
+        assert_eq!(m.drop_p, 0.1);
+        assert_eq!(m.stragglers, vec![(3, 0.5)]);
+        assert_eq!(m.describe(), "drop:0.1+straggler:3:0.5");
+        assert!(LinkModel::parse("drop:1.5", 1).is_err());
+        assert!(LinkModel::parse("drop:-0.1", 1).is_err());
+        assert!(LinkModel::parse("straggler:0:2", 1).is_err());
+        assert!(LinkModel::parse("wat:1", 1).is_err());
+    }
+
+    #[test]
+    fn drops_are_deterministic_and_order_free() {
+        let m = LinkModel::parse("drop:0.3", 7).unwrap();
+        let pattern: Vec<bool> = (0..200)
+            .map(|t| m.delivers(t as usize % 5, (t as usize + 1) % 5, t))
+            .collect();
+        // same model, queries in reverse order — identical outcomes
+        let m2 = LinkModel::parse("drop:0.3", 7).unwrap();
+        let reversed: Vec<bool> = (0..200)
+            .rev()
+            .map(|t| m2.delivers(t as usize % 5, (t as usize + 1) % 5, t))
+            .collect();
+        let mut fwd = pattern.clone();
+        fwd.reverse();
+        assert_eq!(fwd, reversed);
+        // and the empirical rate is in the right ballpark
+        let delivered = pattern.iter().filter(|&&b| b).count();
+        assert!((110..=170).contains(&delivered), "delivered {delivered}/200");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = LinkModel::parse("drop:0.5", 1).unwrap();
+        let b = LinkModel::parse("drop:0.5", 2).unwrap();
+        let pa: Vec<bool> = (0..64).map(|t| a.delivers(0, 1, t)).collect();
+        let pb: Vec<bool> = (0..64).map(|t| b.delivers(0, 1, t)).collect();
+        assert_ne!(pa, pb);
+    }
+
+    #[test]
+    fn straggler_only_affects_configured_node() {
+        let m = LinkModel::parse("straggler:2:0.9", 5).unwrap();
+        assert!((0..100).all(|t| !m.straggles(0, t)));
+        let skipped = (0..100).filter(|&t| m.straggles(2, t)).count();
+        assert!(skipped > 70, "straggler skipped only {skipped}/100");
+        // drops unaffected by a straggler-only model
+        assert!((0..100).all(|t| m.delivers(2, 3, t)));
+    }
+
+    #[test]
+    fn edge_directions_are_independent_coins() {
+        let m = LinkModel::parse("drop:0.5", 11).unwrap();
+        let fwd: Vec<bool> = (0..64).map(|t| m.delivers(0, 1, t)).collect();
+        let rev: Vec<bool> = (0..64).map(|t| m.delivers(1, 0, t)).collect();
+        assert_ne!(fwd, rev);
+    }
+}

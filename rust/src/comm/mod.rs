@@ -19,7 +19,10 @@
 //! fixed-slot wire formats (dense operators, QsgdTopK) charge their
 //! nominal cost regardless of stored nonzeros.
 
+pub mod link;
 pub mod wire;
+
+pub use link::LinkModel;
 
 /// Per-round and cumulative communication accounting.
 #[derive(Clone, Debug, Default)]

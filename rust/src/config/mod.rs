@@ -39,6 +39,15 @@ pub struct ExperimentConfig {
     pub algo: Algo,
     pub nodes: usize,
     pub topology: String,
+    /// Time-varying topology spec (`graph::dynamic::TopologySchedule`):
+    /// "static" (default — use `topology` unchanged),
+    /// "switch:K1,K2,...:P", or "sample:BASE:M". Non-static specs name
+    /// their own graphs and take precedence over `topology`, which is
+    /// then ignored.
+    pub topology_schedule: String,
+    /// Link-fault spec (`comm::link::LinkModel`): "none" (default),
+    /// "drop:P", "straggler:I:P", joined with '+'.
+    pub link: String,
     pub compressor: String,
     pub trigger: String,
     pub lr: String,
@@ -66,6 +75,8 @@ impl Default for ExperimentConfig {
             algo: Algo::Sparq,
             nodes: 8,
             topology: "ring".into(),
+            topology_schedule: "static".into(),
+            link: "none".into(),
             compressor: "sign_topk:10%".into(),
             trigger: "const:100".into(),
             lr: "invtime:100:1".into(),
@@ -88,6 +99,8 @@ impl ExperimentConfig {
             .set("algo", self.algo.as_str())
             .set("nodes", self.nodes)
             .set("topology", self.topology.as_str())
+            .set("topology_schedule", self.topology_schedule.as_str())
+            .set("link", self.link.as_str())
             .set("compressor", self.compressor.as_str())
             .set("trigger", self.trigger.as_str())
             .set("lr", self.lr.as_str())
@@ -101,33 +114,97 @@ impl ExperimentConfig {
             .set("workers", self.workers)
     }
 
+    /// Every key `from_json` understands (used for typo rejection).
+    pub const KEYS: &[&str] = &[
+        "name",
+        "algo",
+        "nodes",
+        "topology",
+        "topology_schedule",
+        "link",
+        "compressor",
+        "trigger",
+        "lr",
+        "h",
+        "steps",
+        "eval_every",
+        "momentum",
+        "seed",
+        "problem",
+        "gamma",
+        "workers",
+    ];
+
     pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| "config must be a JSON object".to_string())?;
+        // Reject unknown keys: a typo ("trigerr") must not silently fall
+        // back to the default schedule.
+        for key in obj.keys() {
+            if !Self::KEYS.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown config key {key:?}; valid keys: {}",
+                    Self::KEYS.join(", ")
+                ));
+            }
+        }
         let base = ExperimentConfig::default();
-        let s = |k: &str, dflt: &str| -> String {
-            j.get(k)
-                .and_then(Json::as_str)
-                .unwrap_or(dflt)
-                .to_string()
+        let s = |k: &str, dflt: &str| -> Result<String, String> {
+            match j.get(k) {
+                None => Ok(dflt.to_string()),
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("config key {k:?} must be a string")),
+            }
         };
-        let u = |k: &str, dflt: u64| j.get(k).and_then(Json::as_f64).map(|x| x as u64).unwrap_or(dflt);
-        let f = |k: &str, dflt: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dflt);
-        let algo_s = s("algo", base.algo.as_str());
+        // Unsigned integer fields: error on negatives instead of wrapping
+        // through `as u64` (e.g. "steps": -100 used to become 2^64 − 100…
+        // truncated — either way nonsense).
+        let u = |k: &str, dflt: u64| -> Result<u64, String> {
+            match j.get(k) {
+                None => Ok(dflt),
+                Some(v) => {
+                    let x = v
+                        .as_f64()
+                        .ok_or_else(|| format!("config key {k:?} must be a number"))?;
+                    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+                        return Err(format!(
+                            "config key {k:?} must be a non-negative integer, got {x}"
+                        ));
+                    }
+                    Ok(x as u64)
+                }
+            }
+        };
+        let f = |k: &str, dflt: f64| -> Result<f64, String> {
+            match j.get(k) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("config key {k:?} must be a number")),
+            }
+        };
+        let algo_s = s("algo", base.algo.as_str())?;
         Ok(ExperimentConfig {
-            name: s("name", &base.name),
+            name: s("name", &base.name)?,
             algo: Algo::parse(&algo_s).ok_or(format!("unknown algo {algo_s:?}"))?,
-            nodes: u("nodes", base.nodes as u64) as usize,
-            topology: s("topology", &base.topology),
-            compressor: s("compressor", &base.compressor),
-            trigger: s("trigger", &base.trigger),
-            lr: s("lr", &base.lr),
-            h: u("h", base.h),
-            steps: u("steps", base.steps),
-            eval_every: u("eval_every", base.eval_every),
-            momentum: f("momentum", base.momentum),
-            seed: u("seed", base.seed),
-            problem: s("problem", &base.problem),
-            gamma: f("gamma", base.gamma),
-            workers: u("workers", base.workers as u64) as usize,
+            nodes: u("nodes", base.nodes as u64)? as usize,
+            topology: s("topology", &base.topology)?,
+            topology_schedule: s("topology_schedule", &base.topology_schedule)?,
+            link: s("link", &base.link)?,
+            compressor: s("compressor", &base.compressor)?,
+            trigger: s("trigger", &base.trigger)?,
+            lr: s("lr", &base.lr)?,
+            h: u("h", base.h)?,
+            steps: u("steps", base.steps)?,
+            eval_every: u("eval_every", base.eval_every)?,
+            momentum: f("momentum", base.momentum)?,
+            seed: u("seed", base.seed)?,
+            problem: s("problem", &base.problem)?,
+            gamma: f("gamma", base.gamma)?,
+            workers: u("workers", base.workers as u64)? as usize,
         })
     }
 
@@ -150,6 +227,8 @@ pub mod presets {
             algo: Algo::Sparq,
             nodes: 60,
             topology: "ring".into(),
+            topology_schedule: "static".into(),
+            link: "none".into(),
             compressor: "sign_topk:10".into(),
             trigger: "const:5000".into(),
             lr: "invtime:100:1".into(),
@@ -172,6 +251,8 @@ pub mod presets {
             algo: Algo::Sparq,
             nodes: 8,
             topology: "ring".into(),
+            topology_schedule: "static".into(),
+            link: "none".into(),
             compressor: "sign_topk:10%".into(),
             trigger: format!("piecewise:2.0:1.0:10:60:{steps_per_epoch}"),
             lr: format!("warmup:0.05:5:5:{steps_per_epoch}:150,250"),
@@ -212,6 +293,61 @@ mod tests {
     fn rejects_bad_algo() {
         let j = Json::parse(r#"{"algo": "magic"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_listing() {
+        let j = Json::parse(r#"{"trigerr": "const:100"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("trigerr"), "{err}");
+        assert!(err.contains("trigger"), "listing missing: {err}");
+        // non-object top level is an error too
+        let j = Json::parse("[1, 2]").unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_negative_unsigned_fields() {
+        for bad in [
+            r#"{"steps": -100}"#,
+            r#"{"nodes": -1}"#,
+            r#"{"h": -5}"#,
+            r#"{"seed": -3}"#,
+            r#"{"workers": -2}"#,
+            r#"{"eval_every": -1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let err = ExperimentConfig::from_json(&j).unwrap_err();
+            assert!(err.contains("non-negative"), "{bad}: {err}");
+        }
+        // fractional values must not silently truncate through `as u64`
+        let j = Json::parse(r#"{"steps": 2.9}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"steps": 100.0}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().steps, 100);
+        // momentum/gamma are f64 fields — negatives there are allowed by
+        // the parser (semantics are checked downstream)
+        let j = Json::parse(r#"{"momentum": -0.5}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn rejects_wrong_types() {
+        let j = Json::parse(r#"{"steps": "many"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"trigger": 5}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn new_scenario_fields_roundtrip() {
+        let cfg = ExperimentConfig {
+            topology_schedule: "switch:ring,torus:500".into(),
+            link: "drop:0.1+straggler:0:0.5".into(),
+            ..Default::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
     }
 
     #[test]

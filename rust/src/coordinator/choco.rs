@@ -3,38 +3,20 @@
 //!
 //! CHOCO is SPARQ without the two communication-saving mechanisms: every
 //! iteration is a sync round (H = 1) and every node always transmits its
-//! compressed difference (no event trigger). The update is otherwise the
-//! same estimate-tracking + consensus scheme, so this implementation is a
-//! thin deterministic wrapper over the same primitives — and the
-//! `sparq_equals_choco` test pins the equivalence SPARQ(c_t=0, H=1) ≡
-//! CHOCO on identical seeds.
+//! compressed difference (no event trigger). In engine terms (see
+//! [`engine`](super::engine)): [`AlwaysComm`] comm policy +
+//! [`EstimateTracking`] update rule + the configured compressor — the
+//! *same* update rule as SPARQ, so the degenerate-case equivalence
+//! SPARQ(c_t = 0, H = 1) ≡ CHOCO is structural, not mirrored code (the
+//! `sparq_degenerates_to_choco_exactly` test still pins it bit-for-bit).
 
-use super::consensus::NeighborAccumulator;
-use super::node::NodeState;
-use super::{gradient_phase, DecentralizedAlgo};
-use crate::comm::Bus;
+use super::engine::{AlwaysComm, DecentralizedEngine, EngineConfig, EstimateTracking};
 use crate::compress::Compressor;
-use crate::graph::{MixingMatrix, SpectralInfo};
-use crate::linalg::vecops::sub_into;
-use crate::problems::GradientSource;
+use crate::graph::MixingMatrix;
 use crate::schedule::LrSchedule;
-use crate::util::threadpool::ThreadPool;
-use crate::util::Rng;
 
-pub struct ChocoSgd {
-    pub mixing: MixingMatrix,
-    pub compressor: Box<dyn Compressor>,
-    pub lr: LrSchedule,
-    pub gamma: f64,
-    pub momentum: f32,
-    nodes: Vec<NodeState>,
-    xhat: Vec<Vec<f32>>,
-    /// Same sparse consensus machinery as SPARQ (consensus.rs) — the phase
-    /// structure below mirrors sparq.rs exactly so the degenerate-case
-    /// equivalence SPARQ(c_t=0, H=1) ≡ CHOCO stays bit-for-bit.
-    nbr: NeighborAccumulator,
-    pool: ThreadPool,
-}
+/// Thin constructor: CHOCO-SGD as a [`DecentralizedEngine`] composition.
+pub struct ChocoSgd;
 
 impl ChocoSgd {
     pub fn new(
@@ -44,119 +26,36 @@ impl ChocoSgd {
         momentum: f32,
         d: usize,
         seed: u64,
-    ) -> ChocoSgd {
-        let n = mixing.n();
-        let spectral = SpectralInfo::compute(&mixing);
-        let gamma =
-            spectral.gamma_tuned(compressor.omega(d), compressor.effective_omega(d));
-        let mut root = Rng::new(seed);
-        let nodes = (0..n)
-            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
-            .collect();
-        let nbr = NeighborAccumulator::new(&mixing, d);
-        ChocoSgd {
-            mixing,
-            compressor,
-            lr,
-            gamma,
-            momentum,
-            nodes,
-            xhat: vec![vec![0.0; d]; n],
-            nbr,
-            pool: ThreadPool::new(1),
-        }
-    }
-
-    pub fn init_params(&mut self, x0: &[f32]) {
-        for node in self.nodes.iter_mut() {
-            node.x.copy_from_slice(x0);
-        }
-    }
-}
-
-impl DecentralizedAlgo for ChocoSgd {
-    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
-        let n = self.nodes.len();
-        let eta = self.lr.eta(t) as f32;
-
-        gradient_phase(&self.pool, &mut self.nodes, src, Some((eta, self.momentum)));
-
-        // Every node transmits every round (the CHOCO contract):
-        // compress in parallel, then apply in deterministic node order.
-        let pool = &self.pool;
-        let compressor = &*self.compressor;
-        let xhat = &self.xhat;
-        pool.for_each_mut(&mut self.nodes, |i, node| {
-            sub_into(&node.x_half, &xhat[i], &mut node.diff);
-            compressor.compress_sparse(&node.diff, &mut node.rng, &mut node.q);
-        });
-
-        let d = self.xhat[0].len();
-        for i in 0..n {
-            let q = &self.nodes[i].q;
-            let bits = self.compressor.message_bits(d, q.nnz());
-            bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
-            q.add_to(&mut self.xhat[i]);
-            self.nbr.apply_broadcast(i, q);
-        }
-
-        let gamma = self.gamma as f32;
-        let xhat = &self.xhat;
-        let nbr = &self.nbr;
-        self.pool.for_each_mut(&mut self.nodes, |i, node| {
-            std::mem::swap(&mut node.x, &mut node.x_half);
-            nbr.commit(i, gamma, &xhat[i], &mut node.x);
-        });
-        bus.end_round();
-    }
-
-    fn params(&self, node: usize) -> &[f32] {
-        &self.nodes[node].x
-    }
-
-    fn set_params(&mut self, x0: &[f32]) {
-        self.init_params(x0);
-    }
-
-    fn set_node_params(&mut self, node: usize, x: &[f32]) {
-        self.nodes[node].x.copy_from_slice(x);
-    }
-
-    fn momentum(&self, node: usize) -> Option<&[f32]> {
-        self.nodes[node].momentum.as_deref()
-    }
-
-    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
-        if let Some(buf) = self.nodes[node].momentum.as_mut() {
-            buf.copy_from_slice(m);
-        }
-    }
-
-    fn set_workers(&mut self, workers: usize) {
-        self.pool = ThreadPool::new(workers);
-    }
-
-    fn n(&self) -> usize {
-        self.nodes.len()
-    }
-
-    fn last_fired(&self) -> usize {
-        self.nodes.len() // everyone transmits
-    }
-
-    fn name(&self) -> String {
-        format!("choco(C={})", self.compressor.name())
+    ) -> DecentralizedEngine {
+        let name = format!("choco(C={})", compressor.name());
+        let rule = EstimateTracking::new(&mixing, d);
+        DecentralizedEngine::new(
+            EngineConfig {
+                mixing,
+                compressor,
+                comm: Box::new(AlwaysComm),
+                rule: Box::new(rule),
+                gamma: None,
+                lr,
+                momentum,
+                seed,
+                name,
+            },
+            d,
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Bus;
     use crate::compress::{SignL1, SignTopK, TopK};
+    use crate::coordinator::DecentralizedAlgo;
     use crate::graph::{uniform_neighbor, Topology, TopologyKind};
     use crate::problems::QuadraticProblem;
 
-    fn mk(comp: Box<dyn Compressor>) -> (ChocoSgd, QuadraticProblem, Bus) {
+    fn mk(comp: Box<dyn Compressor>) -> (DecentralizedEngine, QuadraticProblem, Bus) {
         let topo = Topology::new(TopologyKind::Ring, 8, 0);
         let mixing = uniform_neighbor(&topo);
         let algo = ChocoSgd::new(
@@ -180,6 +79,7 @@ mod tests {
         // 8 nodes × 10 rounds
         assert_eq!(bus.total_messages, 80);
         assert_eq!(bus.comm_rounds, 10);
+        assert_eq!(algo.last_fired(), 8);
     }
 
     #[test]

@@ -63,12 +63,51 @@ impl NeighborAccumulator {
         }
     }
 
+    /// Rebuild for a (possibly different) mixing matrix from the current
+    /// estimate bank: acc_i = Σ_{j∈N(i)} w_ij x̂_j recomputed densely.
+    /// Called when a `TopologySchedule` switches the graph mid-run — one
+    /// O(edges · d) pass, after which incremental maintenance resumes on
+    /// the new edge set. With an all-zero bank this equals [`new`].
+    pub fn from_bank(mixing: &MixingMatrix, xhat: &[Vec<f32>]) -> NeighborAccumulator {
+        let d = xhat.first().map(Vec::len).unwrap_or(0);
+        let mut nbr = NeighborAccumulator::new(mixing, d);
+        for i in 0..mixing.n() {
+            for &j in &mixing.topology.neighbors[i] {
+                let w = mixing.weight(i, j) as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                crate::linalg::vecops::axpy(w, &xhat[j], &mut nbr.acc[i]);
+            }
+        }
+        nbr
+    }
+
     /// Node `from` broadcast sparse update `q` (x̂_from ← x̂_from + q):
     /// move every receiver's accumulator by w_{i,from} · q. O(nnz · deg).
     pub fn apply_broadcast(&mut self, from: usize, q: &SparseVec) {
         for &(i, w) in &self.receivers[from] {
             q.add_scaled_to(w, &mut self.acc[i]);
         }
+    }
+
+    /// Like [`apply_broadcast`](Self::apply_broadcast), but only for the
+    /// receivers `deliver` accepts (lossy links — `comm::link`). Returns
+    /// how many copies were delivered, which is what the bus charges.
+    pub fn apply_broadcast_where(
+        &mut self,
+        from: usize,
+        q: &SparseVec,
+        mut deliver: impl FnMut(usize) -> bool,
+    ) -> usize {
+        let mut delivered = 0;
+        for &(i, w) in &self.receivers[from] {
+            if deliver(i) {
+                q.add_scaled_to(w, &mut self.acc[i]);
+                delivered += 1;
+            }
+        }
+        delivered
     }
 
     /// Fused consensus commit for node i: x += γ (acc_i − wsum_i · x̂_i).
@@ -180,6 +219,60 @@ mod tests {
             let expect = (1.0 - mixing.weight(i, i)) as f32;
             assert!((nbr.wsum(i) - expect).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn from_bank_matches_incremental_accumulation() {
+        let d = 16;
+        let topo = Topology::new(TopologyKind::Torus, 9, 0);
+        let mixing = uniform_neighbor(&topo);
+        let mut nbr = NeighborAccumulator::new(&mixing, d);
+        let mut xhat: Vec<Vec<f32>> = vec![vec![0.0; d]; 9];
+        let mut rng = Rng::new(7);
+        for _round in 0..10 {
+            for j in 0..9 {
+                let q = crate::compress::SparseVec::from_dense(&randvec(&mut rng, d));
+                q.add_to(&mut xhat[j]);
+                nbr.apply_broadcast(j, &q);
+            }
+        }
+        let rebuilt = NeighborAccumulator::from_bank(&mixing, &xhat);
+        for i in 0..9 {
+            assert!((rebuilt.wsum(i) - nbr.wsum(i)).abs() < 1e-6);
+            for c in 0..d {
+                assert!(
+                    (rebuilt.acc(i)[c] - nbr.acc(i)[c]).abs() < 1e-3,
+                    "node {i} coord {c}: {} vs {}",
+                    rebuilt.acc(i)[c],
+                    nbr.acc(i)[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_bank_on_zero_bank_equals_new() {
+        let topo = Topology::new(TopologyKind::Ring, 5, 0);
+        let mixing = uniform_neighbor(&topo);
+        let xhat = vec![vec![0.0f32; 6]; 5];
+        let rebuilt = NeighborAccumulator::from_bank(&mixing, &xhat);
+        for i in 0..5 {
+            assert!(rebuilt.acc(i).iter().all(|v| *v == 0.0));
+        }
+    }
+
+    #[test]
+    fn filtered_broadcast_only_reaches_accepted_receivers() {
+        let topo = Topology::new(TopologyKind::Complete, 4, 0);
+        let mixing = uniform_neighbor(&topo);
+        let mut nbr = NeighborAccumulator::new(&mixing, 4);
+        let q = crate::compress::SparseVec::from_dense(&[1.0, 0.0, 0.0, 2.0]);
+        let delivered = nbr.apply_broadcast_where(0, &q, |to| to != 2);
+        assert_eq!(delivered, 2); // receivers 1 and 3
+        assert!(nbr.acc(2).iter().all(|v| *v == 0.0));
+        let w = mixing.weight(1, 0) as f32;
+        assert!((nbr.acc(1)[0] - w * 1.0).abs() < 1e-7);
+        assert!((nbr.acc(3)[3] - w * 2.0).abs() < 1e-7);
     }
 
     #[test]

@@ -1,0 +1,1029 @@
+//! The unified decentralized engine.
+//!
+//! SPARQ-SGD, CHOCO-SGD, and D-PSGD are one algorithm family — local
+//! steps, an optional event trigger, a compression operator, and a gossip
+//! consensus step (Qsparse-local-SGD [BDKD19] makes the composition
+//! explicit). [`DecentralizedEngine`] implements the family once and is
+//! parameterized by two small policies plus the existing
+//! [`Compressor`]:
+//!
+//! * [`CommPolicy`] — *when* to synchronize and *which* nodes transmit.
+//!   [`Triggered`] (SPARQ: sync at I_T, fire on the drift threshold) and
+//!   [`AlwaysComm`] (CHOCO / vanilla: every round, every node).
+//! * [`UpdateRule`] — *what* a sync round does with the transmissions.
+//!   [`EstimateTracking`] (SPARQ/CHOCO: compressed estimate bank +
+//!   γ-consensus, Algorithm 1 lines 7–15) and [`ExactAveraging`]
+//!   (D-PSGD: full-precision neighbor averaging, gradient applied after
+//!   mixing).
+//!
+//! The former `sparq.rs` / `choco.rs` / `vanilla.rs` step loops are gone;
+//! those modules are now thin constructors over this engine, and the
+//! `engine_equivalence` integration suite pins that each constructor
+//! reproduces its seed coordinator bit-for-bit on fixed seeds.
+//!
+//! Two scenario layers the three bespoke loops could not express plug in
+//! here:
+//!
+//! * [`TopologySchedule`] (`graph::dynamic`) — the mixing matrix can
+//!   switch on a schedule or be re-sampled per round; on a switch the
+//!   update rule rebuilds its topology-derived state (the consensus
+//!   accumulator is reconstructed from the live estimate bank).
+//! * [`LinkModel`] (`comm::link`) — seeded per-edge message drops and
+//!   per-node stragglers, applied at broadcast time with bits charged
+//!   only for delivered copies.
+//!
+//! Defaults ([`LinkModel::ideal`], [`TopologySchedule::fixed`]) preserve
+//! the seed behavior exactly — the ideal-link broadcast path is the same
+//! sequence of float operations and bus charges as the seed coordinators.
+//!
+//! Execution structure (EXPERIMENTS.md §Perf): messages are sparse
+//! ([`crate::compress::SparseVec`]), the consensus step reads the
+//! materialized [`NeighborAccumulator`], and per-node phases run on a
+//! [`ThreadPool`] with bit-for-bit determinism for any worker count (all
+//! cross-node effects — broadcasts, link coins — happen on the
+//! sequential path or are stateless hashes).
+
+use std::cell::OnceCell;
+
+use super::consensus::NeighborAccumulator;
+use super::node::NodeState;
+use super::{gradient_phase, DecentralizedAlgo};
+use crate::comm::link::LinkModel;
+use crate::comm::Bus;
+use crate::compress::Compressor;
+use crate::graph::dynamic::TopologySchedule;
+use crate::graph::{MixingMatrix, SpectralInfo};
+use crate::linalg::vecops::sub_into;
+use crate::problems::GradientSource;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::EventTrigger;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// Policies
+// ---------------------------------------------------------------------
+
+/// When to synchronize and which nodes transmit (merges the seed's
+/// `SyncSchedule` + `EventTrigger` roles). Implementations are consulted
+/// from pool workers and must be stateless across calls.
+pub trait CommPolicy: Send + Sync {
+    /// Is iteration t a synchronization index ((t+1) ∈ I_T)?
+    fn is_sync(&self, t: u64) -> bool;
+
+    /// Does node `node` transmit at sync index t? Called once per node
+    /// per sync round, against the *pre-update* estimate `xhat_i`.
+    ///
+    /// Honored by estimate-tracking rules only: exact averaging has no
+    /// estimate bank for a drift threshold to compare against, so it
+    /// treats every sync round as all-transmit and is gated purely by
+    /// [`is_sync`](Self::is_sync) (plus link-model stragglers).
+    fn fires(&self, node: &NodeState, xhat_i: &[f32], t: u64, eta: f64) -> bool;
+}
+
+/// SPARQ-SGD's policy: sync every H (or explicit I_T), transmit only on
+/// drift `‖x^{t+½} − x̂‖² > c_t η_t²` (Algorithm 1 lines 5–7).
+pub struct Triggered {
+    pub sync: SyncSchedule,
+    pub trigger: EventTrigger,
+}
+
+impl CommPolicy for Triggered {
+    fn is_sync(&self, t: u64) -> bool {
+        self.sync.is_sync(t)
+    }
+
+    fn fires(&self, node: &NodeState, xhat_i: &[f32], t: u64, eta: f64) -> bool {
+        self.trigger.fires(&node.x_half, xhat_i, t, eta)
+    }
+}
+
+/// CHOCO-SGD's / D-PSGD's policy: every iteration is a sync round and
+/// every node transmits (H = 1, no trigger).
+pub struct AlwaysComm;
+
+impl CommPolicy for AlwaysComm {
+    fn is_sync(&self, _t: u64) -> bool {
+        true
+    }
+
+    fn fires(&self, _node: &NodeState, _xhat_i: &[f32], _t: u64, _eta: f64) -> bool {
+        true
+    }
+}
+
+/// Shared engine state handed to the update rule for one sync round.
+pub struct SyncCtx<'a> {
+    pub t: u64,
+    /// η_t (f64 — the trigger threshold compares in f64).
+    pub eta: f64,
+    /// Consensus step size γ (estimate tracking only).
+    pub gamma: f32,
+    pub momentum: f32,
+    pub mixing: &'a MixingMatrix,
+    pub comm: &'a dyn CommPolicy,
+    pub compressor: &'a dyn Compressor,
+    pub link: &'a LinkModel,
+    pub pool: &'a ThreadPool,
+}
+
+/// What a sync round does with the transmissions. Rules own their
+/// variant-specific state (estimate bank / mixing buffers) so the engine
+/// step loop stays variant-free.
+pub trait UpdateRule: Send {
+    /// Whether the gradient phase applies the local half-step *before*
+    /// communication (estimate tracking) or the rule applies the gradient
+    /// itself after mixing (exact averaging). Rules returning `false`
+    /// must be paired with an always-sync [`CommPolicy`], since non-sync
+    /// rounds commit nothing for them.
+    fn local_half_step(&self) -> bool;
+
+    /// Run the communication + parameter commit of one sync round.
+    /// Returns the number of nodes that actually transmitted.
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>, nodes: &mut [NodeState], bus: &mut Bus)
+        -> usize;
+
+    /// Rebuild topology-derived internal state after a mixing switch.
+    /// Rules that keep cross-round neighbor state must charge `bus` for
+    /// whatever exchange makes the rebuilt state physically realizable
+    /// (a node re-wired to a new neighbor has to *send* it x̂ before that
+    /// neighbor can track it — re-wiring is not free signalling).
+    fn rebuild(&mut self, mixing: &MixingMatrix, bus: &mut Bus);
+
+    /// The public estimate x̂_i, for rules that keep an estimate bank.
+    fn xhat(&self, _i: usize) -> Option<&[f32]> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Update rules
+// ---------------------------------------------------------------------
+
+/// CHOCO-style estimate tracking (Algorithm 1 lines 7–15): fired nodes
+/// broadcast q = C(x^{t+½} − x̂), every receiver applies it to its view
+/// of the sender's estimate, then x ← x^{t+½} + γ Σ w_ij (x̂_j − x̂_i).
+///
+/// With an ideal link every neighbor holds the *same* copy of x̂_j, so a
+/// single bank suffices (node.rs explains the reduction). Lossy links
+/// break that symmetry — receiver i's stale view of a dropped update
+/// lives implicitly in its accumulator row, which simply doesn't move
+/// for undelivered copies (the sender's own x̂ always advances).
+pub struct EstimateTracking {
+    /// Public estimates x̂_j (one authoritative copy per node).
+    xhat: Vec<Vec<f32>>,
+    /// Materialized Σ_j w_ij x̂_j per node (consensus.rs).
+    nbr: NeighborAccumulator,
+}
+
+impl EstimateTracking {
+    pub fn new(mixing: &MixingMatrix, d: usize) -> EstimateTracking {
+        EstimateTracking {
+            xhat: vec![vec![0.0; d]; mixing.n()],
+            nbr: NeighborAccumulator::new(mixing, d),
+        }
+    }
+}
+
+impl UpdateRule for EstimateTracking {
+    fn local_half_step(&self) -> bool {
+        true
+    }
+
+    fn sync_round(
+        &mut self,
+        ctx: &SyncCtx<'_>,
+        nodes: &mut [NodeState],
+        bus: &mut Bus,
+    ) -> usize {
+        // Algorithm 1 lines 7–9: trigger check and (if fired) compress,
+        // all against the *pre-update* x̂ bank — parallel across nodes.
+        let xhat = &self.xhat;
+        ctx.pool.for_each_mut(nodes, |i, node| {
+            node.fired = ctx.comm.fires(node, &xhat[i], ctx.t, ctx.eta);
+            if node.fired {
+                sub_into(&node.x_half, &xhat[i], &mut node.diff);
+                ctx.compressor
+                    .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
+            }
+        });
+
+        // Lines 9–13: charge broadcasts and apply estimate updates in
+        // deterministic node order; silent nodes (line 11) cost nothing.
+        let d = self.xhat[0].len();
+        let mut fired_count = 0usize;
+        for i in 0..nodes.len() {
+            if !nodes[i].fired {
+                continue;
+            }
+            if ctx.link.straggles(i, ctx.t) {
+                // Skipped broadcast: as if the trigger had not fired —
+                // the estimate bank stays put and the drift persists to
+                // the next sync index.
+                nodes[i].fired = false;
+                continue;
+            }
+            fired_count += 1;
+            let q = &nodes[i].q;
+            let bits = ctx.compressor.message_bits(d, q.nnz());
+            if ctx.link.is_ideal() {
+                bus.charge_broadcast(i, ctx.mixing.topology.degree(i), bits);
+                q.add_to(&mut self.xhat[i]);
+                self.nbr.apply_broadcast(i, q);
+            } else {
+                let delivered = self
+                    .nbr
+                    .apply_broadcast_where(i, q, |to| ctx.link.delivers(i, to, ctx.t));
+                bus.charge_broadcast(i, delivered, bits);
+                q.add_to(&mut self.xhat[i]);
+            }
+        }
+
+        // Line 15: consensus from the post-update estimates — one fused
+        // pass per node from the materialized accumulator, parallel.
+        // Commit by buffer swap (x_half is fully rewritten next round).
+        let gamma = ctx.gamma;
+        let xhat = &self.xhat;
+        let nbr = &self.nbr;
+        ctx.pool.for_each_mut(nodes, |i, node| {
+            std::mem::swap(&mut node.x, &mut node.x_half);
+            nbr.commit(i, gamma, &xhat[i], &mut node.x);
+        });
+        fired_count
+    }
+
+    fn rebuild(&mut self, mixing: &MixingMatrix, bus: &mut Bus) {
+        // Re-wiring resynchronizes the estimate bank over the new edge
+        // set: every node sends its full-precision x̂_i to its new
+        // neighborhood (how else would a fresh neighbor obtain the
+        // estimate it is about to track, and how else would a stale
+        // receiver — e.g. after lossy-link drops — catch back up?). The
+        // exchange is charged at 32·d per copy; treating it as loss-free
+        // control-plane traffic keeps the single-bank representation
+        // exact after the switch.
+        let d = self.xhat.first().map(Vec::len).unwrap_or(0);
+        for i in 0..mixing.n() {
+            let fanout = mixing.topology.degree(i);
+            if fanout > 0 {
+                bus.charge_broadcast(i, fanout, 32 * d as u64);
+            }
+        }
+        self.nbr = NeighborAccumulator::from_bank(mixing, &self.xhat);
+    }
+
+    fn xhat(&self, i: usize) -> Option<&[f32]> {
+        Some(&self.xhat[i])
+    }
+}
+
+/// D-PSGD exact averaging: everyone broadcasts x_i in full (32-bit), the
+/// commit is x_i ← Σ_j w_ij x_j − η_t g_i (gradient applied *after*
+/// mixing, so [`local_half_step`](UpdateRule::local_half_step) = false).
+/// Only [`CommPolicy::is_sync`] gates communication — per-node
+/// [`CommPolicy::fires`] thresholds need an estimate bank and are
+/// ignored here (see the trait docs).
+///
+/// Under a lossy link a receiver substitutes its own x_i for any lost
+/// neighbor copy (w_ij x_i instead of w_ij x_j), which keeps the mixing
+/// row stochastic — the standard biased-gossip fallback.
+pub struct ExactAveraging {
+    mixed: Vec<Vec<f32>>,
+}
+
+impl ExactAveraging {
+    pub fn new(n: usize, d: usize) -> ExactAveraging {
+        ExactAveraging {
+            mixed: vec![vec![0.0; d]; n],
+        }
+    }
+}
+
+impl UpdateRule for ExactAveraging {
+    fn local_half_step(&self) -> bool {
+        false
+    }
+
+    fn sync_round(
+        &mut self,
+        ctx: &SyncCtx<'_>,
+        nodes: &mut [NodeState],
+        bus: &mut Bus,
+    ) -> usize {
+        let n = nodes.len();
+        let d = nodes[0].x.len();
+        let bits = 32 * d as u64;
+
+        // Who transmits this round (everyone, minus stragglers), and the
+        // per-copy charges — deterministic node order.
+        let mut transmitted = 0usize;
+        for (i, node) in nodes.iter_mut().enumerate() {
+            node.fired = !ctx.link.straggles(i, ctx.t);
+            if !node.fired {
+                continue;
+            }
+            transmitted += 1;
+            if ctx.link.is_ideal() {
+                bus.charge_broadcast(i, ctx.mixing.topology.degree(i), bits);
+            } else {
+                let delivered = ctx.mixing.topology.neighbors[i]
+                    .iter()
+                    .filter(|&&to| ctx.link.delivers(i, to, ctx.t))
+                    .count();
+                bus.charge_broadcast(i, delivered, bits);
+            }
+        }
+
+        // mixed_i = w_ii x_i + Σ_j w_ij x_j (self-substituted on loss) —
+        // each row reads the immutable parameter bank and writes only its
+        // own buffer, so rows fan out on the pool.
+        let nodes_ref: &[NodeState] = &*nodes;
+        let mixing = ctx.mixing;
+        let link = ctx.link;
+        let ideal = ctx.link.is_ideal();
+        let t = ctx.t;
+        ctx.pool.for_each_mut(&mut self.mixed, |i, row| {
+            let wii = mixing.weight(i, i) as f32;
+            for (m, x) in row.iter_mut().zip(nodes_ref[i].x.iter()) {
+                *m = wii * x;
+            }
+            for &j in &mixing.topology.neighbors[i] {
+                let w = mixing.weight(i, j) as f32;
+                let src = if ideal || (nodes_ref[j].fired && link.delivers(j, i, t)) {
+                    &nodes_ref[j].x
+                } else {
+                    &nodes_ref[i].x
+                };
+                for (m, x) in row.iter_mut().zip(src.iter()) {
+                    *m += w * x;
+                }
+            }
+        });
+
+        // Commit: x_i = mixed_i − η·(momentum-adjusted gradient) —
+        // per-node independent, parallel.
+        let eta = ctx.eta as f32;
+        let momentum = ctx.momentum;
+        let mixed = &self.mixed;
+        ctx.pool.for_each_mut(nodes, |i, node| {
+            match node.momentum.as_mut() {
+                Some(m) => {
+                    for ((x, mi), (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(m.iter_mut())
+                        .zip(node.grad.iter().zip(mixed[i].iter()))
+                    {
+                        *mi = momentum * *mi + g;
+                        *x = mix - eta * *mi;
+                    }
+                }
+                None => {
+                    for (x, (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(node.grad.iter().zip(mixed[i].iter()))
+                    {
+                        *x = mix - eta * g;
+                    }
+                }
+            }
+        });
+        transmitted
+    }
+
+    fn rebuild(&mut self, _mixing: &MixingMatrix, _bus: &mut Bus) {
+        // `mixed` is recomputed from scratch every round from parameters
+        // that are re-broadcast anyway; nothing cached, nothing to resync.
+    }
+}
+
+// ---------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------
+
+/// Everything that parameterizes an engine run. The thin constructors
+/// (`SparqSgd::new`, `ChocoSgd::new`, `VanillaDecentralized::new`) fill
+/// this in; building one directly composes new scheme variants.
+pub struct EngineConfig {
+    pub mixing: MixingMatrix,
+    pub compressor: Box<dyn Compressor>,
+    pub comm: Box<dyn CommPolicy>,
+    pub rule: Box<dyn UpdateRule>,
+    /// Consensus step size γ; `None` ⇒ tuned heuristic
+    /// `SpectralInfo::gamma_tuned` (computed once and cached — rules that
+    /// don't use γ should pass `Some(0.0)` to skip the eigen solve).
+    pub gamma: Option<f64>,
+    pub lr: LrSchedule,
+    /// Momentum factor (Section 5.2 uses 0.9; 0 disables).
+    pub momentum: f32,
+    pub seed: u64,
+    /// Display name (stable across the refactor for metrics labels).
+    pub name: String,
+}
+
+/// The policy-driven decentralized optimizer (see module docs).
+pub struct DecentralizedEngine {
+    /// The mixing matrix currently in force (replaced by the schedule).
+    pub mixing: MixingMatrix,
+    pub lr: LrSchedule,
+    /// Consensus step size γ (0 for exact-averaging rules).
+    pub gamma: f64,
+    pub momentum: f32,
+    /// Cumulative trigger statistics (checks = n per sync round).
+    pub total_fired: u64,
+    pub total_checks: u64,
+    comm: Box<dyn CommPolicy>,
+    rule: Box<dyn UpdateRule>,
+    compressor: Box<dyn Compressor>,
+    link: LinkModel,
+    schedule: TopologySchedule,
+    nodes: Vec<NodeState>,
+    /// Worker pool for the per-node phases (workers = 1 ⇒ sequential;
+    /// results are bit-identical for any worker count).
+    pool: ThreadPool,
+    /// Cached eigen solve of the current mixing matrix (computed at most
+    /// once; skipped entirely when γ is pinned and nobody asks).
+    spectral: OnceCell<SpectralInfo>,
+    fired_last: usize,
+    name: String,
+}
+
+impl DecentralizedEngine {
+    pub fn new(cfg: EngineConfig, d: usize) -> DecentralizedEngine {
+        let n = cfg.mixing.n();
+        let spectral: OnceCell<SpectralInfo> = OnceCell::new();
+        let gamma = cfg.gamma.unwrap_or_else(|| {
+            let s = *spectral.get_or_init(|| SpectralInfo::compute(&cfg.mixing));
+            s.gamma_tuned(cfg.compressor.omega(d), cfg.compressor.effective_omega(d))
+        });
+        let mut root = Rng::new(cfg.seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, cfg.momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        DecentralizedEngine {
+            mixing: cfg.mixing,
+            lr: cfg.lr,
+            gamma,
+            momentum: cfg.momentum,
+            total_fired: 0,
+            total_checks: 0,
+            comm: cfg.comm,
+            rule: cfg.rule,
+            compressor: cfg.compressor,
+            link: LinkModel::ideal(),
+            schedule: TopologySchedule::fixed(),
+            nodes,
+            pool: ThreadPool::new(1),
+            spectral,
+            fired_last: 0,
+            name: cfg.name,
+        }
+    }
+
+    /// Install a link-fault model (default: [`LinkModel::ideal`]).
+    pub fn set_link(&mut self, link: LinkModel) {
+        self.link = link;
+    }
+
+    /// Install a topology schedule (default: [`TopologySchedule::fixed`]).
+    /// The engine must have been constructed on the schedule's
+    /// [`initial_mixing`](TopologySchedule::initial_mixing) (the builder
+    /// does this); switches take effect at subsequent sync indices.
+    pub fn set_topology_schedule(&mut self, schedule: TopologySchedule) {
+        self.schedule = schedule;
+    }
+
+    /// Set all nodes to the same initial parameters.
+    pub fn init_params(&mut self, x0: &[f32]) {
+        for node in self.nodes.iter_mut() {
+            node.x.copy_from_slice(x0);
+        }
+    }
+
+    /// Spectral info of the mixing matrix currently in force (cached;
+    /// recomputed only after a topology switch).
+    pub fn spectral(&self) -> SpectralInfo {
+        *self
+            .spectral
+            .get_or_init(|| SpectralInfo::compute(&self.mixing))
+    }
+
+    /// The estimate bank (exposed for tests; panics for update rules
+    /// without one, i.e. exact averaging).
+    pub fn xhat(&self, i: usize) -> &[f32] {
+        self.rule
+            .xhat(i)
+            .expect("this update rule keeps no estimate bank")
+    }
+
+    /// Per-node state (exposed for tests).
+    pub fn node(&self, i: usize) -> &NodeState {
+        &self.nodes[i]
+    }
+
+    /// The installed link model.
+    pub fn link(&self) -> &LinkModel {
+        &self.link
+    }
+}
+
+impl DecentralizedAlgo for DecentralizedEngine {
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let eta64 = self.lr.eta(t);
+        let half = self.rule.local_half_step();
+        let sync = self.comm.is_sync(t);
+
+        // Gradient (+ optional local half-step), every node — parallel
+        // when the source supports shared-state evaluation. Rules without
+        // a standing half-step (exact averaging applies the gradient
+        // after mixing) still take it on non-sync rounds: the composition
+        // Triggered + ExactAveraging is local SGD between periodic exact
+        // exchanges, and the step runs on the pool like everything else.
+        gradient_phase(
+            &self.pool,
+            &mut self.nodes,
+            src,
+            if half || !sync {
+                Some((eta64 as f32, self.momentum))
+            } else {
+                None
+            },
+        );
+
+        if sync {
+            // Time-varying topology: swap the mixing matrix and rebuild
+            // topology-derived rule state before communicating (the rule
+            // charges the bus for the state resync the re-wiring implies).
+            if let Some(mixing) = self.schedule.update(t) {
+                self.mixing = mixing;
+                self.rule.rebuild(&self.mixing, bus);
+                self.spectral = OnceCell::new();
+            }
+            let ctx = SyncCtx {
+                t,
+                eta: eta64,
+                gamma: self.gamma as f32,
+                momentum: self.momentum,
+                mixing: &self.mixing,
+                comm: &*self.comm,
+                compressor: &*self.compressor,
+                link: &self.link,
+                pool: &self.pool,
+            };
+            let fired = self.rule.sync_round(&ctx, &mut self.nodes, bus);
+            self.total_checks += self.nodes.len() as u64;
+            self.total_fired += fired as u64;
+            self.fired_last = fired;
+        } else {
+            // Commit the local step only (buffer swap, no copy).
+            for node in self.nodes.iter_mut() {
+                std::mem::swap(&mut node.x, &mut node.x_half);
+            }
+            self.fired_last = 0;
+        }
+        bus.end_round();
+    }
+
+    fn params(&self, node: usize) -> &[f32] {
+        &self.nodes[node].x
+    }
+
+    fn set_params(&mut self, x0: &[f32]) {
+        self.init_params(x0);
+    }
+
+    fn set_node_params(&mut self, node: usize, x: &[f32]) {
+        self.nodes[node].x.copy_from_slice(x);
+    }
+
+    fn momentum(&self, node: usize) -> Option<&[f32]> {
+        self.nodes[node].momentum.as_deref()
+    }
+
+    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
+        if let Some(buf) = self.nodes[node].momentum.as_mut() {
+            buf.copy_from_slice(m);
+        }
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.pool = ThreadPool::new(workers);
+    }
+
+    fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn last_fired(&self) -> usize {
+        self.fired_last
+    }
+
+    fn fired_stats(&self) -> (u64, u64) {
+        (self.total_fired, self.total_checks)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, SignTopK};
+    use crate::coordinator::{ChocoSgd, SparqConfig, SparqSgd, VanillaDecentralized};
+    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+    use crate::problems::QuadraticProblem;
+    use crate::trigger::ThresholdSchedule;
+
+    fn mk(
+        n: usize,
+        d: usize,
+        comp: Box<dyn Compressor>,
+        trig: ThresholdSchedule,
+        h: u64,
+    ) -> (DecentralizedEngine, QuadraticProblem, Bus) {
+        let topo = Topology::new(TopologyKind::Ring, n, 0);
+        let mixing = uniform_neighbor(&topo);
+        let cfg = SparqConfig {
+            mixing,
+            compressor: comp,
+            trigger: EventTrigger::new(trig),
+            lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            sync: SyncSchedule::EveryH(h),
+            gamma: None,
+            momentum: 0.0,
+            seed: 7,
+        };
+        let algo = SparqSgd::new(cfg, d);
+        let prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 3);
+        let bus = Bus::new(n);
+        (algo, prob, bus)
+    }
+
+    #[test]
+    fn average_preserved_during_sync_round() {
+        // Paper Eq. (20): x̄^{t+1} = x̄^{t+½} — the consensus step never
+        // moves the average; only gradients do.
+        let (mut algo, mut prob, mut bus) =
+            mk(8, 12, Box::new(SignTopK::new(3)), ThresholdSchedule::Zero, 1);
+        for t in 0..20 {
+            let bar_before = algo.x_bar();
+            algo.step(t, &mut prob, &mut bus);
+            let eta = algo.lr.eta(t) as f32;
+            let mut expected = bar_before;
+            for i in 0..8 {
+                for (e, g) in expected.iter_mut().zip(algo.node(i).grad.iter()) {
+                    *e -= eta * g / 8.0;
+                }
+            }
+            let bar = algo.x_bar();
+            for (a, b) in bar.iter().zip(expected.iter()) {
+                assert!((a - b).abs() < 1e-4, "t={t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn silent_nodes_cost_no_bits() {
+        // Impossible threshold ⇒ nobody ever fires ⇒ zero bits on the bus.
+        let (mut algo, mut prob, mut bus) = mk(
+            6,
+            10,
+            Box::new(SignTopK::new(2)),
+            ThresholdSchedule::Constant(1e12),
+            1,
+        );
+        for t in 0..30 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        assert_eq!(bus.total_bits, 0);
+        assert_eq!(algo.total_fired, 0);
+        assert_eq!(algo.total_checks, 30 * 6);
+    }
+
+    #[test]
+    fn no_sync_rounds_never_communicate() {
+        let (mut algo, mut prob, mut bus) =
+            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 10);
+        for t in 0..9 {
+            // t = 0..8: (t+1) ∈ {1..9}, none divisible by 10
+            algo.step(t, &mut prob, &mut bus);
+            assert_eq!(bus.total_bits, 0, "t={t}");
+        }
+        algo.step(9, &mut prob, &mut bus); // t+1 = 10 syncs
+        assert!(bus.total_bits > 0);
+    }
+
+    #[test]
+    fn estimates_track_params_with_identity_compression() {
+        // With Identity compression and always-firing trigger at H=1,
+        // x̂_i = x_i^{t+½} after each sync round (perfect estimates).
+        let (mut algo, mut prob, mut bus) =
+            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 1);
+        for t in 0..10 {
+            let prev: Vec<Vec<f32>> = (0..4).map(|i| algo.params(i).to_vec()).collect();
+            algo.step(t, &mut prob, &mut bus);
+            let eta = algo.lr.eta(t) as f32;
+            for i in 0..4 {
+                for ((h, xp), g) in algo
+                    .xhat(i)
+                    .iter()
+                    .zip(prev[i].iter())
+                    .zip(algo.node(i).grad.iter())
+                {
+                    let x_half = xp - eta * g;
+                    assert!((h - x_half).abs() < 1e-5, "t={t} node {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let (mut algo, mut prob, mut bus) = mk(
+            8,
+            16,
+            Box::new(SignTopK::new(4)),
+            ThresholdSchedule::Poly { c0: 1.0, eps: 0.5 },
+            5,
+        );
+        for t in 0..3000 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.05, "suboptimality {gap}");
+        assert!(
+            algo.consensus_distance() < 10.0,
+            "consensus {}",
+            algo.consensus_distance()
+        );
+        // and the trigger actually saved some broadcasts
+        assert!(algo.total_fired < algo.total_checks);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let (mut algo, mut prob, mut bus) = mk(
+                5,
+                10,
+                Box::new(SignTopK::new(3)),
+                ThresholdSchedule::Constant(10.0),
+                5,
+            );
+            for t in 0..200 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            (algo.x_bar(), bus.total_bits)
+        };
+        let (x1, b1) = run();
+        let (x2, b2) = run();
+        assert_eq!(x1, x2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn pinned_gamma_skips_eigen_solve_but_spectral_still_works() {
+        let topo = Topology::new(TopologyKind::Ring, 6, 0);
+        let cfg = SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(Identity),
+            trigger: EventTrigger::new(ThresholdSchedule::Zero),
+            lr: LrSchedule::Constant(0.05),
+            sync: SyncSchedule::EveryH(1),
+            gamma: Some(0.3),
+            momentum: 0.0,
+            seed: 1,
+        };
+        let algo = SparqSgd::new(cfg, 8);
+        assert_eq!(algo.gamma, 0.3);
+        // lazy compute on demand, and both calls agree (cached)
+        let a = algo.spectral();
+        let b = algo.spectral();
+        assert_eq!(a.delta, b.delta);
+        assert!(a.delta > 0.0);
+    }
+
+    #[test]
+    fn tuned_gamma_matches_direct_spectral_computation() {
+        let topo = Topology::new(TopologyKind::Ring, 8, 0);
+        let mixing = uniform_neighbor(&topo);
+        let expect = SpectralInfo::compute(&mixing)
+            .gamma_tuned(Identity.omega(12), Identity.effective_omega(12));
+        let (algo, _, _) = mk(8, 12, Box::new(Identity), ThresholdSchedule::Zero, 1);
+        assert_eq!(algo.gamma, expect);
+    }
+
+    #[test]
+    fn lossy_link_charges_fewer_bits_than_ideal() {
+        let run = |link: LinkModel| {
+            let (mut algo, mut prob, mut bus) =
+                mk(8, 16, Box::new(SignTopK::new(4)), ThresholdSchedule::Zero, 1);
+            algo.set_link(link);
+            for t in 0..200 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            bus.total_bits
+        };
+        let ideal = run(LinkModel::ideal());
+        let lossy = run(LinkModel::parse("drop:0.4", 3).unwrap());
+        assert!(lossy < ideal, "lossy {lossy} vs ideal {ideal}");
+        // roughly 60% of copies delivered (loose band)
+        let frac = lossy as f64 / ideal as f64;
+        assert!((0.4..0.8).contains(&frac), "delivered fraction {frac}");
+    }
+
+    #[test]
+    fn straggler_node_transmits_less_and_still_converges() {
+        let (mut algo, mut prob, mut bus) = mk(
+            8,
+            16,
+            Box::new(SignTopK::new(4)),
+            ThresholdSchedule::Zero,
+            1,
+        );
+        algo.set_link(LinkModel::parse("straggler:0:0.7", 9).unwrap());
+        for t in 0..2500 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        // node 0 paid for far fewer broadcasts than its peers
+        assert!(
+            (bus.node_bits[0] as f64) < 0.6 * bus.node_bits[1] as f64,
+            "node0 {} vs node1 {}",
+            bus.node_bits[0],
+            bus.node_bits[1]
+        );
+        // the run still optimizes
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.2, "suboptimality {gap}");
+    }
+
+    #[test]
+    fn topology_switch_runs_and_converges() {
+        // 16 nodes so ring and torus both exist; switch every 300 steps.
+        let topo = Topology::new(TopologyKind::Ring, 16, 0);
+        let cfg = SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(SignTopK::new(4)),
+            trigger: EventTrigger::new(ThresholdSchedule::Zero),
+            lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            sync: SyncSchedule::EveryH(1),
+            gamma: None,
+            momentum: 0.0,
+            seed: 7,
+        };
+        let mut algo = SparqSgd::new(cfg, 16);
+        algo.set_topology_schedule(
+            TopologySchedule::parse("switch:ring,torus:300", 16, 0).unwrap(),
+        );
+        let mut prob = QuadraticProblem::new(16, 16, 0.5, 2.0, 0.05, 1.0, 3);
+        let mut bus = Bus::new(16);
+        let mut ring_bits = 0u64;
+        for t in 0..2400 {
+            algo.step(t, &mut prob, &mut bus);
+            if t == 299 {
+                ring_bits = bus.total_bits;
+            }
+            if t == 300 {
+                // torus phase: degree 4 ⇒ each broadcast now charges 2×
+                // the ring's fanout
+                assert!(algo.mixing.topology.neighbors.iter().all(|a| a.len() == 4));
+            }
+        }
+        assert!(ring_bits > 0 && bus.total_bits > ring_bits);
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.1, "suboptimality {gap}");
+        // spectral() reflects the matrix in force after the last switch
+        assert!(algo.spectral().delta > 0.0);
+    }
+
+    #[test]
+    fn engine_composition_choco_equals_sparq_degenerate() {
+        // The one-engine guarantee made structural: the CHOCO constructor
+        // and SPARQ(c_t = 0, H = 1) build the same policies modulo the
+        // trigger, and their trajectories agree bit-for-bit (nonzero
+        // drift always fires the zero trigger).
+        let topo = Topology::new(TopologyKind::Ring, 6, 0);
+        let d = 20;
+        let (mut sparq, mut prob_a, mut bus_a) =
+            mk_pair(&topo, d, ThresholdSchedule::Zero);
+        let mut choco = ChocoSgd::new(
+            uniform_neighbor(&topo),
+            Box::new(SignTopK::new(5)),
+            LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            0.0,
+            d,
+            7,
+        );
+        let mut prob_b = QuadraticProblem::new(d, 6, 0.5, 2.0, 0.05, 1.0, 3);
+        let mut bus_b = Bus::new(6);
+        for t in 0..300 {
+            sparq.step(t, &mut prob_a, &mut bus_a);
+            choco.step(t, &mut prob_b, &mut bus_b);
+        }
+        for i in 0..6 {
+            assert_eq!(sparq.params(i), choco.params(i), "node {i}");
+        }
+        assert_eq!(bus_a.total_bits, bus_b.total_bits);
+    }
+
+    fn mk_pair(
+        topo: &Topology,
+        d: usize,
+        trig: ThresholdSchedule,
+    ) -> (DecentralizedEngine, QuadraticProblem, Bus) {
+        let cfg = SparqConfig {
+            mixing: uniform_neighbor(topo),
+            compressor: Box::new(SignTopK::new(5)),
+            trigger: EventTrigger::new(trig),
+            lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+            sync: SyncSchedule::EveryH(1),
+            gamma: None,
+            momentum: 0.0,
+            seed: 7,
+        };
+        let algo = SparqSgd::new(cfg, d);
+        let prob = QuadraticProblem::new(d, topo.n, 0.5, 2.0, 0.05, 1.0, 3);
+        let bus = Bus::new(topo.n);
+        (algo, prob, bus)
+    }
+
+    #[test]
+    fn triggered_exact_averaging_is_local_sgd_between_exchanges() {
+        // The doc-advertised novel composition: full-precision exchanges
+        // every 4th round, plain local SGD in between. Must optimize and
+        // charge exactly steps/4 rounds of vanilla-priced traffic.
+        let topo = Topology::new(TopologyKind::Ring, 6, 0);
+        let n = 6;
+        let d = 16;
+        let mut algo = DecentralizedEngine::new(
+            EngineConfig {
+                mixing: uniform_neighbor(&topo),
+                compressor: Box::new(Identity),
+                comm: Box::new(Triggered {
+                    sync: SyncSchedule::EveryH(4),
+                    trigger: EventTrigger::new(ThresholdSchedule::Zero),
+                }),
+                rule: Box::new(ExactAveraging::new(n, d)),
+                gamma: Some(0.0),
+                lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+                momentum: 0.0,
+                seed: 3,
+                name: "local-dpsgd(H=4)".into(),
+            },
+            d,
+        );
+        let mut prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 4);
+        let mut bus = Bus::new(n);
+        for t in 0..2000 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        // 500 sync rounds × 6 nodes × 2 neighbors × 32·16 bits
+        assert_eq!(bus.comm_rounds, 500);
+        assert_eq!(bus.total_bits, 500 * 6 * 2 * 32 * 16);
+        let gap = prob.suboptimality(&algo.x_bar());
+        assert!(gap < 0.05, "suboptimality {gap}");
+    }
+
+    #[test]
+    fn topology_switch_resync_is_charged_on_the_bus() {
+        // A switch is not free: every node re-broadcasts its full x̂ to
+        // its new neighborhood (32·d per copy) so rebuilt accumulators
+        // correspond to traffic that actually happened.
+        let (mut algo, mut prob, mut bus) = mk(
+            16,
+            16,
+            Box::new(SignTopK::new(4)),
+            ThresholdSchedule::Constant(1e12), // nobody ever fires
+            1,
+        );
+        algo.set_topology_schedule(
+            TopologySchedule::parse("switch:ring,torus:10", 16, 0).unwrap(),
+        );
+        for t in 0..11 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        // the only traffic is the single resync at t = 10 (ring → torus):
+        // 16 nodes × 4 new neighbors × 32·16 bits
+        assert_eq!(algo.total_fired, 0);
+        assert_eq!(bus.total_bits, 16 * 4 * 32 * 16);
+    }
+
+    #[test]
+    fn vanilla_constructor_charges_full_precision() {
+        let topo = Topology::new(TopologyKind::Ring, 6, 0);
+        let mut algo = VanillaDecentralized::new(
+            uniform_neighbor(&topo),
+            LrSchedule::Constant(0.05),
+            0.0,
+            20,
+            1,
+        );
+        let mut prob = QuadraticProblem::new(20, 6, 0.5, 2.0, 0.0, 1.0, 2);
+        let mut bus = Bus::new(6);
+        algo.step(0, &mut prob, &mut bus);
+        // 6 nodes × 2 neighbors × 32·20 bits
+        assert_eq!(bus.total_bits, 6 * 2 * 32 * 20);
+    }
+}

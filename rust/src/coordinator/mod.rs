@@ -1,18 +1,44 @@
-//! The L3 coordination layer: Algorithm 1 (SPARQ-SGD) and baselines over
-//! a simulated synchronous graph.
+//! The L3 coordination layer: one policy-driven engine running the whole
+//! SPARQ/CHOCO/D-PSGD family over a simulated synchronous graph.
 //!
-//! * [`sparq::SparqSgd`] — the paper's algorithm: local SGD steps, event
-//!   trigger at sync indices, compressed estimate updates, consensus step.
-//! * [`choco::ChocoSgd`] — CHOCO-SGD [KSJ19]: compressed updates every
-//!   iteration, no trigger, no local steps (H = 1).
-//! * [`vanilla::VanillaDecentralized`] — D-PSGD [LZZ+17]: exact (32-bit)
-//!   neighbor averaging every iteration.
+//! Architecture (since the engine refactor):
+//!
+//! * [`engine::DecentralizedEngine`] — the single step loop. It is
+//!   parameterized by two small policy traits plus the compressor:
+//!   - [`engine::CommPolicy`] (*when* to sync, *which* nodes transmit):
+//!     [`engine::Triggered`] = sync schedule + event trigger (SPARQ),
+//!     [`engine::AlwaysComm`] = every round, every node (CHOCO, D-PSGD);
+//!   - [`engine::UpdateRule`] (*what* a sync round does):
+//!     [`engine::EstimateTracking`] = compressed estimate bank +
+//!     γ-consensus (SPARQ, CHOCO), [`engine::ExactAveraging`] =
+//!     full-precision neighbor averaging (D-PSGD);
+//!   - [`crate::compress::Compressor`] — the paper's operators.
+//! * [`sparq::SparqSgd`] / [`choco::ChocoSgd`] /
+//!   [`vanilla::VanillaDecentralized`] — thin constructors assembling
+//!   those compositions; there is no per-algorithm step code anymore, and
+//!   `rust/tests/engine_equivalence.rs` pins each constructor to its seed
+//!   coordinator bit-for-bit.
+//! * Scenario layers pluggable into any composition:
+//!   [`crate::comm::LinkModel`] (seeded message drops / stragglers,
+//!   bits charged per delivered copy) and
+//!   [`crate::graph::TopologySchedule`] (time-varying mixing matrices,
+//!   consensus state rebuilt on switch).
 //! * [`runner`] — the leader loop: steps an algorithm, evaluates metrics,
 //!   accounts bits, emits `metrics::RoundRecord`s.
+//!
+//! A new scheme is a config line, not a new file: compose an
+//! [`engine::EngineConfig`] from existing policies (e.g. local SGD with
+//! periodic exact exchanges = `Triggered` sync schedule +
+//! `ExactAveraging`, or estimate tracking on sampled gossip edges) and
+//! hand it to the runner. Note the composition contract: per-node drift
+//! thresholds ([`engine::CommPolicy::fires`]) apply only to
+//! estimate-tracking rules — exact averaging has no x̂ bank to measure
+//! drift against and is gated by the sync schedule alone.
 
 pub mod node;
 pub mod checkpoint;
 pub mod consensus;
+pub mod engine;
 pub mod sparq;
 pub mod choco;
 pub mod vanilla;
@@ -21,6 +47,10 @@ pub mod runner;
 pub use checkpoint::Checkpoint;
 pub use choco::ChocoSgd;
 pub use consensus::NeighborAccumulator;
+pub use engine::{
+    AlwaysComm, CommPolicy, DecentralizedEngine, EngineConfig, EstimateTracking,
+    ExactAveraging, SyncCtx, Triggered, UpdateRule,
+};
 pub use runner::{run, RunOptions};
 pub use sparq::{SparqConfig, SparqSgd};
 pub use vanilla::VanillaDecentralized;
@@ -128,6 +158,15 @@ pub trait DecentralizedAlgo {
     /// metrics; baselines return n or 0 as appropriate).
     fn last_fired(&self) -> usize {
         0
+    }
+
+    /// Cumulative (transmitted, opportunities) statistics, when tracked —
+    /// `fired / checks` is the transmit rate the robustness sweeps
+    /// report. "Opportunities" counts n per sync round; for trigger-free
+    /// compositions (CHOCO, exact averaging) the rate is 1.0 minus
+    /// straggler skips, not evidence that drift checks ran.
+    fn fired_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
 
     /// Algorithm name for logs.

@@ -1,4 +1,4 @@
-//! SPARQ-SGD — Algorithm 1, verbatim.
+//! SPARQ-SGD — Algorithm 1, as a policy composition over the engine.
 //!
 //! Per iteration t (synchronous, all nodes):
 //!
@@ -17,28 +17,19 @@
 //! nothing to send). For nonzero init the first sync round's trigger sees
 //! the full ‖x^{(½)}‖² drift and fires, which is exactly that bootstrap.
 //!
-//! Execution structure (EXPERIMENTS.md §Perf, sparse fast path): messages
-//! are built as [`crate::compress::SparseVec`]s and applied in O(nnz);
-//! the consensus step reads a materialized neighbor accumulator
-//! (consensus.rs) instead of doing per-edge dense passes; and the
-//! per-node phases (gradient/local-step, trigger + compress, consensus
-//! commit) run on a `util::ThreadPool`. Every parallel phase touches only
-//! per-node state driven by per-node RNG streams, and the cross-node
-//! apply runs sequentially in node order, so runs are bit-for-bit
-//! identical for any worker count.
+//! In engine terms (see [`engine`](super::engine)), SPARQ is exactly:
+//! [`Triggered`] comm policy (sync at I_T, fire on the drift threshold) +
+//! [`EstimateTracking`] update rule + the configured [`Compressor`].
+//! [`SparqSgd::new`] is a thin constructor assembling that composition —
+//! the step loop itself lives in `engine.rs`, shared with CHOCO-SGD and
+//! D-PSGD, and the `engine_equivalence` suite pins that it reproduces the
+//! seed SPARQ coordinator bit-for-bit.
 
-use super::consensus::NeighborAccumulator;
-use super::node::NodeState;
-use super::{gradient_phase, DecentralizedAlgo};
-use crate::comm::Bus;
+use super::engine::{DecentralizedEngine, EngineConfig, EstimateTracking, Triggered};
 use crate::compress::Compressor;
-use crate::graph::{MixingMatrix, SpectralInfo};
-use crate::linalg::vecops::sub_into;
-use crate::problems::GradientSource;
+use crate::graph::MixingMatrix;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::EventTrigger;
-use crate::util::threadpool::ThreadPool;
-use crate::util::Rng;
 
 /// Everything that parameterizes a SPARQ run (Algorithm 1's inputs).
 pub struct SparqConfig {
@@ -56,346 +47,34 @@ pub struct SparqConfig {
     pub seed: u64,
 }
 
-pub struct SparqSgd {
-    pub cfg: SparqConfig,
-    pub gamma: f64,
-    nodes: Vec<NodeState>,
-    /// Public estimates x̂_j (one authoritative copy per node; see node.rs).
-    xhat: Vec<Vec<f32>>,
-    /// Materialized Σ_j w_ij x̂_j per node, maintained in O(nnz·deg) per
-    /// broadcast (the sparse fast path — see consensus.rs).
-    nbr: NeighborAccumulator,
-    /// Worker pool for the per-node phases (workers = 1 ⇒ sequential;
-    /// results are bit-identical for any worker count).
-    pool: ThreadPool,
-    fired_last: usize,
-    /// Cumulative trigger statistics.
-    pub total_fired: u64,
-    pub total_checks: u64,
-}
+/// Thin constructor: SPARQ-SGD as a [`DecentralizedEngine`] composition.
+pub struct SparqSgd;
 
 impl SparqSgd {
-    pub fn new(cfg: SparqConfig, d: usize) -> SparqSgd {
-        let n = cfg.mixing.n();
-        let spectral = SpectralInfo::compute(&cfg.mixing);
-        let omega = cfg.compressor.omega(d);
-        let omega_eff = cfg.compressor.effective_omega(d);
-        let gamma = cfg
-            .gamma
-            .unwrap_or_else(|| spectral.gamma_tuned(omega, omega_eff));
-        let mut root = Rng::new(cfg.seed);
-        let nodes = (0..n)
-            .map(|i| NodeState::new(d, cfg.momentum > 0.0, root.fork(i as u64)))
-            .collect();
-        let nbr = NeighborAccumulator::new(&cfg.mixing, d);
-        SparqSgd {
-            cfg,
-            gamma,
-            nodes,
-            xhat: vec![vec![0.0; d]; n],
-            nbr,
-            pool: ThreadPool::new(1),
-            fired_last: 0,
-            total_fired: 0,
-            total_checks: 0,
-        }
-    }
-
-    /// Set all nodes to the same initial parameters.
-    pub fn init_params(&mut self, x0: &[f32]) {
-        for node in self.nodes.iter_mut() {
-            node.x.copy_from_slice(x0);
-        }
-    }
-
-    /// Spectral info of the configured mixing matrix.
-    pub fn spectral(&self) -> SpectralInfo {
-        SpectralInfo::compute(&self.cfg.mixing)
-    }
-
-    /// The estimate bank (exposed for tests).
-    pub fn xhat(&self, i: usize) -> &[f32] {
-        &self.xhat[i]
-    }
-}
-
-impl DecentralizedAlgo for SparqSgd {
-    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
-        let n = self.nodes.len();
-        let eta64 = self.cfg.lr.eta(t);
-        let eta = eta64 as f32;
-        let momentum = self.cfg.momentum;
-
-        // lines 3–4: gradient + local half-step, every node — parallel
-        // across nodes when the source supports shared-state evaluation.
-        gradient_phase(&self.pool, &mut self.nodes, src, Some((eta, momentum)));
-
-        if self.cfg.sync.is_sync(t) {
-            // lines 7–9: trigger check and (if fired) compress, all
-            // against the *pre-update* x̂ bank. Each node touches only its
-            // own row and scratch, so the phase fans out on the pool.
-            let pool = &self.pool;
-            let cfg = &self.cfg;
-            let xhat = &self.xhat;
-            pool.for_each_mut(&mut self.nodes, |i, node| {
-                node.fired = cfg.trigger.fires(&node.x_half, &xhat[i], t, eta64);
-                if node.fired {
-                    // line 8: q_i = C(x_i^{t+½} − x̂_i), straight to sparse.
-                    sub_into(&node.x_half, &xhat[i], &mut node.diff);
-                    cfg.compressor
-                        .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
-                }
-            });
-
-            // lines 9–13: charge broadcasts and apply estimate updates in
-            // deterministic node order. All O(nnz): x̂_i += q_i plus the
-            // receivers' neighbor-accumulator moves; silent nodes (line
-            // 11) send 0 and cost nothing on the wire.
-            let d = self.xhat[0].len();
-            self.total_checks += n as u64;
-            let mut fired_count = 0usize;
-            for i in 0..n {
-                if !self.nodes[i].fired {
-                    continue;
-                }
-                fired_count += 1;
-                let q = &self.nodes[i].q;
-                let bits = self.cfg.compressor.message_bits(d, q.nnz());
-                bus.charge_broadcast(i, self.cfg.mixing.topology.degree(i), bits);
-                q.add_to(&mut self.xhat[i]);
-                self.nbr.apply_broadcast(i, q);
-            }
-            self.fired_last = fired_count;
-            self.total_fired += fired_count as u64;
-
-            // line 15: consensus from the post-update estimates — one
-            // fused pass per node from the materialized accumulator (no
-            // per-edge full-d read-modify-write), parallel across nodes.
-            // Commit by buffer swap — x_half is fully rewritten by the
-            // next local_step, so no copy is needed (§Perf, L3 iter 4).
-            let gamma = self.gamma as f32;
-            let xhat = &self.xhat;
-            let nbr = &self.nbr;
-            self.pool.for_each_mut(&mut self.nodes, |i, node| {
-                std::mem::swap(&mut node.x, &mut node.x_half);
-                nbr.commit(i, gamma, &xhat[i], &mut node.x);
-            });
-        } else {
-            // line 17: commit the local step only (buffer swap, no copy).
-            for node in self.nodes.iter_mut() {
-                std::mem::swap(&mut node.x, &mut node.x_half);
-            }
-            self.fired_last = 0;
-        }
-        bus.end_round();
-    }
-
-    fn params(&self, node: usize) -> &[f32] {
-        &self.nodes[node].x
-    }
-
-    fn set_params(&mut self, x0: &[f32]) {
-        self.init_params(x0);
-    }
-
-    fn set_node_params(&mut self, node: usize, x: &[f32]) {
-        self.nodes[node].x.copy_from_slice(x);
-    }
-
-    fn momentum(&self, node: usize) -> Option<&[f32]> {
-        self.nodes[node].momentum.as_deref()
-    }
-
-    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
-        if let Some(buf) = self.nodes[node].momentum.as_mut() {
-            buf.copy_from_slice(m);
-        }
-    }
-
-    fn set_workers(&mut self, workers: usize) {
-        self.pool = ThreadPool::new(workers);
-    }
-
-    fn n(&self) -> usize {
-        self.nodes.len()
-    }
-
-    fn last_fired(&self) -> usize {
-        self.fired_last
-    }
-
-    fn name(&self) -> String {
-        format!(
+    pub fn new(cfg: SparqConfig, d: usize) -> DecentralizedEngine {
+        let name = format!(
             "sparq(C={}, trigger={:?}, H={:?})",
-            self.cfg.compressor.name(),
-            self.cfg.trigger.schedule,
-            self.cfg.sync
+            cfg.compressor.name(),
+            cfg.trigger.schedule,
+            cfg.sync
+        );
+        let rule = EstimateTracking::new(&cfg.mixing, d);
+        DecentralizedEngine::new(
+            EngineConfig {
+                mixing: cfg.mixing,
+                compressor: cfg.compressor,
+                comm: Box::new(Triggered {
+                    sync: cfg.sync,
+                    trigger: cfg.trigger,
+                }),
+                rule: Box::new(rule),
+                gamma: cfg.gamma,
+                lr: cfg.lr,
+                momentum: cfg.momentum,
+                seed: cfg.seed,
+                name,
+            },
+            d,
         )
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::compress::{Identity, SignTopK};
-    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
-    use crate::problems::QuadraticProblem;
-    use crate::trigger::ThresholdSchedule;
-
-    fn mk(
-        n: usize,
-        d: usize,
-        comp: Box<dyn Compressor>,
-        trig: ThresholdSchedule,
-        h: u64,
-    ) -> (SparqSgd, QuadraticProblem, Bus) {
-        let topo = Topology::new(TopologyKind::Ring, n, 0);
-        let mixing = uniform_neighbor(&topo);
-        let cfg = SparqConfig {
-            mixing,
-            compressor: comp,
-            trigger: EventTrigger::new(trig),
-            lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
-            sync: SyncSchedule::EveryH(h),
-            gamma: None,
-            momentum: 0.0,
-            seed: 7,
-        };
-        let algo = SparqSgd::new(cfg, d);
-        let prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 3);
-        let bus = Bus::new(n);
-        (algo, prob, bus)
-    }
-
-    #[test]
-    fn average_preserved_during_sync_round() {
-        // Paper Eq. (20): x̄^{t+1} = x̄^{t+½} — the consensus step never
-        // moves the average; only gradients do.
-        let (mut algo, mut prob, mut bus) = mk(
-            8,
-            12,
-            Box::new(SignTopK::new(3)),
-            ThresholdSchedule::Zero,
-            1,
-        );
-        for t in 0..20 {
-            // x̄^{t+1} must equal x̄^{t} − (η_t/n) Σ_i g_i (paper Eq. 20 +
-            // Eq. 3); node.grad still holds g_i^{(t)} after the step.
-            let bar_before = algo.x_bar();
-            algo.step(t, &mut prob, &mut bus);
-            let eta = algo.cfg.lr.eta(t) as f32;
-            let mut expected = bar_before;
-            for i in 0..8 {
-                for (e, g) in expected.iter_mut().zip(algo.nodes[i].grad.iter()) {
-                    *e -= eta * g / 8.0;
-                }
-            }
-            let bar = algo.x_bar();
-            for (a, b) in bar.iter().zip(expected.iter()) {
-                assert!((a - b).abs() < 1e-4, "t={t}: {a} vs {b}");
-            }
-        }
-    }
-
-    #[test]
-    fn silent_nodes_cost_no_bits() {
-        // Impossible threshold ⇒ nobody ever fires ⇒ zero bits on the bus.
-        let (mut algo, mut prob, mut bus) = mk(
-            6,
-            10,
-            Box::new(SignTopK::new(2)),
-            ThresholdSchedule::Constant(1e12),
-            1,
-        );
-        for t in 0..30 {
-            algo.step(t, &mut prob, &mut bus);
-        }
-        assert_eq!(bus.total_bits, 0);
-        assert_eq!(algo.total_fired, 0);
-        assert_eq!(algo.total_checks, 30 * 6);
-    }
-
-    #[test]
-    fn no_sync_rounds_never_communicate() {
-        let (mut algo, mut prob, mut bus) =
-            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 10);
-        for t in 0..9 {
-            // t = 0..8: (t+1) ∈ {1..9}, none divisible by 10
-            algo.step(t, &mut prob, &mut bus);
-            assert_eq!(bus.total_bits, 0, "t={t}");
-        }
-        algo.step(9, &mut prob, &mut bus); // t+1 = 10 syncs
-        assert!(bus.total_bits > 0);
-    }
-
-    #[test]
-    fn estimates_track_params_with_identity_compression() {
-        // With Identity compression and always-firing trigger at H=1,
-        // x̂_i = x_i^{t+½} after each sync round (perfect estimates).
-        // x^{t+½} is reconstructed as x_prev − η g (plain SGD, no momentum).
-        let (mut algo, mut prob, mut bus) =
-            mk(4, 8, Box::new(Identity), ThresholdSchedule::Zero, 1);
-        for t in 0..10 {
-            let prev: Vec<Vec<f32>> = (0..4).map(|i| algo.params(i).to_vec()).collect();
-            algo.step(t, &mut prob, &mut bus);
-            let eta = algo.cfg.lr.eta(t) as f32;
-            for i in 0..4 {
-                for ((h, xp), g) in algo
-                    .xhat(i)
-                    .iter()
-                    .zip(prev[i].iter())
-                    .zip(algo.nodes[i].grad.iter())
-                {
-                    let x_half = xp - eta * g;
-                    assert!((h - x_half).abs() < 1e-5, "t={t} node {i}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn converges_on_quadratic() {
-        let (mut algo, mut prob, mut bus) = mk(
-            8,
-            16,
-            Box::new(SignTopK::new(4)),
-            ThresholdSchedule::Poly { c0: 1.0, eps: 0.5 },
-            5,
-        );
-        for t in 0..3000 {
-            algo.step(t, &mut prob, &mut bus);
-        }
-        let gap = prob.suboptimality(&algo.x_bar());
-        assert!(gap < 0.05, "suboptimality {gap}");
-        // consensus drift is bounded and decaying (Lemma 1: ∝ η_t²/p²; at
-        // t=3000 it is well below its early-training peak)
-        assert!(
-            algo.consensus_distance() < 10.0,
-            "consensus {}",
-            algo.consensus_distance()
-        );
-        // and the trigger actually saved some broadcasts
-        assert!(algo.total_fired < algo.total_checks);
-    }
-
-    #[test]
-    fn deterministic_replay() {
-        let run = || {
-            let (mut algo, mut prob, mut bus) = mk(
-                5,
-                10,
-                Box::new(SignTopK::new(3)),
-                ThresholdSchedule::Constant(10.0),
-                5,
-            );
-            for t in 0..200 {
-                algo.step(t, &mut prob, &mut bus);
-            }
-            (algo.x_bar(), bus.total_bits)
-        };
-        let (x1, b1) = run();
-        let (x2, b2) = run();
-        assert_eq!(x1, x2);
-        assert_eq!(b1, b2);
     }
 }

@@ -8,24 +8,20 @@
 //! Every round each node broadcasts its full 32-bit parameter vector to
 //! all neighbors; this is what SPARQ's 1000×/15K× bit-savings factors are
 //! measured against.
+//!
+//! In engine terms (see [`engine`](super::engine)): [`AlwaysComm`] comm
+//! policy + [`ExactAveraging`] update rule (the gradient is applied
+//! *after* mixing, so the rule skips the local half-step). The Identity
+//! compressor is installed only so the engine is fully specified; exact
+//! averaging charges the full 32·d bits per copy itself.
 
-use super::node::NodeState;
-use super::{gradient_phase, DecentralizedAlgo};
-use crate::comm::Bus;
+use super::engine::{AlwaysComm, DecentralizedEngine, EngineConfig, ExactAveraging};
+use crate::compress::Identity;
 use crate::graph::MixingMatrix;
-use crate::problems::GradientSource;
 use crate::schedule::LrSchedule;
-use crate::util::threadpool::ThreadPool;
-use crate::util::Rng;
 
-pub struct VanillaDecentralized {
-    pub mixing: MixingMatrix,
-    pub lr: LrSchedule,
-    pub momentum: f32,
-    nodes: Vec<NodeState>,
-    mixed: Vec<Vec<f32>>,
-    pool: ThreadPool,
-}
+/// Thin constructor: D-PSGD as a [`DecentralizedEngine`] composition.
+pub struct VanillaDecentralized;
 
 impl VanillaDecentralized {
     pub fn new(
@@ -34,135 +30,32 @@ impl VanillaDecentralized {
         momentum: f32,
         d: usize,
         seed: u64,
-    ) -> VanillaDecentralized {
+    ) -> DecentralizedEngine {
         let n = mixing.n();
-        let mut root = Rng::new(seed);
-        let nodes = (0..n)
-            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
-            .collect();
-        VanillaDecentralized {
-            mixing,
-            lr,
-            momentum,
-            nodes,
-            mixed: vec![vec![0.0; d]; n],
-            pool: ThreadPool::new(1),
-        }
-    }
-
-    pub fn init_params(&mut self, x0: &[f32]) {
-        for node in self.nodes.iter_mut() {
-            node.x.copy_from_slice(x0);
-        }
-    }
-}
-
-impl DecentralizedAlgo for VanillaDecentralized {
-    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
-        let n = self.nodes.len();
-        let d = self.nodes[0].x.len();
-        let eta = self.lr.eta(t) as f32;
-
-        // Gradients at current params (no local half-step here — the
-        // gradient is applied after mixing below).
-        gradient_phase(&self.pool, &mut self.nodes, src, None);
-
-        // Exact neighbor averaging (everyone broadcasts x_i in full) —
-        // each row reads the immutable parameter bank and writes only its
-        // own mixed buffer, so rows fan out on the pool.
-        for i in 0..n {
-            bus.charge_broadcast(i, self.mixing.topology.degree(i), 32 * d as u64);
-        }
-        let pool = &self.pool;
-        let mixing = &self.mixing;
-        let nodes = &self.nodes;
-        pool.for_each_mut(&mut self.mixed, |i, row| {
-            row.fill(0.0);
-            let wii = mixing.weight(i, i) as f32;
-            for (m, x) in row.iter_mut().zip(nodes[i].x.iter()) {
-                *m = wii * x;
-            }
-            for &j in &mixing.topology.neighbors[i] {
-                let w = mixing.weight(i, j) as f32;
-                for (m, x) in row.iter_mut().zip(nodes[j].x.iter()) {
-                    *m += w * x;
-                }
-            }
-        });
-
-        // Commit: x_i = mixed_i − η·(momentum-adjusted gradient) —
-        // per-node independent, parallel.
-        let momentum = self.momentum;
-        let mixed = &self.mixed;
-        self.pool.for_each_mut(&mut self.nodes, |i, node| {
-            match node.momentum.as_mut() {
-                Some(m) => {
-                    for ((x, mi), (g, mix)) in node
-                        .x
-                        .iter_mut()
-                        .zip(m.iter_mut())
-                        .zip(node.grad.iter().zip(mixed[i].iter()))
-                    {
-                        *mi = momentum * *mi + g;
-                        *x = mix - eta * *mi;
-                    }
-                }
-                None => {
-                    for (x, (g, mix)) in node
-                        .x
-                        .iter_mut()
-                        .zip(node.grad.iter().zip(mixed[i].iter()))
-                    {
-                        *x = mix - eta * g;
-                    }
-                }
-            }
-        });
-        bus.end_round();
-    }
-
-    fn params(&self, node: usize) -> &[f32] {
-        &self.nodes[node].x
-    }
-
-    fn set_params(&mut self, x0: &[f32]) {
-        self.init_params(x0);
-    }
-
-    fn set_node_params(&mut self, node: usize, x: &[f32]) {
-        self.nodes[node].x.copy_from_slice(x);
-    }
-
-    fn momentum(&self, node: usize) -> Option<&[f32]> {
-        self.nodes[node].momentum.as_deref()
-    }
-
-    fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
-        if let Some(buf) = self.nodes[node].momentum.as_mut() {
-            buf.copy_from_slice(m);
-        }
-    }
-
-    fn set_workers(&mut self, workers: usize) {
-        self.pool = ThreadPool::new(workers);
-    }
-
-    fn n(&self) -> usize {
-        self.nodes.len()
-    }
-
-    fn last_fired(&self) -> usize {
-        self.nodes.len()
-    }
-
-    fn name(&self) -> String {
-        "vanilla-dpsgd".into()
+        DecentralizedEngine::new(
+            EngineConfig {
+                mixing,
+                compressor: Box::new(Identity),
+                comm: Box::new(AlwaysComm),
+                rule: Box::new(ExactAveraging::new(n, d)),
+                // Exact averaging has no γ-consensus step; pinning γ = 0
+                // also skips the eigen solve at construction.
+                gamma: Some(0.0),
+                lr,
+                momentum,
+                seed,
+                name: "vanilla-dpsgd".into(),
+            },
+            d,
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Bus;
+    use crate::coordinator::DecentralizedAlgo;
     use crate::graph::{uniform_neighbor, Topology, TopologyKind};
     use crate::problems::QuadraticProblem;
 

@@ -1,12 +1,13 @@
 //! Construct problems and algorithms from an `ExperimentConfig`.
 
+use crate::comm::LinkModel;
 use crate::config::{Algo, ExperimentConfig};
 use crate::coordinator::{
     run, ChocoSgd, DecentralizedAlgo, RunOptions, SparqConfig, SparqSgd, VanillaDecentralized,
 };
 use crate::data::synthetic::ClassGaussian;
 use crate::data::{by_class_shards, iid_split};
-use crate::graph::{uniform_neighbor, MixingMatrix, Topology, TopologyKind};
+use crate::graph::{uniform_neighbor, MixingMatrix, Topology, TopologyKind, TopologySchedule};
 use crate::metrics::Series;
 use crate::problems::{GradientSource, LogRegProblem, MlpProblem, QuadraticProblem};
 use crate::schedule::{LrSchedule, SyncSchedule};
@@ -73,17 +74,45 @@ pub fn build_problem(cfg: &ExperimentConfig) -> Box<dyn GradientSource> {
     }
 }
 
-/// Build the algorithm for parameter dimension `d`.
+/// Build the algorithm for parameter dimension `d`. The returned engine
+/// has the config's link model and topology schedule installed (defaults
+/// reproduce the pre-engine behavior exactly).
 pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo> {
-    let mixing = build_mixing(cfg);
+    let schedule = TopologySchedule::parse(&cfg.topology_schedule, cfg.nodes, cfg.seed)
+        .unwrap_or_else(|e| {
+            panic!("bad topology_schedule spec {:?}: {e}", cfg.topology_schedule)
+        });
+    let link = LinkModel::parse(&cfg.link, cfg.seed)
+        .unwrap_or_else(|e| panic!("bad link spec {:?}: {e}", cfg.link));
+    for &(node, _) in &link.stragglers {
+        if node >= cfg.nodes {
+            panic!(
+                "bad link spec {:?}: straggler node {node} out of range for {} nodes",
+                cfg.link, cfg.nodes
+            );
+        }
+    }
+    // A non-static schedule dictates the starting matrix (switch phase 0 /
+    // the sampling base graph) and the `topology` field is NOT consulted —
+    // the schedule spec names its own graphs. Reject the contradictory
+    // combination instead of silently ignoring an explicit topology.
+    if !schedule.is_static() && cfg.topology != ExperimentConfig::default().topology {
+        panic!(
+            "config sets topology {:?} AND non-static topology_schedule {:?} — \
+             the schedule names its own graphs, so the topology field would be \
+             ignored; remove one of the two",
+            cfg.topology, cfg.topology_schedule
+        );
+    }
+    let mixing = schedule.initial_mixing().unwrap_or_else(|| build_mixing(cfg));
     let lr = LrSchedule::parse(&cfg.lr).unwrap_or_else(|| panic!("bad lr spec {:?}", cfg.lr));
     let comp = crate::compress::parse(&cfg.compressor, d)
         .unwrap_or_else(|| panic!("bad compressor spec {:?}", cfg.compressor));
-    match cfg.algo {
+    let mut engine = match cfg.algo {
         Algo::Sparq => {
             let trigger = ThresholdSchedule::parse(&cfg.trigger)
                 .unwrap_or_else(|| panic!("bad trigger spec {:?}", cfg.trigger));
-            let sparq = SparqSgd::new(
+            SparqSgd::new(
                 SparqConfig {
                     mixing,
                     compressor: comp,
@@ -95,25 +124,16 @@ pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo
                     seed: cfg.seed,
                 },
                 d,
-            );
-            Box::new(sparq)
+            )
         }
-        Algo::Choco => Box::new(ChocoSgd::new(
-            mixing,
-            comp,
-            lr,
-            cfg.momentum as f32,
-            d,
-            cfg.seed,
-        )),
-        Algo::Vanilla => Box::new(VanillaDecentralized::new(
-            mixing,
-            lr,
-            cfg.momentum as f32,
-            d,
-            cfg.seed,
-        )),
-    }
+        Algo::Choco => ChocoSgd::new(mixing, comp, lr, cfg.momentum as f32, d, cfg.seed),
+        Algo::Vanilla => {
+            VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed)
+        }
+    };
+    engine.set_link(link);
+    engine.set_topology_schedule(schedule);
+    Box::new(engine)
 }
 
 /// Run a config end to end, returning its metric series.
@@ -184,6 +204,81 @@ mod tests {
             let a = build_algo(&cfg, 16);
             assert_eq!(a.n(), 4);
         }
+    }
+
+    #[test]
+    fn lossy_link_config_runs_and_charges_fewer_bits() {
+        let base = ExperimentConfig {
+            steps: 200,
+            eval_every: 100,
+            nodes: 6,
+            problem: "quadratic:24".into(),
+            trigger: "zero".into(),
+            h: 1,
+            ..Default::default()
+        };
+        let ideal = run_config(&base, false);
+        let lossy = run_config(
+            &ExperimentConfig {
+                link: "drop:0.3".into(),
+                ..base
+            },
+            false,
+        );
+        let ib = ideal.records.last().unwrap().bits;
+        let lb = lossy.records.last().unwrap().bits;
+        assert!(lb < ib, "lossy {lb} vs ideal {ib}");
+        assert!(lb > 0);
+    }
+
+    #[test]
+    fn topology_schedule_config_runs() {
+        let cfg = ExperimentConfig {
+            steps: 400,
+            eval_every: 100,
+            nodes: 16,
+            problem: "quadratic:24".into(),
+            topology_schedule: "switch:ring,torus:100".into(),
+            ..Default::default()
+        };
+        let series = run_config(&cfg, false);
+        let first = &series.records[0];
+        let last = series.records.last().unwrap();
+        assert!(last.opt_gap < first.opt_gap);
+        assert!(last.bits > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad link spec")]
+    fn bad_link_panics() {
+        let cfg = ExperimentConfig {
+            link: "drop:2".into(),
+            ..Default::default()
+        };
+        build_algo(&cfg, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn straggler_index_out_of_range_panics() {
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            link: "straggler:4:0.5".into(),
+            ..Default::default()
+        };
+        build_algo(&cfg, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "names its own graphs")]
+    fn conflicting_topology_and_schedule_panics() {
+        let cfg = ExperimentConfig {
+            nodes: 16,
+            topology: "torus".into(),
+            topology_schedule: "switch:ring,torus:100".into(),
+            ..Default::default()
+        };
+        build_algo(&cfg, 16);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Experiment drivers regenerating the paper's evaluation (Figure 1a–1d),
-//! the Remark-4 savings comparison, and the Theorem-1 rate sweeps.
+//! the Remark-4 savings comparison, the Theorem-1 rate sweeps, and the
+//! lossy-link / time-varying-topology robustness sweeps.
 
 pub mod ablation;
 pub mod builder;
 pub mod fig1;
+pub mod robustness;
 pub mod savings;
 pub mod rates;
 

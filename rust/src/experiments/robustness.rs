@@ -1,0 +1,208 @@
+//! Robustness sweep: how the three schemes behave on unreliable fabrics
+//! and time-varying topologies (the scenarios `comm::link` and
+//! `graph::dynamic` add to the engine).
+//!
+//! The question the drop sweep answers: SPARQ's event trigger fires on
+//! *drift* ‖x^{t+½} − x̂‖², and lost updates leave the sender's estimate
+//! advanced while receivers stall — does the trigger keep suppressing
+//! broadcasts under loss, or does the growing disagreement force it to
+//! fire more? (EXPERIMENTS.md §Robustness records protocol + expected
+//! behavior: the transmit rate rises with drop probability, while
+//! CHOCO/vanilla — trigger-free — keep transmitting at rate 1 and pay
+//! the loss purely as consensus error.)
+//!
+//! The switch sweep runs SPARQ on `switch:ring,torus:P` against the two
+//! static topologies, checking that mid-run re-wiring (with the
+//! consensus accumulator rebuilt at each switch) is no worse than the
+//! weaker static graph.
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::coordinator::{run, RunOptions};
+use crate::metrics::Series;
+use crate::util::Rng;
+
+use super::builder::{build_algo, build_problem};
+
+/// One (algorithm, scenario) measurement.
+#[derive(Clone, Debug)]
+pub struct RobustnessPoint {
+    pub label: String,
+    pub algo: Algo,
+    /// Per-copy drop probability of the scenario (0 for switch runs).
+    pub drop_p: f64,
+    pub final_loss: f64,
+    pub consensus: f64,
+    pub total_bits: u64,
+    /// Fraction of trigger checks that transmitted (1.0 for CHOCO/vanilla
+    /// up to straggler skips).
+    pub transmit_rate: f64,
+}
+
+/// Run one config, returning its series plus the engine's transmit rate.
+fn run_one(cfg: &ExperimentConfig) -> (Series, RobustnessPoint) {
+    let mut problem = build_problem(cfg);
+    let d = problem.dim();
+    let mut algo = build_algo(cfg, d);
+    let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+    if let Some(x0) = problem.init_params(&mut init_rng) {
+        algo.set_params(&x0);
+    }
+    let opts = RunOptions {
+        steps: cfg.steps,
+        eval_every: cfg.eval_every,
+        verbose: false,
+        workers: cfg.workers,
+    };
+    let mut series = run(algo.as_mut(), problem.as_mut(), &opts);
+    series.label = format!("{}:{}", cfg.name, algo.name());
+    let (fired, checks) = algo.fired_stats();
+    let last = series.records.last().expect("at least one record");
+    let point = RobustnessPoint {
+        label: cfg.name.clone(),
+        algo: cfg.algo.clone(),
+        drop_p: 0.0,
+        final_loss: last.loss,
+        consensus: last.consensus,
+        total_bits: last.bits,
+        transmit_rate: fired as f64 / checks.max(1) as f64,
+    };
+    (series, point)
+}
+
+/// The sweep's shared base workload (small quadratic — the claims under
+/// test are about communication behavior, not model quality).
+fn base_cfg(steps: u64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "robustness".into(),
+        nodes: 16,
+        steps,
+        eval_every: (steps / 20).max(1),
+        seed,
+        problem: "quadratic:64".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:50".into(),
+        h: 2,
+        ..Default::default()
+    }
+}
+
+/// Lossy-link sweep: SPARQ vs CHOCO vs vanilla at each drop probability.
+pub fn drop_sweep(
+    steps: u64,
+    seed: u64,
+    probs: &[f64],
+) -> (Vec<RobustnessPoint>, Vec<Series>) {
+    let mut points = Vec::new();
+    let mut series = Vec::new();
+    for &p in probs {
+        for algo in [Algo::Sparq, Algo::Choco, Algo::Vanilla] {
+            let mut cfg = base_cfg(steps, seed);
+            cfg.algo = algo.clone();
+            if p > 0.0 {
+                cfg.link = format!("drop:{p}");
+            }
+            cfg.name = format!("robust-{}-drop{p}", algo.as_str());
+            let (s, mut point) = run_one(&cfg);
+            point.drop_p = p;
+            points.push(point);
+            series.push(s);
+        }
+    }
+    (points, series)
+}
+
+/// Time-varying-topology comparison: SPARQ on `switch:ring,torus:P` vs
+/// the two static graphs (same workload, same seeds).
+pub fn switch_sweep(steps: u64, seed: u64) -> (Vec<RobustnessPoint>, Vec<Series>) {
+    let period = (steps / 8).max(1);
+    let scenarios: [(&str, String, String); 3] = [
+        ("robust-static-ring", "static".into(), "ring".into()),
+        ("robust-static-torus", "static".into(), "torus".into()),
+        (
+            "robust-switch-ring-torus",
+            format!("switch:ring,torus:{period}"),
+            "ring".into(),
+        ),
+    ];
+    let mut points = Vec::new();
+    let mut series = Vec::new();
+    for (name, schedule, topology) in scenarios {
+        let mut cfg = base_cfg(steps, seed);
+        cfg.name = name.into();
+        cfg.topology = topology;
+        cfg.topology_schedule = schedule;
+        let (s, point) = run_one(&cfg);
+        points.push(point);
+        series.push(s);
+    }
+    (points, series)
+}
+
+/// Formatted comparison table.
+pub fn table(points: &[RobustnessPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>6} {:>12} {:>12} {:>14} {:>9}\n",
+        "scenario", "drop", "final loss", "consensus", "bits", "tx rate"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:<28} {:>6.2} {:>12.5} {:>12.3e} {:>14} {:>8.1}%\n",
+            p.label,
+            p.drop_p,
+            p.final_loss,
+            p.consensus,
+            p.total_bits,
+            100.0 * p.transmit_rate
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_sweep_runs_and_orders_bits() {
+        let (points, series) = drop_sweep(300, 5, &[0.0, 0.3]);
+        assert_eq!(points.len(), 6);
+        assert_eq!(series.len(), 6);
+        assert!(series.iter().all(|s| !s.records.is_empty()));
+        let bits = |algo: &Algo, p: f64| {
+            points
+                .iter()
+                .find(|pt| pt.algo == *algo && pt.drop_p == p)
+                .unwrap()
+                .total_bits
+        };
+        // fewer delivered copies ⇒ fewer charged bits, for every scheme
+        assert!(bits(&Algo::Choco, 0.3) < bits(&Algo::Choco, 0.0));
+        assert!(bits(&Algo::Vanilla, 0.3) < bits(&Algo::Vanilla, 0.0));
+        // trigger-free schemes transmit at rate 1 regardless of loss
+        let choco = points
+            .iter()
+            .find(|pt| pt.algo == Algo::Choco && pt.drop_p == 0.3)
+            .unwrap();
+        assert!((choco.transmit_rate - 1.0).abs() < 1e-12);
+        // SPARQ's trigger actually suppresses some broadcasts
+        let sparq = points
+            .iter()
+            .find(|pt| pt.algo == Algo::Sparq && pt.drop_p == 0.0)
+            .unwrap();
+        assert!(sparq.transmit_rate < 1.0);
+    }
+
+    #[test]
+    fn switch_sweep_emits_three_series() {
+        let (points, series) = switch_sweep(320, 7);
+        assert_eq!(points.len(), 3);
+        assert!(series.iter().all(|s| s.records.len() >= 2));
+        // every scenario optimizes
+        for s in &series {
+            let first = &s.records[0];
+            let last = s.records.last().unwrap();
+            assert!(last.loss < first.loss, "{}: no progress", s.label);
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Time-varying communication topologies.
+//!
+//! The seed engine fixed one mixing matrix for the whole run. Real
+//! decentralized deployments change topology mid-training — machines
+//! join racks, gossip protocols sample a few edges per round — and the
+//! theory (e.g. B-connected time-varying graphs in the decentralized-SGD
+//! literature) covers exactly these schedules. A [`TopologySchedule`]
+//! tells the engine which mixing matrix is in force at each sync index:
+//!
+//! * `static` — today's behavior: the `topology` config field, never
+//!   changed (zero overhead on the step loop).
+//! * `switch:K1,K2,...:P` — cycle through topology kinds, switching every
+//!   P iterations (e.g. `switch:ring,torus:500`). The run starts on K1.
+//! * `sample:BASE:M` — randomized gossip: each sync round activates M
+//!   edges sampled uniformly (seeded, per-round) from the BASE graph;
+//!   consensus runs on the sampled subgraph only. Individual rounds may
+//!   be disconnected — mixing happens across rounds, as in asynchronous
+//!   gossip analyses.
+//!
+//! On every switch the engine swaps its mixing matrix and asks the
+//! update rule to rebuild topology-derived state (the consensus
+//! [`NeighborAccumulator`](crate::coordinator::NeighborAccumulator) is
+//! reconstructed from the current estimate bank in one dense pass —
+//! incremental maintenance then resumes on the new edge set). For
+//! estimate-tracking rules the rebuild is *charged*: each node
+//! broadcasts its full-precision x̂ to its new neighborhood (32·d per
+//! copy), since a freshly-wired neighbor has no other way to obtain the
+//! estimate it is about to track. That makes `switch` cheap (one resync
+//! per phase boundary) but `sample` expensive under estimate tracking
+//! (a resync every sync round) — per-round sampled gossip pairs
+//! naturally with the exact-averaging rule, which re-broadcasts its
+//! state anyway and needs no resync. The consensus step size γ is tuned
+//! once against the *initial* matrix (kinds[0] / the full BASE graph);
+//! pass an explicit γ to override.
+//!
+//! Sampling is seeded and stateless in `t` (a fresh `Rng` is derived per
+//! round from `(seed, t)`), so schedules replay bit-for-bit and never
+//! interact with node RNG streams or worker counts.
+
+use super::mixing::{uniform_neighbor, MixingMatrix};
+use super::topology::{Topology, TopologyKind};
+use crate::util::rng::{splitmix64, Rng};
+
+#[derive(Clone, Debug)]
+enum ScheduleKind {
+    Static,
+    Switch {
+        kinds: Vec<TopologyKind>,
+        period: u64,
+    },
+    EdgeSample {
+        base: Topology,
+        /// Undirected edge list (i < j) of the base graph.
+        edges: Vec<(usize, usize)>,
+        /// Edges activated per sync round.
+        m: usize,
+    },
+}
+
+/// A schedule of mixing matrices over iterations (see module docs).
+#[derive(Clone, Debug)]
+pub struct TopologySchedule {
+    kind: ScheduleKind,
+    n: usize,
+    seed: u64,
+    /// Index of the currently-installed phase (switch schedules only).
+    current: usize,
+}
+
+impl TopologySchedule {
+    /// The no-op schedule (today's fixed-topology behavior).
+    pub fn fixed() -> TopologySchedule {
+        TopologySchedule {
+            kind: ScheduleKind::Static,
+            n: 0,
+            seed: 0,
+            current: 0,
+        }
+    }
+
+    /// Parse a schedule spec for an n-node run: `static`,
+    /// `switch:K1,K2,...:P`, or `sample:BASE:M`.
+    pub fn parse(spec: &str, n: usize, seed: u64) -> Result<TopologySchedule, String> {
+        if spec.is_empty() || spec == "static" {
+            return Ok(TopologySchedule::fixed());
+        }
+        let parts: Vec<&str> = spec.split(':').collect();
+        let kind = match parts.as_slice() {
+            ["switch", kinds, period] => {
+                let kinds: Vec<TopologyKind> = kinds
+                    .split(',')
+                    .map(|k| {
+                        TopologyKind::parse(k).ok_or_else(|| format!("unknown topology {k:?}"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                if kinds.is_empty() {
+                    return Err("switch needs at least one topology".into());
+                }
+                let period: u64 = period
+                    .parse()
+                    .map_err(|_| format!("switch period {period:?} is not an integer"))?;
+                if period == 0 {
+                    return Err("switch period must be >= 1".into());
+                }
+                ScheduleKind::Switch { kinds, period }
+            }
+            ["sample", base, m] => {
+                let base_kind = TopologyKind::parse(base)
+                    .ok_or_else(|| format!("unknown base topology {base:?}"))?;
+                let base = Topology::new(base_kind, n, seed);
+                let mut edges = Vec::new();
+                for (i, adj) in base.neighbors.iter().enumerate() {
+                    for &j in adj {
+                        if i < j {
+                            edges.push((i, j));
+                        }
+                    }
+                }
+                let m: usize = m
+                    .parse()
+                    .map_err(|_| format!("sample edge count {m:?} is not an integer"))?;
+                if m == 0 {
+                    return Err("sample needs at least one edge per round".into());
+                }
+                if m > edges.len() {
+                    return Err(format!(
+                        "sample asks for {m} edges per round but the base graph has \
+                         only {}",
+                        edges.len()
+                    ));
+                }
+                ScheduleKind::EdgeSample { base, edges, m }
+            }
+            _ => {
+                return Err(format!(
+                    "unknown topology_schedule {spec:?}; expected static, \
+                     switch:K1,K2,...:P, or sample:BASE:M"
+                ))
+            }
+        };
+        Ok(TopologySchedule {
+            kind,
+            n,
+            seed,
+            current: 0,
+        })
+    }
+
+    /// True for the fixed (seed-equivalent) schedule.
+    pub fn is_static(&self) -> bool {
+        matches!(self.kind, ScheduleKind::Static)
+    }
+
+    /// The mixing matrix the run must *start* on (`None` ⇒ whatever the
+    /// static config builds). For `switch` this is kinds[0]; for `sample`
+    /// it is the full base graph, so spectral tuning sees the long-run
+    /// connectivity.
+    pub fn initial_mixing(&self) -> Option<MixingMatrix> {
+        match &self.kind {
+            ScheduleKind::Static => None,
+            ScheduleKind::Switch { kinds, .. } => {
+                Some(uniform_neighbor(&Topology::new(kinds[0], self.n, self.seed)))
+            }
+            ScheduleKind::EdgeSample { base, .. } => Some(uniform_neighbor(base)),
+        }
+    }
+
+    /// Called by the engine at each sync index: returns the new mixing
+    /// matrix when the topology changes at iteration t, `None` when the
+    /// installed one stays in force.
+    pub fn update(&mut self, t: u64) -> Option<MixingMatrix> {
+        match &self.kind {
+            ScheduleKind::Static => None,
+            ScheduleKind::Switch { kinds, period } => {
+                let idx = ((t / period) % kinds.len() as u64) as usize;
+                if idx == self.current {
+                    return None;
+                }
+                self.current = idx;
+                Some(uniform_neighbor(&Topology::new(kinds[idx], self.n, self.seed)))
+            }
+            ScheduleKind::EdgeSample { base, edges, m } => {
+                let mut s = self
+                    .seed
+                    .wrapping_add(t.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                    ^ 0x5A4D_7019_C3E8_2B61;
+                let mut rng = Rng::new(splitmix64(&mut s));
+                let chosen = rng.sample_indices(edges.len(), *m);
+                let mut neighbors: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+                for &e in &chosen {
+                    let (i, j) = edges[e];
+                    neighbors[i].push(j);
+                    neighbors[j].push(i);
+                }
+                for adj in neighbors.iter_mut() {
+                    adj.sort_unstable();
+                }
+                Some(uniform_neighbor(&Topology {
+                    n: self.n,
+                    kind: base.kind,
+                    neighbors,
+                }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_never_updates() {
+        let mut s = TopologySchedule::parse("static", 8, 1).unwrap();
+        assert!(s.is_static());
+        assert!(s.initial_mixing().is_none());
+        assert!((0..100).all(|t| s.update(t).is_none()));
+    }
+
+    #[test]
+    fn switch_changes_at_period_boundaries() {
+        let mut s = TopologySchedule::parse("switch:ring,torus:500", 16, 3).unwrap();
+        assert!(!s.is_static());
+        // starts on ring (degree 2 everywhere)
+        let init = s.initial_mixing().unwrap();
+        assert!(init.topology.neighbors.iter().all(|a| a.len() == 2));
+        // stays on ring through the first phase
+        assert!(s.update(0).is_none());
+        assert!(s.update(499).is_none());
+        // switches to torus (degree 4) at t = 500
+        let m = s.update(500).expect("switch at t=500");
+        assert!(m.topology.neighbors.iter().all(|a| a.len() == 4));
+        m.validate().unwrap();
+        assert!(s.update(700).is_none());
+        // cycles back to ring at t = 1000
+        let m = s.update(1000).expect("switch back at t=1000");
+        assert!(m.topology.neighbors.iter().all(|a| a.len() == 2));
+    }
+
+    #[test]
+    fn edge_sample_is_seeded_and_per_round() {
+        let mut a = TopologySchedule::parse("sample:complete:4", 8, 7).unwrap();
+        let mut b = TopologySchedule::parse("sample:complete:4", 8, 7).unwrap();
+        let ma = a.update(13).unwrap();
+        let mb = b.update(13).unwrap();
+        assert_eq!(ma.topology.neighbors, mb.topology.neighbors);
+        ma.validate().unwrap();
+        // exactly 4 undirected edges activated
+        let deg_sum: usize = ma.topology.neighbors.iter().map(Vec::len).sum();
+        assert_eq!(deg_sum, 8);
+        // a different round samples a different subgraph (w.h.p.)
+        let mc = a.update(14).unwrap();
+        assert_ne!(ma.topology.neighbors, mc.topology.neighbors);
+        // full base graph as the initial (tuning) matrix
+        let init = a.initial_mixing().unwrap();
+        assert_eq!(init.topology.edge_count(), 28);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(TopologySchedule::parse("switch:ring", 8, 0).is_err());
+        assert!(TopologySchedule::parse("switch:ring,wat:10", 8, 0).is_err());
+        assert!(TopologySchedule::parse("switch:ring,torus:0", 16, 0).is_err());
+        assert!(TopologySchedule::parse("sample:ring:0", 8, 0).is_err());
+        // an 8-node ring has 8 edges — asking for more is an error, not a clamp
+        assert!(TopologySchedule::parse("sample:ring:9", 8, 0).is_err());
+        assert!(TopologySchedule::parse("sample:ring:8", 8, 0).is_ok());
+        assert!(TopologySchedule::parse("carousel:ring:5", 8, 0).is_err());
+    }
+}

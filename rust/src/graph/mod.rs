@@ -5,7 +5,9 @@
 pub mod topology;
 pub mod mixing;
 pub mod spectral;
+pub mod dynamic;
 
+pub use dynamic::TopologySchedule;
 pub use mixing::{metropolis_hastings, uniform_neighbor, MixingMatrix};
 pub use spectral::SpectralInfo;
 pub use topology::{Topology, TopologyKind};

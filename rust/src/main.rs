@@ -6,14 +6,19 @@
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
 //!   ablate   --knob h|c0|k|gamma|all            Remark-1 knob sweeps
+//!   robustness --steps 2000 --out results/      lossy links + switching
+//!                                               topologies sweep
 //!   artifacts                                   list + smoke the manifest
 //!   version
 //!
 //! Examples:
 //!   sparq train --algo sparq --nodes 8 --steps 2000 --problem quadratic:64
 //!   sparq train --workers 8 --nodes 16 --problem quadratic:4096
+//!   sparq train --link drop:0.2 --trigger const:50 --h 2
+//!   sparq train --nodes 16 --topology-schedule switch:ring,torus:500
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
+//!   sparq robustness --steps 2000 --drops 0.0,0.1,0.3
 
 use sparq::config::{Algo, ExperimentConfig};
 use sparq::experiments::{fig1, run_config};
@@ -28,11 +33,12 @@ fn main() {
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
         Some("spectral") => cmd_spectral(&args),
         Some("ablate") => cmd_ablate(&args),
+        Some("robustness") => cmd_robustness(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|fig1a|fig1b|fig1c|fig1d|spectral|ablate|artifacts|version> [flags]\n\
+                "usage: sparq <train|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -60,6 +66,12 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
     }
     if let Some(v) = args.get("topology") {
         cfg.topology = v.to_string();
+    }
+    if let Some(v) = args.get("topology-schedule") {
+        cfg.topology_schedule = v.to_string();
+    }
+    if let Some(v) = args.get("link") {
+        cfg.link = v.to_string();
     }
     if let Some(v) = args.get("compressor") {
         cfg.compressor = v.to_string();
@@ -167,6 +179,25 @@ fn cmd_ablate(args: &Args) {
             ablation::table(&ablation::gamma_sweep(&base, &[0.01, 0.05, 0.1, 0.25, 0.5]))
         );
     }
+}
+
+fn cmd_robustness(args: &Args) {
+    use sparq::experiments::robustness;
+    let steps = args.u64("steps", 2000);
+    let seed = args.u64("seed", 42);
+    let drops: Vec<f64> = args
+        .get_or("drops", "0.0,0.1,0.3")
+        .split(',')
+        .map(|p| p.parse().unwrap_or_else(|_| panic!("--drops expects numbers, got {p:?}")))
+        .collect();
+    println!("-- lossy links: SPARQ vs CHOCO vs vanilla, drop p ∈ {drops:?} --");
+    let (points, mut series) = robustness::drop_sweep(steps, seed, &drops);
+    println!("{}", robustness::table(&points));
+    println!("-- time-varying topology: static ring / static torus / switch --");
+    let (points, switch_series) = robustness::switch_sweep(steps, seed);
+    println!("{}", robustness::table(&points));
+    series.extend(switch_series);
+    write_series(&series, args.get("out"));
 }
 
 fn cmd_spectral(args: &Args) {

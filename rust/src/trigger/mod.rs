@@ -66,19 +66,40 @@ impl ThresholdSchedule {
     }
 
     /// Parse "zero", "const:C", "poly:C0:EPS", "piecewise:INIT:STEP:EVERY:UNTIL:SPE".
+    ///
+    /// Validated: thresholds must be finite and non-negative, and `poly`
+    /// requires ε ∈ (0, 1) — c_t = c₀·t^{1−ε} is o(t) only there, which
+    /// is what Theorem 1's analysis assumes (`poly:2:-1` would grow
+    /// *superlinearly* and silently void the guarantee).
     pub fn parse(s: &str) -> Option<ThresholdSchedule> {
+        let finite_nonneg = |x: f64| x.is_finite() && x >= 0.0;
         let p: Vec<&str> = s.split(':').collect();
         match p.as_slice() {
             ["zero"] => Some(ThresholdSchedule::Zero),
-            ["const", c] => Some(ThresholdSchedule::Constant(c.parse().ok()?)),
-            ["poly", c0, eps] => Some(ThresholdSchedule::Poly {
-                c0: c0.parse().ok()?,
-                eps: eps.parse().ok()?,
-            }),
+            ["const", c] => {
+                let c: f64 = c.parse().ok()?;
+                if !finite_nonneg(c) {
+                    return None;
+                }
+                Some(ThresholdSchedule::Constant(c))
+            }
+            ["poly", c0, eps] => {
+                let c0: f64 = c0.parse().ok()?;
+                let eps: f64 = eps.parse().ok()?;
+                if !finite_nonneg(c0) || !(eps > 0.0 && eps < 1.0) {
+                    return None;
+                }
+                Some(ThresholdSchedule::Poly { c0, eps })
+            }
             ["piecewise", init, step, every, until, spe] => {
+                let init: f64 = init.parse().ok()?;
+                let step: f64 = step.parse().ok()?;
+                if !finite_nonneg(init) || !finite_nonneg(step) {
+                    return None;
+                }
                 Some(ThresholdSchedule::PiecewiseEpoch {
-                    init: init.parse().ok()?,
-                    step: step.parse().ok()?,
+                    init,
+                    step,
                     every: every.parse().ok()?,
                     until: until.parse().ok()?,
                     steps_per_epoch: spe.parse().ok()?,
@@ -177,5 +198,26 @@ mod tests {
         );
         assert!(ThresholdSchedule::parse("piecewise:2:1:10:60:100").is_some());
         assert!(ThresholdSchedule::parse("wat").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_analysis_violating_schedules() {
+        // ε ∉ (0,1) ⇒ c_t is not o(t) (Theorem 1's assumption)
+        assert!(ThresholdSchedule::parse("poly:2:-1").is_none());
+        assert!(ThresholdSchedule::parse("poly:2:0").is_none());
+        assert!(ThresholdSchedule::parse("poly:2:1").is_none());
+        assert!(ThresholdSchedule::parse("poly:2:1.5").is_none());
+        // non-finite / negative thresholds
+        assert!(ThresholdSchedule::parse("poly:-3:0.5").is_none());
+        assert!(ThresholdSchedule::parse("poly:inf:0.5").is_none());
+        assert!(ThresholdSchedule::parse("poly:nan:0.5").is_none());
+        assert!(ThresholdSchedule::parse("const:-5").is_none());
+        assert!(ThresholdSchedule::parse("const:inf").is_none());
+        assert!(ThresholdSchedule::parse("piecewise:inf:1:10:60:100").is_none());
+        assert!(ThresholdSchedule::parse("piecewise:-5:1:10:60:100").is_none());
+        assert!(ThresholdSchedule::parse("piecewise:2:-1:10:60:100").is_none());
+        // the valid interior still parses
+        assert!(ThresholdSchedule::parse("poly:2:0.5").is_some());
+        assert!(ThresholdSchedule::parse("const:0").is_some());
     }
 }

@@ -10,7 +10,7 @@
 
 use sparq::comm::Bus;
 use sparq::compress::{SignTopK, TopK};
-use sparq::coordinator::{ChocoSgd, DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::coordinator::{ChocoSgd, DecentralizedAlgo, DecentralizedEngine, SparqConfig, SparqSgd};
 use sparq::experiments::rates;
 use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
 use sparq::problems::QuadraticProblem;
@@ -89,7 +89,7 @@ fn mk_sparq(
     seed: u64,
     d: usize,
     n: usize,
-) -> (SparqSgd, QuadraticProblem, Bus) {
+) -> (DecentralizedEngine, QuadraticProblem, Bus) {
     let topo = Topology::new(TopologyKind::Ring, n, 0);
     let cfg = SparqConfig {
         mixing: uniform_neighbor(&topo),

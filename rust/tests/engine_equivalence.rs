@@ -1,0 +1,602 @@
+//! Engine-equivalence suite (ISSUE 2): the policy-driven
+//! `DecentralizedEngine` must reproduce the three *seed* coordinators —
+//! SPARQ, CHOCO, vanilla D-PSGD — bit-for-bit on fixed seeds.
+//!
+//! The seed step loops were deleted in the refactor, so they are
+//! re-implemented here, verbatim, as sequential reference coordinators
+//! built from the same public primitives (`NodeState`,
+//! `NeighborAccumulator`, `Compressor`, `EventTrigger`). Every scenario
+//! steps the engine and its reference in lockstep and asserts exact
+//! equality of per-node parameters, x̄, bus counters (bits, messages,
+//! rounds, per-node bits), and fired counts at every eval point.
+//!
+//! Also pinned here: the new scenario layers are deterministic — lossy
+//! links and sampled-gossip topologies produce identical series for any
+//! worker count (link coins are stateless hashes; topology sampling
+//! derives a fresh seeded stream per round).
+
+use sparq::comm::Bus;
+use sparq::compress::{Compressor, SignTopK, TopK};
+use sparq::config::ExperimentConfig;
+use sparq::coordinator::node::NodeState;
+use sparq::coordinator::{
+    ChocoSgd, DecentralizedAlgo, NeighborAccumulator, SparqConfig, SparqSgd,
+    VanillaDecentralized,
+};
+use sparq::experiments::run_config;
+use sparq::graph::{uniform_neighbor, MixingMatrix, SpectralInfo, Topology, TopologyKind};
+use sparq::linalg::sub_into;
+use sparq::problems::{GradientSource, QuadraticProblem};
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::Rng;
+
+// ---------------------------------------------------------------------
+// Seed reference coordinators (verbatim re-implementations of the
+// pre-engine step bodies, sequential / workers = 1 semantics)
+// ---------------------------------------------------------------------
+
+struct SeedSparq {
+    mixing: MixingMatrix,
+    compressor: Box<dyn Compressor>,
+    trigger: EventTrigger,
+    lr: LrSchedule,
+    sync: SyncSchedule,
+    gamma: f64,
+    momentum: f32,
+    nodes: Vec<NodeState>,
+    xhat: Vec<Vec<f32>>,
+    nbr: NeighborAccumulator,
+    total_fired: u64,
+    total_checks: u64,
+    fired_last: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+impl SeedSparq {
+    fn new(
+        mixing: MixingMatrix,
+        compressor: Box<dyn Compressor>,
+        trigger: EventTrigger,
+        lr: LrSchedule,
+        sync: SyncSchedule,
+        momentum: f32,
+        seed: u64,
+        d: usize,
+    ) -> SeedSparq {
+        let n = mixing.n();
+        let spectral = SpectralInfo::compute(&mixing);
+        let gamma =
+            spectral.gamma_tuned(compressor.omega(d), compressor.effective_omega(d));
+        let mut root = Rng::new(seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        let nbr = NeighborAccumulator::new(&mixing, d);
+        SeedSparq {
+            mixing,
+            compressor,
+            trigger,
+            lr,
+            sync,
+            gamma,
+            momentum,
+            nodes,
+            xhat: vec![vec![0.0; d]; n],
+            nbr,
+            total_fired: 0,
+            total_checks: 0,
+            fired_last: 0,
+        }
+    }
+
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let eta64 = self.lr.eta(t);
+        let eta = eta64 as f32;
+
+        // lines 3–4: gradient + local half-step, every node
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(i, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+            node.local_step(eta, self.momentum);
+        }
+
+        if self.sync.is_sync(t) {
+            // lines 7–9: trigger check + compress against pre-update x̂
+            for (i, node) in self.nodes.iter_mut().enumerate() {
+                node.fired = self.trigger.fires(&node.x_half, &self.xhat[i], t, eta64);
+                if node.fired {
+                    sub_into(&node.x_half, &self.xhat[i], &mut node.diff);
+                    self.compressor
+                        .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
+                }
+            }
+
+            // lines 9–13: charge broadcasts + estimate updates, node order
+            let d = self.xhat[0].len();
+            self.total_checks += n as u64;
+            let mut fired_count = 0usize;
+            for i in 0..n {
+                if !self.nodes[i].fired {
+                    continue;
+                }
+                fired_count += 1;
+                let q = &self.nodes[i].q;
+                let bits = self.compressor.message_bits(d, q.nnz());
+                bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
+                q.add_to(&mut self.xhat[i]);
+                self.nbr.apply_broadcast(i, q);
+            }
+            self.fired_last = fired_count;
+            self.total_fired += fired_count as u64;
+
+            // line 15: consensus commit
+            let gamma = self.gamma as f32;
+            for (i, node) in self.nodes.iter_mut().enumerate() {
+                std::mem::swap(&mut node.x, &mut node.x_half);
+                self.nbr.commit(i, gamma, &self.xhat[i], &mut node.x);
+            }
+        } else {
+            // line 17: local step only
+            for node in self.nodes.iter_mut() {
+                std::mem::swap(&mut node.x, &mut node.x_half);
+            }
+            self.fired_last = 0;
+        }
+        bus.end_round();
+    }
+}
+
+struct SeedChoco {
+    mixing: MixingMatrix,
+    compressor: Box<dyn Compressor>,
+    lr: LrSchedule,
+    gamma: f64,
+    momentum: f32,
+    nodes: Vec<NodeState>,
+    xhat: Vec<Vec<f32>>,
+    nbr: NeighborAccumulator,
+}
+
+impl SeedChoco {
+    fn new(
+        mixing: MixingMatrix,
+        compressor: Box<dyn Compressor>,
+        lr: LrSchedule,
+        momentum: f32,
+        d: usize,
+        seed: u64,
+    ) -> SeedChoco {
+        let n = mixing.n();
+        let spectral = SpectralInfo::compute(&mixing);
+        let gamma =
+            spectral.gamma_tuned(compressor.omega(d), compressor.effective_omega(d));
+        let mut root = Rng::new(seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        let nbr = NeighborAccumulator::new(&mixing, d);
+        SeedChoco {
+            mixing,
+            compressor,
+            lr,
+            gamma,
+            momentum,
+            nodes,
+            xhat: vec![vec![0.0; d]; n],
+            nbr,
+        }
+    }
+
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let eta = self.lr.eta(t) as f32;
+
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(i, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+            node.local_step(eta, self.momentum);
+        }
+
+        // every node transmits every round (the CHOCO contract)
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            sub_into(&node.x_half, &self.xhat[i], &mut node.diff);
+            self.compressor
+                .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
+        }
+
+        let d = self.xhat[0].len();
+        for i in 0..n {
+            let q = &self.nodes[i].q;
+            let bits = self.compressor.message_bits(d, q.nnz());
+            bus.charge_broadcast(i, self.mixing.topology.degree(i), bits);
+            q.add_to(&mut self.xhat[i]);
+            self.nbr.apply_broadcast(i, q);
+        }
+
+        let gamma = self.gamma as f32;
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            std::mem::swap(&mut node.x, &mut node.x_half);
+            self.nbr.commit(i, gamma, &self.xhat[i], &mut node.x);
+        }
+        bus.end_round();
+    }
+}
+
+struct SeedVanilla {
+    mixing: MixingMatrix,
+    lr: LrSchedule,
+    momentum: f32,
+    nodes: Vec<NodeState>,
+    mixed: Vec<Vec<f32>>,
+}
+
+impl SeedVanilla {
+    fn new(
+        mixing: MixingMatrix,
+        lr: LrSchedule,
+        momentum: f32,
+        d: usize,
+        seed: u64,
+    ) -> SeedVanilla {
+        let n = mixing.n();
+        let mut root = Rng::new(seed);
+        let nodes = (0..n)
+            .map(|i| NodeState::new(d, momentum > 0.0, root.fork(i as u64)))
+            .collect();
+        SeedVanilla {
+            mixing,
+            lr,
+            momentum,
+            nodes,
+            mixed: vec![vec![0.0; d]; n],
+        }
+    }
+
+    fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+        let n = self.nodes.len();
+        let d = self.nodes[0].x.len();
+        let eta = self.lr.eta(t) as f32;
+
+        // gradients at current params (applied after mixing below)
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let x = std::mem::take(&mut node.x);
+            src.grad(i, &x, &mut node.rng, &mut node.grad);
+            node.x = x;
+        }
+
+        for i in 0..n {
+            bus.charge_broadcast(i, self.mixing.topology.degree(i), 32 * d as u64);
+        }
+        for i in 0..n {
+            let wii = self.mixing.weight(i, i) as f32;
+            let row = &mut self.mixed[i];
+            for (m, x) in row.iter_mut().zip(self.nodes[i].x.iter()) {
+                *m = wii * x;
+            }
+            for &j in &self.mixing.topology.neighbors[i] {
+                let w = self.mixing.weight(i, j) as f32;
+                for (m, x) in row.iter_mut().zip(self.nodes[j].x.iter()) {
+                    *m += w * x;
+                }
+            }
+        }
+
+        let momentum = self.momentum;
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            match node.momentum.as_mut() {
+                Some(m) => {
+                    for ((x, mi), (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(m.iter_mut())
+                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                    {
+                        *mi = momentum * *mi + g;
+                        *x = mix - eta * *mi;
+                    }
+                }
+                None => {
+                    for (x, (g, mix)) in node
+                        .x
+                        .iter_mut()
+                        .zip(node.grad.iter().zip(self.mixed[i].iter()))
+                    {
+                        *x = mix - eta * g;
+                    }
+                }
+            }
+        }
+        bus.end_round();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Equivalence scenarios
+// ---------------------------------------------------------------------
+
+fn ring_mixing(n: usize) -> MixingMatrix {
+    uniform_neighbor(&Topology::new(TopologyKind::Ring, n, 0))
+}
+
+fn quad(d: usize, n: usize, seed: u64) -> QuadraticProblem {
+    QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, seed)
+}
+
+#[test]
+fn sparq_engine_reproduces_seed_coordinator_bit_for_bit() {
+    let (n, d, steps, seed) = (8usize, 48usize, 300u64, 17u64);
+    let lr = LrSchedule::InverseTime { a: 60.0, b: 2.0 };
+    let trig = ThresholdSchedule::Constant(5.0);
+
+    let mut engine = SparqSgd::new(
+        SparqConfig {
+            mixing: ring_mixing(n),
+            compressor: Box::new(SignTopK::new(6)),
+            trigger: EventTrigger::new(trig.clone()),
+            lr: lr.clone(),
+            sync: SyncSchedule::EveryH(2),
+            gamma: None,
+            momentum: 0.0,
+            seed,
+        },
+        d,
+    );
+    let mut seed_ref = SeedSparq::new(
+        ring_mixing(n),
+        Box::new(SignTopK::new(6)),
+        EventTrigger::new(trig),
+        lr,
+        SyncSchedule::EveryH(2),
+        0.0,
+        seed,
+        d,
+    );
+    assert_eq!(engine.gamma, seed_ref.gamma, "tuned γ diverged");
+
+    let mut prob_a = quad(d, n, 99);
+    let mut prob_b = quad(d, n, 99);
+    let mut bus_a = Bus::new(n);
+    let mut bus_b = Bus::new(n);
+    for t in 0..steps {
+        engine.step(t, &mut prob_a, &mut bus_a);
+        seed_ref.step(t, &mut prob_b, &mut bus_b);
+        if (t + 1) % 25 == 0 || t + 1 == steps {
+            for i in 0..n {
+                assert_eq!(
+                    engine.params(i),
+                    &seed_ref.nodes[i].x[..],
+                    "t={t} node {i}: params diverged"
+                );
+                assert_eq!(
+                    engine.xhat(i),
+                    &seed_ref.xhat[i][..],
+                    "t={t} node {i}: estimates diverged"
+                );
+            }
+            assert_eq!(engine.last_fired(), seed_ref.fired_last, "t={t}");
+            assert_eq!(bus_a.total_bits, bus_b.total_bits, "t={t}: bits diverged");
+            // identical x̄ ⇒ identical evaluated loss at this point
+            let bar_a = engine.x_bar();
+            let loss_a = prob_a.global_loss(&bar_a);
+            let mut bar_b = vec![0.0f32; d];
+            for i in 0..n {
+                for (b, v) in bar_b.iter_mut().zip(seed_ref.nodes[i].x.iter()) {
+                    *b += v;
+                }
+            }
+            for b in bar_b.iter_mut() {
+                *b /= n as f32;
+            }
+            assert_eq!(bar_a, bar_b, "t={t}: x̄ diverged");
+            assert_eq!(loss_a, prob_b.global_loss(&bar_b), "t={t}: loss diverged");
+        }
+    }
+    assert_eq!(engine.total_fired, seed_ref.total_fired);
+    assert_eq!(engine.total_checks, seed_ref.total_checks);
+    assert_eq!(bus_a.total_messages, bus_b.total_messages);
+    assert_eq!(bus_a.comm_rounds, bus_b.comm_rounds);
+    assert_eq!(bus_a.node_bits, bus_b.node_bits);
+    // the scenario actually exercised the trigger both ways
+    assert!(engine.total_fired > 0);
+    assert!(engine.total_fired < engine.total_checks);
+}
+
+#[test]
+fn sparq_engine_matches_seed_with_stochastic_compressor_and_momentum() {
+    // QsgdTopK draws compressor randomness from the node RNG streams and
+    // momentum exercises the heavy-ball half-step — both must line up.
+    let (n, d, steps, seed) = (6usize, 40usize, 400u64, 23u64);
+    let lr = LrSchedule::InverseTime { a: 80.0, b: 2.0 };
+    let trig = ThresholdSchedule::Poly { c0: 5.0, eps: 0.5 };
+
+    let mut engine = SparqSgd::new(
+        SparqConfig {
+            mixing: ring_mixing(n),
+            compressor: sparq::compress::parse("qsgd_topk:8:4", d).unwrap(),
+            trigger: EventTrigger::new(trig.clone()),
+            lr: lr.clone(),
+            sync: SyncSchedule::EveryH(5),
+            gamma: None,
+            momentum: 0.9,
+            seed,
+        },
+        d,
+    );
+    let mut seed_ref = SeedSparq::new(
+        ring_mixing(n),
+        sparq::compress::parse("qsgd_topk:8:4", d).unwrap(),
+        EventTrigger::new(trig),
+        lr,
+        SyncSchedule::EveryH(5),
+        0.9,
+        seed,
+        d,
+    );
+
+    let mut prob_a = quad(d, n, 5);
+    let mut prob_b = quad(d, n, 5);
+    let mut bus_a = Bus::new(n);
+    let mut bus_b = Bus::new(n);
+    for t in 0..steps {
+        engine.step(t, &mut prob_a, &mut bus_a);
+        seed_ref.step(t, &mut prob_b, &mut bus_b);
+    }
+    for i in 0..n {
+        assert_eq!(engine.params(i), &seed_ref.nodes[i].x[..], "node {i}");
+        assert_eq!(
+            engine.momentum(i).unwrap(),
+            seed_ref.nodes[i].momentum.as_deref().unwrap(),
+            "node {i} momentum"
+        );
+    }
+    assert_eq!(bus_a.total_bits, bus_b.total_bits);
+    assert_eq!(bus_a.node_bits, bus_b.node_bits);
+    assert_eq!(engine.total_fired, seed_ref.total_fired);
+    assert!(bus_a.total_bits > 0);
+}
+
+#[test]
+fn choco_engine_reproduces_seed_coordinator_bit_for_bit() {
+    let (n, d, steps, seed) = (8usize, 32usize, 250u64, 31u64);
+    let lr = LrSchedule::InverseTime { a: 50.0, b: 2.0 };
+
+    let mut engine = ChocoSgd::new(
+        ring_mixing(n),
+        Box::new(TopK::new(6)),
+        lr.clone(),
+        0.0,
+        d,
+        seed,
+    );
+    let mut seed_ref =
+        SeedChoco::new(ring_mixing(n), Box::new(TopK::new(6)), lr, 0.0, d, seed);
+    assert_eq!(engine.gamma, seed_ref.gamma);
+
+    let mut prob_a = quad(d, n, 7);
+    let mut prob_b = quad(d, n, 7);
+    let mut bus_a = Bus::new(n);
+    let mut bus_b = Bus::new(n);
+    for t in 0..steps {
+        engine.step(t, &mut prob_a, &mut bus_a);
+        seed_ref.step(t, &mut prob_b, &mut bus_b);
+        if (t + 1) % 50 == 0 {
+            for i in 0..n {
+                assert_eq!(engine.params(i), &seed_ref.nodes[i].x[..], "t={t} node {i}");
+            }
+        }
+    }
+    assert_eq!(bus_a.total_bits, bus_b.total_bits);
+    assert_eq!(bus_a.total_messages, bus_b.total_messages);
+    assert_eq!(bus_a.comm_rounds, bus_b.comm_rounds);
+    assert_eq!(bus_a.node_bits, bus_b.node_bits);
+    assert_eq!(engine.last_fired(), n); // everyone transmits
+}
+
+#[test]
+fn vanilla_engine_reproduces_seed_coordinator_bit_for_bit() {
+    let (n, d, steps, seed) = (6usize, 28usize, 200u64, 41u64);
+    let lr = LrSchedule::Constant(0.05);
+
+    let mut engine = VanillaDecentralized::new(ring_mixing(n), lr.clone(), 0.9, d, seed);
+    let mut seed_ref = SeedVanilla::new(ring_mixing(n), lr, 0.9, d, seed);
+
+    let mut prob_a = quad(d, n, 13);
+    let mut prob_b = quad(d, n, 13);
+    let mut bus_a = Bus::new(n);
+    let mut bus_b = Bus::new(n);
+    for t in 0..steps {
+        engine.step(t, &mut prob_a, &mut bus_a);
+        seed_ref.step(t, &mut prob_b, &mut bus_b);
+        if (t + 1) % 40 == 0 {
+            for i in 0..n {
+                assert_eq!(engine.params(i), &seed_ref.nodes[i].x[..], "t={t} node {i}");
+                assert_eq!(
+                    engine.momentum(i).unwrap(),
+                    seed_ref.nodes[i].momentum.as_deref().unwrap(),
+                    "t={t} node {i} momentum"
+                );
+            }
+        }
+    }
+    assert_eq!(bus_a.total_bits, bus_b.total_bits);
+    assert_eq!(bus_a.total_messages, bus_b.total_messages);
+    assert_eq!(bus_a.node_bits, bus_b.node_bits);
+    assert!(bus_a.total_bits > 0);
+}
+
+// ---------------------------------------------------------------------
+// Determinism of the new scenario layers across worker counts
+// ---------------------------------------------------------------------
+
+#[test]
+fn lossy_link_run_is_deterministic_across_worker_counts() {
+    let mk = |workers: usize| ExperimentConfig {
+        nodes: 8,
+        steps: 200,
+        eval_every: 50,
+        problem: "quadratic:48".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        link: "drop:0.25+straggler:1:0.5".into(),
+        workers,
+        ..Default::default()
+    };
+    let a = run_config(&mk(1), false);
+    let b = run_config(&mk(8), false);
+    assert_eq!(a.to_csv(), b.to_csv(), "lossy-link series diverged");
+    // and the faults actually engaged: fewer bits than the ideal run
+    let ideal = run_config(
+        &ExperimentConfig {
+            link: "none".into(),
+            ..mk(1)
+        },
+        false,
+    );
+    let lossy_bits = a.records.last().unwrap().bits;
+    let ideal_bits = ideal.records.last().unwrap().bits;
+    assert!(lossy_bits < ideal_bits, "{lossy_bits} vs {ideal_bits}");
+}
+
+#[test]
+fn sampled_gossip_run_is_deterministic_across_worker_counts() {
+    let mk = |workers: usize| ExperimentConfig {
+        nodes: 16,
+        steps: 150,
+        eval_every: 50,
+        problem: "quadratic:32".into(),
+        trigger: "zero".into(),
+        h: 2,
+        topology_schedule: "sample:torus:6".into(),
+        workers,
+        ..Default::default()
+    };
+    let a = run_config(&mk(1), false);
+    let b = run_config(&mk(8), false);
+    assert_eq!(a.to_csv(), b.to_csv(), "sampled-gossip series diverged");
+    assert!(a.records.last().unwrap().bits > 0);
+}
+
+#[test]
+fn static_schedule_default_is_bitwise_equivalent_to_topology_field() {
+    // "static" must change nothing relative to the plain topology path.
+    let base = ExperimentConfig {
+        nodes: 8,
+        steps: 120,
+        eval_every: 40,
+        problem: "quadratic:24".into(),
+        ..Default::default()
+    };
+    let explicit = ExperimentConfig {
+        topology_schedule: "static".into(),
+        link: "none".into(),
+        ..base.clone()
+    };
+    assert_eq!(
+        run_config(&base, false).to_csv(),
+        run_config(&explicit, false).to_csv()
+    );
+}

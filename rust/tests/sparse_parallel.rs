@@ -12,7 +12,10 @@ use sparq::comm::{wire, Bus};
 use sparq::compress::{
     self, Compressor, QsgdOp, QsgdTopK, RandK, SignL1, SignTopK, SparseVec, TopK,
 };
-use sparq::coordinator::{ChocoSgd, DecentralizedAlgo, SparqConfig, SparqSgd, VanillaDecentralized};
+use sparq::coordinator::{
+    ChocoSgd, DecentralizedAlgo, DecentralizedEngine, SparqConfig, SparqSgd,
+    VanillaDecentralized,
+};
 use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
 use sparq::problems::QuadraticProblem;
 use sparq::prop_assert;
@@ -125,7 +128,7 @@ fn prop_wire_lengths_match_charged_bits() {
     });
 }
 
-fn mk_sparq(workers: usize, seed: u64) -> (SparqSgd, QuadraticProblem, Bus) {
+fn mk_sparq(workers: usize, seed: u64) -> (DecentralizedEngine, QuadraticProblem, Bus) {
     let n = 8;
     let d = 96;
     let topo = Topology::new(TopologyKind::Ring, n, 0);
