@@ -213,6 +213,71 @@ mod tests {
     }
 
     #[test]
+    fn identical_seeds_reproduce_identical_coin_sequences() {
+        // Two independently parsed models with the same (spec, seed) are
+        // the same fault process: every drop AND straggler coin agrees,
+        // in any query order, from any thread's interleaving (the coins
+        // are stateless hashes, so query order cannot matter).
+        let spec = "drop:0.35+straggler:1:0.4+straggler:3:0.2";
+        let a = LinkModel::parse(spec, 99).unwrap();
+        let b = LinkModel::parse(spec, 99).unwrap();
+        for t in 0..300 {
+            for from in 0..5 {
+                for to in 0..5 {
+                    if from != to {
+                        assert_eq!(
+                            a.delivers(from, to, t),
+                            b.delivers(from, to, t),
+                            "drop coin ({from}->{to}, t={t})"
+                        );
+                    }
+                }
+                assert_eq!(
+                    a.straggles(from, t),
+                    b.straggles(from, t),
+                    "straggler coin ({from}, t={t})"
+                );
+            }
+        }
+        // and a clone is the same process too (plain data)
+        let c = a.clone();
+        assert!((0..300).all(|t| c.delivers(0, 1, t) == a.delivers(0, 1, t)));
+    }
+
+    #[test]
+    fn delivered_set_shrinks_pointwise_as_p_grows() {
+        // The coin value for an edge/round is independent of p (only the
+        // threshold moves), so the delivered set at a larger p is a
+        // subset of the delivered set at a smaller p — the mechanism
+        // behind the engine-level bits-monotone-in-p test.
+        let ps = [0.0, 0.2, 0.5, 0.8];
+        let models: Vec<LinkModel> = ps
+            .iter()
+            .map(|p| LinkModel::parse(&format!("drop:{p}"), 13).unwrap())
+            .collect();
+        for t in 0..200 {
+            for from in 0..4 {
+                for to in 0..4 {
+                    if from == to {
+                        continue;
+                    }
+                    for w in models.windows(2) {
+                        // delivered at higher p ⇒ delivered at lower p
+                        if w[1].delivers(from, to, t) {
+                            assert!(
+                                w[0].delivers(from, to, t),
+                                "({from}->{to}, t={t}): delivered at p={} but not p={}",
+                                w[1].drop_p,
+                                w[0].drop_p
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn edge_directions_are_independent_coins() {
         let m = LinkModel::parse("drop:0.5", 11).unwrap();
         let fwd: Vec<bool> = (0..64).map(|t| m.delivers(0, 1, t)).collect();

@@ -57,10 +57,14 @@ pub struct ExperimentConfig {
     pub eval_every: u64,
     pub momentum: f64,
     pub seed: u64,
-    /// Problem spec: "quadratic:D", "logreg:DIN:CLASSES:BATCH",
-    /// "mlp:DIN:HIDDEN:CLASSES:BATCH".
+    /// Problem spec: "quadratic:D[:NOISE[:SPREAD]]" (gradient-noise σ,
+    /// heterogeneity spread; defaults 0.05 / 1.0),
+    /// "logreg:DIN:CLASSES:BATCH", "mlp:DIN:HIDDEN:CLASSES:BATCH".
     pub problem: String,
-    /// Override consensus γ (0 ⇒ Lemma-6 γ*).
+    /// Consensus step size γ: > 0 pins the value, 0 ⇒ tuned heuristic
+    /// (`SpectralInfo::gamma_tuned`), < 0 pins γ = 0 exactly (mixing
+    /// disabled — the ablation diagnostic; plain 0 cannot mean that
+    /// because it is the unset default).
     pub gamma: f64,
     /// Worker threads for the coordinator's per-node phases (1 ⇒
     /// sequential, 0 ⇒ available CPUs); bit-for-bit deterministic across
@@ -354,11 +358,11 @@ mod tests {
     fn preset_specs_parse() {
         let cfg = presets::convex_sparq(100);
         assert!(crate::compress::parse(&cfg.compressor, 7850).is_some());
-        assert!(crate::trigger::ThresholdSchedule::parse(&cfg.trigger).is_some());
+        assert!(crate::trigger::ThresholdSchedule::parse(&cfg.trigger).is_ok());
         assert!(crate::schedule::LrSchedule::parse(&cfg.lr).is_some());
         let cfg2 = presets::nonconvex_sparq(100, 50);
         assert!(crate::compress::parse(&cfg2.compressor, 394634).is_some());
-        assert!(crate::trigger::ThresholdSchedule::parse(&cfg2.trigger).is_some());
+        assert!(crate::trigger::ThresholdSchedule::parse(&cfg2.trigger).is_ok());
         assert!(crate::schedule::LrSchedule::parse(&cfg2.lr).is_some());
     }
 }

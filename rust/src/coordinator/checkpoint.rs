@@ -1,9 +1,20 @@
-//! Checkpointing: persist and restore a training run.
+//! Checkpointing: persist and restore a training run *exactly*.
 //!
-//! Format: a JSON header (version, iteration, dims, algorithm name,
-//! cumulative bit counters) followed by raw little-endian f32 blocks for
-//! every node's parameters (and momentum buffers when present). The
-//! header length is the first line so the file is self-describing.
+//! Format: a JSON header line (version, iteration, dims, algorithm name,
+//! bus counters, trigger statistics) followed by raw little-endian
+//! blocks: per-node f32 parameters, momentum buffers (when present), the
+//! estimate bank x̂ and consensus accumulator rows (estimate-tracking
+//! rules), and each node's xoshiro256** RNG state. The header length is
+//! the first line so the file is self-describing.
+//!
+//! Version 2 (this layout) captures everything a
+//! [`DecentralizedEngine`](super::engine::DecentralizedEngine) run needs
+//! for **bit-for-bit resume**: restoring a mid-run snapshot and stepping
+//! to the horizon produces exactly the parameters, estimates, and bus
+//! totals of the uninterrupted run (`rust/tests/sweep_system.rs` pins
+//! this for SPARQ with momentum, CHOCO, and vanilla). Version-1 files
+//! (params + momentum only) still load, with the extended blocks empty —
+//! enough to warm-start, not enough for exact resume.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -20,35 +31,85 @@ pub struct Checkpoint {
     pub algo_name: String,
     pub total_bits: u64,
     pub comm_rounds: u64,
+    pub total_messages: u64,
+    /// Per-node cumulative sent bits (empty for v1 files).
+    pub node_bits: Vec<u64>,
+    /// Cumulative trigger statistics (0 for v1 files).
+    pub fired: u64,
+    pub checks: u64,
     /// Per-node parameter vectors.
     pub params: Vec<Vec<f32>>,
     /// Per-node momentum buffers (empty if the run has none).
     pub momentum: Vec<Vec<f32>>,
+    /// Estimate bank x̂ (empty for rules without one, and for v1 files).
+    pub xhat: Vec<Vec<f32>>,
+    /// Materialized consensus accumulator rows (paired with `xhat`; the
+    /// accumulator is maintained incrementally during a run, so it must
+    /// be restored verbatim rather than recomputed from the bank).
+    pub acc: Vec<Vec<f32>>,
+    /// Per-node RNG stream states (empty for v1 files).
+    pub rng: Vec<[u64; 4]>,
 }
 
-/// Capture the full coordinator state at iteration t.
+/// Capture the full coordinator state at iteration t (a round boundary).
 pub fn snapshot(algo: &dyn DecentralizedAlgo, t: u64, bus: &Bus) -> Checkpoint {
     let n = algo.n();
+    let (fired, checks) = algo.fired_stats();
     Checkpoint {
         t,
         algo_name: algo.name(),
         total_bits: bus.total_bits,
         comm_rounds: bus.comm_rounds,
+        total_messages: bus.total_messages,
+        node_bits: bus.node_bits.clone(),
+        fired,
+        checks,
         params: (0..n).map(|i| algo.params(i).to_vec()).collect(),
         momentum: (0..n)
             .filter_map(|i| algo.momentum(i).map(|m| m.to_vec()))
             .collect(),
+        xhat: (0..n)
+            .filter_map(|i| algo.estimate(i).map(|h| h.to_vec()))
+            .collect(),
+        acc: (0..n)
+            .filter_map(|i| algo.consensus_acc(i).map(|a| a.to_vec()))
+            .collect(),
+        rng: (0..n).filter_map(|i| algo.rng_state(i)).collect(),
     }
 }
 
-/// Restore node state from a checkpoint (panics on shape mismatch).
+/// Restore node state from a checkpoint (panics on shape mismatch). For
+/// v2 checkpoints of an engine run this is a *complete* restore: params,
+/// momentum, estimate bank + accumulator, per-node RNG streams, and
+/// trigger statistics, with any time-varying topology schedule replayed
+/// to the snapshot iteration first.
 pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) {
     assert_eq!(algo.n(), ckpt.n(), "node count mismatch");
+    algo.prepare_resume(ckpt.t);
     for (i, p) in ckpt.params.iter().enumerate() {
         algo.set_node_params(i, p);
     }
     for (i, m) in ckpt.momentum.iter().enumerate() {
         algo.set_node_momentum(i, m);
+    }
+    if !ckpt.xhat.is_empty() {
+        algo.restore_estimates(&ckpt.xhat, &ckpt.acc);
+    }
+    for (i, s) in ckpt.rng.iter().enumerate() {
+        algo.set_rng_state(i, *s);
+    }
+    algo.set_fired_stats(ckpt.fired, ckpt.checks);
+}
+
+/// Restore the bus counters from a checkpoint (snapshots are taken at
+/// round boundaries, so the private in-round counters are zero by
+/// construction).
+pub fn restore_bus(bus: &mut Bus, ckpt: &Checkpoint) {
+    bus.total_bits = ckpt.total_bits;
+    bus.comm_rounds = ckpt.comm_rounds;
+    bus.total_messages = ckpt.total_messages;
+    if ckpt.node_bits.len() == bus.node_bits.len() {
+        bus.node_bits.copy_from_slice(&ckpt.node_bits);
     }
 }
 
@@ -63,25 +124,40 @@ impl Checkpoint {
 
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let header = Json::obj()
-            .set("version", 1u64)
+            .set("version", 2u64)
             .set("t", self.t)
             .set("algo", self.algo_name.as_str())
             .set("total_bits", self.total_bits)
             .set("comm_rounds", self.comm_rounds)
+            .set("total_messages", self.total_messages)
+            .set("node_bits", self.node_bits.clone())
+            .set("fired", self.fired)
+            .set("checks", self.checks)
             .set("n", self.params.len())
             .set("dim", self.dim())
             .set("has_momentum", !self.momentum.is_empty())
+            .set("has_estimates", !self.xhat.is_empty())
+            .set("has_rng", !self.rng.is_empty())
             .to_string();
         let mut w = BufWriter::new(File::create(path)?);
         writeln!(w, "{header}")?;
-        for p in &self.params {
-            for v in p {
-                w.write_all(&v.to_le_bytes())?;
+        let write_f32_block = |w: &mut BufWriter<File>,
+                                   block: &[Vec<f32>]|
+         -> std::io::Result<()> {
+            for row in block {
+                for v in row {
+                    w.write_all(&v.to_le_bytes())?;
+                }
             }
-        }
-        for m in &self.momentum {
-            for v in m {
-                w.write_all(&v.to_le_bytes())?;
+            Ok(())
+        };
+        write_f32_block(&mut w, &self.params)?;
+        write_f32_block(&mut w, &self.momentum)?;
+        write_f32_block(&mut w, &self.xhat)?;
+        write_f32_block(&mut w, &self.acc)?;
+        for s in &self.rng {
+            for word in s {
+                w.write_all(&word.to_le_bytes())?;
             }
         }
         Ok(())
@@ -102,12 +178,22 @@ impl Checkpoint {
         let j = Json::parse(&header)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
         let get = |k: &str| -> u64 { j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+        let flag = |k: &str| -> bool { j.get(k).and_then(Json::as_bool).unwrap_or(false) };
+        let version = get("version");
         let n = get("n") as usize;
         let dim = get("dim") as usize;
-        let has_momentum = j
-            .get("has_momentum")
-            .and_then(Json::as_bool)
-            .unwrap_or(false);
+        let has_momentum = flag("has_momentum");
+        let has_estimates = version >= 2 && flag("has_estimates");
+        let has_rng = version >= 2 && flag("has_rng");
+        let node_bits: Vec<u64> = j
+            .get("node_bits")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+                    .collect()
+            })
+            .unwrap_or_default();
 
         let mut read_block = |count: usize| -> std::io::Result<Vec<Vec<f32>>> {
             let mut out = Vec::with_capacity(count);
@@ -124,6 +210,20 @@ impl Checkpoint {
         };
         let params = read_block(n)?;
         let momentum = if has_momentum { read_block(n)? } else { Vec::new() };
+        let xhat = if has_estimates { read_block(n)? } else { Vec::new() };
+        let acc = if has_estimates { read_block(n)? } else { Vec::new() };
+        let mut rng = Vec::new();
+        if has_rng {
+            let mut buf = [0u8; 32];
+            for _ in 0..n {
+                r.read_exact(&mut buf)?;
+                let mut s = [0u64; 4];
+                for (w, chunk) in s.iter_mut().zip(buf.chunks_exact(8)) {
+                    *w = u64::from_le_bytes(chunk.try_into().unwrap());
+                }
+                rng.push(s);
+            }
+        }
         Ok(Checkpoint {
             t: get("t"),
             algo_name: j
@@ -133,8 +233,15 @@ impl Checkpoint {
                 .to_string(),
             total_bits: get("total_bits"),
             comm_rounds: get("comm_rounds"),
+            total_messages: get("total_messages"),
+            node_bits,
+            fired: get("fired"),
+            checks: get("checks"),
             params,
             momentum,
+            xhat,
+            acc,
+            rng,
         })
     }
 }
@@ -144,7 +251,7 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn mk(seed: u64, n: usize, d: usize, momentum: bool) -> Checkpoint {
+    fn mk(seed: u64, n: usize, d: usize, momentum: bool, estimates: bool) -> Checkpoint {
         let mut rng = Rng::new(seed);
         let block = |rng: &mut Rng| -> Vec<Vec<f32>> {
             (0..n)
@@ -155,19 +262,35 @@ mod tests {
                 })
                 .collect()
         };
+        let params = block(&mut rng);
+        let momentum = if momentum { block(&mut rng) } else { Vec::new() };
+        let xhat = if estimates { block(&mut rng) } else { Vec::new() };
+        let acc = if estimates { block(&mut rng) } else { Vec::new() };
         Checkpoint {
             t: 1234,
             algo_name: "sparq(test)".into(),
             total_bits: 98765,
             comm_rounds: 42,
-            params: block(&mut rng),
-            momentum: if momentum { block(&mut rng) } else { Vec::new() },
+            total_messages: 17,
+            node_bits: (0..n as u64).map(|i| 1000 + i).collect(),
+            fired: 33,
+            checks: 99,
+            params,
+            momentum,
+            xhat,
+            acc,
+            rng: (0..n)
+                .map(|i| {
+                    let r = Rng::new(seed ^ (i as u64) << 3);
+                    r.state()
+                })
+                .collect(),
         }
     }
 
     #[test]
-    fn roundtrip_with_momentum() {
-        let ckpt = mk(1, 4, 33, true);
+    fn roundtrip_with_momentum_and_estimates() {
+        let ckpt = mk(1, 4, 33, true, true);
         let path = std::env::temp_dir().join(format!("sparq-ckpt-{}.bin", std::process::id()));
         ckpt.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
@@ -176,27 +299,64 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_without_momentum() {
-        let ckpt = mk(2, 3, 17, false);
+    fn roundtrip_without_momentum_or_estimates() {
+        let ckpt = mk(2, 3, 17, false, false);
         let path = std::env::temp_dir().join(format!("sparq-ckpt2-{}.bin", std::process::id()));
         ckpt.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ckpt, back);
         assert!(back.momentum.is_empty());
+        assert!(back.xhat.is_empty() && back.acc.is_empty());
+        // rng states persist regardless
+        assert_eq!(back.rng.len(), 3);
         std::fs::remove_file(&path).ok();
     }
 
     #[test]
-    fn header_is_json() {
-        let ckpt = mk(3, 2, 5, false);
+    fn header_is_json_v2() {
+        let ckpt = mk(3, 2, 5, false, true);
         let path = std::env::temp_dir().join(format!("sparq-ckpt3-{}.bin", std::process::id()));
         ckpt.save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
         let header = std::str::from_utf8(&bytes[..nl]).unwrap();
         let j = Json::parse(header).unwrap();
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("n").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("dim").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("has_estimates").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("fired").unwrap().as_usize(), Some(33));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loads_version1_files_with_empty_extended_blocks() {
+        // Hand-write a v1 file (header + params [+ momentum]) and check
+        // the loader fills the extended fields with empties.
+        let n = 2;
+        let d = 3;
+        let header = Json::obj()
+            .set("version", 1u64)
+            .set("t", 77u64)
+            .set("algo", "old")
+            .set("total_bits", 5u64)
+            .set("comm_rounds", 2u64)
+            .set("n", n)
+            .set("dim", d)
+            .set("has_momentum", false)
+            .to_string();
+        let path = std::env::temp_dir().join(format!("sparq-ckpt-v1-{}.bin", std::process::id()));
+        let mut bytes: Vec<u8> = format!("{header}\n").into_bytes();
+        for v in 0..(n * d) {
+            bytes.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.t, 77);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[1], vec![3.0, 4.0, 5.0]);
+        assert!(back.xhat.is_empty() && back.acc.is_empty() && back.rng.is_empty());
+        assert_eq!(back.total_messages, 0);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -27,6 +27,23 @@ impl ChocoSgd {
         d: usize,
         seed: u64,
     ) -> DecentralizedEngine {
+        Self::with_gamma(mixing, compressor, lr, momentum, None, d, seed)
+    }
+
+    /// Like [`new`](Self::new) with an explicit consensus step size γ
+    /// (`None` ⇒ the tuned heuristic, computed from the mixing matrix's
+    /// eigen solve). Sweeps pass the cached tuned value here so one solve
+    /// serves every run on the same graph — bit-identical to letting the
+    /// engine compute it.
+    pub fn with_gamma(
+        mixing: MixingMatrix,
+        compressor: Box<dyn Compressor>,
+        lr: LrSchedule,
+        momentum: f32,
+        gamma: Option<f64>,
+        d: usize,
+        seed: u64,
+    ) -> DecentralizedEngine {
         let name = format!("choco(C={})", compressor.name());
         let rule = EstimateTracking::new(&mixing, d);
         DecentralizedEngine::new(
@@ -35,7 +52,7 @@ impl ChocoSgd {
                 compressor,
                 comm: Box::new(AlwaysComm),
                 rule: Box::new(rule),
-                gamma: None,
+                gamma,
                 lr,
                 momentum,
                 seed,

@@ -120,9 +120,21 @@ impl NeighborAccumulator {
         }
     }
 
-    /// The materialized accumulator (exposed for tests).
+    /// The materialized accumulator (exposed for tests/checkpoints).
     pub fn acc(&self, i: usize) -> &[f32] {
         &self.acc[i]
+    }
+
+    /// Overwrite the accumulator rows with checkpointed values. Restore
+    /// must NOT recompute from the bank ([`from_bank`](Self::from_bank)):
+    /// the live accumulator is built incrementally, so a dense
+    /// recomputation re-associates the f32 sums and diverges from an
+    /// uninterrupted run at rounding level.
+    pub fn restore_acc(&mut self, rows: &[Vec<f32>]) {
+        assert_eq!(rows.len(), self.acc.len(), "accumulator row count mismatch");
+        for (dst, src) in self.acc.iter_mut().zip(rows.iter()) {
+            dst.copy_from_slice(src);
+        }
     }
 
     /// Σ_{j∈N(i)} w_ij (exposed for tests).

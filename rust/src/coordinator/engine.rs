@@ -154,6 +154,19 @@ pub trait UpdateRule: Send {
     fn xhat(&self, _i: usize) -> Option<&[f32]> {
         None
     }
+
+    /// The materialized consensus accumulator row for node i, for rules
+    /// that keep one (checkpointed so resume is bit-for-bit — see
+    /// [`NeighborAccumulator::restore_acc`]).
+    fn acc(&self, _i: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// Restore the estimate bank + accumulator from a checkpoint on the
+    /// given (current) mixing matrix. Unlike [`rebuild`](Self::rebuild),
+    /// this charges nothing: the traffic that built this state was paid
+    /// for before the snapshot was taken.
+    fn restore_bank(&mut self, _xhat: &[Vec<f32>], _acc: &[Vec<f32>], _mixing: &MixingMatrix) {}
 }
 
 // ---------------------------------------------------------------------
@@ -273,6 +286,22 @@ impl UpdateRule for EstimateTracking {
 
     fn xhat(&self, i: usize) -> Option<&[f32]> {
         Some(&self.xhat[i])
+    }
+
+    fn acc(&self, i: usize) -> Option<&[f32]> {
+        Some(self.nbr.acc(i))
+    }
+
+    fn restore_bank(&mut self, xhat: &[Vec<f32>], acc: &[Vec<f32>], mixing: &MixingMatrix) {
+        assert_eq!(xhat.len(), self.xhat.len(), "estimate bank size mismatch");
+        for (dst, src) in self.xhat.iter_mut().zip(xhat.iter()) {
+            dst.copy_from_slice(src);
+        }
+        // Fresh edge structure for the (possibly switched) matrix, then
+        // the checkpointed accumulator rows verbatim.
+        let d = self.xhat.first().map(Vec::len).unwrap_or(0);
+        self.nbr = NeighborAccumulator::new(mixing, d);
+        self.nbr.restore_acc(acc);
     }
 }
 
@@ -603,6 +632,52 @@ impl DecentralizedAlgo for DecentralizedEngine {
     fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
         if let Some(buf) = self.nodes[node].momentum.as_mut() {
             buf.copy_from_slice(m);
+        }
+    }
+
+    fn estimate(&self, node: usize) -> Option<&[f32]> {
+        self.rule.xhat(node)
+    }
+
+    fn consensus_acc(&self, node: usize) -> Option<&[f32]> {
+        self.rule.acc(node)
+    }
+
+    fn restore_estimates(&mut self, xhat: &[Vec<f32>], acc: &[Vec<f32>]) {
+        self.rule.restore_bank(xhat, acc, &self.mixing);
+    }
+
+    fn rng_state(&self, node: usize) -> Option<[u64; 4]> {
+        Some(self.nodes[node].rng.state())
+    }
+
+    fn set_rng_state(&mut self, node: usize, state: [u64; 4]) {
+        self.nodes[node].rng = Rng::from_state(state);
+    }
+
+    fn set_fired_stats(&mut self, fired: u64, checks: u64) {
+        self.total_fired = fired;
+        self.total_checks = checks;
+    }
+
+    fn prepare_resume(&mut self, t0: u64) {
+        // Replay the topology schedule to t0 so the matrix in force (and
+        // the state restore_estimates is about to rebuild on it) matches
+        // the uninterrupted run. Switch-boundary resync charges happened
+        // before the snapshot and are already in the checkpointed bus
+        // counters — replay must not charge them again, so the rule's
+        // rebuild hook is NOT invoked here.
+        let mut latest = None;
+        for t in 0..t0 {
+            if self.comm.is_sync(t) {
+                if let Some(m) = self.schedule.update(t) {
+                    latest = Some(m);
+                }
+            }
+        }
+        if let Some(m) = latest {
+            self.mixing = m;
+            self.spectral = OnceCell::new();
         }
     }
 

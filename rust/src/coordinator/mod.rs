@@ -118,6 +118,48 @@ pub trait DecentralizedAlgo {
     /// Restore one node's momentum buffer (no-op if the run has none).
     fn set_node_momentum(&mut self, _node: usize, _m: &[f32]) {}
 
+    /// Node i's public estimate x̂_i, if the algorithm keeps an estimate
+    /// bank (estimate-tracking rules; `None` for exact averaging).
+    fn estimate(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// Node i's materialized consensus accumulator Σ_j w_ij x̂_j, if one
+    /// exists. Checkpointed alongside the estimate bank: the accumulator
+    /// is maintained *incrementally* during a run, so recomputing it from
+    /// the bank on restore would re-associate the floating-point sums and
+    /// break bit-for-bit resume.
+    fn consensus_acc(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// Restore the estimate bank and consensus accumulator from a
+    /// checkpoint (no-op for algorithms without them). Does NOT charge
+    /// the bus — restore reconstructs state whose traffic was already
+    /// paid for before the snapshot.
+    fn restore_estimates(&mut self, _xhat: &[Vec<f32>], _acc: &[Vec<f32>]) {}
+
+    /// Node i's RNG stream state, if the algorithm owns per-node streams
+    /// (required for bit-for-bit checkpoint resume).
+    fn rng_state(&self, _node: usize) -> Option<[u64; 4]> {
+        None
+    }
+
+    /// Restore one node's RNG stream (no-op by default).
+    fn set_rng_state(&mut self, _node: usize, _state: [u64; 4]) {}
+
+    /// Restore cumulative trigger statistics (see
+    /// [`fired_stats`](Self::fired_stats)).
+    fn set_fired_stats(&mut self, _fired: u64, _checks: u64) {}
+
+    /// Prepare the algorithm to resume at iteration `t0`: replay any
+    /// time-varying internal schedule (e.g. topology switches) so the
+    /// state the checkpoint is about to restore matches the structures in
+    /// force at `t0`. Must be called *before*
+    /// [`restore_estimates`](Self::restore_estimates). No-op for
+    /// algorithms without time-varying structure.
+    fn prepare_resume(&mut self, _t0: u64) {}
+
     /// Set the worker-thread count for the per-node phases (1 ⇒ fully
     /// sequential, 0 ⇒ available CPUs). Results are bit-for-bit identical
     /// for every worker count — parallel phases only touch per-node state

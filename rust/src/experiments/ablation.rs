@@ -1,17 +1,14 @@
 //! Structured ablations over SPARQ-SGD's design knobs (the quantities
 //! Remark 1 predicts should only perturb higher-order terms): H, c₀, ω
-//! (via k), γ, and topology δ. Each sweep runs matched-budget quadratic
-//! experiments and returns a table row per point — used by the
-//! `trigger_ablation` bench, the `sparq ablate` CLI subcommand, and the
-//! ablation assertions in `rust/tests/convergence.rs`.
+//! (via k), γ, and topology δ. Each sweep is a declarative config list
+//! executed on the sweep engine (one shared `ArtifactCache` per sweep —
+//! the ring is built and eigen-solved once), returning a table row per
+//! point — used by the `trigger_ablation` bench, the `sparq ablate` CLI
+//! subcommand, and the ablation assertions in
+//! `rust/tests/convergence.rs`.
 
-use crate::comm::Bus;
-use crate::compress::SignTopK;
-use crate::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
-use crate::graph::{uniform_neighbor, Topology, TopologyKind};
-use crate::problems::QuadraticProblem;
-use crate::schedule::{LrSchedule, SyncSchedule};
-use crate::trigger::{EventTrigger, ThresholdSchedule};
+use crate::config::{Algo, ExperimentConfig};
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
 
 /// One ablation measurement.
 #[derive(Clone, Debug)]
@@ -32,6 +29,9 @@ pub struct AblationBase {
     pub d: usize,
     pub steps: u64,
     pub seed: u64,
+    /// Total sweep worker budget (0 ⇒ available CPUs); results are
+    /// identical for any value.
+    pub workers: usize,
 }
 
 impl Default for AblationBase {
@@ -41,12 +41,14 @@ impl Default for AblationBase {
             d: 64,
             steps: 4000,
             seed: 11,
+            workers: 1,
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_one(
+/// One knob point as a config. γ semantics: `None` ⇒ tuned heuristic,
+/// `Some(0.0)` ⇒ mixing disabled exactly (config gamma < 0 expresses it).
+fn knob_config(
     base: &AblationBase,
     knob: &str,
     value: f64,
@@ -54,77 +56,122 @@ fn run_one(
     c0: f64,
     k: usize,
     gamma: Option<f64>,
-    topology: TopologyKind,
-) -> AblationPoint {
-    let topo = Topology::new(topology, base.n, base.seed);
-    let cfg = SparqConfig {
-        mixing: uniform_neighbor(&topo),
-        compressor: Box::new(SignTopK::new(k)),
-        trigger: EventTrigger::new(if c0 > 0.0 {
-            ThresholdSchedule::Poly { c0, eps: 0.5 }
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("ablate-{knob}-{value}"),
+        algo: Algo::Sparq,
+        nodes: base.n,
+        compressor: format!("sign_topk:{k}"),
+        trigger: if c0 > 0.0 {
+            format!("poly:{c0}:0.5")
         } else {
-            ThresholdSchedule::Zero
-        }),
-        lr: LrSchedule::InverseTime { a: 60.0, b: 2.0 },
-        sync: SyncSchedule::EveryH(h),
-        gamma,
-        momentum: 0.0,
+            "zero".into()
+        },
+        lr: "invtime:60:2".into(),
+        h,
+        steps: base.steps,
+        eval_every: base.steps.max(1),
         seed: base.seed,
+        // σ = 0.1 noise, 0.5 heterogeneity spread — the ablation regime.
+        problem: format!("quadratic:{}:0.1:0.5", base.d),
+        gamma: match gamma {
+            None => 0.0,
+            Some(g) if g == 0.0 => -1.0, // pin γ = 0 exactly
+            Some(g) => g,
+        },
+        ..Default::default()
+    }
+}
+
+/// Execute knob configs on the sweep engine, one point per config,
+/// under the base's worker budget.
+fn run_knobs(
+    knob: &str,
+    workers: usize,
+    points: Vec<(f64, ExperimentConfig)>,
+) -> Vec<AblationPoint> {
+    let cache = ArtifactCache::new();
+    let values: Vec<f64> = points.iter().map(|(v, _)| *v).collect();
+    let runs: Vec<(String, ExperimentConfig)> = points
+        .into_iter()
+        .map(|(_, cfg)| (cfg.name.clone(), cfg))
+        .collect();
+    let opts = SweepOptions {
+        workers,
+        ..Default::default()
     };
-    let mut algo = SparqSgd::new(cfg, base.d);
-    let mut prob = QuadraticProblem::new(base.d, base.n, 0.5, 2.0, 0.1, 0.5, base.seed ^ 0xF00D);
-    let mut bus = Bus::new(base.n);
-    for t in 0..base.steps {
-        algo.step(t, &mut prob, &mut bus);
-    }
-    AblationPoint {
-        knob: knob.to_string(),
-        value,
-        final_gap: prob.suboptimality(&algo.x_bar()),
-        total_bits: bus.total_bits,
-        comm_rounds: bus.comm_rounds,
-        fire_rate: algo.total_fired as f64 / algo.total_checks.max(1) as f64,
-    }
+    let report = run_configs(runs, &opts, &cache).expect("ablation sweep runs");
+    report
+        .outcomes
+        .into_iter()
+        .zip(values)
+        .map(|(o, value)| {
+            let last = o.series.records.last().expect("at least one record");
+            AblationPoint {
+                knob: knob.to_string(),
+                value,
+                final_gap: last.opt_gap,
+                total_bits: last.bits,
+                comm_rounds: last.comm_rounds,
+                fire_rate: o.fired as f64 / o.checks.max(1) as f64,
+            }
+        })
+        .collect()
 }
 
 /// Sweep local-iteration count H (Remark 1(ii)).
 pub fn h_sweep(base: &AblationBase, hs: &[u64]) -> Vec<AblationPoint> {
-    hs.iter()
-        .map(|&h| run_one(base, "H", h as f64, h, 50.0, base.d / 4, None, TopologyKind::Ring))
-        .collect()
+    run_knobs(
+        "H",
+        base.workers,
+        hs.iter()
+            .map(|&h| {
+                (
+                    h as f64,
+                    knob_config(base, "H", h as f64, h, 50.0, base.d / 4, None),
+                )
+            })
+            .collect(),
+    )
 }
 
 /// Sweep trigger constant c₀ (Remark 1(iii)).
 pub fn c0_sweep(base: &AblationBase, c0s: &[f64]) -> Vec<AblationPoint> {
-    c0s.iter()
-        .map(|&c0| run_one(base, "c0", c0, 5, c0, base.d / 4, None, TopologyKind::Ring))
-        .collect()
+    run_knobs(
+        "c0",
+        base.workers,
+        c0s.iter()
+            .map(|&c0| (c0, knob_config(base, "c0", c0, 5, c0, base.d / 4, None)))
+            .collect(),
+    )
 }
 
 /// Sweep compression level via k (Remark 1(i); ω_eff ∝ k/d).
 pub fn k_sweep(base: &AblationBase, ks: &[usize]) -> Vec<AblationPoint> {
-    ks.iter()
-        .map(|&k| run_one(base, "k", k as f64, 5, 50.0, k, None, TopologyKind::Ring))
-        .collect()
+    run_knobs(
+        "k",
+        base.workers,
+        ks.iter()
+            .map(|&k| (k as f64, knob_config(base, "k", k as f64, 5, 50.0, k, None)))
+            .collect(),
+    )
 }
 
 /// Sweep the consensus step size γ (the tuned-vs-Lemma-6 question).
 pub fn gamma_sweep(base: &AblationBase, gammas: &[f64]) -> Vec<AblationPoint> {
-    gammas
-        .iter()
-        .map(|&g| {
-            run_one(
-                base,
-                "gamma",
-                g,
-                5,
-                50.0,
-                base.d / 4,
-                Some(g),
-                TopologyKind::Ring,
-            )
-        })
-        .collect()
+    run_knobs(
+        "gamma",
+        base.workers,
+        gammas
+            .iter()
+            .map(|&g| {
+                (
+                    g,
+                    knob_config(base, "gamma", g, 5, 50.0, base.d / 4, Some(g)),
+                )
+            })
+            .collect(),
+    )
 }
 
 /// Render points as an aligned text table.
@@ -193,7 +240,8 @@ mod tests {
         // γ=0 disables mixing entirely: heterogeneous nodes never agree,
         // so the gap stays far above a healthy γ's.
         let pts = gamma_sweep(&base(), &[0.0, 0.25]);
-        // NOTE: gamma=0.0 maps to Some(0.0) (explicit), not the heuristic.
+        // NOTE: gamma=0.0 maps to the pinned-zero config (gamma: -1), not
+        // the tuned heuristic.
         assert!(
             pts[0].final_gap > pts[1].final_gap * 3.0,
             "γ=0 gap {} vs γ=.25 gap {}",

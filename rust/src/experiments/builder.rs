@@ -11,6 +11,7 @@ use crate::graph::{uniform_neighbor, MixingMatrix, Topology, TopologyKind, Topol
 use crate::metrics::Series;
 use crate::problems::{GradientSource, LogRegProblem, MlpProblem, QuadraticProblem};
 use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::sweep::cache::{ArtifactCache, CachedData};
 use crate::trigger::{EventTrigger, ThresholdSchedule};
 use crate::util::Rng;
 
@@ -39,23 +40,66 @@ pub fn build_mixing(cfg: &ExperimentConfig) -> MixingMatrix {
 
 /// Build the gradient source from the config's problem spec.
 pub fn build_problem(cfg: &ExperimentConfig) -> Box<dyn GradientSource> {
+    build_problem_with(cfg, None)
+}
+
+/// Like [`build_problem`], sharing generated data through a sweep
+/// [`ArtifactCache`] when one is supplied. Cached and uncached builds are
+/// bit-for-bit identical (generation is seeded; the cache only memoizes).
+pub fn build_problem_with(
+    cfg: &ExperimentConfig,
+    cache: Option<&ArtifactCache>,
+) -> Box<dyn GradientSource> {
+    let data_key = (cfg.problem.clone(), cfg.nodes, cfg.seed);
+    let cached = |build: &mut dyn FnMut() -> CachedData| -> CachedData {
+        match cache {
+            Some(c) => c.data_or_else(data_key.clone(), build),
+            None => build(),
+        }
+    };
     let parts: Vec<&str> = cfg.problem.split(':').collect();
-    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
     match parts.as_slice() {
-        ["quadratic", d] => {
-            let d: usize = d.parse().expect("quadratic:D");
-            Box::new(QuadraticProblem::new(
-                d, cfg.nodes, 0.5, 2.0, 0.05, 1.0, cfg.seed,
-            ))
+        // quadratic:D[:NOISE[:SPREAD]] — gradient noise σ (default 0.05)
+        // and heterogeneity spread (default 1.0), so the rate/ablation
+        // sweeps can state their workloads declaratively.
+        ["quadratic", rest @ ..] if (1..=3).contains(&rest.len()) => {
+            let d: usize = rest[0].parse().expect("quadratic:D");
+            let noise: f32 = rest
+                .get(1)
+                .map(|s| s.parse().expect("quadratic noise"))
+                .unwrap_or(0.05);
+            let spread: f32 = rest
+                .get(2)
+                .map(|s| s.parse().expect("quadratic spread"))
+                .unwrap_or(1.0);
+            let data = cached(&mut || {
+                CachedData::Quadratic(QuadraticProblem::new(
+                    d, cfg.nodes, 0.5, 2.0, noise, spread, cfg.seed,
+                ))
+            });
+            match data {
+                CachedData::Quadratic(p) => Box::new(p),
+                _ => unreachable!("quadratic key cached non-quadratic data"),
+            }
         }
         ["logreg", din, classes, batch] => {
             let din: usize = din.parse().expect("logreg:DIN");
             let classes: usize = classes.parse().expect("logreg classes");
             let batch: usize = batch.parse().expect("logreg batch");
-            let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
-            let part = by_class_shards(&gen, cfg.nodes, SAMPLES_PER_NODE, CLASSES_PER_NODE, &mut rng);
-            let test = gen.generate(TEST_SAMPLES, &mut rng);
-            Box::new(LogRegProblem::new(part, test, batch, 1e-4))
+            let data = cached(&mut || {
+                let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+                let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
+                let part =
+                    by_class_shards(&gen, cfg.nodes, SAMPLES_PER_NODE, CLASSES_PER_NODE, &mut rng);
+                let test = gen.generate(TEST_SAMPLES, &mut rng);
+                CachedData::Shards { part, test }
+            });
+            match data {
+                CachedData::Shards { part, test } => {
+                    Box::new(LogRegProblem::new(part, test, batch, 1e-4))
+                }
+                _ => unreachable!("logreg key cached non-shard data"),
+            }
         }
         ["mlp", din, hidden, classes, batch] => {
             // IID shards: Section 5.2 "matches the setting in CHOCO-SGD"
@@ -65,10 +109,19 @@ pub fn build_problem(cfg: &ExperimentConfig) -> Box<dyn GradientSource> {
             let hidden: usize = hidden.parse().expect("mlp hidden");
             let classes: usize = classes.parse().expect("mlp classes");
             let batch: usize = batch.parse().expect("mlp batch");
-            let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
-            let part = iid_split(&gen, cfg.nodes, SAMPLES_PER_NODE, &mut rng);
-            let test = gen.generate(TEST_SAMPLES, &mut rng);
-            Box::new(MlpProblem::new(part, test, hidden, batch))
+            let data = cached(&mut || {
+                let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+                let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
+                let part = iid_split(&gen, cfg.nodes, SAMPLES_PER_NODE, &mut rng);
+                let test = gen.generate(TEST_SAMPLES, &mut rng);
+                CachedData::Shards { part, test }
+            });
+            match data {
+                CachedData::Shards { part, test } => {
+                    Box::new(MlpProblem::new(part, test, hidden, batch))
+                }
+                _ => unreachable!("mlp key cached non-shard data"),
+            }
         }
         other => panic!("unknown problem spec {other:?}"),
     }
@@ -78,6 +131,19 @@ pub fn build_problem(cfg: &ExperimentConfig) -> Box<dyn GradientSource> {
 /// has the config's link model and topology schedule installed (defaults
 /// reproduce the pre-engine behavior exactly).
 pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo> {
+    build_algo_with(cfg, d, None)
+}
+
+/// Like [`build_algo`], sharing topology construction and the tuned-γ
+/// eigen solve through a sweep [`ArtifactCache`] when one is supplied.
+/// The cached tuned γ is exactly the value the engine would compute for
+/// itself (same matrix, same deterministic solve), so cached and uncached
+/// builds behave bit-for-bit identically.
+pub fn build_algo_with(
+    cfg: &ExperimentConfig,
+    d: usize,
+    cache: Option<&ArtifactCache>,
+) -> Box<dyn DecentralizedAlgo> {
     let schedule = TopologySchedule::parse(&cfg.topology_schedule, cfg.nodes, cfg.seed)
         .unwrap_or_else(|e| {
             panic!("bad topology_schedule spec {:?}: {e}", cfg.topology_schedule)
@@ -104,14 +170,41 @@ pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo
             cfg.topology, cfg.topology_schedule
         );
     }
-    let mixing = schedule.initial_mixing().unwrap_or_else(|| build_mixing(cfg));
+    let build = || schedule.initial_mixing().unwrap_or_else(|| build_mixing(cfg));
+    let mixing = match cache {
+        Some(c) => c.mixing_or_else(ArtifactCache::topo_key(cfg), build),
+        None => build(),
+    };
     let lr = LrSchedule::parse(&cfg.lr).unwrap_or_else(|| panic!("bad lr spec {:?}", cfg.lr));
     let comp = crate::compress::parse(&cfg.compressor, d)
         .unwrap_or_else(|| panic!("bad compressor spec {:?}", cfg.compressor));
+    // γ semantics: > 0 pins the value, 0 ⇒ tuned heuristic (the default),
+    // < 0 pins γ = 0 exactly (mixing disabled — a diagnostic setting the
+    // ablation sweep uses; plain 0 cannot mean that because it is the
+    // "unset" default). With a cache and an unpinned γ, inject the shared
+    // eigen solve's tuned value — identical to the engine's own.
+    let pinned: Option<f64> = if cfg.gamma > 0.0 {
+        Some(cfg.gamma)
+    } else if cfg.gamma < 0.0 {
+        Some(0.0)
+    } else {
+        None
+    };
+    let gamma: Option<f64> = match (cfg.algo.clone(), pinned, cache) {
+        // Vanilla's exact averaging has no γ-consensus step; the
+        // constructor pins 0 itself.
+        (Algo::Vanilla, _, _) => None,
+        (_, Some(g), _) => Some(g),
+        (_, None, Some(c)) => {
+            let s = c.spectral_or_compute(ArtifactCache::topo_key(cfg), &mixing);
+            Some(s.gamma_tuned(comp.omega(d), comp.effective_omega(d)))
+        }
+        (_, None, None) => None,
+    };
     let mut engine = match cfg.algo {
         Algo::Sparq => {
             let trigger = ThresholdSchedule::parse(&cfg.trigger)
-                .unwrap_or_else(|| panic!("bad trigger spec {:?}", cfg.trigger));
+                .unwrap_or_else(|e| panic!("bad trigger spec {:?}: {e}", cfg.trigger));
             SparqSgd::new(
                 SparqConfig {
                     mixing,
@@ -119,14 +212,16 @@ pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo
                     trigger: EventTrigger::new(trigger),
                     lr,
                     sync: SyncSchedule::EveryH(cfg.h),
-                    gamma: if cfg.gamma > 0.0 { Some(cfg.gamma) } else { None },
+                    gamma,
                     momentum: cfg.momentum as f32,
                     seed: cfg.seed,
                 },
                 d,
             )
         }
-        Algo::Choco => ChocoSgd::new(mixing, comp, lr, cfg.momentum as f32, d, cfg.seed),
+        Algo::Choco => {
+            ChocoSgd::with_gamma(mixing, comp, lr, cfg.momentum as f32, gamma, d, cfg.seed)
+        }
         Algo::Vanilla => {
             VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed)
         }
@@ -289,5 +384,114 @@ mod tests {
             ..Default::default()
         };
         build_problem(&cfg);
+    }
+
+    #[test]
+    fn quadratic_spec_accepts_noise_and_spread() {
+        // quadratic:D defaults, quadratic:D:NOISE, quadratic:D:NOISE:SPREAD
+        for spec in ["quadratic:24", "quadratic:24:0.2", "quadratic:24:0.1:0.5"] {
+            let cfg = ExperimentConfig {
+                problem: spec.into(),
+                nodes: 4,
+                ..Default::default()
+            };
+            let p = build_problem(&cfg);
+            assert_eq!(p.dim(), 24, "{spec}");
+        }
+        // the default form is exactly quadratic:D:0.05:1 (same seed path)
+        let a = ExperimentConfig {
+            problem: "quadratic:16".into(),
+            steps: 100,
+            eval_every: 50,
+            nodes: 4,
+            ..Default::default()
+        };
+        let b = ExperimentConfig {
+            problem: "quadratic:16:0.05:1".into(),
+            ..a.clone()
+        };
+        assert_eq!(run_config(&a, false).to_csv(), run_config(&b, false).to_csv());
+    }
+
+    #[test]
+    fn negative_gamma_pins_zero_mixing() {
+        // γ < 0 ⇒ consensus disabled exactly (the ablation diagnostic);
+        // heterogeneous nodes then never agree.
+        let base = ExperimentConfig {
+            steps: 600,
+            eval_every: 300,
+            nodes: 6,
+            problem: "quadratic:16".into(),
+            trigger: "zero".into(),
+            h: 1,
+            ..Default::default()
+        };
+        let tuned = run_config(&base, false);
+        let frozen = run_config(
+            &ExperimentConfig {
+                gamma: -1.0,
+                ..base
+            },
+            false,
+        );
+        let g_tuned = tuned.records.last().unwrap().consensus;
+        let g_frozen = frozen.records.last().unwrap().consensus;
+        assert!(
+            g_frozen > g_tuned * 3.0,
+            "γ=0 consensus {g_frozen} vs tuned {g_tuned}"
+        );
+    }
+
+    #[test]
+    fn cached_builds_are_bit_identical_to_uncached() {
+        use crate::coordinator::RunOptions;
+
+        let cache = ArtifactCache::new();
+        for (algo, problem) in [
+            (Algo::Sparq, "logreg:16:4:4"),
+            (Algo::Choco, "quadratic:24"),
+            (Algo::Vanilla, "quadratic:24"),
+        ] {
+            let cfg = ExperimentConfig {
+                algo: algo.clone(),
+                nodes: 5,
+                steps: 120,
+                eval_every: 60,
+                problem: problem.into(),
+                compressor: "sign_topk:25%".into(),
+                trigger: "const:20".into(),
+                ..Default::default()
+            };
+            let run_with = |cache: Option<&ArtifactCache>| {
+                let mut problem = build_problem_with(&cfg, cache);
+                let d = problem.dim();
+                let mut algo = build_algo_with(&cfg, d, cache);
+                let mut rng = Rng::new(cfg.seed ^ 0x1217);
+                if let Some(x0) = problem.init_params(&mut rng) {
+                    algo.set_params(&x0);
+                }
+                let opts = RunOptions {
+                    steps: cfg.steps,
+                    eval_every: cfg.eval_every,
+                    verbose: false,
+                    workers: 1,
+                };
+                run(algo.as_mut(), problem.as_mut(), &opts)
+            };
+            let uncached = run_with(None);
+            let cached_once = run_with(Some(&cache));
+            let cached_twice = run_with(Some(&cache)); // hits this time
+            assert_eq!(
+                uncached.to_csv(),
+                cached_once.to_csv(),
+                "{algo:?} cached != uncached"
+            );
+            assert_eq!(uncached.to_csv(), cached_twice.to_csv());
+        }
+        // the second+third builds actually hit
+        let (h, m) = cache.data_stats();
+        assert!(h >= 3, "data hits {h} misses {m}");
+        let (h, m) = cache.mixing_stats();
+        assert!(h >= 1, "mixing hits {h} misses {m}");
     }
 }

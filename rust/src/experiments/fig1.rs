@@ -11,61 +11,72 @@
 //! reaches the target error in ≤ rounds and with orders-of-magnitude
 //! fewer bits than CHOCO/vanilla.
 
-use crate::config::{presets, Algo, ExperimentConfig};
+use crate::config::{presets, ExperimentConfig};
 use crate::metrics::Series;
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions, SweepSpec};
+use crate::util::json::Json;
 
-use super::builder::run_config;
-
-/// The five curves of Fig 1a/1b.
-pub fn convex_suite(steps: u64, seed: u64) -> Vec<(String, ExperimentConfig)> {
-    let base = presets::convex_sparq(steps);
-    let mut out = Vec::new();
-
-    let mut sparq = base.clone();
-    sparq.seed = seed;
-    out.push(("SPARQ-SGD (SignTopK)".to_string(), sparq));
-
-    let mut choco_sign = base.clone();
-    choco_sign.algo = Algo::Choco;
-    choco_sign.compressor = "sign".into();
-    choco_sign.name = "fig1-convex-choco-sign".into();
-    choco_sign.seed = seed;
-    out.push(("CHOCO-SGD (Sign)".to_string(), choco_sign));
-
-    // Paper Section 5.1 uses k = 10 for the TopK baseline as well (the
-    // quoted 10-15x SPARQ-vs-TopK factor only makes sense for k = 10:
-    // TopK's 45 bits/coordinate vs Sign's 1 bit/coordinate).
-    let mut choco_topk = base.clone();
-    choco_topk.algo = Algo::Choco;
-    choco_topk.compressor = "topk:10".into();
-    choco_topk.name = "fig1-convex-choco-topk".into();
-    choco_topk.seed = seed;
-    out.push(("CHOCO-SGD (TopK)".to_string(), choco_topk));
-
-    // The paper also implements SignTopK inside CHOCO for comparison.
-    let mut choco_st = base.clone();
-    choco_st.algo = Algo::Choco;
-    choco_st.name = "fig1-convex-choco-signtopk".into();
-    choco_st.seed = seed;
-    out.push(("CHOCO-SGD (SignTopK)".to_string(), choco_st));
-
-    let mut vanilla = base.clone();
-    vanilla.algo = Algo::Vanilla;
-    vanilla.compressor = "identity".into();
-    vanilla.name = "fig1-convex-vanilla".into();
-    vanilla.seed = seed;
-    out.push(("Vanilla decentralized SGD".to_string(), vanilla));
-
-    out
+/// The Fig 1a/1b grid as a declarative sweep spec: one base config, the
+/// five curves as variants. `examples/specs/fig1_convex.json` is this
+/// spec's on-disk form.
+pub fn convex_spec(steps: u64, seed: u64) -> SweepSpec {
+    let mut base = presets::convex_sparq(steps);
+    base.seed = seed;
+    SweepSpec::new("fig1-convex")
+        .base(&base)
+        .variant("SPARQ-SGD (SignTopK)", &[("name", Json::from("fig1-convex-sparq"))])
+        .variant(
+            "CHOCO-SGD (Sign)",
+            &[
+                ("name", Json::from("fig1-convex-choco-sign")),
+                ("algo", Json::from("choco")),
+                ("compressor", Json::from("sign")),
+            ],
+        )
+        // Paper Section 5.1 uses k = 10 for the TopK baseline as well
+        // (the quoted 10-15x SPARQ-vs-TopK factor only makes sense for
+        // k = 10: TopK's 45 bits/coordinate vs Sign's 1 bit/coordinate).
+        .variant(
+            "CHOCO-SGD (TopK)",
+            &[
+                ("name", Json::from("fig1-convex-choco-topk")),
+                ("algo", Json::from("choco")),
+                ("compressor", Json::from("topk:10")),
+            ],
+        )
+        // The paper also implements SignTopK inside CHOCO for comparison.
+        .variant(
+            "CHOCO-SGD (SignTopK)",
+            &[
+                ("name", Json::from("fig1-convex-choco-signtopk")),
+                ("algo", Json::from("choco")),
+            ],
+        )
+        .variant(
+            "Vanilla decentralized SGD",
+            &[
+                ("name", Json::from("fig1-convex-vanilla")),
+                ("algo", Json::from("vanilla")),
+                ("compressor", Json::from("identity")),
+            ],
+        )
 }
 
-/// The Fig 1c/1d curves (non-convex, momentum 0.9).
-pub fn nonconvex_suite(
+/// The five curves of Fig 1a/1b (the expanded [`convex_spec`] grid).
+pub fn convex_suite(steps: u64, seed: u64) -> Vec<(String, ExperimentConfig)> {
+    convex_spec(steps, seed)
+        .expand()
+        .expect("fig1 convex spec expands")
+}
+
+/// The Fig 1c/1d grid as a declarative sweep spec (non-convex, momentum
+/// 0.9).
+pub fn nonconvex_spec(
     steps: u64,
     steps_per_epoch: usize,
     seed: u64,
     problem: &str,
-) -> Vec<(String, ExperimentConfig)> {
+) -> SweepSpec {
     let mut base = presets::nonconvex_sparq(steps, steps_per_epoch);
     // Paper-convention bit accounting for SignTopK (signs + norm, no
     // index bits): Section 5.2 "only transmit the sign and norm of the
@@ -75,67 +86,98 @@ pub fn nonconvex_suite(
     base.compressor = "sign_topk:10%:paper".into();
     base.problem = problem.to_string();
     base.seed = seed;
-    let mut out = Vec::new();
-
-    out.push(("SPARQ-SGD (SignTopK)".to_string(), base.clone()));
-
-    // SPARQ without event trigger = "SPARQ-SGD (Sign-TopK)" curve of 1c/1d.
-    let mut no_trig = base.clone();
-    no_trig.trigger = "zero".into();
-    no_trig.name = "fig1-nonconvex-signtopk-notrigger".into();
-    out.push(("SPARQ-SGD (SignTopK, no trigger)".to_string(), no_trig));
-
-    let mut choco_sign = base.clone();
-    choco_sign.algo = Algo::Choco;
-    choco_sign.compressor = "sign".into();
-    choco_sign.name = "fig1-nonconvex-choco-sign".into();
-    out.push(("CHOCO-SGD (Sign)".to_string(), choco_sign));
-
-    let mut choco_topk = base.clone();
-    choco_topk.algo = Algo::Choco;
-    choco_topk.compressor = "topk:10%".into();
-    choco_topk.name = "fig1-nonconvex-choco-topk".into();
-    out.push(("CHOCO-SGD (TopK)".to_string(), choco_topk));
-
-    let mut vanilla = base;
-    vanilla.algo = Algo::Vanilla;
-    vanilla.compressor = "identity".into();
-    vanilla.name = "fig1-nonconvex-vanilla".into();
-    out.push(("Vanilla decentralized SGD".to_string(), vanilla));
-
-    out
+    SweepSpec::new("fig1-nonconvex")
+        .base(&base)
+        .variant(
+            "SPARQ-SGD (SignTopK)",
+            &[("name", Json::from("fig1-nonconvex-sparq"))],
+        )
+        // SPARQ without event trigger = "SPARQ-SGD (Sign-TopK)" of 1c/1d.
+        .variant(
+            "SPARQ-SGD (SignTopK, no trigger)",
+            &[
+                ("name", Json::from("fig1-nonconvex-signtopk-notrigger")),
+                ("trigger", Json::from("zero")),
+            ],
+        )
+        .variant(
+            "CHOCO-SGD (Sign)",
+            &[
+                ("name", Json::from("fig1-nonconvex-choco-sign")),
+                ("algo", Json::from("choco")),
+                ("compressor", Json::from("sign")),
+            ],
+        )
+        .variant(
+            "CHOCO-SGD (TopK)",
+            &[
+                ("name", Json::from("fig1-nonconvex-choco-topk")),
+                ("algo", Json::from("choco")),
+                ("compressor", Json::from("topk:10%")),
+            ],
+        )
+        .variant(
+            "Vanilla decentralized SGD",
+            &[
+                ("name", Json::from("fig1-nonconvex-vanilla")),
+                ("algo", Json::from("vanilla")),
+                ("compressor", Json::from("identity")),
+            ],
+        )
 }
 
-/// Run a suite's curves concurrently on the in-tree thread pool (each
-/// curve owns its problem + algorithm, so they are independent; results
-/// are deterministic regardless of worker count).
+/// The Fig 1c/1d curves (the expanded [`nonconvex_spec`] grid).
+pub fn nonconvex_suite(
+    steps: u64,
+    steps_per_epoch: usize,
+    seed: u64,
+    problem: &str,
+) -> Vec<(String, ExperimentConfig)> {
+    nonconvex_spec(steps, steps_per_epoch, seed, problem)
+        .expand()
+        .expect("fig1 nonconvex spec expands")
+}
+
+/// Run a suite's curves on the sweep engine with the given total worker
+/// budget (each curve owns its problem + algorithm; topology/spectral/
+/// dataset artifacts are shared through the sweep cache; results are
+/// bit-for-bit deterministic regardless of the budget).
 pub fn run_suite_parallel(
     suite: Vec<(String, ExperimentConfig)>,
     workers: usize,
 ) -> Vec<Series> {
-    use crate::util::threadpool::ThreadPool;
-    let mut slots: Vec<(String, ExperimentConfig, Option<Series>)> = suite
+    let cache = ArtifactCache::new();
+    let opts = SweepOptions {
+        workers,
+        ..Default::default()
+    };
+    let report = run_configs(suite, &opts, &cache).expect("suite runs");
+    report
+        .outcomes
         .into_iter()
-        .map(|(label, cfg)| (label, cfg, None))
-        .collect();
-    ThreadPool::new(workers).for_each_mut(&mut slots, |_, slot| {
-        let mut s = run_config(&slot.1, false);
-        s.label = slot.0.clone();
-        slot.2 = Some(s);
-    });
-    slots.into_iter().map(|(_, _, s)| s.unwrap()).collect()
+        .map(|o| {
+            let mut s = o.series;
+            s.label = o.label;
+            s
+        })
+        .collect()
 }
 
-/// Run a suite, printing progress.
+/// Run a suite serially, printing per-run progress.
 pub fn run_suite(suite: Vec<(String, ExperimentConfig)>, verbose: bool) -> Vec<Series> {
-    suite
+    let cache = ArtifactCache::new();
+    let opts = SweepOptions {
+        workers: 1,
+        verbose,
+        ..Default::default()
+    };
+    let report = run_configs(suite, &opts, &cache).expect("suite runs");
+    report
+        .outcomes
         .into_iter()
-        .map(|(label, cfg)| {
-            if verbose {
-                println!("== {label} ==");
-            }
-            let mut s = run_config(&cfg, verbose);
-            s.label = label;
+        .map(|o| {
+            let mut s = o.series;
+            s.label = o.label;
             s
         })
         .collect()
@@ -184,6 +226,21 @@ pub fn savings_table(series: &[Series], target_err: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn specs_json_roundtrip_to_the_same_grid() {
+        for spec in [convex_spec(100, 1), nonconvex_spec(100, 10, 1, "mlp:64:16:4:8")] {
+            let runs = spec.expand().unwrap();
+            let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+            let runs2 = back.expand().unwrap();
+            assert_eq!(runs.len(), 5);
+            assert_eq!(runs.len(), runs2.len());
+            for ((la, ca), (lb, cb)) in runs.iter().zip(runs2.iter()) {
+                assert_eq!(la, lb);
+                assert_eq!(ca, cb);
+            }
+        }
+    }
 
     #[test]
     fn suites_have_expected_curves() {

@@ -1,6 +1,12 @@
 //! Experiment drivers regenerating the paper's evaluation (Figure 1a–1d),
 //! the Remark-4 savings comparison, the Theorem-1 rate sweeps, and the
 //! lossy-link / time-varying-topology robustness sweeps.
+//!
+//! Since the sweep refactor each driver is a *thin declarative spec* over
+//! the sweep engine (`crate::sweep`): it states its config grid (a
+//! `SweepSpec` or an explicit config list) and projects the returned
+//! series into its point/table types. Run scheduling, cross-run artifact
+//! caching, result streaming, and resume all live in the engine.
 
 pub mod ablation;
 pub mod builder;
@@ -9,4 +15,6 @@ pub mod robustness;
 pub mod savings;
 pub mod rates;
 
-pub use builder::{build_algo, build_problem, run_config};
+pub use builder::{
+    build_algo, build_algo_with, build_problem, build_problem_with, run_config,
+};

@@ -1,14 +1,16 @@
 //! Theorem-1 rate sweeps on the known-optimum quadratic: how the
 //! suboptimality after T steps responds to n, H, c₀, ω, δ — the paper's
 //! Remark 1 sensitivity analysis, measured.
+//!
+//! Each sweep is a declarative list of `ExperimentConfig`s executed on
+//! the sweep engine (`sweep::run_configs`), sharing topology/spectral
+//! artifacts across points through one `ArtifactCache` — the eigen solve
+//! behind δ and the tuned γ runs once per distinct graph, not once per
+//! point.
 
-use crate::comm::Bus;
-use crate::compress::{Compressor, SignTopK, TopK};
-use crate::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
-use crate::graph::{uniform_neighbor, SpectralInfo, Topology, TopologyKind};
-use crate::problems::QuadraticProblem;
-use crate::schedule::{LrSchedule, SyncSchedule};
-use crate::trigger::{EventTrigger, ThresholdSchedule};
+use crate::config::{Algo, ExperimentConfig};
+use crate::graph::TopologyKind;
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
 
 /// One sweep point.
 #[derive(Clone, Debug)]
@@ -24,7 +26,112 @@ pub struct RatePoint {
     pub total_bits: u64,
 }
 
+/// Topology spec string for a kind (inverse of `TopologyKind::parse`).
+fn topo_spec(kind: TopologyKind) -> String {
+    match kind {
+        TopologyKind::Ring => "ring".into(),
+        TopologyKind::Complete => "complete".into(),
+        TopologyKind::Star => "star".into(),
+        TopologyKind::Path => "path".into(),
+        TopologyKind::Torus => "torus".into(),
+        TopologyKind::Hypercube => "hypercube".into(),
+        TopologyKind::RandomRegular(deg) => format!("regular{deg}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn point_config(
+    n: usize,
+    d: usize,
+    h: u64,
+    c0: f64,
+    compressor: String,
+    topology: TopologyKind,
+    steps: u64,
+    seed: u64,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("rates-n{n}-h{h}-c{c0}-{}", topo_spec(topology)),
+        algo: Algo::Sparq,
+        nodes: n,
+        topology: topo_spec(topology),
+        compressor,
+        trigger: if c0 > 0.0 {
+            // Theorem 1 form c_t = c0·√t.
+            format!("poly:{c0}:0.5")
+        } else {
+            "zero".into()
+        },
+        // Practical inverse-time schedule: Theorem 1's a >= 5H/p with the
+        // worst-case p makes eta so small that T-sweeps at test scale sit
+        // in the pre-asymptotic plateau; the paper's own experiments use
+        // eta_t = 1/(t+100)-style tuned schedules (Section 5.1).
+        lr: "invtime:60:2".into(),
+        h,
+        steps,
+        eval_every: steps.max(1),
+        seed,
+        // σ = 0.2 noise, unit heterogeneity spread — the rate-test regime.
+        problem: format!("quadratic:{d}:0.2:1"),
+        ..Default::default()
+    }
+}
+
+/// Execute rate-point configs on the sweep engine and project the
+/// series into [`RatePoint`]s (ω from the compressor contract, δ from
+/// the shared spectral cache).
+fn run_points(configs: Vec<ExperimentConfig>, cache: &ArtifactCache) -> Vec<RatePoint> {
+    let runs: Vec<(String, ExperimentConfig)> = configs
+        .into_iter()
+        .map(|cfg| (cfg.name.clone(), cfg))
+        .collect();
+    let report =
+        run_configs(runs, &SweepOptions::default(), cache).expect("rate sweep runs");
+    report
+        .outcomes
+        .into_iter()
+        .map(|o| {
+            let cfg = &o.cfg;
+            let d: usize = cfg
+                .problem
+                .split(':')
+                .nth(1)
+                .and_then(|s| s.parse().ok())
+                .expect("quadratic problem dim");
+            let comp =
+                crate::compress::parse(&cfg.compressor, d).expect("rate-point compressor");
+            let omega = comp.omega(d);
+            let mixing = cache.mixing_or_else(ArtifactCache::topo_key(cfg), || {
+                super::builder::build_mixing(cfg)
+            });
+            let delta = cache
+                .spectral_or_compute(ArtifactCache::topo_key(cfg), &mixing)
+                .delta;
+            let c0 = match cfg.trigger.split(':').nth(1) {
+                Some(v) => v.parse().unwrap_or(0.0),
+                None => 0.0,
+            };
+            let last = o.series.records.last().expect("at least one record");
+            RatePoint {
+                label: format!(
+                    "n={} H={} c0={c0} ω={omega:.3} δ={delta:.3}",
+                    cfg.nodes, cfg.h
+                ),
+                n: cfg.nodes,
+                h: cfg.h,
+                c0,
+                omega,
+                delta,
+                steps: cfg.steps,
+                final_gap: last.opt_gap,
+                total_bits: last.bits,
+            }
+        })
+        .collect()
+}
+
 /// Run SPARQ on a quadratic with the Theorem-1 learning-rate schedule.
+#[allow(clippy::too_many_arguments)]
 pub fn run_point(
     n: usize,
     d: usize,
@@ -35,63 +142,41 @@ pub fn run_point(
     steps: u64,
     seed: u64,
 ) -> RatePoint {
-    let topo = Topology::new(topology, n, seed);
-    let mixing = uniform_neighbor(&topo);
-    let spectral = SpectralInfo::compute(&mixing);
     let k = ((d as f64 * k_frac).round() as usize).clamp(1, d);
-    let comp: Box<dyn Compressor> = Box::new(SignTopK::new(k));
-    let omega = comp.omega(d);
-    let delta = spectral.delta;
-
-    let (mu, l_smooth) = (0.5, 2.0);
-    let gamma = spectral.gamma_tuned(omega, comp.effective_omega(d));
-    // Practical inverse-time schedule: Theorem 1's a >= 5H/p with the
-    // worst-case p makes eta so small that T-sweeps at test scale sit in
-    // the pre-asymptotic plateau; the paper's own experiments use
-    // eta_t = 1/(t+100)-style tuned schedules (Section 5.1).
-    let lr = LrSchedule::InverseTime { a: 60.0, b: 2.0 };
-    let _ = (mu, l_smooth);
-
-    let cfg = SparqConfig {
-        mixing,
-        compressor: comp,
-        trigger: EventTrigger::new(if c0 > 0.0 {
-            ThresholdSchedule::Poly { c0, eps: 0.5 }
-        } else {
-            ThresholdSchedule::Zero
-        }),
-        lr,
-        sync: SyncSchedule::EveryH(h),
-        gamma: Some(gamma),
-        momentum: 0.0,
-        seed,
-    };
-    let mut algo = SparqSgd::new(cfg, d);
-    let mut prob = QuadraticProblem::new(d, n, mu, l_smooth, 0.2, 1.0, seed ^ 0xF00D);
-    let mut bus = Bus::new(n);
-    for t in 0..steps {
-        algo.step(t, &mut prob, &mut bus);
-    }
-    let final_gap = prob.suboptimality(&algo.x_bar());
-    RatePoint {
-        label: format!("n={n} H={h} c0={c0} ω={omega:.3} δ={delta:.3}"),
+    let cfg = point_config(
         n,
+        d,
         h,
         c0,
-        omega,
-        delta,
+        format!("sign_topk:{k}"),
+        topology,
         steps,
-        final_gap,
-        total_bits: bus.total_bits,
-    }
+        seed,
+    );
+    let cache = ArtifactCache::new();
+    run_points(vec![cfg], &cache).pop().expect("one point")
 }
 
-/// Sweep over T to observe the O(1/nT) decay (dominant term).
+/// Sweep over T to observe the O(1/nT) decay (dominant term). One shared
+/// cache: the ring is built and eigen-solved once for the whole sweep.
 pub fn t_sweep(n: usize, steps_list: &[u64], seed: u64) -> Vec<RatePoint> {
-    steps_list
+    let cache = ArtifactCache::new();
+    let configs = steps_list
         .iter()
-        .map(|&steps| run_point(n, 32, 5, 1.0, 0.25, TopologyKind::Ring, steps, seed))
-        .collect()
+        .map(|&steps| {
+            point_config(
+                n,
+                32,
+                5,
+                1.0,
+                "sign_topk:8".into(),
+                TopologyKind::Ring,
+                steps,
+                seed,
+            )
+        })
+        .collect();
+    run_points(configs, &cache)
 }
 
 /// Sweep over n at fixed T (distributed 1/n variance gain, Remark 2).
@@ -99,9 +184,23 @@ pub fn t_sweep(n: usize, steps_list: &[u64], seed: u64) -> Vec<RatePoint> {
 /// the variance term is isolated (on a ring, growing n also shrinks δ,
 /// confounding the comparison).
 pub fn n_sweep(ns: &[usize], steps: u64, seed: u64) -> Vec<RatePoint> {
-    ns.iter()
-        .map(|&n| run_point(n, 32, 5, 1.0, 0.25, TopologyKind::Complete, steps, seed))
-        .collect()
+    let cache = ArtifactCache::new();
+    let configs = ns
+        .iter()
+        .map(|&n| {
+            point_config(
+                n,
+                32,
+                5,
+                1.0,
+                "sign_topk:8".into(),
+                TopologyKind::Complete,
+                steps,
+                seed,
+            )
+        })
+        .collect();
+    run_points(configs, &cache)
 }
 
 /// TopK-only variant used by ω ablations (ω = k/d exactly).
@@ -113,41 +212,24 @@ pub fn run_point_topk(
     steps: u64,
     seed: u64,
 ) -> RatePoint {
-    let topo = Topology::new(TopologyKind::Ring, n, seed);
-    let mixing = uniform_neighbor(&topo);
-    let spectral = SpectralInfo::compute(&mixing);
     let k = ((d as f64 * k_frac).round() as usize).clamp(1, d);
-    let comp: Box<dyn Compressor> = Box::new(TopK::new(k));
-    let omega = comp.omega(d);
-    let gamma = spectral.gamma_tuned(omega, comp.effective_omega(d));
-    let lr = LrSchedule::InverseTime { a: 60.0, b: 2.0 };
-    let cfg = SparqConfig {
-        mixing,
-        compressor: comp,
-        trigger: EventTrigger::new(ThresholdSchedule::Zero),
-        lr,
-        sync: SyncSchedule::EveryH(h),
-        gamma: Some(gamma),
-        momentum: 0.0,
-        seed,
-    };
-    let mut algo = SparqSgd::new(cfg, d);
-    let mut prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.2, 1.0, seed ^ 0xF00D);
-    let mut bus = Bus::new(n);
-    for t in 0..steps {
-        algo.step(t, &mut prob, &mut bus);
-    }
-    RatePoint {
-        label: format!("topk n={n} H={h} ω={omega:.3} δ={:.3}", spectral.delta),
+    let cfg = point_config(
         n,
+        d,
         h,
-        c0: 0.0,
-        omega,
-        delta: spectral.delta,
+        0.0,
+        format!("topk:{k}"),
+        TopologyKind::Ring,
         steps,
-        final_gap: prob.suboptimality(&algo.x_bar()),
-        total_bits: bus.total_bits,
-    }
+        seed,
+    );
+    let cache = ArtifactCache::new();
+    let mut point = run_points(vec![cfg], &cache).pop().expect("one point");
+    point.label = format!(
+        "topk n={n} H={h} ω={:.3} δ={:.3}",
+        point.omega, point.delta
+    );
+    point
 }
 
 #[cfg(test)]
@@ -181,5 +263,31 @@ mod tests {
         assert!(trig.total_bits <= no_trig.total_bits);
         // within 5x on the final gap (generous; these are stochastic runs)
         assert!(trig.final_gap < no_trig.final_gap * 5.0 + 1e-3);
+    }
+
+    #[test]
+    fn sweep_points_share_the_eigen_solve() {
+        let cache = ArtifactCache::new();
+        let configs = [200u64, 400, 600]
+            .iter()
+            .map(|&steps| {
+                point_config(
+                    6,
+                    16,
+                    5,
+                    1.0,
+                    "sign_topk:4".into(),
+                    TopologyKind::Ring,
+                    steps,
+                    1,
+                )
+            })
+            .collect();
+        let pts = run_points(configs, &cache);
+        assert_eq!(pts.len(), 3);
+        let (_, spectral_misses) = cache.spectral_stats();
+        assert_eq!(spectral_misses, 1, "{}", cache.summary());
+        let (_, mixing_misses) = cache.mixing_stats();
+        assert_eq!(mixing_misses, 1, "{}", cache.summary());
     }
 }

@@ -17,11 +17,8 @@
 //! weaker static graph.
 
 use crate::config::{Algo, ExperimentConfig};
-use crate::coordinator::{run, RunOptions};
 use crate::metrics::Series;
-use crate::util::Rng;
-
-use super::builder::{build_algo, build_problem};
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
 
 /// One (algorithm, scenario) measurement.
 #[derive(Clone, Debug)]
@@ -38,35 +35,40 @@ pub struct RobustnessPoint {
     pub transmit_rate: f64,
 }
 
-/// Run one config, returning its series plus the engine's transmit rate.
-fn run_one(cfg: &ExperimentConfig) -> (Series, RobustnessPoint) {
-    let mut problem = build_problem(cfg);
-    let d = problem.dim();
-    let mut algo = build_algo(cfg, d);
-    let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
-    if let Some(x0) = problem.init_params(&mut init_rng) {
-        algo.set_params(&x0);
+/// Run a scenario list on the sweep engine with the given total worker
+/// budget (0 ⇒ available CPUs; shared artifact cache; results identical
+/// for any budget), returning each run's series plus the engine's
+/// transmit rate.
+fn run_scenarios(
+    configs: Vec<ExperimentConfig>,
+    workers: usize,
+) -> (Vec<RobustnessPoint>, Vec<Series>) {
+    let cache = ArtifactCache::new();
+    let runs: Vec<(String, ExperimentConfig)> = configs
+        .into_iter()
+        .map(|cfg| (cfg.name.clone(), cfg))
+        .collect();
+    let opts = SweepOptions {
+        workers,
+        ..Default::default()
+    };
+    let report = run_configs(runs, &opts, &cache).expect("robustness sweep runs");
+    let mut points = Vec::with_capacity(report.outcomes.len());
+    let mut series = Vec::with_capacity(report.outcomes.len());
+    for o in report.outcomes {
+        let last = o.series.records.last().expect("at least one record");
+        points.push(RobustnessPoint {
+            label: o.cfg.name.clone(),
+            algo: o.cfg.algo.clone(),
+            drop_p: 0.0,
+            final_loss: last.loss,
+            consensus: last.consensus,
+            total_bits: last.bits,
+            transmit_rate: o.fired as f64 / o.checks.max(1) as f64,
+        });
+        series.push(o.series);
     }
-    let opts = RunOptions {
-        steps: cfg.steps,
-        eval_every: cfg.eval_every,
-        verbose: false,
-        workers: cfg.workers,
-    };
-    let mut series = run(algo.as_mut(), problem.as_mut(), &opts);
-    series.label = format!("{}:{}", cfg.name, algo.name());
-    let (fired, checks) = algo.fired_stats();
-    let last = series.records.last().expect("at least one record");
-    let point = RobustnessPoint {
-        label: cfg.name.clone(),
-        algo: cfg.algo.clone(),
-        drop_p: 0.0,
-        final_loss: last.loss,
-        consensus: last.consensus,
-        total_bits: last.bits,
-        transmit_rate: fired as f64 / checks.max(1) as f64,
-    };
-    (series, point)
+    (points, series)
 }
 
 /// The sweep's shared base workload (small quadratic — the claims under
@@ -86,14 +88,17 @@ fn base_cfg(steps: u64, seed: u64) -> ExperimentConfig {
     }
 }
 
-/// Lossy-link sweep: SPARQ vs CHOCO vs vanilla at each drop probability.
+/// Lossy-link sweep: SPARQ vs CHOCO vs vanilla at each drop probability
+/// (one declarative config grid, one engine invocation under the given
+/// worker budget).
 pub fn drop_sweep(
     steps: u64,
     seed: u64,
     probs: &[f64],
+    workers: usize,
 ) -> (Vec<RobustnessPoint>, Vec<Series>) {
-    let mut points = Vec::new();
-    let mut series = Vec::new();
+    let mut configs = Vec::new();
+    let mut drop_ps = Vec::new();
     for &p in probs {
         for algo in [Algo::Sparq, Algo::Choco, Algo::Vanilla] {
             let mut cfg = base_cfg(steps, seed);
@@ -102,18 +107,24 @@ pub fn drop_sweep(
                 cfg.link = format!("drop:{p}");
             }
             cfg.name = format!("robust-{}-drop{p}", algo.as_str());
-            let (s, mut point) = run_one(&cfg);
-            point.drop_p = p;
-            points.push(point);
-            series.push(s);
+            configs.push(cfg);
+            drop_ps.push(p);
         }
+    }
+    let (mut points, series) = run_scenarios(configs, workers);
+    for (point, p) in points.iter_mut().zip(drop_ps) {
+        point.drop_p = p;
     }
     (points, series)
 }
 
 /// Time-varying-topology comparison: SPARQ on `switch:ring,torus:P` vs
 /// the two static graphs (same workload, same seeds).
-pub fn switch_sweep(steps: u64, seed: u64) -> (Vec<RobustnessPoint>, Vec<Series>) {
+pub fn switch_sweep(
+    steps: u64,
+    seed: u64,
+    workers: usize,
+) -> (Vec<RobustnessPoint>, Vec<Series>) {
     let period = (steps / 8).max(1);
     let scenarios: [(&str, String, String); 3] = [
         ("robust-static-ring", "static".into(), "ring".into()),
@@ -124,18 +135,17 @@ pub fn switch_sweep(steps: u64, seed: u64) -> (Vec<RobustnessPoint>, Vec<Series>
             "ring".into(),
         ),
     ];
-    let mut points = Vec::new();
-    let mut series = Vec::new();
-    for (name, schedule, topology) in scenarios {
-        let mut cfg = base_cfg(steps, seed);
-        cfg.name = name.into();
-        cfg.topology = topology;
-        cfg.topology_schedule = schedule;
-        let (s, point) = run_one(&cfg);
-        points.push(point);
-        series.push(s);
-    }
-    (points, series)
+    let configs = scenarios
+        .into_iter()
+        .map(|(name, schedule, topology)| {
+            let mut cfg = base_cfg(steps, seed);
+            cfg.name = name.into();
+            cfg.topology = topology;
+            cfg.topology_schedule = schedule;
+            cfg
+        })
+        .collect();
+    run_scenarios(configs, workers)
 }
 
 /// Formatted comparison table.
@@ -165,7 +175,8 @@ mod tests {
 
     #[test]
     fn drop_sweep_runs_and_orders_bits() {
-        let (points, series) = drop_sweep(300, 5, &[0.0, 0.3]);
+        // workers = 2 also exercises the run-level concurrency path
+        let (points, series) = drop_sweep(300, 5, &[0.0, 0.3], 2);
         assert_eq!(points.len(), 6);
         assert_eq!(series.len(), 6);
         assert!(series.iter().all(|s| !s.records.is_empty()));
@@ -195,7 +206,7 @@ mod tests {
 
     #[test]
     fn switch_sweep_emits_three_series() {
-        let (points, series) = switch_sweep(320, 7);
+        let (points, series) = switch_sweep(320, 7, 1);
         assert_eq!(points.len(), 3);
         assert!(series.iter().all(|s| s.records.len() >= 2));
         // every scenario optimizes

@@ -5,7 +5,55 @@
 //! bits SPARQ has executed H× more SGD steps. The measured counterpart:
 //! run both to the same target error and compare cumulative bits.
 
+use crate::config::{Algo, ExperimentConfig};
 use crate::metrics::Series;
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
+
+/// Remark 4 *measured*: run SPARQ (H local steps, trigger on) and CHOCO
+/// (H = 1, no trigger) on the same workload through the sweep engine and
+/// return the two series — feed them to [`bits_to_target`] /
+/// [`savings_factor`] for the measured counterpart of
+/// [`remark4_bound_ratio`]. The pair is a declarative two-config sweep;
+/// topology and dataset artifacts are shared.
+pub fn remark4_measured(steps: u64, h: u64, seed: u64) -> (Series, Series) {
+    let base = ExperimentConfig {
+        name: "remark4".into(),
+        nodes: 8,
+        steps,
+        eval_every: (steps / 20).max(1),
+        seed,
+        problem: "quadratic:64".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:50".into(),
+        h,
+        ..Default::default()
+    };
+    let sparq = ExperimentConfig {
+        name: format!("remark4-sparq-h{h}"),
+        ..base.clone()
+    };
+    let choco = ExperimentConfig {
+        name: "remark4-choco".into(),
+        algo: Algo::Choco,
+        h: 1,
+        trigger: "zero".into(),
+        ..base
+    };
+    let cache = ArtifactCache::new();
+    let report = run_configs(
+        vec![
+            ("SPARQ-SGD".to_string(), sparq),
+            ("CHOCO-SGD".to_string(), choco),
+        ],
+        &SweepOptions::default(),
+        &cache,
+    )
+    .expect("remark4 sweep runs");
+    let mut it = report.outcomes.into_iter();
+    let a = it.next().expect("sparq outcome").series;
+    let b = it.next().expect("choco outcome").series;
+    (a, b)
+}
 
 /// Bits each algorithm spent to first reach `target_err`, as
 /// (label, bits, comm_rounds); series that never reach it are `None`.
@@ -80,5 +128,25 @@ mod tests {
     #[test]
     fn remark4() {
         assert_eq!(remark4_bound_ratio(5), 5.0);
+    }
+
+    #[test]
+    fn remark4_measured_sparq_beats_choco_on_bits() {
+        // The measured counterpart of the closed-form comparison: at the
+        // same loss target SPARQ (H = 2, triggered) spends fewer bits
+        // than CHOCO (H = 1, always-transmit).
+        let (sparq, choco) = remark4_measured(800, 2, 7);
+        assert!(!sparq.records.is_empty() && !choco.records.is_empty());
+        // pick a target both runs reach: the worse of the two final losses
+        let target = sparq
+            .records
+            .last()
+            .unwrap()
+            .loss
+            .max(choco.records.last().unwrap().loss)
+            * 1.02;
+        let sb = sparq.first_reaching_loss(target).expect("sparq reaches").bits;
+        let cb = choco.first_reaching_loss(target).expect("choco reaches").bits;
+        assert!(sb < cb, "SPARQ bits {sb} !< CHOCO bits {cb}");
     }
 }

@@ -24,7 +24,12 @@
 //!   logistic regression) for tests/benches, and artifact-backed models.
 //! * [`data`] — synthetic dataset generators + heterogeneous partitioner.
 //! * [`experiments`] — drivers regenerating the paper's Figure 1a–1d and
-//!   the communication-savings table.
+//!   the communication-savings table, expressed as declarative specs
+//!   over the sweep engine.
+//! * [`sweep`] — the declarative sweep engine: grid specs (variants ×
+//!   axes over `ExperimentConfig`), concurrent run scheduling under a
+//!   total worker budget, cross-run artifact caching, JSONL result
+//!   streaming, and hash-keyed resume with mid-run checkpoints.
 //! * [`util`] — offline-environment substrates: deterministic RNG, JSON,
 //!   CLI parsing, stats, bench harness helpers.
 
@@ -41,6 +46,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod config;
 pub mod experiments;
+pub mod sweep;
 pub mod runtime;
 
 /// Crate version (mirrors Cargo.toml).

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train    --config cfg.json | preset flags   run one experiment
+//!   sweep    --spec spec.json --out results/    declarative config grid,
+//!            [--workers N --resume              concurrent + resumable
+//!             --checkpoint-every C]             (see sweep::SweepSpec)
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
@@ -16,6 +19,8 @@
 //!   sparq train --workers 8 --nodes 16 --problem quadratic:4096
 //!   sparq train --link drop:0.2 --trigger const:50 --h 2
 //!   sparq train --nodes 16 --topology-schedule switch:ring,torus:500
+//!   sparq sweep --spec examples/specs/fig1_convex.json --out results/fig1 --workers 8
+//!   sparq sweep --spec examples/specs/smoke.json --out /tmp/sweep --resume
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
 //!   sparq robustness --steps 2000 --drops 0.0,0.1,0.3
@@ -29,6 +34,7 @@ fn main() {
     let args = Args::from_env();
     match args.subcommand() {
         Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
         Some("spectral") => cmd_spectral(&args),
@@ -38,11 +44,72 @@ fn main() {
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
         }
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    use sparq::sweep::{run_spec, SweepOptions, SweepSpec};
+
+    let Some(spec_path) = args.get("spec") else {
+        eprintln!("sweep requires --spec spec.json (see examples/specs/)");
+        std::process::exit(2);
+    };
+    let spec = SweepSpec::from_file(spec_path).unwrap_or_else(|e| {
+        eprintln!("spec error: {e}");
+        std::process::exit(2);
+    });
+    let opts = SweepOptions {
+        workers: args.usize("workers", 0),
+        out: args.get("out").map(std::path::PathBuf::from),
+        resume: args.bool("resume"),
+        checkpoint_every: args.u64("checkpoint-every", 0),
+        verbose: !args.bool("quiet"),
+        fault_abort_at: None,
+    };
+    println!(
+        "sweep {:?}: {} runs{}",
+        spec.name,
+        spec.len(),
+        if opts.resume { " (resume)" } else { "" }
+    );
+    let report = run_spec(&spec, &opts).unwrap_or_else(|e| {
+        eprintln!("sweep error: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "\n{:<44} {:>12} {:>12} {:>14} {:>9}",
+        "run", "final loss", "final err", "bits", "tx rate"
+    );
+    for o in &report.outcomes {
+        let last = o.series.records.last();
+        println!(
+            "{:<44} {:>12.5} {:>12.4} {:>14} {:>8.1}%{}",
+            o.cfg.name,
+            last.map(|r| r.loss).unwrap_or(f64::NAN),
+            last.map(|r| r.test_error).unwrap_or(f64::NAN),
+            last.map(|r| r.bits).unwrap_or(0),
+            100.0 * o.fired as f64 / o.checks.max(1) as f64,
+            if o.skipped { "  (cached)" } else { "" },
+        );
+    }
+    println!(
+        "\nsweep complete: {} executed, {} skipped, {} total ({} ms; cache: {})",
+        report.executed,
+        report.skipped,
+        report.outcomes.len(),
+        report.wall_ms,
+        report.cache_summary
+    );
+    if let Some(out) = &opts.out {
+        println!(
+            "results: {} + series/<id>.jsonl",
+            out.join("results.jsonl").display()
+        );
     }
 }
 
@@ -154,6 +221,7 @@ fn cmd_ablate(args: &Args) {
         d: args.usize("dim", 64),
         steps: args.u64("steps", 4000),
         seed: args.u64("seed", 11),
+        workers: args.usize("workers", 0),
     };
     let which = args.get_or("knob", "all");
     if which == "h" || which == "all" {
@@ -185,16 +253,17 @@ fn cmd_robustness(args: &Args) {
     use sparq::experiments::robustness;
     let steps = args.u64("steps", 2000);
     let seed = args.u64("seed", 42);
+    let workers = args.usize("workers", 0);
     let drops: Vec<f64> = args
         .get_or("drops", "0.0,0.1,0.3")
         .split(',')
         .map(|p| p.parse().unwrap_or_else(|_| panic!("--drops expects numbers, got {p:?}")))
         .collect();
     println!("-- lossy links: SPARQ vs CHOCO vs vanilla, drop p ∈ {drops:?} --");
-    let (points, mut series) = robustness::drop_sweep(steps, seed, &drops);
+    let (points, mut series) = robustness::drop_sweep(steps, seed, &drops, workers);
     println!("{}", robustness::table(&points));
     println!("-- time-varying topology: static ring / static torus / switch --");
-    let (points, switch_series) = robustness::switch_sweep(steps, seed);
+    let (points, switch_series) = robustness::switch_sweep(steps, seed, workers);
     println!("{}", robustness::table(&points));
     series.extend(switch_series);
     write_series(&series, args.get("out"));

@@ -52,15 +52,62 @@ impl RoundRecord {
     }
 
     pub fn to_json(&self) -> Json {
+        // JSON has no NaN/Inf; encode non-finite metrics as strings so
+        // the round-trip is lossless (a diverging run's loss = inf must
+        // not come back as NaN after a sweep resume).
+        let float = |x: f64| -> Json {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Str(format!("{x}"))
+            }
+        };
         Json::obj()
             .set("t", self.t)
-            .set("loss", self.loss)
-            .set("test_error", self.test_error)
-            .set("opt_gap", self.opt_gap)
+            .set("loss", float(self.loss))
+            .set("test_error", float(self.test_error))
+            .set("opt_gap", float(self.opt_gap))
             .set("bits", self.bits)
             .set("comm_rounds", self.comm_rounds)
-            .set("consensus", self.consensus)
+            .set("consensus", float(self.consensus))
             .set("fired", self.fired)
+    }
+
+    /// Inverse of [`to_json`](Self::to_json) — exact for every
+    /// representable record: finite f64 values are printed in shortest
+    /// round-trip form, non-finite values round-trip through their string
+    /// encodings ("NaN"/"inf"/"-inf"; legacy `null` also maps to NaN),
+    /// and the u64 counters stay below 2⁵³ in any realizable run.
+    pub fn from_json(j: &Json) -> Result<RoundRecord, String> {
+        let f = |k: &str| -> Result<f64, String> {
+            match j.get(k) {
+                None => Err(format!("record is missing key {k:?}")),
+                Some(Json::Null) => Ok(f64::NAN),
+                Some(Json::Str(s)) => s
+                    .parse::<f64>()
+                    .map_err(|_| format!("record key {k:?} has non-numeric string {s:?}")),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("record key {k:?} is not a number")),
+            }
+        };
+        let u = |k: &str| -> Result<u64, String> {
+            let x = f(k)?;
+            if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+                return Err(format!("record key {k:?} is not a non-negative integer"));
+            }
+            Ok(x as u64)
+        };
+        Ok(RoundRecord {
+            t: u("t")?,
+            loss: f("loss")?,
+            test_error: f("test_error")?,
+            opt_gap: f("opt_gap")?,
+            bits: u("bits")?,
+            comm_rounds: u("comm_rounds")?,
+            consensus: f("consensus")?,
+            fired: u("fired")? as usize,
+        })
     }
 }
 
@@ -116,6 +163,33 @@ impl Series {
         }
         Ok(())
     }
+
+    /// Load a series previously written with
+    /// [`write_jsonl`](Self::write_jsonl) (sweep resume reads completed
+    /// runs back instead of re-running them).
+    pub fn read_jsonl(path: &Path, label: impl Into<String>) -> std::io::Result<Series> {
+        let text = std::fs::read_to_string(path)?;
+        let mut series = Series::new(label);
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}:{}: {e}", path.display(), lineno + 1),
+                )
+            })?;
+            let r = RoundRecord::from_json(&j).map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}:{}: {e}", path.display(), lineno + 1),
+                )
+            })?;
+            series.push(r);
+        }
+        Ok(series)
+    }
 }
 
 #[cfg(test)]
@@ -161,5 +235,67 @@ mod tests {
         let j = r.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("bits").unwrap().as_usize(), Some(77));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact_including_nan_and_inf() {
+        let mut s = Series::new("rt");
+        s.push(rec(0, 0.912345678901234, 10));
+        s.push(RoundRecord {
+            t: 7,
+            loss: 1.0 / 3.0,
+            test_error: f64::NAN, // → "NaN" → NaN
+            opt_gap: f64::NAN,
+            bits: 123_456_789,
+            comm_rounds: 42,
+            consensus: 2.5e-17,
+            fired: 3,
+        });
+        s.push(RoundRecord {
+            t: 9,
+            loss: f64::INFINITY, // diverging run — must NOT load back as NaN
+            test_error: f64::NAN,
+            opt_gap: f64::NEG_INFINITY,
+            bits: 1,
+            comm_rounds: 1,
+            consensus: 0.0,
+            fired: 0,
+        });
+        let path =
+            std::env::temp_dir().join(format!("sparq-series-{}.jsonl", std::process::id()));
+        s.write_jsonl(&path).unwrap();
+        let back = Series::read_jsonl(&path, "rt").unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.records.len(), 3);
+        // every float is bit-equal (NaN payloads normalize to the one NaN
+        // Display emits, which to_bits-compares equal to f64::NAN)
+        for (a, b) in s.records.iter().zip(back.records.iter()) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.test_error.to_bits(), b.test_error.to_bits());
+            assert_eq!(a.opt_gap.to_bits(), b.opt_gap.to_bits());
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.comm_rounds, b.comm_rounds);
+            assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+            assert_eq!(a.fired, b.fired);
+        }
+        assert!(back.records[2].loss.is_infinite() && back.records[2].loss > 0.0);
+        assert!(back.records[2].opt_gap.is_infinite() && back.records[2].opt_gap < 0.0);
+        // legacy null still maps to NaN
+        let legacy = r#"{"t":1,"loss":null,"test_error":null,"opt_gap":null,"bits":0,"comm_rounds":0,"consensus":0,"fired":0}"#;
+        let j = crate::util::json::Json::parse(legacy).unwrap();
+        assert!(RoundRecord::from_json(&j).unwrap().loss.is_nan());
+    }
+
+    #[test]
+    fn read_jsonl_rejects_malformed_lines() {
+        let path =
+            std::env::temp_dir().join(format!("sparq-series-bad-{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"t\": 1}\n").unwrap();
+        let err = Series::read_jsonl(&path, "x").unwrap_err();
+        assert!(err.to_string().contains("missing key"), "{err}");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(Series::read_jsonl(&path, "x").is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -15,6 +15,52 @@ pub enum SyncSchedule {
 }
 
 impl SyncSchedule {
+    /// Parse a sync spec: `every:H` (H ≥ 1) or `explicit:3,5,10` (a
+    /// strictly increasing list of positive indices). Errors name the
+    /// offending field so config typos surface instead of silently
+    /// degrading to a default cadence.
+    pub fn parse(s: &str) -> Result<SyncSchedule, String> {
+        match s.split_once(':') {
+            Some(("every", h)) => {
+                let h: u64 = h
+                    .parse()
+                    .map_err(|_| format!("sync period {h:?} is not an integer"))?;
+                if h == 0 {
+                    return Err("sync period H must be >= 1 (H = 1 syncs every round)".into());
+                }
+                Ok(SyncSchedule::EveryH(h))
+            }
+            Some(("explicit", list)) => {
+                let mut v = Vec::new();
+                for part in list.split(',') {
+                    let i: u64 = part
+                        .parse()
+                        .map_err(|_| format!("sync index {part:?} is not an integer"))?;
+                    if i == 0 {
+                        return Err(
+                            "sync indices are 1-based ((t+1) ∈ I_T); 0 is not an index".into()
+                        );
+                    }
+                    if let Some(&last) = v.last() {
+                        if i <= last {
+                            return Err(format!(
+                                "sync indices must be strictly increasing, got {i} after {last}"
+                            ));
+                        }
+                    }
+                    v.push(i);
+                }
+                if v.is_empty() {
+                    return Err("explicit sync schedule needs at least one index".into());
+                }
+                Ok(SyncSchedule::Explicit(v))
+            }
+            _ => Err(format!(
+                "unknown sync spec {s:?}; expected every:H or explicit:I1,I2,..."
+            )),
+        }
+    }
+
     /// Does iteration t synchronize? Matches Algorithm 1's "(t+1) ∈ I_T"
     /// convention: pass t and it tests membership of t+1.
     pub fn is_sync(&self, t: u64) -> bool {
@@ -76,8 +122,59 @@ mod tests {
 
     #[test]
     fn h1_syncs_every_step() {
+        // H = 1 degenerates to every-round synchronization: every t is a
+        // sync index, the gap is exactly 1, and every iteration is its own
+        // last-sync point.
         let s = SyncSchedule::EveryH(1);
         assert!((0..20).all(|t| s.is_sync(t)));
+        assert_eq!(s.gap(1000), 1);
+        for t in 0..20 {
+            assert_eq!(s.last_sync_before(t), t);
+        }
+    }
+
+    #[test]
+    fn parse_specs_and_errors() {
+        assert_eq!(SyncSchedule::parse("every:5"), Ok(SyncSchedule::EveryH(5)));
+        assert_eq!(SyncSchedule::parse("every:1"), Ok(SyncSchedule::EveryH(1)));
+        assert_eq!(
+            SyncSchedule::parse("explicit:3,5,10"),
+            Ok(SyncSchedule::Explicit(vec![3, 5, 10]))
+        );
+        let err = SyncSchedule::parse("every:0").unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = SyncSchedule::parse("every:soon").unwrap_err();
+        assert!(err.contains("soon"), "{err}");
+        let err = SyncSchedule::parse("explicit:5,3").unwrap_err();
+        assert!(err.contains("strictly increasing"), "{err}");
+        let err = SyncSchedule::parse("explicit:3,3").unwrap_err();
+        assert!(err.contains("strictly increasing"), "{err}");
+        let err = SyncSchedule::parse("explicit:0,3").unwrap_err();
+        assert!(err.contains("1-based"), "{err}");
+        let err = SyncSchedule::parse("sometimes").unwrap_err();
+        assert!(err.contains("expected"), "{err}");
+        // parse round-trips through the membership predicate
+        let s = SyncSchedule::parse("explicit:2,4,9").unwrap();
+        assert!(s.is_sync(1) && s.is_sync(3) && s.is_sync(8));
+        assert!(!s.is_sync(2) && !s.is_sync(4));
+    }
+
+    #[test]
+    fn every_h_boundary_iterations() {
+        // The boundary convention is (t+1) % H == 0: the *last* iteration
+        // of each block syncs, never the first.
+        for h in [2u64, 3, 7, 10] {
+            let s = SyncSchedule::EveryH(h);
+            assert!(!s.is_sync(0), "H={h}");
+            assert!(s.is_sync(h - 1), "H={h}");
+            assert!(!s.is_sync(h), "H={h}");
+            assert!(s.is_sync(2 * h - 1), "H={h}");
+            // exactly one sync index in every window of H iterations
+            for start in 0..3 * h {
+                let count = (start..start + h).filter(|&t| s.is_sync(t)).count();
+                assert_eq!(count, 1, "H={h} window at {start}");
+            }
+        }
     }
 
     #[test]

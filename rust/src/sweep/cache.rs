@@ -1,0 +1,212 @@
+//! Cross-run artifact sharing for sweeps.
+//!
+//! A sweep's runs are mostly identical: thirty runs over seeds and
+//! trigger thresholds all build the same ring, eigen-solve the same
+//! mixing matrix for the tuned consensus step size γ, and synthesize the
+//! same dataset shards. [`ArtifactCache`] memoizes those constructions
+//! behind mutexes so concurrent runs share them:
+//!
+//! * **mixing matrices** keyed by (topology-schedule spec | topology,
+//!   nodes, seed) — the schedule's initial matrix for non-static specs;
+//! * **spectral info** (the eigen solve behind `gamma_tuned`) keyed the
+//!   same way — one O(n³) solve per distinct graph instead of per run;
+//! * **dataset shards** keyed by (problem spec, nodes, seed) — the
+//!   generated `Partition` + test set for logreg/mlp, the whole problem
+//!   for quadratics.
+//!
+//! Caching is *transparent*: every cached value is exactly what the
+//! uncached construction path produces for the same key (generation is
+//! seeded and deterministic), so cached and uncached runs are bit-for-bit
+//! identical — `experiments::builder` tests pin this. Hit/miss counters
+//! are exposed for those tests and the CLI summary.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, Partition};
+use crate::graph::{MixingMatrix, SpectralInfo};
+use crate::problems::QuadraticProblem;
+
+/// Key for topology-derived artifacts: (schedule-or-topology spec,
+/// nodes, seed). The schedule spec dominates when non-static, because it
+/// names its own graphs.
+type TopoKey = (String, usize, u64);
+/// Key for dataset artifacts: (problem spec, nodes, seed).
+type DataKey = (String, usize, u64);
+
+/// Cached synthetic data for one (problem, nodes, seed) key.
+#[derive(Clone)]
+pub enum CachedData {
+    /// Quadratic problems are cheap plain data — cache the problem whole.
+    Quadratic(QuadraticProblem),
+    /// Classification problems: the generated shards + shared test set
+    /// (the per-run problem object wraps clones of these).
+    Shards { part: Partition, test: Dataset },
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Counters {
+    fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+    fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+    fn read(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Shared, thread-safe construction cache (see module docs).
+#[derive(Default)]
+pub struct ArtifactCache {
+    mixing: Mutex<HashMap<TopoKey, MixingMatrix>>,
+    spectral: Mutex<HashMap<TopoKey, SpectralInfo>>,
+    data: Mutex<HashMap<DataKey, CachedData>>,
+    mixing_stats: Counters,
+    spectral_stats: Counters,
+    data_stats: Counters,
+}
+
+impl ArtifactCache {
+    pub fn new() -> ArtifactCache {
+        ArtifactCache::default()
+    }
+
+    /// The topology key for a config (schedule spec dominates when it
+    /// names its own graphs).
+    pub fn topo_key(cfg: &ExperimentConfig) -> TopoKey {
+        let spec = if cfg.topology_schedule.is_empty() || cfg.topology_schedule == "static" {
+            format!("static:{}", cfg.topology)
+        } else {
+            cfg.topology_schedule.clone()
+        };
+        (spec, cfg.nodes, cfg.seed)
+    }
+
+    /// Memoized mixing-matrix construction.
+    pub fn mixing_or_else(
+        &self,
+        key: TopoKey,
+        build: impl FnOnce() -> MixingMatrix,
+    ) -> MixingMatrix {
+        let mut map = self.mixing.lock().unwrap();
+        if let Some(m) = map.get(&key) {
+            self.mixing_stats.hit();
+            return m.clone();
+        }
+        self.mixing_stats.miss();
+        let m = build();
+        map.insert(key, m.clone());
+        m
+    }
+
+    /// Memoized eigen solve of a mixing matrix. The caller passes the
+    /// matrix it already holds for the same key, so a miss never
+    /// re-derives the graph.
+    pub fn spectral_or_compute(&self, key: TopoKey, mixing: &MixingMatrix) -> SpectralInfo {
+        let mut map = self.spectral.lock().unwrap();
+        if let Some(s) = map.get(&key) {
+            self.spectral_stats.hit();
+            return *s;
+        }
+        self.spectral_stats.miss();
+        let s = SpectralInfo::compute(mixing);
+        map.insert(key, s);
+        s
+    }
+
+    /// Memoized dataset synthesis.
+    pub fn data_or_else(
+        &self,
+        key: DataKey,
+        build: impl FnOnce() -> CachedData,
+    ) -> CachedData {
+        let mut map = self.data.lock().unwrap();
+        if let Some(d) = map.get(&key) {
+            self.data_stats.hit();
+            return d.clone();
+        }
+        self.data_stats.miss();
+        let d = build();
+        map.insert(key, d.clone());
+        d
+    }
+
+    /// (hits, misses) per cache, for tests and the CLI summary.
+    pub fn mixing_stats(&self) -> (u64, u64) {
+        self.mixing_stats.read()
+    }
+    pub fn spectral_stats(&self) -> (u64, u64) {
+        self.spectral_stats.read()
+    }
+    pub fn data_stats(&self) -> (u64, u64) {
+        self.data_stats.read()
+    }
+
+    /// One-line summary for logs: "mixing 4/1, spectral 4/1, data 3/2"
+    /// (hits/misses).
+    pub fn summary(&self) -> String {
+        let (mh, mm) = self.mixing_stats();
+        let (sh, sm) = self.spectral_stats();
+        let (dh, dm) = self.data_stats();
+        format!("mixing {mh}/{mm}, spectral {sh}/{sm}, data {dh}/{dm} (hits/misses)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{uniform_neighbor, Topology, TopologyKind};
+
+    #[test]
+    fn mixing_and_spectral_memoize_per_key() {
+        let cache = ArtifactCache::new();
+        let build = || uniform_neighbor(&Topology::new(TopologyKind::Ring, 8, 0));
+        let key = ("static:ring".to_string(), 8usize, 0u64);
+        let a = cache.mixing_or_else(key.clone(), build);
+        let b = cache.mixing_or_else(key.clone(), || panic!("must hit the cache"));
+        assert_eq!(a.topology.neighbors, b.topology.neighbors);
+        assert_eq!(cache.mixing_stats(), (1, 1));
+
+        let sa = cache.spectral_or_compute(key.clone(), &a);
+        let sb = cache.spectral_or_compute(key, &a);
+        assert_eq!(sa.delta, sb.delta);
+        assert_eq!(cache.spectral_stats(), (1, 1));
+
+        // a different key is a fresh miss
+        let key2 = ("static:complete".to_string(), 8usize, 0u64);
+        cache.mixing_or_else(key2, || {
+            uniform_neighbor(&Topology::new(TopologyKind::Complete, 8, 0))
+        });
+        assert_eq!(cache.mixing_stats(), (1, 2));
+    }
+
+    #[test]
+    fn topo_key_prefers_schedule_spec() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(
+            ArtifactCache::topo_key(&cfg),
+            ("static:ring".to_string(), 8, 42)
+        );
+        let cfg = ExperimentConfig {
+            topology_schedule: "switch:ring,torus:100".into(),
+            nodes: 16,
+            ..Default::default()
+        };
+        assert_eq!(
+            ArtifactCache::topo_key(&cfg),
+            ("switch:ring,torus:100".to_string(), 16, 42)
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Declarative sweep engine with concurrent run scheduling.
+//!
+//! The paper's evaluation is inherently a *sweep*: Figure 1 and the
+//! Remark-4 savings comparison vary trigger thresholds, H, compression
+//! operators, and topologies across many otherwise-identical runs, and
+//! related work widens the grids further (Qsparse-local-SGD sweeps
+//! synchronization schedules, EventGraD sweeps event thresholds). This
+//! module replaces the experiment drivers' hand-rolled serial loops with
+//! one engine:
+//!
+//! * [`SweepSpec`] — a declarative grid: a base [`ExperimentConfig`]
+//!   (`config::ExperimentConfig`), a list of *variants* (named partial
+//!   overrides — the "five curves of Fig 1"), and *axes* (field →
+//!   value-list cross products — seeds, H, thresholds). JSON on disk or
+//!   the builder API in code; expansion validates every field through
+//!   `ExperimentConfig::from_json`, so a typo'd axis name is an error,
+//!   not a silently ignored knob.
+//! * [`ArtifactCache`] — cross-run sharing of cacheable construction
+//!   artifacts: topology/mixing matrices, the eigen solve behind the
+//!   tuned consensus step size γ (one solve per distinct graph instead
+//!   of one per run), and synthetic dataset shards keyed by
+//!   (problem, nodes, seed).
+//! * [`run_configs`] / [`run_spec`] — concurrent execution on
+//!   `util::ThreadPool` with a **total worker budget**: run-level
+//!   parallelism layered over the engine's per-node parallelism
+//!   (budget W over R pending runs ⇒ min(W, R) concurrent runs, each
+//!   stepping with ⌊W / min(W, R)⌋ node workers). Results are
+//!   **bit-for-bit identical for any budget** — each run owns its RNG
+//!   streams, and node-worker counts don't affect results
+//!   (`rust/tests/sparse_parallel.rs`); `rust/tests/sweep_system.rs`
+//!   pins the sweep-level guarantee at workers = 1 vs 8.
+//! * **Streaming results + resume.** With an output directory, each
+//!   completed run appends one JSONL record to `results.jsonl` and
+//!   writes its full `metrics::Series` to `series/<id>.jsonl`, where
+//!   `<id>` is [`config_hash`] of the expanded config (name- and
+//!   worker-normalized). `--resume` skips any run whose record already
+//!   exists, loading its stored series instead; long runs additionally
+//!   snapshot mid-run via `coordinator::checkpoint` (`checkpoint_every`)
+//!   and resume from the snapshot **bit-for-bit**.
+//!
+//! The five experiment drivers (`experiments::{fig1, savings, rates,
+//! ablation, robustness}`) are now thin declarative specs over this
+//! engine. EXPERIMENTS.md §Sweep documents the spec format, resume
+//! semantics, and the wall-clock measurement protocol.
+
+pub mod cache;
+pub mod runner;
+pub mod spec;
+
+pub use cache::ArtifactCache;
+pub use runner::{run_configs, run_spec, RunOutcome, SweepOptions, SweepReport};
+pub use spec::{config_hash, SweepSpec};

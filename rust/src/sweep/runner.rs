@@ -1,0 +1,565 @@
+//! Concurrent sweep execution: run-level parallelism over the engine's
+//! per-node parallelism, JSONL result streaming, and resume.
+//!
+//! Execution contract (pinned by `rust/tests/sweep_system.rs`):
+//!
+//! * **Determinism.** Per-run results are bit-for-bit identical for any
+//!   worker budget: each run owns its RNG streams and per-run node
+//!   workers don't affect results, so scheduling order is immaterial.
+//! * **Runner equivalence.** [`execute_one`] replicates
+//!   `coordinator::runner::run`'s evaluation loop exactly (same record
+//!   cadence, same field order), so a sweep run of a config equals
+//!   `experiments::run_config` of the same config.
+//! * **Resume.** A completed run is one JSONL record in
+//!   `<out>/results.jsonl` plus `<out>/series/<id>.jsonl`; with
+//!   `resume`, such runs are skipped and their stored series returned.
+//!   Incomplete long runs resume from their latest
+//!   `coordinator::checkpoint` snapshot (`<out>/ckpt/<id>.ckpt` + the
+//!   partial series) bit-for-bit.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::comm::Bus;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{checkpoint, Checkpoint, DecentralizedAlgo};
+use crate::experiments::builder::{build_algo_with, build_problem_with};
+use crate::metrics::{RoundRecord, Series};
+use crate::problems::GradientSource;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+use super::cache::ArtifactCache;
+use super::spec::{config_hash, SweepSpec};
+
+/// Options for one sweep invocation.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Total worker budget shared by run-level and node-level
+    /// parallelism (0 ⇒ available CPUs): min(budget, pending runs)
+    /// concurrent runs, each stepping with ⌊budget / that⌋ node workers.
+    /// Does not affect results. Configs' own `workers` fields are
+    /// ignored inside sweeps — the budget governs.
+    pub workers: usize,
+    /// Output directory (`results.jsonl`, `series/`, `ckpt/`); `None`
+    /// keeps everything in memory.
+    pub out: Option<PathBuf>,
+    /// Skip runs whose result record already exists; pick up incomplete
+    /// runs from their mid-run checkpoints.
+    pub resume: bool,
+    /// Snapshot long runs every this many iterations (0 ⇒ never).
+    /// Requires `out`.
+    pub checkpoint_every: u64,
+    /// Print per-run progress lines.
+    pub verbose: bool,
+    /// Fault-injection hook for the resume tests: abandon each run
+    /// (without recording a result) once it reaches this iteration.
+    pub fault_abort_at: Option<u64>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            workers: 1,
+            out: None,
+            resume: false,
+            checkpoint_every: 0,
+            verbose: false,
+            fault_abort_at: None,
+        }
+    }
+}
+
+/// One run's result.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// [`config_hash`] of the expanded config (keys resume).
+    pub id: String,
+    /// Display label (the suite curve name).
+    pub label: String,
+    pub cfg: ExperimentConfig,
+    pub series: Series,
+    /// Cumulative (transmitted, opportunities) trigger statistics.
+    pub fired: u64,
+    pub checks: u64,
+    pub wall_ms: u64,
+    /// True when the run was satisfied from a stored result (resume).
+    pub skipped: bool,
+    /// False only for fault-aborted runs (no result recorded).
+    pub completed: bool,
+}
+
+/// Aggregate result of a sweep invocation (outcomes in input order).
+#[derive(Debug)]
+pub struct SweepReport {
+    pub outcomes: Vec<RunOutcome>,
+    pub executed: usize,
+    pub skipped: usize,
+    pub wall_ms: u64,
+    /// Artifact-cache hit/miss summary for logs.
+    pub cache_summary: String,
+}
+
+impl SweepReport {
+    /// The outcome for a given expanded-config id, if present.
+    pub fn by_id(&self, id: &str) -> Option<&RunOutcome> {
+        self.outcomes.iter().find(|o| o.id == id)
+    }
+}
+
+/// Expand a spec and run it (fresh artifact cache).
+pub fn run_spec(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepReport, String> {
+    let runs = spec.expand()?;
+    let cache = ArtifactCache::new();
+    run_configs(runs, opts, &cache)
+}
+
+struct Slot {
+    label: String,
+    cfg: ExperimentConfig,
+    id: String,
+    outcome: Option<RunOutcome>,
+}
+
+/// Run an explicit labelled config list on the sweep engine (the
+/// refactored experiment drivers call this; [`run_spec`] layers grid
+/// expansion on top).
+pub fn run_configs(
+    runs: Vec<(String, ExperimentConfig)>,
+    opts: &SweepOptions,
+    cache: &ArtifactCache,
+) -> Result<SweepReport, String> {
+    let sweep_start = Instant::now();
+    let budget = if opts.workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        opts.workers
+    };
+
+    // Output layout + previously completed records.
+    let mut series_dir = None;
+    let mut ckpt_dir = None;
+    let mut completed: HashMap<String, Json> = HashMap::new();
+    let mut sink: Option<Mutex<BufWriter<File>>> = None;
+    if let Some(out) = &opts.out {
+        let sdir = out.join("series");
+        let cdir = out.join("ckpt");
+        fs::create_dir_all(&sdir).map_err(|e| format!("{}: {e}", sdir.display()))?;
+        fs::create_dir_all(&cdir).map_err(|e| format!("{}: {e}", cdir.display()))?;
+        let results_path = out.join("results.jsonl");
+        if opts.resume && results_path.exists() {
+            let text = fs::read_to_string(&results_path)
+                .map_err(|e| format!("{}: {e}", results_path.display()))?;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let j = Json::parse(line)
+                    .map_err(|e| format!("{}: {e}", results_path.display()))?;
+                if let Some(id) = j.get("id").and_then(Json::as_str) {
+                    completed.insert(id.to_string(), j.clone());
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(opts.resume)
+            .write(true)
+            .truncate(!opts.resume)
+            .open(&results_path)
+            .map_err(|e| format!("{}: {e}", results_path.display()))?;
+        sink = Some(Mutex::new(BufWriter::new(file)));
+        series_dir = Some(sdir);
+        ckpt_dir = Some(cdir);
+    }
+
+    let mut slots: Vec<Slot> = runs
+        .into_iter()
+        .map(|(label, cfg)| {
+            let id = config_hash(&cfg);
+            Slot {
+                label,
+                cfg,
+                id,
+                outcome: None,
+            }
+        })
+        .collect();
+
+    // Two runs with the same id are the same semantic config (the hash
+    // normalizes only name/workers) — they would produce identical
+    // results while racing on the same series file, so reject the set.
+    {
+        let mut seen: HashMap<&str, &str> = HashMap::new();
+        for s in &slots {
+            if let Some(prev) = seen.insert(&s.id, &s.label) {
+                return Err(format!(
+                    "runs {prev:?} and {:?} are the same config (id {}) — \
+                     deduplicate the grid",
+                    s.label, s.id
+                ));
+            }
+        }
+    }
+
+    let pending = slots
+        .iter()
+        .filter(|s| !completed.contains_key(&s.id))
+        .count();
+    let run_workers = budget.min(pending.max(1)).max(1);
+    let node_workers = (budget / run_workers).max(1);
+
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let completed = &completed;
+    let series_dir = series_dir.as_deref();
+    let ckpt_dir = ckpt_dir.as_deref();
+    let sink_ref = sink.as_ref();
+    ThreadPool::new(run_workers).for_each_mut(&mut slots, |_, slot| {
+        // Resume: a stored record + series satisfies the run outright.
+        if let Some(record) = completed.get(&slot.id) {
+            match load_completed(slot, record, series_dir) {
+                Ok(outcome) => {
+                    if opts.verbose {
+                        println!("[sweep] skip {} (resume: already complete)", slot.label);
+                    }
+                    slot.outcome = Some(outcome);
+                    return;
+                }
+                Err(e) => {
+                    // Record without a readable series — re-run it.
+                    if opts.verbose {
+                        println!("[sweep] re-run {}: {e}", slot.label);
+                    }
+                }
+            }
+        }
+        match execute_one(slot, cache, node_workers, opts, ckpt_dir) {
+            Ok(outcome) => {
+                if outcome.completed {
+                    if let Err(e) = persist(&outcome, series_dir, sink_ref) {
+                        errors.lock().unwrap().push(e);
+                        return;
+                    }
+                }
+                if opts.verbose {
+                    let state = if outcome.completed { "done" } else { "paused" };
+                    let last = outcome.series.records.last();
+                    println!(
+                        "[sweep] {state} {} ({} ms, loss={:.5}, bits={})",
+                        slot.label,
+                        outcome.wall_ms,
+                        last.map(|r| r.loss).unwrap_or(f64::NAN),
+                        last.map(|r| r.bits).unwrap_or(0),
+                    );
+                }
+                slot.outcome = Some(outcome);
+            }
+            Err(e) => errors.lock().unwrap().push(format!("{}: {e}", slot.label)),
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    if let Some(s) = &sink {
+        s.lock().unwrap().flush().map_err(|e| e.to_string())?;
+    }
+
+    let outcomes: Vec<RunOutcome> = slots
+        .into_iter()
+        .map(|s| s.outcome.expect("no outcome and no error"))
+        .collect();
+    let executed = outcomes.iter().filter(|o| !o.skipped && o.completed).count();
+    let skipped = outcomes.iter().filter(|o| o.skipped).count();
+    Ok(SweepReport {
+        outcomes,
+        executed,
+        skipped,
+        wall_ms: sweep_start.elapsed().as_millis() as u64,
+        cache_summary: cache.summary(),
+    })
+}
+
+/// Rebuild a [`RunOutcome`] from its stored record + series.
+fn load_completed(
+    slot: &Slot,
+    record: &Json,
+    series_dir: Option<&Path>,
+) -> Result<RunOutcome, String> {
+    let dir = series_dir.ok_or("no series directory")?;
+    let path = dir.join(format!("{}.jsonl", slot.id));
+    let series_label = record
+        .get("series_label")
+        .and_then(Json::as_str)
+        .unwrap_or(&slot.label)
+        .to_string();
+    let series = Series::read_jsonl(&path, series_label)
+        .map_err(|e| format!("stored series unreadable: {e}"))?;
+    let u = |k: &str| record.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    Ok(RunOutcome {
+        id: slot.id.clone(),
+        label: slot.label.clone(),
+        cfg: slot.cfg.clone(),
+        series,
+        fired: u("fired"),
+        checks: u("checks"),
+        wall_ms: u("wall_ms"),
+        skipped: true,
+        completed: true,
+    })
+}
+
+/// Stream a completed run to disk: series file first, then the record
+/// line (so a record's existence implies a readable series).
+fn persist(
+    outcome: &RunOutcome,
+    series_dir: Option<&Path>,
+    sink: Option<&Mutex<BufWriter<File>>>,
+) -> Result<(), String> {
+    let (Some(dir), Some(sink)) = (series_dir, sink) else {
+        return Ok(());
+    };
+    let spath = dir.join(format!("{}.jsonl", outcome.id));
+    outcome
+        .series
+        .write_jsonl(&spath)
+        .map_err(|e| format!("{}: {e}", spath.display()))?;
+    let final_record = outcome
+        .series
+        .records
+        .last()
+        .map(|r| r.to_json())
+        .unwrap_or_else(Json::obj);
+    let record = Json::obj()
+        .set("id", outcome.id.as_str())
+        .set("name", outcome.cfg.name.as_str())
+        .set("label", outcome.label.as_str())
+        .set("series_label", outcome.series.label.as_str())
+        .set("algo", outcome.cfg.algo.as_str())
+        .set("fired", outcome.fired)
+        .set("checks", outcome.checks)
+        .set("wall_ms", outcome.wall_ms)
+        .set("records", outcome.series.records.len())
+        .set("final", final_record)
+        .set("config", outcome.cfg.to_json());
+    let mut w = sink.lock().unwrap();
+    writeln!(w, "{}", record.to_string()).map_err(|e| e.to_string())?;
+    w.flush().map_err(|e| e.to_string())
+}
+
+/// Execute one run, replicating `coordinator::runner::run`'s evaluation
+/// loop exactly, with optional mid-run checkpointing and checkpoint
+/// resume.
+fn execute_one(
+    slot: &Slot,
+    cache: &ArtifactCache,
+    node_workers: usize,
+    opts: &SweepOptions,
+    ckpt_dir: Option<&Path>,
+) -> Result<RunOutcome, String> {
+    let cfg = &slot.cfg;
+    let run_start = Instant::now();
+    let mut problem = build_problem_with(cfg, Some(cache));
+    let d = problem.dim();
+    let mut algo = build_algo_with(cfg, d, Some(cache));
+    let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+    if let Some(x0) = problem.init_params(&mut init_rng) {
+        algo.set_params(&x0);
+    }
+    algo.set_workers(node_workers);
+    let mut bus = Bus::new(algo.n());
+    let series_label = format!("{}:{}", cfg.name, algo.name());
+    let mut series = Series::new(series_label.clone());
+    let mut start_t = 0u64;
+
+    let ckpt_path = ckpt_dir.map(|dir| dir.join(format!("{}.ckpt", slot.id)));
+    let partial_path = ckpt_dir.map(|dir| dir.join(format!("{}.partial.jsonl", slot.id)));
+    if opts.resume {
+        if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
+            if cp.exists() && pp.exists() {
+                let ck = Checkpoint::load(cp).map_err(|e| format!("checkpoint: {e}"))?;
+                checkpoint::restore(algo.as_mut(), &ck);
+                checkpoint::restore_bus(&mut bus, &ck);
+                series = Series::read_jsonl(pp, series_label.clone())
+                    .map_err(|e| format!("partial series: {e}"))?;
+                start_t = ck.t;
+                if opts.verbose {
+                    println!("[sweep] resume {} from t={start_t}", slot.label);
+                }
+            }
+        }
+    }
+
+    let evaluate = |algo: &dyn DecentralizedAlgo,
+                    src: &mut dyn GradientSource,
+                    bus: &Bus,
+                    t: u64,
+                    series: &mut Series| {
+        let xbar = algo.x_bar();
+        let loss = src.global_loss(&xbar);
+        series.push(RoundRecord {
+            t,
+            loss,
+            test_error: src.test_error(&xbar).unwrap_or(f64::NAN),
+            opt_gap: src.opt_gap(&xbar).unwrap_or(f64::NAN),
+            bits: bus.total_bits,
+            comm_rounds: bus.comm_rounds,
+            consensus: algo.consensus_distance(),
+            fired: algo.last_fired(),
+        });
+    };
+
+    if start_t == 0 {
+        evaluate(algo.as_ref(), problem.as_mut(), &bus, 0, &mut series);
+    }
+    for t in start_t..cfg.steps {
+        algo.step(t, problem.as_mut(), &mut bus);
+        let done = t + 1 == cfg.steps;
+        if (t + 1) % cfg.eval_every.max(1) == 0 || done {
+            evaluate(algo.as_ref(), problem.as_mut(), &bus, t + 1, &mut series);
+        }
+        if !done && opts.checkpoint_every > 0 && (t + 1) % opts.checkpoint_every == 0 {
+            if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
+                let ck = checkpoint::snapshot(algo.as_ref(), t + 1, &bus);
+                ck.save(cp).map_err(|e| format!("{}: {e}", cp.display()))?;
+                series
+                    .write_jsonl(pp)
+                    .map_err(|e| format!("{}: {e}", pp.display()))?;
+            }
+        }
+        if opts.fault_abort_at == Some(t + 1) && !done {
+            let (fired, checks) = algo.fired_stats();
+            return Ok(RunOutcome {
+                id: slot.id.clone(),
+                label: slot.label.clone(),
+                cfg: cfg.clone(),
+                series,
+                fired,
+                checks,
+                wall_ms: run_start.elapsed().as_millis() as u64,
+                skipped: false,
+                completed: false,
+            });
+        }
+    }
+
+    // Complete: mid-run snapshots are superseded by the result record.
+    if let Some(cp) = &ckpt_path {
+        fs::remove_file(cp).ok();
+    }
+    if let Some(pp) = &partial_path {
+        fs::remove_file(pp).ok();
+    }
+    let (fired, checks) = algo.fired_stats();
+    Ok(RunOutcome {
+        id: slot.id.clone(),
+        label: slot.label.clone(),
+        cfg: cfg.clone(),
+        series,
+        fired,
+        checks,
+        wall_ms: run_start.elapsed().as_millis() as u64,
+        skipped: false,
+        completed: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::run_config;
+
+    fn quick_cfg(seed: u64) -> ExperimentConfig {
+        ExperimentConfig {
+            name: format!("quick-{seed}"),
+            nodes: 5,
+            steps: 120,
+            eval_every: 40,
+            problem: "quadratic:16".into(),
+            compressor: "sign_topk:25%".into(),
+            trigger: "const:20".into(),
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_run_equals_run_config() {
+        let cfg = quick_cfg(3);
+        let expect = run_config(&cfg, false);
+        let cache = ArtifactCache::new();
+        let report = run_configs(
+            vec![("quick".into(), cfg)],
+            &SweepOptions::default(),
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.executed, 1);
+        let got = &report.outcomes[0].series;
+        assert_eq!(got.to_csv(), expect.to_csv());
+    }
+
+    #[test]
+    fn budget_splits_into_run_and_node_workers() {
+        // Pure scheduling property: any budget produces the same series.
+        let mk = || vec![
+            ("a".to_string(), quick_cfg(1)),
+            ("b".to_string(), quick_cfg(2)),
+        ];
+        let cache = ArtifactCache::new();
+        let serial = run_configs(mk(), &SweepOptions::default(), &cache).unwrap();
+        let wide = run_configs(
+            mk(),
+            &SweepOptions {
+                workers: 8,
+                ..Default::default()
+            },
+            &cache,
+        )
+        .unwrap();
+        for (a, b) in serial.outcomes.iter().zip(wide.outcomes.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.series.to_csv(), b.series.to_csv());
+        }
+    }
+
+    #[test]
+    fn duplicate_configs_are_rejected_not_raced() {
+        // Same semantic config under two labels hashes to one id — the
+        // runs would race on the same series file, so the set is an error.
+        let cache = ArtifactCache::new();
+        let mut renamed = quick_cfg(1);
+        renamed.name = "other-name".into();
+        let err = run_configs(
+            vec![("a".into(), quick_cfg(1)), ("b".into(), renamed)],
+            &SweepOptions::default(),
+            &cache,
+        )
+        .unwrap_err();
+        assert!(err.contains("same config"), "{err}");
+    }
+
+    #[test]
+    fn bad_config_surfaces_as_error_not_poison() {
+        // expand() rejects bad specs, but run_configs can still receive a
+        // config whose string specs fail at build time — builders panic,
+        // which would poison the pool. Guard the easy case: zero steps is
+        // legal and produces the t=0 record only.
+        let mut cfg = quick_cfg(1);
+        cfg.steps = 0;
+        let cache = ArtifactCache::new();
+        let report = run_configs(
+            vec![("empty".into(), cfg)],
+            &SweepOptions::default(),
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(report.outcomes[0].series.records.len(), 1);
+    }
+}

@@ -1,0 +1,447 @@
+//! The declarative sweep grid: variants × axes over an `ExperimentConfig`
+//! base, plus the stable config hash that keys resume.
+//!
+//! JSON form (see `examples/specs/`):
+//!
+//! ```json
+//! {
+//!   "name": "fig1-convex",
+//!   "base": { "nodes": 60, "problem": "logreg:784:10:5", "steps": 3000 },
+//!   "variants": [
+//!     { "label": "SPARQ-SGD (SignTopK)", "algo": "sparq" },
+//!     { "label": "CHOCO-SGD (Sign)", "algo": "choco", "compressor": "sign" }
+//!   ],
+//!   "axes": { "seed": [1, 2, 3] }
+//! }
+//! ```
+//!
+//! Expansion order is deterministic: variants in listed order, then the
+//! axes cross product with keys in sorted order and the last key varying
+//! fastest. Every expanded object round-trips through
+//! `ExperimentConfig::from_json`, so unknown fields and ill-typed values
+//! are rejected with the config parser's messages.
+
+use crate::config::ExperimentConfig;
+use crate::util::json::Json;
+
+/// Variant keys that are spec metadata, not config fields.
+const VARIANT_META_KEYS: &[&str] = &["label"];
+
+/// A declarative sweep: base config + variants + axes (see module docs).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Base config fields (JSON object; may be empty — defaults apply).
+    base: Json,
+    /// Partial-override objects, one per variant ("label" names the
+    /// curve). An empty list means a single all-defaults variant.
+    variants: Vec<Json>,
+    /// (field, values) cross-product axes, sorted by field name.
+    axes: Vec<(String, Vec<Json>)>,
+}
+
+impl SweepSpec {
+    /// Empty spec (all-defaults base, one variant, no axes).
+    pub fn new(name: impl Into<String>) -> SweepSpec {
+        SweepSpec {
+            name: name.into(),
+            base: Json::obj(),
+            variants: Vec::new(),
+            axes: Vec::new(),
+        }
+    }
+
+    /// Set the base config (builder API).
+    pub fn base(mut self, cfg: &ExperimentConfig) -> Self {
+        self.base = cfg.to_json();
+        self
+    }
+
+    /// Add a cross-product axis over a config field.
+    pub fn axis(mut self, field: impl Into<String>, values: Vec<Json>) -> Self {
+        let field = field.into();
+        self.axes.retain(|(k, _)| *k != field);
+        self.axes.push((field, values));
+        self.axes.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    /// String-valued axis convenience.
+    pub fn axis_str(self, field: &str, values: &[&str]) -> Self {
+        self.axis(field, values.iter().map(|v| Json::from(*v)).collect())
+    }
+
+    /// Integer-valued axis convenience.
+    pub fn axis_u64(self, field: &str, values: &[u64]) -> Self {
+        self.axis(field, values.iter().map(|&v| Json::from(v)).collect())
+    }
+
+    /// Add a labelled variant (partial config override).
+    pub fn variant(mut self, label: &str, overrides: &[(&str, Json)]) -> Self {
+        let mut obj = Json::obj().set("label", label);
+        for (k, v) in overrides {
+            obj = obj.set(k, v.clone());
+        }
+        self.variants.push(obj);
+        self
+    }
+
+    /// Parse a spec from its JSON form.
+    pub fn from_json(j: &Json) -> Result<SweepSpec, String> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| "sweep spec must be a JSON object".to_string())?;
+        for key in obj.keys() {
+            if !["name", "base", "variants", "axes"].contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown sweep spec key {key:?}; valid keys: name, base, variants, axes"
+                ));
+            }
+        }
+        let name = match j.get("name") {
+            None => "sweep".to_string(),
+            Some(v) => v
+                .as_str()
+                .ok_or("sweep spec name must be a string")?
+                .to_string(),
+        };
+        let base = match j.get("base") {
+            None => Json::obj(),
+            Some(v) => {
+                v.as_obj().ok_or("sweep spec base must be an object")?;
+                v.clone()
+            }
+        };
+        let mut variants = Vec::new();
+        if let Some(v) = j.get("variants") {
+            let arr = v.as_arr().ok_or("sweep spec variants must be an array")?;
+            for item in arr {
+                item.as_obj()
+                    .ok_or("each sweep variant must be an object")?;
+                variants.push(item.clone());
+            }
+        }
+        let mut axes = Vec::new();
+        if let Some(a) = j.get("axes") {
+            let m = a.as_obj().ok_or("sweep spec axes must be an object")?;
+            for (k, v) in m {
+                let values = v
+                    .as_arr()
+                    .ok_or_else(|| format!("axis {k:?} must be an array of values"))?;
+                if values.is_empty() {
+                    return Err(format!("axis {k:?} has no values"));
+                }
+                axes.push((k.clone(), values.to_vec()));
+            }
+            // BTreeMap iteration is already sorted; keep the invariant
+            // explicit for the builder path too.
+            axes.sort_by(|a, b| a.0.cmp(&b.0));
+        }
+        let spec = SweepSpec {
+            name,
+            base,
+            variants,
+            axes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_file(path: &str) -> Result<SweepSpec, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// The spec's JSON form (round-trips through [`from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut axes = Json::obj();
+        for (k, v) in &self.axes {
+            axes = axes.set(k, Json::Arr(v.clone()));
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("base", self.base.clone())
+            .set("variants", Json::Arr(self.variants.clone()))
+            .set("axes", axes)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for (k, values) in &self.axes {
+            if k == "name" || k == "workers" {
+                return Err(format!(
+                    "axis {k:?} is not sweepable ({k} does not change run results)"
+                ));
+            }
+            if !ExperimentConfig::KEYS.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown axis {k:?}; valid config fields: {}",
+                    ExperimentConfig::KEYS.join(", ")
+                ));
+            }
+            if values.is_empty() {
+                return Err(format!("axis {k:?} has no values"));
+            }
+            for (i, v) in values.iter().enumerate() {
+                if values[..i].contains(v) {
+                    return Err(format!(
+                        "axis {k:?} lists the value {} twice — duplicate grid \
+                         points share a result id and would race on resume",
+                        json_value_label(v)
+                    ));
+                }
+            }
+        }
+        for variant in &self.variants {
+            for key in variant.as_obj().expect("validated object").keys() {
+                if !VARIANT_META_KEYS.contains(&key.as_str())
+                    && !ExperimentConfig::KEYS.contains(&key.as_str())
+                {
+                    return Err(format!(
+                        "unknown variant key {key:?}; valid: label, {}",
+                        ExperimentConfig::KEYS.join(", ")
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of runs the spec expands to.
+    pub fn len(&self) -> usize {
+        let per_variant: usize = self.axes.iter().map(|(_, v)| v.len()).product();
+        self.variants.len().max(1) * per_variant
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into the labelled run set (deterministic order; see module
+    /// docs). Each run's `name` is unique within the spec.
+    pub fn expand(&self) -> Result<Vec<(String, ExperimentConfig)>, String> {
+        self.validate()?;
+        let one_variant = [Json::obj()];
+        let variants: &[Json] = if self.variants.is_empty() {
+            &one_variant
+        } else {
+            &self.variants
+        };
+        let mut out = Vec::with_capacity(self.len());
+        for (vi, variant) in variants.iter().enumerate() {
+            let vmap = variant.as_obj().expect("validated object");
+            let vlabel = vmap.get("label").and_then(Json::as_str).map(str::to_string);
+            // A variant-provided "name" becomes the run-name stem (axis
+            // parts still append, keeping names unique); otherwise names
+            // derive from the spec name + variant label. The base's
+            // "name" never survives — it would collide across runs.
+            let vname = vmap.get("name").and_then(Json::as_str).map(str::to_string);
+            // odometer over the axes cross product, last axis fastest
+            let mut idx = vec![0usize; self.axes.len()];
+            loop {
+                let mut obj = self
+                    .base
+                    .as_obj()
+                    .cloned()
+                    .unwrap_or_default();
+                for (k, v) in vmap {
+                    if !VARIANT_META_KEYS.contains(&k.as_str()) {
+                        obj.insert(k.clone(), v.clone());
+                    }
+                }
+                let mut axis_parts = Vec::with_capacity(self.axes.len());
+                for (ai, (k, values)) in self.axes.iter().enumerate() {
+                    let v = &values[idx[ai]];
+                    axis_parts.push(format!("{k}={}", json_value_label(v)));
+                    obj.insert(k.clone(), v.clone());
+                }
+                let mut name_parts = match &vname {
+                    Some(n) => vec![n.clone()],
+                    None => {
+                        let mut parts = vec![self.name.clone()];
+                        match &vlabel {
+                            Some(l) => parts.push(l.clone()),
+                            None if variants.len() > 1 => parts.push(format!("v{vi}")),
+                            None => {}
+                        }
+                        parts
+                    }
+                };
+                if !axis_parts.is_empty() {
+                    name_parts.push(axis_parts.join(","));
+                }
+                let name = name_parts.join("/");
+                obj.insert("name".into(), Json::Str(name.clone()));
+                let cfg = ExperimentConfig::from_json(&Json::Obj(obj))
+                    .map_err(|e| format!("run {name:?}: {e}"))?;
+                let label = vlabel.clone().unwrap_or_else(|| name.clone());
+                out.push((label, cfg));
+
+                // advance the odometer
+                let mut pos = self.axes.len();
+                loop {
+                    if pos == 0 {
+                        break;
+                    }
+                    pos -= 1;
+                    idx[pos] += 1;
+                    if idx[pos] < self.axes[pos].1.len() {
+                        break;
+                    }
+                    idx[pos] = 0;
+                }
+                if self.axes.is_empty() || idx.iter().all(|&i| i == 0) {
+                    break;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Render an axis value for run names ("h=5", "trigger=const:50").
+fn json_value_label(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+/// Stable identity of an expanded config, used to key resume records and
+/// series files. `name` and `workers` are normalized out: neither changes
+/// run results (worker-count invariance is pinned by
+/// `rust/tests/sparse_parallel.rs`), so relabelling a run or changing the
+/// sweep budget must not force a re-run.
+pub fn config_hash(cfg: &ExperimentConfig) -> String {
+    let mut canonical = cfg.clone();
+    canonical.name = String::new();
+    canonical.workers = 1;
+    let text = canonical.to_json().to_string();
+    // FNV-1a 64
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+
+    #[test]
+    fn expands_cross_product_in_deterministic_order() {
+        let spec = SweepSpec::new("grid")
+            .base(&ExperimentConfig::default())
+            .axis_u64("h", &[1, 5])
+            .axis_u64("seed", &[7, 8]);
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(spec.len(), 4);
+        // axes sorted (h before seed), last key fastest
+        let names: Vec<&str> = runs.iter().map(|(_, c)| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "grid/h=1,seed=7",
+                "grid/h=1,seed=8",
+                "grid/h=5,seed=7",
+                "grid/h=5,seed=8"
+            ]
+        );
+        assert_eq!(runs[2].1.h, 5);
+        assert_eq!(runs[2].1.seed, 7);
+    }
+
+    #[test]
+    fn variants_expand_with_labels_and_overrides() {
+        let spec = SweepSpec::new("fig")
+            .base(&ExperimentConfig::default())
+            .variant("sparq", &[("algo", Json::from("sparq"))])
+            .variant(
+                "choco-sign",
+                &[("algo", Json::from("choco")), ("compressor", Json::from("sign"))],
+            )
+            .axis_u64("seed", &[1]);
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].0, "sparq");
+        assert_eq!(runs[1].0, "choco-sign");
+        assert_eq!(runs[1].1.algo, Algo::Choco);
+        assert_eq!(runs[1].1.compressor, "sign");
+        assert_eq!(runs[1].1.name, "fig/choco-sign/seed=1");
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let j = Json::parse(
+            r#"{
+                "name": "smoke",
+                "base": {"problem": "quadratic:16", "nodes": 4, "steps": 50},
+                "axes": {"seed": [1, 2], "h": [1, 5]}
+            }"#,
+        )
+        .unwrap();
+        let spec = SweepSpec::from_json(&j).unwrap();
+        assert_eq!(spec.len(), 4);
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(
+            back.expand().unwrap().iter().map(|(_, c)| c.name.clone()).collect::<Vec<_>>(),
+            spec.expand().unwrap().iter().map(|(_, c)| c.name.clone()).collect::<Vec<_>>()
+        );
+
+        // typo'd axis is an error, not an ignored knob
+        let j = Json::parse(r#"{"axes": {"trigerr": ["const:5"]}}"#).unwrap();
+        let err = SweepSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("trigerr"), "{err}");
+        // non-sweepable axes rejected
+        let j = Json::parse(r#"{"axes": {"workers": [1, 8]}}"#).unwrap();
+        assert!(SweepSpec::from_json(&j).is_err());
+        // bad value types surface the config parser's message
+        let j = Json::parse(r#"{"axes": {"steps": [-5]}}"#).unwrap();
+        let err = SweepSpec::from_json(&j).unwrap().expand().unwrap_err();
+        assert!(err.contains("non-negative"), "{err}");
+        // unknown variant keys rejected
+        let j = Json::parse(r#"{"variants": [{"lable": "x"}]}"#).unwrap();
+        assert!(SweepSpec::from_json(&j).is_err());
+        // duplicate axis values would collide on the result id — rejected
+        let j = Json::parse(r#"{"axes": {"seed": [1, 2, 1]}}"#).unwrap();
+        let err = SweepSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+        // an empty axis is rejected on the builder path too (from_json
+        // catches it at parse; expand's validation catches builder use)
+        let spec = SweepSpec::new("x").axis("seed", Vec::new());
+        let err = spec.expand().unwrap_err();
+        assert!(err.contains("no values"), "{err}");
+    }
+
+    #[test]
+    fn empty_spec_is_one_default_run() {
+        let runs = SweepSpec::new("solo").expand().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].1.name, "solo");
+        assert_eq!(runs[0].1, ExperimentConfig {
+            name: "solo".into(),
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    fn config_hash_ignores_name_and_workers_only() {
+        let a = ExperimentConfig::default();
+        let mut b = a.clone();
+        b.name = "renamed".into();
+        b.workers = 8;
+        assert_eq!(config_hash(&a), config_hash(&b));
+        let mut c = a.clone();
+        c.seed = 43;
+        assert_ne!(config_hash(&a), config_hash(&c));
+        let mut d = a.clone();
+        d.trigger = "const:99".into();
+        assert_ne!(config_hash(&a), config_hash(&d));
+        assert_eq!(config_hash(&a).len(), 16);
+    }
+}

@@ -67,45 +67,73 @@ impl ThresholdSchedule {
 
     /// Parse "zero", "const:C", "poly:C0:EPS", "piecewise:INIT:STEP:EVERY:UNTIL:SPE".
     ///
-    /// Validated: thresholds must be finite and non-negative, and `poly`
-    /// requires ε ∈ (0, 1) — c_t = c₀·t^{1−ε} is o(t) only there, which
-    /// is what Theorem 1's analysis assumes (`poly:2:-1` would grow
-    /// *superlinearly* and silently void the guarantee).
-    pub fn parse(s: &str) -> Option<ThresholdSchedule> {
-        let finite_nonneg = |x: f64| x.is_finite() && x >= 0.0;
+    /// Validated, with an error message naming the offending field:
+    /// thresholds must be finite and non-negative, `poly` requires
+    /// ε ∈ (0, 1) — c_t = c₀·t^{1−ε} is o(t) only there, which is what
+    /// Theorem 1's analysis assumes (`poly:2:-1` would grow
+    /// *superlinearly* and silently void the guarantee) — and the
+    /// piecewise cadence fields (`EVERY`, `SPE`) must be ≥ 1 so the
+    /// schedule's epoch arithmetic is well-defined.
+    pub fn parse(s: &str) -> Result<ThresholdSchedule, String> {
+        let num = |field: &str, v: &str| -> Result<f64, String> {
+            v.parse::<f64>()
+                .map_err(|_| format!("trigger {field} {v:?} is not a number"))
+        };
+        let finite_nonneg = |field: &str, x: f64| -> Result<f64, String> {
+            if x.is_finite() && x >= 0.0 {
+                Ok(x)
+            } else {
+                Err(format!(
+                    "trigger {field} must be finite and non-negative, got {x}"
+                ))
+            }
+        };
+        let int = |field: &str, v: &str| -> Result<usize, String> {
+            v.parse::<usize>()
+                .map_err(|_| format!("trigger {field} {v:?} is not a non-negative integer"))
+        };
         let p: Vec<&str> = s.split(':').collect();
         match p.as_slice() {
-            ["zero"] => Some(ThresholdSchedule::Zero),
+            ["zero"] => Ok(ThresholdSchedule::Zero),
             ["const", c] => {
-                let c: f64 = c.parse().ok()?;
-                if !finite_nonneg(c) {
-                    return None;
-                }
-                Some(ThresholdSchedule::Constant(c))
+                let c = finite_nonneg("c0", num("c0", c)?)?;
+                Ok(ThresholdSchedule::Constant(c))
             }
             ["poly", c0, eps] => {
-                let c0: f64 = c0.parse().ok()?;
-                let eps: f64 = eps.parse().ok()?;
-                if !finite_nonneg(c0) || !(eps > 0.0 && eps < 1.0) {
-                    return None;
+                let c0 = finite_nonneg("c0", num("c0", c0)?)?;
+                let eps = num("eps", eps)?;
+                if !(eps > 0.0 && eps < 1.0) {
+                    return Err(format!(
+                        "trigger eps must lie in the open interval (0, 1) so that \
+                         c_t = c0·t^(1-eps) is o(t) (Theorem 1), got {eps}"
+                    ));
                 }
-                Some(ThresholdSchedule::Poly { c0, eps })
+                Ok(ThresholdSchedule::Poly { c0, eps })
             }
             ["piecewise", init, step, every, until, spe] => {
-                let init: f64 = init.parse().ok()?;
-                let step: f64 = step.parse().ok()?;
-                if !finite_nonneg(init) || !finite_nonneg(step) {
-                    return None;
+                let init = finite_nonneg("init", num("init", init)?)?;
+                let step = finite_nonneg("step", num("step", step)?)?;
+                let every = int("every", every)?;
+                let until = int("until", until)?;
+                let steps_per_epoch = int("steps_per_epoch", spe)?;
+                if every == 0 {
+                    return Err("trigger every must be >= 1 epoch".into());
                 }
-                Some(ThresholdSchedule::PiecewiseEpoch {
+                if steps_per_epoch == 0 {
+                    return Err("trigger steps_per_epoch must be >= 1".into());
+                }
+                Ok(ThresholdSchedule::PiecewiseEpoch {
                     init,
                     step,
-                    every: every.parse().ok()?,
-                    until: until.parse().ok()?,
-                    steps_per_epoch: spe.parse().ok()?,
+                    every,
+                    until,
+                    steps_per_epoch,
                 })
             }
-            _ => None,
+            _ => Err(format!(
+                "unknown trigger spec {s:?}; expected zero, const:C, poly:C0:EPS, \
+                 or piecewise:INIT:STEP:EVERY:UNTIL:STEPS_PER_EPOCH"
+            )),
         }
     }
 }
@@ -187,37 +215,104 @@ mod tests {
 
     #[test]
     fn parse_specs() {
-        assert_eq!(ThresholdSchedule::parse("zero"), Some(ThresholdSchedule::Zero));
+        assert_eq!(
+            ThresholdSchedule::parse("zero"),
+            Ok(ThresholdSchedule::Zero)
+        );
         assert_eq!(
             ThresholdSchedule::parse("const:5000"),
-            Some(ThresholdSchedule::Constant(5000.0))
+            Ok(ThresholdSchedule::Constant(5000.0))
         );
         assert_eq!(
             ThresholdSchedule::parse("poly:2:0.5"),
-            Some(ThresholdSchedule::Poly { c0: 2.0, eps: 0.5 })
+            Ok(ThresholdSchedule::Poly { c0: 2.0, eps: 0.5 })
         );
-        assert!(ThresholdSchedule::parse("piecewise:2:1:10:60:100").is_some());
-        assert!(ThresholdSchedule::parse("wat").is_none());
+        assert!(ThresholdSchedule::parse("piecewise:2:1:10:60:100").is_ok());
+        assert!(ThresholdSchedule::parse("wat").is_err());
     }
 
     #[test]
     fn parse_rejects_analysis_violating_schedules() {
         // ε ∉ (0,1) ⇒ c_t is not o(t) (Theorem 1's assumption)
-        assert!(ThresholdSchedule::parse("poly:2:-1").is_none());
-        assert!(ThresholdSchedule::parse("poly:2:0").is_none());
-        assert!(ThresholdSchedule::parse("poly:2:1").is_none());
-        assert!(ThresholdSchedule::parse("poly:2:1.5").is_none());
+        assert!(ThresholdSchedule::parse("poly:2:-1").is_err());
+        assert!(ThresholdSchedule::parse("poly:2:0").is_err());
+        assert!(ThresholdSchedule::parse("poly:2:1").is_err());
+        assert!(ThresholdSchedule::parse("poly:2:1.5").is_err());
         // non-finite / negative thresholds
-        assert!(ThresholdSchedule::parse("poly:-3:0.5").is_none());
-        assert!(ThresholdSchedule::parse("poly:inf:0.5").is_none());
-        assert!(ThresholdSchedule::parse("poly:nan:0.5").is_none());
-        assert!(ThresholdSchedule::parse("const:-5").is_none());
-        assert!(ThresholdSchedule::parse("const:inf").is_none());
-        assert!(ThresholdSchedule::parse("piecewise:inf:1:10:60:100").is_none());
-        assert!(ThresholdSchedule::parse("piecewise:-5:1:10:60:100").is_none());
-        assert!(ThresholdSchedule::parse("piecewise:2:-1:10:60:100").is_none());
+        assert!(ThresholdSchedule::parse("poly:-3:0.5").is_err());
+        assert!(ThresholdSchedule::parse("poly:inf:0.5").is_err());
+        assert!(ThresholdSchedule::parse("poly:nan:0.5").is_err());
+        assert!(ThresholdSchedule::parse("const:-5").is_err());
+        assert!(ThresholdSchedule::parse("const:inf").is_err());
+        assert!(ThresholdSchedule::parse("piecewise:inf:1:10:60:100").is_err());
+        assert!(ThresholdSchedule::parse("piecewise:-5:1:10:60:100").is_err());
+        assert!(ThresholdSchedule::parse("piecewise:2:-1:10:60:100").is_err());
         // the valid interior still parses
-        assert!(ThresholdSchedule::parse("poly:2:0.5").is_some());
-        assert!(ThresholdSchedule::parse("const:0").is_some());
+        assert!(ThresholdSchedule::parse("poly:2:0.5").is_ok());
+        assert!(ThresholdSchedule::parse("const:0").is_ok());
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_field() {
+        let err = ThresholdSchedule::parse("poly:2:1.5").unwrap_err();
+        assert!(err.contains("(0, 1)"), "{err}");
+        assert!(err.contains("1.5"), "{err}");
+        let err = ThresholdSchedule::parse("const:-5").unwrap_err();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = ThresholdSchedule::parse("const:many").unwrap_err();
+        assert!(err.contains("not a number") && err.contains("many"), "{err}");
+        let err = ThresholdSchedule::parse("piecewise:2:1:0:60:100").unwrap_err();
+        assert!(err.contains("every"), "{err}");
+        let err = ThresholdSchedule::parse("piecewise:2:1:10:60:0").unwrap_err();
+        assert!(err.contains("steps_per_epoch"), "{err}");
+        let err = ThresholdSchedule::parse("carousel:5").unwrap_err();
+        assert!(err.contains("carousel") && err.contains("expected"), "{err}");
+        // wrong arity falls through to the usage message
+        assert!(ThresholdSchedule::parse("poly:2").is_err());
+        assert!(ThresholdSchedule::parse("piecewise:2:1:10:60").is_err());
+    }
+
+    #[test]
+    fn poly_eps_limits_behave() {
+        // ε → 0⁺: c_t ≈ c0·t (still o(t) formally, nearly linear growth).
+        let near_zero = ThresholdSchedule::parse("poly:3:0.001").unwrap();
+        let c = near_zero.c(1000);
+        assert!(c > 3.0 * 900.0 && c < 3.0 * 1000.0, "c(1000) = {c}");
+        // ε → 1⁻: c_t ≈ c0 (nearly constant).
+        let near_one = ThresholdSchedule::parse("poly:3:0.999").unwrap();
+        let c = near_one.c(1_000_000);
+        assert!(c > 3.0 && c < 3.1, "c(1e6) = {c}");
+        // both remain monotone non-decreasing in t
+        for s in [near_zero, near_one] {
+            let mut prev = s.c(1);
+            for t in 2..50 {
+                let cur = s.c(t);
+                assert!(cur >= prev, "{s:?} not monotone at t={t}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_boundaries_are_exact() {
+        // Every boundary iteration: the step lands exactly at epoch
+        // multiples of `every`, and the freeze at `until` is inclusive.
+        let s = ThresholdSchedule::PiecewiseEpoch {
+            init: 1.0,
+            step: 0.5,
+            every: 3,
+            until: 9,
+            steps_per_epoch: 10,
+        };
+        // epoch = t / 10, level = min(epoch, 9) / 3
+        assert_eq!(s.c(0), 1.0); // epoch 0
+        assert_eq!(s.c(29), 1.0); // epoch 2 — last before first step
+        assert_eq!(s.c(30), 1.5); // epoch 3 — boundary
+        assert_eq!(s.c(59), 1.5); // epoch 5
+        assert_eq!(s.c(60), 2.0); // epoch 6
+        assert_eq!(s.c(89), 2.0); // epoch 8
+        assert_eq!(s.c(90), 2.5); // epoch 9 = until (inclusive)
+        assert_eq!(s.c(91), 2.5);
+        assert_eq!(s.c(10_000), 2.5); // frozen forever after
     }
 }

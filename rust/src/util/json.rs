@@ -113,6 +113,7 @@ impl Json {
 
     // ---------------- write ----------------
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

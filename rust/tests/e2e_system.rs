@@ -124,10 +124,10 @@ fn vanilla_and_choco_and_sparq_all_run_via_builder() {
 #[test]
 fn checkpoint_resume_reproduces_trajectory() {
     // Snapshot at t=100, keep training to t=200; restoring the snapshot
-    // into a fresh algorithm and re-running 100 steps with the same
-    // node RNor... — node RNG state is NOT part of the checkpoint, so we
-    // assert the weaker (and still meaningful) contract: save/load is
-    // lossless and restored params drive evaluation identically.
+    // into a fresh algorithm (v2 checkpoints carry params, momentum, the
+    // estimate bank + consensus accumulator, AND the node RNG streams)
+    // and stepping the remaining 100 iterations must land on the
+    // uninterrupted trajectory bit for bit.
     use sparq::comm::Bus;
     use sparq::coordinator::checkpoint;
 
@@ -148,6 +148,8 @@ fn checkpoint_resume_reproduces_trajectory() {
     assert_eq!(ckpt.n(), 5);
     assert_eq!(ckpt.dim(), 24);
     assert!(!ckpt.momentum.is_empty(), "momentum run must checkpoint m");
+    assert!(!ckpt.xhat.is_empty(), "SPARQ must checkpoint its x̂ bank");
+    assert_eq!(ckpt.rng.len(), 5, "per-node RNG streams checkpointed");
 
     let path = std::env::temp_dir().join(format!("sparq-e2e-ckpt-{}.bin", std::process::id()));
     ckpt.save(&path).expect("save");
@@ -155,15 +157,28 @@ fn checkpoint_resume_reproduces_trajectory() {
     assert_eq!(ckpt, loaded);
     std::fs::remove_file(&path).ok();
 
+    let mut problem2 = build_problem(&cfg);
     let mut algo2 = build_algo(&cfg, 24);
+    let mut bus2 = Bus::new(cfg.nodes);
     checkpoint::restore(algo2.as_mut(), &loaded);
+    checkpoint::restore_bus(&mut bus2, &loaded);
+    assert_eq!(bus.total_bits, bus2.total_bits);
     for i in 0..5 {
         assert_eq!(algo.params(i), algo2.params(i), "node {i} params");
         assert_eq!(algo.momentum(i), algo2.momentum(i), "node {i} momentum");
     }
-    // restored state evaluates identically
+    // continue both to t=200: bit-for-bit the same run
+    for t in 100..200 {
+        algo.step(t, problem.as_mut(), &mut bus);
+        algo2.step(t, problem2.as_mut(), &mut bus2);
+    }
+    for i in 0..5 {
+        assert_eq!(algo.params(i), algo2.params(i), "node {i} diverged after resume");
+    }
+    assert_eq!(bus.total_bits, bus2.total_bits);
+    assert_eq!(bus.node_bits, bus2.node_bits);
     let a = problem.global_loss(&algo.x_bar());
-    let b = problem.global_loss(&algo2.x_bar());
+    let b = problem2.global_loss(&algo2.x_bar());
     assert_eq!(a, b);
 }
 

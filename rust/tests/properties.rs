@@ -4,12 +4,29 @@
 //! Each property runs 48–64 randomized cases with seeded, replayable RNG
 //! and scale-shrinking on failure.
 
-use sparq::compress::{self, Compressor, QsgdOp, RandK, SignL1, SignTopK, TopK};
+use sparq::comm::wire;
+use sparq::compress::{self, Compressor, QsgdOp, QsgdTopK, RandK, SignL1, SignTopK, SparseVec, TopK};
 use sparq::graph::{metropolis_hastings, uniform_neighbor, SpectralInfo, Topology, TopologyKind};
 use sparq::linalg::vecops::{dist2, norm2_sq};
 use sparq::prop_assert;
 use sparq::util::prop::{check, Config, G};
 use sparq::util::Rng;
+
+/// Every compressor kind the crate ships, at sparsity k, tagged (the
+/// paper-accounting SignTopK variant reports the same `name()` as the
+/// honest one, so tests must not distinguish kinds by name alone).
+fn every_kind(k: usize) -> Vec<(&'static str, Box<dyn Compressor>)> {
+    vec![
+        ("identity", Box::new(compress::Identity)),
+        ("sign", Box::new(SignL1)),
+        ("topk", Box::new(TopK::new(k))),
+        ("randk", Box::new(RandK::new(k))),
+        ("qsgd", Box::new(QsgdOp::new(16))),
+        ("sign_topk", Box::new(SignTopK::new(k))),
+        ("sign_topk_paper", Box::new(SignTopK::paper_accounting(k))),
+        ("qsgd_topk", Box::new(QsgdTopK::new(k, 8))),
+    ]
+}
 
 fn any_topology(g: &mut G) -> Topology {
     let pick = g.usize_in(0, 5);
@@ -250,6 +267,132 @@ fn prop_sync_schedule_gap_respects_h() {
         prop_assert!(within, "no sync index within H={h} of t={t}");
         Ok(())
     });
+}
+
+#[test]
+fn prop_compress_sparse_densifies_to_compress_for_every_kind() {
+    // The sparse fast path's core contract, for EVERY compressor kind:
+    // `compress_sparse` run on the same RNG stream densifies to exactly
+    // the dense `compress` output, advances the stream identically, and
+    // emits the canonical sparse form.
+    check(
+        "sparse-equals-dense-all-kinds",
+        Config { cases: 48, seed: 0xC4 },
+        |g| {
+            let d = g.dim(500).max(4);
+            let k = g.usize_in(1, d);
+            let x = g.vec_f32(d, 1.0);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            for (tag, op) in every_kind(k) {
+                let mut rng_dense = Rng::new(seed);
+                let mut rng_sparse = Rng::new(seed);
+                let dense = op.compress_vec(&x, &mut rng_dense);
+                let mut q = SparseVec::new();
+                op.compress_sparse(&x, &mut rng_sparse, &mut q);
+                prop_assert!(
+                    q.to_dense(d) == dense,
+                    "{tag} d={d} k={k}: sparse != dense"
+                );
+                prop_assert!(
+                    rng_dense.next_u64() == rng_sparse.next_u64(),
+                    "{tag} d={d} k={k}: RNG streams diverged"
+                );
+                prop_assert!(
+                    q.idx.windows(2).all(|w| w[0] < w[1]) && q.val.iter().all(|v| *v != 0.0),
+                    "{tag} d={d} k={k}: non-canonical sparse form"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_message_bits_match_wire_codecs_for_every_kind() {
+    // `message_bits(d, nnz)` is what the bus charges per message. For
+    // kinds with a `comm::wire` codec (TopK, SignTopK, Sign) it must
+    // equal the codec's encoded byte length ×8 for that EXACT message (up
+    // to the final byte's padding), and the codec must round-trip. Kinds
+    // with fixed-slot wire formats (Identity, RandK, QSGD, QsgdTopK)
+    // charge their nominal `encoded_bits` regardless of stored nonzeros.
+    check(
+        "message-bits-wire-exact",
+        Config { cases: 48, seed: 0xC5 },
+        |g| {
+            let d = g.dim(2048).max(8);
+            let k = g.usize_in(1, d / 2);
+            let x = g.vec_f32(d, 1.0);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let byte_exact = |bytes: usize, charged: u64| -> bool {
+                let bits = bytes as u64 * 8;
+                bits >= charged && bits < charged + 8
+            };
+            for (tag, op) in every_kind(k) {
+                let mut q = SparseVec::new();
+                op.compress_sparse(&x, &mut Rng::new(seed), &mut q);
+                let charged = op.message_bits(d, q.nnz());
+                match tag {
+                    "topk" => {
+                        let bytes = wire::encode_topk_sparse(&q, d);
+                        prop_assert!(
+                            byte_exact(bytes.len(), charged),
+                            "{tag} d={d}: {} bytes vs {charged} charged bits",
+                            bytes.len()
+                        );
+                        let back = wire::decode_topk(&bytes, d, q.nnz());
+                        prop_assert!(back == q.to_dense(d), "{tag}: decode mismatch");
+                    }
+                    "sign_topk" | "sign_topk_paper" => {
+                        let bytes = wire::encode_sign_topk_sparse(&q, d);
+                        // The paper-accounting variant deliberately
+                        // charges fewer bits (signs + norm, no indices)
+                        // than the honest-indices codec emits — its
+                        // charge is exact for ITS convention instead.
+                        if tag == "sign_topk" {
+                            prop_assert!(
+                                byte_exact(bytes.len(), charged),
+                                "{tag} d={d}: {} bytes vs {charged} charged bits",
+                                bytes.len()
+                            );
+                        } else {
+                            prop_assert!(
+                                charged == q.nnz() as u64 + 32,
+                                "{tag} d={d}: charged {charged} != nnz+32"
+                            );
+                        }
+                        let back = wire::decode_sign_topk(&bytes, d, q.nnz());
+                        prop_assert!(back == q.to_dense(d), "{tag}: decode mismatch");
+                    }
+                    "sign" => {
+                        let dense = q.to_dense(d);
+                        let bytes = wire::encode_sign(&dense);
+                        prop_assert!(
+                            byte_exact(bytes.len(), charged),
+                            "{tag} d={d}: {} bytes vs {charged} charged bits",
+                            bytes.len()
+                        );
+                        prop_assert!(
+                            wire::decode_sign(&bytes, d) == dense,
+                            "{tag}: decode mismatch"
+                        );
+                    }
+                    _ => {
+                        // fixed-slot formats: nnz-independent nominal charge
+                        prop_assert!(
+                            charged == op.encoded_bits(d),
+                            "{tag} d={d}: message_bits {charged} != nominal {}",
+                            op.encoded_bits(d)
+                        );
+                        prop_assert!(
+                            op.message_bits(d, 0) == op.message_bits(d, q.nnz()),
+                            "{tag}: charge depends on nnz"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

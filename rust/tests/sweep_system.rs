@@ -1,0 +1,376 @@
+//! Sweep-engine system tests (ISSUE 3 acceptance) plus the
+//! test-hardening satellites over the checkpoint and link layers:
+//!
+//! * the full Fig-1 grid (all five curves), expressed as a `SweepSpec`,
+//!   runs concurrently and produces per-run series **bit-for-bit
+//!   identical** to sweep-workers = 1, and resume skips completed runs;
+//! * a fault-aborted run resumes from its mid-run checkpoint and lands
+//!   on the uninterrupted trajectory bit for bit;
+//! * `snapshot → save → load → restore` round-trips mid-run for SPARQ
+//!   (with momentum), CHOCO, and vanilla — same final params and bus
+//!   bits as never stopping;
+//! * total delivered bits are monotonically non-increasing in the drop
+//!   probability p on a fixed workload, and link-faulted runs are
+//!   identical across worker counts.
+
+use std::path::PathBuf;
+
+use sparq::comm::Bus;
+use sparq::config::{Algo, ExperimentConfig};
+use sparq::coordinator::checkpoint;
+use sparq::experiments::{build_algo, build_problem, run_config};
+use sparq::sweep::{run_configs, run_spec, ArtifactCache, SweepOptions, SweepSpec};
+use sparq::util::json::Json;
+use sparq::util::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparq-sweep-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Bit-for-bit series equality: every float compared by `to_bits` (the
+/// CSV rendering rounds to ~6 significant figures, which is too coarse
+/// for the acceptance criterion).
+fn assert_series_bits_eq(a: &sparq::metrics::Series, b: &sparq::metrics::Series, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record counts");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.t, rb.t, "{what}: t");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{what}: loss at t={}", ra.t);
+        assert_eq!(
+            ra.test_error.to_bits(),
+            rb.test_error.to_bits(),
+            "{what}: test_error at t={}",
+            ra.t
+        );
+        assert_eq!(
+            ra.opt_gap.to_bits(),
+            rb.opt_gap.to_bits(),
+            "{what}: opt_gap at t={}",
+            ra.t
+        );
+        assert_eq!(ra.bits, rb.bits, "{what}: bits at t={}", ra.t);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{what}: rounds at t={}", ra.t);
+        assert_eq!(
+            ra.consensus.to_bits(),
+            rb.consensus.to_bits(),
+            "{what}: consensus at t={}",
+            ra.t
+        );
+        assert_eq!(ra.fired, rb.fired, "{what}: fired at t={}", ra.t);
+    }
+}
+
+/// The five fig1 convex curves as a sweep spec, scaled to test size
+/// (same grid structure as `fig1::convex_spec`, smaller problem).
+fn mini_fig1_spec(steps: u64, seed: u64) -> SweepSpec {
+    let base = ExperimentConfig {
+        name: "mini-fig1".into(),
+        nodes: 8,
+        steps,
+        eval_every: 50,
+        seed,
+        problem: "logreg:24:4:6".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        lr: "invtime:100:1".into(),
+        h: 5,
+        ..Default::default()
+    };
+    SweepSpec::new("mini-fig1")
+        .base(&base)
+        .variant("SPARQ-SGD (SignTopK)", &[])
+        .variant(
+            "CHOCO-SGD (Sign)",
+            &[("algo", Json::from("choco")), ("compressor", Json::from("sign"))],
+        )
+        .variant(
+            "CHOCO-SGD (TopK)",
+            &[("algo", Json::from("choco")), ("compressor", Json::from("topk:6"))],
+        )
+        .variant("CHOCO-SGD (SignTopK)", &[("algo", Json::from("choco"))])
+        .variant(
+            "Vanilla decentralized SGD",
+            &[("algo", Json::from("vanilla")), ("compressor", Json::from("identity"))],
+        )
+}
+
+#[test]
+fn fig1_grid_sweep_is_bit_identical_across_budgets_and_resume_skips() {
+    let spec = mini_fig1_spec(300, 11);
+    assert_eq!(spec.len(), 5, "all five fig1 curves");
+
+    let dir_serial = tmp_dir("serial");
+    let dir_wide = tmp_dir("wide");
+    let serial = run_spec(
+        &spec,
+        &SweepOptions {
+            workers: 1,
+            out: Some(dir_serial.clone()),
+            ..Default::default()
+        },
+    )
+    .expect("serial sweep");
+    let wide = run_spec(
+        &spec,
+        &SweepOptions {
+            workers: 8,
+            out: Some(dir_wide.clone()),
+            ..Default::default()
+        },
+    )
+    .expect("concurrent sweep");
+    assert_eq!(serial.executed, 5);
+    assert_eq!(wide.executed, 5);
+
+    // Per-run series bit-for-bit identical at workers = 1 vs 8.
+    for a in &serial.outcomes {
+        let b = wide.by_id(&a.id).expect("same run set");
+        assert_series_bits_eq(&a.series, &b.series, &format!("{} (1 vs 8)", a.label));
+        assert_eq!(a.fired, b.fired);
+        assert_eq!(a.checks, b.checks);
+    }
+
+    // Resume on the serial dir: everything is already complete.
+    let resumed = run_spec(
+        &spec,
+        &SweepOptions {
+            workers: 8,
+            out: Some(dir_serial.clone()),
+            resume: true,
+            ..Default::default()
+        },
+    )
+    .expect("resumed sweep");
+    assert_eq!(resumed.executed, 0, "resume must not re-run completed runs");
+    assert_eq!(resumed.skipped, 5);
+    for a in &serial.outcomes {
+        let b = resumed.by_id(&a.id).expect("resumed run set");
+        assert!(b.skipped);
+        assert_series_bits_eq(&a.series, &b.series, &format!("{} (stored)", a.label));
+        assert_eq!(a.fired, b.fired, "{}: fired stats not restored", a.label);
+    }
+
+    // A changed grid point is a different hash ⇒ re-runs; the rest skip.
+    let mut spec2 = mini_fig1_spec(300, 11);
+    spec2 = spec2.axis_u64("seed", &[12]);
+    let moved = run_spec(
+        &spec2,
+        &SweepOptions {
+            workers: 4,
+            out: Some(dir_serial.clone()),
+            resume: true,
+            ..Default::default()
+        },
+    )
+    .expect("shifted sweep");
+    assert_eq!(moved.executed, 5, "new seeds are new runs");
+    assert_eq!(moved.skipped, 0);
+
+    std::fs::remove_dir_all(&dir_serial).ok();
+    std::fs::remove_dir_all(&dir_wide).ok();
+}
+
+#[test]
+fn sweep_mid_run_checkpoint_resume_is_bit_identical() {
+    let cfg = ExperimentConfig {
+        name: "ckpt-resume".into(),
+        nodes: 6,
+        steps: 200,
+        eval_every: 50,
+        problem: "quadratic:32".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        momentum: 0.9,
+        seed: 21,
+        ..Default::default()
+    };
+
+    // Uninterrupted reference (no persistence).
+    let cache = ArtifactCache::new();
+    let reference = run_configs(
+        vec![("ref".into(), cfg.clone())],
+        &SweepOptions::default(),
+        &cache,
+    )
+    .expect("reference run");
+    let reference = &reference.outcomes[0];
+
+    // Interrupted run: checkpoint every 60 iterations, die at t = 120.
+    let dir = tmp_dir("ckpt");
+    let interrupted = run_configs(
+        vec![("run".into(), cfg.clone())],
+        &SweepOptions {
+            out: Some(dir.clone()),
+            resume: true,
+            checkpoint_every: 60,
+            fault_abort_at: Some(120),
+            ..Default::default()
+        },
+        &ArtifactCache::new(),
+    )
+    .expect("interrupted run");
+    assert!(!interrupted.outcomes[0].completed);
+    assert_eq!(interrupted.executed, 0, "aborted run is not 'executed'");
+    let ckpt_file = dir.join("ckpt").join(format!("{}.ckpt", interrupted.outcomes[0].id));
+    assert!(ckpt_file.exists(), "mid-run checkpoint written");
+    let results = std::fs::read_to_string(dir.join("results.jsonl")).unwrap();
+    assert!(results.trim().is_empty(), "no result recorded for an aborted run");
+
+    // Resume: picks up at t = 120 from the snapshot, finishes the run.
+    let resumed = run_configs(
+        vec![("run".into(), cfg.clone())],
+        &SweepOptions {
+            out: Some(dir.clone()),
+            resume: true,
+            checkpoint_every: 60,
+            ..Default::default()
+        },
+        &ArtifactCache::new(),
+    )
+    .expect("resumed run");
+    let resumed = &resumed.outcomes[0];
+    assert!(resumed.completed && !resumed.skipped);
+    assert_series_bits_eq(
+        &reference.series,
+        &resumed.series,
+        "resumed vs uninterrupted",
+    );
+    assert!(!ckpt_file.exists(), "completed run clears its snapshots");
+    let results = std::fs::read_to_string(dir.join("results.jsonl")).unwrap();
+    assert_eq!(results.lines().count(), 1, "exactly one result record");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_roundtrip_bit_for_bit_for_all_three_algorithms() {
+    // Satellite: snapshot → write → read → restore mid-run resumes to
+    // exactly the same final params/bits as an uninterrupted run, for
+    // SPARQ (with momentum), CHOCO, and vanilla.
+    for (tag, algo, momentum) in [
+        ("sparq", Algo::Sparq, 0.9),
+        ("choco", Algo::Choco, 0.0),
+        ("vanilla", Algo::Vanilla, 0.9),
+    ] {
+        let cfg = ExperimentConfig {
+            name: format!("rt-{tag}"),
+            algo,
+            nodes: 6,
+            steps: 240,
+            problem: "quadratic:20".into(),
+            compressor: "sign_topk:25%".into(),
+            trigger: "const:10".into(),
+            h: 2,
+            momentum,
+            seed: 31,
+            ..Default::default()
+        };
+        let mut problem_a = build_problem(&cfg);
+        let mut algo_a = build_algo(&cfg, problem_a.dim());
+        let mut bus_a = Bus::new(cfg.nodes);
+        let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+        if let Some(x0) = problem_a.init_params(&mut init_rng) {
+            algo_a.set_params(&x0);
+        }
+        for t in 0..120 {
+            algo_a.step(t, problem_a.as_mut(), &mut bus_a);
+        }
+
+        // snapshot → write → read
+        let ck = checkpoint::snapshot(algo_a.as_ref(), 120, &bus_a);
+        let path = std::env::temp_dir()
+            .join(format!("sparq-rt-{tag}-{}.ckpt", std::process::id()));
+        ck.save(&path).expect("save");
+        let loaded = sparq::coordinator::Checkpoint::load(&path).expect("load");
+        assert_eq!(ck, loaded, "{tag}: checkpoint file round-trip");
+        std::fs::remove_file(&path).ok();
+
+        // restore into a FRESH algorithm + bus, continue both to t = 240
+        let mut problem_b = build_problem(&cfg);
+        let mut algo_b = build_algo(&cfg, problem_b.dim());
+        let mut bus_b = Bus::new(cfg.nodes);
+        checkpoint::restore(algo_b.as_mut(), &loaded);
+        checkpoint::restore_bus(&mut bus_b, &loaded);
+        for t in 120..240 {
+            algo_a.step(t, problem_a.as_mut(), &mut bus_a);
+            algo_b.step(t, problem_b.as_mut(), &mut bus_b);
+        }
+        for i in 0..cfg.nodes {
+            assert_eq!(
+                algo_a.params(i),
+                algo_b.params(i),
+                "{tag}: node {i} params diverged after restore"
+            );
+            assert_eq!(
+                algo_a.momentum(i),
+                algo_b.momentum(i),
+                "{tag}: node {i} momentum diverged"
+            );
+        }
+        assert_eq!(bus_a.total_bits, bus_b.total_bits, "{tag}: bits diverged");
+        assert_eq!(bus_a.node_bits, bus_b.node_bits, "{tag}: node bits diverged");
+        assert_eq!(
+            algo_a.fired_stats(),
+            algo_b.fired_stats(),
+            "{tag}: trigger stats diverged"
+        );
+    }
+}
+
+#[test]
+fn delivered_bits_monotone_nonincreasing_in_drop_probability() {
+    // Fixed workload (CHOCO + dense sign messages, so every broadcast
+    // costs the same d+32 bits and every node transmits every round);
+    // the link coins for a given (edge, t) are independent of p, so the
+    // delivered set — and therefore the charged bits — can only shrink
+    // as p grows.
+    let bits_at = |p: f64| {
+        let cfg = ExperimentConfig {
+            name: format!("drop-{p}"),
+            algo: Algo::Choco,
+            nodes: 8,
+            steps: 150,
+            eval_every: 150,
+            problem: "quadratic:24".into(),
+            compressor: "sign".into(),
+            link: if p > 0.0 { format!("drop:{p}") } else { "none".into() },
+            seed: 5,
+            ..Default::default()
+        };
+        run_config(&cfg, false).records.last().unwrap().bits
+    };
+    let bits: Vec<u64> = [0.0, 0.2, 0.5, 0.8].iter().map(|&p| bits_at(p)).collect();
+    for w in bits.windows(2) {
+        assert!(
+            w[0] >= w[1],
+            "delivered bits increased with drop probability: {bits:?}"
+        );
+    }
+    assert!(
+        bits[3] < bits[0],
+        "p=0.8 must drop something over 150 rounds: {bits:?}"
+    );
+}
+
+#[test]
+fn link_faulted_runs_are_identical_across_worker_counts() {
+    let mk = |workers: usize| ExperimentConfig {
+        name: "link-workers".into(),
+        nodes: 8,
+        steps: 200,
+        eval_every: 100,
+        problem: "quadratic:32".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:10".into(),
+        h: 2,
+        link: "drop:0.3+straggler:2:0.5".into(),
+        seed: 17,
+        workers,
+        ..Default::default()
+    };
+    let a = run_config(&mk(1), false);
+    let b = run_config(&mk(8), false);
+    assert_series_bits_eq(&a, &b, "faulted run across worker counts");
+}
