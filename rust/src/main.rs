@@ -4,13 +4,22 @@
 //!   train    --config cfg.json | preset flags   run one experiment
 //!   sweep    --spec spec.json --out results/    declarative config grid,
 //!            [--workers N --resume              concurrent + resumable
-//!             --checkpoint-every C]             (see sweep::SweepSpec)
+//!             --checkpoint-every C              (see sweep::SweepSpec);
+//!             --target-err E --target-loss L    early-stop budgets;
+//!             --distributed=true                cooperative multi-process
+//!             --lease-secs S --poll-ms P]       claim/lease execution
+//!   sweep report --out results/                 savings table + Fig-1 CSV
+//!            [--target-err E | --target-loss L  panels from results.jsonl,
+//!             --csv-dir D]                      no re-running
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
 //!   ablate   --knob h|c0|k|gamma|all            Remark-1 knob sweeps
 //!   robustness --steps 2000 --out results/      lossy links + switching
 //!                                               topologies sweep
+//!   perfgate --measured bench.json              CI perf regression gate
+//!            [--baseline BENCH_....json         vs the committed snapshot
+//!             --max-regress 0.15]
 //!   artifacts                                   list + smoke the manifest
 //!   version
 //!
@@ -21,6 +30,9 @@
 //!   sparq train --nodes 16 --topology-schedule switch:ring,torus:500
 //!   sparq sweep --spec examples/specs/fig1_convex.json --out results/fig1 --workers 8
 //!   sparq sweep --spec examples/specs/smoke.json --out /tmp/sweep --resume
+//!   sparq sweep --spec grid.json --out /shared/fig1 --distributed=true --lease-secs 60
+//!   sparq sweep report --out /shared/fig1 --target-err 0.15
+//!   sparq perfgate --baseline BENCH_sparse_fastpath.json --measured /tmp/bench.json
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
 //!   sparq robustness --steps 2000 --drops 0.0,0.1,0.3
@@ -40,11 +52,12 @@ fn main() {
         Some("spectral") => cmd_spectral(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("robustness") => cmd_robustness(&args),
+        Some("perfgate") => cmd_perfgate(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -53,8 +66,13 @@ fn main() {
 }
 
 fn cmd_sweep(args: &Args) {
-    use sparq::sweep::{run_spec, SweepOptions, SweepSpec};
+    use sparq::sweep::{
+        run_distributed, run_spec, ArtifactCache, DistributedOptions, SweepOptions, SweepSpec,
+    };
 
+    if args.positional.get(1).map(|s| s.as_str()) == Some("report") {
+        return cmd_sweep_report(args);
+    }
     let Some(spec_path) = args.get("spec") else {
         eprintln!("sweep requires --spec spec.json (see examples/specs/)");
         std::process::exit(2);
@@ -63,21 +81,48 @@ fn cmd_sweep(args: &Args) {
         eprintln!("spec error: {e}");
         std::process::exit(2);
     });
-    let opts = SweepOptions {
+    let distributed = args.bool("distributed");
+    let mut opts = SweepOptions {
         workers: args.usize("workers", 0),
         out: args.get("out").map(std::path::PathBuf::from),
-        resume: args.bool("resume"),
+        resume: args.bool("resume") || distributed,
         checkpoint_every: args.u64("checkpoint-every", 0),
         verbose: !args.bool("quiet"),
-        fault_abort_at: None,
+        // Test hook (crash simulation for the takeover tests).
+        fault_abort_at: args.get("fault-abort-at").map(|_| args.u64("fault-abort-at", 0)),
+        target_error: args.get("target-err").map(|_| args.f64("target-err", 0.0)),
+        target_loss: args.get("target-loss").map(|_| args.f64("target-loss", 0.0)),
+        on_event: None,
     };
+    opts = spec.apply_targets(&opts);
+    check_cli_targets(opts.target_error, opts.target_loss);
     println!(
-        "sweep {:?}: {} runs{}",
+        "sweep {:?}: {} runs{}{}",
         spec.name,
         spec.len(),
-        if opts.resume { " (resume)" } else { "" }
+        if opts.resume { " (resume)" } else { "" },
+        if distributed { " (distributed)" } else { "" }
     );
-    let report = run_spec(&spec, &opts).unwrap_or_else(|e| {
+    let report = if distributed {
+        let dopts = DistributedOptions {
+            lease_secs: args
+                .get("lease-secs")
+                .map(|_| args.f64("lease-secs", 0.0))
+                .or(spec.lease_secs)
+                .unwrap_or(60.0),
+            heartbeat_secs: args.f64("heartbeat-secs", 0.0),
+            poll_ms: args.u64("poll-ms", 200),
+            owner: args.get_or("owner", ""),
+        };
+        let runs = spec.expand().unwrap_or_else(|e| {
+            eprintln!("spec error: {e}");
+            std::process::exit(2);
+        });
+        run_distributed(runs, &opts, &dopts, &ArtifactCache::new())
+    } else {
+        run_spec(&spec, &opts)
+    }
+    .unwrap_or_else(|e| {
         eprintln!("sweep error: {e}");
         std::process::exit(1);
     });
@@ -86,6 +131,13 @@ fn cmd_sweep(args: &Args) {
         "run", "final loss", "final err", "bits", "tx rate"
     );
     for o in &report.outcomes {
+        let note = if o.skipped {
+            "  (cached)".to_string()
+        } else if let Some(stop) = &o.stopped {
+            format!("  (early-stop t={})", stop.t)
+        } else {
+            String::new()
+        };
         let last = o.series.records.last();
         println!(
             "{:<44} {:>12.5} {:>12.4} {:>14} {:>8.1}%{}",
@@ -94,7 +146,7 @@ fn cmd_sweep(args: &Args) {
             last.map(|r| r.test_error).unwrap_or(f64::NAN),
             last.map(|r| r.bits).unwrap_or(0),
             100.0 * o.fired as f64 / o.checks.max(1) as f64,
-            if o.skipped { "  (cached)" } else { "" },
+            note,
         );
     }
     println!(
@@ -110,6 +162,106 @@ fn cmd_sweep(args: &Args) {
             "results: {} + series/<id>.jsonl",
             out.join("results.jsonl").display()
         );
+    }
+}
+
+/// CLI-provided targets get the same validation spec-declared ones do
+/// (a non-finite --target-loss would otherwise truncate every run at
+/// its t=0 record and poison the output directory; on `sweep report`
+/// an out-of-range target silently renders "(not reached)" everywhere).
+fn check_cli_targets(target_error: Option<f64>, target_loss: Option<f64>) {
+    if let Some(te) = target_error {
+        if !(te.is_finite() && te > 0.0 && te <= 1.0) {
+            eprintln!("--target-err must lie in (0, 1] (test error is a rate), got {te}");
+            std::process::exit(2);
+        }
+    }
+    if let Some(tl) = target_loss {
+        if !tl.is_finite() {
+            eprintln!("--target-loss must be finite, got {tl}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_sweep_report(args: &Args) {
+    use sparq::sweep::report::{self, TargetMetric};
+
+    let Some(out) = args.get("out") else {
+        eprintln!("sweep report requires --out <sweep output dir>");
+        std::process::exit(2);
+    };
+    let out = std::path::Path::new(out);
+    let runs = report::load(out).unwrap_or_else(|e| {
+        eprintln!("report error: {e}");
+        std::process::exit(1);
+    });
+    if runs.is_empty() {
+        eprintln!("no completed runs in {}", out.display());
+        std::process::exit(1);
+    }
+    let (metric, target) = if args.has("target-loss") {
+        let t = args.f64("target-loss", 0.0);
+        check_cli_targets(None, Some(t));
+        (TargetMetric::Loss, t)
+    } else {
+        let t = args.f64("target-err", 0.15);
+        check_cli_targets(Some(t), None);
+        (TargetMetric::TestError, t)
+    };
+    print!("{}", report::savings_table(&runs, metric, target));
+    let csv_dir = args
+        .get("csv-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| out.join("report"));
+    let paths = report::write_panels(&runs, &csv_dir).unwrap_or_else(|e| {
+        eprintln!("report error: {e}");
+        std::process::exit(1);
+    });
+    for p in paths {
+        println!("wrote {}", p.display());
+    }
+}
+
+fn cmd_perfgate(args: &Args) {
+    use sparq::util::bench::perf_gate;
+    use sparq::util::json::Json;
+
+    let baseline_path = args.get_or("baseline", "BENCH_sparse_fastpath.json");
+    let Some(measured_path) = args.get("measured") else {
+        eprintln!("perfgate requires --measured bench.json (a fresh bench snapshot)");
+        std::process::exit(2);
+    };
+    let load = |path: &str| -> Json {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("perfgate: {path}: {e}");
+            std::process::exit(2);
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("perfgate: {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let baseline = load(&baseline_path);
+    let measured = load(measured_path);
+    let keys: Vec<String> = args
+        .get_or("keys", "speedup_sparse_parallel,node_steps_per_sec")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let keys: Vec<&str> = keys.iter().map(String::as_str).collect();
+    let max_regress = args.f64("max-regress", 0.15);
+    match perf_gate(&baseline, &measured, &keys, max_regress) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+            println!("perf gate OK (tolerance {:.0}%)", max_regress * 100.0);
+        }
+        Err(e) => {
+            eprintln!("perf gate FAILED: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

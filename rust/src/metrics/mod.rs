@@ -11,6 +11,32 @@ use std::path::Path;
 
 use crate::util::json::Json;
 
+/// JSON encoding for one f64 metric: JSON has no NaN/Inf, so non-finite
+/// values encode as their `Display` strings ("inf"/"-inf"/"NaN") and
+/// the round-trip is lossless (a diverging run's loss = inf must not
+/// come back as NaN after a sweep resume). The single source of truth
+/// for this convention — series records and the sweep runner's
+/// truncation metadata both use it.
+pub fn float_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("{x}"))
+    }
+}
+
+/// Lossy inverse of [`float_json`] for optional metadata fields:
+/// numbers pass through, parseable strings ("inf"/"NaN") decode, and
+/// anything else (including legacy `null`) maps to NaN. Record parsing
+/// proper ([`RoundRecord::from_json`]) stays strict instead.
+pub fn json_f64_lossy(j: &Json) -> f64 {
+    match j {
+        Json::Num(x) => *x,
+        Json::Str(s) => s.parse().unwrap_or(f64::NAN),
+        _ => f64::NAN,
+    }
+}
+
 /// One evaluated point of a training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
@@ -52,16 +78,7 @@ impl RoundRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        // JSON has no NaN/Inf; encode non-finite metrics as strings so
-        // the round-trip is lossless (a diverging run's loss = inf must
-        // not come back as NaN after a sweep resume).
-        let float = |x: f64| -> Json {
-            if x.is_finite() {
-                Json::Num(x)
-            } else {
-                Json::Str(format!("{x}"))
-            }
-        };
+        let float = float_json;
         Json::obj()
             .set("t", self.t)
             .set("loss", float(self.loss))

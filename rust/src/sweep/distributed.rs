@@ -1,0 +1,920 @@
+//! Distributed multi-process sweep execution over a shared filesystem.
+//!
+//! N independent `sparq sweep --distributed` processes (or machines
+//! mounting one output directory) cooperatively execute a single grid.
+//! The run set is already hash-keyed and resume-safe (ISSUE 3), so the
+//! only coordination needed is *advisory run-claim locking*:
+//!
+//! * **Claim files** (`<out>/claims/<id>.claim`): acquired with
+//!   create-exclusive (`O_CREAT | O_EXCL` — the filesystem arbitrates
+//!   races, exactly one creator wins), refreshed by a heartbeat that
+//!   rewrites the claim's wall-clock stamp (which also bumps the file
+//!   mtime), and released after the run's result record is durably
+//!   appended.
+//! * **Stale takeover**: a claim whose stamp is older than the lease is
+//!   presumed dead (crashed process). Takeover renames the stale claim
+//!   to a per-claimant tombstone — rename is atomic within the
+//!   directory, so concurrent takeover attempts produce exactly one
+//!   winner of the *removal*; acquisition itself still goes through
+//!   create-exclusive, so even a third process that never saw the stale
+//!   claim competes fairly. Cleanup of the tombstone is idempotent.
+//! * **Crash safety**: completed runs are detected from
+//!   `results.jsonl` exactly as `--resume` does, and half-finished runs
+//!   resume from their `<out>/ckpt/<id>.ckpt` snapshot bit-for-bit, so
+//!   a takeover lands on the uninterrupted trajectory
+//!   (`rust/tests/sweep_distributed.rs` pins both).
+//!
+//! The locking is *advisory*: a live-but-stalled owner whose claim is
+//! taken over discovers the loss at its next heartbeat and abandons the
+//! run without recording a result (ownership is re-verified immediately
+//! before persisting). Exactly-once *recording* therefore holds under
+//! crash/takeover; a pathological stall shorter than one heartbeat
+//! interval can duplicate *work*, never results, beyond a last-wins
+//! duplicate line that `sweep report` resolves deterministically.
+//!
+//! Property tests (`rust/tests/properties.rs`) pin the lease algebra:
+//! takeover never fires before the lease expires under any interleaving
+//! of heartbeat timestamps, racing claimants yield exactly one winner,
+//! and stale-claim cleanup is idempotent.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::config::ExperimentConfig;
+use crate::util::json::Json;
+
+use super::cache::ArtifactCache;
+use super::runner::{
+    execute_one, load_completed, persist, RunEvent, RunOutcome, SweepOptions, SweepReport,
+};
+use super::spec::config_hash;
+
+// ---------------------------------------------------------------------
+// Claim store
+// ---------------------------------------------------------------------
+
+/// Seconds since the Unix epoch (the claim-stamp clock; one shared
+/// filesystem ⇒ one clock domain is assumed, as with any mtime lease).
+pub fn now_secs() -> f64 {
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// The lease predicate: a claim stamped at `stamp` is stale at `now`
+/// iff a full lease has elapsed since its last heartbeat. This is the
+/// single decision point for takeover — the property tests drive it
+/// through arbitrary heartbeat interleavings.
+pub fn claim_is_stale(now: f64, stamp: f64, lease_secs: f64) -> bool {
+    now - stamp >= lease_secs
+}
+
+/// Result of a claim attempt.
+#[derive(Debug)]
+pub enum Acquire {
+    /// We own the run now (release or abandon via the [`Claim`]).
+    Acquired(Claim),
+    /// A live (non-stale) claimant holds it.
+    Held,
+}
+
+/// A held claim on one run id. Dropping a `Claim` does **not** release
+/// it — that is the crash-safety story (an abandoned claim expires via
+/// the lease); call [`Claim::release`] after persisting the result.
+#[derive(Debug)]
+pub struct Claim {
+    path: PathBuf,
+    id: String,
+    owner: String,
+    heartbeats: u64,
+}
+
+impl Claim {
+    /// Refresh the lease stamp. Returns `Ok(false)` when the claim was
+    /// taken over (the file now names another owner, or vanished) — the
+    /// caller must abandon the run without recording a result.
+    pub fn heartbeat(&mut self) -> Result<bool, String> {
+        self.heartbeat_at(now_secs())
+    }
+
+    /// [`heartbeat`](Self::heartbeat) with an explicit clock (tests).
+    pub fn heartbeat_at(&mut self, now: f64) -> Result<bool, String> {
+        match read_claim(&self.path) {
+            Ok(Some((owner, _))) if owner == self.owner => {}
+            Ok(_) => return Ok(false), // taken over or released
+            Err(e) => return Err(e),
+        }
+        self.heartbeats += 1;
+        write_claim(&self.path, &self.id, &self.owner, now, self.heartbeats)?;
+        Ok(true)
+    }
+
+    /// True while the claim file still names us as owner.
+    pub fn is_mine(&self) -> Result<bool, String> {
+        Ok(matches!(read_claim(&self.path)?, Some((owner, _)) if owner == self.owner))
+    }
+
+    /// Release after the result record is durably on disk. A claim that
+    /// was meanwhile taken over is left untouched (not ours to delete).
+    pub fn release(self) -> Result<(), String> {
+        if self.is_mine()? {
+            fs::remove_file(&self.path).map_err(|e| format!("{}: {e}", self.path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Advisory per-run-id claim files under one directory.
+#[derive(Debug, Clone)]
+pub struct ClaimStore {
+    dir: PathBuf,
+    owner: String,
+    lease_secs: f64,
+}
+
+impl ClaimStore {
+    /// `owner` must be unique per process (see [`default_owner`]).
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        owner: impl Into<String>,
+        lease_secs: f64,
+    ) -> Result<ClaimStore, String> {
+        if !(lease_secs.is_finite() && lease_secs > 0.0) {
+            return Err(format!("claim lease must be positive, got {lease_secs}"));
+        }
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        Ok(ClaimStore {
+            dir,
+            owner: owner.into(),
+            lease_secs,
+        })
+    }
+
+    fn claim_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.claim"))
+    }
+
+    /// Try to acquire the claim for `id` at the current wall clock.
+    pub fn try_acquire(&self, id: &str) -> Result<Acquire, String> {
+        self.try_acquire_at(id, now_secs())
+    }
+
+    /// [`try_acquire`](Self::try_acquire) with an explicit clock
+    /// (property tests drive arbitrary timestamp interleavings).
+    ///
+    /// Exactly-once: acquisition only ever succeeds through
+    /// create-exclusive, so however many processes race — including
+    /// through a stale takeover — at most one holds the claim.
+    pub fn try_acquire_at(&self, id: &str, now: f64) -> Result<Acquire, String> {
+        let path = self.claim_path(id);
+        // Bounded retries: each loop either returns or has removed a
+        // stale claim (making the next create-exclusive decisive).
+        for _attempt in 0..4 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let body = claim_json(id, &self.owner, now, 0);
+                    f.write_all(body.as_bytes())
+                        .and_then(|_| f.flush())
+                        .map_err(|e| format!("{}: {e}", path.display()))?;
+                    return Ok(Acquire::Acquired(Claim {
+                        path,
+                        id: id.to_string(),
+                        owner: self.owner.clone(),
+                        heartbeats: 0,
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if !self.cleanup_stale_at(id, now)? {
+                        return Ok(Acquire::Held);
+                    }
+                    // Stale claim removed — loop back to create-exclusive
+                    // (another racer may still beat us there; that's the
+                    // point).
+                }
+                Err(e) => return Err(format!("{}: {e}", path.display())),
+            }
+        }
+        Ok(Acquire::Held)
+    }
+
+    /// Remove the claim for `id` if (and only if) it is stale at `now`.
+    /// Returns true when a stale claim was removed by *this* call.
+    /// Idempotent: repeated calls (or concurrent callers — rename
+    /// arbitrates) return false without error once the claim is gone.
+    pub fn cleanup_stale_at(&self, id: &str, now: f64) -> Result<bool, String> {
+        let path = self.claim_path(id);
+        let stamp = match read_claim(&path) {
+            Ok(Some((_, stamp))) => stamp,
+            Ok(None) => return Ok(false), // already gone
+            // Unreadable content (e.g. a torn concurrent rewrite): fall
+            // back to the file mtime — a heartbeat rewrites the file, so
+            // a fresh mtime means a live owner.
+            Err(_) => match fs::metadata(&path).and_then(|m| m.modified()) {
+                Ok(mtime) => mtime
+                    .duration_since(SystemTime::UNIX_EPOCH)
+                    .map(|d| d.as_secs_f64())
+                    .unwrap_or(0.0),
+                Err(_) => return Ok(false), // vanished mid-check
+            },
+        };
+        if !claim_is_stale(now, stamp, self.lease_secs) {
+            return Ok(false);
+        }
+        // Atomic removal via rename: exactly one concurrent caller wins
+        // the rename; everyone else sees ENOENT and reports false.
+        let tomb = self.dir.join(format!("{id}.stale.{}", self.owner));
+        match fs::rename(&path, &tomb) {
+            Ok(()) => {
+                fs::remove_file(&tomb).ok();
+                Ok(true)
+            }
+            Err(_) => Ok(false),
+        }
+    }
+
+    /// Claim ids currently held (diagnostics / tests).
+    pub fn held_ids(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(entries) = fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                if let Some(name) = e.file_name().to_str() {
+                    if let Some(id) = name.strip_suffix(".claim") {
+                        out.push(id.to_string());
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+fn claim_json(id: &str, owner: &str, stamp: f64, heartbeats: u64) -> String {
+    Json::obj()
+        .set("id", id)
+        .set("owner", owner)
+        .set("stamp", stamp)
+        .set("heartbeats", heartbeats)
+        .to_string()
+}
+
+fn write_claim(
+    path: &Path,
+    id: &str,
+    owner: &str,
+    stamp: f64,
+    heartbeats: u64,
+) -> Result<(), String> {
+    fs::write(path, claim_json(id, owner, stamp, heartbeats))
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// `Ok(None)` = no claim file; `Err` = file exists but is unreadable.
+fn read_claim(path: &Path) -> Result<Option<(String, f64)>, String> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("{}: {e}", path.display())),
+    };
+    let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let owner = j
+        .get("owner")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{}: claim has no owner", path.display()))?
+        .to_string();
+    let stamp = j
+        .get("stamp")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{}: claim has no stamp", path.display()))?;
+    Ok(Some((owner, stamp)))
+}
+
+/// A process-unique owner token: pid + wall-clock nanos, mixed. Two
+/// processes on one machine cannot share a pid; two machines cannot
+/// share a boot-nanos draw at pid granularity in practice.
+pub fn default_owner() -> String {
+    let nanos = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+        .unwrap_or(0);
+    format!("{}-{:08x}", std::process::id(), nanos & 0xffff_ffff)
+}
+
+// ---------------------------------------------------------------------
+// Distributed runner
+// ---------------------------------------------------------------------
+
+/// Knobs of the claim/lease protocol.
+#[derive(Clone, Debug)]
+pub struct DistributedOptions {
+    /// Stale-claim takeover lease (seconds).
+    pub lease_secs: f64,
+    /// Heartbeat refresh interval (seconds); must be well under the
+    /// lease. 0 ⇒ lease/4.
+    pub heartbeat_secs: f64,
+    /// Poll interval while waiting on runs held by other processes.
+    pub poll_ms: u64,
+    /// Unique owner token; empty ⇒ [`default_owner`].
+    pub owner: String,
+}
+
+impl Default for DistributedOptions {
+    fn default() -> Self {
+        DistributedOptions {
+            lease_secs: 60.0,
+            heartbeat_secs: 0.0,
+            poll_ms: 200,
+            owner: String::new(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum SlotState {
+    /// Eligible for a claim attempt.
+    Pending,
+    /// Held by another process at last attempt.
+    Waiting,
+    /// Being executed by one of our workers.
+    Running,
+    /// Outcome available.
+    Done,
+}
+
+struct DSlot {
+    label: String,
+    cfg: ExperimentConfig,
+    id: String,
+    state: SlotState,
+    outcome: Option<RunOutcome>,
+}
+
+enum Pick {
+    Idx(usize),
+    AllDone,
+    Stalled,
+}
+
+/// Cooperatively execute a labelled config list against a shared output
+/// directory. Resume semantics are always on (completed runs are
+/// detected from `results.jsonl`, half-finished ones from their
+/// checkpoints), `results.jsonl` is opened append-only, and every run
+/// is guarded by a claim from [`ClaimStore`]. Returns when every run in
+/// the grid has an outcome — runs completed by *other* processes are
+/// loaded from disk and reported as skipped.
+///
+/// Determinism: each run's execution is the same `execute_one` the
+/// serial engine uses, so per-run series are bit-for-bit identical to a
+/// serial sweep regardless of how the grid was split.
+pub fn run_distributed(
+    runs: Vec<(String, ExperimentConfig)>,
+    opts: &SweepOptions,
+    dopts: &DistributedOptions,
+    cache: &ArtifactCache,
+) -> Result<SweepReport, String> {
+    let sweep_start = Instant::now();
+    let out = opts
+        .out
+        .clone()
+        .ok_or("distributed sweeps require an output directory (--out)")?;
+    if !(dopts.lease_secs.is_finite() && dopts.lease_secs > 0.0) {
+        return Err(format!(
+            "lease must be a positive number of seconds, got {}",
+            dopts.lease_secs
+        ));
+    }
+    let heartbeat = if dopts.heartbeat_secs > 0.0 {
+        Duration::from_secs_f64(dopts.heartbeat_secs.min(dopts.lease_secs / 2.0))
+    } else {
+        Duration::from_secs_f64((dopts.lease_secs / 4.0).max(0.01))
+    };
+    let poll = Duration::from_millis(dopts.poll_ms.max(10));
+    let owner = if dopts.owner.is_empty() {
+        default_owner()
+    } else {
+        dopts.owner.clone()
+    };
+
+    let series_dir = out.join("series");
+    let ckpt_dir = out.join("ckpt");
+    fs::create_dir_all(&series_dir).map_err(|e| format!("{}: {e}", series_dir.display()))?;
+    fs::create_dir_all(&ckpt_dir).map_err(|e| format!("{}: {e}", ckpt_dir.display()))?;
+    let claims = ClaimStore::new(out.join("claims"), owner, dopts.lease_secs)?;
+    let results_path = out.join("results.jsonl");
+    let sink: Mutex<BufWriter<File>> = Mutex::new(BufWriter::new(
+        OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&results_path)
+            .map_err(|e| format!("{}: {e}", results_path.display()))?,
+    ));
+
+    let slots: Vec<DSlot> = runs
+        .into_iter()
+        .map(|(label, cfg)| {
+            let id = config_hash(&cfg);
+            DSlot {
+                label,
+                cfg,
+                id,
+                state: SlotState::Pending,
+                outcome: None,
+            }
+        })
+        .collect();
+    super::runner::reject_duplicate_ids(slots.iter().map(|s| (&s.id, &s.label)))?;
+
+    let budget = if opts.workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        opts.workers
+    };
+    let run_workers = budget.min(slots.len()).max(1);
+    let node_workers = (budget / run_workers).max(1);
+
+    // Resume semantics are not optional here: a distributed sweep must
+    // never truncate shared state another process is appending to.
+    let mut opts = opts.clone();
+    opts.resume = true;
+
+    let state = Mutex::new(slots);
+    let crashed = AtomicBool::new(false);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let executed_here = Mutex::new(0usize);
+    let completed_index = Mutex::new(CompletedIndex::new(results_path.clone()));
+
+    std::thread::scope(|scope| {
+        for _ in 0..run_workers {
+            let state = &state;
+            let crashed = &crashed;
+            let errors = &errors;
+            let executed_here = &executed_here;
+            let completed_index = &completed_index;
+            let claims = &claims;
+            let opts = &opts;
+            let sink = &sink;
+            let series_dir = series_dir.as_path();
+            let ckpt_dir = ckpt_dir.as_path();
+            scope.spawn(move || loop {
+                if crashed.load(Ordering::SeqCst) || !errors.lock().unwrap().is_empty() {
+                    break;
+                }
+                // Pick the first claimable slot.
+                let pick = {
+                    let mut st = state.lock().unwrap();
+                    if st.iter().all(|s| s.state == SlotState::Done) {
+                        Pick::AllDone
+                    } else if let Some(i) =
+                        st.iter().position(|s| s.state == SlotState::Pending)
+                    {
+                        st[i].state = SlotState::Running;
+                        Pick::Idx(i)
+                    } else {
+                        Pick::Stalled
+                    }
+                };
+                match pick {
+                    Pick::AllDone => break,
+                    Pick::Stalled => {
+                        // Everything is Waiting (foreign claims) or
+                        // Running (our other workers). Refresh the
+                        // completed set from disk — a foreign holder may
+                        // have finished — then retry Waiting slots
+                        // (their claims may have gone stale).
+                        // Lock order is always index → state.
+                        let mut ix = completed_index.lock().unwrap();
+                        ix.refresh();
+                        let mut resolved = false;
+                        {
+                            let mut st = state.lock().unwrap();
+                            if st.iter().all(|s| s.state == SlotState::Done) {
+                                break;
+                            }
+                            for s in st.iter_mut() {
+                                if s.state != SlotState::Waiting {
+                                    continue;
+                                }
+                                if let Some(record) = ix.get(&s.id) {
+                                    match load_completed(
+                                        &s.label,
+                                        &s.cfg,
+                                        &s.id,
+                                        record,
+                                        Some(series_dir),
+                                    ) {
+                                        Ok(outcome) => {
+                                            s.outcome = Some(outcome);
+                                            s.state = SlotState::Done;
+                                            resolved = true;
+                                        }
+                                        Err(_) => {
+                                            // Record without a readable
+                                            // series (torn write): retry
+                                            // the claim next cycle.
+                                            s.state = SlotState::Pending;
+                                        }
+                                    }
+                                } else {
+                                    s.state = SlotState::Pending;
+                                }
+                            }
+                        }
+                        drop(ix);
+                        if !resolved {
+                            std::thread::sleep(poll);
+                        }
+                        continue;
+                    }
+                    Pick::Idx(i) => {
+                        let (label, cfg, id) = {
+                            let st = state.lock().unwrap();
+                            (st[i].label.clone(), st[i].cfg.clone(), st[i].id.clone())
+                        };
+                        let set = |state_ref: &Mutex<Vec<DSlot>>,
+                                   s: SlotState,
+                                   outcome: Option<RunOutcome>| {
+                            let mut st = state_ref.lock().unwrap();
+                            st[i].state = s;
+                            if outcome.is_some() {
+                                st[i].outcome = outcome;
+                            }
+                        };
+
+                        // Already completed (by anyone, any time)?
+                        let recorded = |ix_mutex: &Mutex<CompletedIndex>| -> Option<Json> {
+                            let mut ix = ix_mutex.lock().unwrap();
+                            ix.refresh();
+                            ix.get(&id).cloned()
+                        };
+                        if let Some(record) = recorded(completed_index) {
+                            match load_completed(&label, &cfg, &id, &record, Some(series_dir)) {
+                                Ok(outcome) => {
+                                    if opts.verbose {
+                                        println!("[sweep] skip {label} (already complete)");
+                                    }
+                                    set(state, SlotState::Done, Some(outcome));
+                                    continue;
+                                }
+                                Err(e) => {
+                                    if opts.verbose {
+                                        println!("[sweep] re-run {label}: {e}");
+                                    }
+                                }
+                            }
+                        }
+
+                        let mut claim = match claims.try_acquire(&id) {
+                            Ok(Acquire::Acquired(c)) => c,
+                            Ok(Acquire::Held) => {
+                                set(state, SlotState::Waiting, None);
+                                continue;
+                            }
+                            Err(e) => {
+                                errors.lock().unwrap().push(format!("{label}: {e}"));
+                                break;
+                            }
+                        };
+                        // Re-check now that the claim is held: a previous
+                        // holder persists *before* releasing, so a record
+                        // appearing between the pre-claim check and the
+                        // acquisition means the run already finished —
+                        // step aside instead of re-executing it (closes
+                        // the check-then-act window that would otherwise
+                        // double-execute and double-record the run).
+                        if let Some(record) = recorded(completed_index) {
+                            if let Ok(outcome) =
+                                load_completed(&label, &cfg, &id, &record, Some(series_dir))
+                            {
+                                if opts.verbose {
+                                    println!("[sweep] skip {label} (completed during claim)");
+                                }
+                                claim.release().ok();
+                                set(state, SlotState::Done, Some(outcome));
+                                continue;
+                            }
+                            // Unreadable series: keep the claim, re-run.
+                        }
+                        if let Some(hook) = &opts.on_event {
+                            hook(&RunEvent::Started {
+                                id: id.clone(),
+                                label: label.clone(),
+                            });
+                        }
+
+                        // Heartbeat from the per-iteration tick; on a
+                        // lost claim the run is abandoned result-free.
+                        let mut claim_lost = false;
+                        let mut last_hb = Instant::now();
+                        let mut tick = |_t: u64| -> Result<bool, String> {
+                            if last_hb.elapsed() >= heartbeat {
+                                last_hb = Instant::now();
+                                if !claim.heartbeat()? {
+                                    claim_lost = true;
+                                    return Ok(false);
+                                }
+                            }
+                            Ok(true)
+                        };
+                        let res = execute_one(
+                            &label,
+                            &cfg,
+                            &id,
+                            cache,
+                            node_workers,
+                            opts,
+                            Some(ckpt_dir),
+                            Some(&mut tick),
+                        );
+                        match res {
+                            Err(e) => {
+                                // Deterministic failure: release so other
+                                // processes don't burn a lease waiting.
+                                claim.release().ok();
+                                errors.lock().unwrap().push(format!("{label}: {e}"));
+                                break;
+                            }
+                            Ok(outcome) if !outcome.completed => {
+                                if claim_lost {
+                                    // Someone took the run over; let the
+                                    // Waiting machinery track them.
+                                    set(state, SlotState::Waiting, None);
+                                    continue;
+                                }
+                                // Fault injection: simulate a crash —
+                                // leave the claim and checkpoints in
+                                // place and stop the whole process.
+                                crashed.store(true, Ordering::SeqCst);
+                                errors.lock().unwrap().push(format!(
+                                    "{label}: aborted by fault injection (claims and \
+                                     checkpoints left for takeover)"
+                                ));
+                                break;
+                            }
+                            Ok(outcome) => {
+                                // Re-verify ownership at the last moment:
+                                // persisting after a takeover would
+                                // double-record the run.
+                                match claim.is_mine() {
+                                    Ok(true) => {}
+                                    Ok(false) => {
+                                        set(state, SlotState::Waiting, None);
+                                        continue;
+                                    }
+                                    Err(e) => {
+                                        errors.lock().unwrap().push(format!("{label}: {e}"));
+                                        break;
+                                    }
+                                }
+                                if let Err(e) = persist(&outcome, Some(series_dir), Some(sink)) {
+                                    errors.lock().unwrap().push(format!("{label}: {e}"));
+                                    break;
+                                }
+                                if let Err(e) = claim.release() {
+                                    errors.lock().unwrap().push(format!("{label}: {e}"));
+                                    break;
+                                }
+                                if opts.verbose {
+                                    let last = outcome.series.records.last();
+                                    let state_str = if outcome.stopped.is_some() {
+                                        "early-stop"
+                                    } else {
+                                        "done"
+                                    };
+                                    println!(
+                                        "[sweep] {state_str} {label} ({} ms, loss={:.5}, bits={})",
+                                        outcome.wall_ms,
+                                        last.map(|r| r.loss).unwrap_or(f64::NAN),
+                                        last.map(|r| r.bits).unwrap_or(0),
+                                    );
+                                }
+                                if let Some(hook) = &opts.on_event {
+                                    hook(&RunEvent::Finished {
+                                        id: id.clone(),
+                                        label: label.clone(),
+                                        completed: true,
+                                        stopped: outcome.stopped.is_some(),
+                                    });
+                                }
+                                *executed_here.lock().unwrap() += 1;
+                                set(state, SlotState::Done, Some(outcome));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    sink.lock().unwrap().flush().map_err(|e| e.to_string())?;
+
+    let outcomes: Vec<RunOutcome> = state
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.outcome.expect("all slots done without error"))
+        .collect();
+    let executed = executed_here.into_inner().unwrap();
+    let skipped = outcomes.iter().filter(|o| o.skipped).count();
+    Ok(SweepReport {
+        outcomes,
+        executed,
+        skipped,
+        wall_ms: sweep_start.elapsed().as_millis() as u64,
+        cache_summary: cache.summary(),
+    })
+}
+
+/// Incremental index over the shared `results.jsonl`: the file is
+/// append-only, so each refresh reads only the bytes past the last
+/// consumed offset instead of re-parsing the whole file on every
+/// scheduling cycle (which would be O(grid² · record) on the shared
+/// filesystem as a sweep drains). A torn tail line (a concurrent
+/// appender mid-write) is left unconsumed and picked up whole on the
+/// next refresh; later records for an id win, matching append order.
+struct CompletedIndex {
+    path: PathBuf,
+    offset: u64,
+    map: std::collections::HashMap<String, Json>,
+}
+
+impl CompletedIndex {
+    fn new(path: PathBuf) -> CompletedIndex {
+        CompletedIndex {
+            path,
+            offset: 0,
+            map: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Pull any newly appended whole lines into the index.
+    fn refresh(&mut self) {
+        use std::io::{Read, Seek, SeekFrom};
+        let Ok(mut f) = File::open(&self.path) else {
+            return;
+        };
+        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+        if len < self.offset {
+            // Truncated/replaced out from under us: start over.
+            self.offset = 0;
+            self.map.clear();
+        }
+        if len == self.offset || f.seek(SeekFrom::Start(self.offset)).is_err() {
+            return;
+        }
+        let mut buf = Vec::with_capacity((len - self.offset) as usize);
+        if f.take(len - self.offset).read_to_end(&mut buf).is_err() {
+            return;
+        }
+        // Consume only whole lines; a partial tail stays for next time.
+        let Some(consumed) = buf.iter().rposition(|&b| b == b'\n').map(|p| p + 1) else {
+            return;
+        };
+        let text = String::from_utf8_lossy(&buf[..consumed]);
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            if let Ok(j) = Json::parse(line) {
+                if let Some(id) = j.get("id").and_then(Json::as_str) {
+                    self.map.insert(id.to_string(), j.clone());
+                }
+            }
+        }
+        self.offset += consumed as u64;
+    }
+
+    fn get(&self, id: &str) -> Option<&Json> {
+        self.map.get(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_claims(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sparq-claims-{tag}-{}-{:x}",
+            std::process::id(),
+            now_secs().to_bits()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let dir = tmp_claims("rt");
+        let store = ClaimStore::new(&dir, "a", 30.0).unwrap();
+        let claim = match store.try_acquire("run1").unwrap() {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => panic!("fresh store must grant the claim"),
+        };
+        assert_eq!(store.held_ids(), vec!["run1".to_string()]);
+        // Second claimant is refused while the lease is fresh.
+        let other = ClaimStore::new(&dir, "b", 30.0).unwrap();
+        assert!(matches!(other.try_acquire("run1").unwrap(), Acquire::Held));
+        claim.release().unwrap();
+        assert!(store.held_ids().is_empty());
+        // Released claim is acquirable again.
+        assert!(matches!(
+            other.try_acquire("run1").unwrap(),
+            Acquire::Acquired(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_claim_is_taken_over_and_old_owner_detects_loss() {
+        let dir = tmp_claims("stale");
+        let store_a = ClaimStore::new(&dir, "a", 5.0).unwrap();
+        let t0 = 1000.0;
+        let mut claim_a = match store_a.try_acquire_at("run1", t0).unwrap() {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => panic!("must acquire"),
+        };
+        let store_b = ClaimStore::new(&dir, "b", 5.0).unwrap();
+        // Before the lease expires: held.
+        assert!(matches!(
+            store_b.try_acquire_at("run1", t0 + 4.9).unwrap(),
+            Acquire::Held
+        ));
+        // At/after the lease: taken over.
+        let claim_b = match store_b.try_acquire_at("run1", t0 + 5.0).unwrap() {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => panic!("stale claim must be taken over"),
+        };
+        // The original owner's next heartbeat reports the loss.
+        assert!(!claim_a.heartbeat_at(t0 + 5.1).unwrap());
+        assert!(!claim_a.is_mine().unwrap());
+        assert!(claim_b.is_mine().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn heartbeat_extends_the_lease() {
+        let dir = tmp_claims("hb");
+        let store_a = ClaimStore::new(&dir, "a", 5.0).unwrap();
+        let t0 = 50.0;
+        let mut claim = match store_a.try_acquire_at("r", t0).unwrap() {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => panic!(),
+        };
+        assert!(claim.heartbeat_at(t0 + 4.0).unwrap());
+        let store_b = ClaimStore::new(&dir, "b", 5.0).unwrap();
+        // 5s past t0 but only 1s past the heartbeat: not stale.
+        assert!(matches!(
+            store_b.try_acquire_at("r", t0 + 5.0).unwrap(),
+            Acquire::Held
+        ));
+        // 5s past the heartbeat: stale.
+        assert!(matches!(
+            store_b.try_acquire_at("r", t0 + 9.0).unwrap(),
+            Acquire::Acquired(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cleanup_stale_is_idempotent() {
+        let dir = tmp_claims("idem");
+        let store = ClaimStore::new(&dir, "a", 2.0).unwrap();
+        let _claim = store.try_acquire_at("r", 0.0).unwrap();
+        let other = ClaimStore::new(&dir, "b", 2.0).unwrap();
+        assert!(other.cleanup_stale_at("r", 10.0).unwrap());
+        assert!(!other.cleanup_stale_at("r", 10.0).unwrap());
+        assert!(!other.cleanup_stale_at("r", 10.0).unwrap());
+        assert!(matches!(
+            other.try_acquire_at("r", 10.0).unwrap(),
+            Acquire::Acquired(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unreadable_claim_with_fresh_mtime_is_not_stolen() {
+        let dir = tmp_claims("torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Simulate a torn write: garbage content, mtime = now.
+        std::fs::write(dir.join("r.claim"), b"{torn").unwrap();
+        let store = ClaimStore::new(&dir, "b", 3600.0).unwrap();
+        assert!(matches!(store.try_acquire("r").unwrap(), Acquire::Held));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lease_must_be_positive() {
+        assert!(ClaimStore::new(std::env::temp_dir(), "a", 0.0).is_err());
+        assert!(ClaimStore::new(std::env::temp_dir(), "a", -1.0).is_err());
+        assert!(ClaimStore::new(std::env::temp_dir(), "a", f64::NAN).is_err());
+    }
+}

@@ -42,11 +42,37 @@
 //! ablation, robustness}`) are now thin declarative specs over this
 //! engine. EXPERIMENTS.md §Sweep documents the spec format, resume
 //! semantics, and the wall-clock measurement protocol.
+//!
+//! Two layers scale the engine beyond one process (ISSUE 4):
+//!
+//! * [`distributed`] — N `sparq sweep --distributed` processes (or
+//!   machines on a shared filesystem) split one grid via advisory
+//!   per-run-id claim files: create-exclusive acquisition, heartbeat
+//!   lease refresh, stale-claim takeover after a configurable lease,
+//!   crash-safe because completed runs are detected from
+//!   `results.jsonl` and half-finished ones resume from checkpoints
+//!   exactly as `--resume` does. Per-run series remain bit-for-bit
+//!   identical to a serial sweep however the grid is split.
+//! * **Adaptive budgets** — a spec-declared `target_error` /
+//!   `target_loss` early-stops each run at the first evaluation record
+//!   reaching the target; the truncation is recorded in the result
+//!   record, the truncated series is a bit-exact prefix of the
+//!   untruncated run, and the freed worker immediately picks up the
+//!   next pending run.
+//!
+//! [`report`] renders the Fig-1 savings tables and CSV panels from a
+//! sweep output directory without re-running anything
+//! (`sparq sweep report`).
 
 pub mod cache;
+pub mod distributed;
+pub mod report;
 pub mod runner;
 pub mod spec;
 
 pub use cache::ArtifactCache;
-pub use runner::{run_configs, run_spec, RunOutcome, SweepOptions, SweepReport};
+pub use distributed::{run_distributed, Acquire, Claim, ClaimStore, DistributedOptions};
+pub use runner::{
+    run_configs, run_spec, EarlyStop, EventHook, RunEvent, RunOutcome, SweepOptions, SweepReport,
+};
 pub use spec::{config_hash, SweepSpec};

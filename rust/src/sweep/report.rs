@@ -1,0 +1,326 @@
+//! `sparq sweep report`: Fig-1 savings tables and CSV panels from a
+//! sweep output directory, without re-running anything.
+//!
+//! Reads `<out>/results.jsonl` + `<out>/series/<id>.jsonl` (the
+//! artifacts every sweep — serial or distributed — streams) and emits:
+//!
+//! * the Remark-4 savings table: per run, the communication rounds and
+//!   cumulative bits at which it first reaches a target
+//!   (`first_reaching_error` / `first_reaching_loss` applied offline),
+//!   the savings factor relative to the first run that reaches it, the
+//!   transmit rate, and any early-stop truncation;
+//! * the four Figure-1 CSV panels (test error vs rounds, test error vs
+//!   bits, loss vs iteration, loss vs bits) in long format, one row per
+//!   evaluation record per run.
+//!
+//! All float cells use Rust's shortest-round-trip `Display`, so the
+//! PR-3 non-finite encodings survive verbatim: a diverging run's `inf`
+//! loss reads from the series as `f64::INFINITY` and is re-emitted as
+//! the string "inf" (NaN as "NaN"). A committed fixture pins the table
+//! and panels byte-for-byte (`rust/tests/sweep_report_golden.rs`).
+//!
+//! Merged result sets are well-defined: records are listed in file
+//! order and a duplicated run id (possible only after a torn-series
+//! re-run) resolves to the **last** record, matching the runner's
+//! append-order semantics.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::metrics::{RoundRecord, Series};
+use crate::util::json::Json;
+
+use super::runner::{parse_truncated, EarlyStop};
+
+/// Which record field a target applies to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TargetMetric {
+    TestError,
+    Loss,
+}
+
+impl TargetMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TargetMetric::TestError => "test_error",
+            TargetMetric::Loss => "loss",
+        }
+    }
+
+    pub fn value(&self, r: &RoundRecord) -> f64 {
+        match self {
+            TargetMetric::TestError => r.test_error,
+            TargetMetric::Loss => r.loss,
+        }
+    }
+}
+
+/// One completed run loaded back from a sweep output directory.
+#[derive(Clone, Debug)]
+pub struct ReportRun {
+    pub id: String,
+    pub name: String,
+    pub label: String,
+    pub algo: String,
+    pub fired: u64,
+    pub checks: u64,
+    /// Early-stop truncation recorded by the runner, if any.
+    pub truncated: Option<EarlyStop>,
+    pub series: Series,
+}
+
+impl ReportRun {
+    /// First record reaching `metric <= target` (NaN never qualifies).
+    pub fn first_reaching(&self, metric: TargetMetric, target: f64) -> Option<&RoundRecord> {
+        self.series
+            .records
+            .iter()
+            .find(|r| metric.value(r) <= target)
+    }
+}
+
+/// Load every completed run from `<out>` (see module docs for ordering
+/// and duplicate-id semantics).
+pub fn load(out: &Path) -> Result<Vec<ReportRun>, String> {
+    let results_path = out.join("results.jsonl");
+    let text = fs::read_to_string(&results_path)
+        .map_err(|e| format!("{}: {e}", results_path.display()))?;
+    let series_dir = out.join("series");
+    let mut runs: Vec<ReportRun> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Tolerate torn lines exactly like the distributed runner's
+        // completed-index does (a killed appender or non-atomic
+        // O_APPEND on a network filesystem can leave one behind, and
+        // nothing ever compacts the append-only log) — warn and skip
+        // rather than refusing to report the rest of the sweep.
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!(
+                    "[report] ignoring unparsable record {}:{}: {e}",
+                    results_path.display(),
+                    lineno + 1
+                );
+                continue;
+            }
+        };
+        let Some(id) = j.get("id").and_then(Json::as_str).map(str::to_string) else {
+            eprintln!(
+                "[report] ignoring record without an id at {}:{}",
+                results_path.display(),
+                lineno + 1
+            );
+            continue;
+        };
+        let s = |k: &str, dflt: &str| -> String {
+            j.get(k).and_then(Json::as_str).unwrap_or(dflt).to_string()
+        };
+        let u = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let label = s("label", &id);
+        let series_label = s("series_label", &label);
+        let spath = series_dir.join(format!("{id}.jsonl"));
+        let series = Series::read_jsonl(&spath, series_label)
+            .map_err(|e| format!("{}: {e}", spath.display()))?;
+        let run = ReportRun {
+            name: s("name", &label),
+            algo: s("algo", ""),
+            fired: u("fired"),
+            checks: u("checks"),
+            truncated: parse_truncated(&j),
+            series,
+            label,
+            id: id.clone(),
+        };
+        match index.get(&id) {
+            Some(&i) => runs[i] = run, // duplicate id: last record wins
+            None => {
+                index.insert(id, runs.len());
+                runs.push(run);
+            }
+        }
+    }
+    Ok(runs)
+}
+
+/// Render the Remark-4 savings table (see module docs). The savings
+/// factor is each run's bits-to-target over the *first listed run that
+/// reaches the target* — list SPARQ first (as the fig1 specs do) and
+/// the column reads "how many times more bits the baseline spent".
+pub fn savings_table(runs: &[ReportRun], metric: TargetMetric, target: f64) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# sweep report: {} runs, target {} <= {}",
+        runs.len(),
+        metric.name(),
+        target
+    );
+    let _ = writeln!(
+        out,
+        "{:<38} {:>12} {:>16} {:>12} {:>9}",
+        "run", "comm rounds", "bits to target", "savings", "tx rate"
+    );
+    let reference_bits = runs
+        .iter()
+        .find_map(|run| run.first_reaching(metric, target).map(|r| r.bits));
+    for run in runs {
+        let tx = format!("{:.1}%", 100.0 * run.fired as f64 / run.checks.max(1) as f64);
+        let mut line = match run.first_reaching(metric, target) {
+            Some(r) => {
+                let factor = match reference_bits {
+                    Some(rb) if rb > 0 => format!("{:.1}x", r.bits as f64 / rb as f64),
+                    _ => "-".to_string(),
+                };
+                format!(
+                    "{:<38} {:>12} {:>16} {:>12} {:>9}",
+                    run.label, r.comm_rounds, r.bits, factor, tx
+                )
+            }
+            None => format!(
+                "{:<38} {:>12} {:>16} {:>12} {:>9}",
+                run.label, "-", "(not reached)", "-", tx
+            ),
+        };
+        if let Some(stop) = &run.truncated {
+            let _ = write!(line, "  early-stop t={} ({})", stop.t, stop.reason);
+        }
+        let _ = writeln!(out, "{line}");
+    }
+    out
+}
+
+/// RFC-4180 quoting for the CSV label column. Labels can legitimately
+/// contain commas — an axis over `topology_schedule` yields labels like
+/// "topology_schedule=switch:ring,torus:500" — which would otherwise
+/// silently mis-column every row for that run.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// The four Fig-1 CSV panels in long format, as (file name, content).
+/// Float cells use `Display` (shortest round-trip; "inf"/"NaN" for
+/// non-finite values — the same encodings the JSONL stores).
+pub fn panels_csv(runs: &[ReportRun]) -> Vec<(&'static str, String)> {
+    let mut a = String::from("label,t,comm_rounds,test_error\n");
+    let mut b = String::from("label,t,bits,test_error\n");
+    let mut c = String::from("label,t,loss\n");
+    let mut d = String::from("label,t,bits,loss\n");
+    for run in runs {
+        let label = csv_field(&run.label);
+        for r in &run.series.records {
+            let _ = writeln!(a, "{label},{},{},{}", r.t, r.comm_rounds, r.test_error);
+            let _ = writeln!(b, "{label},{},{},{}", r.t, r.bits, r.test_error);
+            let _ = writeln!(c, "{label},{},{}", r.t, r.loss);
+            let _ = writeln!(d, "{label},{},{},{}", r.t, r.bits, r.loss);
+        }
+    }
+    vec![
+        ("fig1a.csv", a),
+        ("fig1b.csv", b),
+        ("fig1c.csv", c),
+        ("fig1d.csv", d),
+    ]
+}
+
+/// Write the panels under `dir`, returning the written paths.
+pub fn write_panels(runs: &[ReportRun], dir: &Path) -> Result<Vec<PathBuf>, String> {
+    fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut paths = Vec::new();
+    for (name, content) in panels_csv(runs) {
+        let path = dir.join(name);
+        fs::write(&path, content).map_err(|e| format!("{}: {e}", path.display()))?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(label: &str, pts: &[(u64, f64, f64, u64, u64)]) -> ReportRun {
+        let mut series = Series::new(label);
+        for &(t, err, loss, bits, rounds) in pts {
+            series.push(RoundRecord {
+                t,
+                loss,
+                test_error: err,
+                opt_gap: f64::NAN,
+                bits,
+                comm_rounds: rounds,
+                consensus: 0.0,
+                fired: 0,
+            });
+        }
+        ReportRun {
+            id: label.to_string(),
+            name: label.to_string(),
+            label: label.to_string(),
+            algo: "sparq".into(),
+            fired: 1,
+            checks: 4,
+            truncated: None,
+            series,
+        }
+    }
+
+    #[test]
+    fn savings_factor_is_relative_to_first_reaching_run() {
+        let runs = vec![
+            run("a", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 100, 5)]),
+            run("b", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 2500, 10)]),
+        ];
+        let table = savings_table(&runs, TargetMetric::TestError, 0.1);
+        assert!(table.contains("1.0x"), "{table}");
+        assert!(table.contains("25.0x"), "{table}");
+        assert!(table.contains("25.0%"), "tx rate: {table}");
+    }
+
+    #[test]
+    fn unreached_target_renders_placeholder() {
+        let runs = vec![run("never", &[(0, 0.9, 2.0, 0, 0)])];
+        let table = savings_table(&runs, TargetMetric::TestError, 0.1);
+        assert!(table.contains("(not reached)"), "{table}");
+        // NaN metrics never qualify as reaching
+        let runs = vec![run("nan", &[(0, f64::NAN, f64::NAN, 0, 0)])];
+        let table = savings_table(&runs, TargetMetric::Loss, 10.0);
+        assert!(table.contains("(not reached)"), "{table}");
+    }
+
+    #[test]
+    fn labels_with_commas_are_csv_quoted() {
+        let runs = vec![run(
+            "topology_schedule=switch:ring,torus:500",
+            &[(0, 0.9, 2.0, 0, 0)],
+        )];
+        let panels = panels_csv(&runs);
+        let c = &panels.iter().find(|(n, _)| *n == "fig1c.csv").unwrap().1;
+        assert!(
+            c.contains("\"topology_schedule=switch:ring,torus:500\",0,2"),
+            "{c}"
+        );
+        // plain labels stay unquoted; embedded quotes double
+        assert_eq!(csv_field("plain label"), "plain label");
+        assert_eq!(csv_field("a\"b"), "\"a\"\"b\"");
+    }
+
+    #[test]
+    fn panels_encode_nonfinite_as_strings() {
+        let runs = vec![run("x", &[(0, f64::NAN, f64::INFINITY, 0, 0)])];
+        let panels = panels_csv(&runs);
+        let c = &panels.iter().find(|(n, _)| *n == "fig1c.csv").unwrap().1;
+        assert!(c.contains("x,0,inf"), "{c}");
+        let a = &panels.iter().find(|(n, _)| *n == "fig1a.csv").unwrap().1;
+        assert!(a.contains("x,0,0,NaN"), "{a}");
+    }
+}

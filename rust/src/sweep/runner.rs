@@ -1,7 +1,9 @@
 //! Concurrent sweep execution: run-level parallelism over the engine's
-//! per-node parallelism, JSONL result streaming, and resume.
+//! per-node parallelism, JSONL result streaming, resume, and adaptive
+//! early-stop budgets.
 //!
-//! Execution contract (pinned by `rust/tests/sweep_system.rs`):
+//! Execution contract (pinned by `rust/tests/sweep_system.rs` and
+//! `rust/tests/sweep_distributed.rs`):
 //!
 //! * **Determinism.** Per-run results are bit-for-bit identical for any
 //!   worker budget: each run owns its RNG streams and per-run node
@@ -16,19 +18,30 @@
 //!   Incomplete long runs resume from their latest
 //!   `coordinator::checkpoint` snapshot (`<out>/ckpt/<id>.ckpt` + the
 //!   partial series) bit-for-bit.
+//! * **Early stop (adaptive budgets).** With a `target_error` /
+//!   `target_loss` set, a run halts at the first *evaluation record*
+//!   that reaches the target (the `first_reaching_*` projection applied
+//!   online). Evaluation cadence is part of the config, so the stop
+//!   round is identical for every worker budget and for serial vs
+//!   distributed execution, and the truncated series is a **bit-exact
+//!   prefix** of the untruncated run's series. The truncation is
+//!   recorded in the JSONL result (`"truncated": {t, reason, target}`)
+//!   so resumed/merged result sets stay well-defined. The worker that
+//!   ran the truncated run immediately picks up the next pending run
+//!   (the pool hands out slots dynamically).
 
 use std::collections::HashMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::comm::Bus;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{checkpoint, Checkpoint, DecentralizedAlgo};
 use crate::experiments::builder::{build_algo_with, build_problem_with};
-use crate::metrics::{RoundRecord, Series};
+use crate::metrics::{float_json, json_f64_lossy, RoundRecord, Series};
 use crate::problems::GradientSource;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -37,8 +50,33 @@ use crate::util::Rng;
 use super::cache::ArtifactCache;
 use super::spec::{config_hash, SweepSpec};
 
-/// Options for one sweep invocation.
+/// A scheduling event emitted through [`SweepOptions::on_event`] —
+/// test/observability hook for run lifecycle ordering (e.g. "a pending
+/// run starts before the longest run finishes once a worker frees up").
 #[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// A run began executing (not emitted for resume-skipped runs).
+    Started { id: String, label: String },
+    /// A run finished executing. `completed` is false for fault-aborted
+    /// or abandoned runs; `stopped` is true when an early-stop target
+    /// truncated it.
+    Finished {
+        id: String,
+        label: String,
+        completed: bool,
+        stopped: bool,
+    },
+}
+
+/// Lifecycle-event callback (called from run worker threads).
+pub type EventHook = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+
+/// Per-iteration callback for [`execute_one`]: `Ok(false)` abandons the
+/// run (distributed mode returns it when the claim heartbeat fails).
+pub(crate) type Tick<'a> = &'a mut dyn FnMut(u64) -> Result<bool, String>;
+
+/// Options for one sweep invocation.
+#[derive(Clone)]
 pub struct SweepOptions {
     /// Total worker budget shared by run-level and node-level
     /// parallelism (0 ⇒ available CPUs): min(budget, pending runs)
@@ -60,6 +98,14 @@ pub struct SweepOptions {
     /// Fault-injection hook for the resume tests: abandon each run
     /// (without recording a result) once it reaches this iteration.
     pub fault_abort_at: Option<u64>,
+    /// Early-stop a run at the first evaluation record with
+    /// `test_error <= target_error` (adaptive budget; see module docs).
+    pub target_error: Option<f64>,
+    /// Early-stop a run at the first evaluation record with
+    /// `loss <= target_loss`.
+    pub target_loss: Option<f64>,
+    /// Run lifecycle observer (scheduling-order tests, progress UIs).
+    pub on_event: Option<EventHook>,
 }
 
 impl Default for SweepOptions {
@@ -71,8 +117,40 @@ impl Default for SweepOptions {
             checkpoint_every: 0,
             verbose: false,
             fault_abort_at: None,
+            target_error: None,
+            target_loss: None,
+            on_event: None,
         }
     }
+}
+
+impl std::fmt::Debug for SweepOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SweepOptions")
+            .field("workers", &self.workers)
+            .field("out", &self.out)
+            .field("resume", &self.resume)
+            .field("checkpoint_every", &self.checkpoint_every)
+            .field("verbose", &self.verbose)
+            .field("fault_abort_at", &self.fault_abort_at)
+            .field("target_error", &self.target_error)
+            .field("target_loss", &self.target_loss)
+            .field("on_event", &self.on_event.as_ref().map(|_| "<hook>"))
+            .finish()
+    }
+}
+
+/// How an early-stopped run was truncated (recorded in the JSONL
+/// result as `"truncated": {"t": ..., "reason": ..., "target": ...}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EarlyStop {
+    /// Iteration of the evaluation record that reached the target (the
+    /// run's series ends exactly at this record).
+    pub t: u64,
+    /// "target_error" or "target_loss".
+    pub reason: String,
+    /// The target value that was reached.
+    pub target: f64,
 }
 
 /// One run's result.
@@ -90,8 +168,10 @@ pub struct RunOutcome {
     pub wall_ms: u64,
     /// True when the run was satisfied from a stored result (resume).
     pub skipped: bool,
-    /// False only for fault-aborted runs (no result recorded).
+    /// False only for fault-aborted/abandoned runs (no result recorded).
     pub completed: bool,
+    /// Present when an early-stop target truncated the run.
+    pub stopped: Option<EarlyStop>,
 }
 
 /// Aggregate result of a sweep invocation (outcomes in input order).
@@ -112,11 +192,12 @@ impl SweepReport {
     }
 }
 
-/// Expand a spec and run it (fresh artifact cache).
+/// Expand a spec and run it (fresh artifact cache). Spec-declared
+/// early-stop targets apply unless the options already set one.
 pub fn run_spec(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepReport, String> {
     let runs = spec.expand()?;
     let cache = ArtifactCache::new();
-    run_configs(runs, opts, &cache)
+    run_configs(runs, &spec.apply_targets(opts), &cache)
 }
 
 struct Slot {
@@ -157,11 +238,25 @@ pub fn run_configs(
         if opts.resume && results_path.exists() {
             let text = fs::read_to_string(&results_path)
                 .map_err(|e| format!("{}: {e}", results_path.display()))?;
-            for line in text.lines().filter(|l| !l.trim().is_empty()) {
-                let j = Json::parse(line)
-                    .map_err(|e| format!("{}: {e}", results_path.display()))?;
-                if let Some(id) = j.get("id").and_then(Json::as_str) {
-                    completed.insert(id.to_string(), j.clone());
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // A torn line (process killed mid-append; non-atomic
+                // O_APPEND on a network filesystem) must not wedge the
+                // whole directory: the affected run simply re-runs and
+                // its fresh record supersedes the damage (last wins).
+                match Json::parse(line) {
+                    Ok(j) => {
+                        if let Some(id) = j.get("id").and_then(Json::as_str) {
+                            completed.insert(id.to_string(), j.clone());
+                        }
+                    }
+                    Err(e) => eprintln!(
+                        "[sweep] ignoring unparsable record {}:{}: {e}",
+                        results_path.display(),
+                        lineno + 1
+                    ),
                 }
             }
         }
@@ -190,21 +285,7 @@ pub fn run_configs(
         })
         .collect();
 
-    // Two runs with the same id are the same semantic config (the hash
-    // normalizes only name/workers) — they would produce identical
-    // results while racing on the same series file, so reject the set.
-    {
-        let mut seen: HashMap<&str, &str> = HashMap::new();
-        for s in &slots {
-            if let Some(prev) = seen.insert(&s.id, &s.label) {
-                return Err(format!(
-                    "runs {prev:?} and {:?} are the same config (id {}) — \
-                     deduplicate the grid",
-                    s.label, s.id
-                ));
-            }
-        }
-    }
+    reject_duplicate_ids(slots.iter().map(|s| (&s.id, &s.label)))?;
 
     let pending = slots
         .iter()
@@ -221,7 +302,7 @@ pub fn run_configs(
     ThreadPool::new(run_workers).for_each_mut(&mut slots, |_, slot| {
         // Resume: a stored record + series satisfies the run outright.
         if let Some(record) = completed.get(&slot.id) {
-            match load_completed(slot, record, series_dir) {
+            match load_completed(&slot.label, &slot.cfg, &slot.id, record, series_dir) {
                 Ok(outcome) => {
                     if opts.verbose {
                         println!("[sweep] skip {} (resume: already complete)", slot.label);
@@ -237,7 +318,23 @@ pub fn run_configs(
                 }
             }
         }
-        match execute_one(slot, cache, node_workers, opts, ckpt_dir) {
+        if let Some(hook) = &opts.on_event {
+            hook(&RunEvent::Started {
+                id: slot.id.clone(),
+                label: slot.label.clone(),
+            });
+        }
+        let res = execute_one(
+            &slot.label,
+            &slot.cfg,
+            &slot.id,
+            cache,
+            node_workers,
+            opts,
+            ckpt_dir,
+            None,
+        );
+        match res {
             Ok(outcome) => {
                 if outcome.completed {
                     if let Err(e) = persist(&outcome, series_dir, sink_ref) {
@@ -246,7 +343,13 @@ pub fn run_configs(
                     }
                 }
                 if opts.verbose {
-                    let state = if outcome.completed { "done" } else { "paused" };
+                    let state = if !outcome.completed {
+                        "paused"
+                    } else if outcome.stopped.is_some() {
+                        "early-stop"
+                    } else {
+                        "done"
+                    };
                     let last = outcome.series.records.last();
                     println!(
                         "[sweep] {state} {} ({} ms, loss={:.5}, bits={})",
@@ -255,6 +358,14 @@ pub fn run_configs(
                         last.map(|r| r.loss).unwrap_or(f64::NAN),
                         last.map(|r| r.bits).unwrap_or(0),
                     );
+                }
+                if let Some(hook) = &opts.on_event {
+                    hook(&RunEvent::Finished {
+                        id: slot.id.clone(),
+                        label: slot.label.clone(),
+                        completed: outcome.completed,
+                        stopped: outcome.stopped.is_some(),
+                    });
                 }
                 slot.outcome = Some(outcome);
             }
@@ -285,38 +396,82 @@ pub fn run_configs(
     })
 }
 
+/// Reject run sets where two entries share a config id: the hash
+/// normalizes only name/workers, so such runs are the same semantic
+/// config — they would produce identical results while racing on the
+/// same series file. Shared by the serial and distributed runners.
+pub(crate) fn reject_duplicate_ids<I, A, B>(slots: I) -> Result<(), String>
+where
+    I: Iterator<Item = (A, B)>,
+    A: AsRef<str>,
+    B: AsRef<str>,
+{
+    let mut seen: HashMap<String, String> = HashMap::new();
+    for (id, label) in slots {
+        let (id, label) = (id.as_ref(), label.as_ref());
+        if let Some(prev) = seen.insert(id.to_string(), label.to_string()) {
+            return Err(format!(
+                "runs {prev:?} and {label:?} are the same config (id {id}) — \
+                 deduplicate the grid"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a result record's `"truncated"` object back into an
+/// [`EarlyStop`], if present.
+pub(crate) fn parse_truncated(record: &Json) -> Option<EarlyStop> {
+    record.get("truncated").map(|tj| EarlyStop {
+        t: tj.get("t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        reason: tj
+            .get("reason")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        target: tj.get("target").map(json_f64_lossy).unwrap_or(f64::NAN),
+    })
+}
+
 /// Rebuild a [`RunOutcome`] from its stored record + series.
-fn load_completed(
-    slot: &Slot,
+pub(crate) fn load_completed(
+    label: &str,
+    cfg: &ExperimentConfig,
+    id: &str,
     record: &Json,
     series_dir: Option<&Path>,
 ) -> Result<RunOutcome, String> {
     let dir = series_dir.ok_or("no series directory")?;
-    let path = dir.join(format!("{}.jsonl", slot.id));
+    let path = dir.join(format!("{id}.jsonl"));
     let series_label = record
         .get("series_label")
         .and_then(Json::as_str)
-        .unwrap_or(&slot.label)
+        .unwrap_or(label)
         .to_string();
     let series = Series::read_jsonl(&path, series_label)
         .map_err(|e| format!("stored series unreadable: {e}"))?;
     let u = |k: &str| record.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
     Ok(RunOutcome {
-        id: slot.id.clone(),
-        label: slot.label.clone(),
-        cfg: slot.cfg.clone(),
+        id: id.to_string(),
+        label: label.to_string(),
+        cfg: cfg.clone(),
         series,
         fired: u("fired"),
         checks: u("checks"),
         wall_ms: u("wall_ms"),
         skipped: true,
         completed: true,
+        stopped: parse_truncated(record),
     })
 }
 
 /// Stream a completed run to disk: series file first, then the record
-/// line (so a record's existence implies a readable series).
-fn persist(
+/// line (so a record's existence implies a readable series). The record
+/// line is buffered whole and flushed immediately, so concurrent
+/// appenders (distributed mode opens the shared `results.jsonl` with
+/// `O_APPEND` from several processes) emit one write syscall per line
+/// and lines never interleave.
+pub(crate) fn persist(
     outcome: &RunOutcome,
     series_dir: Option<&Path>,
     sink: Option<&Mutex<BufWriter<File>>>,
@@ -335,7 +490,7 @@ fn persist(
         .last()
         .map(|r| r.to_json())
         .unwrap_or_else(Json::obj);
-    let record = Json::obj()
+    let mut record = Json::obj()
         .set("id", outcome.id.as_str())
         .set("name", outcome.cfg.name.as_str())
         .set("label", outcome.label.as_str())
@@ -347,22 +502,61 @@ fn persist(
         .set("records", outcome.series.records.len())
         .set("final", final_record)
         .set("config", outcome.cfg.to_json());
+    if let Some(stop) = &outcome.stopped {
+        record = record.set(
+            "truncated",
+            Json::obj()
+                .set("t", stop.t)
+                .set("reason", stop.reason.as_str())
+                .set("target", float_json(stop.target)),
+        );
+    }
     let mut w = sink.lock().unwrap();
     writeln!(w, "{}", record.to_string()).map_err(|e| e.to_string())?;
     w.flush().map_err(|e| e.to_string())
 }
 
+/// The early-stop target a record reaches, if any (`target_error` is
+/// checked before `target_loss`; NaN metrics never satisfy a target).
+fn target_hit(opts: &SweepOptions, r: &RoundRecord) -> Option<EarlyStop> {
+    if let Some(te) = opts.target_error {
+        if r.test_error <= te {
+            return Some(EarlyStop {
+                t: r.t,
+                reason: "target_error".into(),
+                target: te,
+            });
+        }
+    }
+    if let Some(tl) = opts.target_loss {
+        if r.loss <= tl {
+            return Some(EarlyStop {
+                t: r.t,
+                reason: "target_loss".into(),
+                target: tl,
+            });
+        }
+    }
+    None
+}
+
 /// Execute one run, replicating `coordinator::runner::run`'s evaluation
-/// loop exactly, with optional mid-run checkpointing and checkpoint
-/// resume.
-fn execute_one(
-    slot: &Slot,
+/// loop exactly, with optional mid-run checkpointing, checkpoint resume,
+/// and early-stop targets. `tick`, when given, is called once per
+/// iteration (distributed mode refreshes its claim heartbeat there):
+/// `Ok(false)` abandons the run — no result is recorded and the
+/// returned outcome has `completed == false`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn execute_one(
+    label: &str,
+    cfg: &ExperimentConfig,
+    id: &str,
     cache: &ArtifactCache,
     node_workers: usize,
     opts: &SweepOptions,
     ckpt_dir: Option<&Path>,
+    mut tick: Option<Tick<'_>>,
 ) -> Result<RunOutcome, String> {
-    let cfg = &slot.cfg;
     let run_start = Instant::now();
     let mut problem = build_problem_with(cfg, Some(cache));
     let d = problem.dim();
@@ -377,8 +571,8 @@ fn execute_one(
     let mut series = Series::new(series_label.clone());
     let mut start_t = 0u64;
 
-    let ckpt_path = ckpt_dir.map(|dir| dir.join(format!("{}.ckpt", slot.id)));
-    let partial_path = ckpt_dir.map(|dir| dir.join(format!("{}.partial.jsonl", slot.id)));
+    let ckpt_path = ckpt_dir.map(|dir| dir.join(format!("{id}.ckpt")));
+    let partial_path = ckpt_dir.map(|dir| dir.join(format!("{id}.partial.jsonl")));
     if opts.resume {
         if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
             if cp.exists() && pp.exists() {
@@ -389,9 +583,47 @@ fn execute_one(
                     .map_err(|e| format!("partial series: {e}"))?;
                 start_t = ck.t;
                 if opts.verbose {
-                    println!("[sweep] resume {} from t={start_t}", slot.label);
+                    println!("[sweep] resume {label} from t={start_t}");
                 }
             }
+        }
+    }
+
+    // A target introduced after the partial progress was made: the
+    // loaded prefix may already cross it. Truncate to the first
+    // crossing and finish immediately — the series stays a bit-exact
+    // prefix of the untruncated trajectory. The recorded fired/checks
+    // come from the checkpoint (the closest snapshot; RoundRecord's
+    // `fired` is per-round, so the crossing-time cumulative stats are
+    // not recoverable), which can exceed the online-stop values — but
+    // only on this path, which is unreachable under a consistent spec:
+    // with the target in effect from the start, execution stops at the
+    // crossing and never checkpoints past it, so serial and distributed
+    // runs of one spec still record identical statistics.
+    if start_t > 0 {
+        let hit = series.records.iter().position(|r| target_hit(opts, r).is_some());
+        if let Some(i) = hit {
+            let stop = target_hit(opts, &series.records[i]);
+            series.records.truncate(i + 1);
+            if let Some(cp) = &ckpt_path {
+                fs::remove_file(cp).ok();
+            }
+            if let Some(pp) = &partial_path {
+                fs::remove_file(pp).ok();
+            }
+            let (fired, checks) = algo.fired_stats();
+            return Ok(RunOutcome {
+                id: id.to_string(),
+                label: label.to_string(),
+                cfg: cfg.clone(),
+                series,
+                fired,
+                checks,
+                wall_ms: run_start.elapsed().as_millis() as u64,
+                skipped: false,
+                completed: true,
+                stopped: stop,
+            });
         }
     }
 
@@ -414,41 +646,79 @@ fn execute_one(
         });
     };
 
+    let mut stopped: Option<EarlyStop> = None;
     if start_t == 0 {
         evaluate(algo.as_ref(), problem.as_mut(), &bus, 0, &mut series);
+        if cfg.steps > 0 {
+            // The t = 0 record can already satisfy the target.
+            stopped = target_hit(opts, series.records.last().expect("t=0 record"));
+        }
     }
-    for t in start_t..cfg.steps {
-        algo.step(t, problem.as_mut(), &mut bus);
-        let done = t + 1 == cfg.steps;
-        if (t + 1) % cfg.eval_every.max(1) == 0 || done {
-            evaluate(algo.as_ref(), problem.as_mut(), &bus, t + 1, &mut series);
-        }
-        if !done && opts.checkpoint_every > 0 && (t + 1) % opts.checkpoint_every == 0 {
-            if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
-                let ck = checkpoint::snapshot(algo.as_ref(), t + 1, &bus);
-                ck.save(cp).map_err(|e| format!("{}: {e}", cp.display()))?;
-                series
-                    .write_jsonl(pp)
-                    .map_err(|e| format!("{}: {e}", pp.display()))?;
+    if stopped.is_none() {
+        for t in start_t..cfg.steps {
+            if let Some(tk) = tick.as_mut() {
+                if !tk(t)? {
+                    // Abandoned (claim lost mid-run): no result.
+                    let (fired, checks) = algo.fired_stats();
+                    return Ok(RunOutcome {
+                        id: id.to_string(),
+                        label: label.to_string(),
+                        cfg: cfg.clone(),
+                        series,
+                        fired,
+                        checks,
+                        wall_ms: run_start.elapsed().as_millis() as u64,
+                        skipped: false,
+                        completed: false,
+                        stopped: None,
+                    });
+                }
             }
-        }
-        if opts.fault_abort_at == Some(t + 1) && !done {
-            let (fired, checks) = algo.fired_stats();
-            return Ok(RunOutcome {
-                id: slot.id.clone(),
-                label: slot.label.clone(),
-                cfg: cfg.clone(),
-                series,
-                fired,
-                checks,
-                wall_ms: run_start.elapsed().as_millis() as u64,
-                skipped: false,
-                completed: false,
-            });
+            algo.step(t, problem.as_mut(), &mut bus);
+            let done = t + 1 == cfg.steps;
+            if (t + 1) % cfg.eval_every.max(1) == 0 || done {
+                evaluate(algo.as_ref(), problem.as_mut(), &bus, t + 1, &mut series);
+                if !done {
+                    // Early stop: truncate *at* the evaluation record
+                    // that reached the target. Cadence is config-fixed,
+                    // so the stop round — and the truncated series,
+                    // bit for bit — is the same for every worker budget
+                    // and for serial vs distributed execution.
+                    stopped = target_hit(opts, series.records.last().expect("eval record"));
+                    if stopped.is_some() {
+                        break;
+                    }
+                }
+            }
+            if !done && opts.checkpoint_every > 0 && (t + 1) % opts.checkpoint_every == 0 {
+                if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
+                    let ck = checkpoint::snapshot(algo.as_ref(), t + 1, &bus);
+                    ck.save(cp).map_err(|e| format!("{}: {e}", cp.display()))?;
+                    series
+                        .write_jsonl(pp)
+                        .map_err(|e| format!("{}: {e}", pp.display()))?;
+                }
+            }
+            if opts.fault_abort_at == Some(t + 1) && !done {
+                let (fired, checks) = algo.fired_stats();
+                return Ok(RunOutcome {
+                    id: id.to_string(),
+                    label: label.to_string(),
+                    cfg: cfg.clone(),
+                    series,
+                    fired,
+                    checks,
+                    wall_ms: run_start.elapsed().as_millis() as u64,
+                    skipped: false,
+                    completed: false,
+                    stopped: None,
+                });
+            }
         }
     }
 
-    // Complete: mid-run snapshots are superseded by the result record.
+    // Complete (or early-stopped): mid-run snapshots are superseded by
+    // the result record.
     if let Some(cp) = &ckpt_path {
         fs::remove_file(cp).ok();
     }
@@ -457,8 +727,8 @@ fn execute_one(
     }
     let (fired, checks) = algo.fired_stats();
     Ok(RunOutcome {
-        id: slot.id.clone(),
-        label: slot.label.clone(),
+        id: id.to_string(),
+        label: label.to_string(),
         cfg: cfg.clone(),
         series,
         fired,
@@ -466,6 +736,7 @@ fn execute_one(
         wall_ms: run_start.elapsed().as_millis() as u64,
         skipped: false,
         completed: true,
+        stopped,
     })
 }
 

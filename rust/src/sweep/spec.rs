@@ -27,7 +27,9 @@ use crate::util::json::Json;
 /// Variant keys that are spec metadata, not config fields.
 const VARIANT_META_KEYS: &[&str] = &["label"];
 
-/// A declarative sweep: base config + variants + axes (see module docs).
+/// A declarative sweep: base config + variants + axes (see module docs),
+/// plus sweep-level execution policy: early-stop targets (adaptive
+/// budgets) and the distributed claim lease.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     pub name: String,
@@ -38,6 +40,18 @@ pub struct SweepSpec {
     variants: Vec<Json>,
     /// (field, values) cross-product axes, sorted by field name.
     axes: Vec<(String, Vec<Json>)>,
+    /// Early-stop every run at the first evaluation record with
+    /// `test_error <= target_error` (must lie in (0, 1]). Targets are
+    /// execution policy, not config: they do not enter [`config_hash`],
+    /// so adding one never forces re-runs — truncation is recorded in
+    /// the result record instead.
+    pub target_error: Option<f64>,
+    /// Early-stop every run at the first record with `loss <=
+    /// target_loss` (any finite value).
+    pub target_loss: Option<f64>,
+    /// Stale-claim takeover lease for `--distributed` execution
+    /// (seconds, > 0).
+    pub lease_secs: Option<f64>,
 }
 
 impl SweepSpec {
@@ -48,7 +62,41 @@ impl SweepSpec {
             base: Json::obj(),
             variants: Vec::new(),
             axes: Vec::new(),
+            target_error: None,
+            target_loss: None,
+            lease_secs: None,
         }
+    }
+
+    /// Set the early-stop test-error target (builder API).
+    pub fn target_error(mut self, target: f64) -> Self {
+        self.target_error = Some(target);
+        self
+    }
+
+    /// Set the early-stop loss target (builder API).
+    pub fn target_loss(mut self, target: f64) -> Self {
+        self.target_loss = Some(target);
+        self
+    }
+
+    /// Set the distributed claim lease (builder API).
+    pub fn lease_secs(mut self, secs: f64) -> Self {
+        self.lease_secs = Some(secs);
+        self
+    }
+
+    /// Copy the spec's early-stop targets into a [`SweepOptions`] clone,
+    /// keeping any target the options already pin (CLI overrides win).
+    pub fn apply_targets(&self, opts: &crate::sweep::SweepOptions) -> crate::sweep::SweepOptions {
+        let mut opts = opts.clone();
+        if opts.target_error.is_none() {
+            opts.target_error = self.target_error;
+        }
+        if opts.target_loss.is_none() {
+            opts.target_loss = self.target_loss;
+        }
+        opts
     }
 
     /// Set the base config (builder API).
@@ -92,12 +140,32 @@ impl SweepSpec {
             .as_obj()
             .ok_or_else(|| "sweep spec must be a JSON object".to_string())?;
         for key in obj.keys() {
-            if !["name", "base", "variants", "axes"].contains(&key.as_str()) {
+            if ![
+                "name",
+                "base",
+                "variants",
+                "axes",
+                "target_error",
+                "target_loss",
+                "lease_secs",
+            ]
+            .contains(&key.as_str())
+            {
                 return Err(format!(
-                    "unknown sweep spec key {key:?}; valid keys: name, base, variants, axes"
+                    "unknown sweep spec key {key:?}; valid keys: name, base, variants, axes, \
+                     target_error, target_loss, lease_secs"
                 ));
             }
         }
+        let opt_f64 = |k: &str| -> Result<Option<f64>, String> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| format!("sweep spec key {k:?} must be a number")),
+            }
+        };
         let name = match j.get("name") {
             None => "sweep".to_string(),
             Some(v) => v
@@ -142,6 +210,9 @@ impl SweepSpec {
             base,
             variants,
             axes,
+            target_error: opt_f64("target_error")?,
+            target_loss: opt_f64("target_loss")?,
+            lease_secs: opt_f64("lease_secs")?,
         };
         spec.validate()?;
         Ok(spec)
@@ -159,14 +230,43 @@ impl SweepSpec {
         for (k, v) in &self.axes {
             axes = axes.set(k, Json::Arr(v.clone()));
         }
-        Json::obj()
+        let mut out = Json::obj()
             .set("name", self.name.as_str())
             .set("base", self.base.clone())
             .set("variants", Json::Arr(self.variants.clone()))
-            .set("axes", axes)
+            .set("axes", axes);
+        if let Some(t) = self.target_error {
+            out = out.set("target_error", t);
+        }
+        if let Some(t) = self.target_loss {
+            out = out.set("target_loss", t);
+        }
+        if let Some(l) = self.lease_secs {
+            out = out.set("lease_secs", l);
+        }
+        out
     }
 
     fn validate(&self) -> Result<(), String> {
+        if let Some(t) = self.target_error {
+            if !(t.is_finite() && t > 0.0 && t <= 1.0) {
+                return Err(format!(
+                    "target_error must lie in (0, 1] (test error is a rate), got {t}"
+                ));
+            }
+        }
+        if let Some(t) = self.target_loss {
+            if !t.is_finite() {
+                return Err(format!("target_loss must be finite, got {t}"));
+            }
+        }
+        if let Some(l) = self.lease_secs {
+            if !(l.is_finite() && l > 0.0) {
+                return Err(format!(
+                    "lease_secs must be a positive number of seconds, got {l}"
+                ));
+            }
+        }
         for (k, values) in &self.axes {
             if k == "name" || k == "workers" {
                 return Err(format!(
@@ -427,6 +527,50 @@ mod tests {
             name: "solo".into(),
             ..Default::default()
         });
+    }
+
+    #[test]
+    fn targets_and_lease_roundtrip_and_validate() {
+        let j = Json::parse(r#"{"target_error": 0.15, "target_loss": 0.5, "lease_secs": 30}"#)
+            .unwrap();
+        let spec = SweepSpec::from_json(&j).unwrap();
+        assert_eq!(spec.target_error, Some(0.15));
+        assert_eq!(spec.target_loss, Some(0.5));
+        assert_eq!(spec.lease_secs, Some(30.0));
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.target_error, Some(0.15));
+        assert_eq!(back.lease_secs, Some(30.0));
+        // a spec without them round-trips without them (old specs load
+        // unchanged)
+        let plain = SweepSpec::from_json(&SweepSpec::new("x").to_json()).unwrap();
+        assert_eq!(plain.target_error, None);
+        assert_eq!(plain.lease_secs, None);
+
+        for bad in [
+            r#"{"target_error": 0}"#,
+            r#"{"target_error": 1.5}"#,
+            r#"{"target_error": -0.1}"#,
+            r#"{"lease_secs": 0}"#,
+            r#"{"lease_secs": -5}"#,
+            r#"{"target_loss": "low"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SweepSpec::from_json(&j).is_err(), "{bad}");
+        }
+
+        // spec targets fill options only where the options are unset
+        use crate::sweep::SweepOptions;
+        let spec = SweepSpec::new("t").target_error(0.2).target_loss(0.9);
+        let opts = spec.apply_targets(&SweepOptions::default());
+        assert_eq!(opts.target_error, Some(0.2));
+        assert_eq!(opts.target_loss, Some(0.9));
+        let pinned = SweepOptions {
+            target_error: Some(0.05),
+            ..Default::default()
+        };
+        let opts = spec.apply_targets(&pinned);
+        assert_eq!(opts.target_error, Some(0.05));
+        assert_eq!(opts.target_loss, Some(0.9));
     }
 
     #[test]

@@ -149,9 +149,59 @@ impl Bencher {
     }
 }
 
+/// CI perf regression gate: compare a freshly measured bench snapshot
+/// against the committed baseline JSON on *higher-is-better* keys.
+/// Returns one report line per key, or an error listing every key whose
+/// measured value fell more than `max_regress` (a fraction, e.g. 0.15)
+/// below the baseline. Missing or non-positive baseline keys are hard
+/// errors — a silently skipped gate is worse than a loud one.
+pub fn perf_gate(
+    baseline: &crate::util::json::Json,
+    measured: &crate::util::json::Json,
+    keys: &[&str],
+    max_regress: f64,
+) -> Result<Vec<String>, String> {
+    use crate::util::json::Json;
+    if !(max_regress.is_finite() && (0.0..1.0).contains(&max_regress)) {
+        return Err(format!("max_regress must lie in [0, 1), got {max_regress}"));
+    }
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    for key in keys {
+        let b = baseline
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("baseline is missing numeric key {key:?}"))?;
+        let m = measured
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("measured snapshot is missing numeric key {key:?}"))?;
+        if !(b.is_finite() && b > 0.0) {
+            return Err(format!("baseline {key:?} must be positive, got {b}"));
+        }
+        let delta_pct = (m / b - 1.0) * 100.0;
+        let line = format!("{key}: baseline {b:.3}, measured {m:.3} ({delta_pct:+.1}%)");
+        if m < b * (1.0 - max_regress) {
+            failures.push(line);
+        } else {
+            lines.push(line);
+        }
+    }
+    if failures.is_empty() {
+        Ok(lines)
+    } else {
+        Err(format!(
+            "perf regression beyond {:.0}%:\n  {}",
+            max_regress * 100.0,
+            failures.join("\n  ")
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn measures_something() {
@@ -173,5 +223,40 @@ mod tests {
         assert!(fmt_ns(2_500.0).contains("µs"));
         assert!(fmt_ns(3.2e6).contains("ms"));
         assert!(fmt_ns(1.5e9).contains(" s"));
+    }
+
+    fn snap(speedup: f64, steps: f64) -> Json {
+        Json::obj()
+            .set("speedup_sparse_parallel", speedup)
+            .set("node_steps_per_sec", steps)
+    }
+
+    const GATE_KEYS: &[&str] = &["speedup_sparse_parallel", "node_steps_per_sec"];
+
+    #[test]
+    fn perf_gate_passes_within_tolerance() {
+        // 10% down on one key, up on the other: inside a 15% gate.
+        let lines = perf_gate(&snap(4.0, 100.0), &snap(3.6, 110.0), GATE_KEYS, 0.15).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("-10.0%"), "{lines:?}");
+        assert!(lines[1].contains("+10.0%"), "{lines:?}");
+    }
+
+    #[test]
+    fn perf_gate_fails_beyond_tolerance() {
+        let err = perf_gate(&snap(4.0, 100.0), &snap(3.0, 100.0), GATE_KEYS, 0.15).unwrap_err();
+        assert!(err.contains("speedup_sparse_parallel"), "{err}");
+        assert!(err.contains("-25.0%"), "{err}");
+        // the non-regressed key is not listed as a failure
+        assert!(!err.contains("node_steps_per_sec"), "{err}");
+    }
+
+    #[test]
+    fn perf_gate_rejects_missing_or_bad_baselines() {
+        let empty = Json::obj();
+        assert!(perf_gate(&empty, &snap(4.0, 100.0), GATE_KEYS, 0.15).is_err());
+        assert!(perf_gate(&snap(4.0, 100.0), &empty, GATE_KEYS, 0.15).is_err());
+        assert!(perf_gate(&snap(0.0, 100.0), &snap(4.0, 100.0), GATE_KEYS, 0.15).is_err());
+        assert!(perf_gate(&snap(4.0, 100.0), &snap(4.0, 100.0), GATE_KEYS, 1.5).is_err());
     }
 }

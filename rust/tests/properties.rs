@@ -412,3 +412,196 @@ fn prop_rng_streams_do_not_collide() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Claim-lease semantics (sweep::distributed, ISSUE 4)
+// ---------------------------------------------------------------------
+
+/// A fresh claims directory per property case.
+fn claims_dir(g: &mut G, tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "sparq-prop-claims-{tag}-{}-{:016x}",
+        std::process::id(),
+        g.rng.next_u64()
+    ))
+}
+
+#[test]
+fn prop_takeover_never_fires_before_the_lease_under_any_heartbeat_interleaving() {
+    use sparq::sweep::{Acquire, ClaimStore};
+    check("claim-lease", Config { cases: 48, seed: 0x41 }, |g| {
+        let dir = claims_dir(g, "lease");
+        let lease = g.f64_in(0.5, 50.0);
+        let store_a =
+            ClaimStore::new(&dir, "owner-a", lease).map_err(|e| format!("store a: {e}"))?;
+        let store_b =
+            ClaimStore::new(&dir, "owner-b", lease).map_err(|e| format!("store b: {e}"))?;
+        let mut t = g.f64_in(0.0, 1.0e6);
+        let mut claim = match store_a.try_acquire_at("r", t).map_err(|e| e.to_string())? {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => return Err("fresh directory refused the first claim".into()),
+        };
+        let mut last_beat = t;
+        let steps = g.usize_in(1, 12);
+        let mut outcome = Ok(());
+        for _ in 0..steps {
+            // Arbitrary interleaving: time advances by anything from a
+            // fraction of the lease to well past it, and either the
+            // owner heartbeats or a rival probes.
+            t += g.f64_in(0.0, lease * 1.4);
+            if g.usize_in(0, 1) == 0 {
+                // Owner heartbeat. B has not acquired yet, so A must
+                // still own the claim.
+                let alive = claim.heartbeat_at(t).map_err(|e| e.to_string())?;
+                if !alive {
+                    outcome = Err(format!(
+                        "owner lost an untaken claim (lease {lease}, dt {})",
+                        t - last_beat
+                    ));
+                    break;
+                }
+                last_beat = t;
+            } else {
+                let age = t - last_beat;
+                match store_b.try_acquire_at("r", t).map_err(|e| e.to_string())? {
+                    Acquire::Acquired(_) => {
+                        if age < lease {
+                            outcome = Err(format!(
+                                "takeover fired {age}s after the last heartbeat \
+                                 with a {lease}s lease"
+                            ));
+                        } else if claim.heartbeat_at(t).map_err(|e| e.to_string())? {
+                            outcome =
+                                Err("old owner's heartbeat survived a takeover".to_string());
+                        }
+                        break;
+                    }
+                    Acquire::Held => {
+                        // An uncontended rival MUST take a stale claim.
+                        if age >= lease {
+                            outcome = Err(format!(
+                                "stale claim (age {age}, lease {lease}) was not taken over"
+                            ));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        outcome
+    });
+}
+
+#[test]
+fn prop_racing_claimants_yield_exactly_one_winner() {
+    use sparq::sweep::{Acquire, ClaimStore};
+    use std::sync::{Barrier, Mutex};
+    check("claim-race", Config { cases: 12, seed: 0x42 }, |g| {
+        let dir = claims_dir(g, "race");
+        let n = g.usize_in(2, 8);
+        // Phase 1: n claimants race create-exclusive on a fresh id.
+        let wins = Mutex::new(0usize);
+        let barrier = Barrier::new(n);
+        std::thread::scope(|scope| {
+            for i in 0..n {
+                let dir = dir.clone();
+                let wins = &wins;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let store = ClaimStore::new(&dir, format!("racer-{i}"), 3600.0)
+                        .expect("claim store");
+                    barrier.wait();
+                    if let Ok(Acquire::Acquired(_)) = store.try_acquire("r") {
+                        *wins.lock().unwrap() += 1;
+                    }
+                });
+            }
+        });
+        let fresh_wins = *wins.lock().unwrap();
+        prop_assert!(
+            fresh_wins == 1,
+            "{fresh_wins} of {n} racers acquired a fresh claim"
+        );
+
+        // Phase 2: the winner's claim is made stale (its stamp predates
+        // the lease); n claimants race the takeover path. Exactly one
+        // may win — the takeover only removes the stale file, while
+        // acquisition still goes through create-exclusive.
+        let store = ClaimStore::new(&dir, "restamper", 3600.0).expect("claim store");
+        let stale_at = sparq::sweep::distributed::now_secs() - 2.0 * 3600.0;
+        store
+            .cleanup_stale_at("r", f64::INFINITY)
+            .expect("clear phase-1 claim");
+        match store.try_acquire_at("r", stale_at).expect("restamp") {
+            Acquire::Acquired(_) => {}
+            Acquire::Held => return Err("could not restamp the claim".into()),
+        }
+        let wins = Mutex::new(0usize);
+        let barrier = Barrier::new(n);
+        std::thread::scope(|scope| {
+            for i in 0..n {
+                let dir = dir.clone();
+                let wins = &wins;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let store = ClaimStore::new(&dir, format!("taker-{i}"), 3600.0)
+                        .expect("claim store");
+                    barrier.wait();
+                    if let Ok(Acquire::Acquired(_)) = store.try_acquire("r") {
+                        *wins.lock().unwrap() += 1;
+                    }
+                });
+            }
+        });
+        let takeover_wins = *wins.lock().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        prop_assert!(
+            takeover_wins == 1,
+            "{takeover_wins} of {n} racers took over one stale claim"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stale_claim_cleanup_is_idempotent() {
+    use sparq::sweep::{Acquire, ClaimStore};
+    check("claim-cleanup", Config { cases: 32, seed: 0x43 }, |g| {
+        let dir = claims_dir(g, "cleanup");
+        let lease = g.f64_in(0.1, 100.0);
+        let t0 = g.f64_in(0.0, 1.0e6);
+        let store = ClaimStore::new(&dir, "a", lease).map_err(|e| e.to_string())?;
+        match store.try_acquire_at("r", t0).map_err(|e| e.to_string())? {
+            Acquire::Acquired(_) => {}
+            Acquire::Held => return Err("fresh claim refused".into()),
+        }
+        let other = ClaimStore::new(&dir, "b", lease).map_err(|e| e.to_string())?;
+        // Before the lease: cleanup must refuse, repeatedly.
+        let fresh = t0 + g.f64_in(0.0, lease * 0.99);
+        prop_assert!(
+            !other.cleanup_stale_at("r", fresh).map_err(|e| e.to_string())?,
+            "cleanup removed a live claim (lease {lease})"
+        );
+        // After the lease: exactly the first cleanup removes it; every
+        // repeat is a no-op returning false, and the id is acquirable
+        // exactly once afterwards.
+        let stale = t0 + lease + g.f64_in(0.0, lease);
+        prop_assert!(
+            other.cleanup_stale_at("r", stale).map_err(|e| e.to_string())?,
+            "stale claim not cleaned up"
+        );
+        for _ in 0..g.usize_in(2, 5) {
+            prop_assert!(
+                !other.cleanup_stale_at("r", stale).map_err(|e| e.to_string())?,
+                "cleanup of a removed claim must be a no-op"
+            );
+        }
+        match other.try_acquire_at("r", stale).map_err(|e| e.to_string())? {
+            Acquire::Acquired(_) => {}
+            Acquire::Held => return Err("cleaned-up claim not acquirable".into()),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}

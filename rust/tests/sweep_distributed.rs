@@ -1,0 +1,385 @@
+//! Distributed sweep execution — the ISSUE-4 acceptance tests, run
+//! against *real child processes* of the built `sparq` binary
+//! (`CARGO_BIN_EXE_sparq`) sharing one output directory:
+//!
+//! * two concurrent `sparq sweep --distributed` processes split an
+//!   8-run grid with **zero double-executed run ids** (claim files and
+//!   `results.jsonl` agree) and merged series **bit-identical**
+//!   (`f64::to_bits`) to a serial single-process sweep;
+//! * a `--fault-abort-at`-killed process leaves its claims and mid-run
+//!   checkpoints behind; after the lease expires a second process takes
+//!   the claims over and *resumes* the half-finished runs from their
+//!   checkpoints onto the uninterrupted trajectory;
+//! * in-process: `run_distributed` with an early-stop target produces
+//!   exactly the serial early-stopped result — same stop round, same
+//!   bit-exact truncated prefix.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output, Stdio};
+
+use sparq::config::ExperimentConfig;
+use sparq::metrics::Series;
+use sparq::sweep::{
+    config_hash, run_configs, run_distributed, run_spec, ArtifactCache, DistributedOptions,
+    SweepOptions, SweepSpec,
+};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparq-dist-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_series_bits_eq(a: &Series, b: &Series, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record counts");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.t, rb.t, "{what}: t");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{what}: loss at t={}", ra.t);
+        assert_eq!(
+            ra.test_error.to_bits(),
+            rb.test_error.to_bits(),
+            "{what}: test_error at t={}",
+            ra.t
+        );
+        assert_eq!(ra.opt_gap.to_bits(), rb.opt_gap.to_bits(), "{what}: opt_gap at t={}", ra.t);
+        assert_eq!(ra.bits, rb.bits, "{what}: bits at t={}", ra.t);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{what}: rounds at t={}", ra.t);
+        assert_eq!(
+            ra.consensus.to_bits(),
+            rb.consensus.to_bits(),
+            "{what}: consensus at t={}",
+            ra.t
+        );
+        assert_eq!(ra.fired, rb.fired, "{what}: fired at t={}", ra.t);
+    }
+}
+
+/// The shared 8-run grid: one base config × a seed axis.
+fn grid_spec() -> SweepSpec {
+    let base = ExperimentConfig {
+        name: "dist-grid".into(),
+        nodes: 5,
+        steps: 160,
+        eval_every: 40,
+        problem: "quadratic:24".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        ..Default::default()
+    };
+    SweepSpec::new("dist-grid")
+        .base(&base)
+        .axis_u64("seed", &[1, 2, 3, 4, 5, 6, 7, 8])
+}
+
+/// Serial single-process reference: id → series.
+fn serial_reference(spec: &SweepSpec) -> Vec<(String, Series)> {
+    let report = run_spec(
+        spec,
+        &SweepOptions {
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .expect("serial sweep");
+    report
+        .outcomes
+        .into_iter()
+        .map(|o| (o.id, o.series))
+        .collect()
+}
+
+fn write_spec(spec: &SweepSpec, dir: &Path) -> PathBuf {
+    let path = dir.join("spec.json");
+    std::fs::write(&path, spec.to_json().to_string_pretty()).unwrap();
+    path
+}
+
+fn sparq_sweep(spec_path: &Path, out: &Path, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparq"));
+    cmd.arg("sweep")
+        .arg("--spec")
+        .arg(spec_path)
+        .arg("--out")
+        .arg(out)
+        .args(["--distributed=true", "--poll-ms", "50"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    cmd
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+/// "N executed" from the child's summary line.
+fn executed_count(stdout: &str) -> usize {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains("sweep complete:"))
+        .unwrap_or_else(|| panic!("no summary line in:\n{stdout}"));
+    let tail = line.split("sweep complete:").nth(1).unwrap();
+    tail.trim()
+        .split(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap_or_else(|_| panic!("unparsable summary: {line}"))
+}
+
+fn claim_files(out: &Path) -> Vec<String> {
+    let mut v = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(out.join("claims")) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.ends_with(".claim") {
+                v.push(name.trim_end_matches(".claim").to_string());
+            }
+        }
+    }
+    v.sort();
+    v
+}
+
+fn result_ids(out: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(out.join("results.jsonl")).expect("results.jsonl");
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let j = sparq::util::json::Json::parse(l).expect("valid record line");
+            j.get("id").and_then(|v| v.as_str().map(str::to_string)).expect("record id")
+        })
+        .collect()
+}
+
+#[test]
+fn two_processes_split_the_grid_exactly_once_and_match_serial_bit_for_bit() {
+    let spec = grid_spec();
+    let reference = serial_reference(&spec);
+    assert_eq!(reference.len(), 8);
+
+    let dir = tmp_dir("two-procs");
+    let out = dir.join("shared");
+    let spec_path = write_spec(&spec, &dir);
+
+    // Two live processes race the same grid; fresh claims keep each run
+    // exclusive, so every id executes exactly once across the pair.
+    let c1 = sparq_sweep(&spec_path, &out, &["--workers", "2", "--lease-secs", "30"])
+        .spawn()
+        .expect("spawn child 1");
+    let c2 = sparq_sweep(&spec_path, &out, &["--workers", "2", "--lease-secs", "30"])
+        .spawn()
+        .expect("spawn child 2");
+    let o1 = c1.wait_with_output().unwrap();
+    let o2 = c2.wait_with_output().unwrap();
+    assert!(
+        o1.status.success(),
+        "child 1 failed:\n{}\n{}",
+        stdout_of(&o1),
+        String::from_utf8_lossy(&o1.stderr)
+    );
+    assert!(
+        o2.status.success(),
+        "child 2 failed:\n{}\n{}",
+        stdout_of(&o2),
+        String::from_utf8_lossy(&o2.stderr)
+    );
+
+    // Exactly-once: 8 unique result ids matching the grid, no claims
+    // left behind, and the two executed counts partition the grid.
+    let mut ids = result_ids(&out);
+    ids.sort();
+    let mut expected: Vec<String> = reference.iter().map(|(id, _)| id.clone()).collect();
+    expected.sort();
+    assert_eq!(ids, expected, "every run id recorded exactly once");
+    assert!(claim_files(&out).is_empty(), "all claims released");
+    let (e1, e2) = (executed_count(&stdout_of(&o1)), executed_count(&stdout_of(&o2)));
+    assert_eq!(e1 + e2, 8, "grid partitioned between the two processes ({e1} + {e2})");
+
+    // Merged series bit-identical to the serial single-process sweep.
+    for (id, serial) in &reference {
+        let path = out.join("series").join(format!("{id}.jsonl"));
+        let stored = Series::read_jsonl(&path, "stored").expect("stored series");
+        assert_series_bits_eq(serial, &stored, &format!("run {id} (2-proc vs serial)"));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killed_process_claims_are_taken_over_and_runs_resume_from_checkpoint() {
+    let spec = grid_spec();
+    let reference = serial_reference(&spec);
+
+    let dir = tmp_dir("takeover");
+    let out = dir.join("shared");
+    let spec_path = write_spec(&spec, &dir);
+
+    // Process 1 "crashes": fault injection aborts its first claimed run
+    // at t = 80 (after the t = 40 and t = 80 checkpoints), leaving the
+    // claim file and checkpoints in place and exiting nonzero.
+    let o1 = sparq_sweep(
+        &spec_path,
+        &out,
+        &[
+            "--workers",
+            "1",
+            "--lease-secs",
+            "1",
+            "--checkpoint-every",
+            "40",
+            "--fault-abort-at",
+            "80",
+        ],
+    )
+    .output()
+    .expect("run child 1");
+    assert!(!o1.status.success(), "fault-injected child must exit nonzero");
+    assert!(
+        String::from_utf8_lossy(&o1.stderr).contains("fault injection"),
+        "stderr: {}",
+        String::from_utf8_lossy(&o1.stderr)
+    );
+    let abandoned = claim_files(&out);
+    assert_eq!(abandoned.len(), 1, "exactly one abandoned claim: {abandoned:?}");
+    let victim = &abandoned[0];
+    assert!(
+        out.join("ckpt").join(format!("{victim}.ckpt")).exists(),
+        "mid-run checkpoint left behind for takeover"
+    );
+    assert!(result_ids(&out).is_empty(), "no result recorded for the aborted run");
+
+    // Let the lease expire, then a second process sweeps the grid: it
+    // must take the stale claim over and resume the half-finished run
+    // from its checkpoint (the verbose resume line proves it did not
+    // restart from scratch — restarting would also be bit-identical).
+    std::thread::sleep(std::time::Duration::from_millis(1200));
+    let o2 = sparq_sweep(
+        &spec_path,
+        &out,
+        &["--workers", "2", "--lease-secs", "1", "--checkpoint-every", "40"],
+    )
+    .output()
+    .expect("run child 2");
+    assert!(
+        o2.status.success(),
+        "takeover child failed:\n{}\n{}",
+        stdout_of(&o2),
+        String::from_utf8_lossy(&o2.stderr)
+    );
+    let stdout = stdout_of(&o2);
+    assert!(
+        stdout.contains("resume") && stdout.contains("from t="),
+        "takeover must resume from the checkpoint, not restart:\n{stdout}"
+    );
+    assert_eq!(executed_count(&stdout), 8, "second process finishes the whole grid");
+
+    let mut ids = result_ids(&out);
+    ids.sort();
+    let mut expected: Vec<String> = reference.iter().map(|(id, _)| id.clone()).collect();
+    expected.sort();
+    assert_eq!(ids, expected, "all runs recorded exactly once after takeover");
+    assert!(claim_files(&out).is_empty(), "takeover claims released");
+    assert!(
+        !out.join("ckpt").join(format!("{victim}.ckpt")).exists(),
+        "completed run clears the inherited checkpoint"
+    );
+
+    // The resumed trajectory is the uninterrupted one, bit for bit.
+    for (id, serial) in &reference {
+        let path = out.join("series").join(format!("{id}.jsonl"));
+        let stored = Series::read_jsonl(&path, "stored").expect("stored series");
+        assert_series_bits_eq(serial, &stored, &format!("run {id} (takeover vs serial)"));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn distributed_early_stop_equals_serial_early_stop_bit_for_bit() {
+    let cfg = ExperimentConfig {
+        name: "dist-early".into(),
+        nodes: 5,
+        steps: 400,
+        eval_every: 40,
+        problem: "quadratic:24".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        seed: 77,
+        ..Default::default()
+    };
+
+    // Untruncated reference fixes a mid-run loss as the target.
+    let full = run_configs(
+        vec![("full".into(), cfg.clone())],
+        &SweepOptions::default(),
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let full = &full.outcomes[0].series;
+    let target = full.records[5].loss;
+    let stop_idx = full
+        .records
+        .iter()
+        .position(|r| r.loss <= target)
+        .expect("target reachable");
+
+    let serial = run_configs(
+        vec![("run".into(), cfg.clone())],
+        &SweepOptions {
+            target_loss: Some(target),
+            ..Default::default()
+        },
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let serial = &serial.outcomes[0];
+
+    let dir = tmp_dir("early-dist");
+    let dist = run_distributed(
+        vec![("run".into(), cfg.clone())],
+        &SweepOptions {
+            out: Some(dir.clone()),
+            target_loss: Some(target),
+            verbose: false,
+            ..Default::default()
+        },
+        &DistributedOptions {
+            lease_secs: 30.0,
+            poll_ms: 20,
+            ..Default::default()
+        },
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let dist = &dist.outcomes[0];
+
+    assert_eq!(config_hash(&cfg), dist.id);
+    assert!(serial.stopped.is_some() && dist.stopped.is_some());
+    assert_eq!(serial.stopped, dist.stopped, "same stop round and reason");
+    assert_eq!(serial.series.records.len(), stop_idx + 1);
+    assert_series_bits_eq(&serial.series, &dist.series, "distributed vs serial early stop");
+
+    // The truncated result is recorded (with its truncation) and a
+    // second distributed pass loads it instead of re-running.
+    let again = run_distributed(
+        vec![("run".into(), cfg)],
+        &SweepOptions {
+            out: Some(dir.clone()),
+            target_loss: Some(target),
+            ..Default::default()
+        },
+        &DistributedOptions::default(),
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.skipped, 1);
+    assert_eq!(again.outcomes[0].stopped, dist.stopped, "truncation survives the round-trip");
+    assert_series_bits_eq(&again.outcomes[0].series, &dist.series, "stored truncated series");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

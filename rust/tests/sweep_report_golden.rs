@@ -1,0 +1,85 @@
+//! Golden-file test for `sparq sweep report`: a committed miniature
+//! `results.jsonl` + series fixture must reproduce the Remark-4 savings
+//! table and the four Fig-1 CSV panels **byte-for-byte**, including the
+//! PR-3 "inf"/"NaN" string encodings (the fixture's diverged run
+//! carries `"loss": "inf"` records that must survive the load → render
+//! round-trip verbatim).
+//!
+//! The fixture lives in `rust/tests/fixtures/sweep_report/`:
+//! `results.jsonl`, `series/<id>.jsonl`, and `expected/` holding the
+//! blessed outputs. If a formatting change is intentional, regenerate
+//! the expected files from the new output and commit both.
+
+use std::path::{Path, PathBuf};
+
+use sparq::sweep::report::{self, TargetMetric};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/sweep_report")
+}
+
+#[test]
+fn golden_savings_table_is_byte_identical() {
+    let fixture = fixture_dir();
+    let runs = report::load(&fixture).expect("fixture loads");
+    assert_eq!(runs.len(), 3, "fixture has three runs");
+    // The early-stopped run carries its truncation metadata.
+    let stop = runs[0].truncated.as_ref().expect("run 1 is truncated");
+    assert_eq!((stop.t, stop.reason.as_str()), (40, "target_error"));
+    // The diverged run's non-finite records loaded as real inf/NaN.
+    assert!(runs[2].series.records[0].loss.is_infinite());
+    assert!(runs[2].series.records[2].loss.is_nan());
+
+    let table = report::savings_table(&runs, TargetMetric::TestError, 0.15);
+    let expected = std::fs::read_to_string(fixture.join("expected/savings.txt"))
+        .expect("expected/savings.txt");
+    assert_eq!(
+        table, expected,
+        "savings table drifted from the committed golden file"
+    );
+}
+
+#[test]
+fn golden_csv_panels_are_byte_identical() {
+    let fixture = fixture_dir();
+    let runs = report::load(&fixture).expect("fixture loads");
+    for (name, content) in report::panels_csv(&runs) {
+        let expected = std::fs::read_to_string(fixture.join("expected").join(name))
+            .unwrap_or_else(|e| panic!("expected/{name}: {e}"));
+        assert_eq!(content, expected, "{name} drifted from the committed golden file");
+    }
+}
+
+#[test]
+fn duplicate_result_ids_resolve_to_the_last_record() {
+    // Merged result sets stay well-defined: a duplicated id (torn-series
+    // re-run) resolves to the later record, deterministically.
+    let dir = std::env::temp_dir().join(format!("sparq-report-dup-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(dir.join("series")).unwrap();
+    let rec = |t: u64, err: f64, bits: u64| {
+        format!(
+            r#"{{"t":{t},"loss":{err},"test_error":{err},"opt_gap":"NaN","bits":{bits},"comm_rounds":{t},"consensus":0.5,"fired":1}}"#
+        )
+    };
+    std::fs::write(
+        dir.join("series/dup0000000000001.jsonl"),
+        format!("{}\n{}\n", rec(0, 0.9, 0), rec(10, 0.1, 500)),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("results.jsonl"),
+        concat!(
+            r#"{"id":"dup0000000000001","label":"first","fired":1,"checks":2}"#,
+            "\n",
+            r#"{"id":"dup0000000000001","label":"second","fired":2,"checks":2}"#,
+            "\n"
+        ),
+    )
+    .unwrap();
+    let runs = report::load(&dir).unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].label, "second");
+    assert_eq!(runs[0].fired, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}

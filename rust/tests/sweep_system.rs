@@ -14,12 +14,15 @@
 //!   identical across worker counts.
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use sparq::comm::Bus;
 use sparq::config::{Algo, ExperimentConfig};
 use sparq::coordinator::checkpoint;
 use sparq::experiments::{build_algo, build_problem, run_config};
-use sparq::sweep::{run_configs, run_spec, ArtifactCache, SweepOptions, SweepSpec};
+use sparq::sweep::{
+    run_configs, run_spec, ArtifactCache, EarlyStop, RunEvent, SweepOptions, SweepSpec,
+};
 use sparq::util::json::Json;
 use sparq::util::Rng;
 
@@ -351,6 +354,213 @@ fn delivered_bits_monotone_nonincreasing_in_drop_probability() {
     assert!(
         bits[3] < bits[0],
         "p=0.8 must drop something over 150 rounds: {bits:?}"
+    );
+}
+
+#[test]
+fn early_stop_is_deterministic_and_a_bit_exact_prefix_across_budgets() {
+    // ISSUE-4 satellite: a run with a target stops at the same round
+    // for workers 1 vs 8, and its truncated series is a bit-exact
+    // prefix of the untruncated run's series.
+    let cfg = ExperimentConfig {
+        name: "early-loss".into(),
+        nodes: 6,
+        steps: 400,
+        eval_every: 40,
+        problem: "quadratic:32".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        seed: 13,
+        ..Default::default()
+    };
+    let full = run_configs(
+        vec![("full".into(), cfg.clone())],
+        &SweepOptions::default(),
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let full = &full.outcomes[0].series;
+    // A mid-run loss as the target: the first crossing defines the
+    // expected stop record.
+    let target = full.records[5].loss;
+    let stop_idx = full
+        .records
+        .iter()
+        .position(|r| r.loss <= target)
+        .expect("target reachable");
+    assert!(stop_idx + 1 < full.records.len(), "target must truncate the run");
+
+    let mut per_budget = Vec::new();
+    for workers in [1usize, 8] {
+        let got = run_configs(
+            vec![("run".into(), cfg.clone())],
+            &SweepOptions {
+                workers,
+                target_loss: Some(target),
+                ..Default::default()
+            },
+            &ArtifactCache::new(),
+        )
+        .unwrap();
+        let got = got.outcomes.into_iter().next().unwrap();
+        assert!(got.completed && !got.skipped);
+        assert_eq!(
+            got.stopped,
+            Some(EarlyStop {
+                t: full.records[stop_idx].t,
+                reason: "target_loss".into(),
+                target,
+            }),
+            "workers={workers}: stop record"
+        );
+        assert_eq!(got.series.records.len(), stop_idx + 1, "workers={workers}: prefix length");
+        let mut prefix = sparq::metrics::Series::new("prefix");
+        prefix.records = full.records[..=stop_idx].to_vec();
+        assert_series_bits_eq(&prefix, &got.series, &format!("workers={workers} prefix"));
+        per_budget.push(got);
+    }
+    assert_eq!(per_budget[0].fired, per_budget[1].fired, "trigger stats across budgets");
+    assert_eq!(per_budget[0].checks, per_budget[1].checks);
+}
+
+#[test]
+fn early_stop_target_error_truncates_and_roundtrips_through_resume() {
+    // target_error variant (logreg has a real test set) + the recorded
+    // truncation surviving a resume.
+    let cfg = ExperimentConfig {
+        name: "early-err".into(),
+        nodes: 6,
+        steps: 300,
+        eval_every: 50,
+        problem: "logreg:24:4:6".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        seed: 19,
+        ..Default::default()
+    };
+    let full = run_configs(
+        vec![("full".into(), cfg.clone())],
+        &SweepOptions::default(),
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let full = &full.outcomes[0].series;
+    // Target = a mid-run test error, so the stop lands mid-series.
+    let target = full.records[full.records.len() / 2].test_error;
+    let stop_idx = full
+        .records
+        .iter()
+        .position(|r| r.test_error <= target)
+        .expect("target reachable");
+
+    let dir = tmp_dir("early-err");
+    let opts = SweepOptions {
+        out: Some(dir.clone()),
+        resume: true,
+        target_error: Some(target),
+        ..Default::default()
+    };
+    let first = run_configs(
+        vec![("run".into(), cfg.clone())],
+        &opts,
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let first = &first.outcomes[0];
+    assert_eq!(
+        first.stopped.as_ref().map(|s| (s.t, s.reason.clone())),
+        Some((full.records[stop_idx].t, "target_error".to_string()))
+    );
+    assert_eq!(first.series.records.len(), stop_idx + 1);
+
+    // Resume: the truncated run is complete — skipped, with the
+    // truncation metadata and the exact stored prefix.
+    let resumed = run_configs(
+        vec![("run".into(), cfg.clone())],
+        &opts,
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    let resumed = &resumed.outcomes[0];
+    assert!(resumed.skipped);
+    assert_eq!(resumed.stopped, first.stopped, "truncation recorded in results.jsonl");
+    assert_series_bits_eq(&first.series, &resumed.series, "stored truncated series");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn early_stop_frees_its_worker_for_a_pending_run() {
+    // ISSUE-4 satellite: freed workers actually reassign. Three runs on
+    // a 2-worker budget: A (quadratic — no test set, so a target_error
+    // never stops it) runs long; B and C (logreg) early-stop at their
+    // t = 0 evaluation because target_error = 1.0 is trivially met. The
+    // worker that finishes B must pick up pending C while A is still
+    // running — the event log pins the ordering.
+    let quad = ExperimentConfig {
+        name: "long-A".into(),
+        nodes: 6,
+        steps: 20000,
+        eval_every: 5000,
+        problem: "quadratic:64".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let logreg = |name: &str, seed: u64| ExperimentConfig {
+        name: name.into(),
+        problem: "logreg:16:3:4".into(),
+        steps: 10000,
+        eval_every: 1000,
+        seed,
+        ..quad.clone()
+    };
+    let events: Arc<Mutex<Vec<(String, String)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    let opts = SweepOptions {
+        workers: 2,
+        target_error: Some(1.0),
+        on_event: Some(Arc::new(move |e: &RunEvent| {
+            let mut v = sink.lock().unwrap();
+            match e {
+                RunEvent::Started { label, .. } => v.push(("start".into(), label.clone())),
+                RunEvent::Finished { label, .. } => v.push(("finish".into(), label.clone())),
+            }
+        })),
+        ..Default::default()
+    };
+    let report = run_configs(
+        vec![
+            ("A".into(), quad.clone()),
+            ("B".into(), logreg("stop-B", 4)),
+            ("C".into(), logreg("stop-C", 5)),
+        ],
+        &opts,
+        &ArtifactCache::new(),
+    )
+    .unwrap();
+    assert_eq!(report.executed, 3);
+    assert!(report.outcomes[0].stopped.is_none(), "A runs to completion");
+    for i in [1, 2] {
+        let stop = report.outcomes[i].stopped.as_ref().expect("B/C early-stop");
+        assert_eq!(stop.t, 0, "trivial target stops at the t=0 record");
+        assert_eq!(stop.reason, "target_error");
+        assert_eq!(report.outcomes[i].series.records.len(), 1);
+    }
+    let events = events.lock().unwrap();
+    let pos = |kind: &str, label: &str| {
+        events
+            .iter()
+            .position(|(k, l)| k == kind && l == label)
+            .unwrap_or_else(|| panic!("missing event {kind}/{label}: {events:?}"))
+    };
+    assert!(
+        pos("start", "C") < pos("finish", "A"),
+        "pending run C must start before long run A finishes: {events:?}"
     );
 }
 
