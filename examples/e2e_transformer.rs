@@ -17,8 +17,11 @@
 //! The loss curve (from ~ln 256 ≈ 5.55 downward) is recorded in
 //! EXPERIMENTS.md §E2E.
 
-use sparq::coordinator::{run, RunOptions, SparqConfig, SparqSgd};
+use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
 use sparq::data::corpus::{generate_corpus, LmBatcher};
+use sparq::metrics::RoundRecord;
+use sparq::problems::GradientSource;
+use sparq::run::{Run, RunObserver};
 use sparq::graph::{uniform_neighbor, Topology, TopologyKind};
 use sparq::runtime::{Manifest, Runtime};
 use sparq::runtime::model::PjrtLm;
@@ -70,17 +73,29 @@ fn main() {
     let mut algo = SparqSgd::new(cfg, d);
     algo.init_params(&x0);
 
+    // Drive the borrowed algorithm/model pair through the Run handle —
+    // the same loop the sweep engine uses, with a progress observer.
+    struct Progress;
+    impl RunObserver for Progress {
+        fn evaluated(&mut self, r: &RoundRecord, _done: bool) -> bool {
+            println!(
+                "  t={:<7} loss={:.4} bits={} rounds={} consensus={:.3e}",
+                r.t, r.loss, r.bits, r.comm_rounds, r.consensus
+            );
+            false
+        }
+    }
+    algo.set_workers(args.usize("workers", 1));
     let t0 = std::time::Instant::now();
-    let series = run(
-        &mut algo,
-        &mut model,
-        &RunOptions {
-            steps,
-            eval_every,
-            verbose: true,
-            workers: args.usize("workers", 1),
-        },
+    let mut training = Run::new(
+        &mut algo as &mut dyn DecentralizedAlgo,
+        &mut model as &mut dyn GradientSource,
+        steps,
+        eval_every,
+        "e2e-transformer".to_string(),
     );
+    training.drive(&mut Progress).expect("observer cannot fail");
+    let series = training.into_series();
     let wall = t0.elapsed().as_secs_f64();
 
     let first = &series.records[0];

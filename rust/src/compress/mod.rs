@@ -104,31 +104,15 @@ pub fn index_bits(d: usize) -> u64 {
 }
 
 /// Parse an operator spec string: `identity`, `topk:K`, `randk:K`, `sign`,
-/// `qsgd:S`, `sign_topk:K`, `qsgd_topk:K:S`. K may be suffixed with `%`
-/// for a fraction of d resolved at construction (`pct` helpers).
+/// `qsgd:S`, `sign_topk:K[:paper]`, `qsgd_topk:K:S`. K may be suffixed
+/// with `%` for a fraction of d resolved at construction (`pct` helpers).
+///
+/// The grammar lives in [`crate::config::CompressorSpec`] (the typed
+/// config surface); this is the legacy `Option` facade over it.
 pub fn parse(spec: &str, d: usize) -> Option<Box<dyn Compressor>> {
-    let parts: Vec<&str> = spec.split(':').collect();
-    let k_of = |s: &str| -> Option<usize> {
-        if let Some(p) = s.strip_suffix('%') {
-            let frac: f64 = p.parse().ok()?;
-            Some(((frac / 100.0 * d as f64).round() as usize).clamp(1, d))
-        } else {
-            s.parse().ok()
-        }
-    };
-    match parts.as_slice() {
-        ["identity"] => Some(Box::new(Identity)),
-        ["sign"] => Some(Box::new(SignL1)),
-        ["topk", k] => Some(Box::new(TopK::new(k_of(k)?))),
-        ["randk", k] => Some(Box::new(RandK::new(k_of(k)?))),
-        ["qsgd", s] => Some(Box::new(QsgdOp::new(s.parse().ok()?))),
-        ["sign_topk", k] => Some(Box::new(SignTopK::new(k_of(k)?))),
-        ["sign_topk", k, "paper"] => {
-            Some(Box::new(SignTopK::paper_accounting(k_of(k)?)))
-        }
-        ["qsgd_topk", k, s] => Some(Box::new(QsgdTopK::new(k_of(k)?, s.parse().ok()?))),
-        _ => None,
-    }
+    spec.parse::<crate::config::CompressorSpec>()
+        .ok()
+        .map(|s| s.build(d))
 }
 
 thread_local! {

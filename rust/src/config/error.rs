@@ -1,0 +1,176 @@
+//! The single structured error type of the config surface.
+//!
+//! Every way an [`ExperimentConfig`](super::ExperimentConfig) can be
+//! wrong — an unparsable field spec, an out-of-range value, a pair of
+//! fields that contradict each other, a typo'd JSON key — surfaces as
+//! one [`ConfigError`] carrying the offending **field**, the rejected
+//! **value**, a human-readable **reason**, and (when there is an obvious
+//! fix) a **suggestion**. This replaces the pre-redesign mix of
+//! `Option`-returning and `Result<_, String>`-returning module parsers:
+//! callers match on structure, render with `Display`, or bubble through
+//! `?` — nothing needs to grep message strings to find out *which* knob
+//! was wrong.
+
+use std::fmt;
+
+/// Structured configuration error (see module docs). The `Display` form
+/// is what the CLI prints and what the snapshot tests in
+/// `rust/tests/config_golden.rs` pin.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// A field's value failed to parse or validate.
+    Value {
+        /// Config field (or sub-field path like `trigger.eps`).
+        field: String,
+        /// The rejected input, verbatim.
+        value: String,
+        reason: String,
+        /// An actionable fix or the expected grammar, when one exists.
+        suggestion: Option<String>,
+    },
+    /// Two fields are individually valid but contradict each other
+    /// (found by [`ExperimentConfig::resolve`](super::ExperimentConfig::resolve)).
+    Conflict {
+        field: String,
+        other: String,
+        reason: String,
+        suggestion: Option<String>,
+    },
+    /// An unknown key in a JSON config object (typo safety: a misspelled
+    /// knob must not silently fall back to its default).
+    UnknownKey { key: String, valid: Vec<String> },
+    /// The input is not shaped like a config at all (non-object JSON,
+    /// unreadable file, ...).
+    Shape { reason: String },
+}
+
+impl ConfigError {
+    /// A field-value rejection.
+    pub fn value(
+        field: impl Into<String>,
+        value: impl Into<String>,
+        reason: impl Into<String>,
+    ) -> ConfigError {
+        ConfigError::Value {
+            field: field.into(),
+            value: value.into(),
+            reason: reason.into(),
+            suggestion: None,
+        }
+    }
+
+    /// A cross-field contradiction.
+    pub fn conflict(
+        field: impl Into<String>,
+        other: impl Into<String>,
+        reason: impl Into<String>,
+    ) -> ConfigError {
+        ConfigError::Conflict {
+            field: field.into(),
+            other: other.into(),
+            reason: reason.into(),
+            suggestion: None,
+        }
+    }
+
+    /// Attach an actionable suggestion (no-op for `UnknownKey`/`Shape`,
+    /// which carry their own fix).
+    pub fn suggest(mut self, s: impl Into<String>) -> ConfigError {
+        match &mut self {
+            ConfigError::Value { suggestion, .. } | ConfigError::Conflict { suggestion, .. } => {
+                *suggestion = Some(s.into());
+            }
+            _ => {}
+        }
+        self
+    }
+
+    /// Replace the reported value (e.g. widen a sub-field rejection to
+    /// the whole spec string the user wrote).
+    pub fn with_value(mut self, v: impl Into<String>) -> ConfigError {
+        if let ConfigError::Value { value, .. } = &mut self {
+            *value = v.into();
+        }
+        self
+    }
+
+    /// The config field the error anchors to, when it has one.
+    pub fn field(&self) -> Option<&str> {
+        match self {
+            ConfigError::Value { field, .. } | ConfigError::Conflict { field, .. } => Some(field),
+            ConfigError::UnknownKey { key, .. } => Some(key),
+            ConfigError::Shape { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Value {
+                field,
+                value,
+                reason,
+                suggestion,
+            } => {
+                write!(f, "invalid {field} {value:?}: {reason}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " (try: {s})")?;
+                }
+                Ok(())
+            }
+            ConfigError::Conflict {
+                field,
+                other,
+                reason,
+                suggestion,
+            } => {
+                write!(f, "config sets both {field} and {other}: {reason}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " (try: {s})")?;
+                }
+                Ok(())
+            }
+            ConfigError::UnknownKey { key, valid } => {
+                write!(f, "unknown config key {key:?}; valid keys: {}", valid.join(", "))
+            }
+            ConfigError::Shape { reason } => write!(f, "{reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_field_value_reason_suggestion() {
+        let e = ConfigError::value("trigger", "poly:2:1.5", "eps must lie in (0, 1)")
+            .suggest("poly:2:0.5");
+        let s = e.to_string();
+        assert!(s.contains("trigger"), "{s}");
+        assert!(s.contains("poly:2:1.5"), "{s}");
+        assert!(s.contains("(0, 1)"), "{s}");
+        assert!(s.contains("try: poly:2:0.5"), "{s}");
+        assert_eq!(e.field(), Some("trigger"));
+    }
+
+    #[test]
+    fn unknown_key_lists_valid_keys() {
+        let e = ConfigError::UnknownKey {
+            key: "trigerr".into(),
+            valid: vec!["trigger".into(), "lr".into()],
+        };
+        let s = e.to_string();
+        assert!(s.contains("trigerr") && s.contains("trigger, lr"), "{s}");
+    }
+
+    #[test]
+    fn conflict_names_both_fields() {
+        let e = ConfigError::conflict("topology", "topology_schedule", "the schedule wins");
+        let s = e.to_string();
+        assert!(s.contains("topology") && s.contains("topology_schedule"), "{s}");
+    }
+}

@@ -1,5 +1,30 @@
 //! Typed experiment configuration (JSON in/out) + presets mirroring the
 //! paper's Section 5 setups.
+//!
+//! Parse-don't-validate: every knob field is a typed spec value from
+//! [`specs`] — constructed (and therefore validated) exactly once, at
+//! the config boundary — rather than a raw `String` re-parsed by the
+//! subsystem that happens to consume it. JSON input accepts both the
+//! legacy string forms (`"compressor": "topk:100"`) and structured
+//! objects (`"compressor": {"kind": "topk", "k": 100}`); output always
+//! emits the canonical strings, so `config_hash` and sweep resume are
+//! bit-compatible with the string-field era.
+//!
+//! Cross-field constraints live in [`ExperimentConfig::resolve`], which
+//! produces the [`ResolvedConfig`] everything downstream (builders, the
+//! [`Run`](crate::run::Run) handle, the sweep engine) consumes. All
+//! failures are one structured [`ConfigError`].
+
+pub mod error;
+pub mod resolved;
+pub mod specs;
+
+pub use error::ConfigError;
+pub use resolved::{GammaMode, ResolvedConfig};
+pub use specs::{
+    CompressorKind, CompressorSpec, KSpec, LinkSpec, LrSpec, ProblemKind, ProblemSpec,
+    ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec, TriggerSpec,
+};
 
 use crate::util::json::Json;
 
@@ -30,37 +55,37 @@ impl Algo {
     }
 }
 
-/// Full experiment description. String-spec fields use the module parsers
-/// (`compress::parse`, `ThresholdSchedule::parse`, `LrSchedule::parse`,
-/// `TopologyKind::parse`) so configs stay flat and diff-friendly.
+/// Full experiment description. Every knob field is a typed spec (see
+/// module docs); scalars stay scalars. Construct via JSON
+/// ([`from_json`](Self::from_json) / [`from_file`](Self::from_file)),
+/// struct literals with the typed constructors (or `"spec".into()`,
+/// which panics on an invalid literal), then call
+/// [`resolve`](Self::resolve) for the cross-field-checked form.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
     pub algo: Algo,
     pub nodes: usize,
-    pub topology: String,
-    /// Time-varying topology spec (`graph::dynamic::TopologySchedule`):
-    /// "static" (default — use `topology` unchanged),
-    /// "switch:K1,K2,...:P", or "sample:BASE:M". Non-static specs name
-    /// their own graphs and take precedence over `topology`, which is
-    /// then ignored.
-    pub topology_schedule: String,
-    /// Link-fault spec (`comm::link::LinkModel`): "none" (default),
-    /// "drop:P", "straggler:I:P", joined with '+'.
-    pub link: String,
-    pub compressor: String,
-    pub trigger: String,
-    pub lr: String,
-    /// Sync period H.
-    pub h: u64,
+    /// Communication graph (ignored when `topology_schedule` is
+    /// non-static — the schedule names its own graphs).
+    pub topology: TopologySpec,
+    /// Time-varying topology schedule; `ScheduleSpec::fixed()` (the
+    /// default) keeps `topology` in force for the whole run.
+    pub topology_schedule: ScheduleSpec,
+    /// Link-fault model (`LinkSpec::ideal()` = the loss-free default).
+    pub link: LinkSpec,
+    pub compressor: CompressorSpec,
+    pub trigger: TriggerSpec,
+    pub lr: LrSpec,
+    /// Synchronization schedule I_T. Legacy configs write the period as
+    /// a bare number (`"h": 5` = sync every 5 iterations); explicit
+    /// index sets are also expressible (`"h": "explicit:3,5,10"`).
+    pub h: SyncSpec,
     pub steps: u64,
     pub eval_every: u64,
     pub momentum: f64,
     pub seed: u64,
-    /// Problem spec: "quadratic:D[:NOISE[:SPREAD]]" (gradient-noise σ,
-    /// heterogeneity spread; defaults 0.05 / 1.0),
-    /// "logreg:DIN:CLASSES:BATCH", "mlp:DIN:HIDDEN:CLASSES:BATCH".
-    pub problem: String,
+    pub problem: ProblemSpec,
     /// Consensus step size γ: > 0 pins the value, 0 ⇒ tuned heuristic
     /// (`SpectralInfo::gamma_tuned`), < 0 pins γ = 0 exactly (mixing
     /// disabled — the ablation diagnostic; plain 0 cannot mean that
@@ -78,18 +103,18 @@ impl Default for ExperimentConfig {
             name: "default".into(),
             algo: Algo::Sparq,
             nodes: 8,
-            topology: "ring".into(),
-            topology_schedule: "static".into(),
-            link: "none".into(),
-            compressor: "sign_topk:10%".into(),
-            trigger: "const:100".into(),
-            lr: "invtime:100:1".into(),
-            h: 5,
+            topology: TopologySpec::ring(),
+            topology_schedule: ScheduleSpec::fixed(),
+            link: LinkSpec::ideal(),
+            compressor: CompressorSpec::sign_top_k_pct(10.0),
+            trigger: TriggerSpec::constant(100.0),
+            lr: LrSpec::inv_time(100.0, 1.0),
+            h: SyncSpec::every(5),
             steps: 1000,
             eval_every: 50,
             momentum: 0.0,
             seed: 42,
-            problem: "quadratic:64".into(),
+            problem: ProblemSpec::quadratic(64),
             gamma: 0.0,
             workers: 1,
         }
@@ -102,18 +127,18 @@ impl ExperimentConfig {
             .set("name", self.name.as_str())
             .set("algo", self.algo.as_str())
             .set("nodes", self.nodes)
-            .set("topology", self.topology.as_str())
-            .set("topology_schedule", self.topology_schedule.as_str())
-            .set("link", self.link.as_str())
-            .set("compressor", self.compressor.as_str())
-            .set("trigger", self.trigger.as_str())
-            .set("lr", self.lr.as_str())
-            .set("h", self.h)
+            .set("topology", self.topology.to_json())
+            .set("topology_schedule", self.topology_schedule.to_json())
+            .set("link", self.link.to_json())
+            .set("compressor", self.compressor.to_json())
+            .set("trigger", self.trigger.to_json())
+            .set("lr", self.lr.to_json())
+            .set("h", self.h.to_json())
             .set("steps", self.steps)
             .set("eval_every", self.eval_every)
             .set("momentum", self.momentum)
             .set("seed", self.seed)
-            .set("problem", self.problem.as_str())
+            .set("problem", self.problem.to_json())
             .set("gamma", self.gamma)
             .set("workers", self.workers)
     }
@@ -139,82 +164,111 @@ impl ExperimentConfig {
         "workers",
     ];
 
-    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
-        let obj = j
-            .as_obj()
-            .ok_or_else(|| "config must be a JSON object".to_string())?;
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, ConfigError> {
+        let obj = j.as_obj().ok_or_else(|| ConfigError::Shape {
+            reason: "config must be a JSON object".into(),
+        })?;
         // Reject unknown keys: a typo ("trigerr") must not silently fall
         // back to the default schedule.
         for key in obj.keys() {
             if !Self::KEYS.contains(&key.as_str()) {
-                return Err(format!(
-                    "unknown config key {key:?}; valid keys: {}",
-                    Self::KEYS.join(", ")
-                ));
+                return Err(ConfigError::UnknownKey {
+                    key: key.clone(),
+                    valid: Self::KEYS.iter().map(|k| k.to_string()).collect(),
+                });
             }
         }
         let base = ExperimentConfig::default();
-        let s = |k: &str, dflt: &str| -> Result<String, String> {
+        let s = |k: &str, dflt: &str| -> Result<String, ConfigError> {
             match j.get(k) {
                 None => Ok(dflt.to_string()),
-                Some(v) => v
-                    .as_str()
-                    .map(str::to_string)
-                    .ok_or_else(|| format!("config key {k:?} must be a string")),
+                Some(v) => v.as_str().map(str::to_string).ok_or_else(|| {
+                    ConfigError::value(k, v.to_string(), "must be a string")
+                }),
             }
         };
         // Unsigned integer fields: error on negatives instead of wrapping
         // through `as u64` (e.g. "steps": -100 used to become 2^64 − 100…
         // truncated — either way nonsense).
-        let u = |k: &str, dflt: u64| -> Result<u64, String> {
+        let u = |k: &str, dflt: u64| -> Result<u64, ConfigError> {
             match j.get(k) {
                 None => Ok(dflt),
                 Some(v) => {
-                    let x = v
-                        .as_f64()
-                        .ok_or_else(|| format!("config key {k:?} must be a number"))?;
+                    let x = v.as_f64().ok_or_else(|| {
+                        ConfigError::value(k, v.to_string(), "must be a number")
+                    })?;
                     if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
-                        return Err(format!(
-                            "config key {k:?} must be a non-negative integer, got {x}"
+                        return Err(ConfigError::value(
+                            k,
+                            v.to_string(),
+                            format!("must be a non-negative integer, got {x}"),
                         ));
                     }
                     Ok(x as u64)
                 }
             }
         };
-        let f = |k: &str, dflt: f64| -> Result<f64, String> {
+        let f = |k: &str, dflt: f64| -> Result<f64, ConfigError> {
             match j.get(k) {
                 None => Ok(dflt),
-                Some(v) => v
-                    .as_f64()
-                    .ok_or_else(|| format!("config key {k:?} must be a number")),
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    ConfigError::value(k, v.to_string(), "must be a number")
+                }),
             }
         };
+        // Typed spec fields: accept the legacy string or the structured
+        // object form; default when absent.
+        fn spec<T>(
+            j: &Json,
+            k: &str,
+            dflt: &T,
+            parse: impl Fn(&Json) -> Result<T, ConfigError>,
+        ) -> Result<T, ConfigError>
+        where
+            T: Clone,
+        {
+            match j.get(k) {
+                None => Ok(dflt.clone()),
+                Some(v) => parse(v),
+            }
+        }
         let algo_s = s("algo", base.algo.as_str())?;
         Ok(ExperimentConfig {
             name: s("name", &base.name)?,
-            algo: Algo::parse(&algo_s).ok_or(format!("unknown algo {algo_s:?}"))?,
+            algo: Algo::parse(&algo_s).ok_or_else(|| {
+                ConfigError::value("algo", &algo_s, "unknown algo")
+                    .suggest("sparq, choco, or vanilla")
+            })?,
             nodes: u("nodes", base.nodes as u64)? as usize,
-            topology: s("topology", &base.topology)?,
-            topology_schedule: s("topology_schedule", &base.topology_schedule)?,
-            link: s("link", &base.link)?,
-            compressor: s("compressor", &base.compressor)?,
-            trigger: s("trigger", &base.trigger)?,
-            lr: s("lr", &base.lr)?,
-            h: u("h", base.h)?,
+            topology: spec(j, "topology", &base.topology, TopologySpec::from_json)?,
+            topology_schedule: spec(
+                j,
+                "topology_schedule",
+                &base.topology_schedule,
+                ScheduleSpec::from_json,
+            )?,
+            link: spec(j, "link", &base.link, LinkSpec::from_json)?,
+            compressor: spec(j, "compressor", &base.compressor, CompressorSpec::from_json)?,
+            trigger: spec(j, "trigger", &base.trigger, TriggerSpec::from_json)?,
+            lr: spec(j, "lr", &base.lr, LrSpec::from_json)?,
+            h: spec(j, "h", &base.h, SyncSpec::from_json)?,
             steps: u("steps", base.steps)?,
             eval_every: u("eval_every", base.eval_every)?,
             momentum: f("momentum", base.momentum)?,
             seed: u("seed", base.seed)?,
-            problem: s("problem", &base.problem)?,
+            problem: spec(j, "problem", &base.problem, ProblemSpec::from_json)?,
             gamma: f("gamma", base.gamma)?,
             workers: u("workers", base.workers as u64)? as usize,
         })
     }
 
-    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Shape {
+            reason: format!("{path}: {e}"),
+        })?;
+        let j = Json::parse(&text).map_err(|e| ConfigError::Shape {
+            reason: format!("{path}: {e}"),
+        })?;
         Self::from_json(&j)
     }
 }
@@ -230,20 +284,16 @@ pub mod presets {
             name: "fig1-convex-sparq".into(),
             algo: Algo::Sparq,
             nodes: 60,
-            topology: "ring".into(),
-            topology_schedule: "static".into(),
-            link: "none".into(),
-            compressor: "sign_topk:10".into(),
-            trigger: "const:5000".into(),
-            lr: "invtime:100:1".into(),
-            h: 5,
+            compressor: CompressorSpec::sign_top_k(10),
+            trigger: TriggerSpec::constant(5000.0),
+            lr: LrSpec::inv_time(100.0, 1.0),
+            h: SyncSpec::every(5),
             steps,
             eval_every: 25, // fine-grained: early target crossings matter
             momentum: 0.0,
             seed: 42,
-            problem: "logreg:784:10:5".into(),
-            gamma: 0.0,
-            workers: 1,
+            problem: ProblemSpec::logreg(784, 10, 5),
+            ..Default::default()
         }
     }
 
@@ -254,20 +304,18 @@ pub mod presets {
             name: "fig1-nonconvex-sparq".into(),
             algo: Algo::Sparq,
             nodes: 8,
-            topology: "ring".into(),
-            topology_schedule: "static".into(),
-            link: "none".into(),
-            compressor: "sign_topk:10%".into(),
-            trigger: format!("piecewise:2.0:1.0:10:60:{steps_per_epoch}"),
-            lr: format!("warmup:0.05:5:5:{steps_per_epoch}:150,250"),
-            h: 5,
+            compressor: CompressorSpec::sign_top_k_pct(10.0),
+            // Float spellings ("2.0") preserved verbatim — the canonical
+            // string is part of the config hash.
+            trigger: format!("piecewise:2.0:1.0:10:60:{steps_per_epoch}").into(),
+            lr: format!("warmup:0.05:5:5:{steps_per_epoch}:150,250").into(),
+            h: SyncSpec::every(5),
             steps,
             eval_every: (steps / 40).max(1),
             momentum: 0.9,
             seed: 42,
-            problem: "mlp:3072:128:10:32".into(),
-            gamma: 0.0,
-            workers: 1,
+            problem: ProblemSpec::mlp(3072, 128, 10, 32),
+            ..Default::default()
         }
     }
 }
@@ -302,7 +350,7 @@ mod tests {
     #[test]
     fn rejects_unknown_keys_with_listing() {
         let j = Json::parse(r#"{"trigerr": "const:100"}"#).unwrap();
-        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("trigerr"), "{err}");
         assert!(err.contains("trigger"), "listing missing: {err}");
         // non-object top level is an error too
@@ -321,7 +369,7 @@ mod tests {
             r#"{"eval_every": -1}"#,
         ] {
             let j = Json::parse(bad).unwrap();
-            let err = ExperimentConfig::from_json(&j).unwrap_err();
+            let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
             assert!(err.contains("non-negative"), "{bad}: {err}");
         }
         // fractional values must not silently truncate through `as u64`
@@ -330,7 +378,7 @@ mod tests {
         let j = Json::parse(r#"{"steps": 100.0}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().steps, 100);
         // momentum/gamma are f64 fields — negatives there are allowed by
-        // the parser (semantics are checked downstream)
+        // the parser (semantics are checked at resolve())
         let j = Json::parse(r#"{"momentum": -0.5}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_ok());
     }
@@ -341,6 +389,43 @@ mod tests {
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"trigger": 5}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_specs_fail_at_parse_time_with_the_field_named() {
+        for (body, field) in [
+            (r#"{"trigger": "poly:2:1.5"}"#, "trigger"),
+            (r#"{"compressor": "topk:0"}"#, "compressor"),
+            (r#"{"lr": "const:fast"}"#, "lr"),
+            (r#"{"link": "drop:2"}"#, "link"),
+            (r#"{"topology": "moebius"}"#, "topology"),
+            (r#"{"topology_schedule": "switch:ring:0"}"#, "topology_schedule"),
+            (r#"{"problem": "svm:1"}"#, "problem"),
+            (r#"{"h": "explicit:5,3"}"#, "h"),
+        ] {
+            let j = Json::parse(body).unwrap();
+            let err = ExperimentConfig::from_json(&j).unwrap_err();
+            assert_eq!(err.field(), Some(field), "{body}: {err}");
+        }
+    }
+
+    #[test]
+    fn structured_object_fields_parse_alongside_strings() {
+        let j = Json::parse(
+            r#"{
+                "compressor": {"kind": "sign_topk", "k": "10%"},
+                "trigger": {"kind": "const", "c0": 100},
+                "lr": {"kind": "invtime", "a": 100, "b": 1},
+                "problem": {"kind": "quadratic", "d": 64}
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        // object forms canonicalize to the default config's strings, so
+        // the whole config is the default (name aside)
+        assert_eq!(cfg, ExperimentConfig::default());
+        // and hashes identically to the string-form config
+        assert_eq!(cfg.to_json().to_string(), ExperimentConfig::default().to_json().to_string());
     }
 
     #[test]
@@ -355,14 +440,13 @@ mod tests {
     }
 
     #[test]
-    fn preset_specs_parse() {
+    fn preset_specs_are_typed_and_buildable() {
         let cfg = presets::convex_sparq(100);
-        assert!(crate::compress::parse(&cfg.compressor, 7850).is_some());
-        assert!(crate::trigger::ThresholdSchedule::parse(&cfg.trigger).is_ok());
-        assert!(crate::schedule::LrSchedule::parse(&cfg.lr).is_some());
+        assert_eq!(cfg.compressor.build(7850).name(), "sign_topk(k=10)");
+        assert_eq!(cfg.problem.dim(), 7850);
+        assert!(cfg.resolve().is_ok());
         let cfg2 = presets::nonconvex_sparq(100, 50);
-        assert!(crate::compress::parse(&cfg2.compressor, 394634).is_some());
-        assert!(crate::trigger::ThresholdSchedule::parse(&cfg2.trigger).is_ok());
-        assert!(crate::schedule::LrSchedule::parse(&cfg2.lr).is_some());
+        assert_eq!(cfg2.problem.dim(), 394634);
+        assert!(cfg2.resolve().is_ok());
     }
 }

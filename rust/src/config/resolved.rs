@@ -1,0 +1,326 @@
+//! Cross-field resolution: [`ExperimentConfig::resolve`] turns a typed
+//! config into a [`ResolvedConfig`] — the proof that the *composition*
+//! of knobs is coherent, not just each knob alone.
+//!
+//! Field-local validity is established at parse time by the spec types;
+//! what remains are the constraints that span fields: the topology (and
+//! every graph a schedule names) must be constructible on `nodes`,
+//! straggler indices must be in range, a `sample:BASE:M` schedule must
+//! not ask for more edges than the base graph has, a k-sparse compressor
+//! must not name more coordinates than the problem has parameters, and
+//! the momentum/γ scalars must be semantically meaningful. Everything
+//! downstream — `experiments::builder`, the [`Run`](crate::run::Run)
+//! handle, the sweep engine — consumes the resolved form, so a config
+//! that resolves is a config that runs.
+//!
+//! ```
+//! use sparq::config::{CompressorSpec, ExperimentConfig};
+//!
+//! let cfg = ExperimentConfig {
+//!     nodes: 4,
+//!     compressor: CompressorSpec::top_k(8),
+//!     ..Default::default()
+//! };
+//! let resolved = cfg.resolve().expect("coherent composition");
+//! assert_eq!(resolved.dim, 64); // quadratic:64, the default problem
+//!
+//! // Compositions that cannot run fail at resolve time, not mid-run:
+//! let bad = ExperimentConfig {
+//!     nodes: 4,
+//!     link: "straggler:9:0.5".into(), // node 9 of 4
+//!     ..Default::default()
+//! };
+//! assert!(bad.resolve().is_err());
+//! ```
+
+use super::error::ConfigError;
+use super::ExperimentConfig;
+use crate::comm::LinkModel;
+use crate::graph::TopologySchedule;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::ThresholdSchedule;
+
+/// How the consensus step size γ is chosen (decoded from the config's
+/// signed-`f64` convention: > 0 pins, 0 tunes, < 0 pins zero exactly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GammaMode {
+    /// Tune from the mixing matrix's spectrum
+    /// (`SpectralInfo::gamma_tuned`).
+    Tuned,
+    /// Use exactly this value (γ = 0 disables mixing — the ablation
+    /// diagnostic).
+    Pinned(f64),
+}
+
+impl GammaMode {
+    /// The pinned value, if any.
+    pub fn pinned(&self) -> Option<f64> {
+        match self {
+            GammaMode::Tuned => None,
+            GammaMode::Pinned(g) => Some(*g),
+        }
+    }
+}
+
+/// A cross-field-validated config plus the derived objects every
+/// consumer needs (see module docs). Constructed only by
+/// [`ExperimentConfig::resolve`].
+#[derive(Clone, Debug)]
+pub struct ResolvedConfig {
+    cfg: ExperimentConfig,
+    /// Flat parameter dimension of the problem (known without building
+    /// the dataset).
+    pub dim: usize,
+    /// Synchronization index set I_T.
+    pub sync: SyncSchedule,
+    /// Event-trigger threshold schedule c_t.
+    pub trigger: ThresholdSchedule,
+    /// Learning-rate schedule η_t.
+    pub lr: LrSchedule,
+    /// Seeded link-fault process (seed already mixed in).
+    pub link: LinkModel,
+    /// Replayable time-varying topology schedule.
+    pub schedule: TopologySchedule,
+    /// Consensus step-size policy.
+    pub gamma: GammaMode,
+}
+
+impl ResolvedConfig {
+    /// The validated source config.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+}
+
+impl ExperimentConfig {
+    /// Check every cross-field constraint and derive the objects a run
+    /// needs. The single validation gate of the experiment surface: a
+    /// config that resolves builds and runs without config-related
+    /// panics.
+    pub fn resolve(&self) -> Result<ResolvedConfig, ConfigError> {
+        if self.nodes == 0 {
+            return Err(ConfigError::value(
+                "nodes",
+                "0",
+                "need at least one node",
+            ));
+        }
+
+        // The graph(s) in force must be constructible on `nodes`.
+        let schedule = self.topology_schedule.build(self.nodes, self.seed)?;
+        if schedule.is_static() {
+            self.topology
+                .kind()
+                .check_nodes(self.nodes)
+                .map_err(|reason| {
+                    ConfigError::value("topology", self.topology.as_str(), reason)
+                })?;
+        } else if self.topology != ExperimentConfig::default().topology {
+            // A non-static schedule dictates the starting matrix (switch
+            // phase 0 / the sampling base graph) and the `topology` field
+            // is NOT consulted — the schedule spec names its own graphs.
+            // Reject the contradictory combination instead of silently
+            // ignoring an explicit topology.
+            return Err(ConfigError::conflict(
+                "topology",
+                "topology_schedule",
+                format!(
+                    "the schedule {:?} names its own graphs, so the topology {:?} \
+                     would be ignored",
+                    self.topology_schedule.as_str(),
+                    self.topology.as_str()
+                ),
+            )
+            .suggest("remove one of the two; the schedule wins"));
+        }
+
+        // Straggler indices must name real nodes.
+        let link = self.link.build(self.seed);
+        for &(node, _) in self.link.stragglers() {
+            if node >= self.nodes {
+                return Err(ConfigError::value(
+                    "link",
+                    self.link.as_str(),
+                    format!(
+                        "straggler node {node} out of range for {} nodes",
+                        self.nodes
+                    ),
+                ));
+            }
+        }
+
+        // A k-sparse compressor cannot name more coordinates than the
+        // problem has parameters (percent forms resolve within range by
+        // construction).
+        let dim = self.problem.dim();
+        if let Some(k) = self.compressor.resolved_k(dim) {
+            if k > dim {
+                return Err(ConfigError::value(
+                    "compressor",
+                    self.compressor.as_str(),
+                    format!("k = {k} exceeds the problem dimension d = {dim}"),
+                )
+                .suggest(format!("k <= {dim}, or a percentage form like \"topk:10%\"")));
+            }
+        }
+
+        if !self.momentum.is_finite() || !(0.0..1.0).contains(&self.momentum) {
+            return Err(ConfigError::value(
+                "momentum",
+                format!("{}", self.momentum),
+                "must lie in [0, 1)",
+            ));
+        }
+        if !self.gamma.is_finite() {
+            return Err(ConfigError::value(
+                "gamma",
+                format!("{}", self.gamma),
+                "must be finite (> 0 pins, 0 tunes, < 0 pins zero)",
+            ));
+        }
+        let gamma = if self.gamma > 0.0 {
+            GammaMode::Pinned(self.gamma)
+        } else if self.gamma < 0.0 {
+            GammaMode::Pinned(0.0)
+        } else {
+            GammaMode::Tuned
+        };
+
+        Ok(ResolvedConfig {
+            cfg: self.clone(),
+            dim,
+            sync: self.h.schedule().clone(),
+            trigger: self.trigger.schedule().clone(),
+            lr: self.lr.schedule().clone(),
+            link,
+            schedule,
+            gamma,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::specs::TopologySpec;
+
+    #[test]
+    fn default_config_resolves() {
+        let r = ExperimentConfig::default().resolve().unwrap();
+        assert_eq!(r.dim, 64);
+        assert_eq!(r.gamma, GammaMode::Tuned);
+        assert!(r.link.is_ideal());
+        assert!(r.schedule.is_static());
+    }
+
+    #[test]
+    fn gamma_sign_convention_decodes() {
+        let with_gamma = |gamma: f64| ExperimentConfig {
+            gamma,
+            ..Default::default()
+        };
+        assert_eq!(with_gamma(0.25).resolve().unwrap().gamma, GammaMode::Pinned(0.25));
+        assert_eq!(with_gamma(-1.0).resolve().unwrap().gamma, GammaMode::Pinned(0.0));
+        assert_eq!(with_gamma(0.0).resolve().unwrap().gamma, GammaMode::Tuned);
+        assert!(with_gamma(f64::NAN).resolve().is_err());
+    }
+
+    #[test]
+    fn straggler_out_of_range_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            link: "straggler:4:0.5".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // in-range resolves
+        let ok = ExperimentConfig {
+            nodes: 4,
+            link: "straggler:3:0.5".into(),
+            ..Default::default()
+        };
+        assert!(ok.resolve().is_ok());
+    }
+
+    #[test]
+    fn topology_node_compatibility_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            nodes: 15,
+            topology: TopologySpec::torus(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("perfect-square"), "{err}");
+        // and inside schedules too
+        let cfg = ExperimentConfig {
+            nodes: 15,
+            topology_schedule: "switch:ring,torus:100".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_err());
+        let cfg = ExperimentConfig {
+            nodes: 16,
+            topology_schedule: "switch:ring,torus:100".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
+    }
+
+    #[test]
+    fn conflicting_topology_and_schedule_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            nodes: 16,
+            topology: TopologySpec::torus(),
+            topology_schedule: "switch:ring,torus:100".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("names its own graphs"), "{err}");
+    }
+
+    #[test]
+    fn oversized_k_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            compressor: "topk:100".into(),
+            problem: "quadratic:64".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // percent forms always resolve in range
+        let cfg = ExperimentConfig {
+            compressor: "topk:100%".into(),
+            problem: "quadratic:64".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
+    }
+
+    #[test]
+    fn momentum_range_is_a_resolve_error() {
+        let with_momentum = |momentum: f64| ExperimentConfig {
+            momentum,
+            ..Default::default()
+        };
+        assert!(with_momentum(-0.5).resolve().is_err());
+        assert!(with_momentum(1.0).resolve().is_err());
+        assert!(with_momentum(0.9).resolve().is_ok());
+    }
+
+    #[test]
+    fn sample_edge_budget_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            nodes: 8,
+            topology_schedule: "sample:ring:9".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_err());
+        let cfg = ExperimentConfig {
+            nodes: 8,
+            topology_schedule: "sample:ring:8".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
+    }
+}

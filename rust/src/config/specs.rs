@@ -1,0 +1,1517 @@
+//! Typed spec values for every composable knob of an experiment.
+//!
+//! Parse-don't-validate: each field of
+//! [`ExperimentConfig`](super::ExperimentConfig) is one of these types,
+//! constructed exactly once — from a legacy spec string (`FromStr`
+//! accepts every pre-redesign form), a structured JSON object
+//! (`{"kind": "topk", "k": 100}` alongside `"topk:100"`), or a typed
+//! constructor — and guaranteed well-formed from then on. Invalid specs
+//! are unrepresentable past the config boundary; code downstream matches
+//! on the parsed payload instead of re-splitting strings.
+//!
+//! **Canonical strings.** Every spec remembers the exact string it was
+//! parsed from (typed constructors and JSON objects generate one), and
+//! `Display`/`to_json` emit it verbatim. `config_hash`, sweep resume
+//! ids, and `results.jsonl` therefore stay bit-compatible with the
+//! string-field era: parsing a legacy config and re-serializing it is
+//! the identity on bytes (`rust/tests/config_golden.rs` pins this for
+//! the driver specs and every `examples/specs/*.json`).
+//!
+//! Cross-field constraints (straggler index vs node count, `sample:B:M`
+//! vs the base graph's edge count, TopK `k` vs the problem dimension, …)
+//! cannot be checked by a single field; they live in
+//! [`ExperimentConfig::resolve`](super::ExperimentConfig::resolve).
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::error::ConfigError;
+use crate::compress::Compressor;
+use crate::graph::TopologyKind;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::ThresholdSchedule;
+use crate::util::json::Json;
+
+/// Shortest-round-trip float rendering for canonical spec strings
+/// (`2.0f64` renders as `"2"`, matching what a user would type).
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+/// Shared boilerplate: `Display` = canonical string, `FromStr` =
+/// legacy-grammar parser, panicking `From<&str>`/`From<String>` so
+/// struct-literal config construction (`compressor: "sign".into()`)
+/// keeps working — with the same panic prefixes the old builders used —
+/// and `PartialEq<&str>` for spec-string comparisons in tests/benches.
+macro_rules! spec_common {
+    ($ty:ident, $panic_prefix:literal) => {
+        impl fmt::Display for $ty {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str(&self.raw)
+            }
+        }
+
+        impl FromStr for $ty {
+            type Err = ConfigError;
+            fn from_str(s: &str) -> Result<Self, ConfigError> {
+                Self::parse_spec(s)
+            }
+        }
+
+        impl From<&str> for $ty {
+            fn from(s: &str) -> $ty {
+                s.parse()
+                    .unwrap_or_else(|e| panic!(concat!($panic_prefix, " {:?}: {}"), s, e))
+            }
+        }
+
+        impl From<String> for $ty {
+            fn from(s: String) -> $ty {
+                $ty::from(s.as_str())
+            }
+        }
+
+        impl PartialEq<&str> for $ty {
+            fn eq(&self, other: &&str) -> bool {
+                self.raw == *other
+            }
+        }
+
+        impl PartialEq<str> for $ty {
+            fn eq(&self, other: &str) -> bool {
+                self.raw == other
+            }
+        }
+
+        impl $ty {
+            /// The canonical spec string (what `Display` and `to_json`
+            /// emit).
+            pub fn as_str(&self) -> &str {
+                &self.raw
+            }
+        }
+    };
+}
+
+/// The default JSON form: the canonical spec string. (`SyncSpec` opts
+/// out — its legacy JSON form is a number.)
+macro_rules! spec_string_json {
+    ($ty:ident) => {
+        impl $ty {
+            /// JSON form: the canonical spec string. (Input additionally
+            /// accepts a structured object — see [`Self::from_json`].)
+            pub fn to_json(&self) -> Json {
+                Json::Str(self.raw.clone())
+            }
+        }
+    };
+}
+
+/// Reject unknown keys in a structured-object spec (typo safety).
+fn check_obj_keys(field: &str, j: &Json, valid: &[&str]) -> Result<(), ConfigError> {
+    let obj = j.as_obj().expect("caller matched Json::Obj");
+    for key in obj.keys() {
+        if !valid.contains(&key.as_str()) {
+            return Err(ConfigError::value(
+                field,
+                j.to_string(),
+                format!("unknown key {key:?} in spec object"),
+            )
+            .suggest(format!("one of: {}", valid.join(", "))));
+        }
+    }
+    Ok(())
+}
+
+fn obj_kind(field: &str, j: &Json) -> Result<String, ConfigError> {
+    j.get("kind")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| {
+            ConfigError::value(field, j.to_string(), "spec object needs a string \"kind\"")
+        })
+}
+
+fn obj_f64(field: &str, j: &Json, key: &str) -> Result<f64, ConfigError> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| {
+        ConfigError::value(field, j.to_string(), format!("missing numeric key {key:?}"))
+    })
+}
+
+fn obj_u64(field: &str, j: &Json, key: &str) -> Result<u64, ConfigError> {
+    let x = obj_f64(field, j, key)?;
+    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+        return Err(ConfigError::value(
+            field,
+            j.to_string(),
+            format!("key {key:?} must be a non-negative integer, got {x}"),
+        ));
+    }
+    Ok(x as u64)
+}
+
+// ---------------------------------------------------------------------
+// CompressorSpec
+// ---------------------------------------------------------------------
+
+/// A sparsity level: an absolute coordinate count or a percentage of the
+/// problem dimension, resolved at construction time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KSpec {
+    Count(usize),
+    /// Percent of d in (0, 100].
+    Percent(f64),
+}
+
+impl KSpec {
+    /// Resolve against dimension d (legacy semantics: round, clamp to
+    /// [1, d]).
+    pub fn resolve(&self, d: usize) -> usize {
+        match self {
+            KSpec::Count(k) => *k,
+            KSpec::Percent(p) => ((p / 100.0 * d as f64).round() as usize).clamp(1, d),
+        }
+    }
+
+    fn parse(field: &str, s: &str) -> Result<KSpec, ConfigError> {
+        if let Some(p) = s.strip_suffix('%') {
+            let frac: f64 = p.parse().map_err(|_| {
+                ConfigError::value(field, s, "percentage is not a number")
+            })?;
+            if !frac.is_finite() || frac <= 0.0 || frac > 100.0 {
+                return Err(ConfigError::value(
+                    field,
+                    s,
+                    format!("percentage must lie in (0, 100], got {frac}"),
+                ));
+            }
+            Ok(KSpec::Percent(frac))
+        } else {
+            let k: usize = s
+                .parse()
+                .map_err(|_| ConfigError::value(field, s, "k is not a positive integer"))?;
+            if k == 0 {
+                return Err(ConfigError::value(field, s, "k must be >= 1"));
+            }
+            Ok(KSpec::Count(k))
+        }
+    }
+}
+
+/// The parsed payload of a [`CompressorSpec`] (the paper's operator
+/// catalogue — see `compress` module docs for contracts and bit costs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorKind {
+    Identity,
+    Sign,
+    TopK(KSpec),
+    RandK(KSpec),
+    Qsgd { s: u32 },
+    SignTopK { k: KSpec, paper: bool },
+    QsgdTopK { k: KSpec, s: u32 },
+}
+
+/// Typed compression-operator spec. Construct with [`FromStr`] (legacy
+/// strings: `identity`, `sign`, `topk:K`, `randk:K`, `qsgd:S`,
+/// `sign_topk:K[:paper]`, `qsgd_topk:K:S`, K optionally `%`-suffixed),
+/// [`CompressorSpec::from_json`], or the typed constructors; build the
+/// operator with [`CompressorSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressorSpec {
+    raw: String,
+    kind: CompressorKind,
+}
+
+spec_string_json!(CompressorSpec);
+spec_common!(CompressorSpec, "bad compressor spec");
+
+impl CompressorSpec {
+    pub fn kind(&self) -> &CompressorKind {
+        &self.kind
+    }
+
+    pub fn identity() -> Self {
+        "identity".parse().expect("static spec")
+    }
+
+    pub fn sign() -> Self {
+        "sign".parse().expect("static spec")
+    }
+
+    pub fn top_k(k: usize) -> Self {
+        format!("topk:{k}").as_str().into()
+    }
+
+    pub fn top_k_pct(pct: f64) -> Self {
+        format!("topk:{}%", fmt_f64(pct)).as_str().into()
+    }
+
+    pub fn rand_k(k: usize) -> Self {
+        format!("randk:{k}").as_str().into()
+    }
+
+    pub fn qsgd(s: u32) -> Self {
+        format!("qsgd:{s}").as_str().into()
+    }
+
+    pub fn sign_top_k(k: usize) -> Self {
+        format!("sign_topk:{k}").as_str().into()
+    }
+
+    pub fn sign_top_k_pct(pct: f64) -> Self {
+        format!("sign_topk:{}%", fmt_f64(pct)).as_str().into()
+    }
+
+    pub fn qsgd_top_k(k: usize, s: u32) -> Self {
+        format!("qsgd_topk:{k}:{s}").as_str().into()
+    }
+
+    /// Switch a SignTopK spec to the paper's signs+norm bit accounting
+    /// (Section 5.2 convention; see `compress::SignTopK`).
+    pub fn paper_accounting(self) -> Self {
+        match self.kind {
+            CompressorKind::SignTopK { paper: false, .. } => {
+                format!("{}:paper", self.raw).as_str().into()
+            }
+            _ => self,
+        }
+    }
+
+    /// The resolved sparsity k at dimension d, if the operator is
+    /// k-sparse.
+    pub fn resolved_k(&self, d: usize) -> Option<usize> {
+        match &self.kind {
+            CompressorKind::TopK(k)
+            | CompressorKind::RandK(k)
+            | CompressorKind::SignTopK { k, .. }
+            | CompressorKind::QsgdTopK { k, .. } => Some(k.resolve(d)),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the operator for dimension d (infallible: everything
+    /// value-dependent was validated at parse time; cross-field k-vs-d
+    /// sanity lives in `ExperimentConfig::resolve`).
+    pub fn build(&self, d: usize) -> Box<dyn Compressor> {
+        use crate::compress::{Identity, QsgdOp, QsgdTopK, RandK, SignL1, SignTopK, TopK};
+        match &self.kind {
+            CompressorKind::Identity => Box::new(Identity),
+            CompressorKind::Sign => Box::new(SignL1),
+            CompressorKind::TopK(k) => Box::new(TopK::new(k.resolve(d))),
+            CompressorKind::RandK(k) => Box::new(RandK::new(k.resolve(d))),
+            CompressorKind::Qsgd { s } => Box::new(QsgdOp::new(*s)),
+            CompressorKind::SignTopK { k, paper: false } => {
+                Box::new(SignTopK::new(k.resolve(d)))
+            }
+            CompressorKind::SignTopK { k, paper: true } => {
+                Box::new(SignTopK::paper_accounting(k.resolve(d)))
+            }
+            CompressorKind::QsgdTopK { k, s } => Box::new(QsgdTopK::new(k.resolve(d), *s)),
+        }
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        const FIELD: &str = "compressor";
+        let usage = "identity, sign, topk:K, randk:K, qsgd:S, sign_topk:K[:paper], \
+                     or qsgd_topk:K:S (K may be %-suffixed)";
+        let qsgd_s = |v: &str| -> Result<u32, ConfigError> {
+            let s: u32 = v.parse().map_err(|_| {
+                ConfigError::value(FIELD, v, "quantization level S is not a positive integer")
+            })?;
+            if s == 0 {
+                return Err(ConfigError::value(FIELD, v, "quantization level S must be >= 1"));
+            }
+            Ok(s)
+        };
+        // Sub-field rejections report the whole spec string the user
+        // wrote, not just the offending fragment.
+        let k_of = |k: &str| KSpec::parse(FIELD, k).map_err(|e| e.with_value(s));
+        let parts: Vec<&str> = s.split(':').collect();
+        let kind = match parts.as_slice() {
+            ["identity"] => CompressorKind::Identity,
+            ["sign"] => CompressorKind::Sign,
+            ["topk", k] => CompressorKind::TopK(k_of(k)?),
+            ["randk", k] => CompressorKind::RandK(k_of(k)?),
+            ["qsgd", sv] => CompressorKind::Qsgd {
+                s: qsgd_s(sv).map_err(|e| e.with_value(s))?,
+            },
+            ["sign_topk", k] => CompressorKind::SignTopK {
+                k: k_of(k)?,
+                paper: false,
+            },
+            ["sign_topk", k, "paper"] => CompressorKind::SignTopK {
+                k: k_of(k)?,
+                paper: true,
+            },
+            ["qsgd_topk", k, sv] => CompressorKind::QsgdTopK {
+                k: k_of(k)?,
+                s: qsgd_s(sv).map_err(|e| e.with_value(s))?,
+            },
+            _ => {
+                return Err(ConfigError::value(FIELD, s, "unknown operator").suggest(usage));
+            }
+        };
+        Ok(CompressorSpec {
+            raw: s.to_string(),
+            kind,
+        })
+    }
+
+    /// Accepts the canonical string or `{"kind": ..., ...}` objects.
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("compressor", j, &["kind", "k", "s", "paper"])?;
+                let kind = obj_kind("compressor", j)?;
+                let k = || -> Result<String, ConfigError> {
+                    match j.get("k") {
+                        Some(Json::Str(s)) => Ok(s.clone()),
+                        Some(Json::Num(x)) => Ok(fmt_f64(*x)),
+                        _ => Err(ConfigError::value(
+                            "compressor",
+                            j.to_string(),
+                            "missing key \"k\" (a count, or a \"P%\" string)",
+                        )),
+                    }
+                };
+                let s_level = || obj_u64("compressor", j, "s").map(|s| s.to_string());
+                let paper = j.get("paper").and_then(Json::as_bool).unwrap_or(false);
+                let spec = match kind.as_str() {
+                    "identity" => "identity".to_string(),
+                    "sign" => "sign".to_string(),
+                    "topk" => format!("topk:{}", k()?),
+                    "randk" => format!("randk:{}", k()?),
+                    "qsgd" => format!("qsgd:{}", s_level()?),
+                    "sign_topk" if paper => format!("sign_topk:{}:paper", k()?),
+                    "sign_topk" => format!("sign_topk:{}", k()?),
+                    "qsgd_topk" => format!("qsgd_topk:{}:{}", k()?, s_level()?),
+                    other => {
+                        return Err(ConfigError::value(
+                            "compressor",
+                            j.to_string(),
+                            format!("unknown compressor kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "compressor",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TriggerSpec
+// ---------------------------------------------------------------------
+
+/// Typed event-trigger threshold spec (`zero`, `const:C`, `poly:C0:EPS`,
+/// `piecewise:INIT:STEP:EVERY:UNTIL:SPE`); payload is the validated
+/// [`ThresholdSchedule`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TriggerSpec {
+    raw: String,
+    sched: ThresholdSchedule,
+}
+
+spec_string_json!(TriggerSpec);
+spec_common!(TriggerSpec, "bad trigger spec");
+
+impl TriggerSpec {
+    pub fn schedule(&self) -> &ThresholdSchedule {
+        &self.sched
+    }
+
+    pub fn zero() -> Self {
+        "zero".parse().expect("static spec")
+    }
+
+    pub fn constant(c0: f64) -> Self {
+        format!("const:{}", fmt_f64(c0)).as_str().into()
+    }
+
+    pub fn poly(c0: f64, eps: f64) -> Self {
+        format!("poly:{}:{}", fmt_f64(c0), fmt_f64(eps)).as_str().into()
+    }
+
+    pub fn piecewise(init: f64, step: f64, every: usize, until: usize, spe: usize) -> Self {
+        format!(
+            "piecewise:{}:{}:{every}:{until}:{spe}",
+            fmt_f64(init),
+            fmt_f64(step)
+        )
+        .as_str()
+        .into()
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        let sched = ThresholdSchedule::parse(s)
+            .map_err(|reason| ConfigError::value("trigger", s, reason))?;
+        Ok(TriggerSpec {
+            raw: s.to_string(),
+            sched,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys(
+                    "trigger",
+                    j,
+                    &["kind", "c0", "eps", "init", "step", "every", "until", "steps_per_epoch"],
+                )?;
+                let spec = match obj_kind("trigger", j)?.as_str() {
+                    "zero" => "zero".to_string(),
+                    "const" => format!("const:{}", fmt_f64(obj_f64("trigger", j, "c0")?)),
+                    "poly" => format!(
+                        "poly:{}:{}",
+                        fmt_f64(obj_f64("trigger", j, "c0")?),
+                        fmt_f64(obj_f64("trigger", j, "eps")?)
+                    ),
+                    "piecewise" => format!(
+                        "piecewise:{}:{}:{}:{}:{}",
+                        fmt_f64(obj_f64("trigger", j, "init")?),
+                        fmt_f64(obj_f64("trigger", j, "step")?),
+                        obj_u64("trigger", j, "every")?,
+                        obj_u64("trigger", j, "until")?,
+                        obj_u64("trigger", j, "steps_per_epoch")?,
+                    ),
+                    other => {
+                        return Err(ConfigError::value(
+                            "trigger",
+                            j.to_string(),
+                            format!("unknown trigger kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "trigger",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LrSpec
+// ---------------------------------------------------------------------
+
+/// Typed learning-rate schedule spec (`const:E`, `invtime:A:B`,
+/// `warmup:BASE:WEP:FACTOR:SPE:M1,M2,..`); payload is the validated
+/// [`LrSchedule`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSpec {
+    raw: String,
+    sched: LrSchedule,
+}
+
+spec_string_json!(LrSpec);
+spec_common!(LrSpec, "bad lr spec");
+
+impl LrSpec {
+    pub fn schedule(&self) -> &LrSchedule {
+        &self.sched
+    }
+
+    pub fn constant(eta: f64) -> Self {
+        format!("const:{}", fmt_f64(eta)).as_str().into()
+    }
+
+    pub fn inv_time(a: f64, b: f64) -> Self {
+        format!("invtime:{}:{}", fmt_f64(a), fmt_f64(b)).as_str().into()
+    }
+
+    pub fn warmup(
+        base: f64,
+        warmup_epochs: usize,
+        decay_factor: f64,
+        steps_per_epoch: usize,
+        milestones: &[usize],
+    ) -> Self {
+        let ms: Vec<String> = milestones.iter().map(|m| m.to_string()).collect();
+        format!(
+            "warmup:{}:{warmup_epochs}:{}:{steps_per_epoch}:{}",
+            fmt_f64(base),
+            fmt_f64(decay_factor),
+            ms.join(",")
+        )
+        .as_str()
+        .into()
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        let sched =
+            LrSchedule::parse_checked(s).map_err(|reason| ConfigError::value("lr", s, reason))?;
+        Ok(LrSpec {
+            raw: s.to_string(),
+            sched,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys(
+                    "lr",
+                    j,
+                    &[
+                        "kind",
+                        "eta",
+                        "a",
+                        "b",
+                        "base",
+                        "warmup_epochs",
+                        "decay_factor",
+                        "steps_per_epoch",
+                        "milestones",
+                    ],
+                )?;
+                let spec = match obj_kind("lr", j)?.as_str() {
+                    "const" => format!("const:{}", fmt_f64(obj_f64("lr", j, "eta")?)),
+                    "invtime" => format!(
+                        "invtime:{}:{}",
+                        fmt_f64(obj_f64("lr", j, "a")?),
+                        fmt_f64(obj_f64("lr", j, "b")?)
+                    ),
+                    "warmup" => {
+                        let ms = j
+                            .get("milestones")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| {
+                                ConfigError::value(
+                                    "lr",
+                                    j.to_string(),
+                                    "warmup needs a \"milestones\" array",
+                                )
+                            })?
+                            .iter()
+                            .map(|v| {
+                                v.as_f64().map(fmt_f64).ok_or_else(|| {
+                                    ConfigError::value(
+                                        "lr",
+                                        j.to_string(),
+                                        "milestones must be numbers",
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<_>, _>>()?;
+                        format!(
+                            "warmup:{}:{}:{}:{}:{}",
+                            fmt_f64(obj_f64("lr", j, "base")?),
+                            obj_u64("lr", j, "warmup_epochs")?,
+                            fmt_f64(obj_f64("lr", j, "decay_factor")?),
+                            obj_u64("lr", j, "steps_per_epoch")?,
+                            ms.join(",")
+                        )
+                    }
+                    other => {
+                        return Err(ConfigError::value(
+                            "lr",
+                            j.to_string(),
+                            format!("unknown lr kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "lr",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SyncSpec
+// ---------------------------------------------------------------------
+
+/// Typed synchronization-schedule spec. Legacy configs write the period
+/// as the bare number `"h": 5`; the typed form also admits `every:H`,
+/// `explicit:I1,I2,...` strings and `{"kind": "explicit", "indices":
+/// [...]}` objects, making arbitrary index sets I_T (Section 2)
+/// expressible from config for the first time. `to_json` emits a JSON
+/// number for `every:H` so legacy hashes stay bit-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SyncSpec {
+    raw: String,
+    sched: SyncSchedule,
+}
+
+spec_common!(SyncSpec, "bad sync spec");
+
+impl SyncSpec {
+    pub fn schedule(&self) -> &SyncSchedule {
+        &self.sched
+    }
+
+    /// `every:H` (H = 0 is tolerated for legacy configs and behaves as
+    /// H = 1, exactly as the old `u64` field did).
+    pub fn every(h: u64) -> Self {
+        SyncSpec {
+            raw: format!("every:{h}"),
+            sched: SyncSchedule::EveryH(h),
+        }
+    }
+
+    pub fn explicit(indices: &[u64]) -> Self {
+        let parts: Vec<String> = indices.iter().map(|i| i.to_string()).collect();
+        format!("explicit:{}", parts.join(",")).as_str().into()
+    }
+
+    /// The period H for `every:H` specs (`None` for explicit index
+    /// sets).
+    pub fn period(&self) -> Option<u64> {
+        match &self.sched {
+            SyncSchedule::EveryH(h) => Some(*h),
+            SyncSchedule::Explicit(_) => None,
+        }
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        // Legacy form: the bare period.
+        if let Ok(h) = s.parse::<u64>() {
+            return Ok(SyncSpec::every(h));
+        }
+        let sched =
+            SyncSchedule::parse(s).map_err(|reason| ConfigError::value("h", s, reason))?;
+        Ok(SyncSpec {
+            raw: s.to_string(),
+            sched,
+        })
+    }
+
+    /// Accepts a number (legacy `"h": 5`), a spec string, or a
+    /// `{"kind": ...}` object.
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Num(x) => {
+                if !x.is_finite() || *x < 0.0 || x.fract() != 0.0 {
+                    return Err(ConfigError::value(
+                        "h",
+                        fmt_f64(*x),
+                        "must be a non-negative integer",
+                    ));
+                }
+                Ok(SyncSpec::every(*x as u64))
+            }
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("h", j, &["kind", "h", "indices"])?;
+                match obj_kind("h", j)?.as_str() {
+                    "every" => Ok(SyncSpec::every(obj_u64("h", j, "h")?)),
+                    "explicit" => {
+                        let idx = j
+                            .get("indices")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| {
+                                ConfigError::value(
+                                    "h",
+                                    j.to_string(),
+                                    "explicit needs an \"indices\" array",
+                                )
+                            })?
+                            .iter()
+                            .map(|v| {
+                                // Reject-don't-default: fractional or
+                                // negative indices must not be silently
+                                // cast into different sync rounds.
+                                let x = v.as_f64().ok_or_else(|| {
+                                    ConfigError::value(
+                                        "h",
+                                        j.to_string(),
+                                        "indices must be numbers",
+                                    )
+                                })?;
+                                if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+                                    return Err(ConfigError::value(
+                                        "h",
+                                        j.to_string(),
+                                        format!(
+                                            "indices must be non-negative integers, got {x}"
+                                        ),
+                                    ));
+                                }
+                                Ok(x as u64)
+                            })
+                            .collect::<Result<Vec<u64>, _>>()?;
+                        let parts: Vec<String> = idx.iter().map(|i| i.to_string()).collect();
+                        format!("explicit:{}", parts.join(",")).parse()
+                    }
+                    other => Err(ConfigError::value(
+                        "h",
+                        j.to_string(),
+                        format!("unknown sync kind {other:?}"),
+                    )),
+                }
+            }
+            other => Err(ConfigError::value(
+                "h",
+                other.to_string(),
+                "expected a number, spec string, or object",
+            )),
+        }
+    }
+
+    /// JSON form: a number for `every:H` (bit-compatible with the legacy
+    /// `"h"` field), the spec string otherwise.
+    pub fn to_json(&self) -> Json {
+        match &self.sched {
+            SyncSchedule::EveryH(h) => Json::Num(*h as f64),
+            SyncSchedule::Explicit(_) => Json::Str(self.raw.clone()),
+        }
+    }
+}
+
+impl From<u64> for SyncSpec {
+    fn from(h: u64) -> SyncSpec {
+        SyncSpec::every(h)
+    }
+}
+
+// ---------------------------------------------------------------------
+// TopologySpec
+// ---------------------------------------------------------------------
+
+/// Typed topology spec (`ring`, `complete`, `star`, `path`, `torus`,
+/// `hypercube`, `regularD`); payload is the [`TopologyKind`].
+/// Node-count compatibility (torus squares, hypercube powers of two,
+/// regular-degree parity) is a cross-field property checked by
+/// `ExperimentConfig::resolve`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologySpec {
+    raw: String,
+    kind: TopologyKind,
+}
+
+spec_string_json!(TopologySpec);
+spec_common!(TopologySpec, "unknown topology");
+
+impl TopologySpec {
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    pub fn of_kind(kind: TopologyKind) -> Self {
+        TopologySpec {
+            raw: kind.spec_str(),
+            kind,
+        }
+    }
+
+    pub fn ring() -> Self {
+        Self::of_kind(TopologyKind::Ring)
+    }
+
+    pub fn torus() -> Self {
+        Self::of_kind(TopologyKind::Torus)
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        let kind = TopologyKind::parse(s).ok_or_else(|| {
+            ConfigError::value("topology", s, "unknown topology kind")
+                .suggest("ring, complete, star, path, torus, hypercube, or regularD")
+        })?;
+        Ok(TopologySpec {
+            raw: s.to_string(),
+            kind,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("topology", j, &["kind", "degree"])?;
+                let kind = obj_kind("topology", j)?;
+                let spec = if kind == "regular" {
+                    format!("regular{}", obj_u64("topology", j, "degree")?)
+                } else {
+                    kind
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "topology",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ScheduleSpec (time-varying topology)
+// ---------------------------------------------------------------------
+
+/// The parsed payload of a [`ScheduleSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleKindSpec {
+    Static,
+    Switch {
+        kinds: Vec<TopologyKind>,
+        period: u64,
+    },
+    Sample {
+        base: TopologyKind,
+        m: usize,
+    },
+}
+
+/// Typed time-varying-topology spec (`static`, `switch:K1,K2,...:P`,
+/// `sample:BASE:M`). This is the single grammar for the schedule —
+/// `graph::dynamic::TopologySchedule::parse` goes through it. The
+/// n-dependent constraint (`M` vs the base graph's edge count) is
+/// checked when the schedule is built against a node count
+/// (`resolve()` / `TopologySchedule::parse`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleSpec {
+    raw: String,
+    kind: ScheduleKindSpec,
+}
+
+spec_string_json!(ScheduleSpec);
+spec_common!(ScheduleSpec, "bad topology_schedule spec");
+
+impl ScheduleSpec {
+    pub fn kind(&self) -> &ScheduleKindSpec {
+        &self.kind
+    }
+
+    /// The fixed-topology default (also what the legacy empty string
+    /// means).
+    pub fn fixed() -> Self {
+        "static".parse().expect("static spec")
+    }
+
+    pub fn switch(kinds: &[TopologyKind], period: u64) -> Self {
+        let names: Vec<String> = kinds.iter().map(|k| k.spec_str()).collect();
+        format!("switch:{}:{period}", names.join(",")).as_str().into()
+    }
+
+    pub fn sample(base: TopologyKind, m: usize) -> Self {
+        format!("sample:{}:{m}", base.spec_str()).as_str().into()
+    }
+
+    pub fn is_static(&self) -> bool {
+        matches!(self.kind, ScheduleKindSpec::Static)
+    }
+
+    /// Build the replayable schedule for an n-node run (the n-dependent
+    /// edge-count check happens here).
+    pub fn build(
+        &self,
+        n: usize,
+        seed: u64,
+    ) -> Result<crate::graph::TopologySchedule, ConfigError> {
+        crate::graph::TopologySchedule::from_spec(self, n, seed)
+            .map_err(|reason| ConfigError::value("topology_schedule", self.as_str(), reason))
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        const FIELD: &str = "topology_schedule";
+        let usage = "static, switch:K1,K2,...:P, or sample:BASE:M";
+        if s.is_empty() || s == "static" {
+            return Ok(ScheduleSpec {
+                raw: s.to_string(),
+                kind: ScheduleKindSpec::Static,
+            });
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        let topo = |k: &str| -> Result<TopologyKind, ConfigError> {
+            TopologyKind::parse(k)
+                .ok_or_else(|| ConfigError::value(FIELD, s, format!("unknown topology {k:?}")))
+        };
+        let kind = match parts.as_slice() {
+            ["switch", kinds, period] => {
+                let kinds: Vec<TopologyKind> =
+                    kinds.split(',').map(topo).collect::<Result<_, _>>()?;
+                if kinds.is_empty() {
+                    return Err(ConfigError::value(FIELD, s, "switch needs at least one topology"));
+                }
+                let period: u64 = period.parse().map_err(|_| {
+                    let what = format!("switch period {period:?} is not an integer");
+                    ConfigError::value(FIELD, s, what)
+                })?;
+                if period == 0 {
+                    return Err(ConfigError::value(FIELD, s, "switch period must be >= 1"));
+                }
+                ScheduleKindSpec::Switch { kinds, period }
+            }
+            ["sample", base, m] => {
+                let base = topo(base)?;
+                let m: usize = m.parse().map_err(|_| {
+                    let what = format!("sample edge count {m:?} is not an integer");
+                    ConfigError::value(FIELD, s, what)
+                })?;
+                if m == 0 {
+                    let what = "sample needs at least one edge per round";
+                    return Err(ConfigError::value(FIELD, s, what));
+                }
+                ScheduleKindSpec::Sample { base, m }
+            }
+            _ => return Err(ConfigError::value(FIELD, s, "unknown schedule").suggest(usage)),
+        };
+        Ok(ScheduleSpec {
+            raw: s.to_string(),
+            kind,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("topology_schedule", j, &["kind", "kinds", "period", "base", "m"])?;
+                let spec = match obj_kind("topology_schedule", j)?.as_str() {
+                    "static" => "static".to_string(),
+                    "switch" => {
+                        let kinds = j
+                            .get("kinds")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| {
+                                ConfigError::value(
+                                    "topology_schedule",
+                                    j.to_string(),
+                                    "switch needs a \"kinds\" array",
+                                )
+                            })?
+                            .iter()
+                            .map(|v| {
+                                v.as_str().map(str::to_string).ok_or_else(|| {
+                                    ConfigError::value(
+                                        "topology_schedule",
+                                        j.to_string(),
+                                        "kinds must be strings",
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<_>, _>>()?;
+                        format!(
+                            "switch:{}:{}",
+                            kinds.join(","),
+                            obj_u64("topology_schedule", j, "period")?
+                        )
+                    }
+                    "sample" => {
+                        let base = j.get("base").and_then(Json::as_str).ok_or_else(|| {
+                            ConfigError::value(
+                                "topology_schedule",
+                                j.to_string(),
+                                "sample needs a string \"base\"",
+                            )
+                        })?;
+                        format!("sample:{base}:{}", obj_u64("topology_schedule", j, "m")?)
+                    }
+                    other => {
+                        return Err(ConfigError::value(
+                            "topology_schedule",
+                            j.to_string(),
+                            format!("unknown schedule kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "topology_schedule",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LinkSpec
+// ---------------------------------------------------------------------
+
+/// Typed link-fault spec (`none`, `drop:P`, `straggler:I:P`, segments
+/// joined with `+`). Straggler indices are range-checked against the
+/// node count by `ExperimentConfig::resolve`; the seeded
+/// [`LinkModel`](crate::comm::LinkModel) is built per run via
+/// [`LinkSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    raw: String,
+    drop_p: f64,
+    stragglers: Vec<(usize, f64)>,
+}
+
+spec_string_json!(LinkSpec);
+spec_common!(LinkSpec, "bad link spec");
+
+impl LinkSpec {
+    /// The loss-free default.
+    pub fn ideal() -> Self {
+        "none".parse().expect("static spec")
+    }
+
+    /// Per-copy drop probability p ∈ [0, 1).
+    pub fn drop(p: f64) -> Self {
+        format!("drop:{}", fmt_f64(p)).as_str().into()
+    }
+
+    /// Add a straggler segment (node i skips sync rounds w.p. p).
+    pub fn with_straggler(self, node: usize, p: f64) -> Self {
+        let seg = format!("straggler:{node}:{}", fmt_f64(p));
+        if self.is_ideal() {
+            seg.as_str().into()
+        } else {
+            format!("{}+{seg}", self.raw).as_str().into()
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.drop_p == 0.0 && self.stragglers.is_empty()
+    }
+
+    pub fn drop_p(&self) -> f64 {
+        self.drop_p
+    }
+
+    pub fn stragglers(&self) -> &[(usize, f64)] {
+        &self.stragglers
+    }
+
+    /// Instantiate the seeded fault process for one run.
+    pub fn build(&self, seed: u64) -> crate::comm::LinkModel {
+        crate::comm::LinkModel::parse(&self.raw, seed).expect("validated at parse time")
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        // LinkModel::parse owns the grammar; the seed is irrelevant for
+        // validation.
+        let model = crate::comm::LinkModel::parse(s, 0)
+            .map_err(|reason| ConfigError::value("link", s, reason))?;
+        Ok(LinkSpec {
+            raw: s.to_string(),
+            drop_p: model.drop_p,
+            stragglers: model.stragglers,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("link", j, &["drop", "stragglers"])?;
+                let mut segs = Vec::new();
+                if let Some(p) = j.get("drop") {
+                    let p = p.as_f64().ok_or_else(|| {
+                        ConfigError::value("link", j.to_string(), "\"drop\" must be a number")
+                    })?;
+                    segs.push(format!("drop:{}", fmt_f64(p)));
+                }
+                if let Some(list) = j.get("stragglers") {
+                    let arr = list.as_arr().ok_or_else(|| {
+                        ConfigError::value(
+                            "link",
+                            j.to_string(),
+                            "\"stragglers\" must be an array of {node, p} objects",
+                        )
+                    })?;
+                    for item in arr {
+                        let node = obj_u64("link", item, "node")?;
+                        let p = obj_f64("link", item, "p")?;
+                        segs.push(format!("straggler:{node}:{}", fmt_f64(p)));
+                    }
+                }
+                if segs.is_empty() {
+                    return "none".parse();
+                }
+                segs.join("+").parse()
+            }
+            other => Err(ConfigError::value(
+                "link",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ProblemSpec
+// ---------------------------------------------------------------------
+
+/// The parsed payload of a [`ProblemSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemKind {
+    /// `quadratic:D[:NOISE[:SPREAD]]` — gradient-noise σ (default 0.05)
+    /// and heterogeneity spread (default 1.0).
+    Quadratic { d: usize, noise: f32, spread: f32 },
+    /// `logreg:DIN:CLASSES:BATCH` (heterogeneous by-class shards).
+    LogReg {
+        din: usize,
+        classes: usize,
+        batch: usize,
+    },
+    /// `mlp:DIN:HIDDEN:CLASSES:BATCH` (IID shards).
+    Mlp {
+        din: usize,
+        hidden: usize,
+        classes: usize,
+        batch: usize,
+    },
+}
+
+impl ProblemKind {
+    /// The flat parameter dimension the problem will train (used by
+    /// `resolve()` for k-vs-d sanity without building the dataset).
+    pub fn dim(&self) -> usize {
+        match self {
+            ProblemKind::Quadratic { d, .. } => *d,
+            ProblemKind::LogReg { din, classes, .. } => {
+                crate::problems::LogRegProblem::flat_dim(*din, *classes)
+            }
+            ProblemKind::Mlp {
+                din,
+                hidden,
+                classes,
+                ..
+            } => crate::problems::MlpProblem::flat_dim(*din, *hidden, *classes),
+        }
+    }
+}
+
+/// Typed problem spec; payload is the [`ProblemKind`]. The dataset /
+/// gradient source is built per run by `experiments::builder`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProblemSpec {
+    raw: String,
+    kind: ProblemKind,
+}
+
+spec_string_json!(ProblemSpec);
+spec_common!(ProblemSpec, "unknown problem spec");
+
+impl ProblemSpec {
+    pub fn kind(&self) -> &ProblemKind {
+        &self.kind
+    }
+
+    pub fn dim(&self) -> usize {
+        self.kind.dim()
+    }
+
+    pub fn quadratic(d: usize) -> Self {
+        format!("quadratic:{d}").as_str().into()
+    }
+
+    pub fn quadratic_noisy(d: usize, noise: f32, spread: f32) -> Self {
+        format!("quadratic:{d}:{noise}:{spread}").as_str().into()
+    }
+
+    pub fn logreg(din: usize, classes: usize, batch: usize) -> Self {
+        format!("logreg:{din}:{classes}:{batch}").as_str().into()
+    }
+
+    pub fn mlp(din: usize, hidden: usize, classes: usize, batch: usize) -> Self {
+        format!("mlp:{din}:{hidden}:{classes}:{batch}").as_str().into()
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        const FIELD: &str = "problem";
+        let usage = "quadratic:D[:NOISE[:SPREAD]], logreg:DIN:CLASSES:BATCH, \
+                     or mlp:DIN:HIDDEN:CLASSES:BATCH";
+        let dim = |what: &str, v: &str| -> Result<usize, ConfigError> {
+            let x: usize = v.parse().map_err(|_| {
+                ConfigError::value(FIELD, s, format!("{what} {v:?} is not a positive integer"))
+            })?;
+            if x == 0 {
+                return Err(ConfigError::value(FIELD, s, format!("{what} must be >= 1")));
+            }
+            Ok(x)
+        };
+        let f32_nonneg = |what: &str, v: &str| -> Result<f32, ConfigError> {
+            let x: f32 = v.parse().map_err(|_| {
+                ConfigError::value(FIELD, s, format!("{what} {v:?} is not a number"))
+            })?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(ConfigError::value(
+                    FIELD,
+                    s,
+                    format!("{what} must be finite and non-negative, got {x}"),
+                ));
+            }
+            Ok(x)
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        let kind = match parts.as_slice() {
+            ["quadratic", rest @ ..] if (1..=3).contains(&rest.len()) => ProblemKind::Quadratic {
+                d: dim("dimension", rest[0])?,
+                noise: rest.get(1).map(|v| f32_nonneg("noise", v)).transpose()?.unwrap_or(0.05),
+                spread: rest.get(2).map(|v| f32_nonneg("spread", v)).transpose()?.unwrap_or(1.0),
+            },
+            ["logreg", din, classes, batch] => ProblemKind::LogReg {
+                din: dim("input dimension", din)?,
+                classes: {
+                    let c = dim("class count", classes)?;
+                    if c < 2 {
+                        return Err(ConfigError::value(FIELD, s, "classes must be >= 2"));
+                    }
+                    c
+                },
+                batch: dim("batch size", batch)?,
+            },
+            ["mlp", din, hidden, classes, batch] => ProblemKind::Mlp {
+                din: dim("input dimension", din)?,
+                hidden: dim("hidden width", hidden)?,
+                classes: {
+                    let c = dim("class count", classes)?;
+                    if c < 2 {
+                        return Err(ConfigError::value(FIELD, s, "classes must be >= 2"));
+                    }
+                    c
+                },
+                batch: dim("batch size", batch)?,
+            },
+            _ => return Err(ConfigError::value(FIELD, s, "unknown problem").suggest(usage)),
+        };
+        Ok(ProblemSpec {
+            raw: s.to_string(),
+            kind,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys(
+                    "problem",
+                    j,
+                    &["kind", "d", "noise", "spread", "din", "hidden", "classes", "batch"],
+                )?;
+                let spec = match obj_kind("problem", j)?.as_str() {
+                    "quadratic" => {
+                        let d = obj_u64("problem", j, "d")?;
+                        match (j.get("noise"), j.get("spread")) {
+                            (None, None) => format!("quadratic:{d}"),
+                            (noise, spread) => format!(
+                                "quadratic:{d}:{}:{}",
+                                fmt_f64(noise.and_then(Json::as_f64).unwrap_or(0.05)),
+                                fmt_f64(spread.and_then(Json::as_f64).unwrap_or(1.0)),
+                            ),
+                        }
+                    }
+                    "logreg" => format!(
+                        "logreg:{}:{}:{}",
+                        obj_u64("problem", j, "din")?,
+                        obj_u64("problem", j, "classes")?,
+                        obj_u64("problem", j, "batch")?
+                    ),
+                    "mlp" => format!(
+                        "mlp:{}:{}:{}:{}",
+                        obj_u64("problem", j, "din")?,
+                        obj_u64("problem", j, "hidden")?,
+                        obj_u64("problem", j, "classes")?,
+                        obj_u64("problem", j, "batch")?
+                    ),
+                    other => {
+                        return Err(ConfigError::value(
+                            "problem",
+                            j.to_string(),
+                            format!("unknown problem kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "problem",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_strings_survive_roundtrips_verbatim() {
+        // parse → Display is the identity on every accepted legacy form,
+        // including float spellings ("2.0" vs "2") — the property that
+        // keeps config_hash bit-compatible.
+        for s in [
+            "sign_topk:10%",
+            "sign_topk:10",
+            "sign_topk:10%:paper",
+            "topk:100",
+            "qsgd_topk:5:4",
+            "const:5000",
+            "piecewise:2.0:1.0:10:60:100",
+            "poly:2:0.5",
+            "invtime:100:1",
+            "warmup:0.05:5:5:100:150,250",
+            "drop:0.1+straggler:0:0.5",
+            "switch:ring,torus:500",
+            "sample:torus:6",
+            "quadratic:64:0.1:0.5",
+            "logreg:784:10:5",
+            "mlp:3072:128:10:32",
+        ] {
+            match s.split(':').next().unwrap() {
+                "sign_topk" | "topk" | "qsgd_topk" => {
+                    assert_eq!(CompressorSpec::from_str(s).unwrap().to_string(), s)
+                }
+                "const" | "piecewise" | "poly" => {
+                    assert_eq!(TriggerSpec::from_str(s).unwrap().to_string(), s)
+                }
+                "invtime" | "warmup" => assert_eq!(LrSpec::from_str(s).unwrap().to_string(), s),
+                "drop" => assert_eq!(LinkSpec::from_str(s).unwrap().to_string(), s),
+                "switch" | "sample" => {
+                    assert_eq!(ScheduleSpec::from_str(s).unwrap().to_string(), s)
+                }
+                "quadratic" | "logreg" | "mlp" => {
+                    assert_eq!(ProblemSpec::from_str(s).unwrap().to_string(), s)
+                }
+                other => panic!("unrouted spec family {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn compressor_parses_and_builds() {
+        let c = CompressorSpec::from_str("sign_topk:10%").unwrap();
+        assert!(matches!(
+            c.kind(),
+            CompressorKind::SignTopK { k: KSpec::Percent(p), paper: false } if *p == 10.0
+        ));
+        assert_eq!(c.resolved_k(200), Some(20));
+        assert_eq!(c.build(200).name(), "sign_topk(k=20)");
+        assert_eq!(CompressorSpec::top_k(10).as_str(), "topk:10");
+        assert_eq!(
+            CompressorSpec::sign_top_k_pct(10.0).paper_accounting().as_str(),
+            "sign_topk:10%:paper"
+        );
+        assert!(CompressorSpec::from_str("topk:0").is_err());
+        assert!(CompressorSpec::from_str("topk:-5%").is_err());
+        assert!(CompressorSpec::from_str("topk:200%").is_err());
+        assert!(CompressorSpec::from_str("qsgd:0").is_err());
+        assert!(CompressorSpec::from_str("nope").is_err());
+    }
+
+    #[test]
+    fn structured_object_forms_parse_to_canonical_strings() {
+        let c = CompressorSpec::from_json(&Json::parse(r#"{"kind":"topk","k":100}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.as_str(), "topk:100");
+        let c = CompressorSpec::from_json(
+            &Json::parse(r#"{"kind":"sign_topk","k":"10%","paper":true}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.as_str(), "sign_topk:10%:paper");
+        let t =
+            TriggerSpec::from_json(&Json::parse(r#"{"kind":"const","c0":5000}"#).unwrap()).unwrap();
+        assert_eq!(t.as_str(), "const:5000");
+        let l = LrSpec::from_json(&Json::parse(r#"{"kind":"invtime","a":100,"b":1}"#).unwrap())
+            .unwrap();
+        assert_eq!(l.as_str(), "invtime:100:1");
+        let hj = Json::parse(r#"{"kind":"explicit","indices":[3,5,10]}"#).unwrap();
+        let h = SyncSpec::from_json(&hj).unwrap();
+        assert_eq!(h.as_str(), "explicit:3,5,10");
+        let s = ScheduleSpec::from_json(
+            &Json::parse(r#"{"kind":"switch","kinds":["ring","torus"],"period":500}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(s.as_str(), "switch:ring,torus:500");
+        let k = LinkSpec::from_json(
+            &Json::parse(r#"{"drop":0.1,"stragglers":[{"node":0,"p":0.5}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(k.as_str(), "drop:0.1+straggler:0:0.5");
+        let p = ProblemSpec::from_json(
+            &Json::parse(r#"{"kind":"logreg","din":784,"classes":10,"batch":5}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p.as_str(), "logreg:784:10:5");
+        // typo'd object keys are rejected, not ignored
+        assert!(CompressorSpec::from_json(
+            &Json::parse(r#"{"kind":"topk","K":100}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sync_spec_accepts_numbers_strings_and_objects() {
+        assert_eq!(SyncSpec::from_json(&Json::Num(5.0)).unwrap().period(), Some(5));
+        assert_eq!(SyncSpec::from_str("5").unwrap().period(), Some(5));
+        assert_eq!(SyncSpec::from_str("every:5").unwrap().period(), Some(5));
+        let e = SyncSpec::from_str("explicit:3,5,10").unwrap();
+        assert_eq!(e.period(), None);
+        assert!(e.schedule().is_sync(2));
+        // every:H serializes back to the legacy number
+        assert_eq!(SyncSpec::every(5).to_json(), Json::Num(5.0));
+        assert_eq!(e.to_json(), Json::Str("explicit:3,5,10".into()));
+        assert!(SyncSpec::from_str("explicit:5,3").is_err());
+        assert!(SyncSpec::from_json(&Json::Num(2.5)).is_err());
+        // fractional/negative explicit indices are rejected, not cast
+        for bad in [
+            r#"{"kind":"explicit","indices":[2.5,10]}"#,
+            r#"{"kind":"explicit","indices":[-1,5]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SyncSpec::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn problem_dim_matches_builders() {
+        assert_eq!(ProblemSpec::from_str("quadratic:64").unwrap().dim(), 64);
+        assert_eq!(ProblemSpec::from_str("logreg:784:10:5").unwrap().dim(), 7850);
+        assert_eq!(
+            ProblemSpec::from_str("mlp:3072:128:10:32").unwrap().dim(),
+            394634
+        );
+        assert!(ProblemSpec::from_str("quadratic:0").is_err());
+        assert!(ProblemSpec::from_str("logreg:10:1:5").is_err());
+        assert!(ProblemSpec::from_str("svm:1").is_err());
+    }
+
+    #[test]
+    fn link_spec_builds_the_same_model_as_direct_parse() {
+        let spec = LinkSpec::from_str("drop:0.3+straggler:1:0.5").unwrap();
+        assert_eq!(spec.drop_p(), 0.3);
+        assert_eq!(spec.stragglers(), &[(1, 0.5)]);
+        let built = spec.build(7);
+        let direct = crate::comm::LinkModel::parse("drop:0.3+straggler:1:0.5", 7).unwrap();
+        assert_eq!(built, direct);
+        assert!(LinkSpec::from_str("drop:1.5").is_err());
+        assert!(LinkSpec::ideal().is_ideal());
+        assert_eq!(
+            LinkSpec::drop(0.1).with_straggler(0, 0.5).as_str(),
+            "drop:0.1+straggler:0:0.5"
+        );
+    }
+
+    #[test]
+    fn string_equality_with_specs_still_works() {
+        let c = CompressorSpec::from_str("sign_topk:10").unwrap();
+        assert!(c == "sign_topk:10");
+        assert!(c != "sign_topk:10%");
+        let t: TriggerSpec = "const:100".into();
+        assert!(t == "const:100");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad trigger spec")]
+    fn from_str_panics_preserve_legacy_messages() {
+        let _: TriggerSpec = "poly:2:1.5".into();
+    }
+}

@@ -214,3 +214,86 @@ pub trait DecentralizedAlgo {
     /// Algorithm name for logs.
     fn name(&self) -> String;
 }
+
+/// Forward every trait method through a level of indirection — including
+/// the ones with default bodies, which carry real state on the engine
+/// (estimates, RNG streams, trigger stats): a forwarding impl that fell
+/// back to the defaults would silently break checkpointing.
+macro_rules! forward_decentralized_algo {
+    () => {
+        fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
+            (**self).step(t, src, bus)
+        }
+        fn params(&self, node: usize) -> &[f32] {
+            (**self).params(node)
+        }
+        fn set_params(&mut self, x0: &[f32]) {
+            (**self).set_params(x0)
+        }
+        fn set_node_params(&mut self, node: usize, x: &[f32]) {
+            (**self).set_node_params(node, x)
+        }
+        fn momentum(&self, node: usize) -> Option<&[f32]> {
+            (**self).momentum(node)
+        }
+        fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
+            (**self).set_node_momentum(node, m)
+        }
+        fn estimate(&self, node: usize) -> Option<&[f32]> {
+            (**self).estimate(node)
+        }
+        fn consensus_acc(&self, node: usize) -> Option<&[f32]> {
+            (**self).consensus_acc(node)
+        }
+        fn restore_estimates(&mut self, xhat: &[Vec<f32>], acc: &[Vec<f32>]) {
+            (**self).restore_estimates(xhat, acc)
+        }
+        fn rng_state(&self, node: usize) -> Option<[u64; 4]> {
+            (**self).rng_state(node)
+        }
+        fn set_rng_state(&mut self, node: usize, state: [u64; 4]) {
+            (**self).set_rng_state(node, state)
+        }
+        fn set_fired_stats(&mut self, fired: u64, checks: u64) {
+            (**self).set_fired_stats(fired, checks)
+        }
+        fn prepare_resume(&mut self, t0: u64) {
+            (**self).prepare_resume(t0)
+        }
+        fn set_workers(&mut self, workers: usize) {
+            (**self).set_workers(workers)
+        }
+        fn n(&self) -> usize {
+            (**self).n()
+        }
+        fn x_bar(&self) -> Vec<f32> {
+            (**self).x_bar()
+        }
+        fn consensus_distance(&self) -> f64 {
+            (**self).consensus_distance()
+        }
+        fn last_fired(&self) -> usize {
+            (**self).last_fired()
+        }
+        fn fired_stats(&self) -> (u64, u64) {
+            (**self).fired_stats()
+        }
+        fn name(&self) -> String {
+            (**self).name()
+        }
+    };
+}
+
+/// `&mut dyn DecentralizedAlgo` (and `&mut Engine`) is itself an
+/// algorithm — lets the generic [`Run`](crate::run::Run) handle drive
+/// borrowed algorithms (the `coordinator::runner::run` compatibility
+/// path) as well as owned ones.
+impl<T: DecentralizedAlgo + ?Sized> DecentralizedAlgo for &mut T {
+    forward_decentralized_algo!();
+}
+
+/// `Box<dyn DecentralizedAlgo>` is itself an algorithm (owned form for
+/// [`Run`](crate::run::Run)).
+impl<T: DecentralizedAlgo + ?Sized> DecentralizedAlgo for Box<T> {
+    forward_decentralized_algo!();
+}

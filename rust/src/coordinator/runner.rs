@@ -2,9 +2,9 @@
 //! intervals, account communication, and emit a metrics series.
 
 use super::DecentralizedAlgo;
-use crate::comm::Bus;
 use crate::metrics::{RoundRecord, Series};
 use crate::problems::GradientSource;
+use crate::run::{Run, RunObserver};
 
 /// Options for one training run.
 #[derive(Clone, Debug)]
@@ -30,34 +30,14 @@ impl Default for RunOptions {
     }
 }
 
-/// Run `algo` on `src` and return the evaluated metric series.
-pub fn run(
-    algo: &mut dyn DecentralizedAlgo,
-    src: &mut dyn GradientSource,
-    opts: &RunOptions,
-) -> Series {
-    algo.set_workers(opts.workers);
-    let mut bus = Bus::new(algo.n());
-    let mut series = Series::new(algo.name());
+/// Prints the classic per-eval progress line.
+struct VerboseObserver {
+    verbose: bool,
+}
 
-    let evaluate = |algo: &dyn DecentralizedAlgo,
-                        src: &mut dyn GradientSource,
-                        bus: &Bus,
-                        t: u64,
-                        series: &mut Series| {
-        let xbar = algo.x_bar();
-        let loss = src.global_loss(&xbar);
-        let record = RoundRecord {
-            t,
-            loss,
-            test_error: src.test_error(&xbar).unwrap_or(f64::NAN),
-            opt_gap: src.opt_gap(&xbar).unwrap_or(f64::NAN),
-            bits: bus.total_bits,
-            comm_rounds: bus.comm_rounds,
-            consensus: algo.consensus_distance(),
-            fired: algo.last_fired(),
-        };
-        if opts.verbose {
+impl RunObserver for VerboseObserver {
+    fn evaluated(&mut self, record: &RoundRecord, _done: bool) -> bool {
+        if self.verbose {
             println!(
                 "  t={:<7} loss={:.4} err={:.4} bits={} rounds={} consensus={:.3e}",
                 record.t,
@@ -68,18 +48,29 @@ pub fn run(
                 record.consensus
             );
         }
-        series.push(record);
-    };
-
-    evaluate(algo, src, &bus, 0, &mut series);
-    for t in 0..opts.steps {
-        algo.step(t, src, &mut bus);
-        let is_last = t + 1 == opts.steps;
-        if (t + 1) % opts.eval_every.max(1) == 0 || is_last {
-            evaluate(algo, src, &bus, t + 1, &mut series);
-        }
+        false
     }
-    series
+}
+
+/// Run `algo` on `src` and return the evaluated metric series.
+///
+/// Compatibility facade over the [`Run`](crate::run::Run) handle: the
+/// borrowed algorithm/source pair drives through the exact same loop the
+/// sweep engine and the examples use (the `&mut dyn` forwarding impls
+/// make borrows first-class run inputs).
+pub fn run(
+    algo: &mut dyn DecentralizedAlgo,
+    src: &mut dyn GradientSource,
+    opts: &RunOptions,
+) -> Series {
+    algo.set_workers(opts.workers);
+    let label = algo.name();
+    let mut run = Run::new(algo, src, opts.steps, opts.eval_every, label);
+    run.drive(&mut VerboseObserver {
+        verbose: opts.verbose,
+    })
+    .expect("VerboseObserver cannot fail");
+    run.into_series()
 }
 
 #[cfg(test)]

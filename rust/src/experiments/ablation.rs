@@ -61,19 +61,19 @@ fn knob_config(
         name: format!("ablate-{knob}-{value}"),
         algo: Algo::Sparq,
         nodes: base.n,
-        compressor: format!("sign_topk:{k}"),
+        compressor: crate::config::CompressorSpec::sign_top_k(k),
         trigger: if c0 > 0.0 {
-            format!("poly:{c0}:0.5")
+            crate::config::TriggerSpec::poly(c0, 0.5)
         } else {
-            "zero".into()
+            crate::config::TriggerSpec::zero()
         },
         lr: "invtime:60:2".into(),
-        h,
+        h: h.into(),
         steps: base.steps,
         eval_every: base.steps.max(1),
         seed: base.seed,
         // σ = 0.1 noise, 0.5 heterogeneity spread — the ablation regime.
-        problem: format!("quadratic:{}:0.1:0.5", base.d),
+        problem: format!("quadratic:{}:0.1:0.5", base.d).into(),
         gamma: match gamma {
             None => 0.0,
             Some(g) if g == 0.0 => -1.0, // pin γ = 0 exactly

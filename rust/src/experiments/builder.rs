@@ -1,18 +1,27 @@
 //! Construct problems and algorithms from an `ExperimentConfig`.
+//!
+//! Since the typed-config redesign these builders are *consumers of
+//! parsed data*: every spec field arrives validated (the spec types) and
+//! cross-field-checked ([`ExperimentConfig::resolve`]), so construction
+//! is a straight-line assembly of typed parts — no string splitting, no
+//! config-error panics past the resolve gate. The `build_algo*` entry
+//! points that take a raw config resolve it first and panic with the
+//! structured error's message (legacy behavior for the driver paths);
+//! library callers should resolve themselves and use
+//! [`build_algo_resolved`] (or the [`Run`](crate::run::Run) handle,
+//! which wraps all of this).
 
-use crate::comm::LinkModel;
-use crate::config::{Algo, ExperimentConfig};
+use crate::config::{Algo, ExperimentConfig, ProblemKind, ResolvedConfig};
 use crate::coordinator::{
     run, ChocoSgd, DecentralizedAlgo, RunOptions, SparqConfig, SparqSgd, VanillaDecentralized,
 };
 use crate::data::synthetic::ClassGaussian;
 use crate::data::{by_class_shards, iid_split};
-use crate::graph::{uniform_neighbor, MixingMatrix, Topology, TopologyKind, TopologySchedule};
+use crate::graph::{uniform_neighbor, MixingMatrix, Topology};
 use crate::metrics::Series;
 use crate::problems::{GradientSource, LogRegProblem, MlpProblem, QuadraticProblem};
-use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::sweep::cache::{ArtifactCache, CachedData};
-use crate::trigger::{EventTrigger, ThresholdSchedule};
+use crate::trigger::EventTrigger;
 use crate::util::Rng;
 
 /// Per-node sample count for synthetic shards (≈ the paper's 60k/60).
@@ -30,11 +39,9 @@ pub fn class_sep(din: usize) -> f32 {
     4.6 / (2.0 * din as f32).sqrt()
 }
 
-/// Build the mixing matrix from the config's topology spec.
+/// Build the mixing matrix from the config's (typed) topology.
 pub fn build_mixing(cfg: &ExperimentConfig) -> MixingMatrix {
-    let kind = TopologyKind::parse(&cfg.topology)
-        .unwrap_or_else(|| panic!("unknown topology {:?}", cfg.topology));
-    let topo = Topology::new(kind, cfg.nodes, cfg.seed);
+    let topo = Topology::new(cfg.topology.kind(), cfg.nodes, cfg.seed);
     uniform_neighbor(&topo)
 }
 
@@ -50,28 +57,15 @@ pub fn build_problem_with(
     cfg: &ExperimentConfig,
     cache: Option<&ArtifactCache>,
 ) -> Box<dyn GradientSource> {
-    let data_key = (cfg.problem.clone(), cfg.nodes, cfg.seed);
+    let data_key = (cfg.problem.to_string(), cfg.nodes, cfg.seed);
     let cached = |build: &mut dyn FnMut() -> CachedData| -> CachedData {
         match cache {
             Some(c) => c.data_or_else(data_key.clone(), build),
             None => build(),
         }
     };
-    let parts: Vec<&str> = cfg.problem.split(':').collect();
-    match parts.as_slice() {
-        // quadratic:D[:NOISE[:SPREAD]] — gradient noise σ (default 0.05)
-        // and heterogeneity spread (default 1.0), so the rate/ablation
-        // sweeps can state their workloads declaratively.
-        ["quadratic", rest @ ..] if (1..=3).contains(&rest.len()) => {
-            let d: usize = rest[0].parse().expect("quadratic:D");
-            let noise: f32 = rest
-                .get(1)
-                .map(|s| s.parse().expect("quadratic noise"))
-                .unwrap_or(0.05);
-            let spread: f32 = rest
-                .get(2)
-                .map(|s| s.parse().expect("quadratic spread"))
-                .unwrap_or(1.0);
+    match *cfg.problem.kind() {
+        ProblemKind::Quadratic { d, noise, spread } => {
             let data = cached(&mut || {
                 CachedData::Quadratic(QuadraticProblem::new(
                     d, cfg.nodes, 0.5, 2.0, noise, spread, cfg.seed,
@@ -82,10 +76,11 @@ pub fn build_problem_with(
                 _ => unreachable!("quadratic key cached non-quadratic data"),
             }
         }
-        ["logreg", din, classes, batch] => {
-            let din: usize = din.parse().expect("logreg:DIN");
-            let classes: usize = classes.parse().expect("logreg classes");
-            let batch: usize = batch.parse().expect("logreg batch");
+        ProblemKind::LogReg {
+            din,
+            classes,
+            batch,
+        } => {
             let data = cached(&mut || {
                 let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
                 let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
@@ -101,14 +96,15 @@ pub fn build_problem_with(
                 _ => unreachable!("logreg key cached non-shard data"),
             }
         }
-        ["mlp", din, hidden, classes, batch] => {
+        ProblemKind::Mlp {
+            din,
+            hidden,
+            classes,
+            batch,
+        } => {
             // IID shards: Section 5.2 "matches the setting in CHOCO-SGD"
             // ([KLSJ19] CIFAR runs use a random partition); the convex
             // experiment (logreg above) is the heterogeneous one.
-            let din: usize = din.parse().expect("mlp:DIN");
-            let hidden: usize = hidden.parse().expect("mlp hidden");
-            let classes: usize = classes.parse().expect("mlp classes");
-            let batch: usize = batch.parse().expect("mlp batch");
             let data = cached(&mut || {
                 let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
                 let gen = ClassGaussian::new(din, classes, class_sep(din), cfg.seed);
@@ -123,74 +119,56 @@ pub fn build_problem_with(
                 _ => unreachable!("mlp key cached non-shard data"),
             }
         }
-        other => panic!("unknown problem spec {other:?}"),
     }
 }
 
-/// Build the algorithm for parameter dimension `d`. The returned engine
-/// has the config's link model and topology schedule installed (defaults
-/// reproduce the pre-engine behavior exactly).
+/// Build the algorithm for parameter dimension `d`. Resolves the config
+/// first and panics with the structured error on an incoherent
+/// composition (driver-path convenience; library callers use
+/// [`build_algo_resolved`]).
 pub fn build_algo(cfg: &ExperimentConfig, d: usize) -> Box<dyn DecentralizedAlgo> {
     build_algo_with(cfg, d, None)
 }
 
 /// Like [`build_algo`], sharing topology construction and the tuned-γ
 /// eigen solve through a sweep [`ArtifactCache`] when one is supplied.
-/// The cached tuned γ is exactly the value the engine would compute for
-/// itself (same matrix, same deterministic solve), so cached and uncached
-/// builds behave bit-for-bit identically.
 pub fn build_algo_with(
     cfg: &ExperimentConfig,
     d: usize,
     cache: Option<&ArtifactCache>,
 ) -> Box<dyn DecentralizedAlgo> {
-    let schedule = TopologySchedule::parse(&cfg.topology_schedule, cfg.nodes, cfg.seed)
-        .unwrap_or_else(|e| {
-            panic!("bad topology_schedule spec {:?}: {e}", cfg.topology_schedule)
-        });
-    let link = LinkModel::parse(&cfg.link, cfg.seed)
-        .unwrap_or_else(|e| panic!("bad link spec {:?}: {e}", cfg.link));
-    for &(node, _) in &link.stragglers {
-        if node >= cfg.nodes {
-            panic!(
-                "bad link spec {:?}: straggler node {node} out of range for {} nodes",
-                cfg.link, cfg.nodes
-            );
-        }
-    }
-    // A non-static schedule dictates the starting matrix (switch phase 0 /
-    // the sampling base graph) and the `topology` field is NOT consulted —
-    // the schedule spec names its own graphs. Reject the contradictory
-    // combination instead of silently ignoring an explicit topology.
-    if !schedule.is_static() && cfg.topology != ExperimentConfig::default().topology {
-        panic!(
-            "config sets topology {:?} AND non-static topology_schedule {:?} — \
-             the schedule names its own graphs, so the topology field would be \
-             ignored; remove one of the two",
-            cfg.topology, cfg.topology_schedule
-        );
-    }
-    let build = || schedule.initial_mixing().unwrap_or_else(|| build_mixing(cfg));
+    let resolved = cfg.resolve().unwrap_or_else(|e| panic!("{e}"));
+    build_algo_resolved(&resolved, d, cache)
+}
+
+/// Assemble the engine from a [`ResolvedConfig`] — pure construction,
+/// no validation left to do. The returned engine has the link model and
+/// topology schedule installed (defaults reproduce the pre-engine
+/// behavior exactly). The cached tuned γ is exactly the value the engine
+/// would compute for itself (same matrix, same deterministic solve), so
+/// cached and uncached builds behave bit-for-bit identically.
+pub fn build_algo_resolved(
+    resolved: &ResolvedConfig,
+    d: usize,
+    cache: Option<&ArtifactCache>,
+) -> Box<dyn DecentralizedAlgo> {
+    let cfg = resolved.config();
+    let schedule = resolved.schedule.clone();
+    let link = resolved.link.clone();
+    let build = || {
+        schedule
+            .initial_mixing()
+            .unwrap_or_else(|| build_mixing(cfg))
+    };
     let mixing = match cache {
         Some(c) => c.mixing_or_else(ArtifactCache::topo_key(cfg), build),
         None => build(),
     };
-    let lr = LrSchedule::parse(&cfg.lr).unwrap_or_else(|| panic!("bad lr spec {:?}", cfg.lr));
-    let comp = crate::compress::parse(&cfg.compressor, d)
-        .unwrap_or_else(|| panic!("bad compressor spec {:?}", cfg.compressor));
-    // γ semantics: > 0 pins the value, 0 ⇒ tuned heuristic (the default),
-    // < 0 pins γ = 0 exactly (mixing disabled — a diagnostic setting the
-    // ablation sweep uses; plain 0 cannot mean that because it is the
-    // "unset" default). With a cache and an unpinned γ, inject the shared
-    // eigen solve's tuned value — identical to the engine's own.
-    let pinned: Option<f64> = if cfg.gamma > 0.0 {
-        Some(cfg.gamma)
-    } else if cfg.gamma < 0.0 {
-        Some(0.0)
-    } else {
-        None
-    };
-    let gamma: Option<f64> = match (cfg.algo.clone(), pinned, cache) {
+    let comp = cfg.compressor.build(d);
+    // γ policy (decoded by resolve()): with a cache and an unpinned γ,
+    // inject the shared eigen solve's tuned value — identical to the
+    // engine's own.
+    let gamma: Option<f64> = match (cfg.algo.clone(), resolved.gamma.pinned(), cache) {
         // Vanilla's exact averaging has no γ-consensus step; the
         // constructor pins 0 itself.
         (Algo::Vanilla, _, _) => None,
@@ -201,30 +179,25 @@ pub fn build_algo_with(
         }
         (_, None, None) => None,
     };
+    let lr = resolved.lr.clone();
     let mut engine = match cfg.algo {
-        Algo::Sparq => {
-            let trigger = ThresholdSchedule::parse(&cfg.trigger)
-                .unwrap_or_else(|e| panic!("bad trigger spec {:?}: {e}", cfg.trigger));
-            SparqSgd::new(
-                SparqConfig {
-                    mixing,
-                    compressor: comp,
-                    trigger: EventTrigger::new(trigger),
-                    lr,
-                    sync: SyncSchedule::EveryH(cfg.h),
-                    gamma,
-                    momentum: cfg.momentum as f32,
-                    seed: cfg.seed,
-                },
-                d,
-            )
-        }
+        Algo::Sparq => SparqSgd::new(
+            SparqConfig {
+                mixing,
+                compressor: comp,
+                trigger: EventTrigger::new(resolved.trigger.clone()),
+                lr,
+                sync: resolved.sync.clone(),
+                gamma,
+                momentum: cfg.momentum as f32,
+                seed: cfg.seed,
+            },
+            d,
+        ),
         Algo::Choco => {
             ChocoSgd::with_gamma(mixing, comp, lr, cfg.momentum as f32, gamma, d, cfg.seed)
         }
-        Algo::Vanilla => {
-            VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed)
-        }
+        Algo::Vanilla => VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed),
     };
     engine.set_link(link);
     engine.set_topology_schedule(schedule);
@@ -309,7 +282,7 @@ mod tests {
             nodes: 6,
             problem: "quadratic:24".into(),
             trigger: "zero".into(),
-            h: 1,
+            h: crate::config::SyncSpec::every(1),
             ..Default::default()
         };
         let ideal = run_config(&base, false);
@@ -346,6 +319,8 @@ mod tests {
     #[test]
     #[should_panic(expected = "bad link spec")]
     fn bad_link_panics() {
+        // Parse-don't-validate: the invalid literal now panics at
+        // construction (the From<&str> facade), before any builder runs.
         let cfg = ExperimentConfig {
             link: "drop:2".into(),
             ..Default::default()
@@ -423,7 +398,7 @@ mod tests {
             nodes: 6,
             problem: "quadratic:16".into(),
             trigger: "zero".into(),
-            h: 1,
+            h: crate::config::SyncSpec::every(1),
             ..Default::default()
         };
         let tuned = run_config(&base, false);

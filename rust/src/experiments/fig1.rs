@@ -84,7 +84,7 @@ pub fn nonconvex_spec(
     // convention. `compress::SignTopK` documents both accountings; the
     // savings tables in EXPERIMENTS.md report honest-indices numbers too.
     base.compressor = "sign_topk:10%:paper".into();
-    base.problem = problem.to_string();
+    base.problem = problem.into();
     base.seed = seed;
     SweepSpec::new("fig1-nonconvex")
         .base(&base)

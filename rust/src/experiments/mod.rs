@@ -16,5 +16,6 @@ pub mod savings;
 pub mod rates;
 
 pub use builder::{
-    build_algo, build_algo_with, build_problem, build_problem_with, run_config,
+    build_algo, build_algo_resolved, build_algo_with, build_problem, build_problem_with,
+    run_config,
 };

@@ -28,15 +28,7 @@ pub struct RatePoint {
 
 /// Topology spec string for a kind (inverse of `TopologyKind::parse`).
 fn topo_spec(kind: TopologyKind) -> String {
-    match kind {
-        TopologyKind::Ring => "ring".into(),
-        TopologyKind::Complete => "complete".into(),
-        TopologyKind::Star => "star".into(),
-        TopologyKind::Path => "path".into(),
-        TopologyKind::Torus => "torus".into(),
-        TopologyKind::Hypercube => "hypercube".into(),
-        TopologyKind::RandomRegular(deg) => format!("regular{deg}"),
-    }
+    kind.spec_str()
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -54,25 +46,25 @@ fn point_config(
         name: format!("rates-n{n}-h{h}-c{c0}-{}", topo_spec(topology)),
         algo: Algo::Sparq,
         nodes: n,
-        topology: topo_spec(topology),
-        compressor,
+        topology: crate::config::TopologySpec::of_kind(topology),
+        compressor: compressor.into(),
+        // Theorem 1 form c_t = c0·√t (trigger off when c0 = 0).
         trigger: if c0 > 0.0 {
-            // Theorem 1 form c_t = c0·√t.
-            format!("poly:{c0}:0.5")
+            crate::config::TriggerSpec::poly(c0, 0.5)
         } else {
-            "zero".into()
+            crate::config::TriggerSpec::zero()
         },
         // Practical inverse-time schedule: Theorem 1's a >= 5H/p with the
         // worst-case p makes eta so small that T-sweeps at test scale sit
         // in the pre-asymptotic plateau; the paper's own experiments use
         // eta_t = 1/(t+100)-style tuned schedules (Section 5.1).
         lr: "invtime:60:2".into(),
-        h,
+        h: h.into(),
         steps,
         eval_every: steps.max(1),
         seed,
         // σ = 0.2 noise, unit heterogeneity spread — the rate-test regime.
-        problem: format!("quadratic:{d}:0.2:1"),
+        problem: format!("quadratic:{d}:0.2:1").into(),
         ..Default::default()
     }
 }
@@ -92,14 +84,9 @@ fn run_points(configs: Vec<ExperimentConfig>, cache: &ArtifactCache) -> Vec<Rate
         .into_iter()
         .map(|o| {
             let cfg = &o.cfg;
-            let d: usize = cfg
-                .problem
-                .split(':')
-                .nth(1)
-                .and_then(|s| s.parse().ok())
-                .expect("quadratic problem dim");
-            let comp =
-                crate::compress::parse(&cfg.compressor, d).expect("rate-point compressor");
+            // Typed payloads: no string re-splitting.
+            let d = cfg.problem.dim();
+            let comp = cfg.compressor.build(d);
             let omega = comp.omega(d);
             let mixing = cache.mixing_or_else(ArtifactCache::topo_key(cfg), || {
                 super::builder::build_mixing(cfg)
@@ -107,18 +94,20 @@ fn run_points(configs: Vec<ExperimentConfig>, cache: &ArtifactCache) -> Vec<Rate
             let delta = cache
                 .spectral_or_compute(ArtifactCache::topo_key(cfg), &mixing)
                 .delta;
-            let c0 = match cfg.trigger.split(':').nth(1) {
-                Some(v) => v.parse().unwrap_or(0.0),
-                None => 0.0,
+            let c0 = match cfg.trigger.schedule() {
+                crate::trigger::ThresholdSchedule::Constant(c0) => *c0,
+                crate::trigger::ThresholdSchedule::Poly { c0, .. } => *c0,
+                _ => 0.0,
             };
+            let h = cfg.h.period().unwrap_or(0);
             let last = o.series.records.last().expect("at least one record");
             RatePoint {
                 label: format!(
-                    "n={} H={} c0={c0} ω={omega:.3} δ={delta:.3}",
-                    cfg.nodes, cfg.h
+                    "n={} H={h} c0={c0} ω={omega:.3} δ={delta:.3}",
+                    cfg.nodes
                 ),
                 n: cfg.nodes,
-                h: cfg.h,
+                h,
                 c0,
                 omega,
                 delta,

@@ -83,7 +83,7 @@ fn base_cfg(steps: u64, seed: u64) -> ExperimentConfig {
         problem: "quadratic:64".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:50".into(),
-        h: 2,
+        h: crate::config::SyncSpec::every(2),
         ..Default::default()
     }
 }
@@ -104,7 +104,7 @@ pub fn drop_sweep(
             let mut cfg = base_cfg(steps, seed);
             cfg.algo = algo.clone();
             if p > 0.0 {
-                cfg.link = format!("drop:{p}");
+                cfg.link = format!("drop:{p}").into();
             }
             cfg.name = format!("robust-{}-drop{p}", algo.as_str());
             configs.push(cfg);
@@ -140,8 +140,8 @@ pub fn switch_sweep(
         .map(|(name, schedule, topology)| {
             let mut cfg = base_cfg(steps, seed);
             cfg.name = name.into();
-            cfg.topology = topology;
-            cfg.topology_schedule = schedule;
+            cfg.topology = topology.into();
+            cfg.topology_schedule = schedule.into();
             cfg
         })
         .collect();

@@ -25,7 +25,7 @@ pub fn remark4_measured(steps: u64, h: u64, seed: u64) -> (Series, Series) {
         problem: "quadratic:64".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:50".into(),
-        h,
+        h: h.into(),
         ..Default::default()
     };
     let sparq = ExperimentConfig {
@@ -35,7 +35,7 @@ pub fn remark4_measured(steps: u64, h: u64, seed: u64) -> (Series, Series) {
     let choco = ExperimentConfig {
         name: "remark4-choco".into(),
         algo: Algo::Choco,
-        h: 1,
+        h: 1u64.into(),
         trigger: "zero".into(),
         ..base
     };

@@ -79,35 +79,48 @@ impl TopologySchedule {
     }
 
     /// Parse a schedule spec for an n-node run: `static`,
-    /// `switch:K1,K2,...:P`, or `sample:BASE:M`.
+    /// `switch:K1,K2,...:P`, or `sample:BASE:M`. The grammar lives in
+    /// [`crate::config::ScheduleSpec`] (the typed config surface); this
+    /// wrapper adds the n-dependent construction and validation.
     pub fn parse(spec: &str, n: usize, seed: u64) -> Result<TopologySchedule, String> {
-        if spec.is_empty() || spec == "static" {
-            return Ok(TopologySchedule::fixed());
-        }
-        let parts: Vec<&str> = spec.split(':').collect();
-        let kind = match parts.as_slice() {
-            ["switch", kinds, period] => {
-                let kinds: Vec<TopologyKind> = kinds
-                    .split(',')
-                    .map(|k| {
-                        TopologyKind::parse(k).ok_or_else(|| format!("unknown topology {k:?}"))
-                    })
-                    .collect::<Result<_, _>>()?;
-                if kinds.is_empty() {
-                    return Err("switch needs at least one topology".into());
-                }
-                let period: u64 = period
-                    .parse()
-                    .map_err(|_| format!("switch period {period:?} is not an integer"))?;
-                if period == 0 {
-                    return Err("switch period must be >= 1".into());
-                }
-                ScheduleKind::Switch { kinds, period }
+        let parsed: crate::config::ScheduleSpec = spec.parse().map_err(|e| {
+            // Strip the ConfigError framing back down to the bare reason
+            // string this API always returned.
+            match e {
+                crate::config::ConfigError::Value { reason, .. } => reason,
+                other => other.to_string(),
             }
-            ["sample", base, m] => {
-                let base_kind = TopologyKind::parse(base)
-                    .ok_or_else(|| format!("unknown base topology {base:?}"))?;
-                let base = Topology::new(base_kind, n, seed);
+        })?;
+        Self::from_spec(&parsed, n, seed)
+    }
+
+    /// Build the replayable schedule from a validated
+    /// [`ScheduleSpec`](crate::config::ScheduleSpec) for an n-node run
+    /// (checks the n-dependent constraints: the base graph must be
+    /// constructible and must have at least M edges).
+    pub fn from_spec(
+        spec: &crate::config::ScheduleSpec,
+        n: usize,
+        seed: u64,
+    ) -> Result<TopologySchedule, String> {
+        use crate::config::ScheduleKindSpec;
+        let kind = match spec.kind() {
+            ScheduleKindSpec::Static => return Ok(TopologySchedule::fixed()),
+            ScheduleKindSpec::Switch { kinds, period } => {
+                for k in kinds {
+                    k.check_nodes(n)
+                        .map_err(|e| format!("switch topology {:?}: {e}", k.spec_str()))?;
+                }
+                ScheduleKind::Switch {
+                    kinds: kinds.clone(),
+                    period: *period,
+                }
+            }
+            ScheduleKindSpec::Sample { base: base_kind, m } => {
+                base_kind
+                    .check_nodes(n)
+                    .map_err(|e| format!("sample base {:?}: {e}", base_kind.spec_str()))?;
+                let base = Topology::new(*base_kind, n, seed);
                 let mut edges = Vec::new();
                 for (i, adj) in base.neighbors.iter().enumerate() {
                     for &j in adj {
@@ -116,26 +129,18 @@ impl TopologySchedule {
                         }
                     }
                 }
-                let m: usize = m
-                    .parse()
-                    .map_err(|_| format!("sample edge count {m:?} is not an integer"))?;
-                if m == 0 {
-                    return Err("sample needs at least one edge per round".into());
-                }
-                if m > edges.len() {
+                if *m > edges.len() {
                     return Err(format!(
                         "sample asks for {m} edges per round but the base graph has \
                          only {}",
                         edges.len()
                     ));
                 }
-                ScheduleKind::EdgeSample { base, edges, m }
-            }
-            _ => {
-                return Err(format!(
-                    "unknown topology_schedule {spec:?}; expected static, \
-                     switch:K1,K2,...:P, or sample:BASE:M"
-                ))
+                ScheduleKind::EdgeSample {
+                    base,
+                    edges,
+                    m: *m,
+                }
             }
         };
         Ok(TopologySchedule {

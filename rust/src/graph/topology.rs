@@ -21,6 +21,54 @@ pub enum TopologyKind {
 }
 
 impl TopologyKind {
+    /// Canonical spec string (inverse of [`parse`](Self::parse)).
+    pub fn spec_str(&self) -> String {
+        match self {
+            TopologyKind::Ring => "ring".into(),
+            TopologyKind::Complete => "complete".into(),
+            TopologyKind::Star => "star".into(),
+            TopologyKind::Path => "path".into(),
+            TopologyKind::Torus => "torus".into(),
+            TopologyKind::Hypercube => "hypercube".into(),
+            TopologyKind::RandomRegular(d) => format!("regular{d}"),
+        }
+    }
+
+    /// Is this kind constructible on n nodes? Returns the constraint it
+    /// violates otherwise — the checks [`Topology::new`] would assert on,
+    /// surfaced at config-resolve time instead of run time.
+    pub fn check_nodes(&self, n: usize) -> Result<(), String> {
+        if n == 0 {
+            return Err("need at least one node".into());
+        }
+        match self {
+            TopologyKind::Torus => {
+                let side = (n as f64).sqrt().round() as usize;
+                if side * side != n {
+                    return Err(format!("torus needs a perfect-square node count, got {n}"));
+                }
+            }
+            TopologyKind::Hypercube => {
+                if !n.is_power_of_two() {
+                    return Err(format!("hypercube needs a power-of-two node count, got {n}"));
+                }
+            }
+            TopologyKind::RandomRegular(d) => {
+                if *d == 0 {
+                    return Err("regular degree must be >= 1".into());
+                }
+                if *d >= n {
+                    return Err(format!("regular degree {d} must be < node count {n}"));
+                }
+                if n * d % 2 != 0 {
+                    return Err(format!("regular graph needs n·d even, got n={n} d={d}"));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
     pub fn parse(s: &str) -> Option<TopologyKind> {
         match s {
             "ring" => Some(TopologyKind::Ring),
@@ -291,5 +339,25 @@ mod tests {
             Some(TopologyKind::RandomRegular(4))
         );
         assert_eq!(TopologyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn spec_str_inverts_parse() {
+        for s in ["ring", "complete", "star", "path", "torus", "hypercube", "regular4"] {
+            assert_eq!(TopologyKind::parse(s).unwrap().spec_str(), s);
+        }
+    }
+
+    #[test]
+    fn check_nodes_mirrors_constructor_asserts() {
+        assert!(TopologyKind::Torus.check_nodes(16).is_ok());
+        assert!(TopologyKind::Torus.check_nodes(15).is_err());
+        assert!(TopologyKind::Hypercube.check_nodes(16).is_ok());
+        assert!(TopologyKind::Hypercube.check_nodes(12).is_err());
+        assert!(TopologyKind::RandomRegular(3).check_nodes(20).is_ok());
+        assert!(TopologyKind::RandomRegular(3).check_nodes(5).is_err()); // n·d odd
+        assert!(TopologyKind::RandomRegular(8).check_nodes(8).is_err()); // d >= n
+        assert!(TopologyKind::Ring.check_nodes(0).is_err());
+        assert!(TopologyKind::Ring.check_nodes(2).is_ok());
     }
 }

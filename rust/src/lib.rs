@@ -30,6 +30,12 @@
 //!   axes over `ExperimentConfig`), concurrent run scheduling under a
 //!   total worker budget, cross-run artifact caching, JSONL result
 //!   streaming, and hash-keyed resume with mid-run checkpoints.
+//! * [`config`] — the typed experiment surface: spec enums for every
+//!   knob (parse-don't-validate, legacy strings + structured JSON),
+//!   cross-field `resolve()`, one structured `ConfigError`.
+//! * [`run`] — the `Run` handle: one training run as a value
+//!   (step/eval/snapshot/restore + the canonical observer-driven loop
+//!   all runners share).
 //! * [`util`] — offline-environment substrates: deterministic RNG, JSON,
 //!   CLI parsing, stats, bench harness helpers.
 
@@ -45,6 +51,7 @@ pub mod problems;
 pub mod coordinator;
 pub mod metrics;
 pub mod config;
+pub mod run;
 pub mod experiments;
 pub mod sweep;
 pub mod runtime;

@@ -7,10 +7,16 @@
 //!             --checkpoint-every C              (see sweep::SweepSpec);
 //!             --target-err E --target-loss L    early-stop budgets;
 //!             --distributed=true                cooperative multi-process
-//!             --lease-secs S --poll-ms P]       claim/lease execution
+//!             --lease-secs S --poll-ms P        claim/lease execution
+//!             --lease-margin-secs M]            (+ clock-skew margin)
 //!   sweep report --out results/                 savings table + Fig-1 CSV
 //!            [--target-err E | --target-loss L  panels from results.jsonl,
 //!             --csv-dir D]                      no re-running
+//!   sweep status --out results/                 held distributed claims:
+//!            [--lease-secs S                    owner, heartbeat age,
+//!             --lease-margin-secs M]            staleness
+//!   check    --spec spec.json | --config c.json resolve every run of a
+//!                                               spec (config-schema gate)
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
@@ -47,6 +53,7 @@ fn main() {
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("check") => cmd_check(&args),
         Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
         Some("spectral") => cmd_spectral(&args),
@@ -57,7 +64,7 @@ fn main() {
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|sweep report|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|perfgate|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|sweep status|check|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -72,6 +79,9 @@ fn cmd_sweep(args: &Args) {
 
     if args.positional.get(1).map(|s| s.as_str()) == Some("report") {
         return cmd_sweep_report(args);
+    }
+    if args.positional.get(1).map(|s| s.as_str()) == Some("status") {
+        return cmd_sweep_status(args);
     }
     let Some(spec_path) = args.get("spec") else {
         eprintln!("sweep requires --spec spec.json (see examples/specs/)");
@@ -110,6 +120,13 @@ fn cmd_sweep(args: &Args) {
                 .map(|_| args.f64("lease-secs", 0.0))
                 .or(spec.lease_secs)
                 .unwrap_or(60.0),
+            // Clock-skew allowance (CLI > spec > 2s default — one
+            // filesystem does not imply one clock domain).
+            lease_margin_secs: args
+                .get("lease-margin-secs")
+                .map(|_| args.f64("lease-margin-secs", 0.0))
+                .or(spec.lease_margin_secs)
+                .unwrap_or(2.0),
             heartbeat_secs: args.f64("heartbeat-secs", 0.0),
             poll_ms: args.u64("poll-ms", 200),
             owner: args.get_or("owner", ""),
@@ -223,6 +240,65 @@ fn cmd_sweep_report(args: &Args) {
     }
 }
 
+fn cmd_sweep_status(args: &Args) {
+    use sparq::sweep::{list_claims, now_secs, status_table};
+
+    let Some(out) = args.get("out") else {
+        eprintln!("sweep status requires --out <sweep output dir>");
+        std::process::exit(2);
+    };
+    let lease = args.f64("lease-secs", 60.0);
+    let margin = args.f64("lease-margin-secs", 2.0);
+    let claims = list_claims(std::path::Path::new(out), now_secs()).unwrap_or_else(|e| {
+        eprintln!("status error: {e}");
+        std::process::exit(1);
+    });
+    if claims.is_empty() {
+        println!("no held claims under {out}/claims/");
+        return;
+    }
+    print!("{}", status_table(&claims, lease, margin));
+}
+
+/// Config-schema gate: feed a sweep spec (or a single config) through
+/// `ExperimentConfig::resolve()` without running anything. CI points it
+/// at every `examples/specs/*.json`.
+fn cmd_check(args: &Args) {
+    use sparq::sweep::SweepSpec;
+
+    if let Some(path) = args.get("config") {
+        let cfg = ExperimentConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(1);
+        });
+        if let Err(e) = cfg.resolve() {
+            eprintln!("{path}: {e}");
+            std::process::exit(1);
+        }
+        println!("{path}: config resolves OK");
+        return;
+    }
+    let Some(spec_path) = args.get("spec") else {
+        eprintln!("check requires --spec spec.json or --config cfg.json");
+        std::process::exit(2);
+    };
+    let spec = SweepSpec::from_file(spec_path).unwrap_or_else(|e| {
+        eprintln!("{spec_path}: {e}");
+        std::process::exit(1);
+    });
+    let runs = spec.expand().unwrap_or_else(|e| {
+        eprintln!("{spec_path}: {e}");
+        std::process::exit(1);
+    });
+    for (label, cfg) in &runs {
+        if let Err(e) = cfg.resolve() {
+            eprintln!("{spec_path}: run {label:?} ({}): {e}", cfg.name);
+            std::process::exit(1);
+        }
+    }
+    println!("{spec_path}: {} run(s) resolve OK", runs.len());
+}
+
 fn cmd_perfgate(args: &Args) {
     use sparq::util::bench::perf_gate;
     use sparq::util::json::Json;
@@ -283,28 +359,28 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
     if let Some(v) = args.get("nodes") {
         cfg.nodes = v.parse().expect("--nodes");
     }
-    if let Some(v) = args.get("topology") {
-        cfg.topology = v.to_string();
+    // Typed spec flags: parse at the boundary, exit with the structured
+    // error (field/value/reason/suggestion) on bad input.
+    fn parse_flag<T: std::str::FromStr<Err = sparq::config::ConfigError>>(
+        args: &Args,
+        flag: &str,
+        slot: &mut T,
+    ) {
+        if let Some(v) = args.get(flag) {
+            *slot = v.parse().unwrap_or_else(|e| {
+                eprintln!("--{flag}: {e}");
+                std::process::exit(2);
+            });
+        }
     }
-    if let Some(v) = args.get("topology-schedule") {
-        cfg.topology_schedule = v.to_string();
-    }
-    if let Some(v) = args.get("link") {
-        cfg.link = v.to_string();
-    }
-    if let Some(v) = args.get("compressor") {
-        cfg.compressor = v.to_string();
-    }
-    if let Some(v) = args.get("trigger") {
-        cfg.trigger = v.to_string();
-    }
-    if let Some(v) = args.get("lr") {
-        cfg.lr = v.to_string();
-    }
-    if let Some(v) = args.get("problem") {
-        cfg.problem = v.to_string();
-    }
-    cfg.h = args.u64("h", cfg.h);
+    parse_flag(args, "topology", &mut cfg.topology);
+    parse_flag(args, "topology-schedule", &mut cfg.topology_schedule);
+    parse_flag(args, "link", &mut cfg.link);
+    parse_flag(args, "compressor", &mut cfg.compressor);
+    parse_flag(args, "trigger", &mut cfg.trigger);
+    parse_flag(args, "lr", &mut cfg.lr);
+    parse_flag(args, "problem", &mut cfg.problem);
+    parse_flag(args, "h", &mut cfg.h);
     cfg.steps = args.u64("steps", cfg.steps);
     cfg.eval_every = args.u64("eval-every", cfg.eval_every);
     cfg.momentum = args.f64("momentum", cfg.momentum);

@@ -73,3 +73,50 @@ pub trait GradientSource {
         None
     }
 }
+
+/// Forward every trait method through a level of indirection (including
+/// defaulted ones — `shared`/`grad_shared` gate the parallel gradient
+/// phase and must not fall back to the trait defaults).
+macro_rules! forward_gradient_source {
+    () => {
+        fn dim(&self) -> usize {
+            (**self).dim()
+        }
+        fn n_nodes(&self) -> usize {
+            (**self).n_nodes()
+        }
+        fn grad(&mut self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+            (**self).grad(node, x, rng, out)
+        }
+        fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+            (**self).shared()
+        }
+        fn grad_shared(&self, node: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+            (**self).grad_shared(node, x, rng, out)
+        }
+        fn global_loss(&mut self, x: &[f32]) -> f64 {
+            (**self).global_loss(x)
+        }
+        fn test_error(&mut self, x: &[f32]) -> Option<f64> {
+            (**self).test_error(x)
+        }
+        fn opt_gap(&mut self, x: &[f32]) -> Option<f64> {
+            (**self).opt_gap(x)
+        }
+        fn init_params(&self, rng: &mut Rng) -> Option<Vec<f32>> {
+            (**self).init_params(rng)
+        }
+    };
+}
+
+/// `&mut dyn GradientSource` is itself a source (borrowed form for the
+/// generic [`Run`](crate::run::Run) handle).
+impl<T: GradientSource + ?Sized> GradientSource for &mut T {
+    forward_gradient_source!();
+}
+
+/// `Box<dyn GradientSource>` is itself a source (owned form for
+/// [`Run`](crate::run::Run)).
+impl<T: GradientSource + ?Sized> GradientSource for Box<T> {
+    forward_gradient_source!();
+}

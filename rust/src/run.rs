@@ -1,0 +1,586 @@
+//! The `Run` handle: one training run as a first-class value.
+//!
+//! Pre-redesign, the crate had three hand-rolled copies of the same
+//! evaluation loop — `coordinator::runner::run`, the sweep engine's
+//! `execute_one`, and the `examples/` drivers — each re-implementing
+//! record construction, eval cadence, and checkpoint plumbing. [`Run`]
+//! owns that loop once: it pairs an algorithm with a gradient source and
+//! a bus, exposes [`step`](Run::step) / [`eval`](Run::eval) /
+//! [`snapshot`](Run::snapshot) / [`restore`](Run::restore) for manual
+//! driving, and [`drive`](Run::drive) for the canonical loop with an
+//! observer hooking every decision point (per-iteration [`tick`]
+//! heartbeats, early-stop at evaluation records, checkpoint cadence,
+//! fault injection, mid-run worker rebalancing). Lifecycle observers
+//! reuse the sweep engine's [`RunEvent`]/[`EventHook`] types.
+//!
+//! `Run` is generic over ownership: `Run<Box<dyn DecentralizedAlgo>,
+//! Box<dyn GradientSource>>` (the default, what
+//! [`Run::from_resolved`] builds from a typed config) and
+//! `Run<&mut dyn DecentralizedAlgo, &mut dyn GradientSource>` (what the
+//! legacy `coordinator::runner::run` signature wraps) drive identically
+//! through the forwarding impls on `&mut T`/`Box<T>`.
+//!
+//! [`tick`]: RunObserver::tick
+//!
+//! ```
+//! use sparq::config::{ExperimentConfig, TriggerSpec};
+//! use sparq::run::Run;
+//!
+//! let cfg = ExperimentConfig {
+//!     nodes: 4,
+//!     steps: 60,
+//!     eval_every: 20,
+//!     problem: "quadratic:16".into(),
+//!     trigger: TriggerSpec::constant(20.0),
+//!     ..Default::default()
+//! };
+//! let resolved = cfg.resolve().expect("coherent config");
+//! let mut run = Run::from_resolved(&resolved, None, 1);
+//! let series = run.run_to_end().expect("no observer to fail");
+//! assert_eq!(series.records.len(), 4); // t = 0, 20, 40, 60
+//! assert!(series.records.last().unwrap().opt_gap < series.records[0].opt_gap);
+//! ```
+
+use std::sync::Arc;
+
+use crate::comm::Bus;
+use crate::config::ResolvedConfig;
+use crate::coordinator::{checkpoint, Checkpoint, DecentralizedAlgo};
+use crate::metrics::{RoundRecord, Series};
+use crate::problems::GradientSource;
+use crate::sweep::cache::ArtifactCache;
+use crate::util::Rng;
+
+/// A run-lifecycle event (used by the sweep engine's scheduling-order
+/// tests and progress UIs, and re-emitted by [`Run::drive`] for hooks
+/// registered via [`Run::observe`]).
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// A run began executing (not emitted for resume-skipped runs).
+    Started {
+        id: String,
+        label: String,
+        /// Node-level worker threads granted at start (the sweep
+        /// engine's ⌊budget/concurrent⌋ split; rebalancing may raise it
+        /// mid-run).
+        node_workers: usize,
+    },
+    /// A run finished executing. `completed` is false for fault-aborted
+    /// or abandoned runs; `stopped` is true when an early-stop target
+    /// truncated it.
+    Finished {
+        id: String,
+        label: String,
+        completed: bool,
+        stopped: bool,
+    },
+}
+
+/// Lifecycle-event callback (called from run worker threads).
+pub type EventHook = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+
+/// Observer of one [`Run::drive`] invocation. Every method has a no-op
+/// default, so implementors opt into exactly the decision points they
+/// need.
+pub trait RunObserver {
+    /// Called once per iteration *before* the step (the distributed
+    /// runner refreshes its claim heartbeat here). `Ok(false)` abandons
+    /// the run ([`DriveEnd::Abandoned`]); `Err` aborts with the error.
+    fn tick(&mut self, _t: u64) -> Result<bool, String> {
+        Ok(true)
+    }
+
+    /// Called at every evaluation record (including t = 0). `done` is
+    /// true for the final record of the horizon. Return `true` to stop
+    /// the run at this record ([`DriveEnd::Stopped`]); a stop on the
+    /// final record is meaningless and ignored.
+    fn evaluated(&mut self, _rec: &RoundRecord, _done: bool) -> bool {
+        false
+    }
+
+    /// Should a checkpoint be taken at iteration boundary `t`? (Called
+    /// after the step and its evaluation, never on the final iteration.)
+    fn checkpoint_due(&mut self, _t: u64) -> bool {
+        false
+    }
+
+    /// Persist a snapshot requested via
+    /// [`checkpoint_due`](Self::checkpoint_due) (paired with the series
+    /// evaluated so far).
+    fn persist(&mut self, _ck: Checkpoint, _series: &Series) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Fault-injection hook: abandon the run at iteration boundary `t`
+    /// without recording a result (crash simulation for takeover tests).
+    fn abort_due(&mut self, _t: u64) -> bool {
+        false
+    }
+
+    /// Worker-count hint consulted every iteration; `Some(w)` applies
+    /// `w` node workers if different from the current count (the sweep
+    /// engine re-splits ⌊budget/pending⌋ as its run pool drains).
+    /// Results are bit-for-bit identical for any worker count.
+    fn workers_hint(&mut self, _t: u64) -> Option<usize> {
+        None
+    }
+}
+
+/// The no-op observer (plain uninterrupted runs).
+pub struct NoObserver;
+
+impl RunObserver for NoObserver {}
+
+/// How a [`Run::drive`] invocation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriveEnd {
+    /// The horizon was reached.
+    Completed,
+    /// The observer stopped the run at an evaluation record
+    /// (early-stop target reached).
+    Stopped,
+    /// The run was abandoned mid-flight (lost claim / fault injection);
+    /// its partial state is *not* a result.
+    Abandoned,
+}
+
+/// One training run as a value (see module docs). `A` and `P` are
+/// anything that implements the algorithm/source traits — concrete
+/// engines, boxed trait objects, or `&mut` borrows.
+pub struct Run<A = Box<dyn DecentralizedAlgo>, P = Box<dyn GradientSource>>
+where
+    A: DecentralizedAlgo,
+    P: GradientSource,
+{
+    algo: A,
+    problem: P,
+    bus: Bus,
+    series: Series,
+    id: String,
+    t: u64,
+    steps: u64,
+    eval_every: u64,
+    /// Last applied node-worker count (`usize::MAX` = engine default,
+    /// nothing applied yet) — lets rebalancing hints skip redundant
+    /// thread-pool rebuilds.
+    workers: usize,
+    hooks: Vec<EventHook>,
+    announced: bool,
+}
+
+impl Run<Box<dyn DecentralizedAlgo>, Box<dyn GradientSource>> {
+    /// Build a run from a resolved config: problem, engine, shared
+    /// initial parameters, and `workers` node-worker threads. With a
+    /// sweep [`ArtifactCache`], topology/spectral/dataset artifacts are
+    /// shared across runs (bit-for-bit identical to uncached builds).
+    pub fn from_resolved(
+        resolved: &ResolvedConfig,
+        cache: Option<&ArtifactCache>,
+        workers: usize,
+    ) -> Run {
+        use crate::experiments::builder::{build_algo_resolved, build_problem_with};
+        let cfg = resolved.config();
+        let problem = build_problem_with(cfg, cache);
+        let d = problem.dim();
+        let mut algo = build_algo_resolved(resolved, d, cache);
+        let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+        if let Some(x0) = problem.init_params(&mut init_rng) {
+            algo.set_params(&x0);
+        }
+        let label = format!("{}:{}", cfg.name, algo.name());
+        let mut run = Run::new(algo, problem, cfg.steps, cfg.eval_every, label);
+        run.id = crate::sweep::spec::config_hash(cfg);
+        run.set_workers(workers);
+        run
+    }
+}
+
+impl<A: DecentralizedAlgo, P: GradientSource> Run<A, P> {
+    /// Wrap an already-built algorithm/source pair. The series label is
+    /// `label`; evaluation happens every `eval_every` iterations (plus
+    /// t = 0 and the final iteration).
+    pub fn new(algo: A, problem: P, steps: u64, eval_every: u64, label: String) -> Run<A, P> {
+        let bus = Bus::new(algo.n());
+        Run {
+            id: label.clone(),
+            series: Series::new(label),
+            algo,
+            problem,
+            bus,
+            t: 0,
+            steps,
+            eval_every,
+            workers: usize::MAX,
+            hooks: Vec::new(),
+            announced: false,
+        }
+    }
+
+    /// Register a lifecycle observer ([`RunEvent::Started`] at the first
+    /// [`drive`](Self::drive), [`RunEvent::Finished`] when it returns).
+    pub fn observe(&mut self, hook: EventHook) {
+        self.hooks.push(hook);
+    }
+
+    /// Current iteration (0 before the first step).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Horizon T.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Has the horizon been reached?
+    pub fn done(&self) -> bool {
+        self.t >= self.steps
+    }
+
+    /// The evaluated series so far.
+    pub fn series(&self) -> &Series {
+        &self.series
+    }
+
+    /// Mutable access to the series (resume truncation).
+    pub fn series_mut(&mut self) -> &mut Series {
+        &mut self.series
+    }
+
+    /// Consume the run, returning its series.
+    pub fn into_series(self) -> Series {
+        self.series
+    }
+
+    /// The underlying algorithm.
+    pub fn algo(&self) -> &A {
+        &self.algo
+    }
+
+    /// Communication totals (what evaluation records charge from).
+    pub fn bus(&self) -> &Bus {
+        &self.bus
+    }
+
+    /// Cumulative (transmitted, opportunities) trigger statistics.
+    pub fn fired_stats(&self) -> (u64, u64) {
+        self.algo.fired_stats()
+    }
+
+    /// Average iterate x̄ (the quantity the theorems track).
+    pub fn x_bar(&self) -> Vec<f32> {
+        self.algo.x_bar()
+    }
+
+    /// Set the node-worker count, skipping redundant pool rebuilds.
+    /// Bit-for-bit identical results for every value.
+    pub fn set_workers(&mut self, workers: usize) {
+        if workers != self.workers {
+            self.workers = workers;
+            self.algo.set_workers(workers);
+        }
+    }
+
+    /// Advance one iteration (no evaluation).
+    pub fn step(&mut self) {
+        self.algo.step(self.t, &mut self.problem, &mut self.bus);
+        self.t += 1;
+    }
+
+    /// Evaluate at the current iteration and append the record.
+    pub fn eval(&mut self) -> &RoundRecord {
+        let xbar = self.algo.x_bar();
+        let loss = self.problem.global_loss(&xbar);
+        self.series.push(RoundRecord {
+            t: self.t,
+            loss,
+            test_error: self.problem.test_error(&xbar).unwrap_or(f64::NAN),
+            opt_gap: self.problem.opt_gap(&xbar).unwrap_or(f64::NAN),
+            bits: self.bus.total_bits,
+            comm_rounds: self.bus.comm_rounds,
+            consensus: self.algo.consensus_distance(),
+            fired: self.algo.last_fired(),
+        });
+        self.series.records.last().expect("just pushed")
+    }
+
+    /// Capture the full run state at the current iteration boundary.
+    pub fn snapshot(&self) -> Checkpoint {
+        checkpoint::snapshot(&self.algo, self.t, &self.bus)
+    }
+
+    /// Restore a snapshot (bit-for-bit resume) together with the series
+    /// evaluated up to it.
+    pub fn restore(&mut self, ck: &Checkpoint, series: Series) {
+        checkpoint::restore(&mut self.algo, ck);
+        checkpoint::restore_bus(&mut self.bus, ck);
+        self.series = series;
+        self.t = ck.t;
+    }
+
+    fn emit(&self, event: RunEvent) {
+        for hook in &self.hooks {
+            hook(&event);
+        }
+    }
+
+    /// The canonical evaluation loop (replicates the pre-redesign
+    /// runner/sweep loops exactly — pinned by the sweep equivalence and
+    /// engine-equivalence suites): evaluate at t = 0, then per
+    /// iteration: observer tick → step → evaluate at the cadence (and at
+    /// the horizon) → early-stop check (never on the final record) →
+    /// checkpoint cadence → fault-injection check. Resumable: after
+    /// [`restore`](Self::restore) the loop continues from the snapshot
+    /// iteration without re-evaluating t = 0.
+    pub fn drive(&mut self, obs: &mut dyn RunObserver) -> Result<DriveEnd, String> {
+        if !self.announced {
+            self.announced = true;
+            self.emit(RunEvent::Started {
+                id: self.id.clone(),
+                label: self.series.label.clone(),
+                node_workers: if self.workers == usize::MAX { 1 } else { self.workers },
+            });
+        }
+        let end = self.drive_inner(obs)?;
+        self.emit(RunEvent::Finished {
+            id: self.id.clone(),
+            label: self.series.label.clone(),
+            completed: end != DriveEnd::Abandoned,
+            stopped: end == DriveEnd::Stopped,
+        });
+        Ok(end)
+    }
+
+    fn drive_inner(&mut self, obs: &mut dyn RunObserver) -> Result<DriveEnd, String> {
+        if self.t == 0 && self.series.records.is_empty() {
+            self.eval();
+            let rec = self.series.records.last().expect("t=0 record");
+            // A zero-step run's t=0 record is final — stops are ignored.
+            if obs.evaluated(rec, self.steps == 0) && self.steps > 0 {
+                return Ok(DriveEnd::Stopped);
+            }
+        }
+        while self.t < self.steps {
+            let t = self.t;
+            if let Some(w) = obs.workers_hint(t) {
+                self.set_workers(w);
+            }
+            if !obs.tick(t)? {
+                return Ok(DriveEnd::Abandoned);
+            }
+            self.step();
+            let done = self.t == self.steps;
+            if self.t % self.eval_every.max(1) == 0 || done {
+                self.eval();
+                let rec = self.series.records.last().expect("eval record");
+                // Early stop truncates *at* the evaluation record that
+                // reached the target; the cadence is config-fixed, so
+                // the stop round — and the truncated series, bit for
+                // bit — is identical for every worker budget and for
+                // serial vs distributed execution.
+                if obs.evaluated(rec, done) && !done {
+                    return Ok(DriveEnd::Stopped);
+                }
+            }
+            if !done && obs.checkpoint_due(self.t) {
+                let ck = self.snapshot();
+                obs.persist(ck, &self.series)?;
+            }
+            if !done && obs.abort_due(self.t) {
+                return Ok(DriveEnd::Abandoned);
+            }
+        }
+        Ok(DriveEnd::Completed)
+    }
+
+    /// Drive to the horizon with no observer; returns the series.
+    pub fn run_to_end(&mut self) -> Result<&Series, String> {
+        self.drive(&mut NoObserver)?;
+        Ok(&self.series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::experiments::run_config;
+    use std::sync::Mutex;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "run-handle".into(),
+            nodes: 5,
+            steps: 120,
+            eval_every: 40,
+            problem: "quadratic:16".into(),
+            compressor: "sign_topk:25%".into(),
+            trigger: "const:20".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn drive_matches_run_config_bit_for_bit() {
+        let cfg = quick_cfg();
+        let expect = run_config(&cfg, false);
+        let resolved = cfg.resolve().unwrap();
+        let mut run = Run::from_resolved(&resolved, None, 1);
+        let got = run.run_to_end().unwrap();
+        assert_eq!(got.to_csv(), expect.to_csv());
+        assert_eq!(got.label, expect.label);
+    }
+
+    #[test]
+    fn manual_step_eval_equals_drive() {
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut a = Run::from_resolved(&resolved, None, 1);
+        a.run_to_end().unwrap();
+        let mut b = Run::from_resolved(&resolved, None, 1);
+        b.eval();
+        for t in 0..120u64 {
+            b.step();
+            if (t + 1) % 40 == 0 {
+                b.eval();
+            }
+        }
+        assert_eq!(a.series().to_csv(), b.series().to_csv());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_for_bit() {
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut full = Run::from_resolved(&resolved, None, 1);
+        full.run_to_end().unwrap();
+
+        let mut first = Run::from_resolved(&resolved, None, 1);
+        first.eval();
+        for _ in 0..60 {
+            first.step();
+            if first.t() % 40 == 0 {
+                first.eval();
+            }
+        }
+        let ck = first.snapshot();
+        let partial = first.series().clone();
+
+        let mut second = Run::from_resolved(&resolved, None, 1);
+        second.restore(&ck, partial);
+        assert_eq!(second.t(), 60);
+        second.drive(&mut NoObserver).unwrap();
+        assert_eq!(second.series().to_csv(), full.series().to_csv());
+    }
+
+    #[test]
+    fn observer_hooks_fire_in_order() {
+        struct Probe {
+            ticks: u64,
+            evals: Vec<u64>,
+        }
+        impl RunObserver for Probe {
+            fn tick(&mut self, _t: u64) -> Result<bool, String> {
+                self.ticks += 1;
+                Ok(true)
+            }
+            fn evaluated(&mut self, rec: &RoundRecord, _done: bool) -> bool {
+                self.evals.push(rec.t);
+                false
+            }
+        }
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut run = Run::from_resolved(&resolved, None, 1);
+        let mut probe = Probe {
+            ticks: 0,
+            evals: Vec::new(),
+        };
+        let end = run.drive(&mut probe).unwrap();
+        assert_eq!(end, DriveEnd::Completed);
+        assert_eq!(probe.ticks, 120);
+        assert_eq!(probe.evals, vec![0, 40, 80, 120]);
+    }
+
+    #[test]
+    fn early_stop_and_abandon_paths() {
+        struct StopAt(u64);
+        impl RunObserver for StopAt {
+            fn evaluated(&mut self, rec: &RoundRecord, _done: bool) -> bool {
+                rec.t >= self.0
+            }
+        }
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut run = Run::from_resolved(&resolved, None, 1);
+        assert_eq!(run.drive(&mut StopAt(40)).unwrap(), DriveEnd::Stopped);
+        assert_eq!(run.series().records.last().unwrap().t, 40);
+
+        struct Abandon;
+        impl RunObserver for Abandon {
+            fn tick(&mut self, t: u64) -> Result<bool, String> {
+                Ok(t < 10)
+            }
+        }
+        let mut run = Run::from_resolved(&resolved, None, 1);
+        assert_eq!(run.drive(&mut Abandon).unwrap(), DriveEnd::Abandoned);
+        assert_eq!(run.t(), 10);
+        // a stop on the final record is ignored (the run completed)
+        struct StopAtEnd;
+        impl RunObserver for StopAtEnd {
+            fn evaluated(&mut self, rec: &RoundRecord, done: bool) -> bool {
+                done && rec.t > 0
+            }
+        }
+        let mut run = Run::from_resolved(&resolved, None, 1);
+        assert_eq!(run.drive(&mut StopAtEnd).unwrap(), DriveEnd::Completed);
+    }
+
+    #[test]
+    fn lifecycle_events_emit_once() {
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut run = Run::from_resolved(&resolved, None, 2);
+        let log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&log);
+        run.observe(Arc::new(move |e: &RunEvent| {
+            let mut v = sink.lock().unwrap();
+            match e {
+                RunEvent::Started { node_workers, .. } => {
+                    v.push(format!("start/{node_workers}"))
+                }
+                RunEvent::Finished {
+                    completed, stopped, ..
+                } => v.push(format!("finish/{completed}/{stopped}")),
+            }
+        }));
+        run.drive(&mut NoObserver).unwrap();
+        let log = log.lock().unwrap();
+        assert_eq!(*log, vec!["start/2".to_string(), "finish/true/false".to_string()]);
+    }
+
+    #[test]
+    fn borrowed_run_matches_owned_run() {
+        // The &mut dyn forwarding path (what coordinator::runner::run
+        // wraps) is bit-identical to the owned path.
+        use crate::experiments::builder::{build_algo_resolved, build_problem_with};
+        let resolved = quick_cfg().resolve().unwrap();
+        let owned = {
+            let mut run = Run::from_resolved(&resolved, None, 1);
+            run.run_to_end().unwrap();
+            run.into_series()
+        };
+        let mut problem = build_problem_with(resolved.config(), None);
+        let d = problem.dim();
+        let mut algo = build_algo_resolved(&resolved, d, None);
+        let mut rng = Rng::new(resolved.config().seed ^ 0x1217);
+        if let Some(x0) = problem.init_params(&mut rng) {
+            algo.set_params(&x0);
+        }
+        let label = format!("{}:{}", resolved.config().name, algo.name());
+        let mut run = Run::new(
+            algo.as_mut() as &mut dyn DecentralizedAlgo,
+            problem.as_mut() as &mut dyn GradientSource,
+            120,
+            40,
+            label,
+        );
+        run.run_to_end().unwrap();
+        assert_eq!(run.series().to_csv(), owned.to_csv());
+    }
+}

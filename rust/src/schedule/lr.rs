@@ -69,25 +69,60 @@ impl LrSchedule {
 
     /// Parse "const:E", "invtime:A:B", "warmup:BASE:WEP:FACTOR:SPE:M1,M2,..".
     pub fn parse(s: &str) -> Option<LrSchedule> {
+        Self::parse_checked(s).ok()
+    }
+
+    /// [`parse`](Self::parse) with field-naming errors (what the typed
+    /// [`LrSpec`](crate::config::LrSpec) surfaces): every numeric field
+    /// must be finite, the decay factor must be positive, and the warmup
+    /// epoch arithmetic must be well-defined (`SPE >= 1`).
+    pub fn parse_checked(s: &str) -> Result<LrSchedule, String> {
+        let num = |field: &str, v: &str| -> Result<f64, String> {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| format!("lr {field} {v:?} is not a number"))?;
+            if !x.is_finite() {
+                return Err(format!("lr {field} must be finite, got {x}"));
+            }
+            Ok(x)
+        };
+        let int = |field: &str, v: &str| -> Result<usize, String> {
+            v.parse::<usize>()
+                .map_err(|_| format!("lr {field} {v:?} is not a non-negative integer"))
+        };
         let p: Vec<&str> = s.split(':').collect();
         match p.as_slice() {
-            ["const", e] => Some(LrSchedule::Constant(e.parse().ok()?)),
-            ["invtime", a, b] => Some(LrSchedule::InverseTime {
-                a: a.parse().ok()?,
-                b: b.parse().ok()?,
+            ["const", e] => Ok(LrSchedule::Constant(num("eta", e)?)),
+            ["invtime", a, b] => Ok(LrSchedule::InverseTime {
+                a: num("a", a)?,
+                b: num("b", b)?,
             }),
-            ["warmup", base, wep, factor, spe, ms] => Some(LrSchedule::WarmupPiecewise {
-                base: base.parse().ok()?,
-                warmup_epochs: wep.parse().ok()?,
-                decay_factor: factor.parse().ok()?,
-                steps_per_epoch: spe.parse().ok()?,
-                milestones: ms
-                    .split(',')
-                    .map(|m| m.parse())
-                    .collect::<Result<Vec<_>, _>>()
-                    .ok()?,
-            }),
-            _ => None,
+            ["warmup", base, wep, factor, spe, ms] => {
+                let decay_factor = num("decay_factor", factor)?;
+                if decay_factor <= 0.0 {
+                    return Err(format!(
+                        "lr decay_factor must be positive, got {decay_factor}"
+                    ));
+                }
+                let steps_per_epoch = int("steps_per_epoch", spe)?;
+                if steps_per_epoch == 0 {
+                    return Err("lr steps_per_epoch must be >= 1".into());
+                }
+                Ok(LrSchedule::WarmupPiecewise {
+                    base: num("base", base)?,
+                    warmup_epochs: int("warmup_epochs", wep)?,
+                    decay_factor,
+                    steps_per_epoch,
+                    milestones: ms
+                        .split(',')
+                        .map(|m| int("milestone", m))
+                        .collect::<Result<Vec<_>, _>>()?,
+                })
+            }
+            _ => Err(format!(
+                "unknown lr spec {s:?}; expected const:E, invtime:A:B, or \
+                 warmup:BASE:WEP:FACTOR:SPE:M1,M2,..."
+            )),
         }
     }
 }
@@ -168,5 +203,22 @@ mod tests {
         } else {
             panic!()
         }
+    }
+
+    #[test]
+    fn parse_checked_names_the_offending_field() {
+        let err = LrSchedule::parse_checked("const:fast").unwrap_err();
+        assert!(err.contains("eta") && err.contains("fast"), "{err}");
+        let err = LrSchedule::parse_checked("invtime:100:inf").unwrap_err();
+        assert!(err.contains('b') && err.contains("finite"), "{err}");
+        let err = LrSchedule::parse_checked("warmup:0.1:5:0:10:150").unwrap_err();
+        assert!(err.contains("decay_factor"), "{err}");
+        let err = LrSchedule::parse_checked("warmup:0.1:5:5:0:150").unwrap_err();
+        assert!(err.contains("steps_per_epoch"), "{err}");
+        let err = LrSchedule::parse_checked("linear:0.1").unwrap_err();
+        assert!(err.contains("expected"), "{err}");
+        // Option-facade agrees with the checked parser
+        assert!(LrSchedule::parse("const:fast").is_none());
+        assert!(LrSchedule::parse("const:0.05").is_some());
     }
 }

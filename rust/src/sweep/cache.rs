@@ -86,10 +86,10 @@ impl ArtifactCache {
     /// The topology key for a config (schedule spec dominates when it
     /// names its own graphs).
     pub fn topo_key(cfg: &ExperimentConfig) -> TopoKey {
-        let spec = if cfg.topology_schedule.is_empty() || cfg.topology_schedule == "static" {
+        let spec = if cfg.topology_schedule.is_static() {
             format!("static:{}", cfg.topology)
         } else {
-            cfg.topology_schedule.clone()
+            cfg.topology_schedule.to_string()
         };
         (spec, cfg.nodes, cfg.seed)
     }

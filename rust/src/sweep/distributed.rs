@@ -74,6 +74,21 @@ pub fn claim_is_stale(now: f64, stamp: f64, lease_secs: f64) -> bool {
     now - stamp >= lease_secs
 }
 
+/// [`claim_is_stale`] with a clock-skew margin: stamps are written by
+/// the *owner's* clock and judged by the *claimant's*, and one shared
+/// filesystem does not imply one clock domain (NFS mounts from machines
+/// seconds apart). The margin widens the lease by the claimant's skew
+/// allowance so a fast-clocked claimant cannot take over a live run
+/// early; it delays legitimate takeover by at most `margin_secs`.
+pub fn claim_is_stale_with_margin(
+    now: f64,
+    stamp: f64,
+    lease_secs: f64,
+    margin_secs: f64,
+) -> bool {
+    claim_is_stale(now, stamp, lease_secs + margin_secs.max(0.0))
+}
+
 /// Result of a claim attempt.
 #[derive(Debug)]
 pub enum Acquire {
@@ -135,6 +150,10 @@ pub struct ClaimStore {
     dir: PathBuf,
     owner: String,
     lease_secs: f64,
+    /// Clock-skew allowance added to the lease before takeover (see
+    /// [`claim_is_stale_with_margin`]); 0 by default — deployments set
+    /// it via [`with_margin`](Self::with_margin) / `--lease-margin-secs`.
+    margin_secs: f64,
 }
 
 impl ClaimStore {
@@ -153,7 +172,19 @@ impl ClaimStore {
             dir,
             owner: owner.into(),
             lease_secs,
+            margin_secs: 0.0,
         })
+    }
+
+    /// Set the clock-skew lease margin (non-negative seconds).
+    pub fn with_margin(mut self, margin_secs: f64) -> Result<ClaimStore, String> {
+        if !(margin_secs.is_finite() && margin_secs >= 0.0) {
+            return Err(format!(
+                "lease margin must be a non-negative number of seconds, got {margin_secs}"
+            ));
+        }
+        self.margin_secs = margin_secs;
+        Ok(self)
     }
 
     fn claim_path(&self, id: &str) -> PathBuf {
@@ -223,7 +254,7 @@ impl ClaimStore {
                 Err(_) => return Ok(false), // vanished mid-check
             },
         };
-        if !claim_is_stale(now, stamp, self.lease_secs) {
+        if !claim_is_stale_with_margin(now, stamp, self.lease_secs, self.margin_secs) {
             return Ok(false);
         }
         // Atomic removal via rename: exactly one concurrent caller wins
@@ -253,6 +284,119 @@ impl ClaimStore {
         out.sort();
         out
     }
+}
+
+/// One held claim, as `sparq sweep status` reports it.
+#[derive(Clone, Debug)]
+pub struct ClaimInfo {
+    pub id: String,
+    /// Owner token (empty for an unreadable/torn claim file).
+    pub owner: String,
+    /// Last heartbeat stamp (seconds since epoch; NaN if unreadable).
+    pub stamp: f64,
+    /// Heartbeats recorded so far.
+    pub heartbeats: u64,
+    /// Age of the last heartbeat relative to `now` (seconds).
+    pub age_secs: f64,
+}
+
+impl ClaimInfo {
+    /// Heartbeat freshness under a lease + skew margin: "live" within
+    /// the lease, "expiring" past the lease but within the margin,
+    /// "stale" once takeover-eligible. (Same predicate the takeover path
+    /// evaluates, with `now − stamp = age`.)
+    pub fn staleness(&self, lease_secs: f64, margin_secs: f64) -> &'static str {
+        if self.stamp.is_nan()
+            || claim_is_stale_with_margin(self.age_secs, 0.0, lease_secs, margin_secs)
+        {
+            "stale"
+        } else if claim_is_stale(self.age_secs, 0.0, lease_secs) {
+            "expiring"
+        } else {
+            "live"
+        }
+    }
+}
+
+/// List the claims held under `<out>/claims/` at wall-clock `now`
+/// (unreadable claim files appear with an empty owner and their mtime
+/// as the stamp, matching the takeover path's fallback).
+pub fn list_claims(out_dir: &Path, now: f64) -> Result<Vec<ClaimInfo>, String> {
+    let dir = out_dir.join("claims");
+    let mut out = Vec::new();
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        // No claims directory = no held claims (serial sweeps, or a
+        // distributed sweep that finished cleanly).
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(format!("{}: {e}", dir.display())),
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(id) = name.to_str().and_then(|n| n.strip_suffix(".claim")) else {
+            continue;
+        };
+        let path = entry.path();
+        let (owner, stamp, heartbeats) = match fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+        {
+            Some(j) => (
+                j.get("owner").and_then(Json::as_str).unwrap_or("").to_string(),
+                j.get("stamp").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                j.get("heartbeats").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            ),
+            None => {
+                // Torn write: fall back to the mtime, like takeover does.
+                let mtime = fs::metadata(&path)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.duration_since(SystemTime::UNIX_EPOCH).ok())
+                    .map(|d| d.as_secs_f64())
+                    .unwrap_or(f64::NAN);
+                (String::new(), mtime, 0)
+            }
+        };
+        out.push(ClaimInfo {
+            id: id.to_string(),
+            owner,
+            stamp,
+            heartbeats,
+            age_secs: if stamp.is_nan() { f64::NAN } else { now - stamp },
+        });
+    }
+    out.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(out)
+}
+
+/// Render the claim list as the `sparq sweep status` table.
+pub fn status_table(claims: &[ClaimInfo], lease_secs: f64, margin_secs: f64) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<18} {:<22} {:>10} {:>11} {:>10}",
+        "run id", "owner", "age (s)", "heartbeats", "state"
+    );
+    for c in claims {
+        let _ = writeln!(
+            out,
+            "{:<18} {:<22} {:>10.1} {:>11} {:>10}",
+            c.id,
+            if c.owner.is_empty() { "(unreadable)" } else { &c.owner },
+            c.age_secs,
+            c.heartbeats,
+            c.staleness(lease_secs, margin_secs),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{} claim(s) held; takeover after {:.0}s lease + {:.0}s skew margin",
+        claims.len(),
+        lease_secs,
+        margin_secs
+    );
+    out
 }
 
 fn claim_json(id: &str, owner: &str, stamp: f64, heartbeats: u64) -> String {
@@ -315,6 +459,11 @@ pub fn default_owner() -> String {
 pub struct DistributedOptions {
     /// Stale-claim takeover lease (seconds).
     pub lease_secs: f64,
+    /// Clock-skew allowance added to the lease before takeover
+    /// (seconds; see [`claim_is_stale_with_margin`]). One-filesystem-
+    /// many-clocks deployments must keep this > 0 — the default covers
+    /// typical NTP-synced drift.
+    pub lease_margin_secs: f64,
     /// Heartbeat refresh interval (seconds); must be well under the
     /// lease. 0 ⇒ lease/4.
     pub heartbeat_secs: f64,
@@ -328,6 +477,7 @@ impl Default for DistributedOptions {
     fn default() -> Self {
         DistributedOptions {
             lease_secs: 60.0,
+            lease_margin_secs: 2.0,
             heartbeat_secs: 0.0,
             poll_ms: 200,
             owner: String::new(),
@@ -405,7 +555,8 @@ pub fn run_distributed(
     let ckpt_dir = out.join("ckpt");
     fs::create_dir_all(&series_dir).map_err(|e| format!("{}: {e}", series_dir.display()))?;
     fs::create_dir_all(&ckpt_dir).map_err(|e| format!("{}: {e}", ckpt_dir.display()))?;
-    let claims = ClaimStore::new(out.join("claims"), owner, dopts.lease_secs)?;
+    let claims = ClaimStore::new(out.join("claims"), owner, dopts.lease_secs)?
+        .with_margin(dopts.lease_margin_secs)?;
     let results_path = out.join("results.jsonl");
     let sink: Mutex<BufWriter<File>> = Mutex::new(BufWriter::new(
         OpenOptions::new()
@@ -606,6 +757,7 @@ pub fn run_distributed(
                             hook(&RunEvent::Started {
                                 id: id.clone(),
                                 label: label.clone(),
+                                node_workers,
                             });
                         }
 
@@ -628,7 +780,7 @@ pub fn run_distributed(
                             &cfg,
                             &id,
                             cache,
-                            node_workers,
+                            &super::runner::NodeBudget::Fixed(node_workers),
                             opts,
                             Some(ckpt_dir),
                             Some(&mut tick),
@@ -916,5 +1068,81 @@ mod tests {
         assert!(ClaimStore::new(std::env::temp_dir(), "a", 0.0).is_err());
         assert!(ClaimStore::new(std::env::temp_dir(), "a", -1.0).is_err());
         assert!(ClaimStore::new(std::env::temp_dir(), "a", f64::NAN).is_err());
+        // margins must be non-negative and finite
+        let store = ClaimStore::new(std::env::temp_dir(), "a", 5.0).unwrap();
+        assert!(store.clone().with_margin(-1.0).is_err());
+        assert!(store.clone().with_margin(f64::NAN).is_err());
+        assert!(store.with_margin(2.0).is_ok());
+    }
+
+    #[test]
+    fn lease_margin_delays_takeover_by_exactly_the_skew_allowance() {
+        let dir = tmp_claims("margin");
+        let store_a = ClaimStore::new(&dir, "a", 5.0).unwrap();
+        let t0 = 1000.0;
+        let _claim_a = store_a.try_acquire_at("run1", t0).unwrap();
+        let store_b = ClaimStore::new(&dir, "b", 5.0)
+            .unwrap()
+            .with_margin(2.0)
+            .unwrap();
+        // Past the lease but inside the margin: a fast-clocked claimant
+        // must NOT steal the run.
+        assert!(matches!(
+            store_b.try_acquire_at("run1", t0 + 5.0).unwrap(),
+            Acquire::Held
+        ));
+        assert!(matches!(
+            store_b.try_acquire_at("run1", t0 + 6.9).unwrap(),
+            Acquire::Held
+        ));
+        // At lease + margin: takeover proceeds.
+        assert!(matches!(
+            store_b.try_acquire_at("run1", t0 + 7.0).unwrap(),
+            Acquire::Acquired(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn status_listing_reports_owner_age_and_staleness() {
+        // The status view reads the same layout the runner writes:
+        // <out>/claims/<id>.claim.
+        let out = tmp_claims("status-out");
+        let store = ClaimStore::new(out.join("claims"), "worker-1", 30.0).unwrap();
+        let t0 = 5000.0;
+        let mut claim = match store.try_acquire_at("runA", t0).unwrap() {
+            Acquire::Acquired(c) => c,
+            Acquire::Held => panic!("must acquire"),
+        };
+        claim.heartbeat_at(t0 + 10.0).unwrap();
+        let _other = store.try_acquire_at("runB", t0 + 12.0).unwrap();
+
+        let claims = list_claims(&out, t0 + 15.0).unwrap();
+        assert_eq!(claims.len(), 2);
+        assert_eq!(claims[0].id, "runA");
+        assert_eq!(claims[0].owner, "worker-1");
+        assert_eq!(claims[0].heartbeats, 1);
+        assert!((claims[0].age_secs - 5.0).abs() < 1e-9, "{}", claims[0].age_secs);
+        assert_eq!(claims[0].staleness(30.0, 2.0), "live");
+        // Aged past the lease but not the margin: expiring; then stale.
+        assert_eq!(
+            ClaimInfo { age_secs: 31.0, ..claims[0].clone() }.staleness(30.0, 2.0),
+            "expiring"
+        );
+        assert_eq!(
+            ClaimInfo { age_secs: 32.0, ..claims[0].clone() }.staleness(30.0, 2.0),
+            "stale"
+        );
+
+        let table = status_table(&claims, 30.0, 2.0);
+        assert!(table.contains("runA") && table.contains("worker-1"), "{table}");
+        assert!(table.contains("2 claim(s) held"), "{table}");
+
+        // an out dir without claims/ lists empty (not an error)
+        let empty = tmp_claims("status-none");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(list_claims(&empty, 0.0).unwrap().is_empty());
+        std::fs::remove_dir_all(&out).ok();
+        std::fs::remove_dir_all(&empty).ok();
     }
 }

@@ -71,7 +71,10 @@ pub mod runner;
 pub mod spec;
 
 pub use cache::ArtifactCache;
-pub use distributed::{run_distributed, Acquire, Claim, ClaimStore, DistributedOptions};
+pub use distributed::{
+    list_claims, now_secs, run_distributed, status_table, Acquire, Claim, ClaimInfo, ClaimStore,
+    DistributedOptions,
+};
 pub use runner::{
     run_configs, run_spec, EarlyStop, EventHook, RunEvent, RunOutcome, SweepOptions, SweepReport,
 };

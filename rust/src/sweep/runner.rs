@@ -34,46 +34,61 @@ use std::collections::HashMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::comm::Bus;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{checkpoint, Checkpoint, DecentralizedAlgo};
-use crate::experiments::builder::{build_algo_with, build_problem_with};
+use crate::coordinator::Checkpoint;
 use crate::metrics::{float_json, json_f64_lossy, RoundRecord, Series};
-use crate::problems::GradientSource;
+use crate::run::{DriveEnd, Run, RunObserver};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use crate::util::Rng;
 
 use super::cache::ArtifactCache;
 use super::spec::{config_hash, SweepSpec};
 
-/// A scheduling event emitted through [`SweepOptions::on_event`] —
-/// test/observability hook for run lifecycle ordering (e.g. "a pending
-/// run starts before the longest run finishes once a worker frees up").
-#[derive(Clone, Debug)]
-pub enum RunEvent {
-    /// A run began executing (not emitted for resume-skipped runs).
-    Started { id: String, label: String },
-    /// A run finished executing. `completed` is false for fault-aborted
-    /// or abandoned runs; `stopped` is true when an early-stop target
-    /// truncated it.
-    Finished {
-        id: String,
-        label: String,
-        completed: bool,
-        stopped: bool,
-    },
-}
-
-/// Lifecycle-event callback (called from run worker threads).
-pub type EventHook = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+// The run-lifecycle event types moved to the `run` module with the Run
+// handle (PR-4 shapes, unchanged apart from `Started.node_workers`);
+// re-exported here so sweep-level consumers keep their import paths.
+pub use crate::run::{EventHook, RunEvent};
 
 /// Per-iteration callback for [`execute_one`]: `Ok(false)` abandons the
 /// run (distributed mode returns it when the claim heartbeat fails).
 pub(crate) type Tick<'a> = &'a mut dyn FnMut(u64) -> Result<bool, String>;
+
+/// Node-worker budget for one run. `Fixed` pins the split (distributed
+/// mode — the grid is shared across processes, so a local pending count
+/// means little); `Dynamic` re-reads ⌊budget / min(run_workers,
+/// pending)⌋ every iteration, so as the run pool drains, surviving runs
+/// widen onto the freed threads mid-run instead of keeping the split
+/// chosen at sweep start. Results are bit-for-bit identical for any
+/// worker count (pinned by `rust/tests/sparse_parallel.rs`), so the
+/// re-split is pure scheduling.
+pub(crate) enum NodeBudget<'a> {
+    Fixed(usize),
+    Dynamic {
+        budget: usize,
+        run_workers: usize,
+        pending: &'a AtomicUsize,
+    },
+}
+
+impl NodeBudget<'_> {
+    pub(crate) fn current(&self) -> usize {
+        match self {
+            NodeBudget::Fixed(w) => (*w).max(1),
+            NodeBudget::Dynamic {
+                budget,
+                run_workers,
+                pending,
+            } => {
+                let p = pending.load(Ordering::Relaxed).max(1);
+                (*budget / (*run_workers).min(p).max(1)).max(1)
+            }
+        }
+    }
+}
 
 /// Options for one sweep invocation.
 #[derive(Clone)]
@@ -292,13 +307,18 @@ pub fn run_configs(
         .filter(|s| !completed.contains_key(&s.id))
         .count();
     let run_workers = budget.min(pending.max(1)).max(1);
-    let node_workers = (budget / run_workers).max(1);
+    // Dynamic rebalancing: the worker split is ⌊budget / min(run_workers,
+    // pending)⌋, re-read as runs finish — when the pool drains below the
+    // run-level concurrency, surviving runs widen onto the freed threads
+    // (mid-run too, via the Run observer's workers hint).
+    let pending_ctr = AtomicUsize::new(pending);
 
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let completed = &completed;
     let series_dir = series_dir.as_deref();
     let ckpt_dir = ckpt_dir.as_deref();
     let sink_ref = sink.as_ref();
+    let pending_ctr = &pending_ctr;
     ThreadPool::new(run_workers).for_each_mut(&mut slots, |_, slot| {
         // Resume: a stored record + series satisfies the run outright.
         if let Some(record) = completed.get(&slot.id) {
@@ -318,10 +338,23 @@ pub fn run_configs(
                 }
             }
         }
+        // Re-runs of records with unreadable series were not part of the
+        // initial pending count — enter them now so the dynamic re-split
+        // sees every executing run (otherwise concurrent runs could each
+        // be granted the full budget and oversubscribe the machine).
+        if completed.contains_key(&slot.id) {
+            pending_ctr.fetch_add(1, Ordering::Relaxed);
+        }
+        let node_budget = NodeBudget::Dynamic {
+            budget,
+            run_workers,
+            pending: pending_ctr,
+        };
         if let Some(hook) = &opts.on_event {
             hook(&RunEvent::Started {
                 id: slot.id.clone(),
                 label: slot.label.clone(),
+                node_workers: node_budget.current(),
             });
         }
         let res = execute_one(
@@ -329,11 +362,12 @@ pub fn run_configs(
             &slot.cfg,
             &slot.id,
             cache,
-            node_workers,
+            &node_budget,
             opts,
             ckpt_dir,
             None,
         );
+        pending_ctr.fetch_sub(1, Ordering::Relaxed);
         match res {
             Ok(outcome) => {
                 if outcome.completed {
@@ -540,36 +574,81 @@ fn target_hit(opts: &SweepOptions, r: &RoundRecord) -> Option<EarlyStop> {
     None
 }
 
-/// Execute one run, replicating `coordinator::runner::run`'s evaluation
-/// loop exactly, with optional mid-run checkpointing, checkpoint resume,
-/// and early-stop targets. `tick`, when given, is called once per
-/// iteration (distributed mode refreshes its claim heartbeat there):
-/// `Ok(false)` abandons the run — no result is recorded and the
-/// returned outcome has `completed == false`.
+/// The sweep engine's [`RunObserver`]: early-stop targets at evaluation
+/// records, checkpoint cadence, fault injection, the distributed
+/// heartbeat tick, and the dynamic worker re-split.
+struct SweepObserver<'a> {
+    opts: &'a SweepOptions,
+    ckpt_path: Option<&'a PathBuf>,
+    partial_path: Option<&'a PathBuf>,
+    tick: Option<Tick<'a>>,
+    budget: &'a NodeBudget<'a>,
+    stopped: Option<EarlyStop>,
+}
+
+impl RunObserver for SweepObserver<'_> {
+    fn tick(&mut self, t: u64) -> Result<bool, String> {
+        match self.tick.as_mut() {
+            Some(tk) => tk(t),
+            None => Ok(true),
+        }
+    }
+
+    fn evaluated(&mut self, rec: &RoundRecord, done: bool) -> bool {
+        // A target hit on the final record is not a truncation.
+        if done {
+            return false;
+        }
+        self.stopped = target_hit(self.opts, rec);
+        self.stopped.is_some()
+    }
+
+    fn checkpoint_due(&mut self, t: u64) -> bool {
+        self.opts.checkpoint_every > 0
+            && t % self.opts.checkpoint_every == 0
+            && self.ckpt_path.is_some()
+    }
+
+    fn persist(&mut self, ck: Checkpoint, series: &Series) -> Result<(), String> {
+        let (Some(cp), Some(pp)) = (self.ckpt_path, self.partial_path) else {
+            return Ok(());
+        };
+        ck.save(cp).map_err(|e| format!("{}: {e}", cp.display()))?;
+        series
+            .write_jsonl(pp)
+            .map_err(|e| format!("{}: {e}", pp.display()))
+    }
+
+    fn abort_due(&mut self, t: u64) -> bool {
+        self.opts.fault_abort_at == Some(t)
+    }
+
+    fn workers_hint(&mut self, _t: u64) -> Option<usize> {
+        Some(self.budget.current())
+    }
+}
+
+/// Execute one run through the [`Run`](crate::run::Run) handle, with
+/// optional mid-run checkpointing, checkpoint resume, and early-stop
+/// targets. `tick`, when given, is called once per iteration
+/// (distributed mode refreshes its claim heartbeat there): `Ok(false)`
+/// abandons the run — no result is recorded and the returned outcome has
+/// `completed == false`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_one(
     label: &str,
     cfg: &ExperimentConfig,
     id: &str,
     cache: &ArtifactCache,
-    node_workers: usize,
+    budget: &NodeBudget<'_>,
     opts: &SweepOptions,
     ckpt_dir: Option<&Path>,
-    mut tick: Option<Tick<'_>>,
+    tick: Option<Tick<'_>>,
 ) -> Result<RunOutcome, String> {
     let run_start = Instant::now();
-    let mut problem = build_problem_with(cfg, Some(cache));
-    let d = problem.dim();
-    let mut algo = build_algo_with(cfg, d, Some(cache));
-    let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
-    if let Some(x0) = problem.init_params(&mut init_rng) {
-        algo.set_params(&x0);
-    }
-    algo.set_workers(node_workers);
-    let mut bus = Bus::new(algo.n());
-    let series_label = format!("{}:{}", cfg.name, algo.name());
-    let mut series = Series::new(series_label.clone());
-    let mut start_t = 0u64;
+    let resolved = cfg.resolve().map_err(|e| e.to_string())?;
+    let mut run = Run::from_resolved(&resolved, Some(cache), budget.current());
+    let series_label = run.series().label.clone();
 
     let ckpt_path = ckpt_dir.map(|dir| dir.join(format!("{id}.ckpt")));
     let partial_path = ckpt_dir.map(|dir| dir.join(format!("{id}.partial.jsonl")));
@@ -577,17 +656,41 @@ pub(crate) fn execute_one(
         if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
             if cp.exists() && pp.exists() {
                 let ck = Checkpoint::load(cp).map_err(|e| format!("checkpoint: {e}"))?;
-                checkpoint::restore(algo.as_mut(), &ck);
-                checkpoint::restore_bus(&mut bus, &ck);
-                series = Series::read_jsonl(pp, series_label.clone())
+                let series = Series::read_jsonl(pp, series_label.clone())
                     .map_err(|e| format!("partial series: {e}"))?;
-                start_t = ck.t;
+                run.restore(&ck, series);
                 if opts.verbose {
-                    println!("[sweep] resume {label} from t={start_t}");
+                    println!("[sweep] resume {label} from t={}", run.t());
                 }
             }
         }
     }
+
+    let outcome = |run: &Run, series: Series, completed: bool, stopped: Option<EarlyStop>| {
+        let (fired, checks) = run.fired_stats();
+        RunOutcome {
+            id: id.to_string(),
+            label: label.to_string(),
+            cfg: cfg.clone(),
+            series,
+            fired,
+            checks,
+            wall_ms: run_start.elapsed().as_millis() as u64,
+            skipped: false,
+            completed,
+            stopped,
+        }
+    };
+    let cleanup = |ckpt_path: &Option<PathBuf>, partial_path: &Option<PathBuf>| {
+        // Complete (or early-stopped): mid-run snapshots are superseded
+        // by the result record.
+        if let Some(cp) = ckpt_path {
+            fs::remove_file(cp).ok();
+        }
+        if let Some(pp) = partial_path {
+            fs::remove_file(pp).ok();
+        }
+    };
 
     // A target introduced after the partial progress was made: the
     // loaded prefix may already cross it. Truncate to the first
@@ -600,144 +703,44 @@ pub(crate) fn execute_one(
     // with the target in effect from the start, execution stops at the
     // crossing and never checkpoints past it, so serial and distributed
     // runs of one spec still record identical statistics.
-    if start_t > 0 {
-        let hit = series.records.iter().position(|r| target_hit(opts, r).is_some());
+    if run.t() > 0 {
+        let hit = run
+            .series()
+            .records
+            .iter()
+            .position(|r| target_hit(opts, r).is_some());
         if let Some(i) = hit {
-            let stop = target_hit(opts, &series.records[i]);
-            series.records.truncate(i + 1);
-            if let Some(cp) = &ckpt_path {
-                fs::remove_file(cp).ok();
-            }
-            if let Some(pp) = &partial_path {
-                fs::remove_file(pp).ok();
-            }
-            let (fired, checks) = algo.fired_stats();
-            return Ok(RunOutcome {
-                id: id.to_string(),
-                label: label.to_string(),
-                cfg: cfg.clone(),
-                series,
-                fired,
-                checks,
-                wall_ms: run_start.elapsed().as_millis() as u64,
-                skipped: false,
-                completed: true,
-                stopped: stop,
-            });
+            let stop = target_hit(opts, &run.series().records[i]);
+            run.series_mut().records.truncate(i + 1);
+            cleanup(&ckpt_path, &partial_path);
+            let series = run.series().clone();
+            return Ok(outcome(&run, series, true, stop));
         }
     }
 
-    let evaluate = |algo: &dyn DecentralizedAlgo,
-                    src: &mut dyn GradientSource,
-                    bus: &Bus,
-                    t: u64,
-                    series: &mut Series| {
-        let xbar = algo.x_bar();
-        let loss = src.global_loss(&xbar);
-        series.push(RoundRecord {
-            t,
-            loss,
-            test_error: src.test_error(&xbar).unwrap_or(f64::NAN),
-            opt_gap: src.opt_gap(&xbar).unwrap_or(f64::NAN),
-            bits: bus.total_bits,
-            comm_rounds: bus.comm_rounds,
-            consensus: algo.consensus_distance(),
-            fired: algo.last_fired(),
-        });
+    let mut obs = SweepObserver {
+        opts,
+        ckpt_path: ckpt_path.as_ref(),
+        partial_path: partial_path.as_ref(),
+        tick,
+        budget,
+        stopped: None,
     };
-
-    let mut stopped: Option<EarlyStop> = None;
-    if start_t == 0 {
-        evaluate(algo.as_ref(), problem.as_mut(), &bus, 0, &mut series);
-        if cfg.steps > 0 {
-            // The t = 0 record can already satisfy the target.
-            stopped = target_hit(opts, series.records.last().expect("t=0 record"));
+    let end = run.drive(&mut obs)?;
+    let stopped = obs.stopped.take();
+    match end {
+        DriveEnd::Abandoned => {
+            // Claim lost / fault injection: leave checkpoints in place
+            // for takeover; no result is recorded.
+            let series = run.series().clone();
+            Ok(outcome(&run, series, false, None))
+        }
+        DriveEnd::Completed | DriveEnd::Stopped => {
+            cleanup(&ckpt_path, &partial_path);
+            let series = run.series().clone();
+            Ok(outcome(&run, series, true, stopped))
         }
     }
-    if stopped.is_none() {
-        for t in start_t..cfg.steps {
-            if let Some(tk) = tick.as_mut() {
-                if !tk(t)? {
-                    // Abandoned (claim lost mid-run): no result.
-                    let (fired, checks) = algo.fired_stats();
-                    return Ok(RunOutcome {
-                        id: id.to_string(),
-                        label: label.to_string(),
-                        cfg: cfg.clone(),
-                        series,
-                        fired,
-                        checks,
-                        wall_ms: run_start.elapsed().as_millis() as u64,
-                        skipped: false,
-                        completed: false,
-                        stopped: None,
-                    });
-                }
-            }
-            algo.step(t, problem.as_mut(), &mut bus);
-            let done = t + 1 == cfg.steps;
-            if (t + 1) % cfg.eval_every.max(1) == 0 || done {
-                evaluate(algo.as_ref(), problem.as_mut(), &bus, t + 1, &mut series);
-                if !done {
-                    // Early stop: truncate *at* the evaluation record
-                    // that reached the target. Cadence is config-fixed,
-                    // so the stop round — and the truncated series,
-                    // bit for bit — is the same for every worker budget
-                    // and for serial vs distributed execution.
-                    stopped = target_hit(opts, series.records.last().expect("eval record"));
-                    if stopped.is_some() {
-                        break;
-                    }
-                }
-            }
-            if !done && opts.checkpoint_every > 0 && (t + 1) % opts.checkpoint_every == 0 {
-                if let (Some(cp), Some(pp)) = (&ckpt_path, &partial_path) {
-                    let ck = checkpoint::snapshot(algo.as_ref(), t + 1, &bus);
-                    ck.save(cp).map_err(|e| format!("{}: {e}", cp.display()))?;
-                    series
-                        .write_jsonl(pp)
-                        .map_err(|e| format!("{}: {e}", pp.display()))?;
-                }
-            }
-            if opts.fault_abort_at == Some(t + 1) && !done {
-                let (fired, checks) = algo.fired_stats();
-                return Ok(RunOutcome {
-                    id: id.to_string(),
-                    label: label.to_string(),
-                    cfg: cfg.clone(),
-                    series,
-                    fired,
-                    checks,
-                    wall_ms: run_start.elapsed().as_millis() as u64,
-                    skipped: false,
-                    completed: false,
-                    stopped: None,
-                });
-            }
-        }
-    }
-
-    // Complete (or early-stopped): mid-run snapshots are superseded by
-    // the result record.
-    if let Some(cp) = &ckpt_path {
-        fs::remove_file(cp).ok();
-    }
-    if let Some(pp) = &partial_path {
-        fs::remove_file(pp).ok();
-    }
-    let (fired, checks) = algo.fired_stats();
-    Ok(RunOutcome {
-        id: id.to_string(),
-        label: label.to_string(),
-        cfg: cfg.clone(),
-        series,
-        fired,
-        checks,
-        wall_ms: run_start.elapsed().as_millis() as u64,
-        skipped: false,
-        completed: true,
-        stopped,
-    })
 }
 
 #[cfg(test)]

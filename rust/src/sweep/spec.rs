@@ -52,6 +52,9 @@ pub struct SweepSpec {
     /// Stale-claim takeover lease for `--distributed` execution
     /// (seconds, > 0).
     pub lease_secs: Option<f64>,
+    /// Clock-skew allowance added to the lease before takeover
+    /// (seconds, >= 0; defaults to the CLI's 2s when unset).
+    pub lease_margin_secs: Option<f64>,
 }
 
 impl SweepSpec {
@@ -65,6 +68,7 @@ impl SweepSpec {
             target_error: None,
             target_loss: None,
             lease_secs: None,
+            lease_margin_secs: None,
         }
     }
 
@@ -83,6 +87,12 @@ impl SweepSpec {
     /// Set the distributed claim lease (builder API).
     pub fn lease_secs(mut self, secs: f64) -> Self {
         self.lease_secs = Some(secs);
+        self
+    }
+
+    /// Set the distributed clock-skew lease margin (builder API).
+    pub fn lease_margin_secs(mut self, secs: f64) -> Self {
+        self.lease_margin_secs = Some(secs);
         self
     }
 
@@ -148,12 +158,13 @@ impl SweepSpec {
                 "target_error",
                 "target_loss",
                 "lease_secs",
+                "lease_margin_secs",
             ]
             .contains(&key.as_str())
             {
                 return Err(format!(
                     "unknown sweep spec key {key:?}; valid keys: name, base, variants, axes, \
-                     target_error, target_loss, lease_secs"
+                     target_error, target_loss, lease_secs, lease_margin_secs"
                 ));
             }
         }
@@ -213,6 +224,7 @@ impl SweepSpec {
             target_error: opt_f64("target_error")?,
             target_loss: opt_f64("target_loss")?,
             lease_secs: opt_f64("lease_secs")?,
+            lease_margin_secs: opt_f64("lease_margin_secs")?,
         };
         spec.validate()?;
         Ok(spec)
@@ -244,6 +256,9 @@ impl SweepSpec {
         if let Some(l) = self.lease_secs {
             out = out.set("lease_secs", l);
         }
+        if let Some(m) = self.lease_margin_secs {
+            out = out.set("lease_margin_secs", m);
+        }
         out
     }
 
@@ -264,6 +279,13 @@ impl SweepSpec {
             if !(l.is_finite() && l > 0.0) {
                 return Err(format!(
                     "lease_secs must be a positive number of seconds, got {l}"
+                ));
+            }
+        }
+        if let Some(m) = self.lease_margin_secs {
+            if !(m.is_finite() && m >= 0.0) {
+                return Err(format!(
+                    "lease_margin_secs must be a non-negative number of seconds, got {m}"
                 ));
             }
         }
@@ -451,7 +473,7 @@ mod tests {
                 "grid/h=5,seed=8"
             ]
         );
-        assert_eq!(runs[2].1.h, 5);
+        assert_eq!(runs[2].1.h.period(), Some(5));
         assert_eq!(runs[2].1.seed, 7);
     }
 
@@ -531,15 +553,20 @@ mod tests {
 
     #[test]
     fn targets_and_lease_roundtrip_and_validate() {
-        let j = Json::parse(r#"{"target_error": 0.15, "target_loss": 0.5, "lease_secs": 30}"#)
-            .unwrap();
+        let j = Json::parse(
+            r#"{"target_error": 0.15, "target_loss": 0.5, "lease_secs": 30,
+                "lease_margin_secs": 3}"#,
+        )
+        .unwrap();
         let spec = SweepSpec::from_json(&j).unwrap();
         assert_eq!(spec.target_error, Some(0.15));
         assert_eq!(spec.target_loss, Some(0.5));
         assert_eq!(spec.lease_secs, Some(30.0));
+        assert_eq!(spec.lease_margin_secs, Some(3.0));
         let back = SweepSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back.target_error, Some(0.15));
         assert_eq!(back.lease_secs, Some(30.0));
+        assert_eq!(back.lease_margin_secs, Some(3.0));
         // a spec without them round-trips without them (old specs load
         // unchanged)
         let plain = SweepSpec::from_json(&SweepSpec::new("x").to_json()).unwrap();
@@ -552,6 +579,7 @@ mod tests {
             r#"{"target_error": -0.1}"#,
             r#"{"lease_secs": 0}"#,
             r#"{"lease_secs": -5}"#,
+            r#"{"lease_margin_secs": -1}"#,
             r#"{"target_loss": "low"}"#,
         ] {
             let j = Json::parse(bad).unwrap();

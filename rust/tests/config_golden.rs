@@ -1,0 +1,239 @@
+//! Golden fixtures for the typed-config redesign.
+//!
+//! The redesign's hard compatibility promise: replacing string fields
+//! with typed specs changes **nothing observable** about config
+//! serialization — `to_json()` emits byte-identical JSON, so
+//! `config_hash` (which hashes that text) assigns every pre-redesign
+//! run the same id, and existing sweep `results.jsonl`/series files
+//! keep resuming. The literals below are exactly what the string-field
+//! implementation produced (sorted keys, the in-tree writer's number
+//! formatting); the fnv helper is the same FNV-1a the hash uses.
+//!
+//! Also pinned here: `ConfigError` rendering for representative invalid
+//! compositions (the CLI surface), and that every committed
+//! `examples/specs/*.json` expands and resolves.
+
+use sparq::config::{presets, ExperimentConfig};
+use sparq::experiments::fig1;
+use sparq::sweep::{config_hash, SweepSpec};
+use sparq::util::json::Json;
+
+/// FNV-1a 64 over a string — must mirror `sweep::spec::config_hash`.
+fn fnv64(text: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The pre-redesign serialization of the Fig-1 convex base, with the
+/// per-variant (algo, compressor, name) substituted. Field order is the
+/// serializer's sorted-key order.
+fn convex_canonical(algo: &str, compressor: &str, name: &str) -> String {
+    format!(
+        r#"{{"algo":"{algo}","compressor":"{compressor}","eval_every":25,"gamma":0,"h":5,"link":"none","lr":"invtime:100:1","momentum":0,"name":"{name}","nodes":60,"problem":"logreg:784:10:5","seed":42,"steps":3000,"topology":"ring","topology_schedule":"static","trigger":"const:5000","workers":1}}"#
+    )
+}
+
+#[test]
+fn default_config_serializes_to_the_string_era_bytes() {
+    let expected = r#"{"algo":"sparq","compressor":"sign_topk:10%","eval_every":50,"gamma":0,"h":5,"link":"none","lr":"invtime:100:1","momentum":0,"name":"default","nodes":8,"problem":"quadratic:64","seed":42,"steps":1000,"topology":"ring","topology_schedule":"static","trigger":"const:100","workers":1}"#;
+    assert_eq!(ExperimentConfig::default().to_json().to_string(), expected);
+}
+
+#[test]
+fn preset_configs_serialize_to_the_string_era_bytes() {
+    assert_eq!(
+        presets::convex_sparq(3000).to_json().to_string(),
+        convex_canonical("sparq", "sign_topk:10", "fig1-convex-sparq")
+    );
+    // The non-convex preset pins float spellings ("2.0"/"1.0" in the
+    // piecewise trigger, momentum 0.9) and the warmup lr string.
+    let expected = r#"{"algo":"sparq","compressor":"sign_topk:10%","eval_every":50,"gamma":0,"h":5,"link":"none","lr":"warmup:0.05:5:5:100:150,250","momentum":0.9,"name":"fig1-nonconvex-sparq","nodes":8,"problem":"mlp:3072:128:10:32","seed":42,"steps":2000,"topology":"ring","topology_schedule":"static","trigger":"piecewise:2.0:1.0:10:60:100","workers":1}"#;
+    assert_eq!(
+        presets::nonconvex_sparq(2000, 100).to_json().to_string(),
+        expected
+    );
+}
+
+#[test]
+fn config_hash_of_the_five_driver_specs_is_unchanged() {
+    // config_hash normalizes name → "" and workers → 1 before hashing
+    // the canonical text; both were already in the literals' form for
+    // workers, so only the name blanks.
+    let variants = [
+        ("sparq", "sign_topk:10", "fig1-convex-sparq"),
+        ("choco", "sign", "fig1-convex-choco-sign"),
+        ("choco", "topk:10", "fig1-convex-choco-topk"),
+        ("choco", "sign_topk:10", "fig1-convex-choco-signtopk"),
+        ("vanilla", "identity", "fig1-convex-vanilla"),
+    ];
+    let runs = fig1::convex_suite(3000, 42);
+    assert_eq!(runs.len(), variants.len());
+    for ((algo, compressor, name), (_, cfg)) in variants.iter().zip(runs.iter()) {
+        assert_eq!(cfg.name, *name);
+        // The expanded config serializes to the string-era bytes...
+        assert_eq!(
+            cfg.to_json().to_string(),
+            convex_canonical(algo, compressor, name),
+            "{name}: serialization drifted"
+        );
+        // ...and hashes to the string-era id.
+        let normalized = convex_canonical(algo, compressor, "");
+        assert_eq!(
+            config_hash(cfg),
+            fnv64(&normalized),
+            "{name}: config_hash drifted"
+        );
+    }
+}
+
+#[test]
+fn every_committed_spec_file_expands_and_resolves() {
+    let mut checked = 0;
+    for entry in std::fs::read_dir("examples/specs").expect("examples/specs/") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let spec = SweepSpec::from_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let runs = spec
+            .expand()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!runs.is_empty(), "{}: empty grid", path.display());
+        for (label, cfg) in &runs {
+            cfg.resolve().unwrap_or_else(|e| {
+                panic!("{} run {label:?}: {e}", path.display())
+            });
+            // Round-tripping the expanded config through its own JSON is
+            // the identity — spec files and in-code configs agree.
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(&back, cfg);
+        }
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected the three committed spec files, saw {checked}");
+}
+
+#[test]
+fn fig1_convex_spec_file_matches_the_in_code_driver() {
+    // The committed JSON form of the Fig-1 convex grid expands to the
+    // exact configs (and therefore result ids) of the in-code driver —
+    // a sweep started from the file resumes one started from the code.
+    let from_file = SweepSpec::from_file("examples/specs/fig1_convex.json")
+        .expect("fig1_convex.json")
+        .expand()
+        .expect("expands");
+    let from_code = fig1::convex_suite(3000, 42);
+    assert_eq!(from_file.len(), from_code.len());
+    for ((fl, fc), (cl, cc)) in from_file.iter().zip(from_code.iter()) {
+        assert_eq!(fl, cl, "labels diverge");
+        assert_eq!(config_hash(fc), config_hash(cc), "{fl}: ids diverge");
+        assert_eq!(fc, cc, "{fl}: configs diverge");
+    }
+}
+
+#[test]
+fn config_error_messages_are_pinned() {
+    // Snapshot the structured errors for representative invalid
+    // compositions — field, value, reason, suggestion, exactly as the
+    // CLI prints them.
+    let parse_err = |body: &str| -> String {
+        ExperimentConfig::from_json(&Json::parse(body).unwrap())
+            .expect_err("must reject")
+            .to_string()
+    };
+    assert_eq!(
+        parse_err(r#"{"trigger": "poly:2:1.5"}"#),
+        "invalid trigger \"poly:2:1.5\": trigger eps must lie in the open interval (0, 1) \
+         so that c_t = c0·t^(1-eps) is o(t) (Theorem 1), got 1.5"
+    );
+    assert_eq!(
+        parse_err(r#"{"compressor": "topk:0"}"#),
+        "invalid compressor \"topk:0\": k must be >= 1"
+    );
+    assert_eq!(
+        parse_err(r#"{"compressor": "gzip"}"#),
+        "invalid compressor \"gzip\": unknown operator (try: identity, sign, topk:K, \
+         randk:K, qsgd:S, sign_topk:K[:paper], or qsgd_topk:K:S (K may be %-suffixed))"
+    );
+    assert_eq!(
+        parse_err(r#"{"lr": "const:fast"}"#),
+        "invalid lr \"const:fast\": lr eta \"fast\" is not a number"
+    );
+    assert_eq!(
+        parse_err(r#"{"link": "drop:2"}"#),
+        "invalid link \"drop:2\": drop probability must be in [0, 1), got 2"
+    );
+    assert_eq!(
+        parse_err(r#"{"h": "explicit:5,3"}"#),
+        "invalid h \"explicit:5,3\": sync indices must be strictly increasing, got 3 after 5"
+    );
+    let err = parse_err(r#"{"trigerr": "const:100"}"#);
+    assert!(
+        err.starts_with("unknown config key \"trigerr\"; valid keys: "),
+        "{err}"
+    );
+    assert!(err.contains("trigger"), "{err}");
+
+    // Cross-field errors surface from resolve() with the same shape.
+    let resolve_err = |cfg: &ExperimentConfig| cfg.resolve().expect_err("must reject").to_string();
+    let cfg = ExperimentConfig {
+        nodes: 4,
+        link: "straggler:4:0.5".into(),
+        ..Default::default()
+    };
+    assert_eq!(
+        resolve_err(&cfg),
+        "invalid link \"straggler:4:0.5\": straggler node 4 out of range for 4 nodes"
+    );
+    let cfg = ExperimentConfig {
+        nodes: 16,
+        topology: "torus".into(),
+        topology_schedule: "switch:ring,torus:100".into(),
+        ..Default::default()
+    };
+    assert_eq!(
+        resolve_err(&cfg),
+        "config sets both topology and topology_schedule: the schedule \
+         \"switch:ring,torus:100\" names its own graphs, so the topology \"torus\" \
+         would be ignored (try: remove one of the two; the schedule wins)"
+    );
+    let cfg = ExperimentConfig {
+        compressor: "topk:100".into(),
+        problem: "quadratic:64".into(),
+        ..Default::default()
+    };
+    assert_eq!(
+        resolve_err(&cfg),
+        "invalid compressor \"topk:100\": k = 100 exceeds the problem dimension d = 64 \
+         (try: k <= 64, or a percentage form like \"topk:10%\")"
+    );
+}
+
+#[test]
+fn structured_object_configs_hash_like_their_string_forms() {
+    // The structured-JSON form is an input convenience only: it
+    // canonicalizes to the same strings, so the hash (and resume id)
+    // is identical to the legacy spelling.
+    let string_form = Json::parse(
+        r#"{"compressor": "sign_topk:10%", "trigger": "const:5000",
+            "problem": "logreg:784:10:5", "nodes": 60, "h": 5}"#,
+    )
+    .unwrap();
+    let object_form = Json::parse(
+        r#"{"compressor": {"kind": "sign_topk", "k": "10%"},
+            "trigger": {"kind": "const", "c0": 5000},
+            "problem": {"kind": "logreg", "din": 784, "classes": 10, "batch": 5},
+            "nodes": 60, "h": {"kind": "every", "h": 5}}"#,
+    )
+    .unwrap();
+    let a = ExperimentConfig::from_json(&string_form).unwrap();
+    let b = ExperimentConfig::from_json(&object_form).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(config_hash(&a), config_hash(&b));
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}

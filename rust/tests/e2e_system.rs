@@ -189,7 +189,7 @@ fn parallel_suite_matches_sequential() {
         for (_, cfg) in suite.iter_mut() {
             cfg.nodes = 6;
             cfg.problem = "logreg:16:4:4".into();
-            if cfg.compressor.starts_with("sign_topk:10") {
+            if cfg.compressor.as_str().starts_with("sign_topk:10") {
                 cfg.compressor = "sign_topk:25%".into();
             }
             cfg.eval_every = 100;

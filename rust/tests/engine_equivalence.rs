@@ -540,7 +540,7 @@ fn lossy_link_run_is_deterministic_across_worker_counts() {
         eval_every: 50,
         problem: "quadratic:48".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         link: "drop:0.25+straggler:1:0.5".into(),
         workers,
         ..Default::default()
@@ -569,7 +569,7 @@ fn sampled_gossip_run_is_deterministic_across_worker_counts() {
         eval_every: 50,
         problem: "quadratic:32".into(),
         trigger: "zero".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         topology_schedule: "sample:torus:6".into(),
         workers,
         ..Default::default()

@@ -605,3 +605,194 @@ fn prop_stale_claim_cleanup_is_idempotent() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Typed-config surface (the parse-don't-validate redesign)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_legacy_spec_strings_roundtrip_parse_display_parse() {
+    use sparq::config::{
+        CompressorSpec, LinkSpec, LrSpec, ProblemSpec, ScheduleSpec, SyncSpec, TopologySpec,
+        TriggerSpec,
+    };
+
+    // Every legacy string form, with randomized parameters: parsing and
+    // re-displaying is the identity on bytes (the typed specs preserve
+    // the raw string — the property behind config_hash bit-compat), and
+    // re-parsing the display yields an equal value.
+    check("spec-roundtrip", Config { cases: 64, seed: 0xC0 }, |g| {
+        let k = g.usize_in(1, 512);
+        let pct = g.usize_in(1, 100);
+        let s_level = g.usize_in(1, 32);
+        let c0 = g.f64_in(0.0, 5000.0);
+        let eps = g.f64_in(0.01, 0.99);
+        let every = g.usize_in(1, 20);
+        let until = g.usize_in(1, 100);
+        let spe = g.usize_in(1, 500);
+        let a = g.f64_in(0.1, 500.0);
+        let b = g.f64_in(0.001, 10.0);
+        let factor = g.f64_in(0.5, 10.0);
+        let p = g.f64_in(0.0, 0.99);
+        let node = g.usize_in(0, 63);
+        let h = g.usize_in(1, 50) as u64;
+        let (i1, gap) = (g.usize_in(1, 40) as u64, g.usize_in(1, 40) as u64);
+        let period = g.usize_in(1, 2000);
+        let d = g.usize_in(1, 4096);
+        let noise = g.f64_in(0.0, 1.0);
+        let classes = g.usize_in(2, 16);
+        let batch = g.usize_in(1, 64);
+
+        let specs: Vec<(&str, String)> = vec![
+            ("compressor", "identity".into()),
+            ("compressor", "sign".into()),
+            ("compressor", format!("topk:{k}")),
+            ("compressor", format!("randk:{k}")),
+            ("compressor", format!("qsgd:{s_level}")),
+            ("compressor", format!("sign_topk:{pct}%")),
+            ("compressor", format!("sign_topk:{pct}%:paper")),
+            ("compressor", format!("qsgd_topk:{k}:{s_level}")),
+            ("trigger", "zero".into()),
+            ("trigger", format!("const:{c0}")),
+            ("trigger", format!("poly:{c0}:{eps}")),
+            ("trigger", format!("piecewise:{c0}:{eps}:{every}:{until}:{spe}")),
+            ("lr", format!("const:{b}")),
+            ("lr", format!("invtime:{a}:{b}")),
+            ("lr", format!("warmup:{b}:{every}:{factor}:{spe}:{until},{spe}")),
+            ("link", "none".into()),
+            ("link", format!("drop:{p}")),
+            ("link", format!("drop:{p}+straggler:{node}:{p}")),
+            ("h", format!("every:{h}")),
+            ("h", format!("explicit:{i1},{}", i1 + gap)),
+            ("topology", "ring".into()),
+            ("topology", format!("regular{}", g.usize_in(1, 8))),
+            ("topology_schedule", "static".into()),
+            ("topology_schedule", format!("switch:ring,torus:{period}")),
+            ("topology_schedule", format!("sample:complete:{}", g.usize_in(1, 6))),
+            ("problem", format!("quadratic:{d}")),
+            ("problem", format!("quadratic:{d}:{noise}:{noise}")),
+            ("problem", format!("logreg:{d}:{classes}:{batch}")),
+            ("problem", format!("mlp:{d}:{k}:{classes}:{batch}")),
+        ];
+        for (family, spec) in specs {
+            // Macro-free dispatch: parse, display, re-parse, compare.
+            macro_rules! roundtrip {
+                ($ty:ty) => {{
+                    let v: $ty = spec
+                        .parse()
+                        .map_err(|e| format!("{family} {spec:?} rejected: {e}"))?;
+                    prop_assert!(
+                        v.to_string() == spec,
+                        "{family} {spec:?}: display changed to {:?}",
+                        v.to_string()
+                    );
+                    let back: $ty = v
+                        .to_string()
+                        .parse()
+                        .map_err(|e| format!("{family} re-parse failed: {e}"))?;
+                    prop_assert!(back == v, "{family} {spec:?}: reparse differs");
+                }};
+            }
+            match family {
+                "compressor" => roundtrip!(CompressorSpec),
+                "trigger" => roundtrip!(TriggerSpec),
+                "lr" => roundtrip!(LrSpec),
+                "link" => roundtrip!(LinkSpec),
+                "h" => roundtrip!(SyncSpec),
+                "topology" => roundtrip!(TopologySpec),
+                "topology_schedule" => roundtrip!(ScheduleSpec),
+                "problem" => roundtrip!(ProblemSpec),
+                other => return Err(format!("unrouted family {other}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_json_serialization_is_stable_under_roundtrip() {
+    use sparq::config::ExperimentConfig;
+    use sparq::sweep::config_hash;
+    use sparq::util::json::Json;
+
+    // from_json → to_json → from_json is the identity, and the
+    // serialized bytes (what config_hash consumes) are stable.
+    check("config-roundtrip", Config { cases: 48, seed: 0xC1 }, |g| {
+        let compressors = ["sign", "topk:10%", "sign_topk:10", "qsgd:16", "identity"];
+        let triggers = ["zero", "const:50", "poly:2:0.5", "piecewise:2.0:1.0:10:60:100"];
+        let lrs = ["const:0.05", "invtime:100:1", "warmup:0.05:5:5:100:150,250"];
+        let problems = ["quadratic:64", "quadratic:32:0.1:0.5", "logreg:24:4:8"];
+        let links = ["none", "drop:0.1", "drop:0.2+straggler:0:0.5"];
+        let j = Json::obj()
+            .set("name", format!("prop-{}", g.usize_in(0, 999)))
+            .set("nodes", g.usize_in(2, 32))
+            .set("steps", g.usize_in(0, 5000))
+            .set("eval_every", g.usize_in(1, 500))
+            .set("seed", g.usize_in(0, 1 << 20))
+            .set("h", g.usize_in(1, 20))
+            .set("compressor", compressors[g.usize_in(0, compressors.len() - 1)])
+            .set("trigger", triggers[g.usize_in(0, triggers.len() - 1)])
+            .set("lr", lrs[g.usize_in(0, lrs.len() - 1)])
+            .set("problem", problems[g.usize_in(0, problems.len() - 1)])
+            .set("link", links[g.usize_in(0, links.len() - 1)]);
+        let cfg = ExperimentConfig::from_json(&j).map_err(|e| e.to_string())?;
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(back == cfg, "config changed across JSON roundtrip");
+        prop_assert!(
+            back.to_json().to_string() == text,
+            "serialization not byte-stable"
+        );
+        prop_assert!(
+            config_hash(&back) == config_hash(&cfg),
+            "config_hash not stable across roundtrip"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lease_margin_widens_takeover_exactly() {
+    use sparq::sweep::{Acquire, ClaimStore};
+
+    // With a skew margin m, an uncontended stale claim is taken over at
+    // stamp + lease + m and never before — the margin delays takeover by
+    // exactly the allowance, under any (lease, margin) combination.
+    check("claim-margin", Config { cases: 48, seed: 0x4D }, |g| {
+        let dir = claims_dir(g, "margin");
+        let lease = g.f64_in(1.0, 50.0);
+        let margin = g.f64_in(0.0, 20.0);
+        let t0 = g.f64_in(0.0, 1e6);
+        let store_a = ClaimStore::new(&dir, "a", lease).map_err(|e| e.to_string())?;
+        match store_a.try_acquire_at("r", t0).map_err(|e| e.to_string())? {
+            Acquire::Acquired(_) => {}
+            Acquire::Held => return Err("fresh directory refused the first claim".into()),
+        }
+        let store_b = ClaimStore::new(&dir, "b", lease)
+            .map_err(|e| e.to_string())?
+            .with_margin(margin)
+            .map_err(|e| e.to_string())?;
+        // Strictly inside lease + margin: must hold off.
+        let early = t0 + (lease + margin) * g.f64_in(0.05, 0.99);
+        prop_assert!(
+            matches!(
+                store_b.try_acquire_at("r", early).map_err(|e| e.to_string())?,
+                Acquire::Held
+            ),
+            "takeover fired {:.3}s before lease {lease} + margin {margin}",
+            t0 + lease + margin - early
+        );
+        // At/after lease + margin: must take over.
+        let late = t0 + lease + margin + g.f64_in(0.001, 10.0);
+        prop_assert!(
+            matches!(
+                store_b.try_acquire_at("r", late).map_err(|e| e.to_string())?,
+                Acquire::Acquired(_)
+            ),
+            "stale claim (lease {lease}, margin {margin}) not taken over"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}

@@ -65,7 +65,7 @@ fn grid_spec() -> SweepSpec {
         problem: "quadratic:24".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         ..Default::default()
     };
     SweepSpec::new("dist-grid")
@@ -245,6 +245,21 @@ fn killed_process_claims_are_taken_over_and_runs_resume_from_checkpoint() {
     let abandoned = claim_files(&out);
     assert_eq!(abandoned.len(), 1, "exactly one abandoned claim: {abandoned:?}");
     let victim = &abandoned[0];
+    // `sparq sweep status` lists the abandoned claim with its owner.
+    let status = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .args(["sweep", "status", "--out"])
+        .arg(&out)
+        .args(["--lease-secs", "1"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("sweep status");
+    assert!(status.status.success());
+    let status_out = stdout_of(&status);
+    assert!(
+        status_out.contains(victim.as_str()) && status_out.contains("1 claim(s) held"),
+        "status must list the abandoned claim:\n{status_out}"
+    );
     assert!(
         out.join("ckpt").join(format!("{victim}.ckpt")).exists(),
         "mid-run checkpoint left behind for takeover"
@@ -255,11 +270,22 @@ fn killed_process_claims_are_taken_over_and_runs_resume_from_checkpoint() {
     // must take the stale claim over and resume the half-finished run
     // from its checkpoint (the verbose resume line proves it did not
     // restart from scratch — restarting would also be bit-identical).
+    // Zero skew margin: one machine = one clock, and the test sleeps
+    // only just past the 1s lease (the margin itself is unit-tested).
     std::thread::sleep(std::time::Duration::from_millis(1200));
     let o2 = sparq_sweep(
         &spec_path,
         &out,
-        &["--workers", "2", "--lease-secs", "1", "--checkpoint-every", "40"],
+        &[
+            "--workers",
+            "2",
+            "--lease-secs",
+            "1",
+            "--lease-margin-secs",
+            "0",
+            "--checkpoint-every",
+            "40",
+        ],
     )
     .output()
     .expect("run child 2");
@@ -307,7 +333,7 @@ fn distributed_early_stop_equals_serial_early_stop_bit_for_bit() {
         problem: "quadratic:24".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         seed: 77,
         ..Default::default()
     };

@@ -77,7 +77,7 @@ fn mini_fig1_spec(steps: u64, seed: u64) -> SweepSpec {
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
         lr: "invtime:100:1".into(),
-        h: 5,
+        h: sparq::config::SyncSpec::every(5),
         ..Default::default()
     };
     SweepSpec::new("mini-fig1")
@@ -184,7 +184,7 @@ fn sweep_mid_run_checkpoint_resume_is_bit_identical() {
         problem: "quadratic:32".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         momentum: 0.9,
         seed: 21,
         ..Default::default()
@@ -265,7 +265,7 @@ fn checkpoint_roundtrip_bit_for_bit_for_all_three_algorithms() {
             problem: "quadratic:20".into(),
             compressor: "sign_topk:25%".into(),
             trigger: "const:10".into(),
-            h: 2,
+            h: sparq::config::SyncSpec::every(2),
             momentum,
             seed: 31,
             ..Default::default()
@@ -338,7 +338,7 @@ fn delivered_bits_monotone_nonincreasing_in_drop_probability() {
             eval_every: 150,
             problem: "quadratic:24".into(),
             compressor: "sign".into(),
-            link: if p > 0.0 { format!("drop:{p}") } else { "none".into() },
+            link: (if p > 0.0 { format!("drop:{p}") } else { "none".to_string() }).into(),
             seed: 5,
             ..Default::default()
         };
@@ -370,7 +370,7 @@ fn early_stop_is_deterministic_and_a_bit_exact_prefix_across_budgets() {
         problem: "quadratic:32".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         seed: 13,
         ..Default::default()
     };
@@ -436,7 +436,7 @@ fn early_stop_target_error_truncates_and_roundtrips_through_resume() {
         problem: "logreg:24:4:6".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         seed: 19,
         ..Default::default()
     };
@@ -507,7 +507,7 @@ fn early_stop_frees_its_worker_for_a_pending_run() {
         problem: "quadratic:64".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:20".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         seed: 3,
         ..Default::default()
     };
@@ -574,7 +574,7 @@ fn link_faulted_runs_are_identical_across_worker_counts() {
         problem: "quadratic:32".into(),
         compressor: "sign_topk:25%".into(),
         trigger: "const:10".into(),
-        h: 2,
+        h: sparq::config::SyncSpec::every(2),
         link: "drop:0.3+straggler:2:0.5".into(),
         seed: 17,
         workers,
