@@ -1,0 +1,508 @@
+//! Deterministic fault plans: node crashes, network partitions, and
+//! per-copy message corruption for the simulated fabric.
+//!
+//! [`LinkModel`](super::LinkModel) covers the *stateless* failure axes
+//! (independent per-copy drops, per-round stragglers). A [`FaultPlan`]
+//! adds the *scheduled* axes a production deployment must survive:
+//!
+//! * **node crashes** — `crash:i:t_down:t_up`: node `i` is offline for
+//!   every iteration in `[t_down, t_up)`. While down it computes
+//!   nothing, transmits nothing, and receives nothing; the engine
+//!   renormalizes its mixing weight away so gossip proceeds on the live
+//!   subgraph. On rejoin the node resumes from its crash-time state (a
+//!   crash-time checkpoint restore) and pays a full-precision resync
+//!   over its live edges — recovery is never free.
+//! * **partitions** — `partition:t0:t1:A|B`: for `[t0, t1)` the listed
+//!   groups cannot reach each other (edges crossing a group boundary
+//!   are severed; nodes not listed in any group are unaffected). Group
+//!   members are comma-separated indices; `a-b` ranges are accepted
+//!   (`partition:500:700:0-7|8-15`).
+//! * **corruption** — `corrupt:p`: each delivered copy of a broadcast
+//!   is corrupted in flight with probability `p`. The receiver's
+//!   checksum ([`wire::unframe`](super::wire::unframe)) detects it, so
+//!   a corrupted copy is charged on the bus (it consumed the link) but
+//!   discarded like a drop — never silently decoded into the consensus
+//!   step.
+//!
+//! Segments compose with `+`, and the whole plan composes with a
+//! `LinkModel` (`drop:p` and `crash:...` can run together). Crashes and
+//! partitions are pure schedules — no coins — so the down/severed sets
+//! are identical across worker counts by construction. Corruption uses
+//! the same splitmix64 hashed-coin discipline as `LinkModel`: every
+//! coin is a stateless hash of `(seed, tag, endpoints, t)`, so fault
+//! patterns are bit-for-bit reproducible from any thread interleaving.
+
+use crate::util::rng::splitmix64;
+
+/// Domain-separation tag for corruption coins (never collides with the
+/// `LinkModel` drop/straggler tags).
+const TAG_CORRUPT: u64 = 0x464C_5443_4F52_5054; // "FLTCORPT"
+
+/// One scheduled outage: node `node` is down for `t` in `[down, up)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashWindow {
+    pub node: usize,
+    pub down: u64,
+    pub up: u64,
+}
+
+/// One scheduled partition: for `t` in `[from, to)`, nodes in different
+/// groups cannot exchange messages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub from: u64,
+    pub to: u64,
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Are `a` and `b` on opposite sides of this partition (regardless
+    /// of time)? Nodes not listed in any group are unaffected.
+    fn splits(&self, a: usize, b: usize) -> bool {
+        let ga = self.groups.iter().position(|g| g.contains(&a));
+        let gb = self.groups.iter().position(|g| g.contains(&b));
+        matches!((ga, gb), (Some(x), Some(y)) if x != y)
+    }
+}
+
+/// Per-run fault bookkeeping, surfaced in sweep results and reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Crash events (a node entering a down window).
+    pub crashes: u64,
+    /// Node-level resync payments: at each fault transition, every node
+    /// that regained at least one live edge (a rejoined node and each of
+    /// its live neighbors; both sides of a healed partition) pays one
+    /// full-precision x̂ exchange over its regained edges.
+    pub resyncs: u64,
+    /// Copies corrupted in flight: charged on the bus, detected by the
+    /// frame checksum, and discarded like a drop.
+    pub corrupt_discards: u64,
+}
+
+impl FaultCounters {
+    /// Nothing ever went wrong.
+    pub fn is_zero(&self) -> bool {
+        *self == FaultCounters::default()
+    }
+}
+
+/// A seeded, schedule-driven fault plan. Plain data — cloning or
+/// sharing across threads is free, and identical `(spec, seed)` pairs
+/// always produce identical fault patterns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub crashes: Vec<CrashWindow>,
+    pub partitions: Vec<Partition>,
+    /// Per-copy corruption probability in [0, 1).
+    pub corrupt_p: f64,
+    /// Corruption-coin seed (salted independently of the link seed).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The fault-free default: the engine takes its seed fast path.
+    pub fn ideal() -> FaultPlan {
+        FaultPlan {
+            crashes: Vec::new(),
+            partitions: Vec::new(),
+            corrupt_p: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// True when no fault can ever occur.
+    pub fn is_ideal(&self) -> bool {
+        self.crashes.is_empty() && self.partitions.is_empty() && self.corrupt_p == 0.0
+    }
+
+    /// True when the plan can sever edges (crashes or partitions) — the
+    /// engine only tracks fault epochs and staleness when it can.
+    pub fn has_outages(&self) -> bool {
+        !self.crashes.is_empty() || !self.partitions.is_empty()
+    }
+
+    /// Parse a fault spec: `none`, or `+`-joined segments
+    /// `crash:I:T_DOWN:T_UP`, `partition:T0:T1:A|B[|C...]` (groups are
+    /// comma-separated indices; `a-b` ranges allowed), `corrupt:P`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: seed ^ 0x5FA7_1D3C_8B96_E042,
+            ..FaultPlan::ideal()
+        };
+        if spec.is_empty() || spec == "none" || spec == "ideal" {
+            return Ok(plan);
+        }
+        for seg in spec.split('+') {
+            let parts: Vec<&str> = seg.split(':').collect();
+            match parts.as_slice() {
+                ["crash", i, down, up] => {
+                    let node: usize = i
+                        .parse()
+                        .map_err(|_| format!("crash node {i:?} is not an index"))?;
+                    let down: u64 = down
+                        .parse()
+                        .map_err(|_| format!("crash t_down {down:?} is not an iteration"))?;
+                    let up: u64 = up
+                        .parse()
+                        .map_err(|_| format!("crash t_up {up:?} is not an iteration"))?;
+                    if down >= up {
+                        return Err(format!(
+                            "crash window [{down}, {up}) is empty; need t_down < t_up"
+                        ));
+                    }
+                    plan.crashes.push(CrashWindow { node, down, up });
+                }
+                ["partition", t0, t1, groups] => {
+                    let from: u64 = t0
+                        .parse()
+                        .map_err(|_| format!("partition t0 {t0:?} is not an iteration"))?;
+                    let to: u64 = t1
+                        .parse()
+                        .map_err(|_| format!("partition t1 {t1:?} is not an iteration"))?;
+                    if from >= to {
+                        return Err(format!(
+                            "partition window [{from}, {to}) is empty; need t0 < t1"
+                        ));
+                    }
+                    let groups = parse_groups(groups)?;
+                    plan.partitions.push(Partition { from, to, groups });
+                }
+                ["corrupt", p] => {
+                    let p: f64 = p
+                        .parse()
+                        .map_err(|_| format!("corrupt probability {p:?} is not a number"))?;
+                    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                        return Err(format!("corrupt probability must be in [0, 1), got {p}"));
+                    }
+                    if plan.corrupt_p > 0.0 {
+                        return Err("only one corrupt:P segment is allowed".into());
+                    }
+                    plan.corrupt_p = p;
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown fault segment {seg:?}; expected none, crash:I:T0:T1, \
+                         partition:T0:T1:A|B, or corrupt:P"
+                    ))
+                }
+            }
+        }
+        // Overlapping windows for one node would make the rejoin time
+        // ambiguous; reject them instead of guessing.
+        let mut windows = plan.crashes.clone();
+        windows.sort_by_key(|w| (w.node, w.down));
+        for pair in windows.windows(2) {
+            if pair[0].node == pair[1].node && pair[1].down < pair[0].up {
+                return Err(format!(
+                    "crash windows [{}, {}) and [{}, {}) for node {} overlap",
+                    pair[0].down, pair[0].up, pair[1].down, pair[1].up, pair[0].node
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Node indices referenced anywhere in the plan must be < `n`
+    /// (called from `ExperimentConfig::resolve`, which knows `n`).
+    pub fn check_nodes(&self, n: usize) -> Result<(), String> {
+        for w in &self.crashes {
+            if w.node >= n {
+                return Err(format!("crash node {} out of range for {n} nodes", w.node));
+            }
+        }
+        for p in &self.partitions {
+            for g in &p.groups {
+                for &i in g {
+                    if i >= n {
+                        return Err(format!(
+                            "partition member {i} out of range for {n} nodes"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Earliest iteration at which any fault activates (`None` for an
+    /// ideal or corrupt-only plan — corruption is active from t = 0).
+    pub fn first_activation(&self) -> Option<u64> {
+        let c = self.crashes.iter().map(|w| w.down);
+        let p = self.partitions.iter().map(|w| w.from);
+        c.chain(p).min()
+    }
+
+    /// Is node `i` offline at iteration `t`? Pure schedule, no coins.
+    pub fn is_down(&self, i: usize, t: u64) -> bool {
+        self.crashes
+            .iter()
+            .any(|w| w.node == i && w.down <= t && t < w.up)
+    }
+
+    /// Fill `mask[i] = is_down(i, t)` for every node.
+    pub fn down_mask_into(&self, t: u64, mask: &mut [bool]) {
+        mask.fill(false);
+        for w in &self.crashes {
+            if w.down <= t && t < w.up && w.node < mask.len() {
+                mask[w.node] = true;
+            }
+        }
+    }
+
+    /// Is the `a ↔ b` edge severed by an active partition at `t`?
+    /// (Crash outages are handled separately via [`is_down`].)
+    pub fn severed(&self, a: usize, b: usize, t: u64) -> bool {
+        self.partitions
+            .iter()
+            .any(|p| p.from <= t && t < p.to && p.splits(a, b))
+    }
+
+    /// Is the `from → to` copy of iteration t's broadcast corrupted in
+    /// flight? Stateless seeded coin — order- and thread-independent.
+    pub fn corrupts(&self, from: usize, to: usize, t: u64) -> bool {
+        if self.corrupt_p == 0.0 {
+            return false;
+        }
+        let mut s = self
+            .seed
+            .wrapping_add(TAG_CORRUPT)
+            .wrapping_add((from as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((to as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add(t.wrapping_mul(0x1656_67B1_9E37_79F9));
+        let coin = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        coin < self.corrupt_p
+    }
+
+    /// The active outage windows at `t`, as (crash indices, partition
+    /// indices) into [`crashes`](Self::crashes)/[`partitions`](Self::partitions).
+    /// The engine keys its fault epochs on this: the live subgraph can
+    /// only change when this value does.
+    pub fn active(&self, t: u64) -> (Vec<usize>, Vec<usize>) {
+        let c = self
+            .crashes
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.down <= t && t < w.up)
+            .map(|(i, _)| i)
+            .collect();
+        let p = self
+            .partitions
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.from <= t && t < w.to)
+            .map(|(i, _)| i)
+            .collect();
+        (c, p)
+    }
+
+    /// Human-readable spec (round-trips through [`parse`](Self::parse)
+    /// semantics).
+    pub fn describe(&self) -> String {
+        if self.is_ideal() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        for w in &self.crashes {
+            parts.push(format!("crash:{}:{}:{}", w.node, w.down, w.up));
+        }
+        for p in &self.partitions {
+            let groups: Vec<String> = p
+                .groups
+                .iter()
+                .map(|g| {
+                    g.iter()
+                        .map(|i| i.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                })
+                .collect();
+            parts.push(format!("partition:{}:{}:{}", p.from, p.to, groups.join("|")));
+        }
+        if self.corrupt_p > 0.0 {
+            parts.push(format!("corrupt:{}", self.corrupt_p));
+        }
+        parts.join("+")
+    }
+}
+
+/// Parse a `A|B[|C...]` group spec: groups split on `|`, members on
+/// `,`, each member a node index or an `a-b` inclusive range.
+fn parse_groups(spec: &str) -> Result<Vec<Vec<usize>>, String> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for g in spec.split('|') {
+        let mut members = Vec::new();
+        for item in g.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(format!("empty member in partition group {g:?}"));
+            }
+            if let Some((a, b)) = item.split_once('-') {
+                let a: usize = a
+                    .parse()
+                    .map_err(|_| format!("range start {a:?} is not an index"))?;
+                let b: usize = b
+                    .parse()
+                    .map_err(|_| format!("range end {b:?} is not an index"))?;
+                if a > b {
+                    return Err(format!("range {item:?} runs backwards"));
+                }
+                members.extend(a..=b);
+            } else {
+                members.push(
+                    item.parse()
+                        .map_err(|_| format!("partition member {item:?} is not an index"))?,
+                );
+            }
+        }
+        groups.push(members);
+    }
+    if groups.len() < 2 {
+        return Err("a partition needs at least two |-separated groups".into());
+    }
+    let mut seen = std::collections::HashSet::new();
+    for g in &groups {
+        for &i in g {
+            if !seen.insert(i) {
+                return Err(format!("node {i} appears in two partition groups"));
+            }
+        }
+    }
+    Ok(groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_never_faults() {
+        let p = FaultPlan::ideal();
+        assert!(p.is_ideal());
+        assert!(!p.has_outages());
+        for t in 0..50 {
+            assert!(!p.is_down(0, t));
+            assert!(!p.severed(0, 1, t));
+            assert!(!p.corrupts(0, 1, t));
+        }
+        assert!(FaultPlan::parse("none", 1).unwrap().is_ideal());
+        assert!(FaultPlan::parse("", 1).unwrap().is_ideal());
+    }
+
+    #[test]
+    fn parse_specs_and_describe_roundtrip() {
+        let p = FaultPlan::parse("crash:3:200:400+partition:500:700:0-3|4,5,6,7+corrupt:0.02", 7)
+            .unwrap();
+        assert_eq!(p.crashes, vec![CrashWindow { node: 3, down: 200, up: 400 }]);
+        assert_eq!(p.partitions.len(), 1);
+        assert_eq!(p.partitions[0].groups, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(p.corrupt_p, 0.02);
+        assert_eq!(p.first_activation(), Some(200));
+        assert_eq!(
+            p.describe(),
+            "crash:3:200:400+partition:500:700:0,1,2,3|4,5,6,7+corrupt:0.02"
+        );
+        // describe() re-parses to the same plan (ranges expand)
+        let q = FaultPlan::parse(&p.describe(), 7).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn parse_rejections() {
+        assert!(FaultPlan::parse("crash:0:10:10", 1).is_err()); // empty window
+        assert!(FaultPlan::parse("crash:0:20:10", 1).is_err()); // backwards
+        assert!(FaultPlan::parse("crash:0:1:5+crash:0:3:9", 1).is_err()); // overlap
+        assert!(FaultPlan::parse("partition:5:5:0|1", 1).is_err()); // empty window
+        assert!(FaultPlan::parse("partition:0:5:0,1", 1).is_err()); // one group
+        assert!(FaultPlan::parse("partition:0:5:0,1|1,2", 1).is_err()); // dup member
+        assert!(FaultPlan::parse("partition:0:5:3-1|4", 1).is_err()); // bad range
+        assert!(FaultPlan::parse("corrupt:1.5", 1).is_err());
+        assert!(FaultPlan::parse("corrupt:0.1+corrupt:0.2", 1).is_err());
+        assert!(FaultPlan::parse("wat:1", 1).is_err());
+        // disjoint windows for one node are fine
+        let p = FaultPlan::parse("crash:0:1:5+crash:0:5:9", 1).unwrap();
+        assert_eq!(p.crashes.len(), 2);
+    }
+
+    #[test]
+    fn crash_windows_are_exact_half_open_intervals() {
+        let p = FaultPlan::parse("crash:2:10:20+crash:2:30:35", 1).unwrap();
+        for t in 0..50 {
+            let expect = (10..20).contains(&t) || (30..35).contains(&t);
+            assert_eq!(p.is_down(2, t), expect, "t={t}");
+            assert!(!p.is_down(1, t));
+        }
+        let mut mask = [false; 4];
+        p.down_mask_into(12, &mut mask);
+        assert_eq!(mask, [false, false, true, false]);
+        p.down_mask_into(20, &mut mask);
+        assert_eq!(mask, [false; 4]);
+    }
+
+    #[test]
+    fn partitions_sever_only_cross_group_edges_in_window() {
+        let p = FaultPlan::parse("partition:100:200:0,1|2,3", 1).unwrap();
+        assert!(p.severed(0, 2, 150));
+        assert!(p.severed(3, 1, 150));
+        assert!(!p.severed(0, 1, 150)); // same side
+        assert!(!p.severed(2, 3, 150));
+        assert!(!p.severed(0, 4, 150)); // node 4 unlisted: unaffected
+        assert!(!p.severed(0, 2, 99)); // outside the window
+        assert!(!p.severed(0, 2, 200));
+    }
+
+    #[test]
+    fn corruption_coins_are_deterministic_and_order_free() {
+        let a = FaultPlan::parse("corrupt:0.3", 9).unwrap();
+        let b = FaultPlan::parse("corrupt:0.3", 9).unwrap();
+        let fwd: Vec<bool> = (0..300).map(|t| a.corrupts(1, 2, t)).collect();
+        let rev: Vec<bool> = (0..300).rev().map(|t| b.corrupts(1, 2, t)).collect();
+        let mut back = fwd.clone();
+        back.reverse();
+        assert_eq!(back, rev);
+        let hits = fwd.iter().filter(|&&x| x).count();
+        assert!((50..=130).contains(&hits), "corrupted {hits}/300");
+        // different seeds give different patterns
+        let c = FaultPlan::parse("corrupt:0.3", 10).unwrap();
+        assert_ne!(fwd, (0..300).map(|t| c.corrupts(1, 2, t)).collect::<Vec<_>>());
+        // and the corrupt coin never collides with a LinkModel drop coin
+        let link = crate::comm::LinkModel::parse("drop:0.3", 9).unwrap();
+        let drops: Vec<bool> = (0..300).map(|t| !link.delivers(1, 2, t)).collect();
+        assert_ne!(fwd, drops);
+    }
+
+    #[test]
+    fn corrupt_sets_shrink_pointwise_as_p_grows() {
+        let lo = FaultPlan::parse("corrupt:0.1", 3).unwrap();
+        let hi = FaultPlan::parse("corrupt:0.6", 3).unwrap();
+        for t in 0..200 {
+            for from in 0..4 {
+                for to in 0..4 {
+                    if from != to && lo.corrupts(from, to, t) {
+                        assert!(hi.corrupts(from, to, t), "({from}->{to}, t={t})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_windows_key_the_fault_epochs() {
+        let p = FaultPlan::parse("crash:1:10:20+partition:15:30:0|1,2", 1).unwrap();
+        assert_eq!(p.active(5), (vec![], vec![]));
+        assert_eq!(p.active(10), (vec![0], vec![]));
+        assert_eq!(p.active(15), (vec![0], vec![0]));
+        assert_eq!(p.active(20), (vec![], vec![0]));
+        assert_eq!(p.active(30), (vec![], vec![]));
+    }
+
+    #[test]
+    fn check_nodes_bounds() {
+        let p = FaultPlan::parse("crash:7:0:5", 1).unwrap();
+        assert!(p.check_nodes(8).is_ok());
+        assert!(p.check_nodes(7).is_err());
+        let p = FaultPlan::parse("partition:0:5:0,1|2,9", 1).unwrap();
+        assert!(p.check_nodes(10).is_ok());
+        assert!(p.check_nodes(9).is_err());
+    }
+}

@@ -19,9 +19,11 @@
 //! fixed-slot wire formats (dense operators, QsgdTopK) charge their
 //! nominal cost regardless of stored nonzeros.
 
+pub mod fault;
 pub mod link;
 pub mod wire;
 
+pub use fault::{FaultCounters, FaultPlan};
 pub use link::LinkModel;
 
 /// Per-round and cumulative communication accounting.

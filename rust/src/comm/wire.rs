@@ -5,8 +5,68 @@
 //! codec rather than a formula: `encode → decode` round-trips to the
 //! exact dense reconstruction, and the encoded length matches the charged
 //! bits (tested in both this module and `rust/tests/properties.rs`).
+//!
+//! Decoding is fully fallible: a truncated buffer, an over-declared
+//! entry count, or an out-of-range coordinate index yields a
+//! [`WireError`] instead of a panic or a silently-garbage vector. For
+//! transport over an untrusted byte stream, [`frame`] wraps a payload in
+//! a `[len:u32 LE][crc32:u32 LE]` header and [`unframe`] verifies both
+//! before handing the payload to a decoder — a corrupted copy is
+//! *detected* and treated as a drop, never decoded into the consensus
+//! step. Frame overhead is transport armor, not message content, so the
+//! simulation's bit accounting (`Compressor::message_bits`) deliberately
+//! excludes the 64-bit header.
+
+use std::fmt;
 
 use crate::compress::{index_bits, SparseVec};
+
+/// Why a buffer failed to decode. Every variant is a *detected* fault:
+/// callers count the copy as dropped instead of consuming garbage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// A read ran past the end of the buffer.
+    Truncated {
+        /// Bits the read needed in total.
+        need: u64,
+        /// Bits the buffer holds.
+        have: u64,
+    },
+    /// Frame checksum mismatch — the payload was corrupted in flight.
+    Checksum { stored: u32, computed: u32 },
+    /// Frame length field disagrees with the bytes actually present.
+    Length { declared: usize, actual: usize },
+    /// A decoded coordinate index is out of range for the dimension.
+    Index { idx: usize, d: usize },
+    /// A declared entry count exceeds the dimension.
+    Count { nnz: usize, d: usize },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated buffer: need {need} bits, have {have}")
+            }
+            WireError::Checksum { stored, computed } => write!(
+                f,
+                "checksum mismatch: frame says {stored:#010x}, payload hashes to {computed:#010x}"
+            ),
+            WireError::Length { declared, actual } => write!(
+                f,
+                "length mismatch: frame declares {declared} payload bytes, {actual} present"
+            ),
+            WireError::Index { idx, d } => {
+                write!(f, "coordinate index {idx} out of range for dimension {d}")
+            }
+            WireError::Count { nnz, d } => {
+                write!(f, "entry count {nnz} exceeds dimension {d}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// LSB-first bit writer.
 #[derive(Default)]
@@ -49,7 +109,8 @@ impl BitWriter {
     }
 }
 
-/// LSB-first bit reader.
+/// LSB-first bit reader. All reads are bounds-checked: running off the
+/// end of the buffer is a [`WireError::Truncated`], never a panic.
 pub struct BitReader<'a> {
     buf: &'a [u8],
     pos: u64,
@@ -60,7 +121,13 @@ impl<'a> BitReader<'a> {
         BitReader { buf, pos: 0 }
     }
 
-    pub fn read_bits(&mut self, bits: u32) -> u64 {
+    pub fn read_bits(&mut self, bits: u32) -> Result<u64, WireError> {
+        debug_assert!(bits <= 64);
+        let have = self.buf.len() as u64 * 8;
+        let need = self.pos + bits as u64;
+        if need > have {
+            return Err(WireError::Truncated { need, have });
+        }
         let mut out = 0u64;
         for i in 0..bits {
             let byte = (self.pos / 8) as usize;
@@ -69,12 +136,65 @@ impl<'a> BitReader<'a> {
             out |= (bit as u64) << i;
             self.pos += 1;
         }
-        out
+        Ok(out)
     }
 
-    pub fn read_f32(&mut self) -> f32 {
-        f32::from_bits(self.read_bits(32) as u32)
+    pub fn read_f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.read_bits(32)? as u32))
     }
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
+/// guarding [`frame`]d payloads. Bitwise, table-free: framing is not on
+/// the simulation hot path, and dependency-free beats fast here.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Bytes the frame header adds on top of the payload.
+pub const FRAME_OVERHEAD: usize = 8;
+
+/// Wrap a payload for transport: `[len:u32 LE][crc32:u32 LE][payload]`.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Verify a [`frame`]d buffer and return the payload slice. Any header
+/// damage shows up as a length mismatch; any payload damage (and header
+/// damage that keeps the length plausible) fails the checksum.
+pub fn unframe(bytes: &[u8]) -> Result<&[u8], WireError> {
+    if bytes.len() < FRAME_OVERHEAD {
+        return Err(WireError::Truncated {
+            need: FRAME_OVERHEAD as u64 * 8,
+            have: bytes.len() as u64 * 8,
+        });
+    }
+    let declared = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let payload = &bytes[FRAME_OVERHEAD..];
+    if declared != payload.len() {
+        return Err(WireError::Length {
+            declared,
+            actual: payload.len(),
+        });
+    }
+    let stored = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(WireError::Checksum { stored, computed });
+    }
+    Ok(payload)
 }
 
 /// Exact bit length of [`encode_topk`]/[`encode_topk_sparse`] for a
@@ -122,17 +242,23 @@ pub fn encode_sign_topk_sparse(q: &SparseVec, d: usize) -> Vec<u8> {
 }
 
 /// Decode into a dense vector of dimension d with `k` nonzeros.
-pub fn decode_sign_topk(bytes: &[u8], d: usize, k: usize) -> Vec<f32> {
+pub fn decode_sign_topk(bytes: &[u8], d: usize, k: usize) -> Result<Vec<f32>, WireError> {
     let ib = index_bits(d) as u32;
     let mut r = BitReader::new(bytes);
-    let scale = r.read_f32();
+    let scale = r.read_f32()?;
+    if k > d {
+        return Err(WireError::Count { nnz: k, d });
+    }
     let mut out = vec![0.0f32; d];
     for _ in 0..k {
-        let idx = r.read_bits(ib) as usize;
-        let neg = r.read_bits(1) == 1;
+        let idx = r.read_bits(ib)? as usize;
+        let neg = r.read_bits(1)? == 1;
+        if idx >= d {
+            return Err(WireError::Index { idx, d });
+        }
         out[idx] = if neg { -scale } else { scale };
     }
-    out
+    Ok(out)
 }
 
 /// Encoded TopK message: k (index, f32 value) pairs.
@@ -149,15 +275,22 @@ pub fn encode_topk(q: &[f32]) -> Vec<u8> {
     w.into_bytes()
 }
 
-pub fn decode_topk(bytes: &[u8], d: usize, k: usize) -> Vec<f32> {
+pub fn decode_topk(bytes: &[u8], d: usize, k: usize) -> Result<Vec<f32>, WireError> {
     let ib = index_bits(d) as u32;
     let mut r = BitReader::new(bytes);
+    if k > d {
+        return Err(WireError::Count { nnz: k, d });
+    }
     let mut out = vec![0.0f32; d];
     for _ in 0..k {
-        let idx = r.read_bits(ib) as usize;
-        out[idx] = r.read_f32();
+        let idx = r.read_bits(ib)? as usize;
+        let val = r.read_f32()?;
+        if idx >= d {
+            return Err(WireError::Index { idx, d });
+        }
+        out[idx] = val;
     }
-    out
+    Ok(out)
 }
 
 /// Encode a sparse TopK message without densifying — bit-identical to
@@ -173,15 +306,22 @@ pub fn encode_topk_sparse(q: &SparseVec, d: usize) -> Vec<u8> {
 }
 
 /// Decode a TopK payload straight into sparse form (k entries).
-pub fn decode_topk_sparse(bytes: &[u8], d: usize, k: usize) -> SparseVec {
+pub fn decode_topk_sparse(bytes: &[u8], d: usize, k: usize) -> Result<SparseVec, WireError> {
     let ib = index_bits(d) as u32;
     let mut r = BitReader::new(bytes);
+    if k > d {
+        return Err(WireError::Count { nnz: k, d });
+    }
     let mut out = SparseVec::with_capacity(k);
     for _ in 0..k {
-        let idx = r.read_bits(ib) as u32;
-        out.push(idx, r.read_f32());
+        let idx = r.read_bits(ib)? as usize;
+        let val = r.read_f32()?;
+        if idx >= d {
+            return Err(WireError::Index { idx, d });
+        }
+        out.push(idx as u32, val);
     }
-    out
+    Ok(out)
 }
 
 /// Encoded Sign(ℓ1) message: d sign bits + one f32 scale.
@@ -195,18 +335,51 @@ pub fn encode_sign(q: &[f32]) -> Vec<u8> {
     w.into_bytes()
 }
 
-pub fn decode_sign(bytes: &[u8], d: usize) -> Vec<f32> {
+pub fn decode_sign(bytes: &[u8], d: usize) -> Result<Vec<f32>, WireError> {
     let mut r = BitReader::new(bytes);
-    let scale = r.read_f32();
-    (0..d)
-        .map(|_| {
-            if r.read_bits(1) == 1 {
-                -scale
-            } else {
-                scale
-            }
-        })
-        .collect()
+    let scale = r.read_f32()?;
+    let mut out = Vec::with_capacity(d);
+    for _ in 0..d {
+        out.push(if r.read_bits(1)? == 1 { -scale } else { scale });
+    }
+    Ok(out)
+}
+
+/// Self-describing sparse codec, usable for *any* compressor's output:
+/// `[nnz:32][(idx:index_bits(d), val:f32) × nnz]`. Unlike the
+/// per-operator codecs above, the entry count travels in-band, so a
+/// framed `encode_sparse` payload decodes with no side channel — the
+/// shape every message takes on a real transport.
+pub fn encode_sparse(q: &SparseVec, d: usize) -> Vec<u8> {
+    let ib = index_bits(d) as u32;
+    let mut w = BitWriter::new();
+    w.write_bits(q.nnz() as u64, 32);
+    for (i, v) in q.iter() {
+        w.write_bits(i as u64, ib);
+        w.write_f32(v);
+    }
+    w.into_bytes()
+}
+
+/// Decode an [`encode_sparse`] payload; validates the declared count and
+/// every coordinate index against `d`.
+pub fn decode_sparse(bytes: &[u8], d: usize) -> Result<SparseVec, WireError> {
+    let ib = index_bits(d) as u32;
+    let mut r = BitReader::new(bytes);
+    let nnz = r.read_bits(32)? as usize;
+    if nnz > d {
+        return Err(WireError::Count { nnz, d });
+    }
+    let mut out = SparseVec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let idx = r.read_bits(ib)? as usize;
+        let val = r.read_f32()?;
+        if idx >= d {
+            return Err(WireError::Index { idx, d });
+        }
+        out.push(idx as u32, val);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -231,9 +404,63 @@ mod tests {
         assert_eq!(w.bit_len(), 4 + 10 + 32);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(r.read_bits(4), 0b1011);
-        assert_eq!(r.read_bits(10), 0x3FF);
-        assert_eq!(r.read_f32(), -1.5);
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.read_bits(10).unwrap(), 0x3FF);
+        assert_eq!(r.read_f32().unwrap(), -1.5);
+    }
+
+    #[test]
+    fn reads_past_the_end_are_errors_not_panics() {
+        let bytes = vec![0xFFu8; 2];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(
+            r.read_bits(1),
+            Err(WireError::Truncated { need: 17, have: 16 })
+        );
+        // a failed read leaves the cursor in place
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bits(17).is_err());
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        // empty buffer
+        let mut r = BitReader::new(&[]);
+        assert!(r.read_f32().is_err());
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The canonical CRC-32/ISO-HDLC check: crc32("123456789").
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_detection() {
+        let payload = b"sparq frame payload";
+        let framed = frame(payload);
+        assert_eq!(framed.len(), payload.len() + FRAME_OVERHEAD);
+        assert_eq!(unframe(&framed).unwrap(), payload);
+        // empty payload frames too
+        assert_eq!(unframe(&frame(b"")).unwrap(), b"");
+
+        // payload corruption → checksum error
+        let mut bad = framed.clone();
+        bad[FRAME_OVERHEAD + 3] ^= 0x40;
+        assert!(matches!(unframe(&bad), Err(WireError::Checksum { .. })));
+        // length-field corruption → length error
+        let mut bad = framed.clone();
+        bad[0] ^= 1;
+        assert!(matches!(unframe(&bad), Err(WireError::Length { .. })));
+        // truncation below the header → truncated error
+        assert!(matches!(
+            unframe(&framed[..5]),
+            Err(WireError::Truncated { .. })
+        ));
+        // lost tail bytes → length error (declared > actual)
+        assert!(matches!(
+            unframe(&framed[..framed.len() - 1]),
+            Err(WireError::Length { .. })
+        ));
     }
 
     #[test]
@@ -253,7 +480,7 @@ mod tests {
             bytes.len(),
             charged
         );
-        let back = decode_sign_topk(&bytes, d, k);
+        let back = decode_sign_topk(&bytes, d, k).unwrap();
         assert_eq!(q, back);
     }
 
@@ -268,7 +495,7 @@ mod tests {
         let bytes = encode_topk(&q);
         let charged = op.encoded_bits(d);
         assert!((bytes.len() as u64) * 8 >= charged && (bytes.len() as u64) * 8 < charged + 8);
-        assert_eq!(decode_topk(&bytes, d, k), q);
+        assert_eq!(decode_topk(&bytes, d, k).unwrap(), q);
     }
 
     #[test]
@@ -280,15 +507,55 @@ mod tests {
         let bytes = encode_sign(&q);
         let charged = SignL1.encoded_bits(d);
         assert!((bytes.len() as u64) * 8 >= charged && (bytes.len() as u64) * 8 < charged + 8);
-        assert_eq!(decode_sign(&bytes, d), q);
+        assert_eq!(decode_sign(&bytes, d).unwrap(), q);
     }
 
     #[test]
     fn empty_message() {
         let q = vec![0.0f32; 64];
         let bytes = encode_sign_topk(&q);
-        let back = decode_sign_topk(&bytes, 64, 0);
+        let back = decode_sign_topk(&bytes, 64, 0).unwrap();
         assert_eq!(back, q);
+    }
+
+    #[test]
+    fn truncated_payloads_decode_to_errors() {
+        let d = 96;
+        let x = randvec(11, d);
+        let mut rng = Rng::new(0);
+        let q = TopK::new(12).compress_vec(&x, &mut rng);
+        let bytes = encode_topk(&q);
+        assert!(decode_topk(&bytes[..bytes.len() / 2], d, 12).is_err());
+        assert!(decode_topk_sparse(&bytes[..3], d, 12).is_err());
+        assert!(decode_sign(&[], d).is_err());
+        assert!(decode_sign_topk(&bytes[..2], d, 12).is_err());
+        // over-declared counts are rejected before any allocation abuse
+        assert_eq!(
+            decode_topk(&bytes, d, d + 1),
+            Err(WireError::Count { nnz: d + 1, d })
+        );
+    }
+
+    #[test]
+    fn sparse_codec_is_self_describing() {
+        let d = 640;
+        let x = randvec(13, d);
+        let mut rng = Rng::new(0);
+        let mut q = crate::compress::SparseVec::new();
+        TopK::new(40).compress_sparse(&x, &mut rng, &mut q);
+        let bytes = encode_sparse(&q, d);
+        // nnz travels in-band: decode needs only d
+        assert_eq!(decode_sparse(&bytes, d).unwrap(), q);
+        // declared-count validation
+        let mut w = BitWriter::new();
+        w.write_bits(d as u64 + 5, 32);
+        assert_eq!(
+            decode_sparse(&w.into_bytes(), d),
+            Err(WireError::Count { nnz: d + 5, d })
+        );
+        // an empty message still decodes
+        let empty = crate::compress::SparseVec::new();
+        assert_eq!(decode_sparse(&encode_sparse(&empty, d), d).unwrap(), empty);
     }
 
     #[test]
@@ -304,7 +571,7 @@ mod tests {
             let dense = q.to_dense(d);
             assert_eq!(encode_topk_sparse(&q, d), encode_topk(&dense), "topk k={k}");
             assert_eq!(topk_bits(q.nnz(), d), topk.message_bits(d, q.nnz()));
-            let back = decode_topk_sparse(&encode_topk_sparse(&q, d), d, q.nnz());
+            let back = decode_topk_sparse(&encode_topk_sparse(&q, d), d, q.nnz()).unwrap();
             assert_eq!(back, q);
 
             let st = SignTopK::new(k);

@@ -22,8 +22,8 @@ pub mod specs;
 pub use error::ConfigError;
 pub use resolved::{GammaMode, ResolvedConfig};
 pub use specs::{
-    CompressorKind, CompressorSpec, KSpec, LinkSpec, LrSpec, ProblemKind, ProblemSpec,
-    ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec, TriggerSpec,
+    CompressorKind, CompressorSpec, FaultSpec, KSpec, LinkSpec, LrSpec, ProblemKind,
+    ProblemSpec, ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec, TriggerSpec,
 };
 
 use crate::util::json::Json;
@@ -74,6 +74,11 @@ pub struct ExperimentConfig {
     pub topology_schedule: ScheduleSpec,
     /// Link-fault model (`LinkSpec::ideal()` = the loss-free default).
     pub link: LinkSpec,
+    /// Scheduled fault plan: node crashes, partitions, corruption
+    /// (`FaultSpec::none()` = the default; composes with `link`).
+    /// Omitted from the JSON form when default, so pre-fault configs
+    /// hash identically.
+    pub fault: FaultSpec,
     pub compressor: CompressorSpec,
     pub trigger: TriggerSpec,
     pub lr: LrSpec,
@@ -106,6 +111,7 @@ impl Default for ExperimentConfig {
             topology: TopologySpec::ring(),
             topology_schedule: ScheduleSpec::fixed(),
             link: LinkSpec::ideal(),
+            fault: FaultSpec::none(),
             compressor: CompressorSpec::sign_top_k_pct(10.0),
             trigger: TriggerSpec::constant(100.0),
             lr: LrSpec::inv_time(100.0, 1.0),
@@ -123,7 +129,7 @@ impl Default for ExperimentConfig {
 
 impl ExperimentConfig {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("name", self.name.as_str())
             .set("algo", self.algo.as_str())
             .set("nodes", self.nodes)
@@ -140,7 +146,15 @@ impl ExperimentConfig {
             .set("seed", self.seed)
             .set("problem", self.problem.to_json())
             .set("gamma", self.gamma)
-            .set("workers", self.workers)
+            .set("workers", self.workers);
+        // Emitted only when set: pre-fault configs keep their exact
+        // serialized bytes, so config_hash / sweep resume ids are
+        // unchanged (pinned by rust/tests/config_golden.rs).
+        if self.fault.is_none() {
+            j
+        } else {
+            j.set("fault", self.fault.to_json())
+        }
     }
 
     /// Every key `from_json` understands (used for typo rejection).
@@ -155,6 +169,7 @@ impl ExperimentConfig {
         "trigger",
         "lr",
         "h",
+        "fault",
         "steps",
         "eval_every",
         "momentum",
@@ -248,6 +263,7 @@ impl ExperimentConfig {
                 ScheduleSpec::from_json,
             )?,
             link: spec(j, "link", &base.link, LinkSpec::from_json)?,
+            fault: spec(j, "fault", &base.fault, FaultSpec::from_json)?,
             compressor: spec(j, "compressor", &base.compressor, CompressorSpec::from_json)?,
             trigger: spec(j, "trigger", &base.trigger, TriggerSpec::from_json)?,
             lr: spec(j, "lr", &base.lr, LrSpec::from_json)?,
@@ -437,6 +453,30 @@ mod tests {
         };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn fault_field_roundtrips_but_defaults_stay_byte_identical() {
+        // default plan ⇒ no "fault" key in the JSON (hash compatibility)
+        let dflt = ExperimentConfig::default();
+        assert!(!dflt.to_json().to_string().contains("fault"));
+        // set plan ⇒ emitted, and roundtrips
+        let cfg = ExperimentConfig {
+            fault: "crash:1:100:200+corrupt:0.01".into(),
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string();
+        assert!(text.contains(r#""fault":"crash:1:100:200+corrupt:0.01""#), "{text}");
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // explicit "none" parses to the default (and re-serializes away)
+        let j = Json::parse(r#"{"fault": "none"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, ExperimentConfig::default());
+        // invalid plans fail at the boundary with the field named
+        let j = Json::parse(r#"{"fault": "crash:0:9:3"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert_eq!(err.field(), Some("fault"), "{err}");
     }
 
     #[test]

@@ -35,7 +35,7 @@
 
 use super::error::ConfigError;
 use super::ExperimentConfig;
-use crate::comm::LinkModel;
+use crate::comm::{FaultPlan, LinkModel};
 use crate::graph::TopologySchedule;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::ThresholdSchedule;
@@ -79,6 +79,9 @@ pub struct ResolvedConfig {
     pub lr: LrSchedule,
     /// Seeded link-fault process (seed already mixed in).
     pub link: LinkModel,
+    /// Seeded node/partition/corruption fault plan (seed already mixed
+    /// in); `FaultPlan::ideal()` when the config declares no faults.
+    pub fault: FaultPlan,
     /// Replayable time-varying topology schedule.
     pub schedule: TopologySchedule,
     /// Consensus step-size policy.
@@ -149,6 +152,30 @@ impl ExperimentConfig {
             }
         }
 
+        // Fault-plan indices must name real nodes, and a plan with
+        // outages must activate within the configured horizon — a crash
+        // scheduled after the last step is almost certainly a typo.
+        let fault = self.fault.build(self.seed);
+        self.fault.plan().check_nodes(self.nodes).map_err(|reason| {
+            ConfigError::value("fault", self.fault.as_str(), reason)
+        })?;
+        if self.steps > 0 && fault.has_outages() {
+            if let Some(first) = fault.first_activation() {
+                if first >= self.steps {
+                    return Err(ConfigError::value(
+                        "fault",
+                        self.fault.as_str(),
+                        format!(
+                            "first fault window opens at t = {first}, but the \
+                             run ends at t = {}",
+                            self.steps
+                        ),
+                    )
+                    .suggest("move the window before `steps`, or raise `steps`"));
+                }
+            }
+        }
+
         // A k-sparse compressor cannot name more coordinates than the
         // problem has parameters (percent forms resolve within range by
         // construction).
@@ -193,6 +220,7 @@ impl ExperimentConfig {
             trigger: self.trigger.schedule().clone(),
             lr: self.lr.schedule().clone(),
             link,
+            fault,
             schedule,
             gamma,
         })
@@ -306,6 +334,59 @@ mod tests {
         assert!(with_momentum(-0.5).resolve().is_err());
         assert!(with_momentum(1.0).resolve().is_err());
         assert!(with_momentum(0.9).resolve().is_ok());
+    }
+
+    #[test]
+    fn fault_plan_node_range_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            fault: "crash:4:100:200".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("fault"), "{err}");
+        assert!(err.contains("4 nodes"), "{err}");
+        // partitions are checked too
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            fault: "partition:100:200:0,1|2,9".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_err());
+        // in-range resolves and carries the seeded plan
+        let cfg = ExperimentConfig {
+            nodes: 4,
+            fault: "crash:3:100:200".into(),
+            ..Default::default()
+        };
+        let r = cfg.resolve().unwrap();
+        assert!(r.fault.is_down(3, 150));
+        assert!(!r.fault.is_down(3, 250));
+    }
+
+    #[test]
+    fn fault_plan_past_horizon_is_a_resolve_error() {
+        let cfg = ExperimentConfig {
+            steps: 500,
+            fault: "crash:0:600:700".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("run ends"), "{err}");
+        // corruption alone has no window, so it is horizon-exempt
+        let cfg = ExperimentConfig {
+            steps: 500,
+            fault: "corrupt:0.05".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
+        // steps = 0 (caller-driven horizon) skips the check
+        let cfg = ExperimentConfig {
+            steps: 0,
+            fault: "crash:0:600:700".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
     }
 
     #[test]

@@ -1143,6 +1143,146 @@ impl LinkSpec {
 }
 
 // ---------------------------------------------------------------------
+// FaultSpec
+// ---------------------------------------------------------------------
+
+/// Typed fault-plan spec (`none`, or `+`-joined `crash:I:T0:T1`,
+/// `partition:T0:T1:A|B`, `corrupt:P` segments — see
+/// [`FaultPlan`](crate::comm::FaultPlan) for the grammar). Node indices
+/// are range-checked against the node count by
+/// `ExperimentConfig::resolve`; the seeded plan is built per run via
+/// [`FaultSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    raw: String,
+    plan: crate::comm::FaultPlan,
+}
+
+spec_string_json!(FaultSpec);
+spec_common!(FaultSpec, "bad fault spec");
+
+impl FaultSpec {
+    /// The fault-free default.
+    pub fn none() -> Self {
+        "none".parse().expect("static spec")
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.plan.is_ideal()
+    }
+
+    /// The parsed (unseeded) plan — schedule queries only.
+    pub fn plan(&self) -> &crate::comm::FaultPlan {
+        &self.plan
+    }
+
+    /// Instantiate the seeded fault plan for one run.
+    pub fn build(&self, seed: u64) -> crate::comm::FaultPlan {
+        crate::comm::FaultPlan::parse(&self.raw, seed).expect("validated at parse time")
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        // FaultPlan::parse owns the grammar; the seed is irrelevant for
+        // validation.
+        let plan = crate::comm::FaultPlan::parse(s, 0)
+            .map_err(|reason| ConfigError::value("fault", s, reason))?;
+        Ok(FaultSpec {
+            raw: s.to_string(),
+            plan,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("fault", j, &["crash", "partition", "corrupt"])?;
+                let mut segs = Vec::new();
+                if let Some(list) = j.get("crash") {
+                    let arr = list.as_arr().ok_or_else(|| {
+                        ConfigError::value(
+                            "fault",
+                            j.to_string(),
+                            "\"crash\" must be an array of {node, down, up} objects",
+                        )
+                    })?;
+                    for item in arr {
+                        let node = obj_u64("fault", item, "node")?;
+                        let down = obj_u64("fault", item, "down")?;
+                        let up = obj_u64("fault", item, "up")?;
+                        segs.push(format!("crash:{node}:{down}:{up}"));
+                    }
+                }
+                if let Some(list) = j.get("partition") {
+                    let arr = list.as_arr().ok_or_else(|| {
+                        ConfigError::value(
+                            "fault",
+                            j.to_string(),
+                            "\"partition\" must be an array of {from, to, groups} objects",
+                        )
+                    })?;
+                    for item in arr {
+                        let from = obj_u64("fault", item, "from")?;
+                        let to = obj_u64("fault", item, "to")?;
+                        let groups = item.get("groups").and_then(Json::as_arr).ok_or_else(
+                            || {
+                                ConfigError::value(
+                                    "fault",
+                                    item.to_string(),
+                                    "partition needs \"groups\": an array of index arrays",
+                                )
+                            },
+                        )?;
+                        let mut rendered = Vec::new();
+                        for g in groups {
+                            let members = g.as_arr().ok_or_else(|| {
+                                ConfigError::value(
+                                    "fault",
+                                    g.to_string(),
+                                    "each partition group must be an array of node indices",
+                                )
+                            })?;
+                            let ids: Result<Vec<String>, ConfigError> = members
+                                .iter()
+                                .map(|m| {
+                                    m.as_f64()
+                                        .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                                        .map(|x| format!("{}", x as u64))
+                                        .ok_or_else(|| {
+                                            ConfigError::value(
+                                                "fault",
+                                                m.to_string(),
+                                                "partition member is not a node index",
+                                            )
+                                        })
+                                })
+                                .collect();
+                            rendered.push(ids?.join(","));
+                        }
+                        segs.push(format!("partition:{from}:{to}:{}", rendered.join("|")));
+                    }
+                }
+                if let Some(p) = j.get("corrupt") {
+                    let p = p.as_f64().ok_or_else(|| {
+                        ConfigError::value("fault", j.to_string(), "\"corrupt\" must be a number")
+                    })?;
+                    segs.push(format!("corrupt:{}", fmt_f64(p)));
+                }
+                if segs.is_empty() {
+                    return "none".parse();
+                }
+                segs.join("+").parse()
+            }
+            other => Err(ConfigError::value(
+                "fault",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // ProblemSpec
 // ---------------------------------------------------------------------
 
@@ -1498,6 +1638,34 @@ mod tests {
             LinkSpec::drop(0.1).with_straggler(0, 0.5).as_str(),
             "drop:0.1+straggler:0:0.5"
         );
+    }
+
+    #[test]
+    fn fault_spec_builds_the_same_plan_as_direct_parse() {
+        let raw = "crash:3:200:400+partition:500:700:0-7|8-15+corrupt:0.02";
+        let spec = FaultSpec::from_str(raw).unwrap();
+        assert_eq!(spec.as_str(), raw); // raw preserved, ranges unexpanded
+        assert!(!spec.is_none());
+        let built = spec.build(7);
+        let direct = crate::comm::FaultPlan::parse(raw, 7).unwrap();
+        assert_eq!(built, direct);
+        assert!(FaultSpec::none().is_none());
+        assert!(FaultSpec::from_str("crash:0:10:5").is_err());
+        assert!(FaultSpec::from_str("corrupt:2").is_err());
+        // structured JSON object form canonicalizes to segments
+        let j = Json::parse(
+            r#"{"crash":[{"node":3,"down":200,"up":400}],
+                "partition":[{"from":500,"to":700,"groups":[[0,1],[2,3]]}],
+                "corrupt":0.02}"#,
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec.as_str(),
+            "crash:3:200:400+partition:500:700:0,1|2,3+corrupt:0.02"
+        );
+        // typo'd keys rejected
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"crsh":[]}"#).unwrap()).is_err());
     }
 
     #[test]

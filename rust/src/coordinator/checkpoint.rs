@@ -16,13 +16,67 @@
 //! (params + momentum only) still load, with the extended blocks empty —
 //! enough to warm-start, not enough for exact resume.
 
+use std::fmt;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use super::DecentralizedAlgo;
-use crate::comm::Bus;
+use crate::comm::{Bus, FaultCounters};
 use crate::util::json::Json;
+
+/// Structured shape-mismatch error from [`restore`]: the snapshot does
+/// not fit the run it is being applied to. Mirrors the config surface's
+/// parse-don't-validate style (`config::ConfigError`): callers match on
+/// structure or render `Display` — nothing panics on a stale or foreign
+/// checkpoint file, and a rejected restore leaves the run untouched.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RestoreError {
+    /// What didn't line up (`nodes`, `dim`, `algo`, or a block name).
+    pub field: String,
+    /// What the target run requires.
+    pub expected: String,
+    /// What the checkpoint holds.
+    pub found: String,
+    /// An actionable fix, when one is obvious.
+    pub suggestion: Option<String>,
+}
+
+impl RestoreError {
+    fn new(
+        field: impl Into<String>,
+        expected: impl Into<String>,
+        found: impl Into<String>,
+    ) -> RestoreError {
+        RestoreError {
+            field: field.into(),
+            expected: expected.into(),
+            found: found.into(),
+            suggestion: None,
+        }
+    }
+
+    fn suggest(mut self, s: impl Into<String>) -> RestoreError {
+        self.suggestion = Some(s.into());
+        self
+    }
+}
+
+impl fmt::Display for RestoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "checkpoint mismatch on {}: run expects {}, snapshot holds {}",
+            self.field, self.expected, self.found
+        )?;
+        if let Some(s) = &self.suggestion {
+            write!(f, " (try: {s})")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RestoreError {}
 
 /// Everything needed to resume a run.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +103,10 @@ pub struct Checkpoint {
     pub acc: Vec<Vec<f32>>,
     /// Per-node RNG stream states (empty for v1 files).
     pub rng: Vec<[u64; 4]>,
+    /// Cumulative fault counters (zero for fault-free runs and for files
+    /// written before the chaos engine existed — the header keys default
+    /// to 0 on load, so old files stay readable).
+    pub fault: FaultCounters,
 }
 
 /// Capture the full coordinator state at iteration t (a round boundary).
@@ -75,16 +133,63 @@ pub fn snapshot(algo: &dyn DecentralizedAlgo, t: u64, bus: &Bus) -> Checkpoint {
             .filter_map(|i| algo.consensus_acc(i).map(|a| a.to_vec()))
             .collect(),
         rng: (0..n).filter_map(|i| algo.rng_state(i)).collect(),
+        fault: algo.fault_counters(),
     }
 }
 
-/// Restore node state from a checkpoint (panics on shape mismatch). For
-/// v2 checkpoints of an engine run this is a *complete* restore: params,
-/// momentum, estimate bank + accumulator, per-node RNG streams, and
-/// trigger statistics, with any time-varying topology schedule replayed
-/// to the snapshot iteration first.
-pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) {
-    assert_eq!(algo.n(), ckpt.n(), "node count mismatch");
+/// Restore node state from a checkpoint. For v2 checkpoints of an engine
+/// run this is a *complete* restore: params, momentum, estimate bank +
+/// accumulator, per-node RNG streams, trigger statistics, and fault
+/// counters, with any time-varying topology schedule (and fault-window
+/// state) replayed to the snapshot iteration first.
+///
+/// A snapshot that does not fit the run — wrong node count, wrong
+/// dimension, a different algorithm, ragged blocks — is rejected up
+/// front with a structured [`RestoreError`] before any state is touched,
+/// so a failed restore leaves the run exactly as it was.
+pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) -> Result<(), RestoreError> {
+    let fit = "re-run with the config the snapshot was taken from, or delete the checkpoint";
+    if ckpt.n() != algo.n() {
+        return Err(
+            RestoreError::new("nodes", algo.n().to_string(), ckpt.n().to_string()).suggest(fit),
+        );
+    }
+    let d = algo.params(0).len();
+    if ckpt.dim() != d {
+        return Err(
+            RestoreError::new("dim", d.to_string(), ckpt.dim().to_string()).suggest(fit),
+        );
+    }
+    if !ckpt.algo_name.is_empty() && ckpt.algo_name != algo.name() {
+        return Err(RestoreError::new("algo", algo.name(), ckpt.algo_name.clone()).suggest(fit));
+    }
+    for (name, block) in [
+        ("momentum", &ckpt.momentum),
+        ("xhat", &ckpt.xhat),
+        ("acc", &ckpt.acc),
+    ] {
+        if !block.is_empty() && block.len() != ckpt.n() {
+            return Err(RestoreError::new(
+                format!("{name} block"),
+                format!("{} rows", ckpt.n()),
+                format!("{} rows", block.len()),
+            ));
+        }
+    }
+    for (name, block) in [
+        ("params", &ckpt.params),
+        ("momentum", &ckpt.momentum),
+        ("xhat", &ckpt.xhat),
+        ("acc", &ckpt.acc),
+    ] {
+        if let Some(row) = block.iter().find(|r| r.len() != d) {
+            return Err(RestoreError::new(
+                format!("{name} row"),
+                format!("{d} values"),
+                format!("{} values", row.len()),
+            ));
+        }
+    }
     algo.prepare_resume(ckpt.t);
     for (i, p) in ckpt.params.iter().enumerate() {
         algo.set_node_params(i, p);
@@ -99,6 +204,8 @@ pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) {
         algo.set_rng_state(i, *s);
     }
     algo.set_fired_stats(ckpt.fired, ckpt.checks);
+    algo.set_fault_counters(ckpt.fault);
+    Ok(())
 }
 
 /// Restore the bus counters from a checkpoint (snapshots are taken at
@@ -123,7 +230,7 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let header = Json::obj()
+        let mut header = Json::obj()
             .set("version", 2u64)
             .set("t", self.t)
             .set("algo", self.algo_name.as_str())
@@ -137,8 +244,17 @@ impl Checkpoint {
             .set("dim", self.dim())
             .set("has_momentum", !self.momentum.is_empty())
             .set("has_estimates", !self.xhat.is_empty())
-            .set("has_rng", !self.rng.is_empty())
-            .to_string();
+            .set("has_rng", !self.rng.is_empty());
+        // Additive keys, written only when meaningful: fault-free runs
+        // keep the exact pre-chaos header bytes, and the loader's
+        // default-0 reads keep both directions compatible.
+        if !self.fault.is_zero() {
+            header = header
+                .set("f_crashes", self.fault.crashes)
+                .set("f_resyncs", self.fault.resyncs)
+                .set("f_corrupt", self.fault.corrupt_discards);
+        }
+        let header = header.to_string();
         let mut w = BufWriter::new(File::create(path)?);
         writeln!(w, "{header}")?;
         let write_f32_block = |w: &mut BufWriter<File>,
@@ -242,6 +358,11 @@ impl Checkpoint {
             xhat,
             acc,
             rng,
+            fault: FaultCounters {
+                crashes: get("f_crashes"),
+                resyncs: get("f_resyncs"),
+                corrupt_discards: get("f_corrupt"),
+            },
         })
     }
 }
@@ -285,6 +406,11 @@ mod tests {
                     r.state()
                 })
                 .collect(),
+            fault: FaultCounters {
+                crashes: 2,
+                resyncs: 5,
+                corrupt_discards: 11,
+            },
         }
     }
 
@@ -357,6 +483,32 @@ mod tests {
         assert_eq!(back.params[1], vec![3.0, 4.0, 5.0]);
         assert!(back.xhat.is_empty() && back.acc.is_empty() && back.rng.is_empty());
         assert_eq!(back.total_messages, 0);
+        assert!(back.fault.is_zero());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fault_free_headers_omit_fault_keys() {
+        let mut ckpt = mk(4, 2, 5, false, false);
+        ckpt.fault = FaultCounters::default();
+        let path = std::env::temp_dir().join(format!("sparq-ckpt4-{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&bytes[..nl]).unwrap();
+        assert!(!header.contains("f_crashes"), "{header}");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_error_display_names_the_mismatch() {
+        let e = RestoreError::new("nodes", "8", "4").suggest("delete the checkpoint");
+        let s = e.to_string();
+        assert!(s.contains("nodes"), "{s}");
+        assert!(s.contains("run expects 8"), "{s}");
+        assert!(s.contains("snapshot holds 4"), "{s}");
+        assert!(s.contains("try: delete the checkpoint"), "{s}");
     }
 }

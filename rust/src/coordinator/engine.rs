@@ -49,11 +49,12 @@ use super::consensus::NeighborAccumulator;
 use super::node::NodeState;
 use super::{gradient_phase, DecentralizedAlgo};
 use crate::comm::link::LinkModel;
-use crate::comm::Bus;
+use crate::comm::{Bus, FaultCounters, FaultPlan};
 use crate::compress::Compressor;
 use crate::graph::dynamic::TopologySchedule;
-use crate::graph::{MixingMatrix, SpectralInfo};
+use crate::graph::{MixingMatrix, SpectralInfo, Topology};
 use crate::linalg::vecops::sub_into;
+use crate::linalg::Matrix;
 use crate::problems::GradientSource;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::EventTrigger;
@@ -124,7 +125,24 @@ pub struct SyncCtx<'a> {
     pub comm: &'a dyn CommPolicy,
     pub compressor: &'a dyn Compressor,
     pub link: &'a LinkModel,
+    /// The fault plan in force. Crash/partition outages are already
+    /// folded into `mixing` (the engine hands rules the live-subgraph
+    /// matrix); rules consult this only for per-copy corruption coins.
+    pub fault: &'a FaultPlan,
+    /// Per-node crash mask at `t` (`down[i]` ⇒ node i is dark this
+    /// round: no trigger check, no transmission, no commit).
+    pub down: &'a [bool],
     pub pool: &'a ThreadPool,
+}
+
+/// What one sync round did — the transmit count plus fault bookkeeping
+/// that flows back to the engine's cumulative counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SyncOutcome {
+    /// Nodes that actually transmitted.
+    pub fired: usize,
+    /// Copies discarded by receivers as corrupt (checksum failures).
+    pub corrupt: u64,
 }
 
 /// What a sync round does with the transmissions. Rules own their
@@ -139,9 +157,12 @@ pub trait UpdateRule: Send {
     fn local_half_step(&self) -> bool;
 
     /// Run the communication + parameter commit of one sync round.
-    /// Returns the number of nodes that actually transmitted.
-    fn sync_round(&mut self, ctx: &SyncCtx<'_>, nodes: &mut [NodeState], bus: &mut Bus)
-        -> usize;
+    fn sync_round(
+        &mut self,
+        ctx: &SyncCtx<'_>,
+        nodes: &mut [NodeState],
+        bus: &mut Bus,
+    ) -> SyncOutcome;
 
     /// Rebuild topology-derived internal state after a mixing switch.
     /// Rules that keep cross-round neighbor state must charge `bus` for
@@ -149,6 +170,13 @@ pub trait UpdateRule: Send {
     /// (a node re-wired to a new neighbor has to *send* it x̂ before that
     /// neighbor can track it — re-wiring is not free signalling).
     fn rebuild(&mut self, mixing: &MixingMatrix, bus: &mut Bus);
+
+    /// Re-derive topology-dependent internal state for a (possibly
+    /// fault-pruned) mixing matrix *without* charging the bus. The
+    /// engine's fault-transition handler prices recovery itself — only
+    /// regained edges pay — so this hook must stay silent, unlike
+    /// [`rebuild`](Self::rebuild), which prices a full re-wiring.
+    fn refresh(&mut self, _mixing: &MixingMatrix) {}
 
     /// The public estimate x̂_i, for rules that keep an estimate bank.
     fn xhat(&self, _i: usize) -> Option<&[f32]> {
@@ -208,11 +236,16 @@ impl UpdateRule for EstimateTracking {
         ctx: &SyncCtx<'_>,
         nodes: &mut [NodeState],
         bus: &mut Bus,
-    ) -> usize {
+    ) -> SyncOutcome {
         // Algorithm 1 lines 7–9: trigger check and (if fired) compress,
         // all against the *pre-update* x̂ bank — parallel across nodes.
+        // Crashed nodes are dark: no trigger check, no transmission.
         let xhat = &self.xhat;
         ctx.pool.for_each_mut(nodes, |i, node| {
+            if ctx.down[i] {
+                node.fired = false;
+                return;
+            }
             node.fired = ctx.comm.fires(node, &xhat[i], ctx.t, ctx.eta);
             if node.fired {
                 sub_into(&node.x_half, &xhat[i], &mut node.diff);
@@ -224,7 +257,8 @@ impl UpdateRule for EstimateTracking {
         // Lines 9–13: charge broadcasts and apply estimate updates in
         // deterministic node order; silent nodes (line 11) cost nothing.
         let d = self.xhat[0].len();
-        let mut fired_count = 0usize;
+        let mut out = SyncOutcome::default();
+        let filtered = !ctx.link.is_ideal() || ctx.fault.corrupt_p > 0.0;
         for i in 0..nodes.len() {
             if !nodes[i].fired {
                 continue;
@@ -236,18 +270,30 @@ impl UpdateRule for EstimateTracking {
                 nodes[i].fired = false;
                 continue;
             }
-            fired_count += 1;
+            out.fired += 1;
             let q = &nodes[i].q;
             let bits = ctx.compressor.message_bits(d, q.nnz());
-            if ctx.link.is_ideal() {
+            if !filtered {
                 bus.charge_broadcast(i, ctx.mixing.topology.degree(i), bits);
                 q.add_to(&mut self.xhat[i]);
                 self.nbr.apply_broadcast(i, q);
             } else {
-                let delivered = self
-                    .nbr
-                    .apply_broadcast_where(i, q, |to| ctx.link.delivers(i, to, ctx.t));
-                bus.charge_broadcast(i, delivered, bits);
+                // A corrupt copy traveled the link — it is charged like a
+                // delivered one — but fails its frame checksum at the
+                // receiver, so the accumulator treats it as a drop.
+                let mut corrupt_here = 0u64;
+                let delivered = self.nbr.apply_broadcast_where(i, q, |to| {
+                    if !ctx.link.delivers(i, to, ctx.t) {
+                        return false;
+                    }
+                    if ctx.fault.corrupts(i, to, ctx.t) {
+                        corrupt_here += 1;
+                        return false;
+                    }
+                    true
+                });
+                bus.charge_broadcast(i, delivered + corrupt_here as usize, bits);
+                out.corrupt += corrupt_here;
                 q.add_to(&mut self.xhat[i]);
             }
         }
@@ -255,14 +301,18 @@ impl UpdateRule for EstimateTracking {
         // Line 15: consensus from the post-update estimates — one fused
         // pass per node from the materialized accumulator, parallel.
         // Commit by buffer swap (x_half is fully rewritten next round).
+        // A crashed node's x_half is stale, so its parameters stay frozen.
         let gamma = ctx.gamma;
         let xhat = &self.xhat;
         let nbr = &self.nbr;
         ctx.pool.for_each_mut(nodes, |i, node| {
+            if ctx.down[i] {
+                return;
+            }
             std::mem::swap(&mut node.x, &mut node.x_half);
             nbr.commit(i, gamma, &xhat[i], &mut node.x);
         });
-        fired_count
+        out
     }
 
     fn rebuild(&mut self, mixing: &MixingMatrix, bus: &mut Bus) {
@@ -281,6 +331,12 @@ impl UpdateRule for EstimateTracking {
                 bus.charge_broadcast(i, fanout, 32 * d as u64);
             }
         }
+        self.nbr = NeighborAccumulator::from_bank(mixing, &self.xhat);
+    }
+
+    fn refresh(&mut self, mixing: &MixingMatrix) {
+        // Same reconstruction as a rebuild but silent: the engine prices
+        // fault recovery per regained edge before calling this.
         self.nbr = NeighborAccumulator::from_bank(mixing, &self.xhat);
     }
 
@@ -337,20 +393,23 @@ impl UpdateRule for ExactAveraging {
         ctx: &SyncCtx<'_>,
         nodes: &mut [NodeState],
         bus: &mut Bus,
-    ) -> usize {
-        let n = nodes.len();
+    ) -> SyncOutcome {
         let d = nodes[0].x.len();
         let bits = 32 * d as u64;
 
-        // Who transmits this round (everyone, minus stragglers), and the
-        // per-copy charges — deterministic node order.
-        let mut transmitted = 0usize;
+        // Who transmits this round (everyone, minus crashed nodes and
+        // stragglers), and the per-copy charges — deterministic node
+        // order. Corrupt copies travel the link (and are charged like
+        // delivered ones) but fail the receiver's checksum; they are
+        // tallied here, sequentially, so the count never depends on the
+        // mixing pass's parallel layout.
+        let mut out = SyncOutcome::default();
         for (i, node) in nodes.iter_mut().enumerate() {
-            node.fired = !ctx.link.straggles(i, ctx.t);
+            node.fired = !ctx.down[i] && !ctx.link.straggles(i, ctx.t);
             if !node.fired {
                 continue;
             }
-            transmitted += 1;
+            out.fired += 1;
             if ctx.link.is_ideal() {
                 bus.charge_broadcast(i, ctx.mixing.topology.degree(i), bits);
             } else {
@@ -360,15 +419,23 @@ impl UpdateRule for ExactAveraging {
                     .count();
                 bus.charge_broadcast(i, delivered, bits);
             }
+            if ctx.fault.corrupt_p > 0.0 {
+                for &to in &ctx.mixing.topology.neighbors[i] {
+                    if ctx.link.delivers(i, to, ctx.t) && ctx.fault.corrupts(i, to, ctx.t) {
+                        out.corrupt += 1;
+                    }
+                }
+            }
         }
 
-        // mixed_i = w_ii x_i + Σ_j w_ij x_j (self-substituted on loss) —
-        // each row reads the immutable parameter bank and writes only its
-        // own buffer, so rows fan out on the pool.
+        // mixed_i = w_ii x_i + Σ_j w_ij x_j (self-substituted on loss or
+        // corruption) — each row reads the immutable parameter bank and
+        // writes only its own buffer, so rows fan out on the pool.
         let nodes_ref: &[NodeState] = &*nodes;
         let mixing = ctx.mixing;
         let link = ctx.link;
-        let ideal = ctx.link.is_ideal();
+        let fault = ctx.fault;
+        let clean = ctx.link.is_ideal() && ctx.fault.corrupt_p == 0.0;
         let t = ctx.t;
         ctx.pool.for_each_mut(&mut self.mixed, |i, row| {
             let wii = mixing.weight(i, i) as f32;
@@ -377,7 +444,9 @@ impl UpdateRule for ExactAveraging {
             }
             for &j in &mixing.topology.neighbors[i] {
                 let w = mixing.weight(i, j) as f32;
-                let src = if ideal || (nodes_ref[j].fired && link.delivers(j, i, t)) {
+                let landed = clean
+                    || (nodes_ref[j].fired && link.delivers(j, i, t) && !fault.corrupts(j, i, t));
+                let src = if landed {
                     &nodes_ref[j].x
                 } else {
                     &nodes_ref[i].x
@@ -389,11 +458,14 @@ impl UpdateRule for ExactAveraging {
         });
 
         // Commit: x_i = mixed_i − η·(momentum-adjusted gradient) —
-        // per-node independent, parallel.
+        // per-node independent, parallel. Crashed nodes stay frozen.
         let eta = ctx.eta as f32;
         let momentum = ctx.momentum;
         let mixed = &self.mixed;
         ctx.pool.for_each_mut(nodes, |i, node| {
+            if ctx.down[i] {
+                return;
+            }
             match node.momentum.as_mut() {
                 Some(m) => {
                     for ((x, mi), (g, mix)) in node
@@ -417,7 +489,7 @@ impl UpdateRule for ExactAveraging {
                 }
             }
         });
-        transmitted
+        out
     }
 
     fn rebuild(&mut self, _mixing: &MixingMatrix, _bus: &mut Bus) {
@@ -466,6 +538,23 @@ pub struct DecentralizedEngine {
     compressor: Box<dyn Compressor>,
     link: LinkModel,
     schedule: TopologySchedule,
+    /// The fault plan in force (default: [`FaultPlan::ideal`]).
+    fault: FaultPlan,
+    /// Per-node crash mask for the current step (all-false when ideal).
+    down: Vec<bool>,
+    /// The fault windows active at the last transition check, as
+    /// (crash indices, partition indices) — the live subgraph can only
+    /// change when this value does.
+    fault_active: (Vec<usize>, Vec<usize>),
+    /// The live-subgraph mixing matrix while outage windows are open
+    /// (`None` ⇒ the base matrix is in force).
+    effective: Option<MixingMatrix>,
+    /// Per directed base edge (receiver-major, n×n flat): sync rounds
+    /// since the receiver last got a fresh copy from that sender. Sized
+    /// only under a non-ideal fault plan.
+    stale: Vec<u64>,
+    /// Cumulative crash / resync / corrupt-discard counters.
+    counters: FaultCounters,
     nodes: Vec<NodeState>,
     /// Worker pool for the per-node phases (workers = 1 ⇒ sequential;
     /// results are bit-identical for any worker count).
@@ -501,6 +590,12 @@ impl DecentralizedEngine {
             compressor: cfg.compressor,
             link: LinkModel::ideal(),
             schedule: TopologySchedule::fixed(),
+            fault: FaultPlan::ideal(),
+            down: vec![false; n],
+            fault_active: (Vec::new(), Vec::new()),
+            effective: None,
+            stale: Vec::new(),
+            counters: FaultCounters::default(),
             nodes,
             pool: ThreadPool::new(1),
             spectral,
@@ -520,6 +615,93 @@ impl DecentralizedEngine {
     /// does this); switches take effect at subsequent sync indices.
     pub fn set_topology_schedule(&mut self, schedule: TopologySchedule) {
         self.schedule = schedule;
+    }
+
+    /// Install a fault plan (default: [`FaultPlan::ideal`]). Crash and
+    /// partition windows prune the mixing matrix in force; per-copy
+    /// corruption is applied at broadcast time by the update rules.
+    pub fn set_fault_plan(&mut self, fault: FaultPlan) {
+        let n = self.mixing.n();
+        self.stale = if fault.is_ideal() {
+            Vec::new()
+        } else {
+            vec![0; n * n]
+        };
+        self.fault = fault;
+    }
+
+    /// The most rounds any live directed base edge has gone without a
+    /// fresh copy (0 ⇒ everything fresh, or no fault plan installed).
+    /// Deliberately not checkpointed: it is a diagnostic, not state.
+    pub fn max_staleness(&self) -> u64 {
+        self.stale.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Detect fault-window transitions at step `t`. On a change: update
+    /// the crash mask, re-derive the live-subgraph matrix, charge the
+    /// recovery resync for every *regained* directed edge (a rejoined
+    /// node restores from its frozen state and then re-exchanges
+    /// full-precision x̂ with each live neighbor, exactly like a topology
+    /// switch — recovery is never free), and silently refresh the rule's
+    /// neighbor state on the new live subgraph. Losing edges (a window
+    /// opening) charges nothing: going dark is free, coming back isn't.
+    fn fault_transition(&mut self, t: u64, bus: &mut Bus) {
+        let active = self.fault.active(t);
+        if active == self.fault_active {
+            return;
+        }
+        let n = self.mixing.n();
+        let mut down = vec![false; n];
+        self.fault.down_mask_into(t, &mut down);
+        for i in 0..n {
+            if down[i] && !self.down[i] {
+                self.counters.crashes += 1;
+            }
+        }
+        let eff = effective_mixing(&self.mixing, &self.fault, &down, t);
+        let d = self.nodes.first().map(|nd| nd.x.len()).unwrap_or(0);
+        let prev = self.effective.as_ref().unwrap_or(&self.mixing);
+        for i in 0..n {
+            let gained = eff.topology.neighbors[i]
+                .iter()
+                .filter(|j| !prev.topology.neighbors[i].contains(j))
+                .count();
+            if gained > 0 {
+                bus.charge_broadcast(i, gained, 32 * d as u64);
+                self.counters.resyncs += 1;
+            }
+        }
+        self.rule.refresh(&eff);
+        self.effective = if active.0.is_empty() && active.1.is_empty() {
+            None
+        } else {
+            Some(eff)
+        };
+        self.down = down;
+        self.fault_active = active;
+    }
+
+    /// Age per-edge staleness after a sync round: a directed base edge
+    /// (sender j → receiver i) is fresh only when the copy actually
+    /// landed — sender fired, both endpoints up, no severing partition,
+    /// the link delivered, and the frame survived its checksum.
+    fn update_staleness(&mut self, t: u64) {
+        let n = self.mixing.n();
+        for i in 0..n {
+            for &j in &self.mixing.topology.neighbors[i] {
+                let fresh = self.nodes[j].fired
+                    && !self.down[i]
+                    && !self.down[j]
+                    && !self.fault.severed(i, j, t)
+                    && self.link.delivers(j, i, t)
+                    && !self.fault.corrupts(j, i, t);
+                if fresh {
+                    self.stale[i * n + j] = 0;
+                } else {
+                    self.stale[i * n + j] += 1;
+                }
+            }
+        }
     }
 
     /// Set all nodes to the same initial parameters.
@@ -556,18 +738,64 @@ impl DecentralizedEngine {
     }
 }
 
+/// The live-subgraph mixing matrix under a fault plan at `t`: base edges
+/// with a crashed endpoint or a severing partition are pruned and their
+/// weight folded back onto the diagonal (w_ii = 1 − Σ live w_ij), which
+/// keeps W symmetric and doubly stochastic — a down node degenerates to
+/// an identity row. Gossip on the result is exactly gossip among the
+/// live, mutually reachable nodes.
+fn effective_mixing(
+    base: &MixingMatrix,
+    fault: &FaultPlan,
+    down: &[bool],
+    t: u64,
+) -> MixingMatrix {
+    let n = base.n();
+    let mut w = Matrix::zeros(n, n);
+    let mut neighbors = vec![Vec::new(); n];
+    for i in 0..n {
+        let mut live_sum = 0.0;
+        for &j in &base.topology.neighbors[i] {
+            if down[i] || down[j] || fault.severed(i, j, t) {
+                continue;
+            }
+            let wij = base.weight(i, j);
+            w[(i, j)] = wij;
+            live_sum += wij;
+            neighbors[i].push(j);
+        }
+        w[(i, i)] = 1.0 - live_sum;
+    }
+    MixingMatrix {
+        w,
+        topology: Topology {
+            n,
+            kind: base.topology.kind,
+            neighbors,
+        },
+    }
+}
+
 impl DecentralizedAlgo for DecentralizedEngine {
     fn step(&mut self, t: u64, src: &mut dyn GradientSource, bus: &mut Bus) {
         let eta64 = self.lr.eta(t);
         let half = self.rule.local_half_step();
         let sync = self.comm.is_sync(t);
 
-        // Gradient (+ optional local half-step), every node — parallel
-        // when the source supports shared-state evaluation. Rules without
-        // a standing half-step (exact averaging applies the gradient
-        // after mixing) still take it on non-sync rounds: the composition
-        // Triggered + ExactAveraging is local SGD between periodic exact
-        // exchanges, and the step runs on the pool like everything else.
+        // Fault-window transitions take effect before anything else: a
+        // node crashing at t is dark for all of step t, and a node
+        // rejoining at t pays its resync before it gossips again.
+        if self.fault.has_outages() {
+            self.fault_transition(t, bus);
+        }
+
+        // Gradient (+ optional local half-step), every live node —
+        // parallel when the source supports shared-state evaluation.
+        // Rules without a standing half-step (exact averaging applies the
+        // gradient after mixing) still take it on non-sync rounds: the
+        // composition Triggered + ExactAveraging is local SGD between
+        // periodic exact exchanges, and the step runs on the pool like
+        // everything else.
         gradient_phase(
             &self.pool,
             &mut self.nodes,
@@ -577,6 +805,7 @@ impl DecentralizedAlgo for DecentralizedEngine {
             } else {
                 None
             },
+            &self.down,
         );
 
         if sync {
@@ -587,25 +816,44 @@ impl DecentralizedAlgo for DecentralizedEngine {
                 self.mixing = mixing;
                 self.rule.rebuild(&self.mixing, bus);
                 self.spectral = OnceCell::new();
+                // The schedule swapped the base matrix mid-outage:
+                // re-prune it for the live subgraph. The rebuild above
+                // already paid a full resync, so this refresh is silent.
+                if self.effective.is_some() {
+                    let eff = effective_mixing(&self.mixing, &self.fault, &self.down, t);
+                    self.rule.refresh(&eff);
+                    self.effective = Some(eff);
+                }
             }
             let ctx = SyncCtx {
                 t,
                 eta: eta64,
                 gamma: self.gamma as f32,
                 momentum: self.momentum,
-                mixing: &self.mixing,
+                mixing: self.effective.as_ref().unwrap_or(&self.mixing),
                 comm: &*self.comm,
                 compressor: &*self.compressor,
                 link: &self.link,
+                fault: &self.fault,
+                down: &self.down,
                 pool: &self.pool,
             };
-            let fired = self.rule.sync_round(&ctx, &mut self.nodes, bus);
-            self.total_checks += self.nodes.len() as u64;
-            self.total_fired += fired as u64;
-            self.fired_last = fired;
+            let out = self.rule.sync_round(&ctx, &mut self.nodes, bus);
+            let live = self.down.iter().filter(|&&dn| !dn).count();
+            self.total_checks += live as u64;
+            self.total_fired += out.fired as u64;
+            self.counters.corrupt_discards += out.corrupt;
+            self.fired_last = out.fired;
+            if !self.fault.is_ideal() {
+                self.update_staleness(t);
+            }
         } else {
-            // Commit the local step only (buffer swap, no copy).
-            for node in self.nodes.iter_mut() {
+            // Commit the local step only (buffer swap, no copy); crashed
+            // nodes hold a stale x_half and stay frozen.
+            for (i, node) in self.nodes.iter_mut().enumerate() {
+                if self.down[i] {
+                    continue;
+                }
                 std::mem::swap(&mut node.x, &mut node.x_half);
             }
             self.fired_last = 0;
@@ -644,7 +892,11 @@ impl DecentralizedAlgo for DecentralizedEngine {
     }
 
     fn restore_estimates(&mut self, xhat: &[Vec<f32>], acc: &[Vec<f32>]) {
-        self.rule.restore_bank(xhat, acc, &self.mixing);
+        // Under an open outage window the accumulator's edge structure
+        // must match the live subgraph the snapshot was taken on, not the
+        // base matrix (prepare_resume replays the fault state first).
+        let mixing = self.effective.as_ref().unwrap_or(&self.mixing);
+        self.rule.restore_bank(xhat, acc, mixing);
     }
 
     fn rng_state(&self, node: usize) -> Option<[u64; 4]> {
@@ -679,6 +931,25 @@ impl DecentralizedAlgo for DecentralizedEngine {
             self.mixing = m;
             self.spectral = OnceCell::new();
         }
+        // Replay the fault state to just before t0 the same way — no
+        // charges, no counter bumps (those are in the checkpoint). step(t0)
+        // then prices exactly the transition the uninterrupted run would
+        // have: a window opening or closing *at* t0 is t0's work.
+        if !self.fault.is_ideal() && t0 > 0 {
+            let t_last = t0 - 1;
+            self.fault_active = self.fault.active(t_last);
+            self.fault.down_mask_into(t_last, &mut self.down);
+            self.effective = if self.fault_active.0.is_empty() && self.fault_active.1.is_empty() {
+                None
+            } else {
+                Some(effective_mixing(
+                    &self.mixing,
+                    &self.fault,
+                    &self.down,
+                    t_last,
+                ))
+            };
+        }
     }
 
     fn set_workers(&mut self, workers: usize) {
@@ -691,6 +962,14 @@ impl DecentralizedAlgo for DecentralizedEngine {
 
     fn last_fired(&self) -> usize {
         self.fired_last
+    }
+
+    fn fault_counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    fn set_fault_counters(&mut self, counters: FaultCounters) {
+        self.counters = counters;
     }
 
     fn fired_stats(&self) -> (u64, u64) {
@@ -1100,5 +1379,113 @@ mod tests {
         algo.step(0, &mut prob, &mut bus);
         // 6 nodes × 2 neighbors × 32·20 bits
         assert_eq!(bus.total_bits, 6 * 2 * 32 * 20);
+    }
+
+    #[test]
+    fn crash_rejoin_resync_is_charged_on_the_bus() {
+        // Going dark is free; coming back is not. With an impossible
+        // trigger the only traffic in the run is the rejoin resync:
+        // node 3 regains its 2 ring edges and each ring neighbor regains
+        // 1, so 4 directed copies of a full-precision x̂ cross the bus.
+        let (mut algo, mut prob, mut bus) = mk(
+            16,
+            16,
+            Box::new(SignTopK::new(4)),
+            ThresholdSchedule::Constant(1e12), // nobody ever fires
+            1,
+        );
+        algo.set_fault_plan(FaultPlan::parse("crash:3:2:8", 1).unwrap());
+        for t in 0..11 {
+            algo.step(t, &mut prob, &mut bus);
+            if t < 8 {
+                assert_eq!(bus.total_bits, 0, "crash itself must cost nothing (t={t})");
+            }
+        }
+        assert_eq!(bus.total_bits, 4 * 32 * 16);
+        let c = algo.fault_counters();
+        assert_eq!(c.crashes, 1);
+        assert_eq!(c.resyncs, 3);
+        assert_eq!(c.corrupt_discards, 0);
+    }
+
+    #[test]
+    fn crashed_node_is_frozen_and_dark() {
+        let (mut algo, mut prob, mut bus) =
+            mk(8, 16, Box::new(SignTopK::new(4)), ThresholdSchedule::Zero, 1);
+        algo.set_fault_plan(FaultPlan::parse("crash:2:3:100", 1).unwrap());
+        let mut frozen = Vec::new();
+        let mut bits_at_crash = 0;
+        for t in 0..10 {
+            algo.step(t, &mut prob, &mut bus);
+            if t == 2 {
+                frozen = algo.params(2).to_vec();
+                bits_at_crash = bus.node_bits[2];
+            }
+            if t > 2 {
+                assert_eq!(algo.params(2), &frozen[..], "params moved while down (t={t})");
+                assert_eq!(bus.node_bits[2], bits_at_crash, "down node paid bits (t={t})");
+            }
+        }
+        // Down nodes are not trigger-checked: 3 rounds × 8 live + 7 × 7.
+        assert_eq!(algo.total_checks, 3 * 8 + 7 * 7);
+        // Node 2's edges went 7 sync rounds without a fresh copy.
+        assert_eq!(algo.max_staleness(), 7);
+    }
+
+    #[test]
+    fn chaos_is_bit_identical_across_worker_counts() {
+        // Crash + partition + corruption composed with a lossy link:
+        // every cross-node effect is a pure schedule or a stateless
+        // hashed coin, so the trajectory, the bus, and the fault tally
+        // are invariant under the pool's thread interleaving.
+        let run = |workers: usize| {
+            let (mut algo, mut prob, mut bus) =
+                mk(8, 16, Box::new(SignTopK::new(4)), ThresholdSchedule::Zero, 1);
+            algo.set_link(LinkModel::parse("drop:0.2", 5).unwrap());
+            algo.set_fault_plan(
+                FaultPlan::parse("crash:1:5:20+partition:10:30:0-3|4-7+corrupt:0.1", 7).unwrap(),
+            );
+            algo.set_workers(workers);
+            for t in 0..40 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            let params: Vec<Vec<f32>> = (0..8).map(|i| algo.params(i).to_vec()).collect();
+            (params, bus.total_bits, algo.fault_counters(), algo.total_fired)
+        };
+        let (p1, b1, c1, f1) = run(1);
+        let (p8, b8, c8, f8) = run(8);
+        assert_eq!(p1, p8);
+        assert_eq!(b1, b8);
+        assert_eq!(c1, c8);
+        assert_eq!(f1, f8);
+        // and the plan actually did things
+        assert_eq!(c1.crashes, 1);
+        assert!(c1.resyncs > 0);
+        assert!(c1.corrupt_discards > 0);
+    }
+
+    #[test]
+    fn corrupt_copies_are_charged_but_discarded() {
+        // A corrupted copy consumed the link, so it costs exactly what a
+        // delivered copy costs — the bus tally matches the fault-free
+        // run — but the receiver's checksum rejects it, so the consensus
+        // trajectory diverges.
+        let run = |spec: &str| {
+            let (mut algo, mut prob, mut bus) =
+                mk(6, 12, Box::new(SignTopK::new(3)), ThresholdSchedule::Zero, 1);
+            algo.set_fault_plan(FaultPlan::parse(spec, 11).unwrap());
+            for t in 0..30 {
+                algo.step(t, &mut prob, &mut bus);
+            }
+            let params = algo.params(0).to_vec();
+            (params, bus.total_bits, algo.fault_counters())
+        };
+        let (clean_params, clean_bits, clean_c) = run("none");
+        let (noisy_params, noisy_bits, noisy_c) = run("corrupt:0.4");
+        assert_eq!(clean_bits, noisy_bits, "corrupt copies must still be charged");
+        assert!(clean_c.is_zero());
+        assert!(noisy_c.corrupt_discards > 0);
+        assert_eq!(noisy_c.crashes, 0);
+        assert_ne!(clean_params, noisy_params, "discards must affect consensus");
     }
 }

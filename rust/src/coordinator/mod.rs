@@ -44,12 +44,12 @@ pub mod choco;
 pub mod vanilla;
 pub mod runner;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, RestoreError};
 pub use choco::ChocoSgd;
 pub use consensus::NeighborAccumulator;
 pub use engine::{
     AlwaysComm, CommPolicy, DecentralizedEngine, EngineConfig, EstimateTracking,
-    ExactAveraging, SyncCtx, Triggered, UpdateRule,
+    ExactAveraging, SyncCtx, SyncOutcome, Triggered, UpdateRule,
 };
 pub use runner::{run, RunOptions};
 pub use sparq::{SparqConfig, SparqSgd};
@@ -64,16 +64,23 @@ use crate::util::threadpool::ThreadPool;
 /// Runs on the pool when the source exposes a `Sync` shared-state handle
 /// (`GradientSource::shared` — thread-safety is enforced by the type
 /// system, no unsafe involved); per-node RNG streams make the result
-/// identical either way.
+/// identical either way. Nodes flagged in `down` (a crashed node under a
+/// fault plan — `comm::fault`) compute nothing: their parameters, RNG
+/// streams, and buffers are frozen exactly as they were when the crash
+/// window opened.
 pub(crate) fn gradient_phase(
     pool: &ThreadPool,
     nodes: &mut [node::NodeState],
     src: &mut dyn GradientSource,
     local_step: Option<(f32, f32)>,
+    down: &[bool],
 ) {
     if pool.workers > 1 {
         if let Some(shared) = src.shared() {
             pool.for_each_mut(nodes, |i, node| {
+                if down[i] {
+                    return;
+                }
                 let x = std::mem::take(&mut node.x);
                 shared.grad_shared(i, &x, &mut node.rng, &mut node.grad);
                 node.x = x;
@@ -85,6 +92,9 @@ pub(crate) fn gradient_phase(
         }
     }
     for (i, node) in nodes.iter_mut().enumerate() {
+        if down[i] {
+            continue;
+        }
         let x = std::mem::take(&mut node.x);
         src.grad(i, &x, &mut node.rng, &mut node.grad);
         node.x = x;
@@ -202,6 +212,17 @@ pub trait DecentralizedAlgo {
         0
     }
 
+    /// Cumulative fault bookkeeping (crashes, rejoin resyncs, corrupt
+    /// discards), when the algorithm runs under a fault plan
+    /// (`comm::fault`). Zero for algorithms without fault support.
+    fn fault_counters(&self) -> crate::comm::FaultCounters {
+        crate::comm::FaultCounters::default()
+    }
+
+    /// Restore cumulative fault counters from a checkpoint (no-op for
+    /// algorithms without fault support).
+    fn set_fault_counters(&mut self, _counters: crate::comm::FaultCounters) {}
+
     /// Cumulative (transmitted, opportunities) statistics, when tracked —
     /// `fired / checks` is the transmit rate the robustness sweeps
     /// report. "Opportunities" counts n per sync round; for trigger-free
@@ -274,6 +295,12 @@ macro_rules! forward_decentralized_algo {
         }
         fn last_fired(&self) -> usize {
             (**self).last_fired()
+        }
+        fn fault_counters(&self) -> crate::comm::FaultCounters {
+            (**self).fault_counters()
+        }
+        fn set_fault_counters(&mut self, counters: crate::comm::FaultCounters) {
+            (**self).set_fault_counters(counters)
         }
         fn fired_stats(&self) -> (u64, u64) {
             (**self).fired_stats()

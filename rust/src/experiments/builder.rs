@@ -201,6 +201,7 @@ pub fn build_algo_resolved(
     };
     engine.set_link(link);
     engine.set_topology_schedule(schedule);
+    engine.set_fault_plan(resolved.fault.clone());
     Box::new(engine)
 }
 

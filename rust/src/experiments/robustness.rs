@@ -15,7 +15,18 @@
 //! static topologies, checking that mid-run re-wiring (with the
 //! consensus accumulator rebuilt at each switch) is no worse than the
 //! weaker static graph.
+//!
+//! The chaos sweep (`sparq chaos`, EXPERIMENTS.md §Chaos) runs seeded
+//! fault plans — node crash/rejoin windows, partitions, payload
+//! corruption — against a fault-free baseline on the same workload and
+//! seed, reporting each plan's degradation (final loss relative to the
+//! baseline) next to its fault counters (crashes, rejoin resyncs,
+//! corrupt copies discarded at the receiver's checksum). Plans are
+//! deterministic schedules plus stateless per-(edge, round) corruption
+//! coins, so every row is bit-for-bit reproducible for any worker
+//! budget.
 
+use crate::comm::FaultCounters;
 use crate::config::{Algo, ExperimentConfig};
 use crate::metrics::Series;
 use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
@@ -148,6 +159,116 @@ pub fn switch_sweep(
     run_scenarios(configs, workers)
 }
 
+/// One fault-plan measurement from the chaos sweep.
+#[derive(Clone, Debug)]
+pub struct ChaosPoint {
+    pub label: String,
+    /// The fault-plan spec this run executed ("none" for the baseline).
+    pub plan: String,
+    pub final_loss: f64,
+    pub consensus: f64,
+    pub total_bits: u64,
+    pub transmit_rate: f64,
+    /// Fault totals (all zero for the baseline).
+    pub fault: FaultCounters,
+    /// Final loss over the fault-free baseline's (1.0 = no degradation).
+    pub loss_ratio: f64,
+}
+
+/// Chaos grid: the fault-free baseline plus one run per fault plan,
+/// identical workload and seed throughout, on the sweep engine under
+/// the given worker budget (results identical for any budget). Returns
+/// an error for an unparsable plan or one the base config rejects
+/// (node index out of range, activation past the horizon).
+pub fn chaos_sweep(
+    steps: u64,
+    seed: u64,
+    plans: &[&str],
+    workers: usize,
+) -> Result<(Vec<ChaosPoint>, Vec<Series>), String> {
+    let mut base = base_cfg(steps, seed);
+    base.name = "chaos-baseline".into();
+    let mut configs = vec![base];
+    let mut specs = vec!["none".to_string()];
+    for (i, plan) in plans.iter().enumerate() {
+        let mut cfg = base_cfg(steps, seed);
+        cfg.fault = plan.parse().map_err(|e| format!("plan {plan:?}: {e}"))?;
+        cfg.name = format!("chaos-{i}");
+        configs.push(cfg);
+        specs.push(plan.to_string());
+    }
+    let cache = ArtifactCache::new();
+    let runs: Vec<(String, ExperimentConfig)> = configs
+        .into_iter()
+        .map(|cfg| (cfg.name.clone(), cfg))
+        .collect();
+    let opts = SweepOptions {
+        workers,
+        ..Default::default()
+    };
+    let report = run_configs(runs, &opts, &cache)?;
+    let baseline_loss = report.outcomes[0]
+        .series
+        .records
+        .last()
+        .ok_or("baseline produced no records")?
+        .loss;
+    let mut points = Vec::with_capacity(report.outcomes.len());
+    let mut series = Vec::with_capacity(report.outcomes.len());
+    for (o, plan) in report.outcomes.into_iter().zip(specs) {
+        let last = o.series.records.last().ok_or("run produced no records")?;
+        points.push(ChaosPoint {
+            label: o.cfg.name.clone(),
+            plan,
+            final_loss: last.loss,
+            consensus: last.consensus,
+            total_bits: last.bits,
+            transmit_rate: o.fired as f64 / o.checks.max(1) as f64,
+            fault: o.fault,
+            loss_ratio: if baseline_loss > 0.0 {
+                last.loss / baseline_loss
+            } else {
+                f64::NAN
+            },
+        });
+        series.push(o.series);
+    }
+    Ok((points, series))
+}
+
+/// Formatted chaos comparison: degradation vs baseline next to the
+/// fault counters, plan spec last (it can be long).
+pub fn chaos_table(points: &[ChaosPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>10} {:>14} {:>8} {:>6} {:>7} {:>8}  {}\n",
+        "scenario",
+        "final loss",
+        "×baseline",
+        "bits",
+        "tx rate",
+        "crash",
+        "resync",
+        "corrupt",
+        "plan"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:<16} {:>12.5} {:>10.3} {:>14} {:>7.1}% {:>6} {:>7} {:>8}  {}\n",
+            p.label,
+            p.final_loss,
+            p.loss_ratio,
+            p.total_bits,
+            100.0 * p.transmit_rate,
+            p.fault.crashes,
+            p.fault.resyncs,
+            p.fault.corrupt_discards,
+            p.plan
+        ));
+    }
+    out
+}
+
 /// Formatted comparison table.
 pub fn table(points: &[RobustnessPoint]) -> String {
     let mut out = String::new();
@@ -202,6 +323,40 @@ mod tests {
             .find(|pt| pt.algo == Algo::Sparq && pt.drop_p == 0.0)
             .unwrap();
         assert!(sparq.transmit_rate < 1.0);
+    }
+
+    #[test]
+    fn chaos_sweep_counts_faults_and_degrades_gracefully() {
+        // 16-node base config: crash node 3 for 80 rounds, then a
+        // separate run with 5% payload corruption (workers = 2 also
+        // exercises run-level concurrency under faults)
+        let plans = ["crash:3:40:120", "corrupt:0.05"];
+        let (points, series) = chaos_sweep(300, 9, &plans, 2).unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(series.len(), 3);
+        // baseline row: fault-free, ratio exactly 1
+        assert!(points[0].fault.is_zero());
+        assert!((points[0].loss_ratio - 1.0).abs() < 1e-12);
+        // crash plan: one crash, rejoin resyncs, no corrupt discards
+        assert_eq!(points[1].fault.crashes, 1);
+        assert!(points[1].fault.resyncs >= 1);
+        assert_eq!(points[1].fault.corrupt_discards, 0);
+        // corrupt plan: discards counted, nobody crashed
+        assert!(points[2].fault.corrupt_discards > 0);
+        assert_eq!(points[2].fault.crashes, 0);
+        // graceful degradation: every scenario still optimizes
+        for s in &series {
+            let first = &s.records[0];
+            let last = s.records.last().unwrap();
+            assert!(last.loss < first.loss, "{}: no progress", s.label);
+        }
+        // the table carries the counters and the plan spec
+        let t = chaos_table(&points);
+        assert!(t.contains("chaos-baseline"), "{t}");
+        assert!(t.contains("crash:3:40:120"), "{t}");
+        // bad plans surface as errors, not panics
+        assert!(chaos_sweep(300, 9, &["crash:3:40"], 1).is_err());
+        assert!(chaos_sweep(300, 9, &["crash:99:40:120"], 1).is_err());
     }
 
     #[test]

@@ -23,6 +23,9 @@
 //!   ablate   --knob h|c0|k|gamma|all            Remark-1 knob sweeps
 //!   robustness --steps 2000 --out results/      lossy links + switching
 //!                                               topologies sweep
+//!   chaos    --plans p1;p2 --steps 2000         seeded fault plans (crash/
+//!            [--seed S --workers N --out D]     partition/corrupt) vs the
+//!                                               fault-free baseline
 //!   perfgate --measured bench.json              CI perf regression gate
 //!            [--baseline BENCH_....json         vs the committed snapshot
 //!             --max-regress 0.15]
@@ -42,6 +45,7 @@
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
 //!   sparq robustness --steps 2000 --drops 0.0,0.1,0.3
+//!   sparq chaos --plans "crash:3:500:1200;corrupt:0.01" --steps 2000
 
 use sparq::config::{Algo, ExperimentConfig};
 use sparq::experiments::{fig1, run_config};
@@ -59,12 +63,13 @@ fn main() {
         Some("spectral") => cmd_spectral(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("robustness") => cmd_robustness(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("perfgate") => cmd_perfgate(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|sweep report|sweep status|check|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|perfgate|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|sweep status|check|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -494,6 +499,34 @@ fn cmd_robustness(args: &Args) {
     let (points, switch_series) = robustness::switch_sweep(steps, seed, workers);
     println!("{}", robustness::table(&points));
     series.extend(switch_series);
+    write_series(&series, args.get("out"));
+}
+
+fn cmd_chaos(args: &Args) {
+    use sparq::experiments::robustness;
+    let steps = args.u64("steps", 2000);
+    let seed = args.u64("seed", 42);
+    let workers = args.usize("workers", 0);
+    let plans_raw = args.get_or(
+        "plans",
+        "crash:3:500:1200;partition:800:1400:0-7|8-15;corrupt:0.01",
+    );
+    let plans: Vec<&str> = plans_raw
+        .split(';')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if plans.is_empty() {
+        eprintln!("chaos requires at least one plan in --plans (';'-separated fault specs)");
+        std::process::exit(2);
+    }
+    println!("-- chaos: seeded fault plans vs fault-free baseline (n=16 ring) --");
+    let (points, series) =
+        robustness::chaos_sweep(steps, seed, &plans, workers).unwrap_or_else(|e| {
+            eprintln!("chaos error: {e}");
+            std::process::exit(2);
+        });
+    println!("{}", robustness::chaos_table(&points));
     write_series(&series, args.get("out"));
 }
 

@@ -310,12 +310,19 @@ impl<A: DecentralizedAlgo, P: GradientSource> Run<A, P> {
     }
 
     /// Restore a snapshot (bit-for-bit resume) together with the series
-    /// evaluated up to it.
-    pub fn restore(&mut self, ck: &Checkpoint, series: Series) {
-        checkpoint::restore(&mut self.algo, ck);
+    /// evaluated up to it. A snapshot that does not fit this run (wrong
+    /// node count, dimension, or algorithm) is rejected with a
+    /// [`checkpoint::RestoreError`] and the run is left untouched.
+    pub fn restore(
+        &mut self,
+        ck: &Checkpoint,
+        series: Series,
+    ) -> Result<(), checkpoint::RestoreError> {
+        checkpoint::restore(&mut self.algo, ck)?;
         checkpoint::restore_bus(&mut self.bus, ck);
         self.series = series;
         self.t = ck.t;
+        Ok(())
     }
 
     fn emit(&self, event: RunEvent) {
@@ -465,10 +472,35 @@ mod tests {
         let partial = first.series().clone();
 
         let mut second = Run::from_resolved(&resolved, None, 1);
-        second.restore(&ck, partial);
+        second.restore(&ck, partial).unwrap();
         assert_eq!(second.t(), 60);
         second.drive(&mut NoObserver).unwrap();
         assert_eq!(second.series().to_csv(), full.series().to_csv());
+    }
+
+    #[test]
+    fn mismatched_snapshot_is_rejected_and_run_left_untouched() {
+        let resolved = quick_cfg().resolve().unwrap();
+        let mut donor = Run::from_resolved(&resolved, None, 1);
+        donor.eval();
+        for _ in 0..40 {
+            donor.step();
+        }
+        let ck = donor.snapshot();
+
+        // A run with a different node count must refuse the snapshot
+        // (the old behavior was a panic deep in the restore path).
+        let mut other_cfg = quick_cfg();
+        other_cfg.nodes = 4;
+        let other = other_cfg.resolve().unwrap();
+        let mut run = Run::from_resolved(&other, None, 1);
+        let err = run.restore(&ck, donor.series().clone()).unwrap_err();
+        assert_eq!(err.field, "nodes");
+        assert!(err.to_string().contains("run expects 4"), "{err}");
+        // ...and the refused run still drives from scratch, unpoisoned.
+        assert_eq!(run.t(), 0);
+        run.run_to_end().unwrap();
+        assert_eq!(run.series().records.last().unwrap().t, 120);
     }
 
     #[test]

@@ -29,10 +29,11 @@ use std::fmt::Write as _;
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use crate::comm::FaultCounters;
 use crate::metrics::{RoundRecord, Series};
 use crate::util::json::Json;
 
-use super::runner::{parse_truncated, EarlyStop};
+use super::runner::{parse_fault, parse_truncated, EarlyStop};
 
 /// Which record field a target applies to.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -66,6 +67,8 @@ pub struct ReportRun {
     pub algo: String,
     pub fired: u64,
     pub checks: u64,
+    /// Fault-plan event totals (all zero unless the run's plan fired).
+    pub fault: FaultCounters,
     /// Early-stop truncation recorded by the runner, if any.
     pub truncated: Option<EarlyStop>,
     pub series: Series,
@@ -132,6 +135,7 @@ pub fn load(out: &Path) -> Result<Vec<ReportRun>, String> {
             algo: s("algo", ""),
             fired: u("fired"),
             checks: u("checks"),
+            fault: parse_fault(&j),
             truncated: parse_truncated(&j),
             series,
             label,
@@ -187,6 +191,15 @@ pub fn savings_table(runs: &[ReportRun], metric: TargetMetric, target: f64) -> S
                 run.label, "-", "(not reached)", "-", tx
             ),
         };
+        // Chaos runs annotate their fault totals; fault-free lines are
+        // unchanged (the golden fixture pins them byte-for-byte).
+        if !run.fault.is_zero() {
+            let _ = write!(
+                line,
+                "  faults crash={} resync={} corrupt={}",
+                run.fault.crashes, run.fault.resyncs, run.fault.corrupt_discards
+            );
+        }
         if let Some(stop) = &run.truncated {
             let _ = write!(line, "  early-stop t={} ({})", stop.t, stop.reason);
         }
@@ -269,6 +282,7 @@ mod tests {
             algo: "sparq".into(),
             fired: 1,
             checks: 4,
+            fault: FaultCounters::default(),
             truncated: None,
             series,
         }
@@ -295,6 +309,26 @@ mod tests {
         let runs = vec![run("nan", &[(0, f64::NAN, f64::NAN, 0, 0)])];
         let table = savings_table(&runs, TargetMetric::Loss, 10.0);
         assert!(table.contains("(not reached)"), "{table}");
+    }
+
+    #[test]
+    fn fault_totals_annotate_only_chaos_lines() {
+        let mut chaos = run("chaos", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 100, 5)]);
+        chaos.fault = FaultCounters {
+            crashes: 2,
+            resyncs: 3,
+            corrupt_discards: 17,
+        };
+        let clean = run("clean", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 100, 5)]);
+        let table = savings_table(&[chaos, clean], TargetMetric::TestError, 0.1);
+        let lines: Vec<&str> = table.lines().collect();
+        let chaos_line = lines.iter().find(|l| l.starts_with("chaos")).unwrap();
+        assert!(
+            chaos_line.ends_with("faults crash=2 resync=3 corrupt=17"),
+            "{table}"
+        );
+        let clean_line = lines.iter().find(|l| l.starts_with("clean")).unwrap();
+        assert!(!clean_line.contains("faults"), "{table}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::comm::FaultCounters;
 use crate::config::ExperimentConfig;
 use crate::coordinator::Checkpoint;
 use crate::metrics::{float_json, json_f64_lossy, RoundRecord, Series};
@@ -181,6 +182,8 @@ pub struct RunOutcome {
     pub fired: u64,
     pub checks: u64,
     pub wall_ms: u64,
+    /// Fault-plan event totals (all zero on fault-free runs).
+    pub fault: FaultCounters,
     /// True when the run was satisfied from a stored result (resume).
     pub skipped: bool,
     /// False only for fault-aborted/abandoned runs (no result recorded).
@@ -493,10 +496,25 @@ pub(crate) fn load_completed(
         fired: u("fired"),
         checks: u("checks"),
         wall_ms: u("wall_ms"),
+        fault: parse_fault(record),
         skipped: true,
         completed: true,
         stopped: parse_truncated(record),
     })
+}
+
+/// Fault counters from a stored record (`"fault"` is written only for
+/// runs whose plan actually fired — absence means all-zero).
+pub(crate) fn parse_fault(record: &Json) -> FaultCounters {
+    let Some(fj) = record.get("fault") else {
+        return FaultCounters::default();
+    };
+    let u = |k: &str| fj.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    FaultCounters {
+        crashes: u("crashes"),
+        resyncs: u("resyncs"),
+        corrupt_discards: u("corrupt"),
+    }
 }
 
 /// Stream a completed run to disk: series file first, then the record
@@ -536,6 +554,17 @@ pub(crate) fn persist(
         .set("records", outcome.series.records.len())
         .set("final", final_record)
         .set("config", outcome.cfg.to_json());
+    // Written only when a fault plan actually fired, so pre-fault (and
+    // fault-free) result files stay byte-identical.
+    if !outcome.fault.is_zero() {
+        record = record.set(
+            "fault",
+            Json::obj()
+                .set("crashes", outcome.fault.crashes)
+                .set("resyncs", outcome.fault.resyncs)
+                .set("corrupt", outcome.fault.corrupt_discards),
+        );
+    }
     if let Some(stop) = &outcome.stopped {
         record = record.set(
             "truncated",
@@ -658,9 +687,20 @@ pub(crate) fn execute_one(
                 let ck = Checkpoint::load(cp).map_err(|e| format!("checkpoint: {e}"))?;
                 let series = Series::read_jsonl(pp, series_label.clone())
                     .map_err(|e| format!("partial series: {e}"))?;
-                run.restore(&ck, series);
-                if opts.verbose {
-                    println!("[sweep] resume {label} from t={}", run.t());
+                match run.restore(&ck, series) {
+                    Ok(()) => {
+                        if opts.verbose {
+                            println!("[sweep] resume {label} from t={}", run.t());
+                        }
+                    }
+                    Err(e) => {
+                        // A stale or foreign snapshot (edited spec, wrong
+                        // run id collision) must not poison the sweep:
+                        // drop it and run fresh from t = 0.
+                        eprintln!("[sweep] discarding checkpoint for {label}: {e}");
+                        fs::remove_file(cp).ok();
+                        fs::remove_file(pp).ok();
+                    }
                 }
             }
         }
@@ -676,6 +716,7 @@ pub(crate) fn execute_one(
             fired,
             checks,
             wall_ms: run_start.elapsed().as_millis() as u64,
+            fault: run.algo().fault_counters(),
             skipped: false,
             completed,
             stopped,

@@ -160,7 +160,7 @@ fn checkpoint_resume_reproduces_trajectory() {
     let mut problem2 = build_problem(&cfg);
     let mut algo2 = build_algo(&cfg, 24);
     let mut bus2 = Bus::new(cfg.nodes);
-    checkpoint::restore(algo2.as_mut(), &loaded);
+    checkpoint::restore(algo2.as_mut(), &loaded).unwrap();
     checkpoint::restore_bus(&mut bus2, &loaded);
     assert_eq!(bus.total_bits, bus2.total_bits);
     for i in 0..5 {

@@ -339,7 +339,8 @@ fn prop_message_bits_match_wire_codecs_for_every_kind() {
                             "{tag} d={d}: {} bytes vs {charged} charged bits",
                             bytes.len()
                         );
-                        let back = wire::decode_topk(&bytes, d, q.nnz());
+                        let back =
+                            wire::decode_topk(&bytes, d, q.nnz()).map_err(|e| e.to_string())?;
                         prop_assert!(back == q.to_dense(d), "{tag}: decode mismatch");
                     }
                     "sign_topk" | "sign_topk_paper" => {
@@ -360,7 +361,8 @@ fn prop_message_bits_match_wire_codecs_for_every_kind() {
                                 "{tag} d={d}: charged {charged} != nnz+32"
                             );
                         }
-                        let back = wire::decode_sign_topk(&bytes, d, q.nnz());
+                        let back = wire::decode_sign_topk(&bytes, d, q.nnz())
+                            .map_err(|e| e.to_string())?;
                         prop_assert!(back == q.to_dense(d), "{tag}: decode mismatch");
                     }
                     "sign" => {
@@ -372,7 +374,7 @@ fn prop_message_bits_match_wire_codecs_for_every_kind() {
                             bytes.len()
                         );
                         prop_assert!(
-                            wire::decode_sign(&bytes, d) == dense,
+                            wire::decode_sign(&bytes, d).map_err(|e| e.to_string())? == dense,
                             "{tag}: decode mismatch"
                         );
                     }
@@ -393,6 +395,137 @@ fn prop_message_bits_match_wire_codecs_for_every_kind() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Corruption-safe wire transport (frame + fault plans, ISSUE 6)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_framed_wire_codec_roundtrips_for_every_kind() {
+    // The transport-shaped path every compressor output can take:
+    // compress_sparse → self-describing codec → CRC frame → unframe →
+    // decode. Clean frames must decode to exactly the compressed message
+    // for EVERY operator kind.
+    check("wire-frame-roundtrip", Config { cases: 48, seed: 0xD0 }, |g| {
+        let d = g.dim(600).max(4);
+        let k = g.usize_in(1, d);
+        let x = g.vec_f32(d, 1.0);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        for (tag, op) in every_kind(k) {
+            let mut q = SparseVec::new();
+            op.compress_sparse(&x, &mut Rng::new(seed), &mut q);
+            let framed = wire::frame(&wire::encode_sparse(&q, d));
+            prop_assert!(framed.len() >= wire::FRAME_OVERHEAD, "{tag}: impossible frame");
+            let payload = wire::unframe(&framed)
+                .map_err(|e| format!("{tag} d={d}: clean frame rejected: {e}"))?;
+            let back = wire::decode_sparse(payload, d)
+                .map_err(|e| format!("{tag} d={d}: clean payload rejected: {e}"))?;
+            prop_assert!(
+                back.to_dense(d) == q.to_dense(d),
+                "{tag} d={d} k={k}: framed roundtrip changed the message"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_bit_flip_is_always_detected_never_a_panic() {
+    // CRC32 detects every single-bit error, so ANY one-bit flip anywhere
+    // in a framed message must surface as Err from `unframe` — never a
+    // panic, never a silent wrong decode.
+    check("wire-bit-flip", Config { cases: 64, seed: 0xD1 }, |g| {
+        let d = g.dim(400).max(4);
+        let k = g.usize_in(1, d);
+        let x = g.vec_f32(d, 1.0);
+        let mut q = SparseVec::new();
+        SignTopK::new(k).compress_sparse(&x, &mut Rng::new(7), &mut q);
+        let clean = wire::frame(&wire::encode_sparse(&q, d));
+        let mut framed = clean.clone();
+        let bit = g.usize_in(0, framed.len() * 8 - 1);
+        framed[bit / 8] ^= 1 << (bit % 8);
+        prop_assert!(
+            wire::unframe(&framed).is_err(),
+            "flipped bit {bit} of {} slipped through the frame",
+            framed.len() * 8
+        );
+        // Decoding damaged bytes without the frame must stay panic-free
+        // (Err or a structurally-valid wrong value are both possible
+        // there — the frame is what rules the latter out).
+        let _ = wire::decode_sparse(&framed[wire::FRAME_OVERHEAD..], d);
+        // Truncation at any byte boundary is an error, not a panic.
+        let cut = g.usize_in(0, clean.len() - 1);
+        prop_assert!(
+            wire::unframe(&clean[..cut]).is_err(),
+            "truncated frame accepted at {cut} of {} bytes",
+            clean.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fault_plans_are_deterministic_schedules_with_exact_windows() {
+    use sparq::comm::FaultPlan;
+    check("fault-plan", Config { cases: 64, seed: 0xD2 }, |g| {
+        let n = g.usize_in(4, 24);
+        // One crash window, one partition, one corruption rate, assembled
+        // as the spec grammar string.
+        let node = g.usize_in(0, n - 1);
+        let down = g.usize_in(0, 200) as u64;
+        let up = down + 1 + g.usize_in(0, 150) as u64;
+        let p0 = g.usize_in(100, 250) as u64;
+        let p1 = p0 + 1 + g.usize_in(0, 100) as u64;
+        let cut = g.usize_in(1, n - 1); // groups [0, cut) | [cut, n)
+        let p = g.f64_in(0.0, 0.9);
+        let spec = format!(
+            "crash:{node}:{down}:{up}+partition:{p0}:{p1}:0-{}|{}-{}+corrupt:{p:.4}",
+            cut - 1,
+            cut,
+            n - 1
+        );
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let plan = FaultPlan::parse(&spec, seed).map_err(|e| format!("{spec}: {e}"))?;
+        let again = FaultPlan::parse(&spec, seed).map_err(|e| e.to_string())?;
+        prop_assert!(plan == again, "{spec}: parse is not deterministic");
+        plan.check_nodes(n).map_err(|e| format!("{spec}: {e}"))?;
+        let probes = [0, down, up - 1, up, p0, p1 - 1, p1, 500];
+        for t in probes {
+            // the crash window is exactly [down, up)
+            prop_assert!(
+                plan.is_down(node, t) == (t >= down && t < up),
+                "{spec}: is_down({node}, {t}) wrong"
+            );
+            // the partition severs exactly cross-group pairs in [p0, p1)
+            prop_assert!(
+                plan.severed(0, n - 1, t) == (t >= p0 && t < p1),
+                "{spec}: severed(0, {}, {t}) wrong",
+                n - 1
+            );
+            prop_assert!(
+                !plan.severed(0, cut - 1, t),
+                "{spec}: same-group pair severed at t={t}"
+            );
+            // corruption coins are pure functions of (seed, edge, round)
+            prop_assert!(
+                plan.corrupts(0, n - 1, t) == again.corrupts(0, n - 1, t),
+                "{spec}: corrupt coin not deterministic at t={t}"
+            );
+        }
+        // the empirical corruption rate tracks p
+        if p > 0.05 {
+            let trials = 2000u64;
+            let hits = (0..trials).filter(|&t| plan.corrupts(1, 2, t)).count();
+            let rate = hits as f64 / trials as f64;
+            let slack = 0.05 + 3.0 * (p * (1.0 - p) / trials as f64).sqrt();
+            prop_assert!(
+                (rate - p).abs() < slack,
+                "{spec}: corrupt rate {rate} far from p={p}"
+            );
+        }
+        Ok(())
+    });
 }
 
 #[test]

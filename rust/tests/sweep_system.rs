@@ -294,7 +294,7 @@ fn checkpoint_roundtrip_bit_for_bit_for_all_three_algorithms() {
         let mut problem_b = build_problem(&cfg);
         let mut algo_b = build_algo(&cfg, problem_b.dim());
         let mut bus_b = Bus::new(cfg.nodes);
-        checkpoint::restore(algo_b.as_mut(), &loaded);
+        checkpoint::restore(algo_b.as_mut(), &loaded).unwrap();
         checkpoint::restore_bus(&mut bus_b, &loaded);
         for t in 120..240 {
             algo_a.step(t, problem_a.as_mut(), &mut bus_a);
