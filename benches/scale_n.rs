@@ -1,0 +1,157 @@
+//! Scale-out bench (EXPERIMENTS.md §Scale): step throughput as the node
+//! count grows 16 → 256 → 4096 on a constant-degree ring — the workload
+//! the sparse O(|E|) mixing state, the fused trigger→compress pass, and
+//! the block-claiming thread pool exist for. With per-round cost
+//! proportional to edges, rounds/sec should fall roughly linearly in n
+//! (|E| = n on a ring), not quadratically like the old dense-matrix
+//! coordinator.
+//!
+//! Also timed: graph construction + the spectral solve at n = 4096 for
+//! ring / torus / regular4 (the Lanczos path — dense Jacobi at this n
+//! would be an O(n³) non-starter), reported as info keys.
+//!
+//! A machine-readable summary is written to `BENCH_scale_n.json`
+//! (override with `--out <path>`); CI gates the three rounds/sec keys
+//! via `sparq perfgate --keys n16_rounds_per_sec,...`.
+//!
+//!     cargo bench --bench scale_n [-- --out results/scale.json]
+
+use std::time::Instant;
+
+use sparq::comm::Bus;
+use sparq::compress::SignTopK;
+use sparq::coordinator::{DecentralizedAlgo, DecentralizedEngine, SparqConfig, SparqSgd};
+use sparq::graph::{uniform_neighbor, SpectralInfo, Topology, TopologyKind};
+use sparq::problems::GradientSource;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+use sparq::util::bench::Bencher;
+use sparq::util::cli::Args;
+use sparq::util::json::Json;
+use sparq::util::Rng;
+
+const D: usize = 256;
+const K: usize = D / 10;
+const SIZES: [usize; 3] = [16, 256, 4096];
+
+/// Cheap deterministic pseudo-gradient source (same shape as the
+/// sparse_fastpath bench): isolates coordinator pipeline cost from model
+/// math while still exercising the parallel gradient phase.
+struct NullGrad {
+    d: usize,
+    n: usize,
+}
+
+impl NullGrad {
+    fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        let r = rng.next_u64() as f32 / u64::MAX as f32;
+        let mut v = r;
+        for o in out.iter_mut() {
+            v = v * 0.9999 + 0.0001;
+            *o = (v - 0.5) * 0.01;
+        }
+    }
+}
+
+impl GradientSource for NullGrad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+    fn grad(&mut self, _node: usize, _x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.fill(rng, out);
+        0.0
+    }
+    fn shared(&self) -> Option<&(dyn GradientSource + Sync)> {
+        Some(self)
+    }
+    fn grad_shared(&self, _node: usize, _x: &[f32], rng: &mut Rng, out: &mut [f32]) -> f64 {
+        self.fill(rng, out);
+        0.0
+    }
+    fn global_loss(&mut self, _x: &[f32]) -> f64 {
+        0.0
+    }
+}
+
+fn mk_ring_sparq(n: usize, workers: usize) -> DecentralizedEngine {
+    let topo = Topology::new(TopologyKind::Ring, n, 0);
+    let mut algo = SparqSgd::new(
+        SparqConfig {
+            mixing: uniform_neighbor(&topo),
+            compressor: Box::new(SignTopK::new(K)),
+            trigger: EventTrigger::new(ThresholdSchedule::Constant(1e-4)),
+            lr: LrSchedule::Constant(0.01),
+            sync: SyncSchedule::EveryH(1),
+            gamma: None,
+            momentum: 0.0,
+            seed: 1,
+        },
+        D,
+    );
+    algo.set_workers(workers);
+    algo
+}
+
+/// Wall-clock one construction + spectral solve (ms) for a topology at
+/// n = 4096 — the O(|E|) Lanczos path.
+fn time_build_and_solve(kind: TopologyKind) -> (f64, f64) {
+    let t0 = Instant::now();
+    let topo = Topology::new(kind, 4096, 11);
+    let mm = uniform_neighbor(&topo);
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let s = SpectralInfo::compute(&mm);
+    let solve_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert!((s.lambda1 - 1.0).abs() < 1e-6);
+    (build_ms, solve_ms)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out_path = args.get_or("out", "BENCH_scale_n.json");
+    let workers = args.usize("workers", 8);
+    println!("scale_n: ring, d={D}, SignTopK k={K}, H=1, workers={workers}, n in {SIZES:?}");
+
+    let mut b = Bencher::new("scale_n").with_budget(300, 2000);
+    let mut json = Json::obj()
+        .set("bench", "scale_n")
+        .set("d", D)
+        .set("k", K)
+        .set("workers", workers);
+
+    for n in SIZES {
+        let mut src = NullGrad { d: D, n };
+        let mut algo = mk_ring_sparq(n, workers);
+        let mut bus = Bus::new(n);
+        let mut t = 0u64;
+        let r = b.bench_throughput(&format!("ring-n={n}"), (n * D) as u64, || {
+            algo.step(t, &mut src, &mut bus);
+            t += 1;
+        });
+        let rounds_per_sec = 1e9 / r.mean_ns;
+        json = json
+            .set(&format!("n{n}_rounds_per_sec"), rounds_per_sec)
+            .set(&format!("n{n}_ns_per_step"), r.mean_ns)
+            .set(&format!("n{n}_node_steps_per_sec"), n as f64 / (r.mean_ns * 1e-9));
+    }
+
+    // Construction + spectral timings at n = 4096 across topology
+    // families (info keys — not gated; they vary with machine load).
+    for (label, kind) in [
+        ("ring", TopologyKind::Ring),
+        ("torus", TopologyKind::Torus),
+        ("regular4", TopologyKind::RandomRegular(4)),
+    ] {
+        let (build_ms, solve_ms) = time_build_and_solve(kind);
+        println!("n=4096 {label}: build {build_ms:.1} ms, spectral {solve_ms:.1} ms");
+        json = json
+            .set(&format!("n4096_{label}_build_ms"), build_ms)
+            .set(&format!("n4096_{label}_spectral_ms"), solve_ms);
+    }
+
+    std::fs::write(&out_path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {out_path}");
+}

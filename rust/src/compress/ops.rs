@@ -204,8 +204,27 @@ impl Compressor for QsgdOp {
     }
 
     fn compress(&self, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
-        let u: Vec<f32> = (0..x.len()).map(|_| rng.f32()).collect();
-        self.compress_with_uniforms(x, &u, out);
+        // Stream the uniforms through the quantization loop instead of
+        // collecting a Vec<f32> per call (this runs once per fired node
+        // per sync round). Same arithmetic, same one-draw-per-coordinate
+        // RNG stream as `compress_with_uniforms` with pre-drawn uniforms
+        // — including the zero-norm early-out, which must still consume
+        // its d draws to leave the node's RNG where the allocating
+        // implementation left it.
+        let norm = norm2_sq(x).sqrt() as f32;
+        if norm <= 0.0 {
+            for _ in 0..x.len() {
+                rng.f32();
+            }
+            out.fill(0.0);
+            return;
+        }
+        let s = self.s as f32;
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            let u = rng.f32();
+            let level = (s * v.abs() / norm + u).floor();
+            *o = norm / s * v.signum() * level;
+        }
     }
 
     fn encoded_bits(&self, d: usize) -> u64 {
@@ -337,6 +356,42 @@ mod tests {
         let mut rng = Rng::new(0);
         let q = QsgdOp::new(4).compress_vec(&x, &mut rng);
         assert!(q.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn qsgd_streamed_matches_with_uniforms() {
+        // The streaming compress must be the same function as
+        // compress_with_uniforms fed the same RNG stream — bit-for-bit.
+        let c = QsgdOp::new(8);
+        for (seed, d) in [(3u64, 1usize), (4, 7), (5, 64), (6, 333)] {
+            let x = randvec(seed, d);
+            let mut rng_a = Rng::new(99 + seed);
+            let mut out_a = vec![0.0f32; d];
+            c.compress(&x, &mut rng_a, &mut out_a);
+            let mut rng_b = Rng::new(99 + seed);
+            let u: Vec<f32> = (0..d).map(|_| rng_b.f32()).collect();
+            let mut out_b = vec![0.0f32; d];
+            c.compress_with_uniforms(&x, &u, &mut out_b);
+            assert_eq!(out_a, out_b, "seed {seed} d {d}");
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_vector_consumes_same_rng_stream() {
+        // The zero-norm early-out must leave the node RNG exactly where
+        // the draw-then-quantize implementation left it (d draws), so a
+        // run that hits a zero diff stays replay-identical.
+        let d = 24;
+        let c = QsgdOp::new(4);
+        let mut rng = Rng::new(42);
+        let mut out = vec![1.0f32; d];
+        c.compress(&vec![0.0f32; d], &mut rng, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0));
+        let mut control = Rng::new(42);
+        for _ in 0..d {
+            control.f32();
+        }
+        assert_eq!(rng.next_u64(), control.next_u64());
     }
 
     #[test]

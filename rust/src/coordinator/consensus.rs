@@ -46,8 +46,9 @@ impl NeighborAccumulator {
         let mut wsum = vec![0.0f32; n];
         let mut receivers: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
         for i in 0..n {
-            for &j in &mixing.topology.neighbors[i] {
-                let w = mixing.weight(i, j) as f32;
+            let (nbrs, wts) = mixing.row(i);
+            for (&j, &wf) in nbrs.iter().zip(wts.iter()) {
+                let w = wf as f32;
                 if w == 0.0 {
                     continue;
                 }
@@ -72,8 +73,9 @@ impl NeighborAccumulator {
         let d = xhat.first().map(Vec::len).unwrap_or(0);
         let mut nbr = NeighborAccumulator::new(mixing, d);
         for i in 0..mixing.n() {
-            for &j in &mixing.topology.neighbors[i] {
-                let w = mixing.weight(i, j) as f32;
+            let (nbrs, wts) = mixing.row(i);
+            for (&j, &wf) in nbrs.iter().zip(wts.iter()) {
+                let w = wf as f32;
                 if w == 0.0 {
                     continue;
                 }

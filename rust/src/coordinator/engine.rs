@@ -53,8 +53,7 @@ use crate::comm::{Bus, FaultCounters, FaultPlan};
 use crate::compress::Compressor;
 use crate::graph::dynamic::TopologySchedule;
 use crate::graph::{MixingMatrix, SpectralInfo, Topology};
-use crate::linalg::vecops::sub_into;
-use crate::linalg::Matrix;
+use crate::linalg::vecops::sub_into_dist2;
 use crate::problems::GradientSource;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::EventTrigger;
@@ -72,14 +71,16 @@ pub trait CommPolicy: Send + Sync {
     /// Is iteration t a synchronization index ((t+1) ∈ I_T)?
     fn is_sync(&self, t: u64) -> bool;
 
-    /// Does node `node` transmit at sync index t? Called once per node
-    /// per sync round, against the *pre-update* estimate `xhat_i`.
+    /// Does a node with drift ‖x^{t+½} − x̂‖² = `drift2` transmit at sync
+    /// index t? The caller computes the drift (fused with materializing
+    /// the difference vector — see `EstimateTracking::sync_round`), so
+    /// the policy is a pure threshold comparison.
     ///
     /// Honored by estimate-tracking rules only: exact averaging has no
     /// estimate bank for a drift threshold to compare against, so it
     /// treats every sync round as all-transmit and is gated purely by
     /// [`is_sync`](Self::is_sync) (plus link-model stragglers).
-    fn fires(&self, node: &NodeState, xhat_i: &[f32], t: u64, eta: f64) -> bool;
+    fn fires(&self, drift2: f64, t: u64, eta: f64) -> bool;
 }
 
 /// SPARQ-SGD's policy: sync every H (or explicit I_T), transmit only on
@@ -94,8 +95,8 @@ impl CommPolicy for Triggered {
         self.sync.is_sync(t)
     }
 
-    fn fires(&self, node: &NodeState, xhat_i: &[f32], t: u64, eta: f64) -> bool {
-        self.trigger.fires(&node.x_half, xhat_i, t, eta)
+    fn fires(&self, drift2: f64, t: u64, eta: f64) -> bool {
+        self.trigger.fires_drift(drift2, t, eta)
     }
 }
 
@@ -108,7 +109,7 @@ impl CommPolicy for AlwaysComm {
         true
     }
 
-    fn fires(&self, _node: &NodeState, _xhat_i: &[f32], _t: u64, _eta: f64) -> bool {
+    fn fires(&self, _drift2: f64, _t: u64, _eta: f64) -> bool {
         true
     }
 }
@@ -239,16 +240,21 @@ impl UpdateRule for EstimateTracking {
     ) -> SyncOutcome {
         // Algorithm 1 lines 7–9: trigger check and (if fired) compress,
         // all against the *pre-update* x̂ bank — parallel across nodes.
-        // Crashed nodes are dark: no trigger check, no transmission.
+        // One fused pass materializes diff = x^{t+½} − x̂ while
+        // accumulating its squared norm, so the vectors are walked once
+        // instead of dist2-then-sub_into twice; the drift value (and
+        // hence every trigger decision) is bit-identical to the unfused
+        // pair. Crashed nodes are dark: no trigger check, no
+        // transmission.
         let xhat = &self.xhat;
         ctx.pool.for_each_mut(nodes, |i, node| {
             if ctx.down[i] {
                 node.fired = false;
                 return;
             }
-            node.fired = ctx.comm.fires(node, &xhat[i], ctx.t, ctx.eta);
+            let drift2 = sub_into_dist2(&node.x_half, &xhat[i], &mut node.diff);
+            node.fired = ctx.comm.fires(drift2, ctx.t, ctx.eta);
             if node.fired {
-                sub_into(&node.x_half, &xhat[i], &mut node.diff);
                 ctx.compressor
                     .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
             }
@@ -438,12 +444,13 @@ impl UpdateRule for ExactAveraging {
         let clean = ctx.link.is_ideal() && ctx.fault.corrupt_p == 0.0;
         let t = ctx.t;
         ctx.pool.for_each_mut(&mut self.mixed, |i, row| {
-            let wii = mixing.weight(i, i) as f32;
+            let wii = mixing.self_weight(i) as f32;
             for (m, x) in row.iter_mut().zip(nodes_ref[i].x.iter()) {
                 *m = wii * x;
             }
-            for &j in &mixing.topology.neighbors[i] {
-                let w = mixing.weight(i, j) as f32;
+            let (nbrs, wts) = mixing.row(i);
+            for (&j, &wf) in nbrs.iter().zip(wts.iter()) {
+                let w = wf as f32;
                 let landed = clean
                     || (nodes_ref[j].fired && link.delivers(j, i, t) && !fault.corrupts(j, i, t));
                 let src = if landed {
@@ -549,10 +556,17 @@ pub struct DecentralizedEngine {
     /// The live-subgraph mixing matrix while outage windows are open
     /// (`None` ⇒ the base matrix is in force).
     effective: Option<MixingMatrix>,
-    /// Per directed base edge (receiver-major, n×n flat): sync rounds
-    /// since the receiver last got a fresh copy from that sender. Sized
-    /// only under a non-ideal fault plan.
+    /// Per directed base edge (receiver-major CSR, aligned with the
+    /// current mixing topology's adjacency lists): sync rounds since the
+    /// receiver last got a fresh copy from that sender. O(|E|), sized
+    /// only under a non-ideal fault plan; rebuilt (and zeroed) on a
+    /// topology switch — the switch resync re-broadcasts full x̂, so
+    /// every edge of the new graph starts fresh.
     stale: Vec<u64>,
+    /// Row offsets into `stale`: receiver i's entries live at
+    /// `stale[stale_off[i]..stale_off[i + 1]]`, one per neighbor in
+    /// adjacency order.
+    stale_off: Vec<usize>,
     /// Cumulative crash / resync / corrupt-discard counters.
     counters: FaultCounters,
     nodes: Vec<NodeState>,
@@ -595,6 +609,7 @@ impl DecentralizedEngine {
             fault_active: (Vec::new(), Vec::new()),
             effective: None,
             stale: Vec::new(),
+            stale_off: Vec::new(),
             counters: FaultCounters::default(),
             nodes,
             pool: ThreadPool::new(1),
@@ -621,13 +636,27 @@ impl DecentralizedEngine {
     /// partition windows prune the mixing matrix in force; per-copy
     /// corruption is applied at broadcast time by the update rules.
     pub fn set_fault_plan(&mut self, fault: FaultPlan) {
-        let n = self.mixing.n();
-        self.stale = if fault.is_ideal() {
-            Vec::new()
-        } else {
-            vec![0; n * n]
-        };
         self.fault = fault;
+        self.rebuild_stale_table();
+    }
+
+    /// (Re)size the per-edge staleness CSR to the base mixing matrix in
+    /// force, zeroed. Called when the fault plan is installed and after
+    /// a topology switch (whose resync makes every new edge fresh).
+    fn rebuild_stale_table(&mut self) {
+        if self.fault.is_ideal() {
+            self.stale = Vec::new();
+            self.stale_off = Vec::new();
+            return;
+        }
+        let n = self.mixing.n();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        for i in 0..n {
+            off.push(off[i] + self.mixing.topology.neighbors[i].len());
+        }
+        self.stale = vec![0; off[n]];
+        self.stale_off = off;
     }
 
     /// The most rounds any live directed base edge has gone without a
@@ -688,7 +717,8 @@ impl DecentralizedEngine {
     fn update_staleness(&mut self, t: u64) {
         let n = self.mixing.n();
         for i in 0..n {
-            for &j in &self.mixing.topology.neighbors[i] {
+            let row = self.stale_off[i];
+            for (pos, &j) in self.mixing.topology.neighbors[i].iter().enumerate() {
                 let fresh = self.nodes[j].fired
                     && !self.down[i]
                     && !self.down[j]
@@ -696,9 +726,9 @@ impl DecentralizedEngine {
                     && self.link.delivers(j, i, t)
                     && !self.fault.corrupts(j, i, t);
                 if fresh {
-                    self.stale[i * n + j] = 0;
+                    self.stale[row + pos] = 0;
                 } else {
-                    self.stale[i * n + j] += 1;
+                    self.stale[row + pos] += 1;
                 }
             }
         }
@@ -751,29 +781,31 @@ fn effective_mixing(
     t: u64,
 ) -> MixingMatrix {
     let n = base.n();
-    let mut w = Matrix::zeros(n, n);
     let mut neighbors = vec![Vec::new(); n];
+    let mut weights = vec![Vec::new(); n];
+    let mut diag = vec![0.0; n];
     for i in 0..n {
         let mut live_sum = 0.0;
-        for &j in &base.topology.neighbors[i] {
+        let (nbrs, wts) = base.row(i);
+        for (&j, &wij) in nbrs.iter().zip(wts.iter()) {
             if down[i] || down[j] || fault.severed(i, j, t) {
                 continue;
             }
-            let wij = base.weight(i, j);
-            w[(i, j)] = wij;
             live_sum += wij;
             neighbors[i].push(j);
+            weights[i].push(wij);
         }
-        w[(i, i)] = 1.0 - live_sum;
+        diag[i] = 1.0 - live_sum;
     }
-    MixingMatrix {
-        w,
-        topology: Topology {
+    MixingMatrix::from_parts(
+        Topology {
             n,
             kind: base.topology.kind,
             neighbors,
         },
-    }
+        weights,
+        diag,
+    )
 }
 
 impl DecentralizedAlgo for DecentralizedEngine {
@@ -816,6 +848,9 @@ impl DecentralizedAlgo for DecentralizedEngine {
                 self.mixing = mixing;
                 self.rule.rebuild(&self.mixing, bus);
                 self.spectral = OnceCell::new();
+                // The rebuild above re-broadcast full x̂ over the new
+                // edge set, so the new graph's edges all start fresh.
+                self.rebuild_stale_table();
                 // The schedule swapped the base matrix mid-outage:
                 // re-prune it for the live subgraph. The rebuild above
                 // already paid a full resync, so this refresh is silent.
@@ -930,6 +965,7 @@ impl DecentralizedAlgo for DecentralizedEngine {
         if let Some(m) = latest {
             self.mixing = m;
             self.spectral = OnceCell::new();
+            self.rebuild_stale_table();
         }
         // Replay the fault state to just before t0 the same way — no
         // charges, no counter bumps (those are in the checkpoint). step(t0)

@@ -8,40 +8,143 @@
 //! * **Uniform neighbor**: w_ij = 1/(Δ+1) with Δ the max degree (the
 //!   classic "lazy uniform" gossip weights used for rings in the paper's
 //!   experiments, e.g. 1/3 on a ring).
+//!
+//! Storage is sparse: per-row off-diagonal weights aligned with the
+//! topology's (sorted) adjacency lists plus a diagonal vector — O(|E|)
+//! instead of the former dense n×n `Matrix` (~128 MB at n = 4096), so
+//! graph construction and every per-round consumer scale with edges.
+//! The constructors reproduce the dense implementation bit-for-bit: the
+//! dense row sums only ever added structural zeros outside the adjacency
+//! list, and adding 0.0 to a finite positive f64 is exact, so summing
+//! the stored weights in the same ascending-j order yields the identical
+//! diagonal value at any n.
 
 use super::topology::Topology;
 use crate::linalg::Matrix;
 
-/// A mixing matrix tied to its topology.
+/// A mixing matrix tied to its topology (sparse, edge-aligned storage).
 #[derive(Clone, Debug)]
 pub struct MixingMatrix {
-    pub w: Matrix,
     pub topology: Topology,
+    /// Off-diagonal weights: `weights[i][k]` is w_ij for
+    /// `j = topology.neighbors[i][k]` (adjacency lists are sorted).
+    weights: Vec<Vec<f64>>,
+    /// Self-weights w_ii.
+    diag: Vec<f64>,
 }
 
 impl MixingMatrix {
-    /// w_ij as f64.
+    /// Assemble from edge-aligned parts. `weights` must parallel
+    /// `topology.neighbors` row by row; `diag` holds the self-weights
+    /// (callers compute it with their own association so construction
+    /// stays bit-identical to whatever reference they mirror).
+    pub fn from_parts(topology: Topology, weights: Vec<Vec<f64>>, diag: Vec<f64>) -> MixingMatrix {
+        assert_eq!(weights.len(), topology.n, "weight row count");
+        assert_eq!(diag.len(), topology.n, "diagonal length");
+        for (i, row) in weights.iter().enumerate() {
+            assert_eq!(
+                row.len(),
+                topology.neighbors[i].len(),
+                "row {i} weight/adjacency mismatch"
+            );
+            debug_assert!(
+                topology.neighbors[i].windows(2).all(|w| w[0] < w[1]),
+                "row {i} adjacency must be sorted for weight lookups"
+            );
+        }
+        MixingMatrix {
+            topology,
+            weights,
+            diag,
+        }
+    }
+
+    /// w_ij as f64 (binary search over the sorted adjacency row;
+    /// structural zeros — non-edges — return 0.0).
     pub fn weight(&self, i: usize, j: usize) -> f64 {
-        self.w[(i, j)]
+        if i == j {
+            return self.diag[i];
+        }
+        match self.topology.neighbors[i].binary_search(&j) {
+            Ok(k) => self.weights[i][k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// w_ii without a search.
+    #[inline]
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    /// Row i's off-diagonal entries as parallel (neighbor, weight)
+    /// slices — the hot-loop accessor (no per-edge binary search).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        (&self.topology.neighbors[i], &self.weights[i])
     }
 
     pub fn n(&self) -> usize {
         self.topology.n
     }
 
-    /// Validate paper Section 3 requirements; returns error description.
+    /// Number of stored off-diagonal weights (= Σ_i deg(i) = 2|E|) —
+    /// exposed so tests can pin the O(|E|) storage invariant.
+    pub fn stored_weights(&self) -> usize {
+        self.weights.iter().map(Vec::len).sum()
+    }
+
+    /// y = W x with O(|E|) work (the sparse operator behind the
+    /// iterative spectral path — `linalg::lanczos`).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), n);
+        for i in 0..n {
+            let mut acc = self.diag[i] * x[i];
+            for (&j, &w) in self.topology.neighbors[i].iter().zip(self.weights[i].iter()) {
+                acc += w * x[j];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Materialize the dense matrix (small-n eigen solves and tests
+    /// only — never on a per-round path).
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut w = Matrix::zeros(n, n);
+        for i in 0..n {
+            w[(i, i)] = self.diag[i];
+            for (&j, &wij) in self.topology.neighbors[i].iter().zip(self.weights[i].iter()) {
+                w[(i, j)] = wij;
+            }
+        }
+        w
+    }
+
+    /// Validate paper Section 3 requirements in O(|E| log deg); returns
+    /// an error description. Weight on a non-edge is structurally
+    /// impossible in the sparse representation, and symmetry plus unit
+    /// row sums imply unit column sums.
     pub fn validate(&self) -> Result<(), String> {
-        if !self.w.is_symmetric(1e-9) {
-            return Err("W is not symmetric".into());
-        }
-        if !self.w.is_doubly_stochastic(1e-9) {
-            return Err("W is not doubly stochastic".into());
-        }
+        let tol = 1e-9;
         for i in 0..self.n() {
-            for j in 0..self.n() {
-                if i != j && self.w[(i, j)] > 0.0 && !self.topology.neighbors[i].contains(&j) {
-                    return Err(format!("W has weight on non-edge ({i},{j})"));
+            let mut rsum = self.diag[i];
+            if self.diag[i] < -tol {
+                return Err(format!("negative self-weight at node {i}"));
+            }
+            for (&j, &wij) in self.topology.neighbors[i].iter().zip(self.weights[i].iter()) {
+                if wij < -tol {
+                    return Err(format!("negative weight on edge ({i},{j})"));
                 }
+                if (wij - self.weight(j, i)).abs() > tol {
+                    return Err("W is not symmetric".into());
+                }
+                rsum += wij;
+            }
+            if (rsum - 1.0).abs() > tol {
+                return Err(format!("row {i} sums to {rsum}, not 1"));
             }
         }
         Ok(())
@@ -51,21 +154,20 @@ impl MixingMatrix {
 /// Metropolis–Hastings weights.
 pub fn metropolis_hastings(topology: &Topology) -> MixingMatrix {
     let n = topology.n;
-    let mut w = Matrix::zeros(n, n);
+    let mut weights = Vec::with_capacity(n);
+    let mut diag = vec![0.0; n];
     for i in 0..n {
-        for &j in &topology.neighbors[i] {
-            let wij = 1.0 / (1.0 + topology.degree(i).max(topology.degree(j)) as f64);
-            w[(i, j)] = wij;
-        }
+        let row: Vec<f64> = topology.neighbors[i]
+            .iter()
+            .map(|&j| 1.0 / (1.0 + topology.degree(i).max(topology.degree(j)) as f64))
+            .collect();
+        // Ascending-j summation — the same nonzero terms in the same
+        // order as the dense row sum, hence the identical f64 diagonal.
+        let off: f64 = row.iter().sum();
+        diag[i] = 1.0 - off;
+        weights.push(row);
     }
-    for i in 0..n {
-        let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
-        w[(i, i)] = 1.0 - off;
-    }
-    MixingMatrix {
-        w,
-        topology: topology.clone(),
-    }
+    MixingMatrix::from_parts(topology.clone(), weights, diag)
 }
 
 /// Uniform 1/(Δ+1) neighbor weights (self-weight absorbs the remainder).
@@ -73,17 +175,14 @@ pub fn uniform_neighbor(topology: &Topology) -> MixingMatrix {
     let n = topology.n;
     let delta = topology.max_degree();
     let share = 1.0 / (delta as f64 + 1.0);
-    let mut w = Matrix::zeros(n, n);
+    let mut weights = Vec::with_capacity(n);
+    let mut diag = vec![0.0; n];
     for i in 0..n {
-        for &j in &topology.neighbors[i] {
-            w[(i, j)] = share;
-        }
-        w[(i, i)] = 1.0 - topology.degree(i) as f64 * share;
+        let deg = topology.degree(i);
+        weights.push(vec![share; deg]);
+        diag[i] = 1.0 - deg as f64 * share;
     }
-    MixingMatrix {
-        w,
-        topology: topology.clone(),
-    }
+    MixingMatrix::from_parts(topology.clone(), weights, diag)
 }
 
 #[cfg(test)]
@@ -127,5 +226,47 @@ mod tests {
                 assert!((mm.weight(i, j) - 0.2).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn storage_is_edge_proportional() {
+        let t = Topology::new(TopologyKind::Ring, 4096, 0);
+        let mm = uniform_neighbor(&t);
+        assert_eq!(mm.stored_weights(), 2 * t.edge_count());
+        assert_eq!(mm.stored_weights(), 2 * 4096);
+    }
+
+    #[test]
+    fn to_dense_round_trips_and_matvec_agrees() {
+        let t = Topology::new(TopologyKind::Torus, 16, 0);
+        let mm = metropolis_hastings(&t);
+        let dense = mm.to_dense();
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(dense[(i, j)], mm.weight(i, j), "({i},{j})");
+            }
+        }
+        let x: Vec<f64> = (0..16).map(|k| (k as f64 * 0.37).sin()).collect();
+        let mut y = vec![0.0; 16];
+        mm.matvec_into(&x, &mut y);
+        let dense_y = dense.matvec(&x);
+        for (a, b) in y.iter().zip(dense_y.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric_and_bad_row_sums() {
+        let t = Topology::new(TopologyKind::Path, 3, 0);
+        // Path 0-1-2: perturb one directed weight ⇒ asymmetric.
+        let weights = vec![vec![0.4], vec![0.3, 0.3], vec![0.3]];
+        let diag = vec![0.6, 0.4, 0.7];
+        let mm = MixingMatrix::from_parts(t.clone(), weights, diag);
+        assert!(mm.validate().unwrap_err().contains("symmetric"));
+        // Row sum off by 0.1.
+        let weights = vec![vec![0.3], vec![0.3, 0.3], vec![0.3]];
+        let diag = vec![0.6, 0.4, 0.7];
+        let mm = MixingMatrix::from_parts(t, weights, diag);
+        assert!(mm.validate().unwrap_err().contains("sums to"));
     }
 }

@@ -9,9 +9,34 @@
 //! ```
 //!
 //! with the paper's crude bound p ≥ δ²ω/644 used as a sanity check.
+//!
+//! Two solver paths, dispatched on n:
+//!
+//! * **Dense (n ≤ [`DENSE_EIGEN_MAX_N`])** — materialize W and run the
+//!   cyclic-Jacobi solver: exact full spectrum, bit-identical to the
+//!   historical dense implementation for every paper-scale graph.
+//! * **Iterative (n > [`DENSE_EIGEN_MAX_N`])** — two Lanczos runs on the
+//!   O(|E|) sparse operator: one on W for λ₁ and λ_min (β must come from
+//!   W itself — λ_min > 0 is possible for lazy matrices, so deflation
+//!   would hide it), one on the mean-deflated B = W − (1/n)·11ᵀW for the
+//!   second-largest eigenvalue. |λ₂| = max(θ_max(B), 0, −λ_min). Ritz
+//!   values sit *inside* the true spectrum, so the estimates err toward
+//!   a larger δ and smaller β; the tolerance contract is pinned by
+//!   `tests/scale_sparse.rs` (dense vs iterative ≤ 1e-8 at small n).
 
 use super::mixing::MixingMatrix;
+use crate::linalg::lanczos::{lanczos_extremes, SymOp, LANCZOS_MAX_ITERS};
 use crate::linalg::symmetric_eigenvalues;
+
+/// Largest n solved by dense Jacobi; above this the Lanczos path runs.
+/// Every historical experiment (n ≤ 60) and test graph sits below the
+/// threshold, so small-n spectral numbers — and hence tuned γ and
+/// `config_hash`-adjacent series — stay bit-identical.
+pub const DENSE_EIGEN_MAX_N: usize = 256;
+
+/// Fixed seed for the Lanczos start vectors (spectral results must be
+/// deterministic — they feed tuned γ and the artifact cache).
+const LANCZOS_SEED: u64 = 0x5bec_19a1;
 
 #[derive(Clone, Copy, Debug)]
 pub struct SpectralInfo {
@@ -25,9 +50,52 @@ pub struct SpectralInfo {
     pub beta: f64,
 }
 
+/// W with the λ₁ = 1 eigenspace (the all-ones vector) projected out:
+/// B x = P W P x where P = I − (1/n)·11ᵀ. Symmetric, same spectrum as W
+/// minus one copy of λ₁, so its largest eigenvalue is λ₂ (or 0 if the
+/// rest of the spectrum is negative).
+struct DeflatedMixing<'a>(&'a MixingMatrix);
+
+fn subtract_mean(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+impl SymOp for DeflatedMixing<'_> {
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let mut px = x.to_vec();
+        subtract_mean(&mut px);
+        self.0.matvec_into(&px, y);
+        subtract_mean(y);
+    }
+}
+
+impl SymOp for MixingMatrix {
+    fn n(&self) -> usize {
+        MixingMatrix::n(self)
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+}
+
 impl SpectralInfo {
     pub fn compute(mm: &MixingMatrix) -> SpectralInfo {
-        let eigs = symmetric_eigenvalues(&mm.w, 1e-12);
+        if mm.n() <= DENSE_EIGEN_MAX_N {
+            Self::compute_dense(mm)
+        } else {
+            Self::compute_iterative(mm)
+        }
+    }
+
+    /// Exact full-spectrum path: dense W + cyclic Jacobi (O(n³)).
+    pub fn compute_dense(mm: &MixingMatrix) -> SpectralInfo {
+        let eigs = symmetric_eigenvalues(&mm.to_dense(), 1e-12);
         let n = eigs.len();
         let lambda1 = eigs[0];
         // |λ₂| = max absolute eigenvalue excluding one copy of λ₁ = 1.
@@ -44,6 +112,25 @@ impl SpectralInfo {
             lambda2_abs,
             delta: 1.0 - lambda2_abs,
             beta,
+        }
+    }
+
+    /// Sparse path: extremal eigenvalues only, via O(|E|)-matvec Lanczos.
+    pub fn compute_iterative(mm: &MixingMatrix) -> SpectralInfo {
+        let m = LANCZOS_MAX_ITERS.min(mm.n());
+        // Run 1: W itself → λ₁ (top) and λ_min (bottom, for β).
+        let w_ext = lanczos_extremes(mm, m, LANCZOS_SEED);
+        // Run 2: mean-deflated W → λ₂ from above (clamped at 0: a
+        // deflated spectrum that is entirely negative contributes no
+        // positive candidate for |λ₂|).
+        let b_ext = lanczos_extremes(&DeflatedMixing(mm), m, LANCZOS_SEED ^ 0x9e3779b97f4a7c15);
+        let lambda_min = w_ext.theta_min;
+        let lambda2_abs = b_ext.theta_max.max(0.0).max(-lambda_min);
+        SpectralInfo {
+            lambda1: w_ext.theta_max,
+            lambda2_abs,
+            delta: 1.0 - lambda2_abs,
+            beta: 1.0 - lambda_min,
         }
     }
 
@@ -147,5 +234,31 @@ mod tests {
         let s = info(TopologyKind::Ring, 20);
         assert!(s.gamma_star(0.1) < s.gamma_star(0.5));
         assert!(s.gamma_star(0.5) < s.gamma_star(1.0));
+    }
+
+    #[test]
+    fn iterative_matches_ring_closed_form_above_threshold() {
+        // n = 300 > DENSE_EIGEN_MAX_N exercises the Lanczos path against
+        // the uniform-ring closed form λ_k = 1/3 + 2/3·cos(2πk/n).
+        let n = 300;
+        let s = info(TopologyKind::Ring, n);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let lam2 = 1.0 / 3.0 + 2.0 / 3.0 * (two_pi / n as f64).cos();
+        let lam_min = (0..n)
+            .map(|k| 1.0 / 3.0 + 2.0 / 3.0 * (two_pi * k as f64 / n as f64).cos())
+            .fold(f64::INFINITY, f64::min);
+        assert!((s.lambda1 - 1.0).abs() < 1e-8, "λ₁={}", s.lambda1);
+        assert!((s.lambda2_abs - lam2).abs() < 1e-7, "|λ₂|={}", s.lambda2_abs);
+        assert!((s.beta - (1.0 - lam_min)).abs() < 1e-7, "β={}", s.beta);
+    }
+
+    #[test]
+    fn dense_and_iterative_agree_below_threshold() {
+        let t = Topology::new(TopologyKind::Torus, 36, 0);
+        let mm = uniform_neighbor(&t);
+        let d = SpectralInfo::compute_dense(&mm);
+        let i = SpectralInfo::compute_iterative(&mm);
+        assert!((d.lambda2_abs - i.lambda2_abs).abs() < 1e-8);
+        assert!((d.beta - i.beta).abs() < 1e-8);
     }
 }

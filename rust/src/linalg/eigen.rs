@@ -58,7 +58,9 @@ pub fn symmetric_eigenvalues(m: &Matrix, tol: f64) -> Vec<f64> {
     }
 
     let mut eigs: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
-    eigs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    // total_cmp: a NaN from diverged input sorts last instead of
+    // panicking mid-diagnostics.
+    eigs.sort_by(|x, y| y.total_cmp(x));
     eigs
 }
 

@@ -1,14 +1,18 @@
-//! Dense linear algebra for the graph/mixing substrate.
+//! Linear algebra for the graph/mixing substrate.
 //!
-//! Node counts in the paper's experiments are small (n = 8 … 60), so a
-//! straightforward row-major `Matrix` plus a cyclic Jacobi eigensolver is
-//! both sufficient and exactly reproducible. The coordinator's per-round
-//! hot path uses the fused vector kernels at the bottom of this module.
+//! Small graphs (n ≤ 256) use the row-major `Matrix` plus a cyclic
+//! Jacobi eigensolver — exact and exactly reproducible. Above that, the
+//! `lanczos` module extracts the extremal eigenvalues the paper needs
+//! from the sparse O(|E|) mixing operator without ever materializing
+//! n×n state. The coordinator's per-round hot path uses the fused
+//! vector kernels in `vecops`.
 
 pub mod matrix;
 pub mod eigen;
+pub mod lanczos;
 pub mod vecops;
 
 pub use eigen::symmetric_eigenvalues;
+pub use lanczos::{lanczos_extremes, LanczosExtremes, SymOp};
 pub use matrix::Matrix;
-pub use vecops::{axpy, dot, norm2_sq, scale_add, sub_into};
+pub use vecops::{axpy, dot, norm2_sq, scale_add, sub_into, sub_into_dist2};

@@ -80,6 +80,36 @@ pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
     total
 }
 
+/// Fused `out = x − y` + ‖x − y‖²: one pass instead of the trigger
+/// path's former dist2-then-sub_into double walk. The accumulation
+/// replicates [`dist2`] exactly — same 4-lane f64 accumulators, same
+/// reduction order — so drift values (and thus every trigger decision)
+/// are bit-identical to the unfused pair.
+#[inline]
+pub fn sub_into_dist2(x: &[f32], y: &[f32], out: &mut [f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        for lane in 0..4 {
+            let d = x[b + lane] - y[b + lane];
+            out[b + lane] = d;
+            let df = d as f64;
+            acc[lane] += df * df;
+        }
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        let d = x[i] - y[i];
+        out[i] = d;
+        let df = d as f64;
+        total += df * df;
+    }
+    total
+}
+
 /// L1 norm with f64 accumulation.
 #[inline]
 pub fn norm1(x: &[f32]) -> f64 {
@@ -116,6 +146,23 @@ mod tests {
         let v = vec![0.0f32, 2.0];
         scale_add(&mut x, 0.5, &u, &v);
         assert_eq!(x, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn sub_into_dist2_bit_matches_unfused_pair() {
+        // Lengths straddling the 4-lane chunk boundary, values chosen so
+        // intermediate sums actually round (bit-equality is the claim).
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 1000] {
+            let x: Vec<f32> = (0..len).map(|i| ((i * 37 + 11) as f32).sin() * 3.7).collect();
+            let y: Vec<f32> = (0..len).map(|i| ((i * 13 + 5) as f32).cos() * 1.3).collect();
+            let mut d_ref = vec![0.0f32; len];
+            sub_into(&x, &y, &mut d_ref);
+            let dist_ref = dist2(&x, &y);
+            let mut d_fused = vec![0.0f32; len];
+            let dist_fused = sub_into_dist2(&x, &y, &mut d_fused);
+            assert_eq!(d_ref, d_fused, "len {len}");
+            assert_eq!(dist_ref.to_bits(), dist_fused.to_bits(), "len {len}");
+        }
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! * **mixing matrices** keyed by (topology-schedule spec | topology,
 //!   nodes, seed) — the schedule's initial matrix for non-static specs;
 //! * **spectral info** (the eigen solve behind `gamma_tuned`) keyed the
-//!   same way — one O(n³) solve per distinct graph instead of per run;
+//!   same way — one solve per distinct graph instead of per run (dense
+//!   O(n³) Jacobi at n ≤ 256, sparse O(|E|)-matvec Lanczos above —
+//!   `graph::spectral`);
 //! * **dataset shards** keyed by (problem spec, nodes, seed) — the
 //!   generated `Partition` + test set for logreg/mlp, the whole problem
 //!   for quadratics.

@@ -151,8 +151,14 @@ impl EventTrigger {
 
     /// Algorithm 1 line 7 (strict inequality).
     pub fn fires(&self, x_half: &[f32], xhat: &[f32], t: u64, eta_t: f64) -> bool {
-        let c = self.schedule.c(t);
-        dist2(x_half, xhat) > c * eta_t * eta_t
+        self.fires_drift(dist2(x_half, xhat), t, eta_t)
+    }
+
+    /// Algorithm 1 line 7 given a precomputed drift ‖x^{t+½} − x̂‖²
+    /// (the engine's fused trigger→compress pass computes the drift
+    /// while materializing the difference vector — `sub_into_dist2`).
+    pub fn fires_drift(&self, drift2: f64, t: u64, eta_t: f64) -> bool {
+        drift2 > self.schedule.c(t) * eta_t * eta_t
     }
 
     /// The threshold value c_t η_t² (exposed for metrics/ablations).

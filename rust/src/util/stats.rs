@@ -63,7 +63,9 @@ impl Summary {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaNs (diverged-run diagnostics) sort to the top end
+    // instead of panicking.
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -99,5 +101,14 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 50.0), 50.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // A diverged run's metrics must degrade, not panic; NaN sorts
+        // after every finite value under total_cmp.
+        let xs = [1.0, f64::NAN, 0.5];
+        assert_eq!(percentile(&xs, 0.0), 0.5);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 }

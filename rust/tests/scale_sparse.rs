@@ -1,0 +1,269 @@
+//! Sparse-mixing equivalence suite (PR 7): the O(|E|) edge-aligned
+//! `MixingMatrix` and the iterative spectral path must be *invisible* at
+//! paper scale — bit-identical weights, series, and config identity —
+//! while actually scaling to thousands of nodes.
+//!
+//! Pinned here:
+//! * sparse constructors vs an in-test dense reference (the pre-refactor
+//!   n×n loops, replicated verbatim) — exact f64 equality on every entry
+//!   for both constructions on all seven topology kinds;
+//! * Lanczos vs Jacobi: `compute_iterative` agrees with `compute_dense`
+//!   to 1e-8 on small graphs (the tolerance contract EXPERIMENTS.md
+//!   §Scale documents);
+//! * engine series bit-identity across worker counts per topology kind,
+//!   through a topology switch, and under a chaos plan (crash +
+//!   partition + corruption) — fused trigger pass, block-claimed pool,
+//!   and CSR staleness table included;
+//! * O(|E|) storage and a full construction + spectral solve at n = 4096
+//!   (the dense path would allocate ~128 MB and run an O(n³) Jacobi).
+
+use sparq::comm::{Bus, FaultPlan};
+use sparq::compress::SignTopK;
+use sparq::config::ExperimentConfig;
+use sparq::coordinator::{DecentralizedAlgo, SparqConfig, SparqSgd};
+use sparq::experiments::run_config;
+use sparq::graph::{
+    metropolis_hastings, uniform_neighbor, MixingMatrix, SpectralInfo, Topology, TopologyKind,
+};
+use sparq::problems::QuadraticProblem;
+use sparq::schedule::{LrSchedule, SyncSchedule};
+use sparq::sweep::config_hash;
+use sparq::trigger::{EventTrigger, ThresholdSchedule};
+
+const ALL_KINDS: [(TopologyKind, usize); 7] = [
+    (TopologyKind::Ring, 12),
+    (TopologyKind::Complete, 8),
+    (TopologyKind::Star, 9),
+    (TopologyKind::Path, 7),
+    (TopologyKind::Torus, 16),
+    (TopologyKind::Hypercube, 16),
+    (TopologyKind::RandomRegular(4), 14),
+];
+
+// ---------------------------------------------------------------------
+// Weights: sparse storage vs the historical dense construction
+// ---------------------------------------------------------------------
+
+/// The pre-refactor dense Metropolis–Hastings rows: fill edge weights
+/// into an n-vector, then take the diagonal as 1 − (full-row sum, which
+/// only adds structural zeros — ascending-j order).
+fn dense_mh(t: &Topology) -> Vec<Vec<f64>> {
+    let n = t.n;
+    let mut w = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for &j in &t.neighbors[i] {
+            w[i][j] = 1.0 / (1.0 + t.degree(i).max(t.degree(j)) as f64);
+        }
+        let off: f64 = w[i].iter().sum();
+        w[i][i] = 1.0 - off;
+    }
+    w
+}
+
+/// The pre-refactor dense uniform-neighbor rows (share = 1/(Δ+1),
+/// self-weight absorbs the remainder as 1 − deg·share).
+fn dense_uniform(t: &Topology) -> Vec<Vec<f64>> {
+    let n = t.n;
+    let share = 1.0 / (t.max_degree() as f64 + 1.0);
+    let mut w = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for &j in &t.neighbors[i] {
+            w[i][j] = share;
+        }
+        w[i][i] = 1.0 - t.degree(i) as f64 * share;
+    }
+    w
+}
+
+fn assert_entries_bit_equal(mm: &MixingMatrix, dense: &[Vec<f64>], label: &str) {
+    let n = mm.n();
+    for i in 0..n {
+        for j in 0..n {
+            let (s, d) = (mm.weight(i, j), dense[i][j]);
+            assert_eq!(s.to_bits(), d.to_bits(), "{label}: w[{i}][{j}] sparse {s} != dense {d}");
+        }
+    }
+}
+
+#[test]
+fn sparse_weights_bit_match_dense_reference_on_all_kinds() {
+    for (kind, n) in ALL_KINDS {
+        let t = Topology::new(kind, n, 3);
+        let mh = metropolis_hastings(&t);
+        mh.validate().unwrap();
+        assert_entries_bit_equal(&mh, &dense_mh(&t), &format!("{kind:?} MH"));
+
+        let un = uniform_neighbor(&t);
+        un.validate().unwrap();
+        assert_entries_bit_equal(&un, &dense_uniform(&t), &format!("{kind:?} uniform"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spectral: Lanczos vs Jacobi tolerance contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn iterative_spectral_matches_dense_within_1e8_on_small_graphs() {
+    for (kind, n) in [
+        (TopologyKind::Ring, 24),
+        (TopologyKind::Torus, 64),
+        (TopologyKind::Hypercube, 64),
+        (TopologyKind::RandomRegular(4), 64),
+    ] {
+        for mm in [
+            uniform_neighbor(&Topology::new(kind, n, 5)),
+            metropolis_hastings(&Topology::new(kind, n, 5)),
+        ] {
+            let d = SpectralInfo::compute_dense(&mm);
+            let i = SpectralInfo::compute_iterative(&mm);
+            assert!((i.lambda1 - 1.0).abs() < 1e-8, "{kind:?}: λ₁={}", i.lambda1);
+            assert!(
+                (d.lambda2_abs - i.lambda2_abs).abs() < 1e-8,
+                "{kind:?}: |λ₂| dense {} vs iterative {}",
+                d.lambda2_abs,
+                i.lambda2_abs
+            );
+            assert!(
+                (d.delta - i.delta).abs() < 1e-8,
+                "{kind:?}: δ dense {} vs iterative {}",
+                d.delta,
+                i.delta
+            );
+            assert!(
+                (d.beta - i.beta).abs() < 1e-8,
+                "{kind:?}: β dense {} vs iterative {}",
+                d.beta,
+                i.beta
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine series: bit-identity across worker counts
+// ---------------------------------------------------------------------
+
+fn series_cfg(topology: &str, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        nodes: 16,
+        steps: 150,
+        eval_every: 50,
+        problem: "quadratic:32".into(),
+        topology: topology.into(),
+        trigger: "const:20".into(),
+        h: sparq::config::SyncSpec::every(2),
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn series_bit_identical_across_worker_counts_per_topology() {
+    // The fused trigger→compress pass and block-claimed pool must not
+    // perturb any topology's trajectory: per-node RNGs and sequential
+    // cross-node commits make the schedule of threads irrelevant.
+    for topology in ["ring", "complete", "star", "path", "torus", "hypercube", "regular4"] {
+        let a = run_config(&series_cfg(topology, 1), false);
+        let b = run_config(&series_cfg(topology, 8), false);
+        assert_eq!(a.to_csv(), b.to_csv(), "{topology}: series diverged");
+        assert!(a.records.last().unwrap().bits > 0, "{topology}: no traffic");
+        // workers are normalized out of the config identity, so the two
+        // runs are the *same experiment* by hash.
+        assert_eq!(
+            config_hash(&series_cfg(topology, 1)),
+            config_hash(&series_cfg(topology, 8)),
+            "{topology}: config identity depends on workers"
+        );
+    }
+}
+
+#[test]
+fn topology_switch_series_bit_identical_across_worker_counts() {
+    let mk = |workers: usize| ExperimentConfig {
+        topology_schedule: "switch:ring,torus:60".into(),
+        ..series_cfg("ring", workers)
+    };
+    let a = run_config(&mk(1), false);
+    let b = run_config(&mk(8), false);
+    assert_eq!(a.to_csv(), b.to_csv(), "switch series diverged");
+    assert!(a.records.last().unwrap().bits > 0);
+}
+
+#[test]
+fn chaos_run_bit_identical_across_worker_counts_with_sparse_mixing() {
+    // Crash/rejoin + partition + corruption exercise `effective_mixing`
+    // (sparse row filtering) and the CSR staleness table; the whole
+    // composition must stay invariant under the pool's interleaving.
+    let run = |workers: usize| {
+        let n = 8;
+        let d = 16;
+        let mixing = uniform_neighbor(&Topology::new(TopologyKind::Ring, n, 0));
+        let mut algo = SparqSgd::new(
+            SparqConfig {
+                mixing,
+                compressor: Box::new(SignTopK::new(4)),
+                trigger: EventTrigger::new(ThresholdSchedule::Zero),
+                lr: LrSchedule::InverseTime { a: 50.0, b: 2.0 },
+                sync: SyncSchedule::EveryH(1),
+                gamma: None,
+                momentum: 0.0,
+                seed: 7,
+            },
+            d,
+        );
+        algo.set_fault_plan(
+            FaultPlan::parse("crash:1:5:20+partition:10:30:0-3|4-7+corrupt:0.1", 7).unwrap(),
+        );
+        algo.set_workers(workers);
+        let mut prob = QuadraticProblem::new(d, n, 0.5, 2.0, 0.05, 1.0, 3);
+        let mut bus = Bus::new(n);
+        for t in 0..40 {
+            algo.step(t, &mut prob, &mut bus);
+        }
+        let params: Vec<Vec<f32>> = (0..n).map(|i| algo.params(i).to_vec()).collect();
+        (params, bus.total_bits, bus.node_bits.clone(), algo.fault_counters())
+    };
+    let (p1, b1, nb1, c1) = run(1);
+    let (p8, b8, nb8, c8) = run(8);
+    assert_eq!(p1, p8, "chaos params diverged across worker counts");
+    assert_eq!(b1, b8);
+    assert_eq!(nb1, nb8);
+    assert_eq!(c1, c8);
+    // the plan engaged — this is a chaos run, not a quiet one
+    assert_eq!(c1.crashes, 1);
+    assert!(c1.resyncs > 0);
+    assert!(c1.corrupt_discards > 0);
+}
+
+// ---------------------------------------------------------------------
+// Scale: O(|E|) storage and a real n = 4096 construction + solve
+// ---------------------------------------------------------------------
+
+#[test]
+fn n4096_construction_and_spectral_solve_run_in_edge_space() {
+    for (kind, degree) in [(TopologyKind::Ring, 2), (TopologyKind::RandomRegular(4), 4)] {
+        let t = Topology::new(kind, 4096, 11);
+        let mm = uniform_neighbor(&t);
+        // Storage is Σ_i deg(i) = 2|E| off-diagonal weights — no n² table.
+        assert_eq!(mm.stored_weights(), 2 * t.edge_count());
+        assert_eq!(mm.stored_weights(), 4096 * degree);
+        mm.validate().unwrap();
+        // The iterative solver handles n = 4096 (dense Jacobi would be
+        // an O(n³) non-starter here) and returns a sane connected-graph
+        // spectrum.
+        let s = SpectralInfo::compute(&mm);
+        assert!((s.lambda1 - 1.0).abs() < 1e-6, "{kind:?}: λ₁={}", s.lambda1);
+        assert!(s.delta > 0.0 && s.delta <= 1.0, "{kind:?}: δ={} out of range", s.delta);
+        assert!(s.beta > 0.0 && s.beta <= 2.0 + 1e-9, "{kind:?}: β={}", s.beta);
+    }
+    // Expander beats ring by orders of magnitude — the footnote-5 claim
+    // the scale-out exists to measure. (10× not 100×: Lanczos Ritz
+    // values sit inside the spectrum, so the ring's tiny true
+    // δ ≈ 7.9e-7 is reported conservatively large.)
+    let ring_t = Topology::new(TopologyKind::Ring, 4096, 11);
+    let reg_t = Topology::new(TopologyKind::RandomRegular(4), 4096, 11);
+    let ring = SpectralInfo::compute(&uniform_neighbor(&ring_t));
+    let reg = SpectralInfo::compute(&uniform_neighbor(&reg_t));
+    assert!(reg.delta > 10.0 * ring.delta, "expander δ {} !≫ ring δ {}", reg.delta, ring.delta);
+}
