@@ -135,14 +135,36 @@ thread_local! {
 /// value, so `select_nth_unstable` runs with integer comparisons instead
 /// of a branchy `partial_cmp` closure — ~2× faster at the MLP scale
 /// (EXPERIMENTS.md §Perf, L3 iteration 3).
+///
+/// Edge-case contract (hardened for untrusted/divergent inputs):
+/// - empty input returns 0.0 (no coordinates, no threshold);
+/// - NaN coordinates are treated as zero magnitude, so they can never win
+///   the selection or poison the threshold. A NaN τ would make
+///   `|x_i| >= τ` false everywhere and silently drop the whole message;
+///   under this rule the finite coordinates still transmit and the NaN
+///   ones are withheld (`NaN >= τ` is false in every selection pass, so
+///   dense and sparse paths agree bit-for-bit).
 pub fn topk_threshold(x: &[f32], k: usize) -> f32 {
     let d = x.len();
+    if d == 0 {
+        return 0.0; // clamp(1, 0) would panic; there is nothing to select
+    }
     let k = k.clamp(1, d);
+    // |x| clears the sign bit; the remaining bits compare like magnitudes
+    // for every finite value and ±inf. NaN payloads sit *above* the inf
+    // bit pattern, so map them to zero magnitude instead.
+    const INF_BITS: u32 = 0x7F80_0000;
     TOPK_SCRATCH.with(|cell| {
         let mut mags = cell.borrow_mut();
         mags.clear();
-        // |x| clears the sign bit; remaining bits compare like magnitudes.
-        mags.extend(x.iter().map(|v| v.to_bits() & 0x7FFF_FFFF));
+        mags.extend(x.iter().map(|v| {
+            let b = v.to_bits() & 0x7FFF_FFFF;
+            if b > INF_BITS {
+                0
+            } else {
+                b
+            }
+        }));
         let (_, tau, _) = mags.select_nth_unstable(d - k);
         f32::from_bits(*tau)
     })
@@ -208,5 +230,59 @@ mod tests {
         let (tau, idx) = topk_threshold_select(&x, 3);
         assert_eq!(tau, 0.0);
         assert_eq!(idx.len(), 8);
+    }
+
+    #[test]
+    fn threshold_empty_input_returns_zero() {
+        // Regression: `k.clamp(1, 0)` used to hit clamp's min > max panic.
+        assert_eq!(topk_threshold(&[], 3), 0.0);
+        let (tau, idx) = topk_threshold_select(&[], 1);
+        assert_eq!(tau, 0.0);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn threshold_nan_never_wins_selection() {
+        // Regression: a single NaN used to win the bit-pattern selection
+        // (NaN payloads order above +inf), making τ NaN and the message
+        // empty. Under the documented rule NaN has zero magnitude.
+        let x = vec![f32::NAN, 3.0, -2.0, 1.0];
+        let (tau, idx) = topk_threshold_select(&x, 2);
+        assert_eq!(tau, 2.0);
+        assert_eq!(idx, vec![1, 2]); // finite drift still flows
+    }
+
+    #[test]
+    fn threshold_all_nan_is_deterministic() {
+        let x = vec![f32::NAN; 4];
+        let (tau, idx) = topk_threshold_select(&x, 2);
+        assert_eq!(tau, 0.0);
+        assert!(idx.is_empty()); // NaN is never transmitted
+    }
+
+    #[test]
+    fn threshold_keeps_infinities_selectable() {
+        let x = vec![f32::INFINITY, 1.0, f32::NAN];
+        let (tau, idx) = topk_threshold_select(&x, 1);
+        assert_eq!(tau, f32::INFINITY);
+        assert_eq!(idx, vec![0]);
+    }
+
+    #[test]
+    fn nan_compress_dense_sparse_bit_identical() {
+        use crate::util::Rng;
+        let x = vec![0.5f32, f32::NAN, -4.0, 3.0, 0.1, f32::NAN];
+        let op = TopK::new(2);
+        let mut rng = Rng::new(7);
+        let dense = op.compress_vec(&x, &mut rng);
+        let mut sv = SparseVec::new();
+        let mut rng2 = Rng::new(7);
+        op.compress_sparse(&x, &mut rng2, &mut sv);
+        let densified = sv.to_dense(x.len());
+        for (a, b) in dense.iter().zip(densified.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the two finite leaders transmit; NaN coordinates are withheld
+        assert_eq!(dense.iter().filter(|v| **v != 0.0).count(), 2);
     }
 }

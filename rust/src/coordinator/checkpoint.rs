@@ -293,23 +293,37 @@ impl Checkpoint {
         }
         let j = Json::parse(&header)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
-        let get = |k: &str| -> u64 { j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+        // Strict header numerics: a *missing* key reads as 0 (additive-key
+        // compatibility across checkpoint versions), but a damaged value —
+        // fractional, negative, non-numeric — is a load error instead of a
+        // silent `as u64` truncation. `n`/`dim` size the binary block
+        // reads below, so a truncated value would desync the whole file.
+        let bad = |k: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("checkpoint header {k:?} is not a non-negative integer"),
+            )
+        };
+        let get = |k: &str| -> std::io::Result<u64> {
+            match j.get(k) {
+                None => Ok(0),
+                Some(v) => v.as_u64().ok_or_else(|| bad(k)),
+            }
+        };
         let flag = |k: &str| -> bool { j.get(k).and_then(Json::as_bool).unwrap_or(false) };
-        let version = get("version");
-        let n = get("n") as usize;
-        let dim = get("dim") as usize;
+        let version = get("version")?;
+        let n = get("n")? as usize;
+        let dim = get("dim")? as usize;
         let has_momentum = flag("has_momentum");
         let has_estimates = version >= 2 && flag("has_estimates");
         let has_rng = version >= 2 && flag("has_rng");
-        let node_bits: Vec<u64> = j
-            .get("node_bits")
-            .and_then(Json::as_arr)
-            .map(|a| {
-                a.iter()
-                    .map(|v| v.as_f64().unwrap_or(0.0) as u64)
-                    .collect()
-            })
-            .unwrap_or_default();
+        let node_bits: Vec<u64> = match j.get("node_bits").and_then(Json::as_arr) {
+            Some(a) => a
+                .iter()
+                .map(|v| v.as_u64().ok_or_else(|| bad("node_bits")))
+                .collect::<std::io::Result<_>>()?,
+            None => Vec::new(),
+        };
 
         let mut read_block = |count: usize| -> std::io::Result<Vec<Vec<f32>>> {
             let mut out = Vec::with_capacity(count);
@@ -341,27 +355,27 @@ impl Checkpoint {
             }
         }
         Ok(Checkpoint {
-            t: get("t"),
+            t: get("t")?,
             algo_name: j
                 .get("algo")
                 .and_then(Json::as_str)
                 .unwrap_or("")
                 .to_string(),
-            total_bits: get("total_bits"),
-            comm_rounds: get("comm_rounds"),
-            total_messages: get("total_messages"),
+            total_bits: get("total_bits")?,
+            comm_rounds: get("comm_rounds")?,
+            total_messages: get("total_messages")?,
             node_bits,
-            fired: get("fired"),
-            checks: get("checks"),
+            fired: get("fired")?,
+            checks: get("checks")?,
             params,
             momentum,
             xhat,
             acc,
             rng,
             fault: FaultCounters {
-                crashes: get("f_crashes"),
-                resyncs: get("f_resyncs"),
-                corrupt_discards: get("f_corrupt"),
+                crashes: get("f_crashes")?,
+                resyncs: get("f_resyncs")?,
+                corrupt_discards: get("f_corrupt")?,
             },
         })
     }
@@ -485,6 +499,29 @@ mod tests {
         assert_eq!(back.total_messages, 0);
         assert!(back.fault.is_zero());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn damaged_header_numeric_is_a_load_error() {
+        // Regression: a fractional/negative header numeric used to
+        // truncate through `as u64` and desync the binary block reads;
+        // it must surface as InvalidData instead.
+        for (k, v) in [("n", "2.5"), ("dim", "-3"), ("t", "1.25")] {
+            let header = format!(
+                r#"{{"version": 1, "t": 7, "n": 2, "dim": 3, "{k}": {v}}}"#
+            );
+            let path = std::env::temp_dir().join(format!(
+                "sparq-ckpt-bad-{k}-{}.bin",
+                std::process::id()
+            ));
+            let mut bytes: Vec<u8> = format!("{header}\n").into_bytes();
+            bytes.extend_from_slice(&[0u8; 24]); // 2×3 f32 params
+            std::fs::write(&path, bytes).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{k}");
+            assert!(err.to_string().contains(k), "{err}");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

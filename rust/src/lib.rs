@@ -36,6 +36,10 @@
 //! * [`run`] — the `Run` handle: one training run as a value
 //!   (step/eval/snapshot/restore + the canonical observer-driven loop
 //!   all runners share).
+//! * [`serve`] — the `sparq serve` daemon: typed spec submission over a
+//!   Unix/TCP socket (CRC-framed JSON), admission control, priority
+//!   scheduling onto the claim/lease worker pool, live event streaming
+//!   to subscribers, crash-safe exactly-once restart takeover.
 //! * [`util`] — offline-environment substrates: deterministic RNG, JSON,
 //!   CLI parsing, stats, bench harness helpers.
 
@@ -54,6 +58,7 @@ pub mod config;
 pub mod run;
 pub mod experiments;
 pub mod sweep;
+pub mod serve;
 pub mod runtime;
 
 /// Crate version (mirrors Cargo.toml).

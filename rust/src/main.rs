@@ -17,6 +17,17 @@
 //!             --lease-margin-secs M]            staleness
 //!   check    --spec spec.json | --config c.json resolve every run of a
 //!                                               spec (config-schema gate)
+//!   serve    --socket sock --out results/       long-lived sweep daemon:
+//!            [--workers N --checkpoint-every C  typed spec submission over
+//!             --lease-secs S --poll-ms P        a Unix/TCP socket, priority
+//!             --lease-margin-secs M --quiet]    scheduling, event streaming,
+//!                                               exactly-once restart takeover
+//!   submit   --socket sock --spec spec.json     submit a spec to a daemon
+//!            [--priority P --wait]              (--wait streams until done)
+//!   watch    --socket sock [--job J --tail]     stream daemon events (JSONL)
+//!   status   --socket sock                      live daemon queue + claim
+//!                                               tables (remote status)
+//!   shutdown --socket sock                      stop a daemon gracefully
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
@@ -41,6 +52,9 @@
 //!   sparq sweep --spec examples/specs/smoke.json --out /tmp/sweep --resume
 //!   sparq sweep --spec grid.json --out /shared/fig1 --distributed=true --lease-secs 60
 //!   sparq sweep report --out /shared/fig1 --target-err 0.15
+//!   sparq serve --socket /tmp/sparq.sock --out /shared/fig1 --workers 8
+//!   sparq submit --socket /tmp/sparq.sock --spec examples/specs/smoke.json --wait
+//!   sparq watch --socket /tmp/sparq.sock --job job-0123456789abcdef
 //!   sparq perfgate --baseline BENCH_sparse_fastpath.json --measured /tmp/bench.json
 //!   sparq fig1b --steps 4000 --out results/
 //!   sparq spectral --topology torus --nodes 16
@@ -58,6 +72,11 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("check") => cmd_check(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("watch") => cmd_watch(&args),
+        Some("status") => cmd_remote_status(&args),
+        Some("shutdown") => cmd_shutdown(&args),
         Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
         Some("spectral") => cmd_spectral(&args),
@@ -69,7 +88,7 @@ fn main() {
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|sweep report|sweep status|check|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|sweep status|check|serve|submit|watch|status|shutdown|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -263,6 +282,181 @@ fn cmd_sweep_status(args: &Args) {
         return;
     }
     print!("{}", status_table(&claims, lease, margin));
+}
+
+fn require_socket(args: &Args, cmd: &str) -> String {
+    // `--remote` is accepted as an alias for `--socket` on the client
+    // commands (reads naturally for `sparq status --remote addr`).
+    match args.get("socket").or_else(|| args.get("remote")) {
+        Some(s) => s.to_string(),
+        None => {
+            eprintln!("{cmd} requires --socket <path|host:port>");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn connect_daemon(socket: &str) -> sparq::serve::Client {
+    sparq::serve::Client::connect_retry(socket, std::time::Duration::from_secs(10))
+        .unwrap_or_else(|e| {
+            eprintln!("connect error: {e}");
+            std::process::exit(1);
+        })
+}
+
+fn cmd_serve(args: &Args) {
+    use sparq::serve::{serve, ServeConfig};
+
+    let socket = require_socket(args, "serve");
+    let Some(out) = args.get("out") else {
+        eprintln!("serve requires --out <dir>");
+        std::process::exit(2);
+    };
+    let cfg = ServeConfig {
+        socket,
+        out: std::path::PathBuf::from(out),
+        workers: args.usize("workers", 0),
+        checkpoint_every: args.u64("checkpoint-every", 0),
+        lease_secs: args.f64("lease-secs", 60.0),
+        lease_margin_secs: args.f64("lease-margin-secs", 2.0),
+        heartbeat_secs: args.f64("heartbeat-secs", 0.0),
+        poll_ms: args.u64("poll-ms", 200),
+        // Test hook (crash simulation for the takeover tests).
+        fault_abort_at: args
+            .get("fault-abort-at")
+            .map(|_| args.u64("fault-abort-at", 0)),
+        verbose: !args.bool("quiet"),
+    };
+    if let Err(e) = serve(cfg) {
+        eprintln!("serve error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_submit(args: &Args) {
+    use sparq::util::json::Json;
+
+    let socket = require_socket(args, "submit");
+    let Some(spec_path) = args.get("spec") else {
+        eprintln!("submit requires --spec spec.json");
+        std::process::exit(2);
+    };
+    let text = std::fs::read_to_string(spec_path).unwrap_or_else(|e| {
+        eprintln!("{spec_path}: {e}");
+        std::process::exit(2);
+    });
+    let spec = Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("{spec_path}: {e}");
+        std::process::exit(2);
+    });
+    let priority = args.f64("priority", 0.0) as i64;
+    let mut client = connect_daemon(&socket);
+    let job = match client.submit(&spec, priority) {
+        Ok((job, runs)) => {
+            println!("accepted {job}: {runs} run(s)");
+            job
+        }
+        Err(e) => {
+            eprintln!("{spec_path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    if args.bool("wait") {
+        let watcher = connect_daemon(&socket);
+        let result = watcher.watch(true, &mut |_seq, event| {
+            if event.get("job").and_then(Json::as_str) != Some(job.as_str()) {
+                return true;
+            }
+            println!("{}", event.to_string());
+            event.get("kind").and_then(Json::as_str) != Some("job-complete")
+        });
+        if let Err(e) = result {
+            eprintln!("watch error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_watch(args: &Args) {
+    use sparq::util::json::Json;
+
+    let socket = require_socket(args, "watch");
+    let job_filter = args.get("job").map(str::to_string);
+    // Default replays the daemon's full event log; --tail streams only
+    // events published after this subscriber attached.
+    let from_start = !args.bool("tail");
+    let client = connect_daemon(&socket);
+    let result = client.watch(from_start, &mut |seq, event| {
+        if let Some(jf) = &job_filter {
+            if event.get("job").and_then(Json::as_str) != Some(jf.as_str()) {
+                return true;
+            }
+            println!("{}", event.to_string());
+            // With a job filter, the stream is finite: stop at the
+            // job's completion record.
+            return event.get("kind").and_then(Json::as_str) != Some("job-complete");
+        }
+        println!("[{seq}] {}", event.to_string());
+        true
+    });
+    if let Err(e) = result {
+        eprintln!("watch error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_remote_status(args: &Args) {
+    let socket = require_socket(args, "status");
+    let mut client = connect_daemon(&socket);
+    let (jobs, claims) = client.status().unwrap_or_else(|e| {
+        eprintln!("status error: {e}");
+        std::process::exit(1);
+    });
+    if jobs.is_empty() {
+        println!("no jobs submitted");
+    } else {
+        println!(
+            "{:<22} {:<20} {:>8} {:>12} {:>7} {:<9}",
+            "job", "name", "priority", "done/total", "failed", "state"
+        );
+        for j in &jobs {
+            println!(
+                "{:<22} {:<20} {:>8} {:>12} {:>7} {:<9}",
+                j.job,
+                j.name,
+                j.priority,
+                format!("{}/{}", j.done, j.total),
+                j.failed,
+                j.state
+            );
+        }
+    }
+    if claims.is_empty() {
+        println!("no held claims");
+    } else {
+        println!(
+            "\n{:<18} {:<22} {:>10} {:>11}",
+            "claim", "owner", "age (s)", "heartbeats"
+        );
+        for c in &claims {
+            println!(
+                "{:<18} {:<22} {:>10.1} {:>11}",
+                c.id, c.owner, c.age_secs, c.heartbeats
+            );
+        }
+    }
+}
+
+fn cmd_shutdown(args: &Args) {
+    let socket = require_socket(args, "shutdown");
+    let mut client = connect_daemon(&socket);
+    match client.shutdown() {
+        Ok(()) => println!("daemon at {socket} shutting down"),
+        Err(e) => {
+            eprintln!("shutdown error: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 /// Config-schema gate: feed a sweep spec (or a single config) through

@@ -41,7 +41,7 @@
 //! assert!(series.records.last().unwrap().opt_gap < series.records[0].opt_gap);
 //! ```
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::comm::Bus;
 use crate::config::ResolvedConfig;
@@ -49,6 +49,7 @@ use crate::coordinator::{checkpoint, Checkpoint, DecentralizedAlgo};
 use crate::metrics::{RoundRecord, Series};
 use crate::problems::GradientSource;
 use crate::sweep::cache::ArtifactCache;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// A run-lifecycle event (used by the sweep engine's scheduling-order
@@ -76,8 +77,98 @@ pub enum RunEvent {
     },
 }
 
+impl RunEvent {
+    /// Serialize for wire transport (the serve daemon streams these to
+    /// its subscribers as `{"kind": ..., ...}` objects).
+    pub fn to_json(&self) -> Json {
+        match self {
+            RunEvent::Started {
+                id,
+                label,
+                node_workers,
+            } => Json::obj()
+                .set("kind", "started")
+                .set("id", id.as_str())
+                .set("label", label.as_str())
+                .set("node_workers", *node_workers),
+            RunEvent::Finished {
+                id,
+                label,
+                completed,
+                stopped,
+            } => Json::obj()
+                .set("kind", "finished")
+                .set("id", id.as_str())
+                .set("label", label.as_str())
+                .set("completed", *completed)
+                .set("stopped", *stopped),
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); `None` for unknown kinds
+    /// (a subscriber must skip, not crash on, event kinds newer than
+    /// itself — the serve stream also carries job-level events).
+    pub fn from_json(j: &Json) -> Option<RunEvent> {
+        let s = |key: &str| j.get(key).and_then(Json::as_str).map(str::to_string);
+        let b = |key: &str| j.get(key).and_then(Json::as_bool).unwrap_or(false);
+        match j.get("kind").and_then(Json::as_str) {
+            Some("started") => Some(RunEvent::Started {
+                id: s("id")?,
+                label: s("label")?,
+                node_workers: j.get("node_workers").and_then(Json::as_usize).unwrap_or(1),
+            }),
+            Some("finished") => Some(RunEvent::Finished {
+                id: s("id")?,
+                label: s("label")?,
+                completed: b("completed"),
+                stopped: b("stopped"),
+            }),
+            _ => None,
+        }
+    }
+}
+
 /// Lifecycle-event callback (called from run worker threads).
 pub type EventHook = Arc<dyn Fn(&RunEvent) + Send + Sync>;
+
+/// Fan one lifecycle-event stream out to many dynamically registered
+/// sinks. A `Run` (or sweep) observes a single [`EventHook`]; the serve
+/// daemon needs every event delivered to a durable log *and* to any
+/// number of live subscribers that come and go — this is the
+/// multiplexing point. Sinks registered mid-stream see only subsequent
+/// events; delivery order within one event is registration order.
+#[derive(Default)]
+pub struct EventFanout {
+    sinks: Mutex<Vec<EventHook>>,
+}
+
+impl EventFanout {
+    pub fn new() -> EventFanout {
+        EventFanout::default()
+    }
+
+    /// Register a sink for all subsequent events.
+    pub fn add(&self, sink: EventHook) {
+        self.sinks.lock().unwrap().push(sink);
+    }
+
+    /// Deliver one event to every registered sink.
+    pub fn emit(&self, event: &RunEvent) {
+        // Snapshot under the lock, call outside it: a sink is allowed
+        // to register further sinks without deadlocking.
+        let sinks: Vec<EventHook> = self.sinks.lock().unwrap().clone();
+        for sink in &sinks {
+            sink(event);
+        }
+    }
+
+    /// An [`EventHook`] that forwards into this fanout — plug it into
+    /// [`Run::observe`] or `SweepOptions::on_event`.
+    pub fn hook(self: &Arc<Self>) -> EventHook {
+        let fan = Arc::clone(self);
+        Arc::new(move |e: &RunEvent| fan.emit(e))
+    }
+}
 
 /// Observer of one [`Run::drive`] invocation. Every method has a no-op
 /// default, so implementors opt into exactly the decision points they
@@ -614,5 +705,54 @@ mod tests {
         );
         run.run_to_end().unwrap();
         assert_eq!(run.series().to_csv(), owned.to_csv());
+    }
+
+    #[test]
+    fn run_event_json_round_trips() {
+        let events = [
+            RunEvent::Started {
+                id: "abc".into(),
+                label: "grid:a".into(),
+                node_workers: 4,
+            },
+            RunEvent::Finished {
+                id: "abc".into(),
+                label: "grid:a".into(),
+                completed: true,
+                stopped: false,
+            },
+        ];
+        for e in &events {
+            let j = e.to_json();
+            let back = RunEvent::from_json(&j).expect("round trip");
+            assert_eq!(format!("{e:?}"), format!("{back:?}"));
+        }
+        // Unknown kinds are skipped, not errors: the serve stream also
+        // carries job-level events.
+        assert!(RunEvent::from_json(&Json::obj().set("kind", "job-complete")).is_none());
+    }
+
+    #[test]
+    fn fanout_delivers_to_all_sinks_in_order() {
+        let fan = Arc::new(EventFanout::new());
+        let log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        for tag in ["a", "b"] {
+            let sink = Arc::clone(&log);
+            fan.add(Arc::new(move |e: &RunEvent| {
+                if let RunEvent::Finished { id, .. } = e {
+                    sink.lock().unwrap().push(format!("{tag}/{id}"));
+                }
+            }));
+        }
+        fan.hook()(&RunEvent::Finished {
+            id: "x".into(),
+            label: "l".into(),
+            completed: true,
+            stopped: false,
+        });
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec!["a/x".to_string(), "b/x".to_string()]
+        );
     }
 }

@@ -1,0 +1,144 @@
+//! Thin client for the `sparq serve` daemon (the `sparq submit` /
+//! `sparq watch` / `sparq status --socket` / `sparq shutdown` CLI
+//! surface, and the test harness's programmatic handle).
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::protocol::{
+    parse_payload, read_frame, write_frame, write_msg, ClaimView, FrameIn, JobStatus, Request,
+    Response, Stream,
+};
+
+/// One connected client. Requests are strictly serial: send one framed
+/// request, read one framed response ([`watch`](Client::watch) upgrades
+/// the connection to a one-way event stream instead).
+pub struct Client {
+    stream: Stream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        Stream::connect(addr).map(|stream| Client { stream })
+    }
+
+    /// Connect, retrying until `timeout` (daemon startup races: the
+    /// socket appears slightly after the daemon process does).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client, String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(format!("{e} (gave up after {timeout:?})"))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    }
+
+    /// Send one request, read one response.
+    pub fn request(&mut self, req: &Request) -> Result<Response, String> {
+        write_msg(&mut self.stream, &req.to_json())?;
+        self.read_response()
+    }
+
+    /// Read one framed [`Response`] (blocking).
+    pub fn read_response(&mut self) -> Result<Response, String> {
+        match read_frame(&mut self.stream, &|| false)? {
+            FrameIn::Msg(p) => {
+                let j = parse_payload(&p)?;
+                Response::from_json(&j)
+            }
+            FrameIn::Corrupt { error, .. } => Err(format!("corrupt response frame: {error}")),
+            FrameIn::Eof | FrameIn::Stopped => Err("connection closed by daemon".into()),
+        }
+    }
+
+    /// Send raw pre-framed bytes (protocol tests inject corrupt frames
+    /// through this).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), String> {
+        use std::io::Write;
+        self.stream
+            .write_all(bytes)
+            .and_then(|_| self.stream.flush())
+            .map_err(|e| format!("write: {e}"))
+    }
+
+    /// Send an arbitrary framed payload (valid CRC, caller-chosen
+    /// content).
+    pub fn send_payload(&mut self, payload: &[u8]) -> Result<(), String> {
+        write_frame(&mut self.stream, payload)
+    }
+
+    /// Liveness probe; returns the daemon's version string.
+    pub fn ping(&mut self) -> Result<String, String> {
+        match self.request(&Request::Ping)? {
+            Response::Pong { version } => Ok(version),
+            other => Err(format!("unexpected reply to ping: {other:?}")),
+        }
+    }
+
+    /// Submit a sweep spec; `Ok((job, runs))` on admission,
+    /// `Err(admission error)` on rejection.
+    pub fn submit(&mut self, spec: &Json, priority: i64) -> Result<(String, usize), String> {
+        let req = Request::Submit {
+            spec: spec.clone(),
+            priority,
+        };
+        match self.request(&req)? {
+            Response::Accepted { job, runs } => Ok((job, runs)),
+            Response::Rejected { error } => Err(error),
+            other => Err(format!("unexpected reply to submit: {other:?}")),
+        }
+    }
+
+    /// Queue + claim snapshot.
+    pub fn status(&mut self) -> Result<(Vec<JobStatus>, Vec<ClaimView>), String> {
+        match self.request(&Request::Status)? {
+            Response::Status { jobs, claims } => Ok((jobs, claims)),
+            other => Err(format!("unexpected reply to status: {other:?}")),
+        }
+    }
+
+    /// Ask the daemon to shut down gracefully.
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        match self.request(&Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            other => Err(format!("unexpected reply to shutdown: {other:?}")),
+        }
+    }
+
+    /// Upgrade to a subscription and stream events into `on_event`
+    /// until it returns `false` or the daemon closes the stream.
+    /// Consumes the client — a watch connection carries nothing else.
+    pub fn watch(
+        mut self,
+        from_start: bool,
+        on_event: &mut dyn FnMut(u64, &Json) -> bool,
+    ) -> Result<(), String> {
+        write_msg(&mut self.stream, &Request::Watch { from_start }.to_json())?;
+        loop {
+            match read_frame(&mut self.stream, &|| false)? {
+                FrameIn::Msg(p) => {
+                    let j = parse_payload(&p)?;
+                    match Response::from_json(&j)? {
+                        Response::Event { seq, event } => {
+                            if !on_event(seq, &event) {
+                                return Ok(());
+                            }
+                        }
+                        Response::Error { error } => return Err(error),
+                        other => return Err(format!("unexpected frame in stream: {other:?}")),
+                    }
+                }
+                FrameIn::Corrupt { error, .. } => {
+                    return Err(format!("corrupt event frame: {error}"))
+                }
+                // Daemon shut down: the stream is complete.
+                FrameIn::Eof | FrameIn::Stopped => return Ok(()),
+            }
+        }
+    }
+}

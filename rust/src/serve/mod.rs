@@ -1,0 +1,37 @@
+//! `sparq serve` — a long-lived, multi-tenant sweep service daemon.
+//!
+//! The sweep engine (ISSUE 3) runs one grid per invocation; the
+//! distributed layer (ISSUE 4) lets N transient processes share a grid.
+//! This module closes the remaining gap for shared-cluster use: a
+//! **daemon** that owns an output directory and a worker budget
+//! permanently, and accepts work over a socket —
+//!
+//! * [`protocol`] — the wire protocol: CRC-framed (`comm::wire`) JSON
+//!   request/response messages, with every decode layer fallible and
+//!   bounded (this PR's input-hardening bugfixes — depth-limited JSON
+//!   parsing, exact-integer `as_usize` — sit on this path).
+//! * [`server`] — admission control (`SweepSpec::from_json` →
+//!   `expand()` → per-run `ExperimentConfig::resolve()`, rejecting with
+//!   `sparq check`'s exact text), priority scheduling onto the
+//!   claim/lease worker loop shared with `sweep::run_distributed`, a
+//!   sequence-numbered event hub fanned out to any number of
+//!   subscribers, and durable job files under `<out>/jobs/` so a
+//!   restarted daemon completes a killed daemon's work exactly once,
+//!   bit-for-bit.
+//! * [`client`] — the thin typed client behind `sparq submit`, `sparq
+//!   watch`, `sparq status --socket`, and `sparq shutdown`.
+//!
+//! EXPERIMENTS.md §Serve documents the protocol, the admission
+//! semantics, and the restart-takeover verification procedure;
+//! `rust/tests/serve_system.rs` pins all three end to end over a real
+//! socket.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use protocol::{
+    is_tcp_addr, ClaimView, JobStatus, Request, Response, Stream, MAX_FRAME_BYTES,
+};
+pub use server::{serve, spawn, ServeConfig, ServerHandle};

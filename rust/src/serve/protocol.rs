@@ -1,0 +1,610 @@
+//! The serve wire protocol: CRC-framed JSON messages over a byte stream.
+//!
+//! Transport framing reuses the PR 6 codec (`comm::wire::frame` /
+//! `unframe`): every message is `[len:u32 LE][crc32:u32 LE][payload]`
+//! where the payload is one UTF-8 JSON object carrying a `"type"` tag.
+//! The socket is the crate's first genuinely untrusted input boundary,
+//! so every decode layer is fallible and bounded:
+//!
+//! * the declared length is capped at [`MAX_FRAME_BYTES`] (an insane
+//!   length field means the stream is garbage — fatal for the
+//!   connection, since framing sync is lost);
+//! * a checksum mismatch with a sane length keeps the stream in sync —
+//!   the server answers [`Response::Error`] and keeps the connection;
+//! * payloads go through `util::json` (depth-bounded since this PR) and
+//!   the typed [`Request`]/[`Response`] parsers, which reject unknown
+//!   tags and ill-typed fields with a message instead of panicking.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use crate::comm::wire::{frame, unframe, FRAME_OVERHEAD};
+use crate::util::json::Json;
+
+/// Hard cap on one frame's declared payload length. Specs are a few KB;
+/// anything near this is a corrupted or hostile length field.
+pub const MAX_FRAME_BYTES: usize = 8 * 1024 * 1024;
+
+/// One client → server message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness probe; answered with [`Response::Pong`].
+    Ping,
+    /// Submit a sweep spec (the JSON form of `sweep::SweepSpec`) for
+    /// execution. Higher `priority` schedules first; ties run in
+    /// submission order.
+    Submit { spec: Json, priority: i64 },
+    /// Switch this connection to a subscription: the server streams
+    /// [`Response::Event`] frames until either side closes. With
+    /// `from_start`, the full event log since daemon start replays
+    /// first, so every subscriber observes the identical sequence.
+    Watch { from_start: bool },
+    /// Snapshot the job queue and the live claim/heartbeat table.
+    Status,
+    /// Gracefully stop the daemon (in-flight runs are abandoned to
+    /// their checkpoints + claims, exactly like a crash — the next
+    /// daemon takes them over bit-identically).
+    Shutdown,
+}
+
+/// One server → client message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Liveness answer (`version` is the daemon's crate version).
+    Pong { version: String },
+    /// A submission passed admission: `runs` expanded runs under `job`.
+    Accepted { job: String, runs: usize },
+    /// A submission failed admission (spec parse, config resolve, or a
+    /// run-id collision). The text matches what `sparq check` prints
+    /// for the same spec.
+    Rejected { error: String },
+    /// Queue + claim snapshot.
+    Status {
+        jobs: Vec<JobStatus>,
+        claims: Vec<ClaimView>,
+    },
+    /// One subscription event. `seq` is the event's index in the
+    /// daemon-lifetime log (contiguous from 0 for `from_start`
+    /// subscribers).
+    Event { seq: u64, event: Json },
+    /// A malformed frame or request (the connection stays open when
+    /// framing sync is intact).
+    Error { error: String },
+    /// Plain acknowledgement (shutdown).
+    Ok,
+}
+
+/// One job's row in a [`Response::Status`] snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobStatus {
+    pub job: String,
+    pub name: String,
+    pub priority: i64,
+    /// Expanded runs in the job.
+    pub total: usize,
+    /// Runs with a durable result record.
+    pub done: usize,
+    /// Runs that failed deterministically (not retried until restart).
+    pub failed: usize,
+    /// "queued" | "running" | "complete".
+    pub state: String,
+}
+
+/// One held claim in a [`Response::Status`] snapshot (the same fields
+/// `sparq sweep status` renders, serialized for the remote endpoint).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClaimView {
+    pub id: String,
+    pub owner: String,
+    pub age_secs: f64,
+    pub heartbeats: u64,
+}
+
+impl JobStatus {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("job", self.job.as_str())
+            .set("name", self.name.as_str())
+            .set("priority", self.priority)
+            .set("total", self.total)
+            .set("done", self.done)
+            .set("failed", self.failed)
+            .set("state", self.state.as_str())
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobStatus, String> {
+        Ok(JobStatus {
+            job: req_str(j, "job")?,
+            name: req_str(j, "name")?,
+            priority: j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64,
+            total: req_usize(j, "total")?,
+            done: req_usize(j, "done")?,
+            failed: req_usize(j, "failed")?,
+            state: req_str(j, "state")?,
+        })
+    }
+}
+
+impl ClaimView {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("owner", self.owner.as_str())
+            .set("age_secs", crate::metrics::float_json(self.age_secs))
+            .set("heartbeats", self.heartbeats)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClaimView, String> {
+        Ok(ClaimView {
+            id: req_str(j, "id")?,
+            owner: req_str(j, "owner")?,
+            age_secs: j
+                .get("age_secs")
+                .map(crate::metrics::json_f64_lossy)
+                .unwrap_or(f64::NAN),
+            heartbeats: j.get("heartbeats").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("message missing string field {key:?}"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("message field {key:?} must be a non-negative integer"))
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj().set("type", "ping"),
+            Request::Submit { spec, priority } => Json::obj()
+                .set("type", "submit")
+                .set("spec", spec.clone())
+                .set("priority", *priority),
+            Request::Watch { from_start } => Json::obj()
+                .set("type", "watch")
+                .set("from_start", *from_start),
+            Request::Status => Json::obj().set("type", "status"),
+            Request::Shutdown => Json::obj().set("type", "shutdown"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("ping") => Ok(Request::Ping),
+            Some("submit") => Ok(Request::Submit {
+                spec: j.get("spec").cloned().ok_or("submit carries no spec")?,
+                priority: j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64,
+            }),
+            Some("watch") => Ok(Request::Watch {
+                from_start: j.get("from_start").and_then(Json::as_bool).unwrap_or(true),
+            }),
+            Some("status") => Ok(Request::Status),
+            Some("shutdown") => Ok(Request::Shutdown),
+            Some(other) => Err(format!("unknown request type {other:?}")),
+            None => Err("request has no type field".into()),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Pong { version } => Json::obj()
+                .set("type", "pong")
+                .set("version", version.as_str()),
+            Response::Accepted { job, runs } => Json::obj()
+                .set("type", "accepted")
+                .set("job", job.as_str())
+                .set("runs", *runs),
+            Response::Rejected { error } => Json::obj()
+                .set("type", "rejected")
+                .set("error", error.as_str()),
+            Response::Status { jobs, claims } => Json::obj()
+                .set("type", "status")
+                .set(
+                    "jobs",
+                    Json::Arr(jobs.iter().map(JobStatus::to_json).collect()),
+                )
+                .set(
+                    "claims",
+                    Json::Arr(claims.iter().map(ClaimView::to_json).collect()),
+                ),
+            Response::Event { seq, event } => Json::obj()
+                .set("type", "event")
+                .set("seq", *seq)
+                .set("event", event.clone()),
+            Response::Error { error } => Json::obj()
+                .set("type", "error")
+                .set("error", error.as_str()),
+            Response::Ok => Json::obj().set("type", "ok"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("pong") => Ok(Response::Pong {
+                version: req_str(j, "version")?,
+            }),
+            Some("accepted") => Ok(Response::Accepted {
+                job: req_str(j, "job")?,
+                runs: req_usize(j, "runs")?,
+            }),
+            Some("rejected") => Ok(Response::Rejected {
+                error: req_str(j, "error")?,
+            }),
+            Some("status") => {
+                let arr = |key: &str| -> Result<Vec<Json>, String> {
+                    j.get(key)
+                        .and_then(Json::as_arr)
+                        .map(<[Json]>::to_vec)
+                        .ok_or_else(|| format!("status carries no {key} array"))
+                };
+                Ok(Response::Status {
+                    jobs: arr("jobs")?
+                        .iter()
+                        .map(JobStatus::from_json)
+                        .collect::<Result<_, _>>()?,
+                    claims: arr("claims")?
+                        .iter()
+                        .map(ClaimView::from_json)
+                        .collect::<Result<_, _>>()?,
+                })
+            }
+            Some("event") => Ok(Response::Event {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_u64)
+                    .ok_or("event has no seq")?,
+                event: j.get("event").cloned().ok_or("event carries no body")?,
+            }),
+            Some("error") => Ok(Response::Error {
+                error: req_str(j, "error")?,
+            }),
+            Some("ok") => Ok(Response::Ok),
+            Some(other) => Err(format!("unknown response type {other:?}")),
+            None => Err("response has no type field".into()),
+        }
+    }
+}
+
+/// What one [`read_frame`] call produced.
+#[derive(Debug)]
+pub enum FrameIn {
+    /// A checksum-verified payload.
+    Msg(Vec<u8>),
+    /// A detected-corrupt frame. `fatal` means framing sync is lost
+    /// (insane length field) and the connection must close; otherwise
+    /// the stream is still aligned and the next frame is readable.
+    Corrupt { error: String, fatal: bool },
+    /// The peer closed the stream at a frame boundary.
+    Eof,
+    /// `should_stop` returned true while waiting for bytes.
+    Stopped,
+}
+
+/// Write one framed message.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), String> {
+    w.write_all(&frame(payload))
+        .and_then(|_| w.flush())
+        .map_err(|e| format!("write: {e}"))
+}
+
+/// Serialize + frame + send a message (request or response side).
+pub fn write_msg(w: &mut impl Write, msg: &Json) -> Result<(), String> {
+    write_frame(w, msg.to_string().as_bytes())
+}
+
+/// Read one frame. Read-timeout errors (`WouldBlock`/`TimedOut`) poll
+/// `should_stop` and keep accumulating, so a server thread parked on a
+/// quiet connection still notices shutdown; mid-frame EOF is corrupt
+/// (truncated), EOF at a frame boundary is a clean close.
+pub fn read_frame(r: &mut impl Read, should_stop: &dyn Fn() -> bool) -> Result<FrameIn, String> {
+    let mut hdr = [0u8; FRAME_OVERHEAD];
+    match read_exact_stoppable(r, &mut hdr, true, should_stop)? {
+        ReadEnd::Done => {}
+        ReadEnd::Eof => return Ok(FrameIn::Eof),
+        ReadEnd::Stopped => return Ok(FrameIn::Stopped),
+        ReadEnd::Truncated => {
+            return Ok(FrameIn::Corrupt {
+                error: "truncated frame header".into(),
+                fatal: true,
+            })
+        }
+    }
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Ok(FrameIn::Corrupt {
+            error: format!("frame declares {len} payload bytes (cap {MAX_FRAME_BYTES})"),
+            fatal: true,
+        });
+    }
+    let mut buf = vec![0u8; FRAME_OVERHEAD + len];
+    buf[..FRAME_OVERHEAD].copy_from_slice(&hdr);
+    match read_exact_stoppable(r, &mut buf[FRAME_OVERHEAD..], false, should_stop)? {
+        ReadEnd::Done => {}
+        ReadEnd::Stopped => return Ok(FrameIn::Stopped),
+        ReadEnd::Eof | ReadEnd::Truncated => {
+            return Ok(FrameIn::Corrupt {
+                error: "truncated frame payload".into(),
+                fatal: true,
+            })
+        }
+    }
+    match unframe(&buf) {
+        Ok(payload) => Ok(FrameIn::Msg(payload.to_vec())),
+        // Length matched and the CRC failed: the stream is still frame-
+        // aligned, so the connection survives the bad message.
+        Err(e) => Ok(FrameIn::Corrupt {
+            error: e.to_string(),
+            fatal: false,
+        }),
+    }
+}
+
+enum ReadEnd {
+    Done,
+    /// EOF before the first byte (only reported when `eof_ok`).
+    Eof,
+    /// EOF after a partial read.
+    Truncated,
+    Stopped,
+}
+
+fn read_exact_stoppable(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    eof_ok: bool,
+    should_stop: &dyn Fn() -> bool,
+) -> Result<ReadEnd, String> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Ok(if filled == 0 && eof_ok {
+                    ReadEnd::Eof
+                } else {
+                    ReadEnd::Truncated
+                })
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if should_stop() {
+                    return Ok(ReadEnd::Stopped);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(format!("read: {e}")),
+        }
+    }
+    Ok(ReadEnd::Done)
+}
+
+/// Whether a `--socket` operand names a TCP endpoint: anything with a
+/// `:` and no `/` is `host:port`; everything else is a Unix socket
+/// path.
+pub fn is_tcp_addr(s: &str) -> bool {
+    !s.contains('/') && s.contains(':')
+}
+
+/// One connected duplex byte stream, Unix or TCP (both sides of the
+/// protocol are transport-agnostic above this enum).
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to a daemon at a `--socket` operand (see [`is_tcp_addr`]).
+    pub fn connect(addr: &str) -> Result<Stream, String> {
+        if is_tcp_addr(addr) {
+            TcpStream::connect(addr)
+                .map(Stream::Tcp)
+                .map_err(|e| format!("{addr}: {e}"))
+        } else {
+            #[cfg(unix)]
+            {
+                UnixStream::connect(addr)
+                    .map(Stream::Unix)
+                    .map_err(|e| format!("{addr}: {e}"))
+            }
+            #[cfg(not(unix))]
+            Err(format!(
+                "{addr}: unix socket paths are unsupported on this platform; use host:port"
+            ))
+        }
+    }
+
+    /// Bound blocking reads (lets server threads poll a shutdown flag).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<(), String> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d).map_err(|e| e.to_string()),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d).map_err(|e| e.to_string()),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Decode a checksum-verified payload into a parsed JSON message.
+pub fn parse_payload(payload: &[u8]) -> Result<Json, String> {
+    let text = std::str::from_utf8(payload).map_err(|e| format!("payload is not UTF-8: {e}"))?;
+    Json::parse(text).map_err(|e| format!("payload is not JSON: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let j = req.to_json();
+        assert_eq!(Request::from_json(&j).unwrap(), req);
+        // and through the byte layer
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &j).unwrap();
+        let mut r = wire.as_slice();
+        match read_frame(&mut r, &|| false).unwrap() {
+            FrameIn::Msg(p) => {
+                let back = parse_payload(&p).unwrap();
+                assert_eq!(Request::from_json(&back).unwrap(), req);
+            }
+            other => panic!("expected Msg, got {other:?}"),
+        }
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let j = resp.to_json();
+        assert_eq!(Response::from_json(&j).unwrap(), resp);
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &j).unwrap();
+        let mut r = wire.as_slice();
+        match read_frame(&mut r, &|| false).unwrap() {
+            FrameIn::Msg(p) => {
+                let back = parse_payload(&p).unwrap();
+                assert_eq!(Response::from_json(&back).unwrap(), resp);
+            }
+            other => panic!("expected Msg, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_request_kind_round_trips() {
+        roundtrip_req(Request::Ping);
+        roundtrip_req(Request::Submit {
+            spec: Json::obj().set("name", "grid").set("base", Json::obj()),
+            priority: -3,
+        });
+        roundtrip_req(Request::Watch { from_start: true });
+        roundtrip_req(Request::Watch { from_start: false });
+        roundtrip_req(Request::Status);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_response_kind_round_trips() {
+        roundtrip_resp(Response::Pong {
+            version: "0.1.0".into(),
+        });
+        roundtrip_resp(Response::Accepted {
+            job: "job-12ab".into(),
+            runs: 8,
+        });
+        roundtrip_resp(Response::Rejected {
+            error: "run \"a\" (grid): steps: must be positive".into(),
+        });
+        roundtrip_resp(Response::Status {
+            jobs: vec![JobStatus {
+                job: "job-12ab".into(),
+                name: "grid".into(),
+                priority: 5,
+                total: 8,
+                done: 3,
+                failed: 1,
+                state: "running".into(),
+            }],
+            claims: vec![ClaimView {
+                id: "abc".into(),
+                owner: "w-1".into(),
+                age_secs: 1.5,
+                heartbeats: 4,
+            }],
+        });
+        roundtrip_resp(Response::Event {
+            seq: 7,
+            event: Json::obj().set("kind", "started").set("id", "abc"),
+        });
+        roundtrip_resp(Response::Error {
+            error: "bad frame".into(),
+        });
+        roundtrip_resp(Response::Ok);
+    }
+
+    #[test]
+    fn bit_flip_is_nonfatal_corrupt() {
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &Request::Ping.to_json()).unwrap();
+        wire[FRAME_OVERHEAD] ^= 0x10; // flip a payload bit
+        let mut r = wire.as_slice();
+        match read_frame(&mut r, &|| false).unwrap() {
+            FrameIn::Corrupt { error, fatal } => {
+                assert!(!fatal, "payload corruption keeps framing sync");
+                assert!(error.contains("checksum"), "{error}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn insane_length_is_fatal_corrupt() {
+        let mut wire = vec![0xffu8; FRAME_OVERHEAD];
+        wire.extend_from_slice(b"garbage");
+        let mut r = wire.as_slice();
+        match read_frame(&mut r, &|| false).unwrap() {
+            FrameIn::Corrupt { fatal, .. } => assert!(fatal),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_and_clean_eof() {
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &Request::Status.to_json()).unwrap();
+        let cut = &wire[..wire.len() - 2];
+        let mut r = cut;
+        match read_frame(&mut r, &|| false).unwrap() {
+            FrameIn::Corrupt { fatal, .. } => assert!(fatal),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let mut empty: &[u8] = &[];
+        assert!(matches!(
+            read_frame(&mut empty, &|| false).unwrap(),
+            FrameIn::Eof
+        ));
+    }
+
+    #[test]
+    fn unknown_types_are_rejected() {
+        let j = Json::obj().set("type", "mystery");
+        assert!(Request::from_json(&j).is_err());
+        assert!(Response::from_json(&j).is_err());
+        assert!(Request::from_json(&Json::obj()).is_err());
+    }
+}

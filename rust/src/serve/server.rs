@@ -1,0 +1,1147 @@
+//! The `sparq serve` daemon: a long-lived, multi-tenant sweep service.
+//!
+//! One daemon owns one output directory and a worker budget; any number
+//! of clients connect over a Unix or TCP socket to submit sweep specs,
+//! subscribe to the run-lifecycle event stream, or inspect the queue
+//! and the live claim table. The scheduler is the same claim/lease
+//! worker loop `sweep::run_distributed` uses (claim → re-check recorded
+//! → execute with heartbeat ticks → re-verify ownership → persist →
+//! release), so everything that protocol guarantees carries over:
+//!
+//! * **Exactly-once recording.** A run's result is appended once, no
+//!   matter how many daemons (or `sparq sweep --distributed` processes)
+//!   share the output directory, and no matter how often a daemon is
+//!   killed and restarted.
+//! * **Restart takeover.** A killed daemon's in-flight runs leave their
+//!   claims and mid-run checkpoints behind; the next daemon over the
+//!   same directory re-admits the persisted jobs from `<out>/jobs/`,
+//!   takes the stale claims over, and resumes from the checkpoints
+//!   **bit-for-bit** — per-run series equal a serial sweep's exactly.
+//! * **Budget sharing.** All tenants' runs draw from one
+//!   `NodeBudget::Dynamic` pool: the node-worker split widens as the
+//!   queue drains, and never affects results.
+//!
+//! Admission is strict: a submitted spec goes through
+//! `SweepSpec::from_json` → `expand()` → per-run
+//! `ExperimentConfig::resolve()`, and any failure rejects the whole job
+//! with the same text `sparq check` prints — malformed work is refused
+//! at the door, never half-executed.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ExperimentConfig;
+use crate::run::{EventFanout, RunEvent};
+use crate::sweep::cache::ArtifactCache;
+use crate::sweep::distributed::{
+    default_owner, list_claims, now_secs, Acquire, ClaimStore, CompletedIndex,
+};
+use crate::sweep::runner::{
+    execute_one, load_completed, persist, reject_duplicate_ids, NodeBudget, SweepOptions,
+};
+use crate::sweep::spec::{config_hash, fnv64, SweepSpec};
+use crate::util::json::Json;
+
+use super::protocol::{
+    is_tcp_addr, parse_payload, read_frame, write_msg, ClaimView, FrameIn, JobStatus, Request,
+    Response, Stream,
+};
+
+/// Daemon configuration (the `sparq serve` CLI surface).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// `--socket`: a Unix socket path, or `host:port` for TCP (see
+    /// [`is_tcp_addr`]).
+    pub socket: String,
+    /// Output directory shared by every tenant (`results.jsonl`,
+    /// `series/`, `ckpt/`, `claims/`, `jobs/`).
+    pub out: PathBuf,
+    /// Total worker budget shared across all queued runs (0 ⇒ available
+    /// CPUs). Never affects results.
+    pub workers: usize,
+    /// Mid-run checkpoint cadence (iterations; 0 ⇒ never). Restart
+    /// takeover resumes killed runs from these snapshots.
+    pub checkpoint_every: u64,
+    /// Claim/lease knobs — same semantics as `sparq sweep
+    /// --distributed`.
+    pub lease_secs: f64,
+    pub lease_margin_secs: f64,
+    pub heartbeat_secs: f64,
+    /// Scheduler poll interval while runs are held by other processes.
+    pub poll_ms: u64,
+    /// Fault-injection hook (tests/CI): every run abandons at this
+    /// iteration and the daemon exits nonzero with claims and
+    /// checkpoints left in place — a deterministic stand-in for
+    /// `kill -9` mid-grid.
+    pub fault_abort_at: Option<u64>,
+    /// Per-run progress lines on stdout.
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            socket: String::new(),
+            out: PathBuf::new(),
+            workers: 1,
+            checkpoint_every: 0,
+            lease_secs: 60.0,
+            lease_margin_secs: 2.0,
+            heartbeat_secs: 0.0,
+            poll_ms: 200,
+            fault_abort_at: None,
+            verbose: false,
+        }
+    }
+}
+
+/// How often a parked connection read re-checks the shutdown flag.
+const CONN_POLL: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+// ---------------------------------------------------------------------
+// Event hub
+// ---------------------------------------------------------------------
+
+/// Daemon-lifetime event log + condvar: every subscriber replays from
+/// any offset and blocks for new events, so all subscribers observe the
+/// identical sequence regardless of when they attach. The log lives in
+/// memory for the daemon's lifetime (events are small JSON objects; a
+/// restart starts a fresh sequence).
+struct EventHub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+struct HubState {
+    log: Vec<Json>,
+    closed: bool,
+}
+
+impl EventHub {
+    fn new() -> EventHub {
+        EventHub {
+            state: Mutex::new(HubState {
+                log: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn publish(&self, event: Json) {
+        let mut st = self.state.lock().unwrap();
+        st.log.push(event);
+        self.cv.notify_all();
+    }
+
+    fn len(&self) -> u64 {
+        self.state.lock().unwrap().log.len() as u64
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Events at sequence `next` and beyond; blocks up to `timeout`
+    /// when none are available yet. Returns `(batch, closed)`.
+    fn wait_from(&self, next: u64, timeout: Duration) -> (Vec<(u64, Json)>, bool) {
+        let take = |st: &HubState| -> Vec<(u64, Json)> {
+            st.log
+                .iter()
+                .enumerate()
+                .skip(next as usize)
+                .map(|(i, j)| (i as u64, j.clone()))
+                .collect()
+        };
+        let st = self.state.lock().unwrap();
+        if (st.log.len() as u64) > next || st.closed {
+            return (take(&st), st.closed);
+        }
+        let (st, _) = self.cv.wait_timeout(st, timeout).unwrap();
+        (take(&st), st.closed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Queue state
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum SlotState {
+    /// Eligible for a claim attempt.
+    Pending,
+    /// Held by another process at last attempt.
+    Waiting,
+    /// Being executed by one of our workers.
+    Running,
+    /// Result recorded (by us or anyone sharing the directory).
+    Done,
+    /// Deterministic execution failure; not retried until restart.
+    Failed,
+}
+
+struct Slot {
+    job: String,
+    label: String,
+    cfg: ExperimentConfig,
+    id: String,
+    state: SlotState,
+    /// Per-job options (spec-level early-stop targets applied).
+    opts: Arc<SweepOptions>,
+}
+
+struct JobInfo {
+    name: String,
+    priority: i64,
+    /// Submission sequence (persisted in the job file name; the
+    /// priority tie-break, so FIFO order survives restarts).
+    seq: u64,
+    total: usize,
+    done: usize,
+    failed: usize,
+}
+
+impl JobInfo {
+    fn settled(&self) -> bool {
+        self.done + self.failed >= self.total
+    }
+}
+
+struct QueueState {
+    slots: Vec<Slot>,
+    jobs: BTreeMap<String, JobInfo>,
+    next_seq: u64,
+}
+
+enum Pick {
+    Idx(usize),
+    /// Claims held elsewhere — poll the completed index.
+    Stalled,
+    /// Nothing to do — wait for submissions.
+    Idle,
+}
+
+// ---------------------------------------------------------------------
+// Shared daemon state
+// ---------------------------------------------------------------------
+
+struct Shared {
+    cfg: ServeConfig,
+    out: PathBuf,
+    series_dir: PathBuf,
+    ckpt_dir: PathBuf,
+    jobs_dir: PathBuf,
+    queue: Mutex<QueueState>,
+    work_cv: Condvar,
+    hub: EventHub,
+    fanout: Arc<EventFanout>,
+    shutdown: AtomicBool,
+    crashed: AtomicBool,
+    errors: Mutex<Vec<String>>,
+    /// Not-yet-settled runs (feeds `NodeBudget::Dynamic`).
+    pending: AtomicUsize,
+    /// Runs executed by this daemon instance.
+    executed: AtomicUsize,
+    claims: ClaimStore,
+    sink: Mutex<BufWriter<File>>,
+    completed: Mutex<CompletedIndex>,
+    cache: ArtifactCache,
+    base_opts: SweepOptions,
+    budget: usize,
+    run_workers: usize,
+    heartbeat: Duration,
+    poll: Duration,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || self.crashed.load(Ordering::SeqCst)
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _guard = self.queue.lock().unwrap();
+        self.work_cv.notify_all();
+    }
+
+    /// Deliver a run-lifecycle event to in-process sinks (via the
+    /// [`EventFanout`]) and to every socket subscriber (via the hub,
+    /// with the owning job attached).
+    fn publish_run_event(&self, job: &str, event: &RunEvent) {
+        self.fanout.emit(event);
+        self.hub.publish(event.to_json().set("job", job));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Admission
+// ---------------------------------------------------------------------
+
+/// Validate and enqueue one submitted spec. Returns `(job id, runs)`.
+///
+/// Rejection text for a config that fails to resolve matches `sparq
+/// check` on the same spec: `run {label:?} ({name}): {ConfigError}`.
+/// `stored_seq` is set when re-admitting a persisted job at restart —
+/// it pins the original submission order and skips re-persisting.
+fn admit(
+    shared: &Shared,
+    spec_json: &Json,
+    priority: i64,
+    stored_seq: Option<u64>,
+) -> Result<(String, usize), String> {
+    let spec = SweepSpec::from_json(spec_json)?;
+    let runs = spec.expand()?;
+    for (label, cfg) in &runs {
+        cfg.resolve()
+            .map_err(|e| format!("run {label:?} ({}): {e}", cfg.name))?;
+    }
+    let slots: Vec<(String, ExperimentConfig, String)> = runs
+        .into_iter()
+        .map(|(label, cfg)| {
+            let id = config_hash(&cfg);
+            (label, cfg, id)
+        })
+        .collect();
+    reject_duplicate_ids(slots.iter().map(|(label, _, id)| (id, label)))?;
+
+    // Job identity is the normalized spec content, so a byte-different
+    // rendering of the same grid is the same job.
+    let normalized = spec.to_json();
+    let job = format!("job-{:016x}", fnv64(normalized.to_string().as_bytes()));
+
+    // Runs already recorded on disk settle at admission (instant
+    // completion for resubmitted-after-done jobs, and the restart path's
+    // way of recognizing work finished before the kill).
+    let done_ids: Vec<bool> = {
+        let mut ix = shared.completed.lock().unwrap();
+        ix.refresh();
+        slots
+            .iter()
+            .map(|(label, cfg, id)| match ix.get(id) {
+                Some(record) => {
+                    load_completed(label, cfg, id, record, Some(&shared.series_dir)).is_ok()
+                }
+                None => false,
+            })
+            .collect()
+    };
+
+    let opts = Arc::new(spec.apply_targets(&shared.base_opts));
+    let mut queue = shared.queue.lock().unwrap();
+    if let Some(existing) = queue.jobs.get(&job) {
+        if !existing.settled() {
+            return Err(format!("job {job} ({}) is already queued", existing.name));
+        }
+        // Settled duplicate: re-admit fresh. The old job's slots stay in
+        // the vector (they are terminal, and workers hold slot indexes —
+        // the vector only ever grows); only the job entry is replaced.
+        queue.jobs.remove(&job);
+    }
+    for (label, _, id) in &slots {
+        if let Some(held) = queue.slots.iter().find(|s| {
+            s.id == *id && !matches!(s.state, SlotState::Done | SlotState::Failed)
+        }) {
+            return Err(format!(
+                "run {label:?} (id {id}) is already queued by job {}",
+                held.job
+            ));
+        }
+    }
+
+    let seq = stored_seq.unwrap_or(queue.next_seq);
+    queue.next_seq = queue.next_seq.max(seq + 1);
+    if stored_seq.is_none() {
+        let file = shared.jobs_dir.join(format!("{seq:06}-{job}.json"));
+        let body = Json::obj()
+            .set("job", job.as_str())
+            .set("priority", priority)
+            .set("spec", normalized);
+        fs::write(&file, body.to_string_pretty()).map_err(|e| {
+            format!("{}: {e}", file.display())
+        })?;
+    }
+
+    let total = slots.len();
+    let mut done = 0usize;
+    for ((label, cfg, id), is_done) in slots.into_iter().zip(done_ids) {
+        let state = if is_done {
+            done += 1;
+            SlotState::Done
+        } else {
+            shared.pending.fetch_add(1, Ordering::SeqCst);
+            SlotState::Pending
+        };
+        queue.slots.push(Slot {
+            job: job.clone(),
+            label,
+            cfg,
+            id,
+            state,
+            opts: Arc::clone(&opts),
+        });
+    }
+    queue.jobs.insert(
+        job.clone(),
+        JobInfo {
+            name: spec.name.clone(),
+            priority,
+            seq,
+            total,
+            done,
+            failed: 0,
+        },
+    );
+    shared.hub.publish(
+        Json::obj()
+            .set("kind", "job-accepted")
+            .set("job", job.as_str())
+            .set("name", spec.name.as_str())
+            .set("priority", priority)
+            .set("runs", total),
+    );
+    if done >= total {
+        publish_job_complete(shared, &queue, &job);
+    }
+    shared.work_cv.notify_all();
+    Ok((job, total))
+}
+
+fn publish_job_complete(shared: &Shared, queue: &QueueState, job: &str) {
+    if let Some(info) = queue.jobs.get(job) {
+        shared.hub.publish(
+            Json::obj()
+                .set("kind", "job-complete")
+                .set("job", job)
+                .set("done", info.done)
+                .set("failed", info.failed)
+                .set("total", info.total),
+        );
+    }
+}
+
+/// Mark slot `i` settled (`Done` or `Failed`), roll its job's counters,
+/// and publish `job-complete` when the job fills. Idempotent: a slot
+/// already settled (e.g. by a concurrent stalled-cycle resolution) is
+/// left untouched so counters never double-roll.
+fn settle_slot(shared: &Shared, i: usize, state: SlotState) {
+    let mut queue = shared.queue.lock().unwrap();
+    settle_locked(shared, &mut queue, i, state);
+}
+
+fn settle_locked(shared: &Shared, queue: &mut QueueState, i: usize, state: SlotState) {
+    if matches!(
+        queue.slots[i].state,
+        SlotState::Done | SlotState::Failed
+    ) {
+        return;
+    }
+    queue.slots[i].state = state;
+    shared.pending.fetch_sub(1, Ordering::SeqCst);
+    let job = queue.slots[i].job.clone();
+    let filled = match queue.jobs.get_mut(&job) {
+        Some(info) => {
+            if state == SlotState::Failed {
+                info.failed += 1;
+            } else {
+                info.done += 1;
+            }
+            info.settled()
+        }
+        None => false,
+    };
+    if filled {
+        publish_job_complete(shared, queue, &job);
+    }
+}
+
+fn set_slot(shared: &Shared, i: usize, state: SlotState) {
+    shared.queue.lock().unwrap().slots[i].state = state;
+}
+
+// ---------------------------------------------------------------------
+// Scheduler workers
+// ---------------------------------------------------------------------
+
+/// One scheduler worker: the `run_distributed` claim loop, reshaped for
+/// a daemon (no all-done exit — idle workers park on the submission
+/// condvar; deterministic run failures fail the slot instead of the
+/// process).
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        if shared.stopping() {
+            break;
+        }
+        let pick = {
+            let mut queue = shared.queue.lock().unwrap();
+            // Highest priority first; FIFO by job, then spec order.
+            let best = queue
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.state == SlotState::Pending)
+                .min_by_key(|(i, s)| {
+                    let seq = queue.jobs.get(&s.job).map(|j| j.seq).unwrap_or(u64::MAX);
+                    (std::cmp::Reverse(s.priority), seq, *i)
+                })
+                .map(|(i, _)| i);
+            match best {
+                Some(i) => {
+                    queue.slots[i].state = SlotState::Running;
+                    Pick::Idx(i)
+                }
+                None if queue.slots.iter().any(|s| s.state == SlotState::Waiting) => Pick::Stalled,
+                None => {
+                    let _ = shared
+                        .work_cv
+                        .wait_timeout(queue, shared.poll)
+                        .unwrap();
+                    Pick::Idle
+                }
+            }
+        };
+        match pick {
+            Pick::Idle => {}
+            Pick::Stalled => stalled_cycle(shared),
+            Pick::Idx(i) => run_slot(shared, i),
+        }
+    }
+}
+
+/// Everything claimable is held elsewhere: refresh the completed index
+/// (a foreign holder may have finished), settle resolvable Waiting
+/// slots, and flip the rest back to Pending so their (possibly stale)
+/// claims get retried.
+fn stalled_cycle(shared: &Arc<Shared>) {
+    // Lock order is always index → queue.
+    let mut ix = shared.completed.lock().unwrap();
+    ix.refresh();
+    let mut resolved = false;
+    {
+        let mut queue = shared.queue.lock().unwrap();
+        for i in 0..queue.slots.len() {
+            if queue.slots[i].state != SlotState::Waiting {
+                continue;
+            }
+            let s = &queue.slots[i];
+            let recorded = ix.get(&s.id).is_some_and(|record| {
+                load_completed(&s.label, &s.cfg, &s.id, record, Some(&shared.series_dir)).is_ok()
+            });
+            if recorded {
+                settle_locked(shared, &mut queue, i, SlotState::Done);
+                resolved = true;
+            } else {
+                queue.slots[i].state = SlotState::Pending;
+            }
+        }
+    }
+    drop(ix);
+    if !resolved && !shared.stopping() {
+        thread::sleep(shared.poll);
+    }
+}
+
+/// Execute one claimed-or-claimable slot to a settled state (or back to
+/// Pending/Waiting). Mirrors `run_distributed`'s exactly-once dance:
+/// pre-claim recorded check, claim, post-claim recorded re-check,
+/// execute with heartbeat ticks, ownership re-verify, persist, release.
+fn run_slot(shared: &Arc<Shared>, i: usize) {
+    let (label, cfg, id, opts) = {
+        let queue = shared.queue.lock().unwrap();
+        let s = &queue.slots[i];
+        (s.label.clone(), s.cfg.clone(), s.id.clone(), Arc::clone(&s.opts))
+    };
+    let recorded = || -> bool {
+        let mut ix = shared.completed.lock().unwrap();
+        ix.refresh();
+        ix.get(&id).is_some_and(|record| {
+            load_completed(&label, &cfg, &id, record, Some(&shared.series_dir)).is_ok()
+        })
+    };
+
+    if recorded() {
+        settle_slot(shared, i, SlotState::Done);
+        return;
+    }
+    let mut claim = match shared.claims.try_acquire(&id) {
+        Ok(Acquire::Acquired(c)) => c,
+        Ok(Acquire::Held) => {
+            set_slot(shared, i, SlotState::Waiting);
+            return;
+        }
+        Err(e) => {
+            fail_slot(shared, i, &label, &id, &e);
+            return;
+        }
+    };
+    // A previous holder persists *before* releasing, so a record
+    // appearing between the pre-claim check and acquisition means the
+    // run already finished — step aside instead of re-recording it.
+    if recorded() {
+        claim.release().ok();
+        settle_slot(shared, i, SlotState::Done);
+        return;
+    }
+
+    let job = shared.queue.lock().unwrap().slots[i].job.clone();
+    shared.publish_run_event(
+        &job,
+        &RunEvent::Started {
+            id: id.clone(),
+            label: label.clone(),
+            node_workers: NodeBudget::Dynamic {
+                budget: shared.budget,
+                run_workers: shared.run_workers,
+                pending: &shared.pending,
+            }
+            .current(),
+        },
+    );
+
+    let mut claim_lost = false;
+    let mut shutdown_seen = false;
+    let mut last_hb = Instant::now();
+    let mut tick = |_t: u64| -> Result<bool, String> {
+        if shared.stopping() {
+            // Graceful drain: abandon to the checkpoint mid-run; the
+            // restarted daemon resumes bit-for-bit.
+            shutdown_seen = true;
+            return Ok(false);
+        }
+        if last_hb.elapsed() >= shared.heartbeat {
+            last_hb = Instant::now();
+            if !claim.heartbeat()? {
+                claim_lost = true;
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    };
+    let budget = NodeBudget::Dynamic {
+        budget: shared.budget,
+        run_workers: shared.run_workers,
+        pending: &shared.pending,
+    };
+    let res = execute_one(
+        &label,
+        &cfg,
+        &id,
+        &shared.cache,
+        &budget,
+        &opts,
+        Some(&shared.ckpt_dir),
+        Some(&mut tick),
+    );
+    match res {
+        Err(e) => {
+            // Deterministic failure: release so nobody burns a lease
+            // waiting, fail the slot, keep the daemon serving.
+            claim.release().ok();
+            fail_slot(shared, i, &label, &id, &e);
+        }
+        Ok(outcome) if !outcome.completed => {
+            if claim_lost {
+                set_slot(shared, i, SlotState::Waiting);
+            } else if shutdown_seen {
+                // Graceful shutdown: the checkpoint stays, the claim is
+                // ours to give back — the next daemon picks the run up
+                // without waiting out the lease.
+                claim.release().ok();
+                set_slot(shared, i, SlotState::Pending);
+            } else {
+                // Fault injection: simulate a crash — leave the claim
+                // and checkpoints in place and stop the whole daemon.
+                shared.crashed.store(true, Ordering::SeqCst);
+                shared.errors.lock().unwrap().push(format!(
+                    "{label}: aborted by fault injection (claims and checkpoints left for \
+                     takeover)"
+                ));
+                shared.begin_shutdown();
+            }
+        }
+        Ok(outcome) => {
+            // Re-verify ownership at the last moment: persisting after
+            // a takeover would double-record the run.
+            match claim.is_mine() {
+                Ok(true) => {}
+                Ok(false) => {
+                    set_slot(shared, i, SlotState::Waiting);
+                    return;
+                }
+                Err(e) => {
+                    fail_slot(shared, i, &label, &id, &e);
+                    return;
+                }
+            }
+            if let Err(e) = persist(&outcome, Some(&shared.series_dir), Some(&shared.sink)) {
+                fail_slot(shared, i, &label, &id, &e);
+                return;
+            }
+            claim.release().ok();
+            shared.executed.fetch_add(1, Ordering::SeqCst);
+            // Finished before job-complete, so per-run and job-level
+            // events arrive in causal order on every subscriber.
+            shared.publish_run_event(
+                &job,
+                &RunEvent::Finished {
+                    id: id.clone(),
+                    label: label.clone(),
+                    completed: true,
+                    stopped: outcome.stopped.is_some(),
+                },
+            );
+            settle_slot(shared, i, SlotState::Done);
+        }
+    }
+}
+
+fn fail_slot(shared: &Shared, i: usize, label: &str, id: &str, error: &str) {
+    eprintln!("[serve] run {label} failed: {error}");
+    let job = shared.queue.lock().unwrap().slots[i].job.clone();
+    shared.hub.publish(
+        Json::obj()
+            .set("kind", "run-failed")
+            .set("job", job.as_str())
+            .set("id", id)
+            .set("label", label)
+            .set("error", error),
+    );
+    settle_slot(shared, i, SlotState::Failed);
+}
+
+// ---------------------------------------------------------------------
+// Connections
+// ---------------------------------------------------------------------
+
+fn send(stream: &mut Stream, resp: &Response) -> Result<(), String> {
+    write_msg(stream, &resp.to_json())
+}
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) {
+    if stream.set_read_timeout(Some(CONN_POLL)).is_err() {
+        return;
+    }
+    loop {
+        let frame = match read_frame(&mut stream, &|| shared.stopping()) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        let payload = match frame {
+            FrameIn::Eof | FrameIn::Stopped => break,
+            FrameIn::Corrupt { error, fatal } => {
+                // A corrupt frame is rejected with a structured error;
+                // the connection survives whenever framing sync does.
+                let _ = send(
+                    &mut stream,
+                    &Response::Error {
+                        error: format!("bad frame: {error}"),
+                    },
+                );
+                if fatal {
+                    break;
+                }
+                continue;
+            }
+            FrameIn::Msg(p) => p,
+        };
+        let req = match parse_payload(&payload).and_then(|j| Request::from_json(&j)) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = send(
+                    &mut stream,
+                    &Response::Error {
+                        error: format!("bad request: {e}"),
+                    },
+                );
+                continue;
+            }
+        };
+        let resp = match req {
+            Request::Ping => Response::Pong {
+                version: crate::version().to_string(),
+            },
+            Request::Submit { spec, priority } => match admit(shared, &spec, priority, None) {
+                Ok((job, runs)) => Response::Accepted { job, runs },
+                Err(error) => Response::Rejected { error },
+            },
+            Request::Status => status_snapshot(shared),
+            Request::Shutdown => {
+                let _ = send(&mut stream, &Response::Ok);
+                shared.begin_shutdown();
+                break;
+            }
+            Request::Watch { from_start } => {
+                watch_loop(shared, &mut stream, from_start);
+                break;
+            }
+        };
+        if send(&mut stream, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+/// Stream hub events to one subscriber until it disconnects or the
+/// daemon shuts down (remaining events are flushed first, so two
+/// subscribers that both live to the end see identical streams).
+fn watch_loop(shared: &Arc<Shared>, stream: &mut Stream, from_start: bool) {
+    let mut next = if from_start { 0 } else { shared.hub.len() };
+    loop {
+        let (batch, closed) = shared.hub.wait_from(next, CONN_POLL);
+        for (seq, event) in batch {
+            if send(stream, &Response::Event { seq, event }).is_err() {
+                return;
+            }
+            next = seq + 1;
+        }
+        if closed {
+            return;
+        }
+    }
+}
+
+fn status_snapshot(shared: &Arc<Shared>) -> Response {
+    let queue = shared.queue.lock().unwrap();
+    let mut jobs: Vec<(u64, JobStatus)> = queue
+        .jobs
+        .iter()
+        .map(|(job, info)| {
+            let state = if info.settled() {
+                "complete"
+            } else if queue
+                .slots
+                .iter()
+                .any(|s| s.job == *job && s.state == SlotState::Running)
+            {
+                "running"
+            } else {
+                "queued"
+            };
+            (
+                info.seq,
+                JobStatus {
+                    job: job.clone(),
+                    name: info.name.clone(),
+                    priority: info.priority,
+                    total: info.total,
+                    done: info.done,
+                    failed: info.failed,
+                    state: state.to_string(),
+                },
+            )
+        })
+        .collect();
+    drop(queue);
+    jobs.sort_by_key(|(seq, _)| *seq);
+    let claims = list_claims(&shared.out, now_secs())
+        .unwrap_or_default()
+        .into_iter()
+        .map(|c| ClaimView {
+            id: c.id,
+            owner: c.owner,
+            age_secs: c.age_secs,
+            heartbeats: c.heartbeats,
+        })
+        .collect();
+    Response::Status {
+        jobs: jobs.into_iter().map(|(_, j)| j).collect(),
+        claims,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Listener + daemon lifecycle
+// ---------------------------------------------------------------------
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> Option<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().ok().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().ok().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+/// Bind the daemon socket. A stale Unix socket file (crashed daemon) is
+/// replaced iff nothing answers on it; a live one is an error.
+fn bind(socket: &str) -> Result<(Listener, String), String> {
+    if is_tcp_addr(socket) {
+        let l = TcpListener::bind(socket).map_err(|e| format!("{socket}: {e}"))?;
+        let addr = l
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| socket.to_string());
+        l.set_nonblocking(true).map_err(|e| e.to_string())?;
+        return Ok((Listener::Tcp(l), addr));
+    }
+    #[cfg(unix)]
+    {
+        let path = Path::new(socket);
+        if path.exists() {
+            if std::os::unix::net::UnixStream::connect(path).is_ok() {
+                return Err(format!("{socket}: a daemon is already listening"));
+            }
+            fs::remove_file(path).map_err(|e| format!("{socket}: {e}"))?;
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent).map_err(|e| format!("{}: {e}", parent.display()))?;
+            }
+        }
+        let l = UnixListener::bind(path).map_err(|e| format!("{socket}: {e}"))?;
+        l.set_nonblocking(true).map_err(|e| e.to_string())?;
+        Ok((Listener::Unix(l), socket.to_string()))
+    }
+    #[cfg(not(unix))]
+    Err(format!(
+        "{socket}: unix socket paths are unsupported on this platform; use host:port"
+    ))
+}
+
+fn build_shared(cfg: ServeConfig) -> Result<Arc<Shared>, String> {
+    if !(cfg.lease_secs.is_finite() && cfg.lease_secs > 0.0) {
+        return Err(format!(
+            "lease must be a positive number of seconds, got {}",
+            cfg.lease_secs
+        ));
+    }
+    let out = cfg.out.clone();
+    let series_dir = out.join("series");
+    let ckpt_dir = out.join("ckpt");
+    let jobs_dir = out.join("jobs");
+    for dir in [&series_dir, &ckpt_dir, &jobs_dir] {
+        fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    }
+    let claims = ClaimStore::new(out.join("claims"), default_owner(), cfg.lease_secs)?
+        .with_margin(cfg.lease_margin_secs)?;
+    let results_path = out.join("results.jsonl");
+    let sink = Mutex::new(BufWriter::new(
+        OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&results_path)
+            .map_err(|e| format!("{}: {e}", results_path.display()))?,
+    ));
+    let budget = if cfg.workers == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.workers
+    };
+    let heartbeat = if cfg.heartbeat_secs > 0.0 {
+        Duration::from_secs_f64(cfg.heartbeat_secs.min(cfg.lease_secs / 2.0))
+    } else {
+        Duration::from_secs_f64((cfg.lease_secs / 4.0).max(0.01))
+    };
+    let poll = Duration::from_millis(cfg.poll_ms.max(10));
+    let base_opts = SweepOptions {
+        workers: budget,
+        out: Some(out.clone()),
+        // Non-negotiable in a shared directory: never truncate state
+        // another process may be appending to.
+        resume: true,
+        checkpoint_every: cfg.checkpoint_every,
+        // Surfaces `[sweep] resume … from t=…` lines in daemon logs —
+        // the restart-takeover test pins on them.
+        verbose: cfg.verbose,
+        fault_abort_at: cfg.fault_abort_at,
+        target_error: None,
+        target_loss: None,
+        on_event: None,
+    };
+    let fanout = Arc::new(EventFanout::new());
+    if cfg.verbose {
+        fanout.add(Arc::new(|e: &RunEvent| match e {
+            RunEvent::Started {
+                label,
+                node_workers,
+                ..
+            } => println!("[serve] start {label} ({node_workers} node workers)"),
+            RunEvent::Finished {
+                label,
+                completed,
+                stopped,
+                ..
+            } => println!("[serve] finish {label} (completed={completed}, stopped={stopped})"),
+        }));
+    }
+    let shared = Arc::new(Shared {
+        run_workers: budget,
+        cfg,
+        out,
+        series_dir,
+        ckpt_dir,
+        jobs_dir,
+        queue: Mutex::new(QueueState {
+            slots: Vec::new(),
+            jobs: BTreeMap::new(),
+            next_seq: 0,
+        }),
+        work_cv: Condvar::new(),
+        hub: EventHub::new(),
+        fanout,
+        shutdown: AtomicBool::new(false),
+        crashed: AtomicBool::new(false),
+        errors: Mutex::new(Vec::new()),
+        pending: AtomicUsize::new(0),
+        executed: AtomicUsize::new(0),
+        claims,
+        sink,
+        completed: Mutex::new(CompletedIndex::new(results_path)),
+        cache: ArtifactCache::new(),
+        base_opts,
+        budget,
+        heartbeat,
+        poll,
+    });
+    requeue_persisted_jobs(&shared);
+    Ok(shared)
+}
+
+/// Re-admit every job persisted under `<out>/jobs/` (submission order),
+/// so a restarted daemon finishes what a killed one started. Runs
+/// already recorded settle instantly; half-finished ones take over the
+/// dead daemon's claims and resume from checkpoints.
+fn requeue_persisted_jobs(shared: &Arc<Shared>) {
+    let Ok(entries) = fs::read_dir(&shared.jobs_dir) else {
+        return;
+    };
+    let mut files: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    for file in files {
+        let seq = file
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.split('-').next())
+            .and_then(|s| s.parse::<u64>().ok());
+        let parsed = fs::read_to_string(&file)
+            .map_err(|e| e.to_string())
+            .and_then(|text| Json::parse(&text).map_err(|e| e.to_string()));
+        let j = match parsed {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("[serve] skipping job file {}: {e}", file.display());
+                continue;
+            }
+        };
+        let priority = j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+        let Some(spec) = j.get("spec") else {
+            eprintln!("[serve] skipping job file {}: no spec", file.display());
+            continue;
+        };
+        if let Err(e) = admit(shared, spec, priority, Some(seq.unwrap_or(0))) {
+            eprintln!("[serve] skipping job file {}: {e}", file.display());
+        }
+    }
+}
+
+/// A daemon spawned in-process (tests, embedding). [`stop`] performs a
+/// graceful shutdown and joins.
+///
+/// [`stop`]: ServerHandle::stop
+pub struct ServerHandle {
+    addr: String,
+    shared: Arc<Shared>,
+    join: thread::JoinHandle<Result<(), String>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolved port for `host:0` TCP binds).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn stop(self) -> Result<(), String> {
+        self.shared.begin_shutdown();
+        self.join.join().map_err(|_| "server thread panicked".to_string())?
+    }
+}
+
+/// Bind and serve on a background thread; returns once the socket is
+/// accepting.
+pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle, String> {
+    let (listener, addr) = bind(&cfg.socket)?;
+    let shared = build_shared(cfg)?;
+    let shared2 = Arc::clone(&shared);
+    let join = thread::spawn(move || run_server(listener, shared2));
+    Ok(ServerHandle {
+        addr,
+        shared,
+        join,
+    })
+}
+
+/// Bind and serve on the calling thread until shutdown (the `sparq
+/// serve` entry point). Returns `Err` after a fault-injected crash —
+/// claims and checkpoints stay on disk for the next daemon.
+pub fn serve(cfg: ServeConfig) -> Result<(), String> {
+    let (listener, addr) = bind(&cfg.socket)?;
+    let verbose = cfg.verbose;
+    let shared = build_shared(cfg)?;
+    if verbose {
+        println!(
+            "[serve] listening on {addr} ({} workers, out={})",
+            shared.budget,
+            shared.out.display()
+        );
+    }
+    run_server(listener, shared)
+}
+
+fn run_server(listener: Listener, shared: Arc<Shared>) -> Result<(), String> {
+    let mut workers = Vec::new();
+    for _ in 0..shared.run_workers {
+        let s = Arc::clone(&shared);
+        workers.push(thread::spawn(move || worker_loop(&s)));
+    }
+    while !shared.stopping() {
+        match listener.accept() {
+            Some(stream) => {
+                let s = Arc::clone(&shared);
+                // Connection threads are detached: they exit on client
+                // EOF, or once the hub closes / the stream drops.
+                thread::spawn(move || handle_conn(&s, stream));
+            }
+            None => thread::sleep(ACCEPT_POLL),
+        }
+    }
+    for w in workers {
+        w.join().ok();
+    }
+    shared.sink.lock().unwrap().flush().ok();
+    // Close the hub only after workers finished, so subscribers drain
+    // the complete event stream before their connections end.
+    shared.hub.close();
+    #[cfg(unix)]
+    if let Listener::Unix(_) = &listener {
+        if !shared.crashed.load(Ordering::SeqCst) {
+            fs::remove_file(&shared.cfg.socket).ok();
+        }
+    }
+    let errors = shared.errors.lock().unwrap();
+    if shared.crashed.load(Ordering::SeqCst) || !errors.is_empty() {
+        return Err(errors.join("; "));
+    }
+    Ok(())
+}

@@ -344,7 +344,7 @@ pub fn list_claims(out_dir: &Path, now: f64) -> Result<Vec<ClaimInfo>, String> {
             Some(j) => (
                 j.get("owner").and_then(Json::as_str).unwrap_or("").to_string(),
                 j.get("stamp").and_then(Json::as_f64).unwrap_or(f64::NAN),
-                j.get("heartbeats").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                j.get("heartbeats").and_then(Json::as_u64).unwrap_or(0),
             ),
             None => {
                 // Torn write: fall back to the mtime, like takeover does.
@@ -895,14 +895,14 @@ pub fn run_distributed(
 /// filesystem as a sweep drains). A torn tail line (a concurrent
 /// appender mid-write) is left unconsumed and picked up whole on the
 /// next refresh; later records for an id win, matching append order.
-struct CompletedIndex {
+pub(crate) struct CompletedIndex {
     path: PathBuf,
     offset: u64,
     map: std::collections::HashMap<String, Json>,
 }
 
 impl CompletedIndex {
-    fn new(path: PathBuf) -> CompletedIndex {
+    pub(crate) fn new(path: PathBuf) -> CompletedIndex {
         CompletedIndex {
             path,
             offset: 0,
@@ -911,7 +911,7 @@ impl CompletedIndex {
     }
 
     /// Pull any newly appended whole lines into the index.
-    fn refresh(&mut self) {
+    pub(crate) fn refresh(&mut self) {
         use std::io::{Read, Seek, SeekFrom};
         let Ok(mut f) = File::open(&self.path) else {
             return;
@@ -944,7 +944,7 @@ impl CompletedIndex {
         self.offset += consumed as u64;
     }
 
-    fn get(&self, id: &str) -> Option<&Json> {
+    pub(crate) fn get(&self, id: &str) -> Option<&Json> {
         self.map.get(id)
     }
 }

@@ -124,7 +124,7 @@ pub fn load(out: &Path) -> Result<Vec<ReportRun>, String> {
         let s = |k: &str, dflt: &str| -> String {
             j.get(k).and_then(Json::as_str).unwrap_or(dflt).to_string()
         };
-        let u = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let u = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
         let label = s("label", &id);
         let series_label = s("series_label", &label);
         let spath = series_dir.join(format!("{id}.jsonl"));

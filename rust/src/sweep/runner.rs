@@ -460,7 +460,7 @@ where
 /// [`EarlyStop`], if present.
 pub(crate) fn parse_truncated(record: &Json) -> Option<EarlyStop> {
     record.get("truncated").map(|tj| EarlyStop {
-        t: tj.get("t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        t: tj.get("t").and_then(Json::as_u64).unwrap_or(0),
         reason: tj
             .get("reason")
             .and_then(Json::as_str)
@@ -487,15 +487,25 @@ pub(crate) fn load_completed(
         .to_string();
     let series = Series::read_jsonl(&path, series_label)
         .map_err(|e| format!("stored series unreadable: {e}"))?;
-    let u = |k: &str| record.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    // Strict counters: a damaged record numeric (fractional/negative)
+    // errors out here, and the caller's recovery path re-runs the config
+    // instead of resuming from silently-truncated values.
+    let u = |k: &str| -> Result<u64, String> {
+        match record.get(k) {
+            None => Ok(0),
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| format!("stored {k:?} is not a non-negative integer")),
+        }
+    };
     Ok(RunOutcome {
         id: id.to_string(),
         label: label.to_string(),
         cfg: cfg.clone(),
         series,
-        fired: u("fired"),
-        checks: u("checks"),
-        wall_ms: u("wall_ms"),
+        fired: u("fired")?,
+        checks: u("checks")?,
+        wall_ms: u("wall_ms")?,
         fault: parse_fault(record),
         skipped: true,
         completed: true,
@@ -509,7 +519,7 @@ pub(crate) fn parse_fault(record: &Json) -> FaultCounters {
     let Some(fj) = record.get("fault") else {
         return FaultCounters::default();
     };
-    let u = |k: &str| fj.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let u = |k: &str| fj.get(k).and_then(Json::as_u64).unwrap_or(0);
     FaultCounters {
         crashes: u("crashes"),
         resyncs: u("resyncs"),

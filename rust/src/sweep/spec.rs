@@ -439,13 +439,17 @@ pub fn config_hash(cfg: &ExperimentConfig) -> String {
     canonical.name = String::new();
     canonical.workers = 1;
     let text = canonical.to_json().to_string();
-    // FNV-1a 64
+    format!("{:016x}", fnv64(text.as_bytes()))
+}
+
+/// FNV-1a 64 over a byte string (run ids above, serve job ids).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in text.bytes() {
+    for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    format!("{h:016x}")
+    h
 }
 
 #[cfg(test)]

@@ -19,6 +19,16 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Deepest permitted array/object nesting. The recursive-descent parser
+/// recurses once per level, so unbounded depth lets `[[[[…]]]]` from an
+/// untrusted source (the serve socket) overflow the stack; 128 levels is
+/// far beyond any artifact this crate reads or writes.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
+/// Largest f64 at which every integer is still exactly representable
+/// (2⁵³); beyond it `as_u64`/`as_usize` refuse to guess.
+const MAX_EXACT_F64_INT: f64 = 9_007_199_254_740_992.0;
+
 #[derive(Debug)]
 pub struct JsonError {
     pub msg: String,
@@ -57,8 +67,23 @@ impl Json {
         }
     }
 
+    /// Exactly-representable non-negative integer, else `None`. Unlike a
+    /// raw `as usize` cast this *rejects* rather than truncates: -3.0 and
+    /// 3.7 are `None`, as are NaN/±inf and anything above 2⁵³ (where f64
+    /// can no longer represent every integer, so a parsed value may
+    /// already have been rounded).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_u64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    /// `as_usize`'s u64 twin, with the same exactness contract.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(x) if x.is_finite() && x >= 0.0 && x == x.trunc() && x <= MAX_EXACT_F64_INT => {
+                Some(x as u64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -101,6 +126,7 @@ impl Json {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -262,6 +288,7 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -270,6 +297,16 @@ impl<'a> Parser<'a> {
             msg: msg.to_string(),
             pos: self.i,
         }
+    }
+
+    /// One recursion level per array/object. Errors abort the whole parse,
+    /// so only the Ok paths need the matching `depth -= 1`.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_PARSE_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -398,10 +435,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -412,6 +451,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -421,10 +461,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -440,6 +482,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -501,6 +544,58 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integers() {
+        // Regression: these used to truncate through `x as usize`
+        // (-3.0 → 0, 3.7 → 3) instead of rejecting.
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(3.7).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+        // exact values still pass, including zero and 2^53 itself
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(3.0).as_usize(), Some(3));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(1 << 53));
+        // one past 2^53: 2^53 + 1 is not representable, so the parsed
+        // value would already be rounded — refuse to guess
+        assert_eq!(Json::Num((1u64 << 53) as f64 * 2.0).as_u64(), None);
+    }
+
+    #[test]
+    fn parse_depth_at_limit_ok() {
+        let src = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH),
+            "]".repeat(MAX_PARSE_DEPTH)
+        );
+        assert!(Json::parse(&src).is_ok());
+    }
+
+    #[test]
+    fn parse_depth_beyond_limit_is_error() {
+        let src = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH + 1),
+            "]".repeat(MAX_PARSE_DEPTH + 1)
+        );
+        let err = Json::parse(&src).unwrap_err();
+        assert!(err.msg.contains("nesting deeper"), "{}", err);
+        // mixed object/array nesting counts every level
+        let src = "{\"a\":".repeat(70) + &"[".repeat(70) + "1" + &"]".repeat(70) + &"}".repeat(70);
+        assert!(Json::parse(&src).is_err());
+    }
+
+    #[test]
+    fn parse_pathological_depth_returns_error_not_crash() {
+        // Regression: 100k nested arrays used to overflow the parser stack
+        // (abort, not Err) — a remote crash once the daemon parses
+        // client-supplied payloads.
+        let src = "[".repeat(100_000);
+        assert!(Json::parse(&src).is_err());
     }
 
     #[test]

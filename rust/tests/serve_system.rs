@@ -1,0 +1,608 @@
+//! `sparq serve` — the ISSUE-8 acceptance tests, driving real daemons
+//! over real sockets:
+//!
+//! * in-process over TCP: corrupt/garbage frames are rejected with a
+//!   structured error and the connection loop survives whenever framing
+//!   sync does; two concurrent subscribers receive **identical** event
+//!   streams; admission rejects an invalid spec with exactly the text
+//!   `sparq check` prints for it;
+//! * child processes over a Unix socket: one daemon executes two
+//!   tenants' submissions under one worker budget with every per-run
+//!   series **bit-identical** (`f64::to_bits`) to a serial
+//!   single-process sweep;
+//! * a fault-killed daemon leaves claims, checkpoints, and its durable
+//!   job files behind; a restarted daemon re-admits the job, takes the
+//!   stale claims over, resumes from the checkpoints, and records every
+//!   run exactly once — series still bit-identical to serial.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output, Stdio};
+use std::time::Duration;
+
+use sparq::comm::wire::{frame, FRAME_OVERHEAD};
+use sparq::config::ExperimentConfig;
+use sparq::metrics::Series;
+use sparq::serve::{spawn, Client, Response, ServeConfig, MAX_FRAME_BYTES};
+use sparq::sweep::{run_spec, SweepOptions, SweepSpec};
+use sparq::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparq-serve-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_series_bits_eq(a: &Series, b: &Series, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record counts");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.t, rb.t, "{what}: t");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{what}: loss at t={}", ra.t);
+        assert_eq!(
+            ra.test_error.to_bits(),
+            rb.test_error.to_bits(),
+            "{what}: test_error at t={}",
+            ra.t
+        );
+        assert_eq!(ra.opt_gap.to_bits(), rb.opt_gap.to_bits(), "{what}: opt_gap at t={}", ra.t);
+        assert_eq!(ra.bits, rb.bits, "{what}: bits at t={}", ra.t);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{what}: rounds at t={}", ra.t);
+        assert_eq!(
+            ra.consensus.to_bits(),
+            rb.consensus.to_bits(),
+            "{what}: consensus at t={}",
+            ra.t
+        );
+        assert_eq!(ra.fired, rb.fired, "{what}: fired at t={}", ra.t);
+    }
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "dist-grid".into(),
+        nodes: 5,
+        steps: 160,
+        eval_every: 40,
+        problem: "quadratic:24".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: sparq::config::SyncSpec::every(2),
+        ..Default::default()
+    }
+}
+
+/// Seed-axis grid over [`base_cfg`], named `name`.
+fn grid(name: &str, seeds: &[u64]) -> SweepSpec {
+    SweepSpec::new(name).base(&base_cfg()).axis_u64("seed", seeds)
+}
+
+/// A grid small enough for in-process tests (4 runs × 40 steps).
+fn quick_spec() -> SweepSpec {
+    let base = ExperimentConfig {
+        name: "serve-quick".into(),
+        nodes: 4,
+        steps: 40,
+        eval_every: 20,
+        problem: "quadratic:16".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: sparq::config::SyncSpec::every(2),
+        ..Default::default()
+    };
+    SweepSpec::new("serve-quick").base(&base).axis_u64("seed", &[1, 2, 3, 4])
+}
+
+/// Serial single-process reference: id → series.
+fn serial_reference(spec: &SweepSpec) -> Vec<(String, Series)> {
+    let report = run_spec(
+        spec,
+        &SweepOptions {
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .expect("serial sweep");
+    report
+        .outcomes
+        .into_iter()
+        .map(|o| (o.id, o.series))
+        .collect()
+}
+
+fn spawn_daemon(out: &Path, workers: usize) -> sparq::serve::ServerHandle {
+    spawn(ServeConfig {
+        socket: "127.0.0.1:0".into(),
+        out: out.to_path_buf(),
+        workers,
+        poll_ms: 20,
+        ..Default::default()
+    })
+    .expect("spawn daemon")
+}
+
+fn connect(addr: &str) -> Client {
+    Client::connect_retry(addr, Duration::from_secs(10)).expect("connect")
+}
+
+fn claim_files(out: &Path) -> Vec<String> {
+    let mut v = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(out.join("claims")) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.ends_with(".claim") {
+                v.push(name.trim_end_matches(".claim").to_string());
+            }
+        }
+    }
+    v.sort();
+    v
+}
+
+fn result_ids(out: &Path) -> Vec<String> {
+    let Ok(text) = std::fs::read_to_string(out.join("results.jsonl")) else {
+        return Vec::new();
+    };
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let j = Json::parse(l).expect("valid record line");
+            j.get("id").and_then(|v| v.as_str().map(str::to_string)).expect("record id")
+        })
+        .collect()
+}
+
+fn assert_exactly_once(out: &Path, reference: &[(String, Series)], what: &str) {
+    let mut ids = result_ids(out);
+    ids.sort();
+    let mut expected: Vec<String> = reference.iter().map(|(id, _)| id.clone()).collect();
+    expected.sort();
+    assert_eq!(ids, expected, "{what}: every run id recorded exactly once");
+    assert!(claim_files(out).is_empty(), "{what}: all claims released");
+    for (id, serial) in reference {
+        let path = out.join("series").join(format!("{id}.jsonl"));
+        let stored = Series::read_jsonl(&path, "stored").expect("stored series");
+        assert_series_bits_eq(serial, &stored, &format!("{what}: run {id} vs serial"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-process protocol tests (TCP, portable)
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_and_garbage_frames_get_structured_errors_and_the_daemon_survives() {
+    let dir = tmp_dir("protocol");
+    let handle = spawn_daemon(&dir.join("out"), 1);
+    let addr = handle.addr().to_string();
+
+    let mut c = connect(&addr);
+    assert_eq!(c.ping().expect("ping"), sparq::version());
+
+    // Bit-flipped payload: CRC mismatch with sane framing. The daemon
+    // answers with a structured error and keeps serving the connection.
+    let mut wire = frame(br#"{"type":"ping"}"#);
+    wire[FRAME_OVERHEAD] ^= 0x10;
+    c.send_raw(&wire).unwrap();
+    match c.read_response().expect("error response") {
+        Response::Error { error } => {
+            assert!(error.contains("bad frame"), "unexpected error: {error}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    assert_eq!(c.ping().expect("ping after corrupt frame"), sparq::version());
+
+    // Valid frame, non-JSON payload — still nonfatal.
+    c.send_payload(b"not json at all").unwrap();
+    match c.read_response().expect("error response") {
+        Response::Error { error } => {
+            assert!(error.contains("bad request"), "unexpected error: {error}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // Valid JSON, unknown request type — still nonfatal.
+    c.send_payload(br#"{"type":"frobnicate"}"#).unwrap();
+    match c.read_response().expect("error response") {
+        Response::Error { error } => {
+            assert!(error.contains("bad request"), "unexpected error: {error}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    assert_eq!(c.ping().expect("ping after garbage"), sparq::version());
+
+    // An insane length prefix desynchronizes the stream: the daemon
+    // reports the error, then drops this connection — but not others.
+    let mut c2 = connect(&addr);
+    let mut header = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+    header.extend_from_slice(&[0u8; 4]);
+    c2.send_raw(&header).unwrap();
+    match c2.read_response().expect("error response") {
+        Response::Error { error } => {
+            assert!(error.contains("bad frame"), "unexpected error: {error}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    assert!(c2.read_response().is_err(), "fatal desync must close the connection");
+    assert_eq!(c.ping().expect("other connections unaffected"), sparq::version());
+
+    drop(c);
+    drop(c2);
+    handle.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn admission_rejects_invalid_specs_with_sparq_check_text() {
+    // A spec that parses and expands but fails `resolve()`: a torus
+    // needs a perfect-square node count.
+    let bad = SweepSpec::new("bad-grid").base(&ExperimentConfig {
+        name: "bad-torus".into(),
+        nodes: 5,
+        topology: "torus".into(),
+        steps: 40,
+        eval_every: 20,
+        problem: "quadratic:16".into(),
+        ..Default::default()
+    });
+    let dir = tmp_dir("admission");
+    let spec_path = dir.join("bad.json");
+    std::fs::write(&spec_path, bad.to_json().to_string_pretty()).unwrap();
+
+    // `sparq check` rejects it and prints one line: "{path}: {error}".
+    let check = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .args(["check", "--spec"])
+        .arg(&spec_path)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("sparq check");
+    assert!(!check.status.success(), "check must reject the spec");
+    let stderr = String::from_utf8_lossy(&check.stderr);
+    let line = stderr.lines().next().expect("one diagnostic line");
+    let prefix = format!("{}: ", spec_path.display());
+    let check_text = line
+        .strip_prefix(&prefix)
+        .unwrap_or_else(|| panic!("diagnostic should start with {prefix:?}: {line}"));
+
+    // The daemon rejects the same spec with the identical diagnostic.
+    let handle = spawn_daemon(&dir.join("out"), 1);
+    let mut c = connect(handle.addr());
+    let err = c.submit(&bad.to_json(), 0).expect_err("admission must reject");
+    assert_eq!(err, check_text, "admission text matches `sparq check`");
+
+    // Nothing was queued or persisted for the rejected job.
+    let (jobs, _) = c.status().expect("status");
+    assert!(jobs.is_empty(), "rejected job must not appear in the queue");
+    assert_eq!(
+        std::fs::read_dir(dir.join("out").join("jobs")).unwrap().count(),
+        0,
+        "rejected job must not be persisted"
+    );
+
+    drop(c);
+    handle.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_subscribers_see_identical_event_streams() {
+    let spec = quick_spec();
+    let runs = spec.len();
+    let dir = tmp_dir("subscribers");
+    let out = dir.join("out");
+    let handle = spawn_daemon(&out, 2);
+    let addr = handle.addr().to_string();
+
+    // Two subscribers attach before any work exists; each collects the
+    // full stream until the job's completion record.
+    let watcher = |addr: String| {
+        std::thread::spawn(move || -> Vec<(u64, String)> {
+            let client = connect(&addr);
+            let mut seen = Vec::new();
+            client
+                .watch(true, &mut |seq, event| {
+                    seen.push((seq, event.to_string()));
+                    event.get("kind").and_then(Json::as_str) != Some("job-complete")
+                })
+                .expect("watch stream");
+            seen
+        })
+    };
+    let w1 = watcher(addr.clone());
+    let w2 = watcher(addr.clone());
+
+    let mut c = connect(&addr);
+    let (job, accepted) = c.submit(&spec.to_json(), 0).expect("submit");
+    assert_eq!(accepted, runs);
+
+    let s1 = w1.join().expect("subscriber 1");
+    let s2 = w2.join().expect("subscriber 2");
+    assert_eq!(s1, s2, "subscribers must observe the identical sequence");
+
+    // The stream is complete and causally ordered: accept, start/finish
+    // per run, then the job record; sequence numbers are gapless.
+    for (i, (seq, _)) in s1.iter().enumerate() {
+        assert_eq!(*seq, i as u64, "gapless sequence numbers");
+    }
+    let kind_count = |kind: &str| {
+        s1.iter()
+            .filter(|(_, e)| {
+                Json::parse(e).unwrap().get("kind").and_then(Json::as_str) == Some(kind)
+            })
+            .count()
+    };
+    assert_eq!(kind_count("job-accepted"), 1);
+    assert_eq!(kind_count("started"), runs);
+    assert_eq!(kind_count("finished"), runs);
+    assert_eq!(kind_count("job-complete"), 1);
+    assert_eq!(
+        s1.last().map(|(_, e)| {
+            let j = Json::parse(e).unwrap();
+            (
+                j.get("kind").and_then(Json::as_str).unwrap_or_default().to_string(),
+                j.get("job").and_then(Json::as_str).unwrap_or_default().to_string(),
+            )
+        }),
+        Some(("job-complete".to_string(), job.clone())),
+        "stream ends at the job's completion record"
+    );
+
+    // Resubmitting the finished job settles instantly from the recorded
+    // results — accepted again, but nothing re-executes.
+    let (job2, accepted2) = c.submit(&spec.to_json(), 0).expect("resubmit");
+    assert_eq!(job2, job, "same spec content is the same job");
+    assert_eq!(accepted2, runs);
+    let (jobs, claims) = c.status().expect("status");
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].state, "complete");
+    assert_eq!((jobs[0].done, jobs[0].failed, jobs[0].total), (runs, 0, runs));
+    assert!(claims.is_empty());
+    assert_eq!(result_ids(&out).len(), runs, "resubmission must not re-record runs");
+
+    drop(c);
+    handle.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Child-process end-to-end tests (Unix socket)
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+fn sparq_serve(sock: &Path, out: &Path, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparq"));
+    cmd.arg("serve")
+        .arg("--socket")
+        .arg(sock)
+        .arg("--out")
+        .arg(out)
+        .args(["--poll-ms", "50"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    cmd
+}
+
+/// `sparq submit`; returns the accepted job id and the child output.
+#[cfg(unix)]
+fn sparq_submit(sock: &Path, spec_path: &Path, wait: bool) -> (String, Output) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparq"));
+    cmd.arg("submit").arg("--socket").arg(sock).arg("--spec").arg(spec_path);
+    if wait {
+        cmd.arg("--wait");
+    }
+    let out = cmd
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("sparq submit");
+    assert!(
+        out.status.success(),
+        "submit failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let job = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("accepted "))
+        .and_then(|rest| rest.split(':').next())
+        .unwrap_or_else(|| panic!("no acceptance line in:\n{stdout}"))
+        .to_string();
+    (job, out)
+}
+
+#[cfg(unix)]
+fn write_spec(spec: &SweepSpec, path: &Path) -> PathBuf {
+    std::fs::write(path, spec.to_json().to_string_pretty()).unwrap();
+    path.to_path_buf()
+}
+
+#[cfg(unix)]
+#[test]
+fn daemon_runs_two_tenants_under_one_budget_bit_identical_to_serial() {
+    // Two tenants split the 8-seed grid; the serial reference runs it
+    // whole. Run identity is the config hash, so the split is invisible
+    // to the per-run comparisons.
+    let reference = serial_reference(&grid("dist-grid", &[1, 2, 3, 4, 5, 6, 7, 8]));
+    assert_eq!(reference.len(), 8);
+
+    let dir = tmp_dir("tenants");
+    let out = dir.join("out");
+    let sock = dir.join("d.sock");
+    let spec_a = write_spec(&grid("tenant-a", &[1, 2, 3, 4]), &dir.join("a.json"));
+    let spec_b = write_spec(&grid("tenant-b", &[5, 6, 7, 8]), &dir.join("b.json"));
+
+    let daemon = sparq_serve(&sock, &out, &["--workers", "2", "--lease-secs", "30"])
+        .spawn()
+        .expect("spawn daemon");
+
+    let (job_a, sub_a) = sparq_submit(&sock, &spec_a, true);
+    let (job_b, sub_b) = sparq_submit(&sock, &spec_b, true);
+    assert_ne!(job_a, job_b, "different grids are different jobs");
+    for (tag, sub) in [("a", &sub_a), ("b", &sub_b)] {
+        let stdout = String::from_utf8_lossy(&sub.stdout);
+        assert!(
+            stdout.contains("job-complete"),
+            "tenant {tag} wait must end at job-complete:\n{stdout}"
+        );
+    }
+
+    // The live status endpoint agrees: both jobs complete, no claims.
+    let status = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .arg("status")
+        .arg("--socket")
+        .arg(&sock)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("sparq status");
+    assert!(status.status.success());
+    let status_out = String::from_utf8_lossy(&status.stdout).to_string();
+    assert!(
+        status_out.matches("complete").count() >= 2 && status_out.contains("no held claims"),
+        "status must show both jobs complete:\n{status_out}"
+    );
+
+    let shutdown = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .arg("shutdown")
+        .arg("--socket")
+        .arg(&sock)
+        .output()
+        .expect("sparq shutdown");
+    assert!(shutdown.status.success());
+    let o = daemon.wait_with_output().expect("daemon exit");
+    assert!(
+        o.status.success(),
+        "daemon failed:\n{}\n{}",
+        String::from_utf8_lossy(&o.stdout),
+        String::from_utf8_lossy(&o.stderr)
+    );
+    assert!(!sock.exists(), "graceful shutdown unlinks the socket");
+
+    assert_exactly_once(&out, &reference, "two tenants");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn killed_daemon_restart_completes_the_job_exactly_once_bit_for_bit() {
+    let spec = grid("dist-grid", &[1, 2, 3, 4, 5, 6, 7, 8]);
+    let reference = serial_reference(&spec);
+
+    let dir = tmp_dir("restart");
+    let out = dir.join("out");
+    let sock = dir.join("d.sock");
+    let spec_path = write_spec(&spec, &dir.join("spec.json"));
+
+    // Daemon 1 "crashes": fault injection aborts its first claimed run
+    // at t = 80 (after the t = 40 and t = 80 checkpoints), leaving the
+    // claim, the checkpoints, and the durable job file in place.
+    let daemon1 = sparq_serve(
+        &sock,
+        &out,
+        &[
+            "--workers",
+            "1",
+            "--lease-secs",
+            "1",
+            "--checkpoint-every",
+            "40",
+            "--fault-abort-at",
+            "80",
+        ],
+    )
+    .spawn()
+    .expect("spawn daemon 1");
+    let (job, _) = sparq_submit(&sock, &spec_path, false);
+    let o1 = daemon1.wait_with_output().expect("daemon 1 exit");
+    assert!(!o1.status.success(), "fault-injected daemon must exit nonzero");
+    assert!(
+        String::from_utf8_lossy(&o1.stderr).contains("fault injection"),
+        "stderr: {}",
+        String::from_utf8_lossy(&o1.stderr)
+    );
+    let abandoned = claim_files(&out);
+    assert_eq!(abandoned.len(), 1, "exactly one abandoned claim: {abandoned:?}");
+    let victim = abandoned[0].clone();
+    assert!(
+        out.join("ckpt").join(format!("{victim}.ckpt")).exists(),
+        "mid-run checkpoint left behind for takeover"
+    );
+    assert!(result_ids(&out).is_empty(), "no result recorded for the aborted run");
+    assert_eq!(
+        std::fs::read_dir(out.join("jobs")).unwrap().count(),
+        1,
+        "the job file survives the crash"
+    );
+
+    // Let the lease expire, then restart over the same directory. The
+    // new daemon re-admits the persisted job on its own — no resubmit —
+    // takes the stale claim over, and resumes from the checkpoint.
+    std::thread::sleep(Duration::from_millis(1200));
+    let daemon2 = sparq_serve(
+        &sock,
+        &out,
+        &[
+            "--workers",
+            "2",
+            "--lease-secs",
+            "1",
+            "--lease-margin-secs",
+            "0",
+            "--checkpoint-every",
+            "40",
+        ],
+    )
+    .spawn()
+    .expect("spawn daemon 2");
+
+    // `sparq watch --job` replays from the start of the new daemon's
+    // stream and exits at the job's completion record.
+    let watch = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .arg("watch")
+        .arg("--socket")
+        .arg(&sock)
+        .args(["--job", &job])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("sparq watch");
+    assert!(
+        watch.status.success(),
+        "watch failed:\n{}",
+        String::from_utf8_lossy(&watch.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&watch.stdout).contains("job-complete"),
+        "watch must end at job-complete:\n{}",
+        String::from_utf8_lossy(&watch.stdout)
+    );
+
+    let shutdown = Command::new(env!("CARGO_BIN_EXE_sparq"))
+        .arg("shutdown")
+        .arg("--socket")
+        .arg(&sock)
+        .output()
+        .expect("sparq shutdown");
+    assert!(shutdown.status.success());
+    let o2 = daemon2.wait_with_output().expect("daemon 2 exit");
+    assert!(
+        o2.status.success(),
+        "restarted daemon failed:\n{}\n{}",
+        String::from_utf8_lossy(&o2.stdout),
+        String::from_utf8_lossy(&o2.stderr)
+    );
+    let stdout2 = String::from_utf8_lossy(&o2.stdout);
+    assert!(
+        stdout2.contains("resume") && stdout2.contains("from t="),
+        "takeover must resume from the checkpoint, not restart:\n{stdout2}"
+    );
+    assert!(
+        !out.join("ckpt").join(format!("{victim}.ckpt")).exists(),
+        "completed run clears the inherited checkpoint"
+    );
+
+    assert_exactly_once(&out, &reference, "restart takeover");
+    std::fs::remove_dir_all(&dir).ok();
+}
