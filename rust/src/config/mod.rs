@@ -22,8 +22,9 @@ pub mod specs;
 pub use error::ConfigError;
 pub use resolved::{GammaMode, ResolvedConfig};
 pub use specs::{
-    CompressorKind, CompressorSpec, FaultSpec, KSpec, LinkSpec, LrSpec, ProblemKind,
-    ProblemSpec, ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec, TriggerSpec,
+    CompressorKind, CompressorSpec, Family, FamilySpec, FaultSpec, KSpec, LinkSpec, LrSpec,
+    ProblemKind, ProblemSpec, ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec,
+    TriggerSpec,
 };
 
 use crate::util::json::Json;
@@ -79,6 +80,12 @@ pub struct ExperimentConfig {
     /// Omitted from the JSON form when default, so pre-fault configs
     /// hash identically.
     pub fault: FaultSpec,
+    /// Algorithm family for the event-triggered engine: `sparq` (the
+    /// default) or `squarm:BETA` (momentum-buffered trigger drift).
+    /// Only meaningful with `algo = sparq` (checked by `resolve`).
+    /// Omitted from the JSON form when default, so pre-family configs
+    /// hash identically.
+    pub family: FamilySpec,
     pub compressor: CompressorSpec,
     pub trigger: TriggerSpec,
     pub lr: LrSpec,
@@ -112,6 +119,7 @@ impl Default for ExperimentConfig {
             topology_schedule: ScheduleSpec::fixed(),
             link: LinkSpec::ideal(),
             fault: FaultSpec::none(),
+            family: FamilySpec::sparq(),
             compressor: CompressorSpec::sign_top_k_pct(10.0),
             trigger: TriggerSpec::constant(100.0),
             lr: LrSpec::inv_time(100.0, 1.0),
@@ -147,13 +155,18 @@ impl ExperimentConfig {
             .set("problem", self.problem.to_json())
             .set("gamma", self.gamma)
             .set("workers", self.workers);
-        // Emitted only when set: pre-fault configs keep their exact
-        // serialized bytes, so config_hash / sweep resume ids are
-        // unchanged (pinned by rust/tests/config_golden.rs).
-        if self.fault.is_none() {
+        // Emitted only when set: pre-fault / pre-family configs keep
+        // their exact serialized bytes, so config_hash / sweep resume
+        // ids are unchanged (pinned by rust/tests/config_golden.rs).
+        let j = if self.fault.is_none() {
             j
         } else {
             j.set("fault", self.fault.to_json())
+        };
+        if self.family.is_default() {
+            j
+        } else {
+            j.set("family", self.family.to_json())
         }
     }
 
@@ -170,6 +183,7 @@ impl ExperimentConfig {
         "lr",
         "h",
         "fault",
+        "family",
         "steps",
         "eval_every",
         "momentum",
@@ -264,6 +278,7 @@ impl ExperimentConfig {
             )?,
             link: spec(j, "link", &base.link, LinkSpec::from_json)?,
             fault: spec(j, "fault", &base.fault, FaultSpec::from_json)?,
+            family: spec(j, "family", &base.family, FamilySpec::from_json)?,
             compressor: spec(j, "compressor", &base.compressor, CompressorSpec::from_json)?,
             trigger: spec(j, "trigger", &base.trigger, TriggerSpec::from_json)?,
             lr: spec(j, "lr", &base.lr, LrSpec::from_json)?,
@@ -477,6 +492,51 @@ mod tests {
         let j = Json::parse(r#"{"fault": "crash:0:9:3"}"#).unwrap();
         let err = ExperimentConfig::from_json(&j).unwrap_err();
         assert_eq!(err.field(), Some("fault"), "{err}");
+    }
+
+    #[test]
+    fn family_field_roundtrips_but_defaults_stay_byte_identical() {
+        // default family ⇒ no "family" key in the JSON (hash compatibility)
+        let dflt = ExperimentConfig::default();
+        assert!(!dflt.to_json().to_string().contains("family"));
+        // squarm ⇒ emitted, and roundtrips
+        let cfg = ExperimentConfig {
+            family: "squarm:0.9".into(),
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string();
+        assert!(text.contains(r#""family":"squarm:0.9""#), "{text}");
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // explicit "sparq" parses to the default (and re-serializes away)
+        let j = Json::parse(r#"{"family": "sparq"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, ExperimentConfig::default());
+        assert!(!cfg.to_json().to_string().contains("family"));
+        // invalid families fail at the boundary with the field named
+        let j = Json::parse(r#"{"family": "squarm:2"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert_eq!(err.field(), Some("family"), "{err}");
+        // the structured object form works through the config too
+        let j = Json::parse(r#"{"family": {"kind": "squarm", "beta": 0.5}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.family.as_str(), "squarm:0.5");
+    }
+
+    #[test]
+    fn randomized_sync_spec_roundtrips_through_config() {
+        // The Section 2 randomized-I_T ablation: the raw spec string is
+        // preserved through serialization, and re-parsing expands to the
+        // identical explicit index set (seeded, deterministic).
+        let cfg = ExperimentConfig {
+            h: "random:5:1000:42".into(),
+            ..Default::default()
+        };
+        assert_eq!(cfg.h.period(), None);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(back.h.as_str(), "random:5:1000:42");
+        assert_eq!(cfg.h.schedule(), back.h.schedule());
     }
 
     #[test]

@@ -34,7 +34,8 @@
 //! ```
 
 use super::error::ConfigError;
-use super::ExperimentConfig;
+use super::specs::Family;
+use super::{Algo, ExperimentConfig};
 use crate::comm::{FaultPlan, LinkModel};
 use crate::graph::TopologySchedule;
 use crate::schedule::{LrSchedule, SyncSchedule};
@@ -75,6 +76,12 @@ pub struct ResolvedConfig {
     pub sync: SyncSchedule,
     /// Event-trigger threshold schedule c_t.
     pub trigger: ThresholdSchedule,
+    /// EventGraD-style per-coordinate trigger mode (`percoord:C` specs):
+    /// each coordinate fires independently instead of the norm test.
+    pub trigger_per_coord: bool,
+    /// Algorithm family for the event-triggered engine (trigger-side
+    /// composition: plain SPARQ or momentum-buffered SQuARM).
+    pub family: Family,
     /// Learning-rate schedule η_t.
     pub lr: LrSchedule,
     /// Seeded link-fault process (seed already mixed in).
@@ -191,6 +198,40 @@ impl ExperimentConfig {
             }
         }
 
+        // The family knob composes with `algo` — it selects trigger-side
+        // behavior of the *event-triggered* engine, so it is meaningless
+        // for CHOCO/vanilla (which have no trigger). Reject the
+        // contradiction instead of silently running plain CHOCO.
+        if !self.family.is_default() && self.algo != Algo::Sparq {
+            return Err(ConfigError::conflict(
+                "family",
+                "algo",
+                format!(
+                    "family {:?} requires the event-triggered engine (algo = \"sparq\"), \
+                     got algo = {:?}",
+                    self.family.as_str(),
+                    self.algo.as_str()
+                ),
+            )
+            .suggest("set algo to \"sparq\", or drop the family field"));
+        }
+        // SQuARM's trigger is the whole-vector norm of the buffered drift;
+        // a per-coordinate trigger would leave β silently unused (the
+        // coordinate mask bypasses the momentum path in the engine).
+        if !self.family.is_default() && self.trigger.per_coord() {
+            return Err(ConfigError::conflict(
+                "family",
+                "trigger",
+                format!(
+                    "family {:?} evaluates a whole-vector momentum-buffered trigger, \
+                     which cannot compose with the per-coordinate trigger {:?}",
+                    self.family.as_str(),
+                    self.trigger.as_str()
+                ),
+            )
+            .suggest("use a norm trigger (e.g. \"const:C\"), or drop the family field"));
+        }
+
         if !self.momentum.is_finite() || !(0.0..1.0).contains(&self.momentum) {
             return Err(ConfigError::value(
                 "momentum",
@@ -218,6 +259,8 @@ impl ExperimentConfig {
             dim,
             sync: self.h.schedule().clone(),
             trigger: self.trigger.schedule().clone(),
+            trigger_per_coord: self.trigger.per_coord(),
+            family: self.family.family(),
             lr: self.lr.schedule().clone(),
             link,
             fault,
@@ -387,6 +430,64 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.resolve().is_ok());
+    }
+
+    #[test]
+    fn family_requires_the_event_triggered_engine() {
+        use crate::config::Algo;
+        // squarm composes with algo = sparq only
+        let cfg = ExperimentConfig {
+            family: "squarm:0.9".into(),
+            ..Default::default()
+        };
+        let r = cfg.resolve().unwrap();
+        assert_eq!(r.family, Family::Squarm { beta: 0.9 });
+        for algo in [Algo::Choco, Algo::Vanilla] {
+            let cfg = ExperimentConfig {
+                algo: algo.clone(),
+                family: "squarm:0.9".into(),
+                ..Default::default()
+            };
+            let err = cfg.resolve().unwrap_err().to_string();
+            assert!(err.contains("family"), "{err}");
+            assert!(err.contains("sparq"), "{err}");
+        }
+        // the default family composes with every algo
+        for algo in [Algo::Sparq, Algo::Choco, Algo::Vanilla] {
+            let cfg = ExperimentConfig {
+                algo,
+                ..Default::default()
+            };
+            assert_eq!(cfg.resolve().unwrap().family, Family::Sparq);
+        }
+        // squarm's whole-vector momentum trigger cannot compose with a
+        // per-coordinate trigger (β would be silently unused)
+        let cfg = ExperimentConfig {
+            family: "squarm:0.9".into(),
+            trigger: "percoord:4".into(),
+            ..Default::default()
+        };
+        let err = cfg.resolve().unwrap_err().to_string();
+        assert!(err.contains("per-coordinate"), "{err}");
+        // but the per-coordinate trigger composes with the default family
+        let cfg = ExperimentConfig {
+            trigger: "percoord:4".into(),
+            ..Default::default()
+        };
+        assert!(cfg.resolve().is_ok());
+    }
+
+    #[test]
+    fn percoord_trigger_flows_through_resolve() {
+        let cfg = ExperimentConfig {
+            trigger: "percoord:4".into(),
+            ..Default::default()
+        };
+        let r = cfg.resolve().unwrap();
+        assert!(r.trigger_per_coord);
+        assert_eq!(r.trigger, crate::trigger::ThresholdSchedule::Constant(4.0));
+        let r = ExperimentConfig::default().resolve().unwrap();
+        assert!(!r.trigger_per_coord);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use super::error::ConfigError;
 use crate::compress::Compressor;
 use crate::graph::TopologyKind;
 use crate::schedule::{LrSchedule, SyncSchedule};
-use crate::trigger::ThresholdSchedule;
+use crate::trigger::{EventTrigger, ThresholdSchedule};
 use crate::util::json::Json;
 
 /// Shortest-round-trip float rendering for canonical spec strings
@@ -410,12 +410,14 @@ impl CompressorSpec {
 // ---------------------------------------------------------------------
 
 /// Typed event-trigger threshold spec (`zero`, `const:C`, `poly:C0:EPS`,
-/// `piecewise:INIT:STEP:EVERY:UNTIL:SPE`); payload is the validated
-/// [`ThresholdSchedule`].
+/// `piecewise:INIT:STEP:EVERY:UNTIL:SPE`, or the EventGraD-style
+/// per-coordinate form `percoord:C`); payload is the validated
+/// [`ThresholdSchedule`] plus the per-coordinate flag.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TriggerSpec {
     raw: String,
     sched: ThresholdSchedule,
+    per_coord: bool,
 }
 
 spec_string_json!(TriggerSpec);
@@ -426,8 +428,26 @@ impl TriggerSpec {
         &self.sched
     }
 
+    /// Per-coordinate (EventGraD) mode — `percoord:C` specs.
+    pub fn per_coord(&self) -> bool {
+        self.per_coord
+    }
+
+    /// The runnable trigger this spec describes.
+    pub fn event_trigger(&self) -> EventTrigger {
+        if self.per_coord {
+            EventTrigger::new_per_coord(self.sched.clone())
+        } else {
+            EventTrigger::new(self.sched.clone())
+        }
+    }
+
     pub fn zero() -> Self {
         "zero".parse().expect("static spec")
+    }
+
+    pub fn percoord(c: f64) -> Self {
+        format!("percoord:{}", fmt_f64(c)).as_str().into()
     }
 
     pub fn constant(c0: f64) -> Self {
@@ -449,11 +469,12 @@ impl TriggerSpec {
     }
 
     fn parse_spec(s: &str) -> Result<Self, ConfigError> {
-        let sched = ThresholdSchedule::parse(s)
+        let trig = EventTrigger::parse(s)
             .map_err(|reason| ConfigError::value("trigger", s, reason))?;
         Ok(TriggerSpec {
             raw: s.to_string(),
-            sched,
+            sched: trig.schedule,
+            per_coord: trig.per_coord,
         })
     }
 
@@ -469,6 +490,7 @@ impl TriggerSpec {
                 let spec = match obj_kind("trigger", j)?.as_str() {
                     "zero" => "zero".to_string(),
                     "const" => format!("const:{}", fmt_f64(obj_f64("trigger", j, "c0")?)),
+                    "percoord" => format!("percoord:{}", fmt_f64(obj_f64("trigger", j, "c0")?)),
                     "poly" => format!(
                         "poly:{}:{}",
                         fmt_f64(obj_f64("trigger", j, "c0")?),
@@ -494,6 +516,119 @@ impl TriggerSpec {
             }
             other => Err(ConfigError::value(
                 "trigger",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// FamilySpec
+// ---------------------------------------------------------------------
+
+/// The parsed payload of a [`FamilySpec`]: which trigger family the
+/// event-triggered engine runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Family {
+    /// Plain SPARQ-SGD (Algorithm 1): the trigger tests the raw drift
+    /// ‖x^{t+½} − x̂‖².
+    Sparq,
+    /// SQuARM-SGD (same authors, arXiv 1910.14280's companion): the
+    /// trigger tests a momentum-buffered drift u ← β·u + (x^{t+½} − x̂);
+    /// β = 0 degenerates bit-for-bit to [`Family::Sparq`].
+    Squarm { beta: f64 },
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Sparq => "sparq",
+            Family::Squarm { .. } => "squarm",
+        }
+    }
+}
+
+/// Typed algorithm-family spec (`sparq`, `squarm:BETA` with
+/// β ∈ [0, 1)). The family composes with the `algo` field: it selects
+/// the *trigger-side* behavior of the event-triggered engine, so it is
+/// only meaningful for `algo = sparq` (enforced cross-field by
+/// `ExperimentConfig::resolve`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FamilySpec {
+    raw: String,
+    family: Family,
+}
+
+spec_string_json!(FamilySpec);
+spec_common!(FamilySpec, "bad family spec");
+
+impl FamilySpec {
+    pub fn family(&self) -> Family {
+        self.family
+    }
+
+    /// The plain-SPARQ default (what an absent `family` key means).
+    pub fn sparq() -> Self {
+        "sparq".parse().expect("static spec")
+    }
+
+    pub fn squarm(beta: f64) -> Self {
+        format!("squarm:{}", fmt_f64(beta)).as_str().into()
+    }
+
+    pub fn is_default(&self) -> bool {
+        self.family == Family::Sparq
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        const FIELD: &str = "family";
+        let family = match s.split_once(':') {
+            None if s == "sparq" => Family::Sparq,
+            Some(("squarm", beta)) => {
+                let beta: f64 = beta.parse().map_err(|_| {
+                    ConfigError::value(FIELD, s, format!("momentum beta {beta:?} is not a number"))
+                })?;
+                if !beta.is_finite() || !(0.0..1.0).contains(&beta) {
+                    return Err(ConfigError::value(
+                        FIELD,
+                        s,
+                        format!("momentum beta must lie in [0, 1), got {beta}"),
+                    ));
+                }
+                Family::Squarm { beta }
+            }
+            _ => {
+                return Err(ConfigError::value(FIELD, s, "unknown algorithm family")
+                    .suggest("sparq or squarm:BETA (beta in [0, 1))"))
+            }
+        };
+        Ok(FamilySpec {
+            raw: s.to_string(),
+            family,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys("family", j, &["kind", "beta"])?;
+                let spec = match obj_kind("family", j)?.as_str() {
+                    "sparq" => "sparq".to_string(),
+                    "squarm" => format!("squarm:{}", fmt_f64(obj_f64("family", j, "beta")?)),
+                    other => {
+                        return Err(ConfigError::value(
+                            "family",
+                            j.to_string(),
+                            format!("unknown family kind {other:?}"),
+                        ))
+                    }
+                };
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "family",
                 other.to_string(),
                 "expected a spec string or object",
             )),
@@ -1666,6 +1801,57 @@ mod tests {
         );
         // typo'd keys rejected
         assert!(FaultSpec::from_json(&Json::parse(r#"{"crsh":[]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn trigger_spec_percoord_form() {
+        let t = TriggerSpec::from_str("percoord:4").unwrap();
+        assert!(t.per_coord());
+        assert_eq!(t.schedule(), &ThresholdSchedule::Constant(4.0));
+        assert_eq!(t.as_str(), "percoord:4"); // raw preserved
+        let trig = t.event_trigger();
+        assert!(trig.per_coord);
+        assert_eq!(trig.coord_threshold(3, 0.5), Some(4.0 * 0.25));
+        // norm-mode specs keep per_coord off and coord_threshold None
+        let n = TriggerSpec::from_str("const:4").unwrap();
+        assert!(!n.per_coord());
+        assert_eq!(n.event_trigger().coord_threshold(3, 0.5), None);
+        // typed constructor and JSON object form agree on the canonical string
+        assert_eq!(TriggerSpec::percoord(4.0).as_str(), "percoord:4");
+        let j = Json::parse(r#"{"kind":"percoord","c0":4}"#).unwrap();
+        assert_eq!(TriggerSpec::from_json(&j).unwrap().as_str(), "percoord:4");
+        assert!(TriggerSpec::from_str("percoord:-1").is_err());
+        assert!(TriggerSpec::from_str("percoord:inf").is_err());
+    }
+
+    #[test]
+    fn family_spec_grammar_and_bounds() {
+        let f = FamilySpec::from_str("sparq").unwrap();
+        assert_eq!(f.family(), Family::Sparq);
+        assert!(f.is_default());
+        let f = FamilySpec::from_str("squarm:0.9").unwrap();
+        assert_eq!(f.family(), Family::Squarm { beta: 0.9 });
+        assert!(!f.is_default());
+        assert_eq!(f.as_str(), "squarm:0.9");
+        // β = 0 is valid (the SPARQ-degenerate pin) but NOT the default
+        // spec — it still routes through the SQuARM composition.
+        let zero = FamilySpec::squarm(0.0);
+        assert_eq!(zero.family(), Family::Squarm { beta: 0.0 });
+        assert!(!zero.is_default());
+        assert_eq!(zero.as_str(), "squarm:0");
+        // bounds: β ∈ [0, 1)
+        assert!(FamilySpec::from_str("squarm:1").is_err());
+        assert!(FamilySpec::from_str("squarm:-0.1").is_err());
+        assert!(FamilySpec::from_str("squarm:nan").is_err());
+        assert!(FamilySpec::from_str("squarm:lots").is_err());
+        let err = FamilySpec::from_str("motef").unwrap_err();
+        assert!(err.to_string().contains("family"), "{err}");
+        // JSON object form
+        let j = Json::parse(r#"{"kind":"squarm","beta":0.5}"#).unwrap();
+        assert_eq!(FamilySpec::from_json(&j).unwrap().as_str(), "squarm:0.5");
+        let j = Json::parse(r#"{"kind":"sparq"}"#).unwrap();
+        assert!(FamilySpec::from_json(&j).unwrap().is_default());
+        assert!(FamilySpec::from_json(&Json::parse(r#"{"kind":"squarm"}"#).unwrap()).is_err());
     }
 
     #[test]

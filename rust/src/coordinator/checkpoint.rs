@@ -4,8 +4,11 @@
 //! bus counters, trigger statistics) followed by raw little-endian
 //! blocks: per-node f32 parameters, momentum buffers (when present), the
 //! estimate bank x̂ and consensus accumulator rows (estimate-tracking
-//! rules), and each node's xoshiro256** RNG state. The header length is
-//! the first line so the file is self-describing.
+//! rules), trigger-momentum buffers u (SQuARM runs — an additive
+//! `has_trigger_momentum` flag + block between acc and rng, so files
+//! from non-SQuARM runs keep their exact prior bytes), and each node's
+//! xoshiro256** RNG state. The header length is the first line so the
+//! file is self-describing.
 //!
 //! Version 2 (this layout) captures everything a
 //! [`DecentralizedEngine`](super::engine::DecentralizedEngine) run needs
@@ -101,6 +104,9 @@ pub struct Checkpoint {
     /// accumulator is maintained incrementally during a run, so it must
     /// be restored verbatim rather than recomputed from the bank).
     pub acc: Vec<Vec<f32>>,
+    /// Trigger-side momentum buffers u (SQuARM-SGD; empty for plain-drift
+    /// triggers and for snapshots taken before the first sync round).
+    pub trig_momentum: Vec<Vec<f32>>,
     /// Per-node RNG stream states (empty for v1 files).
     pub rng: Vec<[u64; 4]>,
     /// Cumulative fault counters (zero for fault-free runs and for files
@@ -131,6 +137,9 @@ pub fn snapshot(algo: &dyn DecentralizedAlgo, t: u64, bus: &Bus) -> Checkpoint {
             .collect(),
         acc: (0..n)
             .filter_map(|i| algo.consensus_acc(i).map(|a| a.to_vec()))
+            .collect(),
+        trig_momentum: (0..n)
+            .filter_map(|i| algo.trigger_momentum(i).map(|u| u.to_vec()))
             .collect(),
         rng: (0..n).filter_map(|i| algo.rng_state(i)).collect(),
         fault: algo.fault_counters(),
@@ -167,6 +176,7 @@ pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) -> Result<()
         ("momentum", &ckpt.momentum),
         ("xhat", &ckpt.xhat),
         ("acc", &ckpt.acc),
+        ("trig_momentum", &ckpt.trig_momentum),
     ] {
         if !block.is_empty() && block.len() != ckpt.n() {
             return Err(RestoreError::new(
@@ -181,6 +191,7 @@ pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) -> Result<()
         ("momentum", &ckpt.momentum),
         ("xhat", &ckpt.xhat),
         ("acc", &ckpt.acc),
+        ("trig_momentum", &ckpt.trig_momentum),
     ] {
         if let Some(row) = block.iter().find(|r| r.len() != d) {
             return Err(RestoreError::new(
@@ -196,6 +207,9 @@ pub fn restore(algo: &mut dyn DecentralizedAlgo, ckpt: &Checkpoint) -> Result<()
     }
     for (i, m) in ckpt.momentum.iter().enumerate() {
         algo.set_node_momentum(i, m);
+    }
+    for (i, u) in ckpt.trig_momentum.iter().enumerate() {
+        algo.set_node_trigger_momentum(i, u);
     }
     if !ckpt.xhat.is_empty() {
         algo.restore_estimates(&ckpt.xhat, &ckpt.acc);
@@ -247,7 +261,11 @@ impl Checkpoint {
             .set("has_rng", !self.rng.is_empty());
         // Additive keys, written only when meaningful: fault-free runs
         // keep the exact pre-chaos header bytes, and the loader's
-        // default-0 reads keep both directions compatible.
+        // default-0 reads keep both directions compatible. The SQuARM
+        // trigger-momentum flag follows the same rule: absent ⇒ no block.
+        if !self.trig_momentum.is_empty() {
+            header = header.set("has_trigger_momentum", true);
+        }
         if !self.fault.is_zero() {
             header = header
                 .set("f_crashes", self.fault.crashes)
@@ -271,6 +289,7 @@ impl Checkpoint {
         write_f32_block(&mut w, &self.momentum)?;
         write_f32_block(&mut w, &self.xhat)?;
         write_f32_block(&mut w, &self.acc)?;
+        write_f32_block(&mut w, &self.trig_momentum)?;
         for s in &self.rng {
             for word in s {
                 w.write_all(&word.to_le_bytes())?;
@@ -316,6 +335,7 @@ impl Checkpoint {
         let dim = get("dim")? as usize;
         let has_momentum = flag("has_momentum");
         let has_estimates = version >= 2 && flag("has_estimates");
+        let has_trigger_momentum = version >= 2 && flag("has_trigger_momentum");
         let has_rng = version >= 2 && flag("has_rng");
         let node_bits: Vec<u64> = match j.get("node_bits").and_then(Json::as_arr) {
             Some(a) => a
@@ -342,6 +362,7 @@ impl Checkpoint {
         let momentum = if has_momentum { read_block(n)? } else { Vec::new() };
         let xhat = if has_estimates { read_block(n)? } else { Vec::new() };
         let acc = if has_estimates { read_block(n)? } else { Vec::new() };
+        let trig_momentum = if has_trigger_momentum { read_block(n)? } else { Vec::new() };
         let mut rng = Vec::new();
         if has_rng {
             let mut buf = [0u8; 32];
@@ -371,6 +392,7 @@ impl Checkpoint {
             momentum,
             xhat,
             acc,
+            trig_momentum,
             rng,
             fault: FaultCounters {
                 crashes: get("f_crashes")?,
@@ -414,6 +436,7 @@ mod tests {
             momentum,
             xhat,
             acc,
+            trig_momentum: Vec::new(),
             rng: (0..n)
                 .map(|i| {
                     let r = Rng::new(seed ^ (i as u64) << 3);
@@ -450,6 +473,42 @@ mod tests {
         // rng states persist regardless
         assert_eq!(back.rng.len(), 3);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_trigger_momentum_block() {
+        // SQuARM snapshots carry an extra f32 block between acc and rng;
+        // the flag is additive, so files without it keep prior bytes.
+        let mut ckpt = mk(7, 3, 9, true, true);
+        let mut rng = Rng::new(99);
+        ckpt.trig_momentum = (0..3)
+            .map(|_| {
+                let mut v = vec![0.0f32; 9];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let path =
+            std::env::temp_dir().join(format!("sparq-ckpt-trig-{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&bytes[..nl]).unwrap();
+        assert!(header.contains("has_trigger_momentum"), "{header}");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, back);
+        std::fs::remove_file(&path).ok();
+        // Plain runs omit the flag entirely.
+        let plain = mk(8, 2, 4, false, false);
+        let path2 =
+            std::env::temp_dir().join(format!("sparq-ckpt-notrig-{}.bin", std::process::id()));
+        plain.save(&path2).unwrap();
+        let bytes = std::fs::read(&path2).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&bytes[..nl]).unwrap();
+        assert!(!header.contains("has_trigger_momentum"), "{header}");
+        assert!(Checkpoint::load(&path2).unwrap().trig_momentum.is_empty());
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

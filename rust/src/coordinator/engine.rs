@@ -53,7 +53,7 @@ use crate::comm::{Bus, FaultCounters, FaultPlan};
 use crate::compress::Compressor;
 use crate::graph::dynamic::TopologySchedule;
 use crate::graph::{MixingMatrix, SpectralInfo, Topology};
-use crate::linalg::vecops::sub_into_dist2;
+use crate::linalg::vecops::{scale_add_into_dist2, sub_into_dist2};
 use crate::problems::GradientSource;
 use crate::schedule::{LrSchedule, SyncSchedule};
 use crate::trigger::EventTrigger;
@@ -81,6 +81,16 @@ pub trait CommPolicy: Send + Sync {
     /// treats every sync round as all-transmit and is gated purely by
     /// [`is_sync`](Self::is_sync) (plus link-model stragglers).
     fn fires(&self, drift2: f64, t: u64, eta: f64) -> bool;
+
+    /// Per-coordinate threshold c_t·η_t² when the policy triggers each
+    /// coordinate independently (EventGraD-style `percoord:C` triggers),
+    /// `None` for whole-vector policies. Estimate-tracking rules consult
+    /// this before [`fires`](Self::fires): when `Some`, coordinate j
+    /// transmits iff d_j² strictly exceeds the threshold and silent
+    /// coordinates are zeroed out of the compressor input.
+    fn coord_threshold(&self, _t: u64, _eta: f64) -> Option<f64> {
+        None
+    }
 }
 
 /// SPARQ-SGD's policy: sync every H (or explicit I_T), transmit only on
@@ -97,6 +107,10 @@ impl CommPolicy for Triggered {
 
     fn fires(&self, drift2: f64, t: u64, eta: f64) -> bool {
         self.trigger.fires_drift(drift2, t, eta)
+    }
+
+    fn coord_threshold(&self, t: u64, eta: f64) -> Option<f64> {
+        self.trigger.coord_threshold(t, eta)
     }
 }
 
@@ -216,6 +230,11 @@ pub struct EstimateTracking {
     xhat: Vec<Vec<f32>>,
     /// Materialized Σ_j w_ij x̂_j per node (consensus.rs).
     nbr: NeighborAccumulator,
+    /// SQuARM-SGD trigger momentum β: `Some(β)` evaluates the event
+    /// trigger on the buffered drift u ← β·u + (x^{t+½} − x̂) instead of
+    /// the raw drift (the transmitted message is still C(diff), so the
+    /// x̂ tracking identity is unchanged). `None` ⇒ plain SPARQ path.
+    trigger_beta: Option<f32>,
 }
 
 impl EstimateTracking {
@@ -223,6 +242,20 @@ impl EstimateTracking {
         EstimateTracking {
             xhat: vec![vec![0.0; d]; mixing.n()],
             nbr: NeighborAccumulator::new(mixing, d),
+            trigger_beta: None,
+        }
+    }
+
+    /// SQuARM-SGD composition: same bank + γ-consensus, but the trigger
+    /// decision uses a per-node momentum-buffered drift
+    /// (`NodeState::trig_momentum`, flushed to zero on every delivered
+    /// broadcast). β = 0 annihilates the buffer each round, so
+    /// SQuARM(β=0) is pinned bit-for-bit equal to the SPARQ path
+    /// (`rust/tests/engine_equivalence.rs`).
+    pub fn with_trigger_beta(mixing: &MixingMatrix, d: usize, beta: f32) -> EstimateTracking {
+        EstimateTracking {
+            trigger_beta: Some(beta),
+            ..EstimateTracking::new(mixing, d)
         }
     }
 }
@@ -247,13 +280,47 @@ impl UpdateRule for EstimateTracking {
         // pair. Crashed nodes are dark: no trigger check, no
         // transmission.
         let xhat = &self.xhat;
+        let beta = self.trigger_beta;
         ctx.pool.for_each_mut(nodes, |i, node| {
+            // SQuARM buffers are allocated for *every* node at the first
+            // sync round — crashed nodes included — so checkpoint blocks
+            // stay rectangular under a fault plan.
+            if beta.is_some() && node.trig_momentum.is_none() {
+                node.trig_momentum = Some(vec![0.0; node.diff.len()]);
+            }
             if ctx.down[i] {
                 node.fired = false;
                 return;
             }
             let drift2 = sub_into_dist2(&node.x_half, &xhat[i], &mut node.diff);
-            node.fired = ctx.comm.fires(drift2, ctx.t, ctx.eta);
+            if let Some(thr) = ctx.comm.coord_threshold(ctx.t, ctx.eta) {
+                // EventGraD-style per-coordinate trigger: coordinate j
+                // transmits iff d_j² > thr (strict); silent coordinates
+                // are zeroed so only fired ones enter the compressor.
+                // Fired coordinates keep their exact diff value, so a
+                // threshold every coordinate clears reproduces the norm
+                // path bit-for-bit.
+                let mut any = false;
+                for v in node.diff.iter_mut() {
+                    let dv = *v as f64;
+                    if dv * dv > thr {
+                        any = true;
+                    } else {
+                        *v = 0.0;
+                    }
+                }
+                node.fired = any;
+            } else if let Some(beta) = beta {
+                // SQuARM-SGD: fire on the momentum-buffered drift
+                // u ← β·u + diff (fused with its norm — vecops), but
+                // transmit C(diff) so x̂ tracking stays exact. At β = 0
+                // the fused pass reproduces `drift2` bit-for-bit.
+                let u = node.trig_momentum.as_mut().unwrap();
+                let mdrift2 = scale_add_into_dist2(beta, u, &node.diff);
+                node.fired = ctx.comm.fires(mdrift2, ctx.t, ctx.eta);
+            } else {
+                node.fired = ctx.comm.fires(drift2, ctx.t, ctx.eta);
+            }
             if node.fired {
                 ctx.compressor
                     .compress_sparse(&node.diff, &mut node.rng, &mut node.q);
@@ -301,6 +368,16 @@ impl UpdateRule for EstimateTracking {
                 bus.charge_broadcast(i, delivered + corrupt_here as usize, bits);
                 out.corrupt += corrupt_here;
                 q.add_to(&mut self.xhat[i]);
+            }
+            // SQuARM: a transmitted broadcast flushes the buffered drift
+            // (straggler skips above reset `fired` and keep u intact, so
+            // the untransmitted drift keeps accumulating).
+            if self.trigger_beta.is_some() {
+                if let Some(u) = nodes[i].trig_momentum.as_mut() {
+                    for v in u.iter_mut() {
+                        *v = 0.0;
+                    }
+                }
             }
         }
 
@@ -916,6 +993,14 @@ impl DecentralizedAlgo for DecentralizedEngine {
         if let Some(buf) = self.nodes[node].momentum.as_mut() {
             buf.copy_from_slice(m);
         }
+    }
+
+    fn trigger_momentum(&self, node: usize) -> Option<&[f32]> {
+        self.nodes[node].trig_momentum.as_deref()
+    }
+
+    fn set_node_trigger_momentum(&mut self, node: usize, u: &[f32]) {
+        self.nodes[node].trig_momentum = Some(u.to_vec());
     }
 
     fn estimate(&self, node: usize) -> Option<&[f32]> {

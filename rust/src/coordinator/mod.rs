@@ -13,7 +13,7 @@
 //!     γ-consensus (SPARQ, CHOCO), [`engine::ExactAveraging`] =
 //!     full-precision neighbor averaging (D-PSGD);
 //!   - [`crate::compress::Compressor`] — the paper's operators.
-//! * [`sparq::SparqSgd`] / [`choco::ChocoSgd`] /
+//! * [`sparq::SparqSgd`] / [`squarm::SquarmSgd`] / [`choco::ChocoSgd`] /
 //!   [`vanilla::VanillaDecentralized`] — thin constructors assembling
 //!   those compositions; there is no per-algorithm step code anymore, and
 //!   `rust/tests/engine_equivalence.rs` pins each constructor to its seed
@@ -40,6 +40,7 @@ pub mod checkpoint;
 pub mod consensus;
 pub mod engine;
 pub mod sparq;
+pub mod squarm;
 pub mod choco;
 pub mod vanilla;
 pub mod runner;
@@ -53,6 +54,7 @@ pub use engine::{
 };
 pub use runner::{run, RunOptions};
 pub use sparq::{SparqConfig, SparqSgd};
+pub use squarm::{SquarmConfig, SquarmSgd};
 pub use vanilla::VanillaDecentralized;
 
 use crate::comm::Bus;
@@ -127,6 +129,17 @@ pub trait DecentralizedAlgo {
 
     /// Restore one node's momentum buffer (no-op if the run has none).
     fn set_node_momentum(&mut self, _node: usize, _m: &[f32]) {}
+
+    /// Node i's trigger-side momentum buffer u (SQuARM-SGD), if the
+    /// algorithm evaluates its event trigger on a momentum-buffered
+    /// drift. `None` for plain-drift triggers, and before the first sync
+    /// round (the buffer is allocated lazily).
+    fn trigger_momentum(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    /// Restore one node's trigger-momentum buffer (no-op by default).
+    fn set_node_trigger_momentum(&mut self, _node: usize, _u: &[f32]) {}
 
     /// Node i's public estimate x̂_i, if the algorithm keeps an estimate
     /// bank (estimate-tracking rules; `None` for exact averaging).
@@ -259,6 +272,12 @@ macro_rules! forward_decentralized_algo {
         }
         fn set_node_momentum(&mut self, node: usize, m: &[f32]) {
             (**self).set_node_momentum(node, m)
+        }
+        fn trigger_momentum(&self, node: usize) -> Option<&[f32]> {
+            (**self).trigger_momentum(node)
+        }
+        fn set_node_trigger_momentum(&mut self, node: usize, u: &[f32]) {
+            (**self).set_node_trigger_momentum(node, u)
         }
         fn estimate(&self, node: usize) -> Option<&[f32]> {
             (**self).estimate(node)

@@ -35,6 +35,10 @@ pub struct NodeState {
     pub q: SparseVec,
     /// Whether the event trigger fired at the last sync round.
     pub fired: bool,
+    /// SQuARM-SGD trigger momentum u (None ⇔ plain SPARQ trigger).
+    /// Allocated lazily by the update rule at the first sync round, and
+    /// flushed to zero after every delivered broadcast.
+    pub trig_momentum: Option<Vec<f32>>,
 }
 
 impl NodeState {
@@ -48,6 +52,7 @@ impl NodeState {
             diff: vec![0.0; d],
             q: SparseVec::new(),
             fired: false,
+            trig_momentum: None,
         }
     }
 

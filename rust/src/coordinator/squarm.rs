@@ -1,0 +1,85 @@
+//! SQuARM-SGD — momentum-triggered SPARQ (arXiv 2005.07041), as a
+//! policy composition over the engine.
+//!
+//! The step loop is Algorithm 1 verbatim except for the trigger: instead
+//! of the instantaneous drift ‖x^{t+½} − x̂‖², each node maintains a
+//! trigger-side momentum buffer
+//!
+//! ```text
+//! u_i ← β·u_i + (x_i^{t+½} − x̂_i)      (at every sync index)
+//! ```
+//!
+//! and fires on ‖u_i‖² > c_t·η_t². A node that transmits still sends
+//! q = C(x^{t+½} − x̂) — NOT C(u) — so the estimate-tracking identity
+//! (every receiver's view of x̂_j advances by exactly what j sent) is
+//! untouched; the buffer is flushed to zero after a delivered broadcast
+//! and keeps accumulating across silent rounds (and straggler skips).
+//! The buffered drift makes the trigger sensitive to *persistent* slow
+//! drift that a per-round check under-fires on, which is the SQuARM
+//! paper's motivation for combining momentum with event-triggering.
+//!
+//! Degeneracy pin: β = 0 annihilates the buffer every round, so the fire
+//! decisions — and hence the whole trajectory — are bit-for-bit the
+//! SPARQ path (`rust/tests/engine_equivalence.rs`).
+//!
+//! In engine terms this is [`Triggered`] + [`EstimateTracking`] with
+//! [`EstimateTracking::with_trigger_beta`] — one constructor-line of
+//! difference from SPARQ, which is the point of the plugin architecture.
+
+use super::engine::{DecentralizedEngine, EngineConfig, EstimateTracking, Triggered};
+use crate::compress::Compressor;
+use crate::graph::MixingMatrix;
+use crate::schedule::{LrSchedule, SyncSchedule};
+use crate::trigger::EventTrigger;
+
+/// Everything that parameterizes a SQuARM run: [`SparqConfig`]'s inputs
+/// plus the trigger-momentum factor β.
+///
+/// [`SparqConfig`]: super::sparq::SparqConfig
+pub struct SquarmConfig {
+    pub mixing: MixingMatrix,
+    pub compressor: Box<dyn Compressor>,
+    pub trigger: EventTrigger,
+    pub lr: LrSchedule,
+    pub sync: SyncSchedule,
+    /// Consensus step size γ; `None` ⇒ tuned heuristic.
+    pub gamma: Option<f64>,
+    /// Heavy-ball momentum on the local step (same role as SPARQ's).
+    pub momentum: f32,
+    /// Trigger-momentum factor β ∈ [0, 1); 0 degenerates to SPARQ.
+    pub beta: f32,
+    pub seed: u64,
+}
+
+/// Thin constructor: SQuARM-SGD as a [`DecentralizedEngine`] composition.
+pub struct SquarmSgd;
+
+impl SquarmSgd {
+    pub fn new(cfg: SquarmConfig, d: usize) -> DecentralizedEngine {
+        let name = format!(
+            "squarm(beta={}, C={}, trigger={:?}, H={:?})",
+            cfg.beta,
+            cfg.compressor.name(),
+            cfg.trigger.schedule,
+            cfg.sync
+        );
+        let rule = EstimateTracking::with_trigger_beta(&cfg.mixing, d, cfg.beta);
+        DecentralizedEngine::new(
+            EngineConfig {
+                mixing: cfg.mixing,
+                compressor: cfg.compressor,
+                comm: Box::new(Triggered {
+                    sync: cfg.sync,
+                    trigger: cfg.trigger,
+                }),
+                rule: Box::new(rule),
+                gamma: cfg.gamma,
+                lr: cfg.lr,
+                momentum: cfg.momentum,
+                seed: cfg.seed,
+                name,
+            },
+            d,
+        )
+    }
+}

@@ -11,9 +11,10 @@
 //! [`build_algo_resolved`] (or the [`Run`](crate::run::Run) handle,
 //! which wraps all of this).
 
-use crate::config::{Algo, ExperimentConfig, ProblemKind, ResolvedConfig};
+use crate::config::{Algo, ExperimentConfig, Family, ProblemKind, ResolvedConfig};
 use crate::coordinator::{
-    run, ChocoSgd, DecentralizedAlgo, RunOptions, SparqConfig, SparqSgd, VanillaDecentralized,
+    run, ChocoSgd, DecentralizedAlgo, RunOptions, SparqConfig, SparqSgd, SquarmConfig, SquarmSgd,
+    VanillaDecentralized,
 };
 use crate::data::synthetic::ClassGaussian;
 use crate::data::{by_class_shards, iid_split};
@@ -180,12 +181,35 @@ pub fn build_algo_resolved(
         (_, None, None) => None,
     };
     let lr = resolved.lr.clone();
-    let mut engine = match cfg.algo {
-        Algo::Sparq => SparqSgd::new(
+    // The per-coord flag travels alongside the threshold schedule
+    // (resolve() split them so ResolvedConfig stays field-per-concern).
+    let trigger = if resolved.trigger_per_coord {
+        EventTrigger::new_per_coord(resolved.trigger.clone())
+    } else {
+        EventTrigger::new(resolved.trigger.clone())
+    };
+    let mut engine = match (&cfg.algo, resolved.family) {
+        // Family dispatch: resolve() guarantees a non-default family only
+        // reaches here paired with the event-triggered engine.
+        (Algo::Sparq, Family::Squarm { beta }) => SquarmSgd::new(
+            SquarmConfig {
+                mixing,
+                compressor: comp,
+                trigger,
+                lr,
+                sync: resolved.sync.clone(),
+                gamma,
+                momentum: cfg.momentum as f32,
+                beta: beta as f32,
+                seed: cfg.seed,
+            },
+            d,
+        ),
+        (Algo::Sparq, Family::Sparq) => SparqSgd::new(
             SparqConfig {
                 mixing,
                 compressor: comp,
-                trigger: EventTrigger::new(resolved.trigger.clone()),
+                trigger,
                 lr,
                 sync: resolved.sync.clone(),
                 gamma,
@@ -194,10 +218,12 @@ pub fn build_algo_resolved(
             },
             d,
         ),
-        Algo::Choco => {
+        (Algo::Choco, _) => {
             ChocoSgd::with_gamma(mixing, comp, lr, cfg.momentum as f32, gamma, d, cfg.seed)
         }
-        Algo::Vanilla => VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed),
+        (Algo::Vanilla, _) => {
+            VanillaDecentralized::new(mixing, lr, cfg.momentum as f32, d, cfg.seed)
+        }
     };
     engine.set_link(link);
     engine.set_topology_schedule(schedule);
@@ -273,6 +299,35 @@ mod tests {
             let a = build_algo(&cfg, 16);
             assert_eq!(a.n(), 4);
         }
+    }
+
+    #[test]
+    fn family_configs_build_and_run() {
+        // squarm builds the momentum-triggered engine (name carries β)…
+        let cfg = ExperimentConfig {
+            steps: 200,
+            eval_every: 100,
+            nodes: 6,
+            problem: "quadratic:24".into(),
+            family: "squarm:0.9".into(),
+            ..Default::default()
+        };
+        let a = build_algo(&cfg, 24);
+        assert!(a.name().starts_with("squarm(beta=0.9"), "{}", a.name());
+        let series = run_config(&cfg, false);
+        assert!(series.records.last().unwrap().opt_gap < series.records[0].opt_gap);
+        // …and the per-coordinate trigger builds the plain engine with
+        // the coordinate mask armed.
+        let cfg = ExperimentConfig {
+            steps: 200,
+            eval_every: 100,
+            nodes: 6,
+            problem: "quadratic:24".into(),
+            trigger: "percoord:0.5".into(),
+            ..Default::default()
+        };
+        let series = run_config(&cfg, false);
+        assert!(series.records.last().unwrap().opt_gap < series.records[0].opt_gap);
     }
 
     #[test]

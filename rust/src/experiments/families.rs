@@ -1,0 +1,139 @@
+//! Cross-family comparison driver: the same workload run under each
+//! trigger-side composition of the event-triggered engine — plain SPARQ
+//! (Algorithm 1), SQuARM (momentum-buffered trigger, arXiv 2005.07041),
+//! and EventGraD-style per-coordinate triggers — plus the CHOCO
+//! always-transmit baseline for scale.
+//!
+//! Like the other drivers this is a thin declarative spec over the sweep
+//! engine: [`family_grid`] states the configs, [`run_family_comparison`]
+//! executes them (shared topology/dataset artifacts) and projects the
+//! outcomes into [`ReportRun`]s so `sweep::report::family_table` renders
+//! the comparison panel — the same panel `sparq sweep report` prints for
+//! on-disk result sets.
+
+use crate::config::ExperimentConfig;
+use crate::sweep::report::ReportRun;
+use crate::sweep::{run_configs, ArtifactCache, SweepOptions};
+
+/// The composition label a config groups under in the family panel:
+/// the family field when set, "percoord" for per-coordinate triggers,
+/// "sparq" otherwise. Mirrors the key the sweep runner persists.
+pub fn family_label(cfg: &ExperimentConfig) -> String {
+    if !cfg.family.is_default() {
+        cfg.family.as_str().to_string()
+    } else if cfg.trigger.per_coord() {
+        "percoord".to_string()
+    } else {
+        "sparq".to_string()
+    }
+}
+
+/// The comparison grid: one config per family on a shared quadratic
+/// workload (same nodes, topology, compressor, sync schedule, and seed,
+/// so the only degree of freedom is the trigger-side composition).
+///
+/// The per-coordinate threshold is the norm threshold split evenly over
+/// the d = 64 coordinates, so both triggers police the same total drift
+/// budget; β = 0.9 is the SQuARM paper's setting.
+pub fn family_grid(steps: u64, seed: u64) -> Vec<(String, ExperimentConfig)> {
+    let base = ExperimentConfig {
+        name: "families-sparq".into(),
+        nodes: 8,
+        steps,
+        eval_every: (steps / 20).max(1),
+        seed,
+        problem: "quadratic:64".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:50".into(),
+        h: 2u64.into(),
+        ..Default::default()
+    };
+    let squarm = ExperimentConfig {
+        name: "families-squarm".into(),
+        family: "squarm:0.9".into(),
+        ..base.clone()
+    };
+    let percoord = ExperimentConfig {
+        name: "families-percoord".into(),
+        trigger: "percoord:0.78125".into(), // 50 / 64
+        ..base.clone()
+    };
+    let choco = ExperimentConfig {
+        name: "families-choco".into(),
+        algo: crate::config::Algo::Choco,
+        h: 1u64.into(),
+        trigger: "zero".into(),
+        ..base.clone()
+    };
+    vec![
+        ("SPARQ-SGD".to_string(), base),
+        ("SQuARM-SGD(0.9)".to_string(), squarm),
+        ("SPARQ-percoord".to_string(), percoord),
+        ("CHOCO-SGD".to_string(), choco),
+    ]
+}
+
+/// Run the family grid through the sweep engine and project each outcome
+/// into a [`ReportRun`] (family tag attached), ready for
+/// `sweep::report::family_table` / `savings_table`.
+pub fn run_family_comparison(
+    steps: u64,
+    seed: u64,
+    opts: &SweepOptions,
+) -> Result<Vec<ReportRun>, String> {
+    let cache = ArtifactCache::new();
+    let report = run_configs(family_grid(steps, seed), opts, &cache)?;
+    Ok(report
+        .outcomes
+        .into_iter()
+        .map(|o| ReportRun {
+            family: family_label(&o.cfg),
+            id: o.id,
+            name: o.cfg.name.clone(),
+            label: o.label,
+            algo: o.cfg.algo.as_str().to_string(),
+            fired: o.fired,
+            checks: o.checks,
+            fault: o.fault,
+            truncated: o.stopped,
+            series: o.series,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::report::{family_table, TargetMetric};
+
+    #[test]
+    fn grid_resolves_and_labels_families() {
+        let grid = family_grid(400, 3);
+        assert_eq!(grid.len(), 4);
+        for (label, cfg) in &grid {
+            cfg.resolve().unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+        let fams: Vec<String> = grid.iter().map(|(_, c)| family_label(c)).collect();
+        assert_eq!(fams, ["sparq", "squarm:0.9", "percoord", "sparq"]);
+    }
+
+    #[test]
+    fn comparison_runs_and_panel_renders_every_family() {
+        let runs = run_family_comparison(200, 7, &SweepOptions::default()).unwrap();
+        assert_eq!(runs.len(), 4);
+        // every triggered run actually checked its trigger
+        for r in runs.iter().take(3) {
+            assert!(r.checks > 0, "{}", r.label);
+        }
+        // pick a loss every run reaches: the worst final loss
+        let target = runs
+            .iter()
+            .map(|r| r.series.records.last().unwrap().loss)
+            .fold(f64::MIN, f64::max)
+            * 1.02;
+        let table = family_table(&runs, TargetMetric::Loss, target);
+        for fam in ["sparq", "squarm:0.9", "percoord"] {
+            assert!(table.contains(fam), "missing {fam}: {table}");
+        }
+    }
+}

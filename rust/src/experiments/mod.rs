@@ -10,6 +10,7 @@
 
 pub mod ablation;
 pub mod builder;
+pub mod families;
 pub mod fig1;
 pub mod robustness;
 pub mod savings;

@@ -15,4 +15,4 @@ pub mod vecops;
 pub use eigen::symmetric_eigenvalues;
 pub use lanczos::{lanczos_extremes, LanczosExtremes, SymOp};
 pub use matrix::Matrix;
-pub use vecops::{axpy, dot, norm2_sq, scale_add, sub_into, sub_into_dist2};
+pub use vecops::{axpy, dot, norm2_sq, scale_add, scale_add_into_dist2, sub_into, sub_into_dist2};

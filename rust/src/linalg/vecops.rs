@@ -110,6 +110,37 @@ pub fn sub_into_dist2(x: &[f32], y: &[f32], out: &mut [f32]) -> f64 {
     total
 }
 
+/// Fused trigger-momentum update `u = beta·u + x` + ‖u‖²: the
+/// SQuARM-SGD sync pass folds the momentum-buffered drift update and its
+/// norm into one sweep. The accumulation replicates [`sub_into_dist2`]
+/// exactly — same 4-lane f64 accumulators, same reduction order — so
+/// with `beta = 0` (where `0·u + x` equals `x` as an f32 value) the
+/// returned norm is bit-identical to the drift `sub_into_dist2` computes
+/// for `x`, which is what pins SQuARM(β = 0) ≡ SPARQ.
+#[inline]
+pub fn scale_add_into_dist2(beta: f32, u: &mut [f32], x: &[f32]) -> f64 {
+    debug_assert_eq!(u.len(), x.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = u.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        for lane in 0..4 {
+            let d = beta * u[b + lane] + x[b + lane];
+            u[b + lane] = d;
+            let df = d as f64;
+            acc[lane] += df * df;
+        }
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..u.len() {
+        let d = beta * u[i] + x[i];
+        u[i] = d;
+        let df = d as f64;
+        total += df * df;
+    }
+    total
+}
+
 /// L1 norm with f64 accumulation.
 #[inline]
 pub fn norm1(x: &[f32]) -> f64 {
@@ -163,6 +194,35 @@ mod tests {
             assert_eq!(d_ref, d_fused, "len {len}");
             assert_eq!(dist_ref.to_bits(), dist_fused.to_bits(), "len {len}");
         }
+    }
+
+    #[test]
+    fn scale_add_into_dist2_with_zero_beta_bit_matches_sub_into_dist2() {
+        // The SQuARM degeneracy pin at the kernel level: β = 0 makes the
+        // fused momentum update compute exactly the plain drift, bit for
+        // bit, across chunk-boundary lengths.
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 1000] {
+            let x: Vec<f32> = (0..len).map(|i| ((i * 37 + 11) as f32).sin() * 3.7).collect();
+            let y: Vec<f32> = (0..len).map(|i| ((i * 13 + 5) as f32).cos() * 1.3).collect();
+            let mut diff = vec![0.0f32; len];
+            let drift = sub_into_dist2(&x, &y, &mut diff);
+            // stale momentum content must be annihilated by β = 0
+            let mut u: Vec<f32> = (0..len).map(|i| (i as f32) - 3.0).collect();
+            let drift_fused = scale_add_into_dist2(0.0, &mut u, &diff);
+            assert_eq!(drift.to_bits(), drift_fused.to_bits(), "len {len}");
+            for (a, b) in u.iter().zip(diff.iter()) {
+                assert_eq!(*a, *b, "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_add_into_dist2_accumulates_momentum() {
+        let mut u = vec![2.0f32, -1.0, 0.0, 4.0, 1.0];
+        let x = vec![1.0f32, 1.0, 1.0, 1.0, 1.0];
+        let n2 = scale_add_into_dist2(0.5, &mut u, &x);
+        assert_eq!(u, vec![2.0, 0.5, 1.0, 3.0, 1.5]);
+        assert!((n2 - (4.0 + 0.25 + 1.0 + 9.0 + 2.25)).abs() < 1e-12);
     }
 
     #[test]

@@ -30,6 +30,9 @@
 //!   shutdown --socket sock                      stop a daemon gracefully
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
+//!   families --steps 2000 [--seed S             cross-family panel: SPARQ
+//!            --workers N --target-loss L]       vs SQuARM vs per-coordinate
+//!                                               triggers vs CHOCO baseline
 //!   spectral --topology ring --nodes 60         print δ, β, γ*, p
 //!   ablate   --knob h|c0|k|gamma|all            Remark-1 knob sweeps
 //!   robustness --steps 2000 --out results/      lossy links + switching
@@ -79,6 +82,7 @@ fn main() {
         Some("shutdown") => cmd_shutdown(&args),
         Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
+        Some("families") => cmd_families(&args),
         Some("spectral") => cmd_spectral(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("robustness") => cmd_robustness(&args),
@@ -88,7 +92,7 @@ fn main() {
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|sweep report|sweep status|check|serve|submit|watch|status|shutdown|fig1a|fig1b|fig1c|fig1d|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|sweep status|check|serve|submit|watch|status|shutdown|fig1a|fig1b|fig1c|fig1d|families|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -251,6 +255,8 @@ fn cmd_sweep_report(args: &Args) {
         (TargetMetric::TestError, t)
     };
     print!("{}", report::savings_table(&runs, metric, target));
+    println!();
+    print!("{}", report::family_table(&runs, metric, target));
     let csv_dir = args
         .get("csv-dir")
         .map(std::path::PathBuf::from)
@@ -325,6 +331,7 @@ fn cmd_serve(args: &Args) {
         fault_abort_at: args
             .get("fault-abort-at")
             .map(|_| args.u64("fault-abort-at", 0)),
+        event_capacity: args.usize("event-capacity", 4096),
         verbose: !args.bool("quiet"),
     };
     if let Err(e) = serve(cfg) {
@@ -639,6 +646,46 @@ fn cmd_fig1_nonconvex(args: &Args) {
     println!("\n=== Figure 1c/1d: non-convex (synthetic CIFAR MLP, n=8 ring) ===");
     println!("{}", fig1::savings_table(&series, target));
     write_series(&series, args.get("out"));
+}
+
+fn cmd_families(args: &Args) {
+    use sparq::experiments::families;
+    use sparq::sweep::report::{family_table, savings_table, TargetMetric};
+    use sparq::sweep::SweepOptions;
+
+    let steps = args.u64("steps", 2000);
+    let seed = args.u64("seed", 42);
+    let opts = SweepOptions {
+        workers: args.usize("workers", 0),
+        out: args.get("out").map(std::path::PathBuf::from),
+        verbose: !args.bool("quiet"),
+        ..SweepOptions::default()
+    };
+    let runs = families::run_family_comparison(steps, seed, &opts).unwrap_or_else(|e| {
+        eprintln!("families error: {e}");
+        std::process::exit(1);
+    });
+    let (metric, target) = if args.has("target-err") {
+        let t = args.f64("target-err", 0.15);
+        check_cli_targets(Some(t), None);
+        (TargetMetric::TestError, t)
+    } else if args.has("target-loss") {
+        let t = args.f64("target-loss", 0.0);
+        check_cli_targets(None, Some(t));
+        (TargetMetric::Loss, t)
+    } else {
+        // Default target: the worst final loss across the grid (with a
+        // little headroom), so every family registers in the panel.
+        let worst = runs
+            .iter()
+            .filter_map(|r| r.series.records.last().map(|rec| rec.loss))
+            .fold(f64::MIN, f64::max);
+        (TargetMetric::Loss, worst * 1.02)
+    };
+    println!("\n=== family comparison: SPARQ / SQuARM / per-coordinate / CHOCO ===");
+    print!("{}", savings_table(&runs, metric, target));
+    println!();
+    print!("{}", family_table(&runs, metric, target));
 }
 
 fn cmd_ablate(args: &Args) {

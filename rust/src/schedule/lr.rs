@@ -206,6 +206,37 @@ mod tests {
     }
 
     #[test]
+    fn parse_checked_rejects_decay_factor_boundaries() {
+        // Pin the full rejection surface for decay_factor: any value that
+        // would drive `base / decay_factor.powi(decays)` to ±inf/NaN
+        // mid-run must fail at parse time with a field-naming error.
+        for bad in ["0", "-5", "-0.5", "inf", "-inf", "nan", "NaN"] {
+            let spec = format!("warmup:0.1:5:{bad}:10:150,250");
+            let err = LrSchedule::parse_checked(&spec).unwrap_err();
+            assert!(
+                err.contains("decay_factor"),
+                "spec {spec:?} error must name the field: {err}"
+            );
+        }
+        // Boundary: any strictly positive finite factor is accepted,
+        // including < 1 (an *increasing* schedule — unusual but finite).
+        assert!(LrSchedule::parse_checked("warmup:0.1:5:0.5:10:150").is_ok());
+        assert!(LrSchedule::parse_checked("warmup:0.1:5:1e-300:10:150").is_ok());
+        // The other numeric fields share the finiteness gate.
+        for spec in [
+            "warmup:inf:5:5:10:150",
+            "warmup:nan:5:5:10:150",
+            "const:inf",
+            "const:nan",
+            "invtime:inf:1",
+            "invtime:100:nan",
+        ] {
+            let err = LrSchedule::parse_checked(spec).unwrap_err();
+            assert!(err.contains("finite") || err.contains("not a number"), "{spec}: {err}");
+        }
+    }
+
+    #[test]
     fn parse_checked_names_the_offending_field() {
         let err = LrSchedule::parse_checked("const:fast").unwrap_err();
         assert!(err.contains("eta") && err.contains("fast"), "{err}");

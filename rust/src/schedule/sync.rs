@@ -4,7 +4,11 @@
 //! I_T; gap(I_T) = max consecutive difference ≤ H is the paper's "number
 //! of local iterations" knob. `EveryH` is the experiments' setting (H=5);
 //! `Explicit` supports arbitrary (e.g. randomized) index sets for
-//! ablations, as long as the caller respects gap ≤ H.
+//! ablations, as long as the caller respects gap ≤ H. The
+//! `random:H:STEPS:SEED` spec form materializes exactly that ablation:
+//! a seeded index set with i.i.d. gaps drawn uniformly from {1, …, H}
+//! (so gap(I_T) ≤ H by construction), expanded deterministically at
+//! parse time into an `Explicit` schedule.
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum SyncSchedule {
@@ -14,12 +18,68 @@ pub enum SyncSchedule {
     Explicit(Vec<u64>),
 }
 
+/// splitmix64 — the standard 64-bit finalizer-based generator. Local
+/// copy so the randomized-I_T expansion is a pure function of its spec
+/// string, independent of any engine RNG stream.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
 impl SyncSchedule {
-    /// Parse a sync spec: `every:H` (H ≥ 1) or `explicit:3,5,10` (a
-    /// strictly increasing list of positive indices). Errors name the
-    /// offending field so config typos surface instead of silently
-    /// degrading to a default cadence.
+    /// Parse a sync spec: `every:H` (H ≥ 1), `explicit:3,5,10` (a
+    /// strictly increasing list of positive indices), or
+    /// `random:H:STEPS:SEED` — the Section 2 randomized-I_T ablation,
+    /// expanded deterministically into an `Explicit` set whose
+    /// consecutive gaps are i.i.d. uniform over {1, …, H} (so
+    /// gap(I_T) ≤ H holds by construction) covering iterations
+    /// 1..=STEPS. Errors name the offending field so config typos
+    /// surface instead of silently degrading to a default cadence.
     pub fn parse(s: &str) -> Result<SyncSchedule, String> {
+        if let Some(rest) = s.strip_prefix("random:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            let [h, steps, seed] = parts.as_slice() else {
+                return Err(format!(
+                    "random sync spec {s:?} must have the form random:H:STEPS:SEED"
+                ));
+            };
+            let h: u64 = h
+                .parse()
+                .map_err(|_| format!("random sync gap bound {h:?} is not an integer"))?;
+            if h == 0 {
+                return Err("random sync gap bound H must be >= 1".into());
+            }
+            let steps: u64 = steps
+                .parse()
+                .map_err(|_| format!("random sync horizon {steps:?} is not an integer"))?;
+            if steps == 0 {
+                return Err("random sync horizon STEPS must be >= 1".into());
+            }
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| format!("random sync seed {seed:?} is not an integer"))?;
+            let mut state = seed;
+            let mut v = Vec::new();
+            let mut next = 0u64;
+            loop {
+                next += 1 + splitmix64(&mut state) % h;
+                if next > steps {
+                    break;
+                }
+                v.push(next);
+            }
+            if v.is_empty() {
+                // first draw already overshot the horizon; keep the set
+                // non-empty so is_sync/gap stay well-defined — a single
+                // index at the horizon preserves gap ≤ H only if
+                // STEPS ≤ H, which is exactly the case here.
+                v.push(steps);
+            }
+            return Ok(SyncSchedule::Explicit(v));
+        }
         match s.split_once(':') {
             Some(("every", h)) => {
                 let h: u64 = h
@@ -157,6 +217,57 @@ mod tests {
         let s = SyncSchedule::parse("explicit:2,4,9").unwrap();
         assert!(s.is_sync(1) && s.is_sync(3) && s.is_sync(8));
         assert!(!s.is_sync(2) && !s.is_sync(4));
+    }
+
+    #[test]
+    fn random_spec_expands_deterministically_with_bounded_gaps() {
+        // Same spec string ⇒ same index set, every time.
+        let a = SyncSchedule::parse("random:5:200:42").unwrap();
+        let b = SyncSchedule::parse("random:5:200:42").unwrap();
+        assert_eq!(a, b);
+        // A different seed gives a different set (with overwhelming
+        // probability for a 200-step horizon; pinned for these seeds).
+        let c = SyncSchedule::parse("random:5:200:43").unwrap();
+        assert_ne!(a, c);
+        let SyncSchedule::Explicit(v) = &a else {
+            panic!("random must expand to Explicit, got {a:?}")
+        };
+        // Strictly increasing, 1-based, within the horizon, gap ≤ H
+        // including the leading gap from 0 (Section 2's gap(I_T) ≤ H).
+        let mut prev = 0u64;
+        for &i in v {
+            assert!(i >= 1 && i <= 200, "index {i} out of horizon");
+            assert!(i > prev, "not strictly increasing at {i}");
+            assert!(i - prev <= 5, "gap {} > H at {i}", i - prev);
+            prev = i;
+        }
+        assert!(a.gap(200) <= 5, "gap(I_T) must be ≤ H, got {}", a.gap(200));
+        // H = 1 degenerates to every index (gaps are all exactly 1).
+        let dense = SyncSchedule::parse("random:1:20:7").unwrap();
+        assert_eq!(
+            dense,
+            SyncSchedule::Explicit((1..=20).collect::<Vec<u64>>())
+        );
+    }
+
+    #[test]
+    fn random_spec_errors_and_edge_cases() {
+        let err = SyncSchedule::parse("random:0:100:1").unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = SyncSchedule::parse("random:5:0:1").unwrap_err();
+        assert!(err.contains("STEPS"), "{err}");
+        let err = SyncSchedule::parse("random:5:100").unwrap_err();
+        assert!(err.contains("random:H:STEPS:SEED"), "{err}");
+        let err = SyncSchedule::parse("random:soon:100:1").unwrap_err();
+        assert!(err.contains("soon"), "{err}");
+        // Horizon shorter than the first drawn gap still yields a
+        // non-empty schedule with its single index at the horizon.
+        for seed in 0..8u64 {
+            let s = SyncSchedule::parse(&format!("random:100:3:{seed}")).unwrap();
+            let SyncSchedule::Explicit(v) = &s else { panic!() };
+            assert!(!v.is_empty());
+            assert!(v.iter().all(|&i| (1..=3).contains(&i)));
+        }
     }
 
     #[test]

@@ -83,6 +83,12 @@ pub struct ServeConfig {
     /// checkpoints left in place — a deterministic stand-in for
     /// `kill -9` mid-grid.
     pub fault_abort_at: Option<u64>,
+    /// Event-log ring capacity: the daemon retains at most this many
+    /// events for replay. Subscribers that ask for an evicted prefix
+    /// (`watch --from-start` after long uptime, or a consumer that
+    /// stalled past the ring) get a structured "log truncated" error
+    /// instead of a silently incomplete stream. 0 ⇒ retain one event.
+    pub event_capacity: usize,
     /// Per-run progress lines on stdout.
     pub verbose: bool,
 }
@@ -99,6 +105,7 @@ impl Default for ServeConfig {
             heartbeat_secs: 0.0,
             poll_ms: 200,
             fault_abort_at: None,
+            event_capacity: 4096,
             verbose: false,
         }
     }
@@ -113,40 +120,64 @@ const ACCEPT_POLL: Duration = Duration::from_millis(25);
 // Event hub
 // ---------------------------------------------------------------------
 
-/// Daemon-lifetime event log + condvar: every subscriber replays from
-/// any offset and blocks for new events, so all subscribers observe the
-/// identical sequence regardless of when they attach. The log lives in
-/// memory for the daemon's lifetime (events are small JSON objects; a
-/// restart starts a fresh sequence).
+/// Bounded event log + condvar: every subscriber replays from any
+/// still-retained offset and blocks for new events, so all subscribers
+/// observe the identical sequence regardless of when they attach.
+///
+/// The log is a **ring**: at most `capacity` events are retained, and
+/// eviction advances `base` (global sequence numbers never recycle — a
+/// seq names the same event for the daemon's lifetime). A subscriber
+/// whose cursor falls behind `base` is told the log was truncated
+/// rather than being handed a stream with a silent hole. A restart
+/// starts a fresh sequence.
 struct EventHub {
     state: Mutex<HubState>,
     cv: Condvar,
+    capacity: usize,
 }
 
 struct HubState {
-    log: Vec<Json>,
+    log: std::collections::VecDeque<Json>,
+    /// Global sequence number of `log[0]` (== number of evicted events).
+    base: u64,
     closed: bool,
 }
 
+/// One `wait_from` poll: either a (possibly empty) batch plus the
+/// closed flag, or notice that the requested cursor was evicted.
+enum HubPoll {
+    Batch(Vec<(u64, Json)>, bool),
+    /// The earliest still-retained sequence number.
+    Truncated(u64),
+}
+
 impl EventHub {
-    fn new() -> EventHub {
+    fn new(capacity: usize) -> EventHub {
         EventHub {
             state: Mutex::new(HubState {
-                log: Vec::new(),
+                log: std::collections::VecDeque::new(),
+                base: 0,
                 closed: false,
             }),
             cv: Condvar::new(),
+            capacity: capacity.max(1),
         }
     }
 
     fn publish(&self, event: Json) {
         let mut st = self.state.lock().unwrap();
-        st.log.push(event);
+        st.log.push_back(event);
+        while st.log.len() > self.capacity {
+            st.log.pop_front();
+            st.base += 1;
+        }
         self.cv.notify_all();
     }
 
+    /// Total events ever published (the next sequence number).
     fn len(&self) -> u64 {
-        self.state.lock().unwrap().log.len() as u64
+        let st = self.state.lock().unwrap();
+        st.base + st.log.len() as u64
     }
 
     fn close(&self) {
@@ -155,22 +186,31 @@ impl EventHub {
     }
 
     /// Events at sequence `next` and beyond; blocks up to `timeout`
-    /// when none are available yet. Returns `(batch, closed)`.
-    fn wait_from(&self, next: u64, timeout: Duration) -> (Vec<(u64, Json)>, bool) {
+    /// when none are available yet. Reports truncation when `next`
+    /// has already been evicted from the ring — checked on entry *and*
+    /// after the wait, so a consumer the ring laps mid-block is told
+    /// too.
+    fn wait_from(&self, next: u64, timeout: Duration) -> HubPoll {
         let take = |st: &HubState| -> Vec<(u64, Json)> {
             st.log
                 .iter()
                 .enumerate()
-                .skip(next as usize)
-                .map(|(i, j)| (i as u64, j.clone()))
+                .skip((next - st.base) as usize)
+                .map(|(i, j)| (st.base + i as u64, j.clone()))
                 .collect()
         };
         let st = self.state.lock().unwrap();
-        if (st.log.len() as u64) > next || st.closed {
-            return (take(&st), st.closed);
+        if next < st.base {
+            return HubPoll::Truncated(st.base);
+        }
+        if st.base + st.log.len() as u64 > next || st.closed {
+            return HubPoll::Batch(take(&st), st.closed);
         }
         let (st, _) = self.cv.wait_timeout(st, timeout).unwrap();
-        (take(&st), st.closed)
+        if next < st.base {
+            return HubPoll::Truncated(st.base);
+        }
+        HubPoll::Batch(take(&st), st.closed)
     }
 }
 
@@ -795,10 +835,32 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) {
 /// Stream hub events to one subscriber until it disconnects or the
 /// daemon shuts down (remaining events are flushed first, so two
 /// subscribers that both live to the end see identical streams).
+///
+/// A cursor that falls off the ring — `--from-start` after the daemon
+/// evicted its prefix, or a consumer too slow for the publish rate —
+/// ends the stream with a structured `log truncated at seq N` error
+/// (the client surfaces `Response::Error` as `Err`), never a stream
+/// with a silent gap.
 fn watch_loop(shared: &Arc<Shared>, stream: &mut Stream, from_start: bool) {
     let mut next = if from_start { 0 } else { shared.hub.len() };
     loop {
-        let (batch, closed) = shared.hub.wait_from(next, CONN_POLL);
+        let (batch, closed) = match shared.hub.wait_from(next, CONN_POLL) {
+            HubPoll::Batch(batch, closed) => (batch, closed),
+            HubPoll::Truncated(base) => {
+                let _ = send(
+                    stream,
+                    &Response::Error {
+                        error: format!(
+                            "log truncated at seq {base}: events [{next}, {base}) were evicted \
+                             from the {}-event ring; re-watch without --from-start to follow \
+                             the live stream",
+                            shared.cfg.event_capacity.max(1)
+                        ),
+                    },
+                );
+                return;
+            }
+        };
         for (seq, event) in batch {
             if send(stream, &Response::Event { seq, event }).is_err() {
                 return;
@@ -982,6 +1044,7 @@ fn build_shared(cfg: ServeConfig) -> Result<Arc<Shared>, String> {
             } => println!("[serve] finish {label} (completed={completed}, stopped={stopped})"),
         }));
     }
+    let event_capacity = cfg.event_capacity;
     let shared = Arc::new(Shared {
         run_workers: budget,
         cfg,
@@ -995,7 +1058,7 @@ fn build_shared(cfg: ServeConfig) -> Result<Arc<Shared>, String> {
             next_seq: 0,
         }),
         work_cv: Condvar::new(),
-        hub: EventHub::new(),
+        hub: EventHub::new(event_capacity),
         fanout,
         shutdown: AtomicBool::new(false),
         crashed: AtomicBool::new(false),

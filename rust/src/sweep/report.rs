@@ -65,6 +65,9 @@ pub struct ReportRun {
     pub name: String,
     pub label: String,
     pub algo: String,
+    /// Algorithm family ("sparq" when the record predates families or
+    /// ran the default composition).
+    pub family: String,
     pub fired: u64,
     pub checks: u64,
     /// Fault-plan event totals (all zero unless the run's plan fired).
@@ -124,7 +127,22 @@ pub fn load(out: &Path) -> Result<Vec<ReportRun>, String> {
         let s = |k: &str, dflt: &str| -> String {
             j.get(k).and_then(Json::as_str).unwrap_or(dflt).to_string()
         };
-        let u = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        // Strict counters: a *missing* key reads as 0 (records written
+        // before the key existed), but a damaged value — fractional,
+        // negative, non-numeric — is a report error naming the run and
+        // field, not a silent 0 that renders as a 0.0% transmit rate.
+        let u = |k: &str| -> Result<u64, String> {
+            match j.get(k) {
+                None => Ok(0),
+                Some(v) => v.as_u64().ok_or_else(|| {
+                    format!(
+                        "{}:{}: run {id} field {k:?} is not a non-negative integer",
+                        results_path.display(),
+                        lineno + 1
+                    )
+                }),
+            }
+        };
         let label = s("label", &id);
         let series_label = s("series_label", &label);
         let spath = series_dir.join(format!("{id}.jsonl"));
@@ -133,8 +151,9 @@ pub fn load(out: &Path) -> Result<Vec<ReportRun>, String> {
         let run = ReportRun {
             name: s("name", &label),
             algo: s("algo", ""),
-            fired: u("fired"),
-            checks: u("checks"),
+            family: s("family", "sparq"),
+            fired: u("fired")?,
+            checks: u("checks")?,
             fault: parse_fault(&j),
             truncated: parse_truncated(&j),
             series,
@@ -203,6 +222,74 @@ pub fn savings_table(runs: &[ReportRun], metric: TargetMetric, target: f64) -> S
         if let Some(stop) = &run.truncated {
             let _ = write!(line, "  early-stop t={} ({})", stop.t, stop.reason);
         }
+        let _ = writeln!(out, "{line}");
+    }
+    out
+}
+
+/// Render the cross-family comparison panel: one line per algorithm
+/// family (first-seen order), aggregating that family's runs — best
+/// (fewest) bits-to-target among runs that reach it, the comm rounds at
+/// that crossing, and the pooled transmit rate Σfired / Σchecks. This is
+/// the panel the family sweeps read to answer "does momentum triggering
+/// (or per-coordinate firing) buy communication at this target?".
+pub fn family_table(runs: &[ReportRun], metric: TargetMetric, target: f64) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# family comparison: target {} <= {}",
+        metric.name(),
+        target
+    );
+    let _ = writeln!(
+        out,
+        "{:<12} {:>6} {:>16} {:>12} {:>9}",
+        "family", "runs", "bits to target", "comm rounds", "tx rate"
+    );
+    let mut order: Vec<&str> = Vec::new();
+    let mut groups: HashMap<&str, Vec<&ReportRun>> = HashMap::new();
+    for run in runs {
+        let fam: &str = if run.family.is_empty() {
+            "sparq"
+        } else {
+            &run.family
+        };
+        if !groups.contains_key(fam) {
+            order.push(fam);
+        }
+        groups.entry(fam).or_default().push(run);
+    }
+    for fam in order {
+        let g = &groups[fam];
+        let best = g
+            .iter()
+            .filter_map(|r| {
+                r.first_reaching(metric, target)
+                    .map(|rec| (rec.bits, rec.comm_rounds))
+            })
+            .min();
+        let (fired, checks) = g
+            .iter()
+            .fold((0u64, 0u64), |(f, c), r| (f + r.fired, c + r.checks));
+        let tx = format!("{:.1}%", 100.0 * fired as f64 / checks.max(1) as f64);
+        let line = match best {
+            Some((bits, rounds)) => format!(
+                "{:<12} {:>6} {:>16} {:>12} {:>9}",
+                fam,
+                g.len(),
+                bits,
+                rounds,
+                tx
+            ),
+            None => format!(
+                "{:<12} {:>6} {:>16} {:>12} {:>9}",
+                fam,
+                g.len(),
+                "(not reached)",
+                "-",
+                tx
+            ),
+        };
         let _ = writeln!(out, "{line}");
     }
     out
@@ -280,12 +367,44 @@ mod tests {
             name: label.to_string(),
             label: label.to_string(),
             algo: "sparq".into(),
+            family: "sparq".into(),
             fired: 1,
             checks: 4,
             fault: FaultCounters::default(),
             truncated: None,
             series,
         }
+    }
+
+    #[test]
+    fn family_table_groups_and_aggregates() {
+        let mut a = run("sparq-1", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 400, 5)]);
+        a.fired = 2;
+        let mut b = run("sparq-2", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 300, 7)]);
+        b.fired = 4;
+        let mut c = run("squarm-1", &[(0, 0.9, 2.0, 0, 0), (10, 0.1, 1.0, 150, 9)]);
+        c.family = "squarm:0.9".into();
+        let never = {
+            let mut r = run("percoord-1", &[(0, 0.9, 2.0, 0, 0)]);
+            r.family = "percoord".into();
+            r
+        };
+        let table = family_table(&[a, b, c, never], TargetMetric::TestError, 0.1);
+        let lines: Vec<&str> = table.lines().collect();
+        // header + column row + three family lines, first-seen order
+        assert!(lines[0].starts_with("# family comparison"), "{table}");
+        let sparq = lines.iter().find(|l| l.starts_with("sparq ")).unwrap();
+        // best bits among the two sparq runs is 300; pooled tx = 6/8
+        assert!(sparq.contains("300"), "{table}");
+        assert!(sparq.contains("75.0%"), "{table}");
+        let squarm = lines.iter().find(|l| l.starts_with("squarm:0.9")).unwrap();
+        assert!(squarm.contains("150"), "{table}");
+        let pc = lines.iter().find(|l| l.starts_with("percoord")).unwrap();
+        assert!(pc.contains("(not reached)"), "{table}");
+        // family order follows first appearance in the run list
+        let is = |p: &str| lines.iter().position(|l| l.starts_with(p)).unwrap();
+        assert!(is("sparq ") < is("squarm:0.9"));
+        assert!(is("squarm:0.9") < is("percoord"));
     }
 
     #[test]

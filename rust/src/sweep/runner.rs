@@ -564,6 +564,16 @@ pub(crate) fn persist(
         .set("records", outcome.series.records.len())
         .set("final", final_record)
         .set("config", outcome.cfg.to_json());
+    // Additive top-level key (the report's family panel groups on it):
+    // the trigger-side composition — "squarm:B" for the momentum family,
+    // "percoord" for per-coordinate triggers — written only for
+    // non-default compositions so existing result files stay
+    // byte-identical (absent ⇒ plain sparq).
+    if !outcome.cfg.family.is_default() {
+        record = record.set("family", outcome.cfg.family.as_str());
+    } else if outcome.cfg.trigger.per_coord() {
+        record = record.set("family", "percoord");
+    }
     // Written only when a fault plan actually fired, so pre-fault (and
     // fault-free) result files stay byte-identical.
     if !outcome.fault.is_zero() {

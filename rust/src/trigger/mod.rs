@@ -18,6 +18,12 @@
 //! * `Poly { c0, eps }` — c_t = c₀ · t^{1−ε} (Theorem 1 form).
 //! * `PiecewiseEpoch { init, step, every, until }` — the Section 5.2
 //!   schedule (2.0, +1.0 every 10 epochs until epoch 60).
+//!
+//! Besides the norm test above, [`EventTrigger`] supports an
+//! EventGraD-style **per-coordinate** mode (`percoord:C`): each
+//! coordinate j fires independently when `diff_j² > C · η_t²`, only
+//! fired coordinates enter the compressor, and the node transmits iff
+//! any coordinate fired. See [`EventTrigger::parse`].
 
 use crate::linalg::vecops::dist2;
 
@@ -26,6 +32,15 @@ pub enum ThresholdSchedule {
     Zero,
     Constant(f64),
     /// c_t = c0 * t^(1-eps), eps in (0,1).
+    ///
+    /// **t = 0 semantics (pinned):** `c(0)` is defined as 0.0 — the real
+    /// power `0^{1-ε}` is 0 for ε ∈ (0, 1), the branch just avoids
+    /// `powf`'s edge cases — so the *first* sync index fires whenever
+    /// there is any drift at all, regardless of c₀. This matches
+    /// Algorithm 1's bootstrap: x̂^{(0)} = 0, and the paper has every
+    /// node broadcast its (compressed) initial parameters in the first
+    /// round; a zero threshold at t = 0 is exactly that behavior. New
+    /// trigger families (SQuARM, per-coordinate) inherit it deliberately.
     Poly { c0: f64, eps: f64 },
     /// Piecewise-constant in "epochs" of `steps_per_epoch` iterations:
     /// starts at `init`, increases by `step` every `every` epochs, frozen
@@ -132,7 +147,7 @@ impl ThresholdSchedule {
             }
             _ => Err(format!(
                 "unknown trigger spec {s:?}; expected zero, const:C, poly:C0:EPS, \
-                 or piecewise:INIT:STEP:EVERY:UNTIL:STEPS_PER_EPOCH"
+                 percoord:C, or piecewise:INIT:STEP:EVERY:UNTIL:STEPS_PER_EPOCH"
             )),
         }
     }
@@ -142,11 +157,57 @@ impl ThresholdSchedule {
 #[derive(Clone, Debug)]
 pub struct EventTrigger {
     pub schedule: ThresholdSchedule,
+    /// EventGraD-style per-coordinate mode: each coordinate fires
+    /// independently on `diff_j² > c_t · η_t²` and non-fired coordinates
+    /// are withheld (masked to 0 before compression). `false` = the
+    /// paper's norm test over the whole vector.
+    pub per_coord: bool,
 }
 
 impl EventTrigger {
+    /// Norm-triggered (Algorithm 1) — the default mode.
     pub fn new(schedule: ThresholdSchedule) -> Self {
-        EventTrigger { schedule }
+        EventTrigger {
+            schedule,
+            per_coord: false,
+        }
+    }
+
+    /// EventGraD-style per-coordinate trigger over `schedule`.
+    pub fn new_per_coord(schedule: ThresholdSchedule) -> Self {
+        EventTrigger {
+            schedule,
+            per_coord: true,
+        }
+    }
+
+    /// Parse the full trigger grammar: every [`ThresholdSchedule`] form
+    /// (norm mode) plus the per-coordinate form `percoord:C`.
+    pub fn parse(s: &str) -> Result<EventTrigger, String> {
+        if let Some(c) = s.strip_prefix("percoord:") {
+            let c: f64 = c
+                .parse()
+                .map_err(|_| format!("trigger percoord threshold {c:?} is not a number"))?;
+            if !c.is_finite() || c < 0.0 {
+                return Err(format!(
+                    "trigger percoord threshold must be finite and non-negative, got {c}"
+                ));
+            }
+            return Ok(EventTrigger::new_per_coord(ThresholdSchedule::Constant(c)));
+        }
+        ThresholdSchedule::parse(s).map(EventTrigger::new)
+    }
+
+    /// The per-coordinate threshold c_t · η_t² when in per-coordinate
+    /// mode, `None` for the norm mode. The engine's sync pass consults
+    /// this to decide between the whole-vector drift test and the
+    /// coordinate mask.
+    pub fn coord_threshold(&self, t: u64, eta_t: f64) -> Option<f64> {
+        if self.per_coord {
+            Some(self.schedule.c(t) * eta_t * eta_t)
+        } else {
+            None
+        }
     }
 
     /// Algorithm 1 line 7 (strict inequality).
@@ -297,6 +358,60 @@ mod tests {
                 prev = cur;
             }
         }
+    }
+
+    #[test]
+    fn poly_t0_first_sync_always_fires() {
+        // Satellite pin: c(0) = 0.0 regardless of c0, so the FIRST sync
+        // index fires on any nonzero drift (Algorithm 1's bootstrap —
+        // x̂^(0) = 0, every node broadcasts its compressed initial
+        // parameters in round one). New families inherit this.
+        for c0 in [1.0, 5000.0, 1e12] {
+            let s = ThresholdSchedule::Poly { c0, eps: 0.5 };
+            assert_eq!(s.c(0), 0.0, "c0 = {c0}");
+            let tr = EventTrigger::new(s);
+            // any drift at all fires at t = 0 (strict > 0)
+            assert!(tr.fires_drift(1e-30, 0, 10.0), "c0 = {c0}");
+            // ...and zero drift does not (strict inequality)
+            assert!(!tr.fires_drift(0.0, 0, 10.0), "c0 = {c0}");
+            // while at t = 1 a huge c0 suppresses the same drift
+            if c0 >= 5000.0 {
+                assert!(!tr.fires_drift(1e-30, 1, 10.0), "c0 = {c0}");
+            }
+        }
+        // per-coordinate mode inherits the t = 0 bootstrap too
+        let tr = EventTrigger::new_per_coord(ThresholdSchedule::Poly {
+            c0: 5000.0,
+            eps: 0.5,
+        });
+        assert_eq!(tr.coord_threshold(0, 10.0), Some(0.0));
+    }
+
+    #[test]
+    fn percoord_parse_and_threshold() {
+        let tr = EventTrigger::parse("percoord:2.5").unwrap();
+        assert!(tr.per_coord);
+        assert_eq!(tr.schedule, ThresholdSchedule::Constant(2.5));
+        // coord threshold is c · η² in per-coord mode, None otherwise
+        assert_eq!(tr.coord_threshold(7, 0.1), Some(2.5 * 0.01));
+        let norm = EventTrigger::parse("const:2.5").unwrap();
+        assert!(!norm.per_coord);
+        assert_eq!(norm.coord_threshold(7, 0.1), None);
+
+        // percoord:0 — every nonzero coordinate fires (strict >)
+        let zero = EventTrigger::parse("percoord:0").unwrap();
+        assert_eq!(zero.coord_threshold(3, 0.1), Some(0.0));
+
+        // grammar errors name the field and list percoord in the usage
+        let err = EventTrigger::parse("percoord:lots").unwrap_err();
+        assert!(err.contains("percoord") && err.contains("lots"), "{err}");
+        assert!(EventTrigger::parse("percoord:-1").is_err());
+        assert!(EventTrigger::parse("percoord:inf").is_err());
+        let err = EventTrigger::parse("carousel:5").unwrap_err();
+        assert!(err.contains("percoord:C"), "{err}");
+        // non-percoord forms delegate unchanged
+        assert!(EventTrigger::parse("poly:2:0.5").is_ok());
+        assert!(EventTrigger::parse("zero").is_ok());
     }
 
     #[test]

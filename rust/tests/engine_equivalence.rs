@@ -580,6 +580,109 @@ fn sampled_gossip_run_is_deterministic_across_worker_counts() {
     assert!(a.records.last().unwrap().bits > 0);
 }
 
+// ---------------------------------------------------------------------
+// Algorithm-family compositions: degeneracy pins + worker determinism
+// ---------------------------------------------------------------------
+
+/// SQuARM with β = 0 must be *exactly* SPARQ: the momentum buffer then
+/// holds u = 0·u + diff = diff, so the trigger sees the identical norm
+/// and the transmitted value C(diff) is unchanged. The kernel path is
+/// shared (`scale_add_into_dist2(0, …)` ≡ `sub_into_dist2`), so the
+/// whole series — loss, bits, fired counts — is bit-identical.
+#[test]
+fn squarm_with_zero_beta_is_bitwise_equivalent_to_sparq() {
+    let base = ExperimentConfig {
+        nodes: 8,
+        steps: 300,
+        eval_every: 50,
+        problem: "quadratic:48".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "const:20".into(),
+        h: sparq::config::SyncSpec::every(2),
+        ..Default::default()
+    };
+    let squarm0 = ExperimentConfig {
+        family: "squarm:0".into(),
+        ..base.clone()
+    };
+    assert_eq!(
+        run_config(&base, false).to_csv(),
+        run_config(&squarm0, false).to_csv(),
+        "squarm(β=0) must be bit-identical to sparq"
+    );
+    // …and a real β actually buffers drift across skipped broadcasts:
+    // the firing pattern (and therefore the series) must change.
+    let squarm9 = ExperimentConfig {
+        family: "squarm:0.9".into(),
+        ..base.clone()
+    };
+    assert_ne!(
+        run_config(&base, false).to_csv(),
+        run_config(&squarm9, false).to_csv(),
+        "squarm(β=0.9) should not coincide with sparq on this workload"
+    );
+}
+
+/// A per-coordinate trigger with threshold 0 masks only exactly-zero
+/// coordinates and fires whenever any coordinate is nonzero — the same
+/// firing condition as the norm trigger at threshold 0, with the fired
+/// coordinates entering the compressor verbatim. Bit-identical series.
+#[test]
+fn degenerate_per_coordinate_trigger_matches_the_norm_trigger_bitwise() {
+    let base = ExperimentConfig {
+        nodes: 8,
+        steps: 250,
+        eval_every: 50,
+        problem: "quadratic:32".into(),
+        compressor: "sign_topk:25%".into(),
+        trigger: "zero".into(),
+        h: sparq::config::SyncSpec::every(2),
+        ..Default::default()
+    };
+    let percoord = ExperimentConfig {
+        trigger: "percoord:0".into(),
+        ..base.clone()
+    };
+    assert_eq!(
+        run_config(&base, false).to_csv(),
+        run_config(&percoord, false).to_csv(),
+        "percoord:0 must be bit-identical to the norm trigger at 0"
+    );
+    // …and a positive per-coordinate threshold really masks: the
+    // compressor then sees a sparser diff and the series departs.
+    let masked = ExperimentConfig {
+        trigger: "percoord:5".into(),
+        ..base.clone()
+    };
+    assert_ne!(
+        run_config(&base, false).to_csv(),
+        run_config(&masked, false).to_csv(),
+        "percoord:5 should mask coordinates on this workload"
+    );
+}
+
+#[test]
+fn family_runs_are_deterministic_across_worker_counts() {
+    let mk = |family: &str, trigger: &str, workers: usize| ExperimentConfig {
+        nodes: 8,
+        steps: 200,
+        eval_every: 50,
+        problem: "quadratic:32".into(),
+        compressor: "sign_topk:25%".into(),
+        family: family.into(),
+        trigger: trigger.into(),
+        h: sparq::config::SyncSpec::every(2),
+        workers,
+        ..Default::default()
+    };
+    let a = run_config(&mk("squarm:0.9", "const:20", 1), false);
+    let b = run_config(&mk("squarm:0.9", "const:20", 8), false);
+    assert_eq!(a.to_csv(), b.to_csv(), "squarm series diverged across worker counts");
+    let a = run_config(&mk("sparq", "percoord:2.5", 1), false);
+    let b = run_config(&mk("sparq", "percoord:2.5", 8), false);
+    assert_eq!(a.to_csv(), b.to_csv(), "percoord series diverged across worker counts");
+}
+
 #[test]
 fn static_schedule_default_is_bitwise_equivalent_to_topology_field() {
     // "static" must change nothing relative to the plain topology path.

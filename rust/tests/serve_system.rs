@@ -364,6 +364,79 @@ fn concurrent_subscribers_see_identical_event_streams() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn evicted_event_prefix_fails_watch_from_start_with_truncation_error() {
+    let spec = quick_spec();
+    let dir = tmp_dir("ring");
+    // A tiny ring: the quick grid publishes 10 lifecycle events
+    // (accept, 4× started/finished, complete), so a 4-event ring is
+    // guaranteed to evict the prefix.
+    let handle = spawn(ServeConfig {
+        socket: "127.0.0.1:0".into(),
+        out: dir.join("out"),
+        workers: 2,
+        poll_ms: 20,
+        event_capacity: 4,
+        ..Default::default()
+    })
+    .expect("spawn daemon");
+    let addr = handle.addr().to_string();
+
+    let mut c = connect(&addr);
+    let (_job, accepted) = c.submit(&spec.to_json(), 0).expect("submit");
+    assert_eq!(accepted, spec.len());
+    loop {
+        let (jobs, _) = c.status().expect("status");
+        if jobs.first().is_some_and(|j| j.state == "complete") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Replaying from seq 0 is impossible now: the daemon must say so
+    // up front — a structured truncation error, zero events delivered —
+    // never a stream with a silent hole.
+    let mut seen = Vec::new();
+    let err = connect(&addr)
+        .watch(true, &mut |seq, _| {
+            seen.push(seq);
+            true
+        })
+        .expect_err("watch --from-start over an evicted prefix must fail");
+    assert!(
+        err.contains("log truncated at seq"),
+        "unexpected error: {err}"
+    );
+    assert!(seen.is_empty(), "no events before the truncation error: {seen:?}");
+
+    // A tail subscriber is unaffected: it attaches at the live cursor
+    // and follows new events (the resubmitted job settles instantly
+    // from recorded results, publishing accept + complete only).
+    let tail = connect(&addr);
+    let tailer = std::thread::spawn(move || -> Vec<String> {
+        let mut kinds = Vec::new();
+        tail.watch(false, &mut |_seq, e| {
+            let kind = e.get("kind").and_then(Json::as_str).unwrap_or_default().to_string();
+            kinds.push(kind.clone());
+            kind != "job-complete"
+        })
+        .expect("tail watch");
+        kinds
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    let (_job2, _) = c.submit(&spec.to_json(), 0).expect("resubmit");
+    let kinds = tailer.join().expect("tail subscriber");
+    assert_eq!(
+        kinds,
+        ["job-accepted", "job-complete"],
+        "tail stream follows post-eviction events"
+    );
+
+    drop(c);
+    handle.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ---------------------------------------------------------------------
 // Child-process end-to-end tests (Unix socket)
 // ---------------------------------------------------------------------

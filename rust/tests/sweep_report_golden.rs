@@ -81,5 +81,89 @@ fn duplicate_result_ids_resolve_to_the_last_record() {
     assert_eq!(runs.len(), 1);
     assert_eq!(runs[0].label, "second");
     assert_eq!(runs[0].fired, 2);
+    // records predating the families field group under "sparq"
+    assert_eq!(runs[0].family, "sparq");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_counter_fields_fail_the_load_with_a_named_error() {
+    // Regression: a damaged "fired"/"checks" value used to read as a
+    // silent 0 (`unwrap_or(0)`) and render as a 0.0% transmit rate; it
+    // must instead fail the load naming the file:line, run, and field.
+    let dir = std::env::temp_dir().join(format!("sparq-report-corrupt-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(dir.join("series")).unwrap();
+    let series_line =
+        r#"{"t":0,"loss":0.9,"test_error":0.9,"opt_gap":"NaN","bits":0,"comm_rounds":0,"consensus":0.5,"fired":1}"#;
+    for id in ["good000000000001", "bad0000000000002"] {
+        std::fs::write(
+            dir.join("series").join(format!("{id}.jsonl")),
+            format!("{series_line}\n"),
+        )
+        .unwrap();
+    }
+    let write_results = |bad_counters: &str| {
+        let good = r#"{"id":"good000000000001","label":"fine","fired":1,"checks":2}"#;
+        let bad = format!(r#"{{"id":"bad0000000000002","label":"broken",{bad_counters}}}"#);
+        std::fs::write(dir.join("results.jsonl"), format!("{good}\n{bad}\n")).unwrap();
+    };
+
+    // fractional count
+    write_results(r#""fired":1.5,"checks":2"#);
+    let err = report::load(&dir).expect_err("fractional fired must fail the load");
+    for needle in ["results.jsonl:2", "bad0000000000002", "\"fired\""] {
+        assert!(err.contains(needle), "error {err:?} should name {needle:?}");
+    }
+
+    // negative count
+    write_results(r#""fired":1,"checks":-3"#);
+    let err = report::load(&dir).expect_err("negative checks must fail the load");
+    for needle in ["results.jsonl:2", "bad0000000000002", "\"checks\""] {
+        assert!(err.contains(needle), "error {err:?} should name {needle:?}");
+    }
+
+    // a *missing* counter is still fine (records predate the key)
+    write_results(r#""checks":2"#);
+    let runs = report::load(&dir).expect("missing counter keys stay loadable");
+    assert_eq!(runs.len(), 2);
+    assert_eq!((runs[1].fired, runs[1].checks), (0, 2));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn family_key_round_trips_through_the_report_load() {
+    let dir = std::env::temp_dir().join(format!("sparq-report-family-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(dir.join("series")).unwrap();
+    let series_line =
+        r#"{"t":0,"loss":0.9,"test_error":0.9,"opt_gap":"NaN","bits":0,"comm_rounds":0,"consensus":0.5,"fired":1}"#;
+    for id in ["plain00000000001", "squarm0000000002", "coords0000000003"] {
+        std::fs::write(
+            dir.join("series").join(format!("{id}.jsonl")),
+            format!("{series_line}\n"),
+        )
+        .unwrap();
+    }
+    std::fs::write(
+        dir.join("results.jsonl"),
+        concat!(
+            r#"{"id":"plain00000000001","label":"a","fired":1,"checks":2}"#,
+            "\n",
+            r#"{"id":"squarm0000000002","label":"b","fired":1,"checks":2,"family":"squarm:0.9"}"#,
+            "\n",
+            r#"{"id":"coords0000000003","label":"c","fired":1,"checks":2,"family":"percoord"}"#,
+            "\n"
+        ),
+    )
+    .unwrap();
+    let runs = report::load(&dir).unwrap();
+    let fams: Vec<&str> = runs.iter().map(|r| r.family.as_str()).collect();
+    assert_eq!(fams, ["sparq", "squarm:0.9", "percoord"]);
+    // and the family panel groups them under those names
+    let table = report::family_table(&runs, TargetMetric::Loss, 1.0);
+    for fam in ["sparq", "squarm:0.9", "percoord"] {
+        assert!(table.contains(fam), "missing {fam} in:\n{table}");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
