@@ -1,0 +1,458 @@
+//! The `sparq cluster` launcher: spawn N node processes, supervise
+//! them, deliver real `SIGKILL`s for fault-plan crash windows, and
+//! cross-check that every replica tells the same story.
+//!
+//! The launcher never touches algorithm state. It owns exactly four
+//! jobs: (1) write `<dir>/config.json` and spawn one `cluster-node`
+//! child per rank with stdout/stderr teed to `<dir>/log/`; (2) wait
+//! for the membership claims to confirm the cluster formed; (3) watch
+//! `<dir>/kill/` for markers — a node parks at its own crash boundary
+//! and asks to die — then `SIGKILL` the process, delete its membership
+//! claim, and respawn it with `--mute-until <up>` so the restored
+//! checkpoint replays silently and rejoins at `t = up`; (4) collect
+//! the per-rank summaries and refuse to report success unless every
+//! replica's series fingerprint, bit totals, and trigger counts agree
+//! (with `verify`, also against a fresh in-process run).
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::membership;
+use super::node::{series_hash, summary_path};
+use super::socket::write_atomic;
+use crate::config::{Algo, ExperimentConfig};
+use crate::run::Run;
+use crate::util::json::Json;
+
+const POLL: Duration = Duration::from_millis(50);
+
+/// Launcher inputs (the `sparq cluster` flag surface).
+pub struct ClusterOptions {
+    pub cfg: ExperimentConfig,
+    /// The shared cluster directory (sockets, checkpoints, membership,
+    /// logs, summaries all live here).
+    pub dir: PathBuf,
+    /// The `sparq` binary to spawn nodes from (normally
+    /// `std::env::current_exe()`).
+    pub exe: PathBuf,
+    /// Checkpoint cadence forwarded to every node (0 = crash
+    /// boundaries only).
+    pub checkpoint_every: u64,
+    /// Also run the config in-process and demand bit-identity.
+    pub verify: bool,
+    pub verbose: bool,
+    /// Watchdog: kill everything and fail if the cluster has not
+    /// finished within this budget (0 = no watchdog).
+    pub timeout_secs: f64,
+}
+
+/// One delivered crash: the launcher really `SIGKILL`ed rank `rank` at
+/// iteration boundary `t_down` and respawned it to rejoin at `t_up`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KillEvent {
+    pub rank: usize,
+    pub t_down: u64,
+    pub t_up: u64,
+}
+
+/// What one rank reported at the end of its run.
+#[derive(Clone, Debug)]
+pub struct NodeSummary {
+    pub rank: usize,
+    pub series_hash: String,
+    pub total_bits: u64,
+    pub total_messages: u64,
+    pub comm_rounds: u64,
+    pub fired: u64,
+    pub checks: u64,
+    pub crashes: u64,
+    pub resyncs: u64,
+    pub wire_fallbacks: u64,
+    pub wire_mismatches: u64,
+}
+
+/// The cross-checked outcome of one cluster run.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub nodes: usize,
+    /// The (agreed) series fingerprint.
+    pub series_hash: String,
+    pub total_bits: u64,
+    pub fired: u64,
+    pub checks: u64,
+    pub crashes: u64,
+    pub resyncs: u64,
+    pub kills: Vec<KillEvent>,
+    /// Summed over ranks — nonzero fallbacks mean some receives
+    /// degraded to local computation (completeness, not correctness).
+    pub wire_fallbacks: u64,
+    pub wire_mismatches: u64,
+    /// `Some(hash)` when `verify` ran the config in-process and the
+    /// fingerprints matched (a mismatch is an `Err`, not a report).
+    pub verified: Option<String>,
+}
+
+impl ClusterReport {
+    pub fn to_json(&self) -> Json {
+        let kills = self
+            .kills
+            .iter()
+            .map(|k| {
+                Json::obj()
+                    .set("rank", k.rank)
+                    .set("t_down", k.t_down)
+                    .set("t_up", k.t_up)
+            })
+            .collect::<Vec<_>>();
+        let j = Json::obj()
+            .set("nodes", self.nodes)
+            .set("series_hash", self.series_hash.as_str())
+            .set("total_bits", self.total_bits)
+            .set("fired", self.fired)
+            .set("checks", self.checks)
+            .set("crashes", self.crashes)
+            .set("resyncs", self.resyncs)
+            .set("kills", Json::Arr(kills))
+            .set("wire_fallbacks", self.wire_fallbacks)
+            .set("wire_mismatches", self.wire_mismatches);
+        match &self.verified {
+            Some(h) => j.set("verified", h.as_str()),
+            None => j,
+        }
+    }
+}
+
+/// Launch, supervise, and cross-check one cluster run.
+pub fn run_cluster(opts: &ClusterOptions) -> Result<ClusterReport, String> {
+    let cfg = &opts.cfg;
+    let n = cfg.nodes;
+    if n < 2 {
+        return Err(format!("a cluster needs at least 2 nodes, got {n}"));
+    }
+    if cfg.algo == Algo::Vanilla {
+        // ExactAveraging has no compressed-broadcast phase, so there is
+        // nothing for the socket transport to carry.
+        return Err("algo 'vanilla' has no broadcast phase to distribute; \
+                    use sparq or choco"
+            .into());
+    }
+    cfg.resolve().map_err(|e| e.to_string())?;
+
+    for sub in ["sock", "kill", "out", "ckpt", "log"] {
+        let p = opts.dir.join(sub);
+        std::fs::create_dir_all(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+    }
+    let claims = opts.dir.join("membership").join("claims");
+    std::fs::create_dir_all(&claims).map_err(|e| format!("{}: {e}", claims.display()))?;
+    write_atomic(
+        &opts.dir.join("config.json"),
+        cfg.to_json().to_string().as_bytes(),
+    )?;
+
+    let connect = Duration::from_secs_f64(cfg.cluster.connect_timeout_secs());
+    let mut children: Vec<Option<Child>> = Vec::with_capacity(n);
+    for rank in 0..n {
+        children.push(Some(spawn_node(opts, rank, 0)?));
+    }
+    // Join detection: the cluster has formed when every rank holds its
+    // membership claim.
+    if let Err(e) = membership::wait_for_cluster(&opts.dir, n, connect) {
+        kill_all(&mut children);
+        return Err(e);
+    }
+    if opts.verbose {
+        eprintln!("[cluster] {n} nodes joined");
+    }
+
+    let mut kills: Vec<KillEvent> = Vec::new();
+    let mut done: HashSet<usize> = HashSet::new();
+    let started = Instant::now();
+    loop {
+        // 1. Kill markers: a node parked at its crash boundary.
+        for rank in 0..n {
+            let marker = super::node::kill_marker_path(&opts.dir, rank);
+            if !marker.exists() {
+                continue;
+            }
+            let t_up = match read_marker(&marker) {
+                Some((t_down, t_up)) => {
+                    kills.push(KillEvent { rank, t_down, t_up });
+                    t_up
+                }
+                None => continue, // torn write; next poll sees it whole
+            };
+            if let Some(mut child) = children[rank].take() {
+                let _ = child.kill(); // SIGKILL — no chance to clean up
+                let _ = child.wait();
+            }
+            std::fs::remove_file(&marker).map_err(|e| format!("{}: {e}", marker.display()))?;
+            // Free the rank immediately instead of waiting out the
+            // lease, then respawn into the rejoin path.
+            let claim = membership::claim_file(&opts.dir, rank);
+            if claim.exists() {
+                std::fs::remove_file(&claim).map_err(|e| format!("{}: {e}", claim.display()))?;
+            }
+            if opts.verbose {
+                eprintln!("[cluster] killed node-{rank}, respawning for t={t_up}");
+            }
+            children[rank] = Some(spawn_node(opts, rank, t_up)?);
+        }
+
+        // 2. Child exits: success marks the rank done; failure sinks
+        //    the whole cluster (one diverged replica is not a result).
+        for rank in 0..n {
+            let Some(child) = children[rank].as_mut() else {
+                continue;
+            };
+            match child.try_wait() {
+                Ok(Some(status)) if status.success() => {
+                    children[rank] = None;
+                    done.insert(rank);
+                }
+                Ok(Some(status)) => {
+                    kill_all(&mut children);
+                    return Err(format!(
+                        "node-{rank} exited with {status}; see {}",
+                        log_path(&opts.dir, rank).display()
+                    ));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(format!("node-{rank}: wait: {e}"));
+                }
+            }
+        }
+        if done.len() == n {
+            break;
+        }
+        if opts.timeout_secs > 0.0 && started.elapsed().as_secs_f64() > opts.timeout_secs {
+            kill_all(&mut children);
+            return Err(format!(
+                "cluster timed out after {:.0}s with {}/{n} nodes finished",
+                opts.timeout_secs,
+                done.len()
+            ));
+        }
+        std::thread::sleep(POLL);
+    }
+
+    // 3. Cross-check: every replica must have computed the same run.
+    let summaries: Vec<NodeSummary> = (0..n)
+        .map(|rank| read_summary(&opts.dir, rank))
+        .collect::<Result<_, _>>()?;
+    let first = &summaries[0];
+    for s in &summaries[1..] {
+        if s.series_hash != first.series_hash
+            || s.total_bits != first.total_bits
+            || s.fired != first.fired
+            || s.checks != first.checks
+        {
+            return Err(format!(
+                "replica divergence: node-0 {{hash {}, bits {}, fired {}/{}}} vs node-{} \
+                 {{hash {}, bits {}, fired {}/{}}}",
+                first.series_hash,
+                first.total_bits,
+                first.fired,
+                first.checks,
+                s.rank,
+                s.series_hash,
+                s.total_bits,
+                s.fired,
+                s.checks
+            ));
+        }
+    }
+
+    // 4. Optional in-process verification: same config, no sockets.
+    let verified = if opts.verify {
+        let resolved = cfg.resolve().map_err(|e| e.to_string())?;
+        let mut run = Run::from_resolved(&resolved, None, cfg.workers.max(1));
+        run.run_to_end()?;
+        let h = series_hash(run.series());
+        let (fired, checks) = run.fired_stats();
+        if h != first.series_hash
+            || run.bus().total_bits != first.total_bits
+            || fired != first.fired
+            || checks != first.checks
+        {
+            return Err(format!(
+                "cluster diverged from the in-process engine: cluster {{hash {}, bits {}, \
+                 fired {}/{}}} vs in-process {{hash {h}, bits {}, fired {fired}/{checks}}}",
+                first.series_hash,
+                first.total_bits,
+                first.fired,
+                first.checks,
+                run.bus().total_bits
+            ));
+        }
+        Some(h)
+    } else {
+        None
+    };
+
+    let report = ClusterReport {
+        nodes: n,
+        series_hash: first.series_hash.clone(),
+        total_bits: first.total_bits,
+        fired: first.fired,
+        checks: first.checks,
+        crashes: first.crashes,
+        resyncs: first.resyncs,
+        kills,
+        wire_fallbacks: summaries.iter().map(|s| s.wire_fallbacks).sum(),
+        wire_mismatches: summaries.iter().map(|s| s.wire_mismatches).sum(),
+        verified,
+    };
+    write_atomic(
+        &opts.dir.join("report.json"),
+        report.to_json().to_string().as_bytes(),
+    )?;
+    Ok(report)
+}
+
+fn log_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("log").join(format!("node-{rank}.log"))
+}
+
+/// Spawn one `cluster-node` child. `mute_until > 0` selects the rejoin
+/// path: restore the crash-boundary checkpoint, replay silently, and
+/// skip crash windows already served.
+fn spawn_node(opts: &ClusterOptions, rank: usize, mute_until: u64) -> Result<Child, String> {
+    let log = std::fs::File::create(log_path(&opts.dir, rank))
+        .map_err(|e| format!("{}: {e}", log_path(&opts.dir, rank).display()))?;
+    let err = log
+        .try_clone()
+        .map_err(|e| format!("clone log handle: {e}"))?;
+    let mut cmd = Command::new(&opts.exe);
+    cmd.arg("cluster-node")
+        .arg("--dir")
+        .arg(&opts.dir)
+        .arg("--rank")
+        .arg(rank.to_string())
+        .arg("--checkpoint-every")
+        .arg(opts.checkpoint_every.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::from(log))
+        .stderr(Stdio::from(err));
+    if mute_until > 0 {
+        cmd.arg("--mute-until")
+            .arg(mute_until.to_string())
+            .arg("--min-crash-start")
+            .arg(mute_until.to_string());
+    }
+    if opts.verbose {
+        cmd.arg("--verbose");
+    }
+    cmd.spawn()
+        .map_err(|e| format!("spawn {} cluster-node: {e}", opts.exe.display()))
+}
+
+fn kill_all(children: &mut [Option<Child>]) {
+    for c in children.iter_mut() {
+        if let Some(mut child) = c.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn read_marker(path: &Path) -> Option<(u64, u64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    Some((
+        j.get("t_down").and_then(Json::as_u64)?,
+        j.get("t_up").and_then(Json::as_u64)?,
+    ))
+}
+
+fn read_summary(dir: &Path, rank: usize) -> Result<NodeSummary, String> {
+    let path = summary_path(dir, rank);
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let num = |key: &str| j.get(key).and_then(Json::as_u64).unwrap_or(0);
+    let wire = |key: &str| {
+        j.get("wire")
+            .and_then(|w| w.get(key))
+            .and_then(Json::as_u64)
+            .unwrap_or(0)
+    };
+    Ok(NodeSummary {
+        rank,
+        series_hash: j
+            .get("series_hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{}: missing series_hash", path.display()))?
+            .to_string(),
+        total_bits: num("total_bits"),
+        total_messages: num("total_messages"),
+        comm_rounds: num("comm_rounds"),
+        fired: num("fired"),
+        checks: num("checks"),
+        crashes: num("crashes"),
+        resyncs: num("resyncs"),
+        wire_fallbacks: wire("fallbacks"),
+        wire_mismatches: wire("mismatches"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_and_single_node_clusters_are_rejected() {
+        let base = ExperimentConfig {
+            nodes: 4,
+            ..Default::default()
+        };
+        let opts = |cfg: ExperimentConfig| ClusterOptions {
+            cfg,
+            dir: std::env::temp_dir().join("sparq-launcher-reject"),
+            exe: PathBuf::from("/nonexistent"),
+            checkpoint_every: 0,
+            verify: false,
+            verbose: false,
+            timeout_secs: 1.0,
+        };
+        let mut vanilla = base.clone();
+        vanilla.algo = Algo::Vanilla;
+        let err = run_cluster(&opts(vanilla)).unwrap_err();
+        assert!(err.contains("vanilla"), "{err}");
+        let mut single = base;
+        single.nodes = 1;
+        let err = run_cluster(&opts(single)).unwrap_err();
+        assert!(err.contains("at least 2"), "{err}");
+    }
+
+    #[test]
+    fn report_json_carries_the_identity_fields() {
+        let r = ClusterReport {
+            nodes: 4,
+            series_hash: "ab".into(),
+            total_bits: 10,
+            fired: 3,
+            checks: 9,
+            crashes: 1,
+            resyncs: 2,
+            kills: vec![KillEvent {
+                rank: 2,
+                t_down: 40,
+                t_up: 60,
+            }],
+            wire_fallbacks: 0,
+            wire_mismatches: 0,
+            verified: Some("ab".into()),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("series_hash").and_then(Json::as_str), Some("ab"));
+        assert_eq!(j.get("verified").and_then(Json::as_str), Some("ab"));
+        let kills = match j.get("kills") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("kills should be an array, got {other:?}"),
+        };
+        assert_eq!(kills[0].get("t_down").and_then(Json::as_u64), Some(40));
+    }
+}

@@ -1,0 +1,177 @@
+//! Cluster membership on the heartbeat-lease claim store.
+//!
+//! Each node process holds the claim `node-<rank>` in the store at
+//! `<dir>/membership/claims/`, heartbeating it from the engine's
+//! observer tick. The launcher treats the claim set as the membership
+//! view: it waits for all N claims before calling the cluster formed
+//! (join detection), and deletes a claim after `SIGKILL`ing its
+//! process so the respawned node can re-acquire immediately instead of
+//! waiting out the lease. A node that loses its lease mid-run learns it
+//! from the heartbeat return value — someone else owns its rank, so it
+//! must stop rather than fight over sockets.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::sweep::distributed::{
+    default_owner, list_claims, now_secs, Acquire, Claim, ClaimInfo, ClaimStore,
+};
+
+const POLL: Duration = Duration::from_millis(50);
+
+/// The claim id for a rank.
+pub fn claim_id(rank: usize) -> String {
+    format!("node-{rank}")
+}
+
+/// Where rank `rank`'s claim file lives under a cluster directory (the
+/// launcher deletes this after a kill).
+pub fn claim_file(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("membership")
+        .join("claims")
+        .join(format!("{}.claim", claim_id(rank)))
+}
+
+/// One node's held membership: the claim plus a rate limiter so the
+/// per-step observer tick can call [`Membership::beat`] unconditionally.
+pub struct Membership {
+    claim: Option<Claim>,
+    heartbeat: Duration,
+    last_beat: Instant,
+}
+
+impl Membership {
+    /// Acquire `node-<rank>`, retrying until `deadline` (the previous
+    /// incarnation's claim may still be on disk until the launcher
+    /// deletes it or the lease expires).
+    pub fn join(
+        dir: &Path,
+        rank: usize,
+        lease_secs: f64,
+        heartbeat_secs: f64,
+        deadline: Duration,
+    ) -> Result<Membership, String> {
+        let store = ClaimStore::new(
+            dir.join("membership").join("claims"),
+            default_owner(),
+            lease_secs,
+        )?;
+        let id = claim_id(rank);
+        let until = Instant::now() + deadline;
+        loop {
+            match store.try_acquire(&id)? {
+                Acquire::Acquired(claim) => {
+                    return Ok(Membership {
+                        claim: Some(claim),
+                        heartbeat: Duration::from_secs_f64(heartbeat_secs.max(0.01)),
+                        last_beat: Instant::now(),
+                    })
+                }
+                Acquire::Held => {
+                    if Instant::now() >= until {
+                        return Err(format!(
+                            "rank {rank}: claim {id:?} still held after {deadline:?}"
+                        ));
+                    }
+                    std::thread::sleep(POLL);
+                }
+            }
+        }
+    }
+
+    /// Heartbeat if a heartbeat interval has passed; cheap to call every
+    /// step. `Ok(false)` means the lease was taken over (or the claim
+    /// vanished) — this process no longer owns its rank.
+    pub fn beat(&mut self) -> Result<bool, String> {
+        if self.last_beat.elapsed() < self.heartbeat {
+            return Ok(true);
+        }
+        self.last_beat = Instant::now();
+        match self.claim.as_mut() {
+            Some(c) => c.heartbeat(),
+            None => Ok(false),
+        }
+    }
+
+    /// Release the claim (normal exit).
+    pub fn leave(mut self) -> Result<(), String> {
+        match self.claim.take() {
+            Some(c) => c.release(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The current membership view: claims present under
+/// `<dir>/membership/claims/`.
+pub fn view(dir: &Path) -> Result<Vec<ClaimInfo>, String> {
+    list_claims(&dir.join("membership"), now_secs())
+}
+
+/// Block until all `n` ranks hold their claims (cluster formed), or
+/// fail after `timeout`. Returns the number of distinct ranks seen on
+/// failure for the error message.
+pub fn wait_for_cluster(dir: &Path, n: usize, timeout: Duration) -> Result<(), String> {
+    let until = Instant::now() + timeout;
+    loop {
+        let seen = view(dir)?
+            .iter()
+            .filter(|c| (0..n).any(|r| c.id == claim_id(r)))
+            .count();
+        if seen == n {
+            return Ok(());
+        }
+        if Instant::now() >= until {
+            return Err(format!(
+                "cluster did not form: {seen}/{n} membership claims after {timeout:?}"
+            ));
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sparq-member-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).expect("mkdir");
+        d
+    }
+
+    #[test]
+    fn join_beat_view_leave_round_trip() {
+        let dir = tmp_dir("join");
+        let mut m0 =
+            Membership::join(&dir, 0, 5.0, 0.0, Duration::from_secs(1)).expect("join 0");
+        let m1 = Membership::join(&dir, 1, 5.0, 0.0, Duration::from_secs(1)).expect("join 1");
+        wait_for_cluster(&dir, 2, Duration::from_secs(1)).expect("formed");
+        assert!(m0.beat().expect("beat"));
+        assert_eq!(view(&dir).expect("view").len(), 2);
+        m1.leave().expect("leave");
+        let err = wait_for_cluster(&dir, 2, Duration::from_millis(120)).unwrap_err();
+        assert!(err.contains("1/2"), "{err}");
+        m0.leave().expect("leave");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_held_rank_blocks_rejoin_until_its_claim_is_deleted() {
+        let dir = tmp_dir("held");
+        let m = Membership::join(&dir, 3, 30.0, 1.0, Duration::from_secs(1)).expect("join");
+        let err =
+            Membership::join(&dir, 3, 30.0, 1.0, Duration::from_millis(150)).unwrap_err();
+        assert!(err.contains("node-3"), "{err}");
+        // The launcher's post-SIGKILL cleanup: delete the claim file.
+        std::fs::remove_file(claim_file(&dir, 3)).expect("delete claim");
+        let m2 = Membership::join(&dir, 3, 30.0, 1.0, Duration::from_secs(1))
+            .expect("rejoin after cleanup");
+        // The old incarnation's lease is gone: its heartbeat reports the
+        // takeover instead of silently fighting.
+        drop(m);
+        m2.leave().expect("leave");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

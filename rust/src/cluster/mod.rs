@@ -1,0 +1,46 @@
+//! The real multi-process decentralized runtime.
+//!
+//! `sparq cluster` turns the simulated decentralized run into N OS
+//! processes exchanging real bytes, without forking any algorithm code:
+//!
+//! * Every node process runs the **complete** deterministic n-node
+//!   engine (SPMD full replica). Seeded coins, triggers, stragglers,
+//!   and fault windows replicate identically, so no control messages
+//!   exist — the only bytes on the wire are each rank's own broadcasts.
+//! * [`protocol`] — tagged payloads inside the `comm::wire` CRC frame:
+//!   a config-pinned Hello handshake and `(t, from)`-headed data frames
+//!   carrying `encode_sparse` bodies.
+//! * [`socket`] — one stream per node pair (lower rank dials) over UDS
+//!   or TCP, plus [`SocketTransport`] behind the engine's transport
+//!   seam: sends are best-effort, receives are patient and fall back to
+//!   the bit-identical local copy, and all degradation is counted.
+//! * [`membership`] — join/failure detection on the heartbeat-lease
+//!   claim store (`<dir>/membership/claims/node-R.claim`).
+//! * [`node`] — the per-process drive loop: crash-boundary checkpoints,
+//!   kill-marker park at own fault windows, end-of-run summary with an
+//!   `f64::to_bits`-exact series fingerprint.
+//! * [`launcher`] — spawn/supervise/`SIGKILL`/respawn, then cross-check
+//!   that every replica (and optionally a fresh in-process run) agrees
+//!   bit for bit.
+//!
+//! **The bit-identity contract.** In lockstep (all nodes live), a
+//! cluster run's series, charged bit totals, and fired/checks counts
+//! are `f64::to_bits`-identical to `Run::from_resolved` on the same
+//! config: substitution of a received broadcast is a lossless f32-bit
+//! round trip, and every other number is computed locally by the same
+//! engine. Charged bits remain `Compressor::message_bits` — socket
+//! framing (CRC armor + tag + round header) is accounted separately as
+//! wire overhead in the summaries. With a fault plan, crash windows
+//! become real `SIGKILL`s + checkpoint-restore rejoins, and the PR-6
+//! resync charges still match the in-process engine exactly because
+//! `fault_transition` is replicated computation.
+
+pub mod launcher;
+pub mod membership;
+pub mod node;
+pub mod protocol;
+pub mod socket;
+
+pub use launcher::{run_cluster, ClusterOptions, ClusterReport, KillEvent};
+pub use node::{run_node, series_hash, NodeOptions};
+pub use socket::{Links, SocketTransport, WireSnapshot};

@@ -1,0 +1,338 @@
+//! One cluster node process: the full deterministic engine behind a
+//! socket transport.
+//!
+//! Every rank runs the *complete* n-node engine (SPMD full replica):
+//! seeded coins, triggers, stragglers, and fault windows are replicated
+//! computation, so each process independently knows who fires and who
+//! is down at every round — no control messages exist. The only bytes
+//! that travel are each rank's own broadcasts (see
+//! [`super::socket::SocketTransport`]). Bit-identity to the in-process
+//! engine follows: substitution of a received frame is a lossless
+//! round trip, and everything else *is* the in-process engine.
+//!
+//! Crash windows in the fault plan become real process deaths. When a
+//! rank reaches the start of one of its own windows it checkpoints at
+//! exactly `t = down` (the cadence-independent boundary the rejoin
+//! restores from), writes a kill marker under `<dir>/kill/`, and parks
+//! — the launcher `SIGKILL`s it, deletes its membership claim, and
+//! respawns it with `--mute-until up`. The respawn restores the
+//! checkpoint and replays `[down, up)` with the transport muted (the
+//! node is down in every replica's plan, so no peer addresses it), then
+//! rejoins live traffic at `t = up`. Resync accounting is the engine's
+//! own replicated `fault_transition` — identical to in-process.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::membership::{self, Membership};
+use super::socket::{write_atomic, Links, SocketTransport, StatsHandle};
+use crate::comm::fault::CrashWindow;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Checkpoint, DecentralizedAlgo};
+use crate::metrics::Series;
+use crate::run::{DriveEnd, Run, RunObserver};
+use crate::sweep::spec::config_hash;
+use crate::util::json::Json;
+
+/// How long a parked (kill-marked) node waits for its `SIGKILL` before
+/// concluding the launcher died and exiting with an error.
+const PARK_CAP: Duration = Duration::from_secs(600);
+
+/// Everything a node process needs (the launcher passes these as
+/// `cluster-node` flags).
+pub struct NodeOptions {
+    pub rank: usize,
+    /// The shared cluster directory.
+    pub dir: PathBuf,
+    pub cfg: ExperimentConfig,
+    /// Checkpoint cadence in iterations (0 = only at crash boundaries).
+    pub checkpoint_every: u64,
+    /// Replay `[restore_t, mute_until)` with the transport silent
+    /// (rejoin path; 0 for a fresh start).
+    pub mute_until: u64,
+    /// Ignore own crash windows starting before this iteration (they
+    /// were already served by a previous incarnation).
+    pub min_crash_start: u64,
+    pub verbose: bool,
+}
+
+/// Canonical series fingerprint: FNV-64 over the records' exact bit
+/// patterns (`f64::to_bits`, little-endian). Two series hash equal iff
+/// every field of every record is bit-for-bit identical — the cluster's
+/// cross-replica and cluster-vs-in-process identity checks both pin
+/// this.
+pub fn series_hash(series: &Series) -> String {
+    let mut bytes = Vec::with_capacity(series.records.len() * 64);
+    for r in &series.records {
+        bytes.extend_from_slice(&r.t.to_le_bytes());
+        for v in [r.loss, r.test_error, r.opt_gap, r.consensus] {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        bytes.extend_from_slice(&r.bits.to_le_bytes());
+        bytes.extend_from_slice(&r.comm_rounds.to_le_bytes());
+        bytes.extend_from_slice(&(r.fired as u64).to_le_bytes());
+    }
+    format!("{:016x}", crate::sweep::spec::fnv64(&bytes))
+}
+
+fn ckpt_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("ckpt").join(format!("node-{rank}.ckpt"))
+}
+
+fn ckpt_series_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("ckpt").join(format!("node-{rank}.series.jsonl"))
+}
+
+/// Where rank `rank` announces "kill me now" to the launcher.
+pub fn kill_marker_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("kill").join(format!("node-{rank}.json"))
+}
+
+/// Where rank `rank` writes its end-of-run summary.
+pub fn summary_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join("out").join(format!("node-{rank}.json"))
+}
+
+/// The drive-loop observer gluing the engine to the cluster: membership
+/// heartbeats, crash-boundary checkpoints, and the kill-marker park.
+struct NodeObserver {
+    rank: usize,
+    dir: PathBuf,
+    membership: Membership,
+    /// This rank's own crash windows still to be served, ascending.
+    windows: Vec<CrashWindow>,
+    checkpoint_every: u64,
+    verbose: bool,
+}
+
+impl NodeObserver {
+    /// The pending own-crash window starting exactly at `t`, if any.
+    fn window_at(&self, t: u64) -> Option<&CrashWindow> {
+        self.windows.iter().find(|w| w.down == t)
+    }
+}
+
+impl RunObserver for NodeObserver {
+    fn tick(&mut self, t: u64) -> Result<bool, String> {
+        if !self.membership.beat()? {
+            // Someone else owns this rank now; abandoning (instead of
+            // fighting over sockets) is the only safe move.
+            return Ok(false);
+        }
+        if let Some(w) = self.window_at(t) {
+            // The checkpoint at t = down was persisted at the end of
+            // the previous iteration (see checkpoint_due); this process
+            // now dies for real. Write the marker and wait for SIGKILL.
+            let marker = Json::obj()
+                .set("rank", self.rank)
+                .set("pid", std::process::id() as u64)
+                .set("t_down", w.down)
+                .set("t_up", w.up);
+            write_atomic(
+                &kill_marker_path(&self.dir, self.rank),
+                marker.to_string().as_bytes(),
+            )?;
+            if self.verbose {
+                eprintln!(
+                    "[node-{}] parked at t={} awaiting SIGKILL (rejoin at t={})",
+                    self.rank, w.down, w.up
+                );
+            }
+            let until = Instant::now() + PARK_CAP;
+            while Instant::now() < until {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            return Err(format!(
+                "rank {}: no SIGKILL within {PARK_CAP:?} of the kill marker — launcher gone?",
+                self.rank
+            ));
+        }
+        Ok(true)
+    }
+
+    fn checkpoint_due(&mut self, t: u64) -> bool {
+        // A crash boundary always checkpoints — the rejoin restores from
+        // exactly t = down regardless of the cadence.
+        (self.checkpoint_every > 0 && t % self.checkpoint_every == 0)
+            || self.window_at(t).is_some()
+    }
+
+    fn persist(&mut self, ck: Checkpoint, series: &Series) -> Result<(), String> {
+        let path = ckpt_path(&self.dir, self.rank);
+        let tmp = path.with_extension("ckpt.tmp");
+        ck.save(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let spath = ckpt_series_path(&self.dir, self.rank);
+        let stmp = spath.with_extension("jsonl.tmp");
+        series
+            .write_jsonl(&stmp)
+            .map_err(|e| format!("{}: {e}", stmp.display()))?;
+        std::fs::rename(&stmp, &spath)
+            .map_err(|e| format!("{}: {e}", spath.display()))
+    }
+}
+
+/// Run one node process to completion: join, bind, drive, summarize.
+/// This is the body of the hidden `cluster-node` subcommand.
+pub fn run_node(opts: NodeOptions) -> Result<(), String> {
+    let resolved = opts.cfg.resolve().map_err(|e| e.to_string())?;
+    let n = opts.cfg.nodes;
+    if opts.rank >= n {
+        return Err(format!("rank {} out of range for {n} nodes", opts.rank));
+    }
+    let spec = opts.cfg.cluster.clone();
+    let hash = config_hash(&opts.cfg);
+    let connect = Duration::from_secs_f64(spec.connect_timeout_secs());
+    for sub in ["ckpt", "kill", "out"] {
+        let p = opts.dir.join(sub);
+        std::fs::create_dir_all(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+    }
+
+    let membership = Membership::join(
+        &opts.dir,
+        opts.rank,
+        spec.lease_secs(),
+        spec.heartbeat_secs(),
+        connect,
+    )?;
+    let links = Links::bind(
+        &opts.dir,
+        opts.rank,
+        n,
+        spec.kind(),
+        spec.host(),
+        &hash,
+        connect,
+    )?;
+    let stats: StatsHandle = links.stats_handle();
+
+    let mut run = Run::from_resolved(&resolved, None, opts.cfg.workers.max(1));
+    run.algo_mut()
+        .set_transport(Box::new(SocketTransport::new(links, opts.mute_until)));
+
+    // Rejoin: restore the checkpoint a previous incarnation persisted
+    // at its crash boundary. The replay up to `mute_until` is silent
+    // local recomputation (the node is down in every replica's plan).
+    let cpath = ckpt_path(&opts.dir, opts.rank);
+    if cpath.exists() {
+        let ck = Checkpoint::load(&cpath).map_err(|e| format!("{}: {e}", cpath.display()))?;
+        let spath = ckpt_series_path(&opts.dir, opts.rank);
+        let label = run.series().label.clone();
+        let series = Series::read_jsonl(&spath, label)
+            .map_err(|e| format!("{}: {e}", spath.display()))?;
+        let t0 = ck.t;
+        run.restore(&ck, series).map_err(|e| e.to_string())?;
+        if opts.verbose {
+            eprintln!("[node-{}] restored checkpoint at t={t0}", opts.rank);
+        }
+    }
+
+    let mut obs = NodeObserver {
+        rank: opts.rank,
+        dir: opts.dir.clone(),
+        membership,
+        windows: {
+            let mut w: Vec<CrashWindow> = resolved
+                .fault
+                .crashes
+                .iter()
+                .filter(|w| w.node == opts.rank && w.down >= opts.min_crash_start)
+                .cloned()
+                .collect();
+            w.sort_by_key(|w| w.down);
+            w
+        },
+        checkpoint_every: opts.checkpoint_every,
+        verbose: opts.verbose,
+    };
+
+    match run.drive(&mut obs)? {
+        DriveEnd::Completed => {}
+        DriveEnd::Stopped => {}
+        DriveEnd::Abandoned => {
+            return Err(format!(
+                "rank {}: abandoned — membership lease lost",
+                opts.rank
+            ))
+        }
+    }
+
+    // Summary: every rank writes one; the launcher cross-checks that
+    // all replicas agree on the series fingerprint and bit totals.
+    let (fired, checks) = run.fired_stats();
+    let fault = run.snapshot().fault;
+    let wire = stats.snapshot();
+    let summary = Json::obj()
+        .set("rank", opts.rank)
+        .set("pid", std::process::id() as u64)
+        .set("label", run.series().label.as_str())
+        .set("t", run.t())
+        .set("series_hash", series_hash(run.series()).as_str())
+        .set("total_bits", run.bus().total_bits)
+        .set("total_messages", run.bus().total_messages)
+        .set("comm_rounds", run.bus().comm_rounds)
+        .set("fired", fired)
+        .set("checks", checks)
+        .set("crashes", fault.crashes)
+        .set("resyncs", fault.resyncs)
+        .set("corrupt_discards", fault.corrupt_discards)
+        .set("wire", wire.to_json());
+    write_atomic(
+        &summary_path(&opts.dir, opts.rank),
+        summary.to_string().as_bytes(),
+    )?;
+    if opts.rank == 0 {
+        let spath = opts.dir.join("out").join("series.jsonl");
+        let tmp = spath.with_extension("jsonl.tmp");
+        run.series()
+            .write_jsonl(&tmp)
+            .map_err(|e| format!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &spath).map_err(|e| format!("{}: {e}", spath.display()))?;
+    }
+    obs.membership.leave()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn rec(t: u64, loss: f64) -> RoundRecord {
+        RoundRecord {
+            t,
+            loss,
+            test_error: 0.5,
+            opt_gap: 0.25,
+            bits: 100 + t,
+            comm_rounds: t,
+            consensus: 1e-3,
+            fired: 3,
+        }
+    }
+
+    #[test]
+    fn series_hash_is_sensitive_to_every_bit() {
+        let mut a = Series::new("x");
+        a.push(rec(0, 1.0));
+        a.push(rec(50, 0.5));
+        let mut b = Series::new("y"); // label is not part of the hash
+        b.push(rec(0, 1.0));
+        b.push(rec(50, 0.5));
+        assert_eq!(series_hash(&a), series_hash(&b));
+        // One ULP of one field changes the fingerprint.
+        b.records[1].loss = f64::from_bits(0.5f64.to_bits() + 1);
+        assert_ne!(series_hash(&a), series_hash(&b));
+        b.records[1].loss = 0.5;
+        b.records[1].fired = 4;
+        assert_ne!(series_hash(&a), series_hash(&b));
+    }
+
+    #[test]
+    fn paths_are_per_rank() {
+        let d = Path::new("/c");
+        assert_eq!(ckpt_path(d, 2), Path::new("/c/ckpt/node-2.ckpt"));
+        assert_eq!(kill_marker_path(d, 0), Path::new("/c/kill/node-0.json"));
+        assert_eq!(summary_path(d, 7), Path::new("/c/out/node-7.json"));
+    }
+}

@@ -1,0 +1,198 @@
+//! The cluster wire protocol: tagged payloads inside CRC frames.
+//!
+//! Every message on a node↔node socket is one `comm::wire::frame`
+//! (`[len:u32 LE][crc32:u32 LE][payload]` — the same armor the serve
+//! daemon and the chaos engine use). The payload's first byte is a tag:
+//!
+//! * [`TAG_HELLO`] — connection handshake, a JSON object
+//!   `{"rank": R, "nodes": N, "config": HASH}`. Sent once by the dialer
+//!   immediately after connecting; the acceptor rejects a peer whose
+//!   node count or `config_hash` disagrees (two clusters sharing a
+//!   directory, or a stale node from an earlier spec, must fail loudly
+//!   instead of corrupting a run).
+//! * [`TAG_DATA`] — one broadcast: `[t:u64 LE][from:u32 LE]` followed by
+//!   the `comm::wire::encode_sparse` body. The `(t, from)` header lets a
+//!   receiver discard frames from rounds it already resolved locally
+//!   (e.g. a late TCP delivery after a recv timeout) instead of
+//!   desynchronizing.
+//!
+//! The sparse body is the *charged* message — `Compressor::message_bits`
+//! of exactly these coordinates. Tag + header + CRC armor are transport
+//! overhead, tallied separately by [`super::socket::WireStats`].
+
+use crate::util::json::Json;
+
+/// Handshake payload tag (first frame on every connection).
+pub const TAG_HELLO: u8 = 0x01;
+/// Broadcast payload tag.
+pub const TAG_DATA: u8 = 0x02;
+
+/// Bytes the data header adds on top of the sparse body
+/// (`tag + t + from`).
+pub const DATA_HEADER_BYTES: usize = 1 + 8 + 4;
+
+/// The handshake: who is dialing, and which experiment they think this
+/// cluster is running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub rank: usize,
+    pub nodes: usize,
+    /// `sweep::spec::config_hash` of the cluster's config.
+    pub config: String,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let j = Json::obj()
+            .set("rank", self.rank)
+            .set("nodes", self.nodes)
+            .set("config", self.config.as_str());
+        let mut out = vec![TAG_HELLO];
+        out.extend_from_slice(j.to_string().as_bytes());
+        out
+    }
+}
+
+/// One decoded broadcast frame (body still `encode_sparse` bytes — the
+/// receiver decodes it against its model dimension).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataMsg {
+    pub t: u64,
+    pub from: usize,
+    pub body: Vec<u8>,
+}
+
+/// Encode a broadcast payload (framing happens at the socket layer).
+pub fn encode_data(t: u64, from: usize, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(DATA_HEADER_BYTES + body.len());
+    out.push(TAG_DATA);
+    out.extend_from_slice(&t.to_le_bytes());
+    out.extend_from_slice(&(from as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// A decoded cluster payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterMsg {
+    Hello(Hello),
+    Data(DataMsg),
+}
+
+/// Decode a checksum-verified payload. Every failure is a `String`
+/// reason — the socket layer treats a malformed payload like a corrupt
+/// frame (the connection is suspect) rather than panicking.
+pub fn decode(payload: &[u8]) -> Result<ClusterMsg, String> {
+    match payload.first() {
+        Some(&TAG_HELLO) => {
+            let text = std::str::from_utf8(&payload[1..])
+                .map_err(|e| format!("hello is not UTF-8: {e}"))?;
+            let j = Json::parse(text).map_err(|e| format!("hello is not JSON: {e}"))?;
+            let field = |k: &str| {
+                j.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("hello missing {k:?}"))
+            };
+            Ok(ClusterMsg::Hello(Hello {
+                rank: field("rank")?,
+                nodes: field("nodes")?,
+                config: j
+                    .get("config")
+                    .and_then(Json::as_str)
+                    .ok_or("hello missing \"config\"")?
+                    .to_string(),
+            }))
+        }
+        Some(&TAG_DATA) => {
+            if payload.len() < DATA_HEADER_BYTES {
+                return Err(format!(
+                    "data frame is {} bytes; header alone needs {DATA_HEADER_BYTES}",
+                    payload.len()
+                ));
+            }
+            let t = u64::from_le_bytes(payload[1..9].try_into().expect("8 bytes"));
+            let from = u32::from_le_bytes(payload[9..13].try_into().expect("4 bytes")) as usize;
+            Ok(ClusterMsg::Data(DataMsg {
+                t,
+                from,
+                body: payload[DATA_HEADER_BYTES..].to_vec(),
+            }))
+        }
+        Some(tag) => Err(format!("unknown payload tag {tag:#04x}")),
+        None => Err("empty payload".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{decode_sparse, encode_sparse};
+    use crate::compress::SparseVec;
+
+    #[test]
+    fn hello_round_trips() {
+        let h = Hello {
+            rank: 3,
+            nodes: 8,
+            config: "0123456789abcdef".into(),
+        };
+        match decode(&h.encode()).unwrap() {
+            ClusterMsg::Hello(back) => assert_eq!(back, h),
+            other => panic!("expected Hello, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn data_round_trips_with_the_sparse_body_intact() {
+        let d = 100;
+        let mut q = SparseVec::new();
+        q.push(3, 1.5);
+        q.push(97, -0.25);
+        let body = encode_sparse(&q, d);
+        let payload = encode_data(12345, 2, &body);
+        assert_eq!(payload.len(), DATA_HEADER_BYTES + body.len());
+        match decode(&payload).unwrap() {
+            ClusterMsg::Data(msg) => {
+                assert_eq!(msg.t, 12345);
+                assert_eq!(msg.from, 2);
+                // the body decodes to the exact message — the
+                // substitution contract's lossless round trip
+                assert_eq!(decode_sparse(&msg.body, d).unwrap(), q);
+            }
+            other => panic!("expected Data, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_errors_not_panics() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[0x7f, 1, 2]).is_err());
+        assert!(decode(&[TAG_DATA, 1, 2]).is_err()); // truncated header
+        assert!(decode(&[TAG_HELLO, 0xff]).is_err()); // not UTF-8
+        let mut bad = Hello {
+            rank: 0,
+            nodes: 2,
+            config: "x".into(),
+        }
+        .encode();
+        bad.truncate(bad.len() - 2); // torn JSON
+        assert!(decode(&bad).is_err());
+        // hello without a config hash is rejected
+        let mut j = vec![TAG_HELLO];
+        j.extend_from_slice(br#"{"rank": 0, "nodes": 2}"#);
+        assert!(decode(&j).is_err());
+    }
+
+    #[test]
+    fn empty_broadcasts_encode() {
+        let q = SparseVec::new();
+        let body = encode_sparse(&q, 16);
+        let payload = encode_data(0, 0, &body);
+        match decode(&payload).unwrap() {
+            ClusterMsg::Data(msg) => {
+                assert_eq!(decode_sparse(&msg.body, 16).unwrap(), q)
+            }
+            other => panic!("expected Data, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,729 @@
+//! Sockets between node processes: listeners, dialing, and the
+//! [`SocketTransport`] that plugs into the engine's transport seam.
+//!
+//! Every node process is a full replica of the deterministic n-node
+//! engine, so the only bytes that must travel are each rank's own
+//! broadcasts. The link layer keeps one stream per peer in a registry;
+//! for the pair `(a, b)` with `a < b`, **the lower rank dials** the
+//! higher rank's listener (one stream per pair, no simultaneous-connect
+//! races). Endpoints live under `<dir>/sock/`: rank r listens on
+//! `node-r.sock` (UDS) or on an ephemeral TCP port advertised in
+//! `node-r.addr`.
+//!
+//! Receives are *patient but not fatal*: a missing peer or a silent
+//! stream falls back — after `connect_timeout` — to the locally
+//! computed copy of the message, which is bit-identical to what the
+//! wire would have carried (the substitution contract in
+//! [`crate::comm::transport`]). Fallbacks and substitution mismatches
+//! are tallied in [`WireStats`] so a run that degraded to local
+//! computation is visible in the summary instead of silently passing.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::protocol::{decode, encode_data, ClusterMsg, Hello};
+use crate::comm::transport::Transport;
+use crate::comm::wire::{decode_sparse, encode_sparse, FRAME_OVERHEAD};
+use crate::compress::SparseVec;
+use crate::config::SocketKind;
+use crate::serve::protocol::{read_frame, write_frame, FrameIn, Stream};
+use crate::util::json::Json;
+
+/// How long the accept loop sleeps between polls, and the granularity
+/// at which blocked reads re-check their deadline.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Transport-layer counters (diagnostic — never part of the charged
+/// bit accounting).
+#[derive(Default)]
+pub struct WireStats {
+    frames_sent: AtomicU64,
+    frames_received: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    /// Receives that timed out / failed and used the local copy.
+    fallbacks: AtomicU64,
+    /// Received messages that differed from the local computation
+    /// (replica divergence — should stay 0).
+    mismatches: AtomicU64,
+    stale_drops: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+/// A point-in-time copy of [`WireStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireSnapshot {
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub fallbacks: u64,
+    pub mismatches: u64,
+    pub stale_drops: u64,
+    pub reconnects: u64,
+}
+
+impl WireSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("frames_sent", self.frames_sent)
+            .set("frames_received", self.frames_received)
+            .set("bytes_sent", self.bytes_sent)
+            .set("bytes_received", self.bytes_received)
+            .set("fallbacks", self.fallbacks)
+            .set("mismatches", self.mismatches)
+            .set("stale_drops", self.stale_drops)
+            .set("reconnects", self.reconnects)
+    }
+}
+
+impl WireStats {
+    fn snapshot(&self) -> WireSnapshot {
+        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        WireSnapshot {
+            frames_sent: get(&self.frames_sent),
+            frames_received: get(&self.frames_received),
+            bytes_sent: get(&self.bytes_sent),
+            bytes_received: get(&self.bytes_received),
+            fallbacks: get(&self.fallbacks),
+            mismatches: get(&self.mismatches),
+            stale_drops: get(&self.stale_drops),
+            reconnects: get(&self.reconnects),
+        }
+    }
+}
+
+fn bump(a: &AtomicU64) {
+    a.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Cloneable read access to a link layer's [`WireStats`].
+#[derive(Clone)]
+pub struct StatsHandle(Arc<Shared>);
+
+impl StatsHandle {
+    pub fn snapshot(&self) -> WireSnapshot {
+        self.0.stats.snapshot()
+    }
+}
+
+/// State shared between the engine thread and the accept thread.
+struct Shared {
+    /// Live streams by peer rank. The engine thread *removes* a stream
+    /// for I/O and puts it back afterwards; the accept thread inserts
+    /// (replacing — a fresh dial from a rejoined peer is authoritative).
+    streams: Mutex<HashMap<usize, Stream>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    stats: WireStats,
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+/// The per-process link layer: one listener plus one stream per peer.
+pub struct Links {
+    rank: usize,
+    n: usize,
+    sock_dir: PathBuf,
+    kind: SocketKind,
+    hello: Vec<u8>,
+    connect_timeout: Duration,
+    shared: Arc<Shared>,
+    accept: Option<thread::JoinHandle<()>>,
+    /// Files to unlink on drop (UDS socket / TCP addr advertisement).
+    cleanup: Vec<PathBuf>,
+}
+
+impl Links {
+    /// Bind rank `rank`'s listener under `<dir>/sock/` and start the
+    /// accept thread. `config` is the cluster's `config_hash`, pinned in
+    /// every handshake.
+    pub fn bind(
+        dir: &Path,
+        rank: usize,
+        n: usize,
+        kind: SocketKind,
+        host: &str,
+        config: &str,
+        connect_timeout: Duration,
+    ) -> Result<Links, String> {
+        if rank >= n || n < 2 {
+            return Err(format!("rank {rank} out of range for {n} nodes"));
+        }
+        let sock_dir = dir.join("sock");
+        std::fs::create_dir_all(&sock_dir)
+            .map_err(|e| format!("{}: {e}", sock_dir.display()))?;
+        let mut cleanup = Vec::new();
+        let listener = match kind {
+            SocketKind::Uds => {
+                #[cfg(unix)]
+                {
+                    let path = sock_path(&sock_dir, rank);
+                    if path.exists() {
+                        // A live socket here means another process owns
+                        // this rank; a dead one is debris from a crash.
+                        if UnixStream::connect(&path).is_ok() {
+                            return Err(format!("{}: endpoint busy", path.display()));
+                        }
+                        std::fs::remove_file(&path)
+                            .map_err(|e| format!("{}: {e}", path.display()))?;
+                    }
+                    let l = UnixListener::bind(&path)
+                        .map_err(|e| format!("{}: {e}", path.display()))?;
+                    cleanup.push(path);
+                    Listener::Unix(l)
+                }
+                #[cfg(not(unix))]
+                {
+                    return Err("uds cluster transport needs a unix platform".into());
+                }
+            }
+            SocketKind::Tcp => {
+                let l = TcpListener::bind((host, 0))
+                    .map_err(|e| format!("bind {host}:0: {e}"))?;
+                let addr = l.local_addr().map_err(|e| e.to_string())?;
+                let path = addr_path(&sock_dir, rank);
+                write_atomic(&path, addr.to_string().as_bytes())?;
+                cleanup.push(path);
+                Listener::Tcp(l)
+            }
+        };
+        let hello = Hello {
+            rank,
+            nodes: n,
+            config: config.to_string(),
+        }
+        .encode();
+        let shared = Arc::new(Shared {
+            streams: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            stats: WireStats::default(),
+        });
+        let accept = spawn_accept(listener, rank, n, config.to_string(), Arc::clone(&shared))?;
+        Ok(Links {
+            rank,
+            n,
+            sock_dir,
+            kind,
+            hello,
+            connect_timeout,
+            shared,
+            accept: Some(accept),
+            cleanup,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kind(&self) -> SocketKind {
+        self.kind
+    }
+
+    pub fn stats(&self) -> WireSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// A read handle onto the counters that outlives handing the links
+    /// to a [`SocketTransport`] (the node keeps one for its summary).
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle(Arc::clone(&self.shared))
+    }
+
+    /// For the pair `(self.rank, peer)`, is this process the dialer?
+    fn is_dialer(&self, peer: usize) -> bool {
+        self.rank < peer
+    }
+
+    /// Send one already-encoded payload to `peer`, best-effort: on a
+    /// dead stream the dialer side redials and the acceptor side waits
+    /// for a fresh dial, up to `connect_timeout`. Returns whether the
+    /// frame went out.
+    pub fn send_to(&self, peer: usize, payload: &[u8]) -> bool {
+        let deadline = Instant::now() + self.connect_timeout;
+        loop {
+            let Some(mut s) = self.take_stream(peer, deadline) else {
+                bump(&self.shared.stats.fallbacks);
+                return false;
+            };
+            match write_frame(&mut s, payload) {
+                Ok(()) => {
+                    bump(&self.shared.stats.frames_sent);
+                    self.shared
+                        .stats
+                        .bytes_sent
+                        .fetch_add((payload.len() + FRAME_OVERHEAD) as u64, Ordering::Relaxed);
+                    self.put_back(peer, s);
+                    return true;
+                }
+                Err(_) => {
+                    // Stream is dead (peer killed / rejoining): drop it
+                    // and let the loop re-establish or time out.
+                    bump(&self.shared.stats.reconnects);
+                    drop(s);
+                    if Instant::now() >= deadline {
+                        bump(&self.shared.stats.fallbacks);
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Receive sender `from`'s broadcast for round `t`. Returns the
+    /// sparse body bytes, or `None` after patience runs out (the caller
+    /// falls back to its local copy). Frames for earlier rounds are
+    /// stale deliveries (e.g. TCP buffering across a rejoin) and are
+    /// dropped; a frame from the *future* means this replica desynced,
+    /// which the fallback path also absorbs.
+    pub fn recv_data(&self, from: usize, t: u64) -> Option<Vec<u8>> {
+        let deadline = Instant::now() + self.connect_timeout;
+        loop {
+            let Some(mut s) = self.take_stream(from, deadline) else {
+                bump(&self.shared.stats.fallbacks);
+                return None;
+            };
+            let _ = s.set_read_timeout(Some(POLL));
+            let stop = || {
+                self.shared.stop.load(Ordering::Relaxed) || Instant::now() >= deadline
+            };
+            loop {
+                match read_frame(&mut s, &stop) {
+                    Ok(FrameIn::Msg(payload)) => match decode(&payload) {
+                        Ok(ClusterMsg::Data(msg)) if msg.from == from && msg.t == t => {
+                            bump(&self.shared.stats.frames_received);
+                            self.shared.stats.bytes_received.fetch_add(
+                                (payload.len() + FRAME_OVERHEAD) as u64,
+                                Ordering::Relaxed,
+                            );
+                            self.put_back(from, s);
+                            return Some(msg.body);
+                        }
+                        Ok(ClusterMsg::Data(msg)) if msg.t < t => {
+                            bump(&self.shared.stats.stale_drops);
+                        }
+                        Ok(ClusterMsg::Data(_)) => {
+                            // A future round: we cannot un-read it, so
+                            // surrender this round to the local copy.
+                            bump(&self.shared.stats.mismatches);
+                            bump(&self.shared.stats.fallbacks);
+                            self.put_back(from, s);
+                            return None;
+                        }
+                        // A re-handshake on a replaced stream; harmless.
+                        Ok(ClusterMsg::Hello(_)) => {}
+                        Err(_) => bump(&self.shared.stats.stale_drops),
+                    },
+                    Ok(FrameIn::Corrupt { fatal: false, .. }) => {}
+                    Ok(FrameIn::Corrupt { fatal: true, .. }) | Ok(FrameIn::Eof) | Err(_) => {
+                        bump(&self.shared.stats.reconnects);
+                        drop(s);
+                        break; // outer loop redials / waits for re-accept
+                    }
+                    Ok(FrameIn::Stopped) => {
+                        bump(&self.shared.stats.fallbacks);
+                        self.put_back(from, s);
+                        return None;
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                bump(&self.shared.stats.fallbacks);
+                return None;
+            }
+        }
+    }
+
+    /// Remove `peer`'s stream from the registry for exclusive I/O,
+    /// establishing it first if needed: dial (lower rank) or wait for
+    /// the peer's dial (higher rank).
+    fn take_stream(&self, peer: usize, deadline: Instant) -> Option<Stream> {
+        let mut map = self.shared.streams.lock().expect("streams lock");
+        loop {
+            if let Some(s) = map.remove(&peer) {
+                return Some(s);
+            }
+            if self.shared.stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if self.is_dialer(peer) {
+                drop(map);
+                return self.dial(peer, deadline);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            let (m, _) = self
+                .shared
+                .cv
+                .wait_timeout(map, POLL)
+                .expect("streams lock");
+            map = m;
+        }
+    }
+
+    /// Re-register a stream after I/O. If the accept thread installed a
+    /// fresh stream meanwhile (peer rejoined), the fresh one wins.
+    fn put_back(&self, peer: usize, s: Stream) {
+        let mut map = self.shared.streams.lock().expect("streams lock");
+        map.entry(peer).or_insert(s);
+        self.shared.cv.notify_all();
+    }
+
+    /// Connect to `peer`'s listener and shake hands, retrying until
+    /// `deadline` (the peer may still be binding, or mid-rejoin).
+    fn dial(&self, peer: usize, deadline: Instant) -> Option<Stream> {
+        loop {
+            if self.shared.stop.load(Ordering::Relaxed) || Instant::now() >= deadline {
+                return None;
+            }
+            if let Some(endpoint) = self.endpoint_of(peer) {
+                if let Ok(mut s) = Stream::connect(&endpoint) {
+                    if write_frame(&mut s, &self.hello).is_ok() {
+                        return Some(s);
+                    }
+                }
+            }
+            thread::sleep(POLL);
+        }
+    }
+
+    /// The `--socket`-style operand for `peer`'s listener.
+    fn endpoint_of(&self, peer: usize) -> Option<String> {
+        match self.kind {
+            SocketKind::Uds => Some(sock_path(&self.sock_dir, peer).display().to_string()),
+            SocketKind::Tcp => std::fs::read_to_string(addr_path(&self.sock_dir, peer))
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty()),
+        }
+    }
+
+    /// Stop the accept thread and close everything.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.streams.lock().expect("streams lock").clear();
+        for p in self.cleanup.drain(..) {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for Links {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn sock_path(sock_dir: &Path, rank: usize) -> PathBuf {
+    sock_dir.join(format!("node-{rank}.sock"))
+}
+
+fn addr_path(sock_dir: &Path, rank: usize) -> PathBuf {
+    sock_dir.join(format!("node-{rank}.addr"))
+}
+
+/// Write via tmp + rename so readers never see a torn file.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Accept loop: validate each dialer's handshake against this cluster's
+/// shape before admitting the stream. A peer from a different config or
+/// node count is refused (dropped) — it will keep redialing and failing
+/// loudly rather than corrupting the run.
+fn spawn_accept(
+    listener: Listener,
+    rank: usize,
+    n: usize,
+    config: String,
+    shared: Arc<Shared>,
+) -> Result<thread::JoinHandle<()>, String> {
+    match &listener {
+        Listener::Tcp(l) => l.set_nonblocking(true).map_err(|e| e.to_string())?,
+        #[cfg(unix)]
+        Listener::Unix(l) => l.set_nonblocking(true).map_err(|e| e.to_string())?,
+    }
+    thread::Builder::new()
+        .name(format!("accept-{rank}"))
+        .spawn(move || {
+            while !shared.stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok(mut s) => {
+                        if let Some(peer) = admit(&mut s, rank, n, &config, &shared) {
+                            let mut map = shared.streams.lock().expect("streams lock");
+                            map.insert(peer, s);
+                            shared.cv.notify_all();
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(POLL),
+                    Err(_) => thread::sleep(POLL),
+                }
+            }
+        })
+        .map_err(|e| format!("spawn accept thread: {e}"))
+}
+
+/// Read + check the Hello on a fresh connection; `Some(peer_rank)` if
+/// the dialer belongs to this cluster.
+fn admit(s: &mut Stream, rank: usize, n: usize, config: &str, shared: &Shared) -> Option<usize> {
+    let _ = s.set_read_timeout(Some(POLL));
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let stop = || shared.stop.load(Ordering::Relaxed) || Instant::now() >= deadline;
+    match read_frame(s, &stop) {
+        Ok(FrameIn::Msg(payload)) => match decode(&payload) {
+            // The dialer is always the lower rank of the pair.
+            Ok(ClusterMsg::Hello(h))
+                if h.nodes == n && h.config == config && h.rank < rank =>
+            {
+                Some(h.rank)
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// The [`Transport`] the cluster node installs on its engine: rank r's
+/// own broadcasts go out as frames; neighbors' broadcasts are received,
+/// decoded, and substituted for the locally computed copy. During a
+/// rejoin's checkpoint replay (`t < mute_until`) the node is down in
+/// every replica's fault plan, so the transport goes silent — no sends,
+/// no receives — and the replay is pure local recomputation.
+pub struct SocketTransport {
+    links: Links,
+    mute_until: u64,
+}
+
+impl SocketTransport {
+    pub fn new(links: Links, mute_until: u64) -> SocketTransport {
+        SocketTransport { links, mute_until }
+    }
+
+    pub fn stats(&self) -> WireSnapshot {
+        self.links.stats()
+    }
+
+    pub fn links_mut(&mut self) -> &mut Links {
+        &mut self.links
+    }
+}
+
+impl Transport for SocketTransport {
+    fn exchange(
+        &mut self,
+        t: u64,
+        from: usize,
+        q: &SparseVec,
+        d: usize,
+        neighbors: &[usize],
+    ) -> Option<SparseVec> {
+        if t < self.mute_until {
+            return None;
+        }
+        let rank = self.links.rank();
+        if from == rank {
+            let payload = encode_data(t, from, &encode_sparse(q, d));
+            for &p in neighbors {
+                if p != rank {
+                    self.links.send_to(p, &payload);
+                }
+            }
+            return None;
+        }
+        if !neighbors.contains(&rank) {
+            return None;
+        }
+        let body = self.links.recv_data(from, t)?;
+        match decode_sparse(&body, d) {
+            Ok(received) => {
+                if &received != q {
+                    // Replica divergence: substitute the sender's copy
+                    // (what physically happened) and surface the drift.
+                    bump(&self.links.shared.stats.mismatches);
+                }
+                Some(received)
+            }
+            Err(_) => {
+                bump(&self.links.shared.stats.fallbacks);
+                None
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} rank {}/{}",
+            self.links.kind().as_str(),
+            self.links.rank(),
+            self.links.n()
+        )
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let pid = std::process::id();
+        let d = std::env::temp_dir().join(format!("sparq-links-{tag}-{pid}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).expect("mkdir");
+        d
+    }
+
+    fn pair(dir: &Path, timeout: Duration) -> (Links, Links) {
+        let mk = |rank| {
+            Links::bind(dir, rank, 2, SocketKind::Uds, "127.0.0.1", "cfg", timeout)
+                .expect("bind")
+        };
+        (mk(0), mk(1))
+    }
+
+    #[test]
+    fn broadcasts_cross_the_socket_both_directions() {
+        let dir = tmp_dir("xchg");
+        let (a, b) = pair(&dir, Duration::from_secs(10));
+        let d = 32;
+        let mut q0 = SparseVec::new();
+        q0.push(1, 0.5);
+        q0.push(30, -4.0);
+        let mut q1 = SparseVec::new();
+        q1.push(7, 2.25);
+        let b0 = encode_sparse(&q0, d);
+        let b1 = encode_sparse(&q1, d);
+        // rank 0 (dialer) → rank 1 and back on the same stream, for a
+        // few rounds to exercise stream reuse.
+        let (b0a, b1a) = (b0.clone(), b1.clone());
+        let h = thread::spawn(move || {
+            for t in 0..3u64 {
+                assert!(a.send_to(1, &encode_data(t, 0, &b0a)));
+                assert_eq!(a.recv_data(1, t).expect("recv from 1"), b1a);
+            }
+            a.stats()
+        });
+        for t in 0..3u64 {
+            assert_eq!(b.recv_data(0, t).expect("recv from 0"), b0);
+            assert!(b.send_to(0, &encode_data(t, 1, &b1)));
+        }
+        let sa = h.join().expect("join");
+        assert_eq!(sa.fallbacks, 0);
+        assert_eq!(b.stats().fallbacks, 0);
+        assert!(sa.frames_sent >= 3);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_frames_are_dropped_and_missing_peers_fall_back() {
+        let dir = tmp_dir("stale");
+        let (a, b) = pair(&dir, Duration::from_millis(400));
+        let d = 8;
+        let mut q = SparseVec::new();
+        q.push(2, 1.0);
+        let body = encode_sparse(&q, d);
+        // Send rounds 0 and 1; the receiver asks for round 1 and must
+        // skip the stale round-0 frame.
+        let h = thread::spawn({
+            let p0 = encode_data(0, 0, &body);
+            let p1 = encode_data(1, 0, &body);
+            move || {
+                assert!(a.send_to(1, &p0));
+                assert!(a.send_to(1, &p1));
+                a
+            }
+        });
+        assert_eq!(b.recv_data(0, 1).expect("round 1"), body);
+        let a = h.join().expect("join");
+        assert_eq!(b.stats().stale_drops, 1);
+        drop(a);
+        // After a's listener is gone, b (acceptor side for peer 0)
+        // times out waiting for a dial.
+        assert!(b.recv_data(0, 2).is_none());
+        assert!(b.stats().fallbacks >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn socket_transport_substitutes_the_received_copy() {
+        let dir = tmp_dir("transport");
+        let (a, b) = pair(&dir, Duration::from_secs(10));
+        let d = 16;
+        let mut q = SparseVec::new();
+        q.push(3, -1.5);
+        q.push(15, 0.25);
+        let q_for_sender = q.clone();
+        let h = thread::spawn(move || {
+            let mut ta = SocketTransport::new(a, 0);
+            // Sender role: returns None, frame goes out.
+            assert!(ta.exchange(5, 0, &q_for_sender, d, &[1]).is_none());
+            ta
+        });
+        let mut tb = SocketTransport::new(b, 0);
+        // Receiver role: substitution returns the decoded copy, equal
+        // bit-for-bit to the local one.
+        let got = tb.exchange(5, 0, &q, d, &[1]).expect("substitute");
+        assert_eq!(got, q);
+        assert_eq!(tb.stats().mismatches, 0);
+        // Bystander role and muted replay return None without I/O.
+        assert!(tb.exchange(5, 0, &q, d, &[]).is_none());
+        let mdir = tmp_dir("muted");
+        let mut muted = SocketTransport::new(
+            Links::bind(
+                &mdir,
+                0,
+                2,
+                SocketKind::Uds,
+                "127.0.0.1",
+                "cfg",
+                Duration::from_millis(100),
+            )
+            .expect("bind"),
+            10,
+        );
+        assert!(muted.exchange(3, 1, &q, d, &[0]).is_none());
+        assert_eq!(muted.stats().fallbacks, 0);
+        drop(muted);
+        let ta = h.join().expect("join");
+        assert!(ta.describe().starts_with("uds rank 0/2"));
+        drop(ta);
+        drop(tb);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&mdir);
+    }
+}

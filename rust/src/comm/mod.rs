@@ -21,10 +21,12 @@
 
 pub mod fault;
 pub mod link;
+pub mod transport;
 pub mod wire;
 
 pub use fault::{FaultCounters, FaultPlan};
 pub use link::LinkModel;
+pub use transport::{LocalTransport, Transport};
 
 /// Per-round and cumulative communication accounting.
 #[derive(Clone, Debug, Default)]

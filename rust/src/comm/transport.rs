@@ -1,0 +1,91 @@
+//! The transport seam between the engine and the world.
+//!
+//! Every sync round, the engine's update rule walks the fired nodes in
+//! deterministic order and applies each broadcast to the replicated
+//! state. In-process that is the whole story: the [`Bus`] charges the
+//! bits and the message never exists as bytes. The cluster runtime
+//! (`crate::cluster`) runs the *same* engine in N OS processes — every
+//! process holds a full replica of the deterministic n-node state, and
+//! the only thing that must physically travel is each rank's own
+//! broadcast. [`Transport`] is that seam:
+//!
+//! * [`LocalTransport`] (the default) does nothing — the engine is
+//!   exactly the in-process simulator, bit for bit.
+//! * `cluster::SocketTransport` sends rank r's broadcast as a CRC-framed
+//!   `comm::wire::encode_sparse` payload to its live neighbors and, for
+//!   a neighbor's broadcast, receives + decodes the frame and returns
+//!   the decoded message for *substitution* into the local replica.
+//!
+//! The substitution contract is what makes the socket runtime
+//! bit-identical to the simulator: `decode_sparse(encode_sparse(q)) ==
+//! q` exactly (f32 bits round-trip losslessly — pinned by the wire
+//! tests), so substituting the received copy changes nothing except
+//! that the bytes really crossed a socket. Charged bits stay
+//! `Compressor::message_bits` — the frame's 8-byte CRC armor is
+//! transport overhead, accounted separately by the socket layer.
+//!
+//! [`Bus`]: crate::comm::Bus
+
+use crate::compress::SparseVec;
+
+/// How a sync-round broadcast physically travels (see module docs).
+///
+/// Called once per *transmitting* node per sync round, in the
+/// deterministic node order of the update rule's charge loop, with the
+/// live-subgraph neighbor list in force at `t`. The implementation
+/// decides its role from `from`:
+///
+/// * `from == self rank` ⇒ send `q` to every neighbor; return `None`.
+/// * `self rank ∈ neighbors` ⇒ receive sender `from`'s copy; return
+///   `Some(decoded)` to substitute it for the locally computed `q`
+///   (or `None` to fall back to the local copy).
+/// * otherwise ⇒ not an edge this process participates in; return
+///   `None` (the local replica already computed the message).
+pub trait Transport: Send {
+    /// Exchange one broadcast (see trait docs). `d` is the model
+    /// dimension the sparse codec needs for index widths.
+    fn exchange(
+        &mut self,
+        t: u64,
+        from: usize,
+        q: &SparseVec,
+        d: usize,
+        neighbors: &[usize],
+    ) -> Option<SparseVec>;
+
+    /// Human-readable description for logs.
+    fn describe(&self) -> String {
+        "local".into()
+    }
+}
+
+/// The in-process no-op transport: every message stays a local
+/// computation over the in-memory state, exactly as before the
+/// transport seam existed.
+pub struct LocalTransport;
+
+impl Transport for LocalTransport {
+    fn exchange(
+        &mut self,
+        _t: u64,
+        _from: usize,
+        _q: &SparseVec,
+        _d: usize,
+        _neighbors: &[usize],
+    ) -> Option<SparseVec> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_transport_never_substitutes() {
+        let mut t = LocalTransport;
+        let q = SparseVec::from_dense(&[0.0, 1.5, 0.0, -2.0]);
+        assert!(t.exchange(7, 0, &q, 4, &[1, 2]).is_none());
+        assert_eq!(t.describe(), "local");
+    }
+}

@@ -22,9 +22,9 @@ pub mod specs;
 pub use error::ConfigError;
 pub use resolved::{GammaMode, ResolvedConfig};
 pub use specs::{
-    CompressorKind, CompressorSpec, Family, FamilySpec, FaultSpec, KSpec, LinkSpec, LrSpec,
-    ProblemKind, ProblemSpec, ScheduleKindSpec, ScheduleSpec, SyncSpec, TopologySpec,
-    TriggerSpec,
+    ClusterSpec, CompressorKind, CompressorSpec, Family, FamilySpec, FaultSpec, KSpec, LinkSpec,
+    LrSpec, ProblemKind, ProblemSpec, ScheduleKindSpec, ScheduleSpec, SocketKind, SyncSpec,
+    TopologySpec, TriggerSpec,
 };
 
 use crate::util::json::Json;
@@ -86,6 +86,11 @@ pub struct ExperimentConfig {
     /// Omitted from the JSON form when default, so pre-family configs
     /// hash identically.
     pub family: FamilySpec,
+    /// Multi-process deployment knobs for `sparq cluster` (socket kind,
+    /// lease/heartbeat/connect timings). Pure deployment — it cannot
+    /// change what the run computes, so `config_hash` normalizes it away
+    /// and the JSON form omits it when default.
+    pub cluster: ClusterSpec,
     pub compressor: CompressorSpec,
     pub trigger: TriggerSpec,
     pub lr: LrSpec,
@@ -120,6 +125,7 @@ impl Default for ExperimentConfig {
             link: LinkSpec::ideal(),
             fault: FaultSpec::none(),
             family: FamilySpec::sparq(),
+            cluster: ClusterSpec::uds(),
             compressor: CompressorSpec::sign_top_k_pct(10.0),
             trigger: TriggerSpec::constant(100.0),
             lr: LrSpec::inv_time(100.0, 1.0),
@@ -163,10 +169,15 @@ impl ExperimentConfig {
         } else {
             j.set("fault", self.fault.to_json())
         };
-        if self.family.is_default() {
+        let j = if self.family.is_default() {
             j
         } else {
             j.set("family", self.family.to_json())
+        };
+        if self.cluster.is_default() {
+            j
+        } else {
+            j.set("cluster", self.cluster.to_json())
         }
     }
 
@@ -184,6 +195,7 @@ impl ExperimentConfig {
         "h",
         "fault",
         "family",
+        "cluster",
         "steps",
         "eval_every",
         "momentum",
@@ -279,6 +291,7 @@ impl ExperimentConfig {
             link: spec(j, "link", &base.link, LinkSpec::from_json)?,
             fault: spec(j, "fault", &base.fault, FaultSpec::from_json)?,
             family: spec(j, "family", &base.family, FamilySpec::from_json)?,
+            cluster: spec(j, "cluster", &base.cluster, ClusterSpec::from_json)?,
             compressor: spec(j, "compressor", &base.compressor, CompressorSpec::from_json)?,
             trigger: spec(j, "trigger", &base.trigger, TriggerSpec::from_json)?,
             lr: spec(j, "lr", &base.lr, LrSpec::from_json)?,
@@ -521,6 +534,39 @@ mod tests {
         let j = Json::parse(r#"{"family": {"kind": "squarm", "beta": 0.5}}"#).unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(cfg.family.as_str(), "squarm:0.5");
+    }
+
+    #[test]
+    fn cluster_field_roundtrips_but_defaults_stay_byte_identical() {
+        // default deployment ⇒ no "cluster" key (hash compatibility)
+        let dflt = ExperimentConfig::default();
+        assert!(!dflt.to_json().to_string().contains("cluster"));
+        // non-default ⇒ emitted, and roundtrips
+        let cfg = ExperimentConfig {
+            cluster: "tcp@127.0.0.1:8:2".into(),
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string();
+        assert!(text.contains(r#""cluster":"tcp@127.0.0.1:8:2""#), "{text}");
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // explicit "uds" parses to the default (and re-serializes away)
+        let j = Json::parse(r#"{"cluster": "uds"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, ExperimentConfig::default());
+        // invalid specs fail at the boundary with the field named
+        let j = Json::parse(r#"{"cluster": "udp"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert_eq!(err.field(), Some("cluster"), "{err}");
+        // deployment must not change the run identity
+        let deployed = ExperimentConfig {
+            cluster: "tcp:9:3".into(),
+            ..Default::default()
+        };
+        assert_eq!(
+            crate::sweep::spec::config_hash(&deployed),
+            crate::sweep::spec::config_hash(&ExperimentConfig::default()),
+        );
     }
 
     #[test]

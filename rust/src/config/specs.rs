@@ -1614,6 +1614,212 @@ impl ProblemSpec {
     }
 }
 
+// ---------------------------------------------------------------------
+// ClusterSpec
+// ---------------------------------------------------------------------
+
+/// Which socket family a `sparq cluster` deployment exchanges frames
+/// over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SocketKind {
+    /// Unix domain sockets under the cluster directory (the default;
+    /// single-host deployments, no ports to allocate).
+    Uds,
+    /// Loopback/LAN TCP; each node binds an OS-assigned port and
+    /// advertises it through the cluster directory.
+    Tcp,
+}
+
+impl SocketKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SocketKind::Uds => "uds",
+            SocketKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Typed cluster-deployment spec: `uds`, `tcp`, or `tcp@HOST`, each
+/// optionally followed by `:LEASE[:HEARTBEAT[:CONNECT]]` (seconds).
+///
+/// Deployment knobs only — socket family, membership-lease timings,
+/// dial patience. None of them can change what the run computes (the
+/// cluster runtime is pinned bit-identical to the in-process engine),
+/// so `config_hash` normalizes the field away: the same experiment
+/// hashes identically whether it runs in-process or as N processes.
+/// Omitted from the JSON form when default, so pre-cluster configs keep
+/// their exact serialized bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    raw: String,
+    kind: SocketKind,
+    host: String,
+    lease_secs: f64,
+    heartbeat_secs: f64,
+    connect_timeout_secs: f64,
+}
+
+spec_string_json!(ClusterSpec);
+spec_common!(ClusterSpec, "bad cluster spec");
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec::uds()
+    }
+}
+
+impl ClusterSpec {
+    /// The default deployment: Unix domain sockets, lease 5 s,
+    /// heartbeat 1 s, connect patience 30 s.
+    pub fn uds() -> Self {
+        "uds".parse().expect("static spec")
+    }
+
+    pub fn kind(&self) -> SocketKind {
+        self.kind
+    }
+
+    /// TCP bind/advertise host (ignored for UDS).
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    /// Membership-lease duration: a node claim older than this is dead.
+    pub fn lease_secs(&self) -> f64 {
+        self.lease_secs
+    }
+
+    /// Claim-heartbeat cadence (must stay well under the lease).
+    pub fn heartbeat_secs(&self) -> f64 {
+        self.heartbeat_secs
+    }
+
+    /// How long dial/accept waits for a peer before giving up (covers
+    /// respawn + checkpoint replay of a killed node).
+    pub fn connect_timeout_secs(&self) -> f64 {
+        self.connect_timeout_secs
+    }
+
+    pub fn is_default(&self) -> bool {
+        *self == ClusterSpec::default()
+    }
+
+    fn parse_spec(s: &str) -> Result<Self, ConfigError> {
+        const FIELD: &str = "cluster";
+        let usage = "uds, tcp, or tcp@HOST, optionally :LEASE[:HEARTBEAT[:CONNECT]] seconds";
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let (kind, host) = if head == "uds" {
+            (SocketKind::Uds, String::new())
+        } else if head == "tcp" {
+            (SocketKind::Tcp, "127.0.0.1".to_string())
+        } else if let Some(host) = head.strip_prefix("tcp@") {
+            if host.is_empty() {
+                return Err(ConfigError::value(FIELD, s, "tcp@ needs a host").suggest(usage));
+            }
+            (SocketKind::Tcp, host.to_string())
+        } else {
+            return Err(ConfigError::value(FIELD, s, "unknown socket kind").suggest(usage));
+        };
+        let secs = |what: &str, v: &str| -> Result<f64, ConfigError> {
+            let x: f64 = v.parse().map_err(|_| {
+                ConfigError::value(FIELD, s, format!("{what} {v:?} is not a number"))
+            })?;
+            if !x.is_finite() || x <= 0.0 {
+                return Err(ConfigError::value(
+                    FIELD,
+                    s,
+                    format!("{what} must be a positive number of seconds, got {x}"),
+                ));
+            }
+            Ok(x)
+        };
+        let lease_secs = parts.next().map(|v| secs("lease", v)).transpose()?.unwrap_or(5.0);
+        let heartbeat_secs = parts
+            .next()
+            .map(|v| secs("heartbeat", v))
+            .transpose()?
+            .unwrap_or(1.0);
+        let connect_timeout_secs = parts
+            .next()
+            .map(|v| secs("connect timeout", v))
+            .transpose()?
+            .unwrap_or(30.0);
+        if parts.next().is_some() {
+            return Err(ConfigError::value(FIELD, s, "too many segments").suggest(usage));
+        }
+        if heartbeat_secs >= lease_secs {
+            return Err(ConfigError::value(
+                FIELD,
+                s,
+                format!(
+                    "heartbeat ({heartbeat_secs}s) must be shorter than the lease ({lease_secs}s)"
+                ),
+            ));
+        }
+        Ok(ClusterSpec {
+            raw: s.to_string(),
+            kind,
+            host,
+            lease_secs,
+            heartbeat_secs,
+            connect_timeout_secs,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        match j {
+            Json::Str(s) => s.parse(),
+            Json::Obj(_) => {
+                check_obj_keys(
+                    "cluster",
+                    j,
+                    &["kind", "host", "lease", "heartbeat", "connect"],
+                )?;
+                let kind = obj_kind("cluster", j)?;
+                let mut spec = match (kind.as_str(), j.get("host").and_then(Json::as_str)) {
+                    ("uds", None) => "uds".to_string(),
+                    ("uds", Some(_)) => {
+                        return Err(ConfigError::value(
+                            "cluster",
+                            j.to_string(),
+                            "uds takes no host",
+                        ))
+                    }
+                    ("tcp", None) => "tcp".to_string(),
+                    ("tcp", Some(host)) => format!("tcp@{host}"),
+                    (other, _) => {
+                        return Err(ConfigError::value(
+                            "cluster",
+                            j.to_string(),
+                            format!("unknown socket kind {other:?}"),
+                        ))
+                    }
+                };
+                let timing: Vec<Option<f64>> = ["lease", "heartbeat", "connect"]
+                    .iter()
+                    .map(|k| j.get(k).and_then(Json::as_f64))
+                    .collect();
+                if timing.iter().any(Option::is_some) {
+                    // Positional segments: later knobs force earlier
+                    // ones to their defaults when unspecified.
+                    let defaults = [5.0, 1.0, 30.0];
+                    let last = timing.iter().rposition(Option::is_some).expect("any some");
+                    for (slot, dflt) in timing.iter().zip(defaults).take(last + 1) {
+                        spec.push_str(&format!(":{}", fmt_f64(slot.unwrap_or(dflt))));
+                    }
+                }
+                spec.parse()
+            }
+            other => Err(ConfigError::value(
+                "cluster",
+                other.to_string(),
+                "expected a spec string or object",
+            )),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1867,5 +2073,52 @@ mod tests {
     #[should_panic(expected = "bad trigger spec")]
     fn from_str_panics_preserve_legacy_messages() {
         let _: TriggerSpec = "poly:2:1.5".into();
+    }
+
+    #[test]
+    fn cluster_specs_parse_and_roundtrip() {
+        let dflt = ClusterSpec::default();
+        assert_eq!(dflt.as_str(), "uds");
+        assert!(dflt.is_default());
+        assert_eq!(dflt.kind(), SocketKind::Uds);
+        assert_eq!(dflt.lease_secs(), 5.0);
+        assert_eq!(dflt.heartbeat_secs(), 1.0);
+        assert_eq!(dflt.connect_timeout_secs(), 30.0);
+
+        let c = ClusterSpec::from_str("tcp@10.0.0.5:8:2:60").unwrap();
+        assert_eq!(c.kind(), SocketKind::Tcp);
+        assert_eq!(c.host(), "10.0.0.5");
+        assert_eq!(c.lease_secs(), 8.0);
+        assert_eq!(c.heartbeat_secs(), 2.0);
+        assert_eq!(c.connect_timeout_secs(), 60.0);
+        assert!(!c.is_default());
+        assert_eq!(c.to_json(), Json::Str("tcp@10.0.0.5:8:2:60".into()));
+
+        let c = ClusterSpec::from_str("tcp").unwrap();
+        assert_eq!(c.host(), "127.0.0.1");
+        let c = ClusterSpec::from_str("uds:10").unwrap();
+        assert_eq!(c.lease_secs(), 10.0);
+        assert_eq!(c.heartbeat_secs(), 1.0);
+
+        // rejections: bad kind, bare host, non-positive timings,
+        // heartbeat >= lease, trailing garbage
+        assert!(ClusterSpec::from_str("udp").is_err());
+        assert!(ClusterSpec::from_str("tcp@").is_err());
+        assert!(ClusterSpec::from_str("uds:0").is_err());
+        assert!(ClusterSpec::from_str("uds:5:-1").is_err());
+        assert!(ClusterSpec::from_str("uds:5:5").is_err());
+        assert!(ClusterSpec::from_str("uds:5:1:30:9").is_err());
+        let err = ClusterSpec::from_str("what").unwrap_err();
+        assert_eq!(err.field(), Some("cluster"), "{err}");
+
+        // JSON object form
+        let j = Json::parse(r#"{"kind":"tcp","host":"h","lease":6}"#).unwrap();
+        assert_eq!(ClusterSpec::from_json(&j).unwrap().as_str(), "tcp@h:6");
+        let j = Json::parse(r#"{"kind":"uds","heartbeat":2}"#).unwrap();
+        let c = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(c.as_str(), "uds:5:2");
+        assert_eq!(c.lease_secs(), 5.0);
+        let j = Json::parse(r#"{"kind":"uds","host":"nope"}"#).unwrap();
+        assert!(ClusterSpec::from_json(&j).is_err());
     }
 }

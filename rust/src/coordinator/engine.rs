@@ -49,6 +49,7 @@ use super::consensus::NeighborAccumulator;
 use super::node::NodeState;
 use super::{gradient_phase, DecentralizedAlgo};
 use crate::comm::link::LinkModel;
+use crate::comm::transport::{LocalTransport, Transport};
 use crate::comm::{Bus, FaultCounters, FaultPlan};
 use crate::compress::Compressor;
 use crate::graph::dynamic::TopologySchedule;
@@ -172,11 +173,15 @@ pub trait UpdateRule: Send {
     fn local_half_step(&self) -> bool;
 
     /// Run the communication + parameter commit of one sync round.
+    /// `transport` is the physical seam for broadcasts
+    /// (`comm::transport` — the default [`LocalTransport`] is a no-op
+    /// and reproduces the in-process simulator bit for bit).
     fn sync_round(
         &mut self,
         ctx: &SyncCtx<'_>,
         nodes: &mut [NodeState],
         bus: &mut Bus,
+        transport: &mut dyn Transport,
     ) -> SyncOutcome;
 
     /// Rebuild topology-derived internal state after a mixing switch.
@@ -270,6 +275,7 @@ impl UpdateRule for EstimateTracking {
         ctx: &SyncCtx<'_>,
         nodes: &mut [NodeState],
         bus: &mut Bus,
+        transport: &mut dyn Transport,
     ) -> SyncOutcome {
         // Algorithm 1 lines 7–9: trigger check and (if fired) compress,
         // all against the *pre-update* x̂ bank — parallel across nodes.
@@ -344,6 +350,16 @@ impl UpdateRule for EstimateTracking {
                 continue;
             }
             out.fired += 1;
+            // Physical seam: over a socket transport this sends rank
+            // i's own broadcast as real frame bytes and, for a
+            // neighbor's broadcast, substitutes the received + decoded
+            // copy (bit-identical to the local one — the sparse codec
+            // is lossless) before it is charged and applied.
+            if let Some(sub) =
+                transport.exchange(ctx.t, i, &nodes[i].q, d, &ctx.mixing.topology.neighbors[i])
+            {
+                nodes[i].q = sub;
+            }
             let q = &nodes[i].q;
             let bits = ctx.compressor.message_bits(d, q.nnz());
             if !filtered {
@@ -476,6 +492,7 @@ impl UpdateRule for ExactAveraging {
         ctx: &SyncCtx<'_>,
         nodes: &mut [NodeState],
         bus: &mut Bus,
+        _transport: &mut dyn Transport,
     ) -> SyncOutcome {
         let d = nodes[0].x.len();
         let bits = 32 * d as u64;
@@ -646,6 +663,10 @@ pub struct DecentralizedEngine {
     stale_off: Vec<usize>,
     /// Cumulative crash / resync / corrupt-discard counters.
     counters: FaultCounters,
+    /// Physical broadcast seam (default: the no-op [`LocalTransport`];
+    /// the cluster runtime installs a `SocketTransport` so each sync
+    /// round's messages really cross a UDS/TCP socket).
+    transport: Box<dyn Transport>,
     nodes: Vec<NodeState>,
     /// Worker pool for the per-node phases (workers = 1 ⇒ sequential;
     /// results are bit-identical for any worker count).
@@ -688,6 +709,7 @@ impl DecentralizedEngine {
             stale: Vec::new(),
             stale_off: Vec::new(),
             counters: FaultCounters::default(),
+            transport: Box::new(LocalTransport),
             nodes,
             pool: ThreadPool::new(1),
             spectral,
@@ -699,6 +721,13 @@ impl DecentralizedEngine {
     /// Install a link-fault model (default: [`LinkModel::ideal`]).
     pub fn set_link(&mut self, link: LinkModel) {
         self.link = link;
+    }
+
+    /// Install a broadcast transport (default: [`LocalTransport`]).
+    /// The cluster runtime hangs its `SocketTransport` here so sync
+    /// rounds exchange real frames; the algorithm code is unchanged.
+    pub fn install_transport(&mut self, transport: Box<dyn Transport>) {
+        self.transport = transport;
     }
 
     /// Install a topology schedule (default: [`TopologySchedule::fixed`]).
@@ -950,7 +979,9 @@ impl DecentralizedAlgo for DecentralizedEngine {
                 down: &self.down,
                 pool: &self.pool,
             };
-            let out = self.rule.sync_round(&ctx, &mut self.nodes, bus);
+            let out = self
+                .rule
+                .sync_round(&ctx, &mut self.nodes, bus, self.transport.as_mut());
             let live = self.down.iter().filter(|&&dn| !dn).count();
             self.total_checks += live as u64;
             self.total_fired += out.fired as u64;
@@ -1075,6 +1106,10 @@ impl DecentralizedAlgo for DecentralizedEngine {
 
     fn set_workers(&mut self, workers: usize) {
         self.pool = ThreadPool::new(workers);
+    }
+
+    fn set_transport(&mut self, transport: Box<dyn Transport>) {
+        self.install_transport(transport);
     }
 
     fn n(&self) -> usize {

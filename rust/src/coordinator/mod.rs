@@ -190,6 +190,13 @@ pub trait DecentralizedAlgo {
     /// without parallel phases.
     fn set_workers(&mut self, _workers: usize) {}
 
+    /// Install a broadcast transport (`comm::transport`) so sync-round
+    /// messages cross a real socket instead of staying in-memory — the
+    /// cluster runtime's hook. Default: no-op (dropping the transport is
+    /// correct for algorithms without a communication phase; the engine
+    /// overrides this).
+    fn set_transport(&mut self, _transport: Box<dyn crate::comm::Transport>) {}
+
     /// Number of nodes.
     fn n(&self) -> usize;
 
@@ -302,6 +309,9 @@ macro_rules! forward_decentralized_algo {
         }
         fn set_workers(&mut self, workers: usize) {
             (**self).set_workers(workers)
+        }
+        fn set_transport(&mut self, transport: Box<dyn crate::comm::Transport>) {
+            (**self).set_transport(transport)
         }
         fn n(&self) -> usize {
             (**self).n()

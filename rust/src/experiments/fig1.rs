@@ -69,6 +69,18 @@ pub fn convex_suite(steps: u64, seed: u64) -> Vec<(String, ExperimentConfig)> {
         .expect("fig1 convex spec expands")
 }
 
+/// One SPARQ point of the Fig 1a/1b grid at a chosen node count — the
+/// cluster runtime's identity checks run this config both in-process
+/// and as one OS process per node (`nodes` must fit the machine, so the
+/// n = 60 preset is scaled down rather than reused).
+pub fn convex_point(nodes: usize, steps: u64, seed: u64) -> ExperimentConfig {
+    let mut cfg = presets::convex_sparq(steps);
+    cfg.name = format!("fig1-convex-point-n{nodes}");
+    cfg.nodes = nodes;
+    cfg.seed = seed;
+    cfg
+}
+
 /// The Fig 1c/1d grid as a declarative sweep spec (non-convex, momentum
 /// 0.9).
 pub fn nonconvex_spec(

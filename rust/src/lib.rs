@@ -40,6 +40,12 @@
 //!   Unix/TCP socket (CRC-framed JSON), admission control, priority
 //!   scheduling onto the claim/lease worker pool, live event streaming
 //!   to subscribers, crash-safe exactly-once restart takeover.
+//! * [`cluster`] — the real multi-process decentralized runtime: a
+//!   `sparq cluster` launcher spawns one OS process per node; processes
+//!   exchange the `comm::wire` sparse codecs as CRC-framed messages
+//!   over UDS/TCP behind the engine's transport seam, with claim-lease
+//!   membership, real `SIGKILL` crash windows, and checkpoint-restore
+//!   rejoin — lockstep runs are bit-identical to the in-process engine.
 //! * [`util`] — offline-environment substrates: deterministic RNG, JSON,
 //!   CLI parsing, stats, bench harness helpers.
 
@@ -59,6 +65,7 @@ pub mod run;
 pub mod experiments;
 pub mod sweep;
 pub mod serve;
+pub mod cluster;
 pub mod runtime;
 
 /// Crate version (mirrors Cargo.toml).

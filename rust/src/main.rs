@@ -20,14 +20,28 @@
 //!   serve    --socket sock --out results/       long-lived sweep daemon:
 //!            [--workers N --checkpoint-every C  typed spec submission over
 //!             --lease-secs S --poll-ms P        a Unix/TCP socket, priority
-//!             --lease-margin-secs M --quiet]    scheduling, event streaming,
-//!                                               exactly-once restart takeover
+//!             --lease-margin-secs M             scheduling, event streaming,
+//!             --jobs-retain N --auth-token T    exactly-once restart takeover;
+//!             --quiet]                          retention GC of settled job
+//!                                               files; optional token auth
 //!   submit   --socket sock --spec spec.json     submit a spec to a daemon
 //!            [--priority P --wait]              (--wait streams until done)
 //!   watch    --socket sock [--job J --tail]     stream daemon events (JSONL)
 //!   status   --socket sock                      live daemon queue + claim
 //!                                               tables (remote status)
+//!   cancel   --socket sock --job J              release a job's queued runs
+//!                                               (running ones finish; the
+//!                                               cancel survives restarts)
 //!   shutdown --socket sock                      stop a daemon gracefully
+//!            (submit/watch/status/cancel/shutdown also take --auth-token T
+//!             when the daemon requires it)
+//!   cluster  --dir /shared/c1 [config flags     real multi-process run: one
+//!            --checkpoint-every C --verify       OS process per node over
+//!            --timeout-secs S --quiet]           UDS/TCP (see --cluster spec);
+//!                                               lockstep runs are bit-identical
+//!                                               to in-process; fault-plan crash
+//!                                               windows become real SIGKILLs +
+//!                                               checkpoint-restore rejoins
 //!   fig1a|fig1b                                 convex suite (Fig 1a/1b)
 //!   fig1c|fig1d                                 non-convex suite (Fig 1c/1d)
 //!   families --steps 2000 [--seed S             cross-family panel: SPARQ
@@ -63,6 +77,8 @@
 //!   sparq spectral --topology torus --nodes 16
 //!   sparq robustness --steps 2000 --drops 0.0,0.1,0.3
 //!   sparq chaos --plans "crash:3:500:1200;corrupt:0.01" --steps 2000
+//!   sparq cluster --dir /tmp/c1 --nodes 4 --steps 200 --verify
+//!   sparq cluster --dir /tmp/c1 --nodes 4 --cluster tcp@127.0.0.1:8:2
 
 use sparq::config::{Algo, ExperimentConfig};
 use sparq::experiments::{fig1, run_config};
@@ -79,7 +95,11 @@ fn main() {
         Some("submit") => cmd_submit(&args),
         Some("watch") => cmd_watch(&args),
         Some("status") => cmd_remote_status(&args),
+        Some("cancel") => cmd_cancel(&args),
         Some("shutdown") => cmd_shutdown(&args),
+        Some("cluster") => cmd_cluster(&args),
+        // Hidden: what `cluster` spawns, one process per rank.
+        Some("cluster-node") => cmd_cluster_node(&args),
         Some("fig1a") | Some("fig1b") => cmd_fig1_convex(&args),
         Some("fig1c") | Some("fig1d") => cmd_fig1_nonconvex(&args),
         Some("families") => cmd_families(&args),
@@ -92,7 +112,7 @@ fn main() {
         Some("version") => println!("sparq-sgd {}", sparq::version()),
         _ => {
             eprintln!(
-                "usage: sparq <train|sweep|sweep report|sweep status|check|serve|submit|watch|status|shutdown|fig1a|fig1b|fig1c|fig1d|families|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
+                "usage: sparq <train|sweep|sweep report|sweep status|check|serve|submit|watch|status|cancel|shutdown|cluster|fig1a|fig1b|fig1c|fig1d|families|spectral|ablate|robustness|chaos|perfgate|artifacts|version> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -302,12 +322,21 @@ fn require_socket(args: &Args, cmd: &str) -> String {
     }
 }
 
-fn connect_daemon(socket: &str) -> sparq::serve::Client {
-    sparq::serve::Client::connect_retry(socket, std::time::Duration::from_secs(10))
+fn connect_daemon(socket: &str, args: &Args) -> sparq::serve::Client {
+    let mut client = sparq::serve::Client::connect_retry(socket, std::time::Duration::from_secs(10))
         .unwrap_or_else(|e| {
             eprintln!("connect error: {e}");
             std::process::exit(1);
-        })
+        });
+    // An --auth-token daemon requires this as the first request; with
+    // no flag we send nothing, so open daemons behave as before.
+    if let Some(token) = args.get("auth-token") {
+        if let Err(e) = client.auth(token) {
+            eprintln!("auth error: {e}");
+            std::process::exit(1);
+        }
+    }
+    client
 }
 
 fn cmd_serve(args: &Args) {
@@ -332,6 +361,8 @@ fn cmd_serve(args: &Args) {
             .get("fault-abort-at")
             .map(|_| args.u64("fault-abort-at", 0)),
         event_capacity: args.usize("event-capacity", 4096),
+        jobs_retain: args.usize("jobs-retain", 0),
+        auth_token: args.get("auth-token").cloned(),
         verbose: !args.bool("quiet"),
     };
     if let Err(e) = serve(cfg) {
@@ -357,7 +388,7 @@ fn cmd_submit(args: &Args) {
         std::process::exit(2);
     });
     let priority = args.f64("priority", 0.0) as i64;
-    let mut client = connect_daemon(&socket);
+    let mut client = connect_daemon(&socket, args);
     let job = match client.submit(&spec, priority) {
         Ok((job, runs)) => {
             println!("accepted {job}: {runs} run(s)");
@@ -369,7 +400,7 @@ fn cmd_submit(args: &Args) {
         }
     };
     if args.bool("wait") {
-        let watcher = connect_daemon(&socket);
+        let watcher = connect_daemon(&socket, args);
         let result = watcher.watch(true, &mut |_seq, event| {
             if event.get("job").and_then(Json::as_str) != Some(job.as_str()) {
                 return true;
@@ -392,7 +423,7 @@ fn cmd_watch(args: &Args) {
     // Default replays the daemon's full event log; --tail streams only
     // events published after this subscriber attached.
     let from_start = !args.bool("tail");
-    let client = connect_daemon(&socket);
+    let client = connect_daemon(&socket, args);
     let result = client.watch(from_start, &mut |seq, event| {
         if let Some(jf) = &job_filter {
             if event.get("job").and_then(Json::as_str) != Some(jf.as_str()) {
@@ -414,7 +445,7 @@ fn cmd_watch(args: &Args) {
 
 fn cmd_remote_status(args: &Args) {
     let socket = require_socket(args, "status");
-    let mut client = connect_daemon(&socket);
+    let mut client = connect_daemon(&socket, args);
     let (jobs, claims) = client.status().unwrap_or_else(|e| {
         eprintln!("status error: {e}");
         std::process::exit(1);
@@ -454,9 +485,25 @@ fn cmd_remote_status(args: &Args) {
     }
 }
 
+fn cmd_cancel(args: &Args) {
+    let socket = require_socket(args, "cancel");
+    let Some(job) = args.get("job") else {
+        eprintln!("cancel requires --job <job id>");
+        std::process::exit(2);
+    };
+    let mut client = connect_daemon(&socket, args);
+    match client.cancel(job) {
+        Ok(released) => println!("cancelled {job}: released {released} queued run(s)"),
+        Err(e) => {
+            eprintln!("cancel error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn cmd_shutdown(args: &Args) {
     let socket = require_socket(args, "shutdown");
-    let mut client = connect_daemon(&socket);
+    let mut client = connect_daemon(&socket, args);
     match client.shutdown() {
         Ok(()) => println!("daemon at {socket} shutting down"),
         Err(e) => {
@@ -587,6 +634,8 @@ fn config_from_args(args: &Args) -> ExperimentConfig {
     parse_flag(args, "lr", &mut cfg.lr);
     parse_flag(args, "problem", &mut cfg.problem);
     parse_flag(args, "h", &mut cfg.h);
+    parse_flag(args, "fault", &mut cfg.fault);
+    parse_flag(args, "cluster", &mut cfg.cluster);
     cfg.steps = args.u64("steps", cfg.steps);
     cfg.eval_every = args.u64("eval-every", cfg.eval_every);
     cfg.momentum = args.f64("momentum", cfg.momentum);
@@ -769,6 +818,97 @@ fn cmd_chaos(args: &Args) {
         });
     println!("{}", robustness::chaos_table(&points));
     write_series(&series, args.get("out"));
+}
+
+fn cmd_cluster(args: &Args) {
+    use sparq::cluster::{run_cluster, ClusterOptions};
+
+    let cfg = config_from_args(args);
+    let Some(dir) = args.get("dir") else {
+        eprintln!("cluster requires --dir <shared cluster dir>");
+        std::process::exit(2);
+    };
+    let exe = std::env::current_exe().unwrap_or_else(|e| {
+        eprintln!("cluster: cannot locate own binary: {e}");
+        std::process::exit(1);
+    });
+    let opts = ClusterOptions {
+        cfg,
+        dir: std::path::PathBuf::from(dir),
+        exe,
+        checkpoint_every: args.u64("checkpoint-every", 0),
+        verify: args.bool("verify"),
+        verbose: !args.bool("quiet"),
+        timeout_secs: args.f64("timeout-secs", 600.0),
+    };
+    println!(
+        "cluster: {} nodes over {} in {}",
+        opts.cfg.nodes,
+        opts.cfg.cluster.as_str(),
+        opts.dir.display()
+    );
+    match run_cluster(&opts) {
+        Ok(report) => {
+            println!(
+                "cluster complete: {} nodes, series {}, bits {}, fired {}/{}",
+                report.nodes, report.series_hash, report.total_bits, report.fired, report.checks
+            );
+            for k in &report.kills {
+                println!(
+                    "kill: node-{} SIGKILLed at t={}, rejoined at t={}",
+                    k.rank, k.t_down, k.t_up
+                );
+            }
+            if report.crashes > 0 {
+                println!(
+                    "faults: {} crash(es), {} resync charge(s)",
+                    report.crashes, report.resyncs
+                );
+            }
+            if report.wire_fallbacks > 0 || report.wire_mismatches > 0 {
+                println!(
+                    "wire degradation: {} fallback(s), {} mismatch(es)",
+                    report.wire_fallbacks, report.wire_mismatches
+                );
+            }
+            if report.verified.is_some() {
+                println!("verified: bit-identical to the in-process engine");
+            }
+            println!("report: {}", opts.dir.join("report.json").display());
+        }
+        Err(e) => {
+            eprintln!("cluster error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_cluster_node(args: &Args) {
+    use sparq::cluster::{run_node, NodeOptions};
+
+    let Some(dir) = args.get("dir") else {
+        eprintln!("cluster-node requires --dir <shared cluster dir>");
+        std::process::exit(2);
+    };
+    let dir = std::path::PathBuf::from(dir);
+    let cfg_path = dir.join("config.json");
+    let cfg = ExperimentConfig::from_file(&cfg_path.display().to_string()).unwrap_or_else(|e| {
+        eprintln!("cluster-node: {e}");
+        std::process::exit(2);
+    });
+    let opts = NodeOptions {
+        rank: args.usize("rank", 0),
+        dir,
+        cfg,
+        checkpoint_every: args.u64("checkpoint-every", 0),
+        mute_until: args.u64("mute-until", 0),
+        min_crash_start: args.u64("min-crash-start", 0),
+        verbose: args.bool("verbose"),
+    };
+    if let Err(e) = run_node(opts) {
+        eprintln!("cluster-node error: {e}");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_spectral(args: &Args) {

@@ -348,6 +348,12 @@ impl<A: DecentralizedAlgo, P: GradientSource> Run<A, P> {
         &self.algo
     }
 
+    /// Mutable access to the algorithm (the cluster runtime installs
+    /// its socket transport here after the run is built).
+    pub fn algo_mut(&mut self) -> &mut A {
+        &mut self.algo
+    }
+
     /// Communication totals (what evaluation records charge from).
     pub fn bus(&self) -> &Bus {
         &self.bus

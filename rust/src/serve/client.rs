@@ -80,6 +80,31 @@ impl Client {
         }
     }
 
+    /// Authenticate the connection. Must be the first request against a
+    /// daemon started with `--auth-token`; a no-op against one without.
+    pub fn auth(&mut self, token: &str) -> Result<(), String> {
+        let req = Request::Auth {
+            token: token.to_string(),
+        };
+        match self.request(&req)? {
+            Response::Ok => Ok(()),
+            Response::Error { error } => Err(error),
+            other => Err(format!("unexpected reply to auth: {other:?}")),
+        }
+    }
+
+    /// Cancel a queued job; `Ok(released slots)` on success.
+    pub fn cancel(&mut self, job: &str) -> Result<usize, String> {
+        let req = Request::Cancel {
+            job: job.to_string(),
+        };
+        match self.request(&req)? {
+            Response::Cancelled { released, .. } => Ok(released),
+            Response::Error { error } => Err(error),
+            other => Err(format!("unexpected reply to cancel: {other:?}")),
+        }
+    }
+
     /// Submit a sweep spec; `Ok((job, runs))` on admission,
     /// `Err(admission error)` on rejection.
     pub fn submit(&mut self, spec: &Json, priority: i64) -> Result<(String, usize), String> {

@@ -48,6 +48,17 @@ pub enum Request {
     /// their checkpoints + claims, exactly like a crash — the next
     /// daemon takes them over bit-identically).
     Shutdown,
+    /// Cancel a queued job: every slot not yet running is released,
+    /// the persisted job file is marked so a restarted daemon skips
+    /// it, and a `job-cancelled` event streams to subscribers. Runs
+    /// already executing finish normally (their results are recorded —
+    /// cancellation never discards work in flight).
+    Cancel { job: String },
+    /// Authenticate this connection. A daemon started with
+    /// `--auth-token` requires this as the **first** request on every
+    /// connection; without a configured token it is an accepted no-op,
+    /// so clients can send it unconditionally.
+    Auth { token: String },
 }
 
 /// One server → client message.
@@ -70,10 +81,14 @@ pub enum Response {
     /// daemon-lifetime log (contiguous from 0 for `from_start`
     /// subscribers).
     Event { seq: u64, event: Json },
+    /// A cancel succeeded: `released` slots were freed (0 when every
+    /// remaining run was already executing or settled).
+    Cancelled { job: String, released: usize },
     /// A malformed frame or request (the connection stays open when
-    /// framing sync is intact).
+    /// framing sync is intact), a failed cancel, or an authentication
+    /// failure (the connection closes after an auth error).
     Error { error: String },
-    /// Plain acknowledgement (shutdown).
+    /// Plain acknowledgement (shutdown, auth).
     Ok,
 }
 
@@ -89,7 +104,9 @@ pub struct JobStatus {
     pub done: usize,
     /// Runs that failed deterministically (not retried until restart).
     pub failed: usize,
-    /// "queued" | "running" | "complete".
+    /// Runs released by a [`Request::Cancel`] before they started.
+    pub cancelled: usize,
+    /// "queued" | "running" | "complete" | "cancelled".
     pub state: String,
 }
 
@@ -112,6 +129,7 @@ impl JobStatus {
             .set("total", self.total)
             .set("done", self.done)
             .set("failed", self.failed)
+            .set("cancelled", self.cancelled)
             .set("state", self.state.as_str())
     }
 
@@ -123,6 +141,8 @@ impl JobStatus {
             total: req_usize(j, "total")?,
             done: req_usize(j, "done")?,
             failed: req_usize(j, "failed")?,
+            // Absent in records written by pre-cancel daemons.
+            cancelled: j.get("cancelled").and_then(Json::as_usize).unwrap_or(0),
             state: req_str(j, "state")?,
         })
     }
@@ -176,6 +196,12 @@ impl Request {
                 .set("from_start", *from_start),
             Request::Status => Json::obj().set("type", "status"),
             Request::Shutdown => Json::obj().set("type", "shutdown"),
+            Request::Cancel { job } => {
+                Json::obj().set("type", "cancel").set("job", job.as_str())
+            }
+            Request::Auth { token } => {
+                Json::obj().set("type", "auth").set("token", token.as_str())
+            }
         }
     }
 
@@ -191,6 +217,12 @@ impl Request {
             }),
             Some("status") => Ok(Request::Status),
             Some("shutdown") => Ok(Request::Shutdown),
+            Some("cancel") => Ok(Request::Cancel {
+                job: req_str(j, "job")?,
+            }),
+            Some("auth") => Ok(Request::Auth {
+                token: req_str(j, "token")?,
+            }),
             Some(other) => Err(format!("unknown request type {other:?}")),
             None => Err("request has no type field".into()),
         }
@@ -224,6 +256,10 @@ impl Response {
                 .set("type", "event")
                 .set("seq", *seq)
                 .set("event", event.clone()),
+            Response::Cancelled { job, released } => Json::obj()
+                .set("type", "cancelled")
+                .set("job", job.as_str())
+                .set("released", *released),
             Response::Error { error } => Json::obj()
                 .set("type", "error")
                 .set("error", error.as_str()),
@@ -267,6 +303,10 @@ impl Response {
                     .and_then(Json::as_u64)
                     .ok_or("event has no seq")?,
                 event: j.get("event").cloned().ok_or("event carries no body")?,
+            }),
+            Some("cancelled") => Ok(Response::Cancelled {
+                job: req_str(j, "job")?,
+                released: req_usize(j, "released")?,
             }),
             Some("error") => Ok(Response::Error {
                 error: req_str(j, "error")?,
@@ -516,6 +556,12 @@ mod tests {
         roundtrip_req(Request::Watch { from_start: false });
         roundtrip_req(Request::Status);
         roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::Cancel {
+            job: "job-00ff".into(),
+        });
+        roundtrip_req(Request::Auth {
+            token: "s3cret".into(),
+        });
     }
 
     #[test]
@@ -538,6 +584,7 @@ mod tests {
                 total: 8,
                 done: 3,
                 failed: 1,
+                cancelled: 2,
                 state: "running".into(),
             }],
             claims: vec![ClaimView {
@@ -551,10 +598,28 @@ mod tests {
             seq: 7,
             event: Json::obj().set("kind", "started").set("id", "abc"),
         });
+        roundtrip_resp(Response::Cancelled {
+            job: "job-00ff".into(),
+            released: 5,
+        });
         roundtrip_resp(Response::Error {
             error: "bad frame".into(),
         });
         roundtrip_resp(Response::Ok);
+    }
+
+    #[test]
+    fn job_status_without_a_cancelled_field_defaults_to_zero() {
+        // Wire compatibility: records written before cancellation
+        // existed still parse.
+        let j = Json::obj()
+            .set("job", "job-12ab")
+            .set("name", "grid")
+            .set("total", 4)
+            .set("done", 4)
+            .set("failed", 0)
+            .set("state", "complete");
+        assert_eq!(JobStatus::from_json(&j).unwrap().cancelled, 0);
     }
 
     #[test]

@@ -89,6 +89,16 @@ pub struct ServeConfig {
     /// stalled past the ring) get a structured "log truncated" error
     /// instead of a silently incomplete stream. 0 ⇒ retain one event.
     pub event_capacity: usize,
+    /// `--jobs-retain N`: keep at most the newest N **settled** job
+    /// files under `<out>/jobs/`, deleting older ones when a job
+    /// settles. Pending and running jobs are never touched (they are
+    /// the restart-takeover state). 0 ⇒ keep everything.
+    pub jobs_retain: usize,
+    /// `--auth-token`: when set, every connection must authenticate
+    /// with [`Request::Auth`] as its first request; any other first
+    /// request (or a wrong token) gets a structured error and the
+    /// connection closes. `None` preserves the open-socket behavior.
+    pub auth_token: Option<String>,
     /// Per-run progress lines on stdout.
     pub verbose: bool,
 }
@@ -106,6 +116,8 @@ impl Default for ServeConfig {
             poll_ms: 200,
             fault_abort_at: None,
             event_capacity: 4096,
+            jobs_retain: 0,
+            auth_token: None,
             verbose: false,
         }
     }
@@ -230,6 +242,8 @@ enum SlotState {
     Done,
     /// Deterministic execution failure; not retried until restart.
     Failed,
+    /// Released by a job cancel before any worker picked it up.
+    Cancelled,
 }
 
 struct Slot {
@@ -251,11 +265,12 @@ struct JobInfo {
     total: usize,
     done: usize,
     failed: usize,
+    cancelled: usize,
 }
 
 impl JobInfo {
     fn settled(&self) -> bool {
-        self.done + self.failed >= self.total
+        self.done + self.failed + self.cancelled >= self.total
     }
 }
 
@@ -391,7 +406,11 @@ fn admit(
     }
     for (label, _, id) in &slots {
         if let Some(held) = queue.slots.iter().find(|s| {
-            s.id == *id && !matches!(s.state, SlotState::Done | SlotState::Failed)
+            s.id == *id
+                && !matches!(
+                    s.state,
+                    SlotState::Done | SlotState::Failed | SlotState::Cancelled
+                )
         }) {
             return Err(format!(
                 "run {label:?} (id {id}) is already queued by job {}",
@@ -441,6 +460,7 @@ fn admit(
             total,
             done,
             failed: 0,
+            cancelled: 0,
         },
     );
     shared.hub.publish(
@@ -466,8 +486,47 @@ fn publish_job_complete(shared: &Shared, queue: &QueueState, job: &str) {
                 .set("job", job)
                 .set("done", info.done)
                 .set("failed", info.failed)
+                .set("cancelled", info.cancelled)
                 .set("total", info.total),
         );
+    }
+    gc_job_files(shared, queue);
+}
+
+/// Retention: with `--jobs-retain N`, drop the oldest settled job
+/// files beyond the newest N whenever a job settles. Only files whose
+/// job is *known settled* in this daemon's queue are candidates —
+/// pending/running jobs (ours or a restarting predecessor's) are the
+/// takeover state and are never deleted.
+fn gc_job_files(shared: &Shared, queue: &QueueState) {
+    let retain = shared.cfg.jobs_retain;
+    if retain == 0 {
+        return;
+    }
+    // Settled jobs, oldest submission first (seq is the file prefix).
+    let mut settled: Vec<(u64, &str)> = queue
+        .jobs
+        .iter()
+        .filter(|(_, info)| info.settled())
+        .map(|(job, info)| (info.seq, job.as_str()))
+        .collect();
+    if settled.len() <= retain {
+        return;
+    }
+    settled.sort();
+    for (seq, job) in &settled[..settled.len() - retain] {
+        let file = shared.jobs_dir.join(format!("{seq:06}-{job}.json"));
+        match fs::remove_file(&file) {
+            Ok(()) => shared.hub.publish(
+                Json::obj()
+                    .set("kind", "job-retired")
+                    .set("job", *job)
+                    .set("file", file.display().to_string()),
+            ),
+            // Already collected by an earlier pass (or never persisted).
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => eprintln!("[serve] retention: {}: {e}", file.display()),
+        }
     }
 }
 
@@ -483,7 +542,7 @@ fn settle_slot(shared: &Shared, i: usize, state: SlotState) {
 fn settle_locked(shared: &Shared, queue: &mut QueueState, i: usize, state: SlotState) {
     if matches!(
         queue.slots[i].state,
-        SlotState::Done | SlotState::Failed
+        SlotState::Done | SlotState::Failed | SlotState::Cancelled
     ) {
         return;
     }
@@ -492,10 +551,10 @@ fn settle_locked(shared: &Shared, queue: &mut QueueState, i: usize, state: SlotS
     let job = queue.slots[i].job.clone();
     let filled = match queue.jobs.get_mut(&job) {
         Some(info) => {
-            if state == SlotState::Failed {
-                info.failed += 1;
-            } else {
-                info.done += 1;
+            match state {
+                SlotState::Failed => info.failed += 1,
+                SlotState::Cancelled => info.cancelled += 1,
+                _ => info.done += 1,
             }
             info.settled()
         }
@@ -532,8 +591,12 @@ fn worker_loop(shared: &Arc<Shared>) {
                 .enumerate()
                 .filter(|(_, s)| s.state == SlotState::Pending)
                 .min_by_key(|(i, s)| {
-                    let seq = queue.jobs.get(&s.job).map(|j| j.seq).unwrap_or(u64::MAX);
-                    (std::cmp::Reverse(s.priority), seq, *i)
+                    let (priority, seq) = queue
+                        .jobs
+                        .get(&s.job)
+                        .map(|j| (j.priority, j.seq))
+                        .unwrap_or((i64::MIN, u64::MAX));
+                    (std::cmp::Reverse(priority), seq, *i)
                 })
                 .map(|(i, _)| i);
             match best {
@@ -761,6 +824,69 @@ fn fail_slot(shared: &Shared, i: usize, label: &str, id: &str, error: &str) {
 }
 
 // ---------------------------------------------------------------------
+// Cancellation
+// ---------------------------------------------------------------------
+
+/// Cancel one queued job: flip every not-yet-running slot to
+/// `Cancelled`, mark the persisted job file so a restarted daemon
+/// skips it, and stream a `job-cancelled` event. Returns the number of
+/// slots released. Slots already executing finish normally — their
+/// results record, and the job settles once they do (cancellation
+/// never discards work in flight).
+fn cancel_job(shared: &Shared, job: &str) -> Result<usize, String> {
+    let mut queue = shared.queue.lock().unwrap();
+    let Some(info) = queue.jobs.get(job) else {
+        return Err(format!("no such job {job:?}"));
+    };
+    if info.settled() {
+        return Err(format!("job {job} ({}) is already settled", info.name));
+    }
+    let seq = info.seq;
+    // Mark the file before touching the queue: a daemon killed between
+    // here and the settle still skips the job at restart.
+    mark_job_cancelled(shared, seq, job);
+    let targets: Vec<usize> = queue
+        .slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.job == job)
+        .filter(|(_, s)| matches!(s.state, SlotState::Pending | SlotState::Waiting))
+        .map(|(i, _)| i)
+        .collect();
+    // The cancel event precedes the job-complete the last settle may
+    // publish, so subscribers see causal order.
+    shared.hub.publish(
+        Json::obj()
+            .set("kind", "job-cancelled")
+            .set("job", job)
+            .set("released", targets.len()),
+    );
+    for i in &targets {
+        settle_locked(shared, &mut queue, *i, SlotState::Cancelled);
+    }
+    Ok(targets.len())
+}
+
+/// Rewrite a persisted job file with `"cancelled": true` (best-effort:
+/// a failure leaves a job that re-queues at restart, which is safe —
+/// its runs were admissible).
+fn mark_job_cancelled(shared: &Shared, seq: u64, job: &str) {
+    let file = shared.jobs_dir.join(format!("{seq:06}-{job}.json"));
+    let marked = fs::read_to_string(&file)
+        .map_err(|e| e.to_string())
+        .and_then(|text| Json::parse(&text).map_err(|e| e.to_string()))
+        .map(|j| j.set("cancelled", true));
+    match marked {
+        Ok(j) => {
+            if let Err(e) = fs::write(&file, j.to_string_pretty()) {
+                eprintln!("[serve] cancel: {}: {e}", file.display());
+            }
+        }
+        Err(e) => eprintln!("[serve] cancel: {}: {e}", file.display()),
+    }
+}
+
+// ---------------------------------------------------------------------
 // Connections
 // ---------------------------------------------------------------------
 
@@ -772,6 +898,10 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) {
     if stream.set_read_timeout(Some(CONN_POLL)).is_err() {
         return;
     }
+    // With `--auth-token`, the first request must be a matching Auth —
+    // anything else answers a structured error and closes, so an
+    // unauthenticated peer can neither submit work nor read events.
+    let mut authed = shared.cfg.auth_token.is_none();
     loop {
         let frame = match read_frame(&mut stream, &|| shared.stopping()) {
             Ok(f) => f,
@@ -808,6 +938,34 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) {
             }
         };
         let resp = match req {
+            Request::Auth { token } => match &shared.cfg.auth_token {
+                Some(expected) if *expected == token => {
+                    authed = true;
+                    Response::Ok
+                }
+                // Accepted no-op so clients may auth unconditionally.
+                None => Response::Ok,
+                Some(_) => {
+                    let _ = send(
+                        &mut stream,
+                        &Response::Error {
+                            error: "authentication failed: token mismatch".into(),
+                        },
+                    );
+                    break;
+                }
+            },
+            _ if !authed => {
+                let _ = send(
+                    &mut stream,
+                    &Response::Error {
+                        error: "authentication required: this daemon was started with \
+                                --auth-token; send an auth request first"
+                            .into(),
+                    },
+                );
+                break;
+            }
             Request::Ping => Response::Pong {
                 version: crate::version().to_string(),
             },
@@ -821,6 +979,10 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) {
                 shared.begin_shutdown();
                 break;
             }
+            Request::Cancel { job } => match cancel_job(shared, &job) {
+                Ok(released) => Response::Cancelled { job, released },
+                Err(error) => Response::Error { error },
+            },
             Request::Watch { from_start } => {
                 watch_loop(shared, &mut stream, from_start);
                 break;
@@ -880,7 +1042,11 @@ fn status_snapshot(shared: &Arc<Shared>) -> Response {
         .iter()
         .map(|(job, info)| {
             let state = if info.settled() {
-                "complete"
+                if info.cancelled > 0 {
+                    "cancelled"
+                } else {
+                    "complete"
+                }
             } else if queue
                 .slots
                 .iter()
@@ -899,6 +1065,7 @@ fn status_snapshot(shared: &Arc<Shared>) -> Response {
                     total: info.total,
                     done: info.done,
                     failed: info.failed,
+                    cancelled: info.cancelled,
                     state: state.to_string(),
                 },
             )
@@ -1108,6 +1275,11 @@ fn requeue_persisted_jobs(shared: &Arc<Shared>) {
                 continue;
             }
         };
+        // Cancelled jobs persist (until retention collects them) but
+        // are never re-queued — a cancel survives a daemon restart.
+        if j.get("cancelled").and_then(Json::as_bool) == Some(true) {
+            continue;
+        }
         let priority = j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64;
         let Some(spec) = j.get("spec") else {
             eprintln!("[serve] skipping job file {}: no spec", file.display());

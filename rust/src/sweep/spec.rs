@@ -438,6 +438,10 @@ pub fn config_hash(cfg: &ExperimentConfig) -> String {
     let mut canonical = cfg.clone();
     canonical.name = String::new();
     canonical.workers = 1;
+    // Deployment knobs can't change results either: a cluster run is
+    // pinned bit-identical to the in-process engine, so the same
+    // experiment hashes the same however it is executed.
+    canonical.cluster = crate::config::ClusterSpec::default();
     let text = canonical.to_json().to_string();
     format!("{:016x}", fnv64(text.as_bytes()))
 }

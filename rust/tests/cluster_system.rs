@@ -1,0 +1,129 @@
+//! Cluster-runtime system tests (ISSUE 10 satellite): a real
+//! multi-process UDS cluster must be bit-for-bit identical to the
+//! in-process engine, and a fault-plan crash window must really
+//! `SIGKILL` a node process and rejoin it with the same resync
+//! accounting the in-process engine charges.
+//!
+//! Each node here is a genuine OS process spawned from the `sparq`
+//! binary (`env!("CARGO_BIN_EXE_sparq")` — `current_exe()` inside a
+//! test is the test harness, not the CLI). Identity is pinned three
+//! ways at once: our own in-process reference below, the launcher's
+//! replica cross-check, and its `verify` re-run.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+
+use sparq::cluster::{run_cluster, series_hash, ClusterOptions, KillEvent};
+use sparq::config::ExperimentConfig;
+use sparq::experiments::fig1;
+use sparq::run::Run;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let pid = std::process::id();
+    // Keep the path short: UDS socket paths live under it and have a
+    // ~104-byte OS limit.
+    let d = std::env::temp_dir().join(format!("sparq-cluster-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("mkdir");
+    d
+}
+
+/// One SPARQ point of the Fig 1a grid, shrunk the same way fig1's own
+/// mini suite shrinks it: tiny problem, low trigger threshold (so
+/// broadcasts actually travel), coarse eval cadence.
+fn point(nodes: usize, steps: u64, seed: u64) -> ExperimentConfig {
+    let mut cfg = fig1::convex_point(nodes, steps, seed);
+    cfg.problem = "logreg:24:4:8".into();
+    cfg.trigger = "const:10".into();
+    cfg.eval_every = 20;
+    cfg
+}
+
+fn cluster_opts(cfg: ExperimentConfig, dir: &Path) -> ClusterOptions {
+    ClusterOptions {
+        cfg,
+        dir: dir.to_path_buf(),
+        exe: PathBuf::from(env!("CARGO_BIN_EXE_sparq")),
+        checkpoint_every: 0, // crash boundaries only
+        verify: true,
+        verbose: false,
+        timeout_secs: 300.0,
+    }
+}
+
+#[test]
+fn four_node_uds_cluster_is_bit_identical_to_the_in_process_engine() {
+    let cfg = point(4, 120, 7);
+    let resolved = cfg.resolve().expect("resolve");
+    let mut reference = Run::from_resolved(&resolved, None, cfg.workers.max(1));
+    reference.run_to_end().expect("in-process reference");
+    let expect_hash = series_hash(reference.series());
+    let expect_bits = reference.bus().total_bits;
+    let (expect_fired, expect_checks) = reference.fired_stats();
+    assert!(
+        expect_fired > 0,
+        "the config must fire triggers or nothing crosses the wire"
+    );
+
+    let dir = tmp_dir("lockstep");
+    let report = run_cluster(&cluster_opts(cfg, &dir)).expect("cluster run");
+
+    assert_eq!(report.nodes, 4);
+    assert_eq!(report.series_hash, expect_hash);
+    assert_eq!(report.total_bits, expect_bits);
+    assert_eq!((report.fired, report.checks), (expect_fired, expect_checks));
+    // The launcher's own in-process verification agreed too.
+    assert_eq!(report.verified.as_deref(), Some(expect_hash.as_str()));
+    // Lockstep: nobody died, nothing resynced, and every receive came
+    // off the wire — zero fallbacks proves the identity was not
+    // achieved by silently degrading to local computation.
+    assert!(report.kills.is_empty());
+    assert_eq!((report.crashes, report.resyncs), (0, 0));
+    assert_eq!(report.wire_mismatches, 0);
+    assert_eq!(report.wire_fallbacks, 0);
+    // Artifacts: the cross-checked report and rank 0's series.
+    assert!(dir.join("report.json").exists());
+    assert!(dir.join("out").join("series.jsonl").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_crash_window_really_kills_and_rejoins_with_in_process_accounting() {
+    let mut cfg = point(4, 100, 11);
+    cfg.fault = "crash:1:40:60".parse().expect("fault spec");
+    let resolved = cfg.resolve().expect("resolve");
+    let mut reference = Run::from_resolved(&resolved, None, cfg.workers.max(1));
+    reference.run_to_end().expect("in-process reference");
+    let expect_hash = series_hash(reference.series());
+    let fault = reference.snapshot().fault;
+    assert!(fault.crashes >= 1, "the window must register in-process");
+
+    let dir = tmp_dir("crash");
+    let report = run_cluster(&cluster_opts(cfg, &dir)).expect("cluster run");
+
+    // The launcher delivered exactly one real SIGKILL, at the window
+    // boundary, and respawned the rank to rejoin at t = up.
+    assert_eq!(
+        report.kills,
+        vec![KillEvent {
+            rank: 1,
+            t_down: 40,
+            t_up: 60,
+        }]
+    );
+    // Bit-identity survives the kill: the respawn restored the crash
+    // boundary checkpoint and replayed the window muted, so the series
+    // and the resync charges match the in-process engine exactly.
+    assert_eq!(report.series_hash, expect_hash);
+    assert_eq!(report.crashes, fault.crashes);
+    assert_eq!(report.resyncs, fault.resyncs);
+    assert!(report.verified.is_some());
+    assert_eq!(report.wire_mismatches, 0);
+    // The kill marker was consumed and the crash-boundary checkpoint
+    // (cadence 0: the only one anyone writes) belongs to rank 1.
+    assert!(!dir.join("kill").join("node-1.json").exists());
+    assert!(dir.join("ckpt").join("node-1.ckpt").exists());
+    assert!(!dir.join("ckpt").join("node-0.ckpt").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

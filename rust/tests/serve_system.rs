@@ -437,6 +437,193 @@ fn evicted_event_prefix_fails_watch_from_start_with_truncation_error() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn cancel_releases_queued_runs_and_survives_a_restart() {
+    let dir = tmp_dir("cancel");
+    let out = dir.join("out");
+    // One worker: job A (higher priority) occupies it, so job B's runs
+    // are still queued when the cancel lands.
+    let handle = spawn_daemon(&out, 1);
+    let addr = handle.addr().to_string();
+    let mut c = connect(&addr);
+
+    // A long enough horizon that A's first run alone outlasts the
+    // submit + cancel round trips below (and A outranks B on priority,
+    // so the worker never reaches B's slots regardless).
+    let mut busy = base_cfg();
+    busy.name = "cancel-busy".into();
+    busy.steps = 2000;
+    busy.eval_every = 500;
+    let spec_a = SweepSpec::new("cancel-busy").base(&busy).axis_u64("seed", &[1, 2, 3, 4]);
+    let spec_b = grid("cancel-victim", &[5, 6, 7, 8]);
+    let (job_a, _) = c.submit(&spec_a.to_json(), 10).expect("submit A");
+    let (job_b, runs_b) = c.submit(&spec_b.to_json(), 0).expect("submit B");
+
+    // Unknown jobs are a structured error, not a silent no-op.
+    let err = c.cancel("job-ffffffffffffffff").expect_err("unknown job");
+    assert!(err.contains("no such job"), "unexpected error: {err}");
+
+    let released = c.cancel(&job_b).expect("cancel B");
+    assert_eq!(released, runs_b, "every queued run of B is released");
+    let err = c.cancel(&job_b).expect_err("second cancel");
+    assert!(err.contains("already settled"), "unexpected error: {err}");
+
+    // Status: B reads as cancelled; its runs never execute.
+    let (jobs, _) = c.status().expect("status");
+    let b = jobs.iter().find(|j| j.job == job_b).expect("job B row");
+    assert_eq!(b.state, "cancelled");
+    assert_eq!((b.cancelled, b.done, b.failed), (runs_b, 0, 0));
+
+    // The persisted job file is marked, so the cancel outlives daemons.
+    let marked = std::fs::read_dir(out.join("jobs"))
+        .unwrap()
+        .flatten()
+        .filter(|e| e.file_name().to_string_lossy().contains(&job_b))
+        .count();
+    assert_eq!(marked, 1, "B's job file survives, marked cancelled");
+
+    // The event stream carries the cancellation in causal order.
+    let mut kinds = Vec::new();
+    connect(&addr)
+        .watch(true, &mut |_seq, e| {
+            if e.get("job").and_then(Json::as_str) == Some(job_b.as_str()) {
+                let kind =
+                    e.get("kind").and_then(Json::as_str).unwrap_or_default().to_string();
+                kinds.push(kind.clone());
+                return kind != "job-complete";
+            }
+            true
+        })
+        .expect("watch");
+    assert_eq!(
+        kinds,
+        ["job-accepted", "job-cancelled", "job-complete"],
+        "B's stream: accepted, cancelled, complete"
+    );
+
+    // A still runs to completion — cancellation is per-job.
+    loop {
+        let (jobs, _) = c.status().expect("status");
+        if jobs.iter().any(|j| j.job == job_a && j.state == "complete") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(c);
+    handle.stop().expect("clean shutdown");
+
+    // A restarted daemon re-admits A (settled from records) but skips
+    // the cancelled B entirely.
+    let handle2 = spawn_daemon(&out, 1);
+    let mut c2 = connect(handle2.addr());
+    let (jobs, _) = c2.status().expect("status after restart");
+    assert!(
+        jobs.iter().any(|j| j.job == job_a && j.state == "complete"),
+        "A re-admits settled: {jobs:?}"
+    );
+    assert!(
+        !jobs.iter().any(|j| j.job == job_b),
+        "cancelled B must not re-queue: {jobs:?}"
+    );
+    drop(c2);
+    handle2.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jobs_retain_collects_only_the_oldest_settled_job_files() {
+    let dir = tmp_dir("retain");
+    let out = dir.join("out");
+    let handle = spawn(ServeConfig {
+        socket: "127.0.0.1:0".into(),
+        out: out.clone(),
+        workers: 2,
+        poll_ms: 20,
+        jobs_retain: 1,
+        ..Default::default()
+    })
+    .expect("spawn daemon");
+    let mut c = connect(handle.addr());
+
+    // Three distinct single-seed jobs, completed in sequence.
+    let mut job_files = Vec::new();
+    for (i, seed) in [11u64, 22, 33].iter().enumerate() {
+        let spec = grid(&format!("retain-{i}"), &[*seed]);
+        let (job, _) = c.submit(&spec.to_json(), 0).expect("submit");
+        loop {
+            let (jobs, _) = c.status().expect("status");
+            if jobs.iter().any(|j| j.job == job && j.state == "complete") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        job_files.push(job);
+    }
+
+    // Only the newest settled job file survives --jobs-retain 1.
+    let names: Vec<String> = std::fs::read_dir(out.join("jobs"))
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .collect();
+    assert_eq!(names.len(), 1, "retention keeps exactly one file: {names:?}");
+    assert!(
+        names[0].contains(&job_files[2]),
+        "the survivor is the newest job: {names:?}"
+    );
+
+    drop(c);
+    handle.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn auth_token_gates_every_connection_first_frame() {
+    let dir = tmp_dir("auth");
+    let handle = spawn(ServeConfig {
+        socket: "127.0.0.1:0".into(),
+        out: dir.join("out"),
+        workers: 1,
+        poll_ms: 20,
+        auth_token: Some("sesame".into()),
+        ..Default::default()
+    })
+    .expect("spawn daemon");
+    let addr = handle.addr().to_string();
+
+    // Unauthenticated first request: structured error, then the daemon
+    // closes the connection.
+    let mut c = connect(&addr);
+    let err = c.ping().expect_err("ping without auth");
+    assert!(err.contains("authentication required"), "unexpected error: {err}");
+    assert!(c.ping().is_err(), "connection closed after the auth error");
+
+    // Wrong token: structured error + close.
+    let mut c = connect(&addr);
+    let err = c.auth("open").expect_err("wrong token");
+    assert!(err.contains("token mismatch"), "unexpected error: {err}");
+
+    // Right token as the first frame unlocks the whole session.
+    let mut c = connect(&addr);
+    c.auth("sesame").expect("auth");
+    assert_eq!(c.ping().expect("ping after auth"), sparq::version());
+    let (jobs, _) = c.status().expect("status after auth");
+    assert!(jobs.is_empty());
+
+    drop(c);
+    handle.stop().expect("clean shutdown");
+
+    // Without a configured token, auth is an accepted no-op — clients
+    // may send it unconditionally.
+    let open = spawn_daemon(&dir.join("out2"), 1);
+    let mut c = connect(open.addr());
+    c.auth("anything").expect("auth against an open daemon");
+    assert_eq!(c.ping().expect("ping"), sparq::version());
+    drop(c);
+    open.stop().expect("clean shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ---------------------------------------------------------------------
 // Child-process end-to-end tests (Unix socket)
 // ---------------------------------------------------------------------
